@@ -1,0 +1,155 @@
+//! Ablations over the design choices DESIGN.md calls out.
+//!
+//! 1. Pregel sender-side combiner on/off (Giraph's Combiner): routed
+//!    message volume and time.
+//! 2. Push-Pull density threshold sweep (Gemini's |E|/20 heuristic):
+//!    forced-push vs forced-pull vs adaptive.
+//! 3. Partitioning strategy: hash vs range vs edge-balanced on a skewed
+//!    graph.
+//! 4. Barrier implementation: OS-blocking vs spinning vs condvar (the
+//!    busy-wait-vs-lock discussion of §IV-C.2, applied at superstep scale).
+
+use unigps::distributed::barrier::{BspBarrier, CondvarBarrier, SpinBarrier};
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::datasets::DatasetSpec;
+use unigps::graph::partition::PartitionStrategy;
+use unigps::operators::symmetrized;
+use unigps::util::bench::{fmt_dur, Table};
+use unigps::util::timer::Timer;
+use unigps::vcprog::programs::{ConnectedComponents, PageRank, SsspBellmanFord};
+
+fn main() {
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let div = if fast { 4096 } else { 1024 };
+    let graph = DatasetSpec::by_key("lj").unwrap().generate(div);
+    let sym = symmetrized(&graph);
+    println!("== Ablations on lj analog (1/{div} scale): {} ==\n", graph.summary());
+
+    combiner_ablation(&graph);
+    pushpull_threshold_ablation(&graph);
+    partition_ablation(&sym);
+    barrier_ablation();
+}
+
+fn combiner_ablation(graph: &unigps::graph::Graph) {
+    println!("-- [1] Pregel combiner (Giraph Combiner optimization) --");
+    let mut t = Table::new(&["algo", "combiner", "messages", "time"]);
+    for algo in ["pagerank", "sssp"] {
+        for combiner in [true, false] {
+            let mut opts = RunOptions::default().with_workers(4);
+            opts.combiner = combiner;
+            opts.step_metrics = false;
+            let timer = Timer::start();
+            let m = match algo {
+                "pagerank" => {
+                    let prog = PageRank::new(graph.num_vertices(), 10);
+                    opts.max_iter = prog.rounds();
+                    run_typed(EngineKind::Pregel, graph, &prog, &opts).unwrap().metrics
+                }
+                _ => run_typed(EngineKind::Pregel, graph, &SsspBellmanFord::new(0), &opts)
+                    .unwrap()
+                    .metrics,
+            };
+            t.row(&[
+                algo.to_string(),
+                combiner.to_string(),
+                unigps::util::fmt_count(m.total_messages),
+                fmt_dur(timer.secs()),
+            ]);
+        }
+    }
+    t.print();
+    println!("   expect: combiner=true routes fewer messages.\n");
+}
+
+fn pushpull_threshold_ablation(graph: &unigps::graph::Graph) {
+    println!("-- [2] Push-Pull density threshold (Gemini heuristic) --");
+    let mut t = Table::new(&["threshold", "mode mix (pull/push)", "messages", "time"]);
+    for (label, thr) in [
+        ("0 (always push)", 0.0),
+        ("5", 5.0),
+        ("20 (Gemini)", 20.0),
+        ("inf (always pull)", f64::INFINITY),
+    ] {
+        let mut opts = RunOptions::default().with_workers(4);
+        opts.pushpull_threshold = thr;
+        let timer = Timer::start();
+        let m = run_typed(EngineKind::PushPull, graph, &SsspBellmanFord::new(0), &opts)
+            .unwrap()
+            .metrics;
+        let pulls = m
+            .steps
+            .iter()
+            .filter(|s| s.mode == Some(unigps::distributed::metrics::StepMode::Pull))
+            .count();
+        t.row(&[
+            label.to_string(),
+            format!("{}/{}", pulls, m.steps.len() - pulls),
+            unigps::util::fmt_count(m.total_messages),
+            fmt_dur(timer.secs()),
+        ]);
+    }
+    t.print();
+    println!("   expect: adaptive (20) ≈ best of both extremes on frontier algorithms.\n");
+}
+
+fn partition_ablation(graph: &unigps::graph::Graph) {
+    println!("-- [3] Partitioning strategy (CC on symmetrized graph) --");
+    let mut t = Table::new(&["strategy", "time", "messages"]);
+    for (name, strat) in [
+        ("hash", PartitionStrategy::Hash),
+        ("range", PartitionStrategy::Range),
+        ("edge-balanced", PartitionStrategy::EdgeBalanced),
+    ] {
+        let mut opts = RunOptions::default().with_workers(4);
+        opts.partition = strat;
+        opts.step_metrics = false;
+        let timer = Timer::start();
+        let m = run_typed(EngineKind::Pregel, graph, &ConnectedComponents::new(), &opts)
+            .unwrap()
+            .metrics;
+        t.row(&[
+            name.to_string(),
+            fmt_dur(timer.secs()),
+            unigps::util::fmt_count(m.total_messages),
+        ]);
+    }
+    t.print();
+    println!("   expect: edge-balanced ≥ hash > range on skewed graphs (load balance).\n");
+}
+
+fn barrier_ablation() {
+    println!("-- [4] Barrier implementation (4 workers x 10k barriers) --");
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let rounds = if fast { 2_000 } else { 10_000 };
+    let workers = 4;
+    let mut t = Table::new(&["barrier", "total", "per-barrier"]);
+
+    let run = |name: &str, wait: &(dyn Fn() -> bool + Sync), t: &mut Table| {
+        let timer = Timer::start();
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    for _ in 0..rounds {
+                        wait();
+                    }
+                });
+            }
+        });
+        let total = timer.secs();
+        t.row(&[
+            name.to_string(),
+            fmt_dur(total),
+            fmt_dur(total / rounds as f64),
+        ]);
+    };
+
+    let b = BspBarrier::new(workers);
+    run("std (OS-blocking)", &|| b.wait(), &mut t);
+    let b = SpinBarrier::new(workers);
+    run("spin + yield", &|| b.wait(), &mut t);
+    let b = CondvarBarrier::new(workers);
+    run("condvar", &|| b.wait(), &mut t);
+    t.print();
+    println!("   expect: spin+yield fastest at this worker count — the same reasoning\n   as the paper's busy-wait IPC choice.");
+}

@@ -1,0 +1,162 @@
+//! Fig 8a — performance comparison: UniGPS engines (UDF over IPC) vs the
+//! serial baseline, on the four Table II dataset analogs × {PR, SSSP, CC}.
+//!
+//! Reproduces the paper's qualitative shape:
+//!   * the vertex-parallel Pregel/Giraph backend tolerates IPC-served UDFs
+//!     best (fewest user-function calls per superstep);
+//!   * the edge-parallel GAS/GraphX and Push-Pull/Gemini backends multiply
+//!     the per-call overhead by |E| every round ("IPC overheads more
+//!     obvious", paper §V-C — GraphX/Gemini hit the paper's timeout);
+//!   * the serial baseline loses on the larger datasets.
+//!
+//! Columns: in-process engine time, IPC-UDF engine time, serial baseline.
+//! Env: UNIGPS_SCALE_DIV (default 2048 — keeps the full sweep in minutes;
+//! the paper's 1/1 scale is reachable given hours), UNIGPS_BENCH_FAST=1.
+
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::datasets::DATASETS;
+use unigps::graph::Graph;
+use unigps::ipc::remote_program::RemoteVCProg;
+use unigps::ipc::Transport;
+use unigps::operators::symmetrized;
+use unigps::util::bench::{fmt_dur, Table};
+use unigps::util::timer::Timer;
+use unigps::vcprog::programs::{ConnectedComponents, PageRank, SsspBellmanFord};
+use unigps::vcprog::VCProg;
+use unigps::vcprog::adapter::Wire;
+
+const PR_ITERS: u32 = 10;
+
+fn scale_div() -> u64 {
+    std::env::var("UNIGPS_SCALE_DIV")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048)
+}
+
+struct Measurement {
+    in_process: f64,
+    over_ipc: f64,
+    remote_calls: u64,
+}
+
+fn run_both<P>(graph: &Graph, program: P, spec: &str, opts: &RunOptions) -> Measurement
+where
+    P: VCProg<In = (), EProp = f64> + Clone,
+    P::VProp: Wire,
+    P::Msg: Wire,
+{
+    let t = Timer::start();
+    run_typed(opts_engine(opts), graph, &program, opts).expect("run");
+    let in_process = t.secs();
+
+    let remote = RemoteVCProg::launch(
+        program,
+        spec,
+        opts.workers,
+        Transport::ZeroCopyShm,
+        false, // real runner child processes, as in the paper
+    )
+    .expect("launch runners");
+    // Sender-side combining would add extra *remote* merge calls in UDF
+    // mode; Giraph's combiner runs next to the user code, so disable ours
+    // for the IPC measurement (receiver-side merging still applies).
+    let mut ipc_opts = opts.clone();
+    ipc_opts.combiner = false;
+    let t = Timer::start();
+    run_typed(opts_engine(opts), graph, &remote, &ipc_opts).expect("run ipc");
+    let over_ipc = t.secs();
+    let remote_calls = remote.remote_calls();
+    remote.shutdown();
+    Measurement {
+        in_process,
+        over_ipc,
+        remote_calls,
+    }
+}
+
+fn opts_engine(_opts: &RunOptions) -> EngineKind {
+    // Engine choice is threaded via the options-carrying closure below.
+    ENGINE.with(|e| *e.borrow())
+}
+
+thread_local! {
+    static ENGINE: std::cell::RefCell<EngineKind> =
+        const { std::cell::RefCell::new(EngineKind::Pregel) };
+}
+
+fn with_engine(kind: EngineKind, f: impl FnOnce() -> Measurement) -> Measurement {
+    ENGINE.with(|e| *e.borrow_mut() = kind);
+    f()
+}
+
+fn main() {
+    let div = scale_div();
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let engines = [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull];
+    println!("== Fig 8a: UniGPS engines (UDF over zero-copy IPC runner processes) vs serial ==");
+    println!("datasets at 1/{div} of paper scale; PR {PR_ITERS} iters\n");
+
+    let mut table = Table::new(&[
+        "dataset", "algo", "engine", "in-process", "udf-over-ipc", "remote calls", "serial",
+        "ipc vs serial",
+    ]);
+
+    for ds in &DATASETS {
+        if fast && (ds.key == "ok" || ds.key == "uk") {
+            continue; // the two big graphs dominate wallclock
+        }
+        let graph = ds.generate(div);
+        eprintln!("[{}] {}", ds.key, graph.summary());
+        let n = graph.num_vertices();
+        let sym = symmetrized(&graph);
+
+        for algo in ["pagerank", "sssp", "cc"] {
+            // Serial native baseline (NetworkX stand-in).
+            let t = Timer::start();
+            match algo {
+                "pagerank" => {
+                    unigps::engine::baselines::pagerank(&graph, 0.85, PR_ITERS);
+                }
+                "sssp" => {
+                    unigps::engine::baselines::dijkstra(&graph, 0);
+                }
+                _ => {
+                    unigps::engine::baselines::connected_components(&sym);
+                }
+            }
+            let serial = t.secs();
+
+            for kind in engines {
+                let mut opts = RunOptions::default().with_workers(4);
+                opts.step_metrics = false;
+                let m = with_engine(kind, || match algo {
+                    "pagerank" => {
+                        let prog = PageRank::new(n, PR_ITERS);
+                        let mut o = opts.clone();
+                        o.max_iter = prog.rounds();
+                        let spec = format!("pagerank n={n} iters={PR_ITERS}");
+                        run_both(&graph, prog, &spec, &o)
+                    }
+                    "sssp" => run_both(&graph, SsspBellmanFord::new(0), "sssp root=0", &opts),
+                    _ => run_both(&sym, ConnectedComponents::new(), "cc", &opts),
+                });
+                table.row(&[
+                    ds.key.to_string(),
+                    algo.to_string(),
+                    kind.name().to_string(),
+                    fmt_dur(m.in_process),
+                    fmt_dur(m.over_ipc),
+                    unigps::util::fmt_count(m.remote_calls),
+                    fmt_dur(serial),
+                    format!("{:.2}x", m.over_ipc / serial.max(1e-9)),
+                ]);
+            }
+        }
+    }
+    table.print();
+    println!(
+        "\npaper shape check: pregel should show the smallest udf-over-ipc \
+         blow-up; gas/pushpull the largest (edge-parallel UDF calls)."
+    );
+}

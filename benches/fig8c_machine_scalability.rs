@@ -1,0 +1,97 @@
+//! Fig 8c — machine scalability: speedup vs number of workers.
+//!
+//! The paper sweeps 16→64 cluster cores and normalizes speedup to the
+//! 16-core case. This testbed exposes **one** CPU core (see DESIGN.md
+//! §Substitutions), so wallclock cannot show parallel speedup; instead the
+//! simulated cluster reports the standard simulator metric: per-worker
+//! *busy time* (compute + delivery, excluding barrier waits), from which
+//!
+//! ```text
+//! speedup(P) = busy_total(1 worker) / max_p busy_p(P workers)
+//! ```
+//!
+//! — i.e. the critical-path speedup a P-core machine would realize, which
+//! is gated by exactly what gates the paper's clusters: load balance.
+//! Expected shape (paper §V-E): near-linear scaling; CC and PR scale
+//! better than SSSP (SSSP's thin frontier idles workers).
+
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::datasets::DatasetSpec;
+use unigps::operators::symmetrized;
+use unigps::util::bench::{fmt_dur, Table};
+use unigps::vcprog::programs::{ConnectedComponents, PageRank, SsspBellmanFord};
+
+fn main() {
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    // Scalability needs enough per-superstep work to amortize barriers:
+    // use a larger slice of the lj analog than the other benches.
+    let div: u64 = std::env::var("UNIGPS_SCALE_DIV")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 256 } else { 64 });
+    let workers: &[usize] = &[1, 2, 4, 8];
+    let graph = DatasetSpec::by_key("lj").unwrap().generate(div);
+    let sym = symmetrized(&graph);
+    println!("== Fig 8c: machine scalability on lj analog (1/{div} scale) ==");
+    println!("{} — speedup modeled from per-worker busy time (1-core testbed)\n", graph.summary());
+
+    let mut table = Table::new(&[
+        "algo", "workers", "max busy", "speedup vs 1w", "speedup vs 2w", "eff (vs 2w)", "imbalance",
+    ]);
+    for algo in ["pagerank", "sssp", "cc"] {
+        let mut base_total = None;
+        let mut base_2w: Option<f64> = None;
+        for &w in workers {
+            let mut opts = RunOptions::default().with_workers(w);
+            // Gemini-style edge-balanced chunking: hash partitioning is
+            // systematically imbalanced on R-MAT graphs (hub weight
+            // correlates with v mod P) — see benches/ablations.rs [3].
+            opts.partition = unigps::graph::partition::PartitionStrategy::EdgeBalanced;
+            opts.step_metrics = false;
+            let metrics = match algo {
+                "pagerank" => {
+                    let prog = PageRank::new(graph.num_vertices(), 10);
+                    let mut o = opts.clone();
+                    o.max_iter = prog.rounds();
+                    run_typed(EngineKind::Pregel, &graph, &prog, &o).unwrap().metrics
+                }
+                "sssp" => run_typed(EngineKind::Pregel, &graph, &SsspBellmanFord::new(0), &opts)
+                    .unwrap()
+                    .metrics,
+                _ => run_typed(EngineKind::Pregel, &sym, &ConnectedComponents::new(), &opts)
+                    .unwrap()
+                    .metrics,
+            };
+            let busy: Vec<f64> = metrics.worker_busy.iter().map(|d| d.as_secs_f64()).collect();
+            let max_busy = busy.iter().cloned().fold(0.0, f64::max);
+            let mean_busy = busy.iter().sum::<f64>() / busy.len() as f64;
+            let total1 = *base_total.get_or_insert(busy.iter().sum::<f64>());
+            let speedup = total1 / max_busy.max(1e-12);
+            if w == 2 {
+                base_2w = Some(max_busy);
+            }
+            // The paper normalizes to its *smallest distributed* config
+            // (16 cores), not to one core: the 1→2 step pays the fixed
+            // serial→distributed cost (messages start crossing partitions),
+            // the 2→P steps measure scalability of the distributed system.
+            let vs_2w = base_2w.map(|b| b / max_busy.max(1e-12));
+            table.row(&[
+                algo.to_string(),
+                w.to_string(),
+                fmt_dur(max_busy),
+                format!("{speedup:.2}x"),
+                vs_2w.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
+                vs_2w
+                    .map(|s| format!("{:.0}%", 100.0 * s / (w as f64 / 2.0)))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.2}", max_busy / mean_busy.max(1e-12)),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper shape check: near-linear modeled speedup from the smallest \
+         distributed config (cf. the paper's 16-core baseline); CC/PR scale \
+         better than SSSP; imbalance (max/mean busy) near 1.0 = good balance."
+    );
+}

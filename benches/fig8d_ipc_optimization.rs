@@ -1,0 +1,208 @@
+//! Fig 8d — effect of the IPC optimization: zero-copy shared-memory IPC
+//! vs the network-stack RPC baseline (gRPC stand-in).
+//!
+//! Two levels of evidence, as in the paper:
+//!   1. end-to-end: PR / SSSP / CC on the lj analog, Pregel engine, UDFs
+//!      served by runner child processes over (a) the zero-copy channel,
+//!      (b) the socket RPC — the zero-copy column should be clearly faster;
+//!   2. microbenchmark: raw round-trip latency of one UDF call per
+//!      transport (and per busy-wait strategy — the §IV-C.2 design choice).
+
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::datasets::DatasetSpec;
+use unigps::ipc::protocol::method;
+use unigps::ipc::remote_program::RemoteVCProg;
+use unigps::ipc::shm::ShmMap;
+use unigps::ipc::socket_rpc::{SocketClient, SocketServer};
+use unigps::ipc::zerocopy::{WaitStrategy, ZeroCopyClient, ZeroCopyServer};
+use unigps::ipc::{RpcChannel, Transport};
+use unigps::operators::symmetrized;
+use unigps::util::bench::{fmt_dur, Table};
+use unigps::util::timer::Timer;
+use unigps::vcprog::programs::{ConnectedComponents, PageRank, SsspBellmanFord};
+
+fn main() {
+    microbench();
+    end_to_end();
+    batching_ablation();
+}
+
+/// §VI future-work extension: pipelined (batched) RPC — one EMIT_BATCH
+/// round-trip per vertex vs one EMIT per edge.
+fn batching_ablation() {
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let div: u64 = if fast { 8192 } else { 2048 };
+    let graph = DatasetSpec::by_key("lj").unwrap().generate(div);
+    println!("\n== Fig 8d (extension): pipelined RPC — batched vs per-edge emit ==");
+    let mut table = Table::new(&["emit mode", "time", "remote calls"]);
+    for batched in [true, false] {
+        let mut remote = RemoteVCProg::launch(
+            SsspBellmanFord::new(0),
+            "sssp root=0",
+            2,
+            Transport::ZeroCopyShm,
+            false,
+        )
+        .unwrap();
+        remote.set_batch_emit(batched);
+        let mut opts = RunOptions::default().with_workers(2);
+        opts.step_metrics = false;
+        let t = Timer::start();
+        run_typed(EngineKind::Pregel, &graph, &remote, &opts).unwrap();
+        let secs = t.secs();
+        table.row(&[
+            if batched { "batched (1 rpc/vertex)" } else { "per-edge (1 rpc/edge)" }.into(),
+            fmt_dur(secs),
+            unigps::util::fmt_count(remote.remote_calls()),
+        ]);
+        remote.shutdown();
+    }
+    table.print();
+    println!("   the paper's §VI 'pipeline RPC invocations' — batching collapses the per-call overhead.");
+}
+
+/// Raw round-trip latency per transport / wait strategy.
+fn microbench() {
+    println!("== Fig 8d (micro): IPC call round-trip latency ==\n");
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let calls: u32 = if fast { 20_000 } else { 100_000 };
+    let payload = vec![7u8; 64]; // a typical encoded vertexCompute request
+
+    let mut table = Table::new(&["transport", "wait", "calls", "total", "per-call"]);
+
+    for wait in [WaitStrategy::BusyYield, WaitStrategy::Spin, WaitStrategy::Sleep] {
+        // Pure spinning without yield is pathological when client and server
+        // share a core (each spinner burns its whole timeslice before the
+        // peer can run) — exactly why the paper yields in its busy-wait.
+        // Keep the sample small so the pathology is visible but cheap.
+        let calls = if wait == WaitStrategy::Spin { calls.min(200) } else { calls };
+        let path = ShmMap::unique_path("fig8d-zc");
+        let mut server = ZeroCopyServer::create(&path, 1 << 16, wait).unwrap();
+        let mut client = ZeroCopyClient::open(&path, 1 << 16, wait).unwrap();
+        let srv = std::thread::spawn(move || loop {
+            let m = server.serve_one(|_, req| Ok(req.to_vec())).unwrap();
+            if m == method::SHUTDOWN {
+                break;
+            }
+        });
+        let t = Timer::start();
+        for _ in 0..calls {
+            client.call(method::PING, &payload).unwrap();
+        }
+        let total = t.secs();
+        client.call(method::SHUTDOWN, b"").unwrap();
+        srv.join().unwrap();
+        table.row(&[
+            "zerocopy-shm".into(),
+            format!("{wait:?}"),
+            calls.to_string(),
+            fmt_dur(total),
+            fmt_dur(total / calls as f64),
+        ]);
+    }
+
+    {
+        let path = ShmMap::unique_path("fig8d-sock");
+        let server = SocketServer::bind(&path).unwrap();
+        let srv = std::thread::spawn(move || {
+            server
+                .serve(method::SHUTDOWN, |_, req| Ok(req.to_vec()))
+                .unwrap();
+        });
+        let mut client = SocketClient::connect(&path).unwrap();
+        let t = Timer::start();
+        for _ in 0..calls {
+            client.call(method::PING, &payload).unwrap();
+        }
+        let total = t.secs();
+        client.call(method::SHUTDOWN, b"").unwrap();
+        srv.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+        table.row(&[
+            "socket-rpc".into(),
+            "-".into(),
+            calls.to_string(),
+            fmt_dur(total),
+            fmt_dur(total / calls as f64),
+        ]);
+    }
+    table.print();
+    println!();
+}
+
+/// End-to-end engine runs with UDFs served per transport.
+fn end_to_end() {
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let div: u64 = std::env::var("UNIGPS_SCALE_DIV")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if fast { 8192 } else { 2048 });
+    let graph = DatasetSpec::by_key("lj").unwrap().generate(div);
+    let sym = symmetrized(&graph);
+    let n = graph.num_vertices();
+    println!("== Fig 8d (end-to-end): lj analog at 1/{div}, pregel engine, runner processes ==");
+    println!("{}\n", graph.summary());
+
+    let mut table = Table::new(&["algo", "zerocopy-shm", "socket-rpc", "speedup"]);
+    for algo in ["pagerank", "sssp", "cc"] {
+        let mut times = Vec::new();
+        for transport in [Transport::ZeroCopyShm, Transport::Socket] {
+            let mut opts = RunOptions::default().with_workers(2);
+            opts.step_metrics = false;
+            let secs = match algo {
+                "pagerank" => {
+                    let prog = PageRank::new(n, 10);
+                    let mut o = opts.clone();
+                    o.max_iter = prog.rounds();
+                    let remote = RemoteVCProg::launch(
+                        prog,
+                        &format!("pagerank n={n} iters=10"),
+                        2,
+                        transport,
+                        false,
+                    )
+                    .unwrap();
+                    let t = Timer::start();
+                    run_typed(EngineKind::Pregel, &graph, &remote, &o).unwrap();
+                    let s = t.secs();
+                    remote.shutdown();
+                    s
+                }
+                "sssp" => {
+                    let remote = RemoteVCProg::launch(
+                        SsspBellmanFord::new(0),
+                        "sssp root=0",
+                        2,
+                        transport,
+                        false,
+                    )
+                    .unwrap();
+                    let t = Timer::start();
+                    run_typed(EngineKind::Pregel, &graph, &remote, &opts).unwrap();
+                    let s = t.secs();
+                    remote.shutdown();
+                    s
+                }
+                _ => {
+                    let remote =
+                        RemoteVCProg::launch(ConnectedComponents::new(), "cc", 2, transport, false)
+                            .unwrap();
+                    let t = Timer::start();
+                    run_typed(EngineKind::Pregel, &sym, &remote, &opts).unwrap();
+                    let s = t.secs();
+                    remote.shutdown();
+                    s
+                }
+            };
+            times.push(secs);
+        }
+        table.row(&[
+            algo.to_string(),
+            fmt_dur(times[0]),
+            fmt_dur(times[1]),
+            format!("{:.2}x", times[1] / times[0].max(1e-9)),
+        ]);
+    }
+    table.print();
+    println!("\npaper shape check: zero-copy column faster on every algorithm.");
+}

@@ -1,0 +1,72 @@
+//! Interactive-analysis pipeline — the data-analyst workflow the paper's
+//! introduction motivates (the Jupyter-Notebook use case).
+//!
+//! Loads/generates a social-network analog, then chains operators the way
+//! an analyst would in a notebook: degree profile → connected components →
+//! PageRank on the giant component → community detection → k-core →
+//! triangle count; everything through the unified operator API, engines
+//! mixed freely per call.
+//!
+//! ```text
+//! cargo run --release --example graph_analysis
+//! ```
+
+use std::collections::HashMap;
+use unigps::prelude::*;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let session = Session::builder().workers(4).build();
+    let graph = session.dataset("as", 512).expect("as-skitter analog");
+    println!("== dataset: as-skitter analog ==\n{}", graph.summary());
+
+    // 1. Degree profile (Pregel engine).
+    let deg = session.degrees(&graph).engine(EngineKind::Pregel).run()?;
+    let out_deg = deg.column("out_degree").unwrap().as_i64().unwrap();
+    let max_deg = out_deg.iter().max().copied().unwrap_or(0);
+    let mean_deg = out_deg.iter().sum::<i64>() as f64 / out_deg.len() as f64;
+    println!("\n[1] degrees: max={max_deg} mean={mean_deg:.2} (skew ×{:.1})", max_deg as f64 / mean_deg);
+
+    // 2. Connected components (Push-Pull engine) → giant component share.
+    let cc = session.cc(&graph).engine(EngineKind::PushPull).run()?;
+    let comp = cc.column("component").unwrap().as_i64().unwrap();
+    let mut sizes: HashMap<i64, usize> = HashMap::new();
+    for &c in comp {
+        *sizes.entry(c).or_default() += 1;
+    }
+    let giant = sizes.values().max().copied().unwrap_or(0);
+    println!(
+        "[2] components: {} total, giant holds {:.1}% of vertices",
+        sizes.len(),
+        100.0 * giant as f64 / comp.len() as f64
+    );
+
+    // 3. PageRank (GAS engine) → influencers.
+    let pr = session.pagerank(&graph).engine(EngineKind::Gas).run()?;
+    println!("[3] pagerank top-3: {:?}", pr.top_k_f64("rank", 3));
+
+    // 4. Communities by label propagation.
+    let lpa = session.lpa(&graph, 8).engine(EngineKind::Pregel).run()?;
+    let labels = lpa.column("community").unwrap().as_i64().unwrap();
+    let communities: std::collections::HashSet<_> = labels.iter().collect();
+    println!("[4] label propagation found {} communities", communities.len());
+
+    // 5. 3-core membership.
+    let core = session.kcore(&graph, 3).engine(EngineKind::Pregel).run()?;
+    let in_core = core.column("in_core").unwrap().as_i64().unwrap();
+    let survivors: i64 = in_core.iter().sum();
+    println!(
+        "[5] 3-core: {survivors} of {} vertices survive peeling",
+        in_core.len()
+    );
+
+    // 6. Triangles (VCProg program) vs the serial oracle.
+    let tri = session.triangles(&graph).engine(EngineKind::Pregel).run()?;
+    let hits = tri.column("hits").unwrap().as_i64().unwrap();
+    let vc_triangles = unigps::vcprog::programs::TriangleCount::global_from_hits(hits);
+    let oracle = unigps::engine::baselines::triangle_count(&unigps::operators::symmetrized(&graph));
+    assert_eq!(vc_triangles, oracle, "VCProg triangles != serial oracle");
+    println!("[6] triangles: {vc_triangles} (validated against serial oracle)");
+
+    println!("\npipeline of 6 chained operators across 3 engines completed ✓");
+    Ok(())
+}

@@ -1,0 +1,26 @@
+// L3 perf baseline harness: PR/SSSP/CC on lj/256 across engines/workers.
+fn main() {
+    let g = unigps::graph::datasets::DatasetSpec::by_key("lj").unwrap().generate(256);
+    println!("{}", g.summary());
+    let n = g.num_vertices();
+    for engine in ["pregel", "gas", "pushpull", "serial"] {
+        let kind = unigps::engine::EngineKind::parse(engine).unwrap();
+        for workers in [1usize, 4] {
+            if engine == "serial" && workers > 1 { continue; }
+            for combiner in [true, false] {
+                if engine != "pregel" && !combiner { continue; }
+                let mut opts = unigps::engine::RunOptions::default().with_workers(workers);
+                opts.combiner = combiner;
+                opts.step_metrics = false;
+                opts.partition = unigps::graph::partition::PartitionStrategy::EdgeBalanced;
+                let prog = unigps::vcprog::programs::PageRank::new(n, 10);
+                opts.max_iter = prog.rounds();
+                let t = std::time::Instant::now();
+                let r = unigps::engine::run_typed(kind, &g, &prog, &opts).unwrap();
+                let el = t.elapsed().as_secs_f64();
+                let meps = r.metrics.total_messages as f64 / el / 1e6;
+                println!("PR {engine:>8} w={workers} combiner={combiner}: {:.1}ms ({meps:.0}M msg/s)", el*1e3);
+            }
+        }
+    }
+}

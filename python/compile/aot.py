@@ -1,0 +1,135 @@
+"""AOT lowering: JAX step functions → HLO text artifacts.
+
+Lowers each (algorithm, size-bucket) pair to **HLO text** — not a
+serialized ``HloModuleProto``: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per bucket ``v{V_pad}_be{BE}``:
+
+* ``artifacts/pagerank_v{V}_be{BE}.hlo.txt``
+* ``artifacts/sssp_v{V}_be{BE}.hlo.txt``
+* ``artifacts/cc_v{V}_be{BE}.hlo.txt``
+* ``artifacts/manifest.json`` — the bucket table the rust runtime reads.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts \
+        [--buckets 1024:512,1024:2048,4096:2048,16384:8192]
+
+Run once at build time (`make artifacts`); never at request time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.segment_ops import BV, vmem_estimate
+
+DEFAULT_BUCKETS = "1024:512,1024:2048,4096:2048,4096:16384,16384:4096,16384:32768"
+
+ALGORITHMS = ("pagerank", "sssp", "cc")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs_for(alg: str, v_pad: int, be: int):
+    """Example-argument shape specs of one step function."""
+    nb = v_pad // BV
+    f32v = jax.ShapeDtypeStruct((v_pad,), jnp.float32)
+    i32e = jax.ShapeDtypeStruct((nb, be), jnp.int32)
+    f32e = jax.ShapeDtypeStruct((nb, be), jnp.float32)
+    f32s = jax.ShapeDtypeStruct((1,), jnp.float32)
+    if alg == "pagerank":
+        # rank, src, dst, valid, inv_outdeg, real_mask, n_real
+        return (f32v, i32e, i32e, f32e, f32v, f32v, f32s)
+    if alg == "sssp":
+        # dist, src, dst, valid, weight
+        return (f32v, i32e, i32e, f32e, f32e)
+    if alg == "cc":
+        # label, src, dst, valid
+        return (f32v, i32e, i32e, f32e)
+    raise ValueError(alg)
+
+
+def step_fn(alg: str):
+    if alg == "pagerank":
+        return model.pagerank_step
+    if alg == "sssp":
+        return model.sssp_step
+    if alg == "cc":
+        return model.cc_step
+    raise ValueError(alg)
+
+
+def lower_one(alg: str, v_pad: int, be: int) -> str:
+    lowered = jax.jit(step_fn(alg)).lower(*specs_for(alg, v_pad, be))
+    return to_hlo_text(lowered)
+
+
+def parse_buckets(spec: str):
+    out = []
+    for part in spec.split(","):
+        v, be = part.strip().split(":")
+        v, be = int(v), int(be)
+        assert v % BV == 0, f"v_pad {v} must be a multiple of {BV}"
+        out.append((v, be))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--buckets", default=DEFAULT_BUCKETS)
+    ap.add_argument("--algorithms", default=",".join(ALGORITHMS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    buckets = parse_buckets(args.buckets)
+    algs = [a for a in args.algorithms.split(",") if a]
+
+    manifest = {"bv": BV, "artifacts": []}
+    for v_pad, be in buckets:
+        est = vmem_estimate(v_pad, be)
+        for alg in algs:
+            name = f"{alg}_v{v_pad}_be{be}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower_one(alg, v_pad, be)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "algorithm": alg,
+                    "v_pad": v_pad,
+                    "nb": v_pad // BV,
+                    "be": be,
+                    "file": name,
+                    "vmem_step_bytes": est["total_bytes"],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars, "
+                  f"vmem/step={est['total_bytes']>>10} KiB)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out_dir}/manifest.json with "
+          f"{len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

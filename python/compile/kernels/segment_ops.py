@@ -1,0 +1,215 @@
+"""Layer-1 Pallas kernels: the VCProg message-combine hot phase.
+
+The three paper workloads (PageRank, SSSP, CC) share one compute shape:
+*gather* a value per edge from the source vertex, then *segment-combine*
+the per-edge values into the destination vertex (sum semiring for PR,
+min semiring for SSSP/CC).  This is the "merge messages" phase of the
+vertex-centric model — the hot loop every backend engine runs.
+
+Graphs are preprocessed (rust: `runtime/blockcsc.rs`) into **block-CSC**
+form: vertices padded to ``V_pad = NB * BV`` and edges grouped by
+destination block, each block padded to ``BE`` edge slots:
+
+* ``src_idx  : int32[NB, BE]``  source vertex of each edge slot
+* ``local_dst: int32[NB, BE]``  destination offset within the block
+* ``valid    : f32[NB, BE]``    1.0 for real edges, 0.0 for padding
+* ``weight   : f32[NB, BE]``    edge weight (SSSP)
+
+Each Pallas grid step stages one destination block in VMEM and reduces
+its ``BE`` edge slots:
+
+* **sum semiring** — one-hot matmul: ``msgs[1, BE] @ onehot[BE, BV]``,
+  an MXU-shaped contraction (the TPU rendering of what a CUDA scatter-add
+  would do with atomics; see DESIGN.md §Hardware-Adaptation).
+* **min semiring** — masked broadcast-min over the ``[BE, BV]`` tile (VPU).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO and numerics are validated
+against :mod:`ref` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Destination-block height: one VPU/MXU lane tile.
+BV = 128
+
+
+def _segment_sum_body(vals, src, local_dst, valid):
+    """Reduce one destination block (sum semiring) — pure array math."""
+    msgs = vals[src] * valid         # gather + mask       f32[BE]
+    # One-hot contraction onto the MXU: [1, BE] @ [BE, BV] -> [1, BV].
+    onehot = (local_dst[:, None] == jnp.arange(BV, dtype=jnp.int32)[None, :])
+    acc = jnp.dot(msgs[None, :], onehot.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    return acc[0]
+
+
+def _segment_min_body(vals, src, local_dst, valid, w):
+    """Reduce one destination block (min-plus semiring) — pure array math."""
+    inf = jnp.float32(jnp.inf)
+    cand = vals[src]
+    if w is not None:
+        cand = cand + w
+    cand = jnp.where(valid > 0, cand, inf)          # f32[BE]
+    onehot = (local_dst[:, None] == jnp.arange(BV, dtype=jnp.int32)[None, :])
+    tile = jnp.where(onehot, cand[:, None], inf)    # f32[BE, BV]
+    return jnp.min(tile, axis=0)
+
+
+# Edge-chunk width: one grid step reduces at most CHUNK edge slots, keeping
+# the [CHUNK, BV] working tile ≈1 MiB regardless of how many edges a hub
+# block accumulates (power-law graphs routinely put 10⁴-10⁵ edges in one
+# destination block). The grid revisits each output block once per chunk and
+# accumulates — the standard TPU pattern for unbounded reduction extents.
+CHUNK = 2048
+
+
+def _chunk_of(be: int) -> int:
+    return min(be, CHUNK)
+
+
+def _edge_specs(be: int):
+    """BlockSpecs for the per-block edge arrays: one (block, chunk) tile per
+    grid step."""
+    chunk = _chunk_of(be)
+    return pl.BlockSpec((1, chunk), lambda b, c: (b, c))
+
+
+def _vprop_spec(v_pad: int):
+    """The vertex-property vector is staged whole and shared by every step."""
+    return pl.BlockSpec((v_pad,), lambda b, c: (0,))
+
+
+def _out_spec():
+    """Output block: revisited across the chunk axis (accumulation)."""
+    return pl.BlockSpec((BV,), lambda b, c: (b,))
+
+
+def _grid(nb: int, be: int):
+    chunk = _chunk_of(be)
+    assert be % chunk == 0, f"be {be} must be a multiple of {chunk}"
+    return (nb, be // chunk)
+
+
+def segment_sum(vprop, src_idx, local_dst, valid):
+    """Segment-sum of ``vprop[src]`` into destination vertices.
+
+    Args:
+      vprop:     f32[V_pad] per-source contribution (already divided by
+                 out-degree for PageRank).
+      src_idx:   i32[NB, BE].
+      local_dst: i32[NB, BE].
+      valid:     f32[NB, BE].
+
+    Returns:
+      f32[V_pad] accumulated sums (padding slots stay 0).
+    """
+    nb, be = src_idx.shape
+    v_pad = vprop.shape[0]
+    assert v_pad == nb * BV, f"v_pad {v_pad} != {nb}*{BV}"
+
+    def kernel(vprop_ref, src_ref, dst_ref, valid_ref, out_ref):
+        c = pl.program_id(1)
+
+        @pl.when(c == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        out_ref[...] += _segment_sum_body(
+            vprop_ref[...],
+            src_ref[...][0],  # drop the leading block axis
+            dst_ref[...][0],
+            valid_ref[...][0],
+        )
+
+    return pl.pallas_call(
+        kernel,
+        grid=_grid(nb, be),
+        in_specs=[
+            _vprop_spec(v_pad),
+            _edge_specs(be),
+            _edge_specs(be),
+            _edge_specs(be),
+        ],
+        out_specs=_out_spec(),
+        out_shape=jax.ShapeDtypeStruct((v_pad,), jnp.float32),
+        interpret=True,
+    )(vprop, src_idx, local_dst, valid)
+
+
+def segment_min(vprop, src_idx, local_dst, valid, weight=None):
+    """Segment-min of ``vprop[src] (+ weight)`` into destination vertices.
+
+    Returns f32[V_pad]; slots with no incoming edges get ``+inf``.
+    """
+    nb, be = src_idx.shape
+    v_pad = vprop.shape[0]
+    assert v_pad == nb * BV, f"v_pad {v_pad} != {nb}*{BV}"
+    plus_weight = weight is not None
+
+    def kernel(*refs):
+        if plus_weight:
+            vprop_ref, src_ref, dst_ref, valid_ref, w_ref, out_ref = refs
+            w = w_ref[...][0]
+        else:
+            vprop_ref, src_ref, dst_ref, valid_ref, out_ref = refs
+            w = None
+        c = pl.program_id(1)
+
+        @pl.when(c == 0)
+        def _init():
+            out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+        out_ref[...] = jnp.minimum(
+            out_ref[...],
+            _segment_min_body(
+                vprop_ref[...], src_ref[...][0], dst_ref[...][0],
+                valid_ref[...][0], w),
+        )
+
+    in_specs = [
+        _vprop_spec(v_pad),
+        _edge_specs(be),
+        _edge_specs(be),
+        _edge_specs(be),
+    ]
+    args = [vprop, src_idx, local_dst, valid]
+    if plus_weight:
+        in_specs.append(_edge_specs(be))
+        args.append(weight)
+
+    return pl.pallas_call(
+        kernel,
+        grid=_grid(nb, be),
+        in_specs=in_specs,
+        out_specs=_out_spec(),
+        out_shape=jax.ShapeDtypeStruct((v_pad,), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate(v_pad: int, be: int) -> dict:
+    """Analytic VMEM footprint of one grid step in bytes (see DESIGN.md
+    §Perf — interpret mode gives no TPU timings, so the schedule is sized
+    from this estimate). Chunking bounds the tile regardless of ``be``."""
+    chunk = _chunk_of(be)
+    vprop = 4 * v_pad
+    edges = 4 * chunk * 4       # src, dst, valid, weight rows
+    tile = 4 * chunk * BV       # onehot / masked tile
+    out = 4 * BV
+    total = vprop + edges + tile + out
+    return {
+        "vprop_bytes": vprop,
+        "edge_rows_bytes": edges,
+        "tile_bytes": tile,
+        "out_bytes": out,
+        "total_bytes": total,
+        "fits_16mb_vmem": total < 16 * 1024 * 1024,
+    }

@@ -1,0 +1,66 @@
+"""Layer-2 JAX step functions for the three paper workloads.
+
+Each function is one VCProg superstep over the block-CSC encoding,
+calling the Layer-1 Pallas kernels for the message-combine phase and
+plain jnp for the vertex-update phase.  ``aot.py`` lowers these (jitted,
+shape-specialized) to HLO text; the rust tensor engine drives the
+iteration loop, checking the returned ``changed`` count for convergence
+— exactly the split the paper prescribes: Python authors the compute,
+rust owns the loop, and Python never runs at request time.
+
+All values are f32: exact for integral distances/labels below 2**24,
+which the rust side guarantees by bucket selection.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.kernels import segment_ops
+
+
+def pagerank_step(rank, src_idx, local_dst, valid, inv_outdeg, real_mask,
+                  n_real, damping=0.85):
+    """One PageRank update.
+
+    Args:
+      rank:       f32[V_pad] current ranks (0 in padding slots).
+      src_idx:    i32[NB, BE] block-CSC sources.
+      local_dst:  i32[NB, BE] destinations within block.
+      valid:      f32[NB, BE] edge mask.
+      inv_outdeg: f32[V_pad] 1/out_degree (0 for dangling/padding).
+      real_mask:  f32[V_pad] 1.0 for real vertices.
+      n_real:     f32[1] number of real vertices.
+      damping:    python float, baked at trace time.
+
+    Returns:
+      f32[V_pad] updated ranks.
+    """
+    contrib = rank * inv_outdeg
+    acc = segment_ops.segment_sum(contrib, src_idx, local_dst, valid)
+    new = (1.0 - damping) / n_real[0] + damping * acc
+    return (new * real_mask,)
+
+
+def sssp_step(dist, src_idx, local_dst, valid, weight):
+    """One Bellman-Ford relaxation.
+
+    ``dist`` uses ``+inf`` for unreached vertices (padding slots too).
+    Returns ``(new_dist, changed_count[1])``.
+    """
+    cand = segment_ops.segment_min(dist, src_idx, local_dst, valid, weight)
+    new = jnp.minimum(dist, cand)
+    changed = jnp.sum((new < dist).astype(jnp.float32))
+    return new, changed.reshape((1,))
+
+
+def cc_step(label, src_idx, local_dst, valid):
+    """One min-label-propagation step.
+
+    Padding slots carry ``+inf`` labels so they never win a min.
+    Returns ``(new_label, changed_count[1])``.
+    """
+    cand = segment_ops.segment_min(label, src_idx, local_dst, valid)
+    new = jnp.minimum(label, cand)
+    changed = jnp.sum((new < label).astype(jnp.float32))
+    return new, changed.reshape((1,))

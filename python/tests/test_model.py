@@ -1,0 +1,166 @@
+"""L2 correctness: step functions vs oracle + full-algorithm semantics.
+
+Builds tiny graphs in numpy, converts them to block-CSC the same way the
+rust runtime does, and checks that iterating the step functions converges
+to textbook results (networkx-free references implemented inline).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.segment_ops import BV
+
+
+def block_csc(n, edges, v_pad=None, be=None):
+    """Convert an edge list [(src, dst, w)] into block-CSC arrays —
+    mirrors rust/src/runtime/blockcsc.rs."""
+    v_pad = v_pad or max(BV, ((n + BV - 1) // BV) * BV)
+    nb = v_pad // BV
+    blocks = [[] for _ in range(nb)]
+    for (s, d, w) in edges:
+        blocks[d // BV].append((s, d % BV, w))
+    need = max((len(b) for b in blocks), default=1)
+    be = be or max(8, need)
+    assert be >= need
+    src = np.zeros((nb, be), np.int32)
+    dst = np.zeros((nb, be), np.int32)
+    valid = np.zeros((nb, be), np.float32)
+    wgt = np.zeros((nb, be), np.float32)
+    for b, lst in enumerate(blocks):
+        for i, (s, ld, w) in enumerate(lst):
+            src[b, i], dst[b, i], valid[b, i], wgt[b, i] = s, ld, 1.0, w
+    return v_pad, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(valid), jnp.asarray(wgt)
+
+
+def test_pagerank_step_matches_ref():
+    n = 5
+    edges = [(0, 1, 1), (1, 2, 1), (2, 0, 1), (3, 4, 1), (0, 2, 1)]
+    v_pad, src, dst, valid, _ = block_csc(n, edges)
+    outdeg = np.zeros(v_pad, np.float32)
+    for (s, _, _) in edges:
+        outdeg[s] += 1
+    inv = np.where(outdeg > 0, 1.0 / np.maximum(outdeg, 1), 0.0).astype(np.float32)
+    real = np.zeros(v_pad, np.float32)
+    real[:n] = 1.0
+    rank = (real / n).astype(np.float32)
+    (new,) = model.pagerank_step(jnp.asarray(rank), src, dst, valid,
+                                 jnp.asarray(inv), jnp.asarray(real),
+                                 jnp.asarray([float(n)], jnp.float32))
+    want = ref.pagerank_step_ref(jnp.asarray(rank), src, dst, valid,
+                                 jnp.asarray(inv), jnp.asarray(real), float(n))
+    np.testing.assert_allclose(np.asarray(new), np.asarray(want), rtol=1e-6)
+    # Padding slots stay zero.
+    assert np.all(np.asarray(new)[n:] == 0.0)
+
+
+def test_sssp_converges_to_shortest_paths():
+    # Diamond with a shortcut: 0→1 (5), 0→2 (1), 2→1 (1), 1→3 (1).
+    n = 4
+    edges = [(0, 1, 5), (0, 2, 1), (2, 1, 1), (1, 3, 1)]
+    v_pad, src, dst, valid, w = block_csc(n, edges)
+    dist = np.full(v_pad, np.inf, np.float32)
+    dist[0] = 0.0
+    dist = jnp.asarray(dist)
+    for _ in range(n):
+        dist, changed = model.sssp_step(dist, src, dst, valid, w)
+        if float(changed[0]) == 0:
+            break
+    got = np.asarray(dist)[:n]
+    np.testing.assert_array_equal(got, [0.0, 2.0, 1.0, 3.0])
+
+
+def test_cc_converges_to_components():
+    # Components {0,1,2} and {3,4}; symmetrized edges.
+    n = 5
+    base = [(0, 1), (1, 2), (3, 4)]
+    edges = [(s, d, 1) for (s, d) in base] + [(d, s, 1) for (s, d) in base]
+    v_pad, src, dst, valid, _ = block_csc(n, edges)
+    label = np.full(v_pad, np.inf, np.float32)
+    label[:n] = np.arange(n, dtype=np.float32)
+    label = jnp.asarray(label)
+    for _ in range(n):
+        label, changed = model.cc_step(label, src, dst, valid)
+        if float(changed[0]) == 0:
+            break
+    got = np.asarray(label)[:n]
+    np.testing.assert_array_equal(got, [0, 0, 0, 3, 3])
+
+
+def test_sssp_changed_count_is_zero_at_fixpoint():
+    n = 3
+    edges = [(0, 1, 1), (1, 2, 1)]
+    v_pad, src, dst, valid, w = block_csc(n, edges)
+    dist = np.full(v_pad, np.inf, np.float32)
+    dist[0] = 0
+    dist = jnp.asarray(dist)
+    changes = []
+    for _ in range(5):
+        dist, changed = model.sssp_step(dist, src, dst, valid, w)
+        changes.append(float(changed[0]))
+    assert changes[0] > 0
+    assert changes[-1] == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 200))
+def test_sssp_random_graphs_match_dijkstra(seed, n):
+    rng = np.random.default_rng(seed)
+    m = min(n * 3, 400)
+    edges = []
+    for _ in range(m):
+        s, d = rng.integers(0, n, 2)
+        if s != d:
+            edges.append((int(s), int(d), int(rng.integers(1, 10))))
+    if not edges:
+        edges = [(0, min(1, n - 1), 1)]
+    v_pad, src, dst, valid, w = block_csc(n, edges)
+    dist = np.full(v_pad, np.inf, np.float32)
+    dist[0] = 0
+    dist = jnp.asarray(dist)
+    for _ in range(n + 1):
+        dist, changed = model.sssp_step(dist, src, dst, valid, w)
+        if float(changed[0]) == 0:
+            break
+    got = np.asarray(dist)[:n]
+
+    # Dijkstra oracle.
+    import heapq
+    adj = {}
+    for (s, d, wt) in edges:
+        adj.setdefault(s, []).append((d, wt))
+    want = np.full(n, np.inf)
+    want[0] = 0
+    heap = [(0.0, 0)]
+    while heap:
+        du, u = heapq.heappop(heap)
+        if du > want[u]:
+            continue
+        for (v, wt) in adj.get(u, []):
+            if du + wt < want[v]:
+                want[v] = du + wt
+                heapq.heappush(heap, (want[v], v))
+    np.testing.assert_array_equal(got, want.astype(np.float32))
+
+
+def test_pagerank_rank_mass_on_cycle():
+    n = 4
+    edges = [(i, (i + 1) % n, 1) for i in range(n)]
+    v_pad, src, dst, valid, _ = block_csc(n, edges)
+    outdeg = np.zeros(v_pad, np.float32)
+    for (s, _, _) in edges:
+        outdeg[s] += 1
+    inv = np.where(outdeg > 0, 1.0 / np.maximum(outdeg, 1), 0.0).astype(np.float32)
+    real = np.zeros(v_pad, np.float32)
+    real[:n] = 1.0
+    rank = jnp.asarray((real / n).astype(np.float32))
+    for _ in range(20):
+        (rank,) = model.pagerank_step(rank, src, dst, valid,
+                                      jnp.asarray(inv), jnp.asarray(real),
+                                      jnp.asarray([float(n)], jnp.float32))
+    got = np.asarray(rank)[:n]
+    np.testing.assert_allclose(got, np.full(n, 0.25), rtol=1e-6)
+    assert np.asarray(rank)[n:].sum() == 0.0

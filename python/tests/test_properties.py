@@ -1,0 +1,115 @@
+"""L2 semantic properties beyond point comparisons: padding invariance,
+monotone convergence, and rank-mass behaviour under hypothesis sweeps."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.segment_ops import BV
+from tests.test_model import block_csc
+
+
+def random_graph(seed, n, m):
+    rng = np.random.default_rng(seed)
+    edges = []
+    for _ in range(m):
+        s, d = rng.integers(0, n, 2)
+        if s != d:
+            edges.append((int(s), int(d), int(rng.integers(1, 8))))
+    if not edges:
+        edges = [(0, min(1, n - 1), 1)]
+    return edges
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 150))
+def test_sssp_distances_monotone_nonincreasing(seed, n):
+    """Each relaxation step only ever lowers distances."""
+    edges = random_graph(seed, n, n * 2)
+    _, src, dst, valid, w = block_csc(n, edges)
+    dist = np.full(src.shape[0] * BV, np.inf, np.float32)
+    dist[0] = 0
+    dist = jnp.asarray(dist)
+    for _ in range(6):
+        new, _ = model.sssp_step(dist, src, dst, valid, w)
+        assert np.all(np.asarray(new) <= np.asarray(dist))
+        dist = new
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 120))
+def test_cc_labels_monotone_and_bounded(seed, n):
+    """Labels only decrease and never drop below 0."""
+    edges = random_graph(seed, n, n * 2)
+    edges = edges + [(d, s, w) for (s, d, w) in edges]
+    _, src, dst, valid, _ = block_csc(n, edges)
+    v_pad = src.shape[0] * BV
+    label = np.full(v_pad, np.inf, np.float32)
+    label[:n] = np.arange(n, dtype=np.float32)
+    label = jnp.asarray(label)
+    for _ in range(5):
+        new, _ = model.cc_step(label, src, dst, valid)
+        a, b = np.asarray(new), np.asarray(label)
+        assert np.all(a <= b)
+        assert np.all(a[:n] >= 0)
+        label = new
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 100))
+def test_pagerank_padding_slots_stay_zero(seed, n):
+    """Vertex padding never leaks rank mass."""
+    edges = random_graph(seed, n, n * 3)
+    v_pad, src, dst, valid, _ = block_csc(n, edges)
+    outdeg = np.zeros(v_pad, np.float32)
+    for (s, _, _) in edges:
+        outdeg[s] += 1
+    inv = np.where(outdeg > 0, 1.0 / np.maximum(outdeg, 1), 0.0).astype(np.float32)
+    real = np.zeros(v_pad, np.float32)
+    real[:n] = 1.0
+    rank = jnp.asarray((real / n).astype(np.float32))
+    for _ in range(5):
+        (rank,) = model.pagerank_step(rank, src, dst, valid,
+                                      jnp.asarray(inv), jnp.asarray(real),
+                                      jnp.asarray([float(n)], jnp.float32))
+    r = np.asarray(rank)
+    assert np.all(r[n:] == 0.0)
+    # Mass is bounded by 1 (dangling mass leaks out, never in).
+    assert r.sum() <= 1.0 + 1e-4
+    assert np.all(r[:n] > 0.0), "teleport term keeps every real vertex positive"
+
+
+def test_pagerank_mass_exactly_one_without_dangling():
+    """On a graph with no dangling vertices, rank mass is conserved."""
+    n = 6
+    edges = [(i, (i + 1) % n, 1) for i in range(n)] + [(i, (i + 2) % n, 1) for i in range(n)]
+    v_pad, src, dst, valid, _ = block_csc(n, edges)
+    outdeg = np.zeros(v_pad, np.float32)
+    for (s, _, _) in edges:
+        outdeg[s] += 1
+    inv = np.where(outdeg > 0, 1.0 / np.maximum(outdeg, 1), 0.0).astype(np.float32)
+    real = np.zeros(v_pad, np.float32)
+    real[:n] = 1.0
+    rank = jnp.asarray((real / n).astype(np.float32))
+    for _ in range(15):
+        (rank,) = model.pagerank_step(rank, src, dst, valid,
+                                      jnp.asarray(inv), jnp.asarray(real),
+                                      jnp.asarray([float(n)], jnp.float32))
+    assert abs(float(np.asarray(rank).sum()) - 1.0) < 1e-5
+
+
+def test_f32_distances_exact_for_integer_weights():
+    """The runtime's exactness precondition: integral distances < 2**24
+    survive f32 min-plus arithmetic bit-exactly."""
+    n = 3
+    edges = [(0, 1, 1 << 20), (1, 2, 1 << 20)]
+    _, src, dst, valid, w = block_csc(n, edges)
+    dist = np.full(src.shape[0] * BV, np.inf, np.float32)
+    dist[0] = 0
+    dist = jnp.asarray(dist)
+    for _ in range(3):
+        dist, _ = model.sssp_step(dist, src, dst, valid, w)
+    got = np.asarray(dist)
+    assert got[1] == float(1 << 20)
+    assert got[2] == float(1 << 21)

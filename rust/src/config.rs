@@ -1,0 +1,134 @@
+//! Configuration: `key = value` files plus CLI overrides.
+//!
+//! Mirrors the paper's `UniGPS.createByHdfsConfFile(...)` entry point: a
+//! session is created from a small config file naming the default engine,
+//! worker count, artifact directory and partitioning strategy. `#` starts a
+//! comment; later keys override earlier ones.
+
+use crate::error::{Result, UniGpsError};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed configuration.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    /// Parse from file contents.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                UniGpsError::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            values.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Set a key (CLI override).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// String with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Integer lookup.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| UniGpsError::Config(format!("{key}: expected integer, got '{s}'"))),
+        }
+    }
+
+    /// Float lookup.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| UniGpsError::Config(format!("{key}: expected float, got '{s}'"))),
+        }
+    }
+
+    /// Bool lookup (`true/false/1/0/yes/no`).
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => match s.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                other => Err(UniGpsError::Config(format!(
+                    "{key}: expected bool, got '{other}'"
+                ))),
+            },
+        }
+    }
+
+    /// Iterate all `(key, value)` pairs (sorted).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.values.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic() {
+        let c = Config::parse("# comment\nengine = pregel\nworkers=8\n\nratio = 0.5\nflag = yes")
+            .unwrap();
+        assert_eq!(c.get("engine"), Some("pregel"));
+        assert_eq!(c.get_usize("workers", 1).unwrap(), 8);
+        assert_eq!(c.get_f64("ratio", 0.0).unwrap(), 0.5);
+        assert!(c.get_bool("flag", false).unwrap());
+        assert_eq!(c.get_or("missing", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        assert!(Config::parse("no-equals-here").is_err());
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let c = Config::parse("workers = lots").unwrap();
+        assert!(c.get_usize("workers", 1).is_err());
+        let c = Config::parse("flag = perhaps").unwrap();
+        assert!(c.get_bool("flag", true).is_err());
+    }
+
+    #[test]
+    fn overrides_take_effect() {
+        let mut c = Config::parse("engine = pregel").unwrap();
+        c.set("engine", "gas");
+        assert_eq!(c.get("engine"), Some("gas"));
+    }
+}

@@ -1,0 +1,165 @@
+//! BSP barrier.
+//!
+//! Thin wrapper over `std::sync::Barrier` exposing the leader flag; kept as
+//! its own type so the engines read as BSP pseudo-code and so the
+//! implementation can be swapped (e.g. for a sense-reversing spin barrier)
+//! without touching engine code — the §Perf pass experiments with exactly
+//! that.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Barrier, Condvar, Mutex};
+
+/// A reusable barrier for `n` workers.
+pub struct BspBarrier {
+    inner: Barrier,
+}
+
+impl BspBarrier {
+    /// Barrier for `n` participants.
+    pub fn new(n: usize) -> Self {
+        BspBarrier {
+            inner: Barrier::new(n),
+        }
+    }
+
+    /// Wait for all participants; returns `true` on exactly one of them
+    /// (the leader for the next phase).
+    pub fn wait(&self) -> bool {
+        self.inner.wait().is_leader()
+    }
+}
+
+/// A sense-reversing spinning barrier (used by the §Perf ablation: spin vs
+/// OS-blocking barriers, mirroring the paper's busy-wait-vs-lock IPC
+/// discussion at the superstep level).
+pub struct SpinBarrier {
+    n: usize,
+    count: AtomicUsize,
+    sense: AtomicUsize,
+}
+
+impl SpinBarrier {
+    /// Spin barrier for `n` participants.
+    pub fn new(n: usize) -> Self {
+        SpinBarrier {
+            n,
+            count: AtomicUsize::new(0),
+            sense: AtomicUsize::new(0),
+        }
+    }
+
+    /// Wait for all participants, spinning with `yield_now`.
+    pub fn wait(&self) -> bool {
+        let sense = self.sense.load(Ordering::Acquire);
+        let arrived = self.count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == self.n {
+            self.count.store(0, Ordering::Release);
+            self.sense.store(sense + 1, Ordering::Release);
+            true
+        } else {
+            while self.sense.load(Ordering::Acquire) == sense {
+                std::hint::spin_loop();
+                std::thread::yield_now();
+            }
+            false
+        }
+    }
+}
+
+/// Condvar-based "lock barrier" baseline for the ablation bench.
+pub struct CondvarBarrier {
+    n: usize,
+    state: Mutex<(usize, usize)>, // (count, generation)
+    cv: Condvar,
+}
+
+impl CondvarBarrier {
+    /// Condvar barrier for `n` participants.
+    pub fn new(n: usize) -> Self {
+        CondvarBarrier {
+            n,
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Wait for all participants.
+    pub fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            true
+        } else {
+            while st.1 == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn exercise(barrier_wait: impl Fn() -> bool + Sync, workers: usize, rounds: usize) {
+        let counter = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    for r in 0..rounds {
+                        counter.fetch_add(1, Ordering::SeqCst);
+                        barrier_wait();
+                        // After the barrier, everyone must see all `workers`
+                        // increments of this round.
+                        let c = counter.load(Ordering::SeqCst);
+                        assert!(c >= ((r + 1) * workers) as u64);
+                        barrier_wait();
+                    }
+                });
+            }
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), (workers * rounds) as u64);
+    }
+
+    #[test]
+    fn bsp_barrier_synchronizes() {
+        let b = BspBarrier::new(4);
+        exercise(|| b.wait(), 4, 20);
+    }
+
+    #[test]
+    fn spin_barrier_synchronizes() {
+        let b = SpinBarrier::new(4);
+        exercise(|| b.wait(), 4, 20);
+    }
+
+    #[test]
+    fn condvar_barrier_synchronizes() {
+        let b = CondvarBarrier::new(4);
+        exercise(|| b.wait(), 4, 20);
+    }
+
+    #[test]
+    fn single_leader_per_round() {
+        let b = BspBarrier::new(3);
+        let leaders = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    for _ in 0..10 {
+                        if b.wait() {
+                            leaders.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,102 @@
+//! Per-superstep and per-run metrics.
+
+use std::time::Duration;
+
+/// Execution mode of a superstep (Push-Pull engine records this; others
+/// always report their native mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepMode {
+    /// Push (sparse frontier).
+    Push,
+    /// Pull (dense frontier).
+    Pull,
+}
+
+/// Metrics of one superstep.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    /// 1-based superstep number.
+    pub step: u32,
+    /// Vertices active after `vertex_compute`.
+    pub active: u64,
+    /// Messages routed this step.
+    pub messages: u64,
+    /// Wall time of the step.
+    pub elapsed: Duration,
+    /// Mode used (Push-Pull only; `None` elsewhere).
+    pub mode: Option<StepMode>,
+}
+
+/// Metrics of a whole run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Number of supersteps executed.
+    pub supersteps: u32,
+    /// Total messages routed.
+    pub total_messages: u64,
+    /// Approximate total message bytes.
+    pub total_message_bytes: u64,
+    /// Total wall time.
+    pub elapsed: Duration,
+    /// Whether the run converged before `max_iter`.
+    pub converged: bool,
+    /// Per-superstep breakdown.
+    pub steps: Vec<StepMetrics>,
+    /// Number of workers used.
+    pub workers: usize,
+    /// Count of VCProg user-method invocations (comparable across engines;
+    /// this is the quantity the IPC isolation mechanism multiplies by the
+    /// per-call overhead — the paper's Fig 8a/8d story).
+    pub udf_calls: u64,
+    /// Per-worker busy time (compute + delivery phases, excluding barrier
+    /// waits). On the single-core test machine, wallclock cannot show
+    /// parallel speedup, so the machine-scalability experiment (Fig 8c)
+    /// models `speedup(P) = Σ busy / max busy` from these — the standard
+    /// simulated-cluster methodology (see DESIGN.md §Substitutions).
+    pub worker_busy: Vec<std::time::Duration>,
+}
+
+impl RunMetrics {
+    /// Traversed edges per second (messages are a proxy for edge work).
+    pub fn messages_per_sec(&self) -> f64 {
+        crate::util::timer::per_sec(self.total_messages, self.elapsed)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "steps={} msgs={} bytes={} udf_calls={} {} in {:.3}s ({:.2}M msg/s)",
+            self.supersteps,
+            crate::util::fmt_count(self.total_messages),
+            crate::util::fmt_bytes(self.total_message_bytes),
+            crate::util::fmt_count(self.udf_calls),
+            if self.converged { "converged" } else { "max-iter" },
+            self.elapsed.as_secs_f64(),
+            self.messages_per_sec() / 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_contains_key_fields() {
+        let m = RunMetrics {
+            supersteps: 3,
+            total_messages: 1000,
+            total_message_bytes: 8000,
+            elapsed: Duration::from_millis(100),
+            converged: true,
+            steps: vec![],
+            workers: 4,
+            udf_calls: 5000,
+            worker_busy: Vec::new(),
+        };
+        let s = m.summary();
+        assert!(s.contains("steps=3"));
+        assert!(s.contains("converged"));
+        assert!(m.messages_per_sec() > 0.0);
+    }
+}

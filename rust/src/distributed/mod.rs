@@ -1,0 +1,21 @@
+//! Simulated distributed runtime.
+//!
+//! The paper runs on a nine-node cluster (1 main + 8 workers); this module
+//! provides the single-machine stand-in the engines execute on: vertex
+//! partitions owned by worker threads ([`crate::graph::partition`]), routed
+//! inter-partition message boards with byte accounting ([`comm`]), BSP
+//! barriers ([`barrier`]), per-superstep metrics ([`metrics`]) and the
+//! shared-slice primitive for phase-disciplined shared state ([`shared`]).
+//! The coordination logic (who owns what, what crosses the "network", where
+//! the barriers fall) is identical to the distributed setting — machines
+//! become partitions, the network becomes the message board.
+
+pub mod barrier;
+pub mod comm;
+pub mod metrics;
+pub mod shared;
+
+pub use barrier::BspBarrier;
+pub use comm::MessageBoard;
+pub use metrics::{RunMetrics, StepMetrics};
+pub use shared::SharedSlice;

@@ -1,0 +1,134 @@
+//! Phase-disciplined shared slices.
+//!
+//! Graph engines alternate between phases in which each index of a shared
+//! array is written by exactly one worker, and phases in which the array is
+//! read-only — with BSP barriers separating the phases. [`SharedSlice`]
+//! exposes exactly that access pattern: unsynchronized reads/writes through
+//! a raw pointer, with the safety argument delegated to the engine's barrier
+//! discipline (this is the standard construction in shared-memory graph
+//! frameworks — Gemini, Ligra, GAPBS all rely on it).
+
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+
+/// A slice shareable across worker threads with externally-enforced
+/// exclusive-per-index write discipline.
+pub struct SharedSlice<'a, T> {
+    ptr: *const UnsafeCell<T>,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access discipline is enforced by the engines (disjoint writes per
+// phase, barrier-separated reads), exactly like `&[AtomicT]` but without
+// per-access synchronization cost.
+unsafe impl<T: Send + Sync> Send for SharedSlice<'_, T> {}
+unsafe impl<T: Send + Sync> Sync for SharedSlice<'_, T> {}
+
+impl<'a, T> SharedSlice<'a, T> {
+    /// Wrap a mutable slice for shared phase-disciplined access.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        let len = slice.len();
+        let ptr = slice.as_mut_ptr() as *const UnsafeCell<T>;
+        SharedSlice {
+            ptr,
+            len,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Length of the underlying slice.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read index `i`.
+    ///
+    /// # Safety
+    /// No concurrent write to index `i` may be in flight (callers separate
+    /// write and read phases with barriers).
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> &T {
+        debug_assert!(i < self.len);
+        &*(*self.ptr.add(i)).get()
+    }
+
+    /// Write index `i`.
+    ///
+    /// # Safety
+    /// Caller must be the unique writer of index `i` in the current phase,
+    /// and no concurrent reader of `i` may exist.
+    #[inline]
+    pub unsafe fn set(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        *(*self.ptr.add(i)).get() = value;
+    }
+
+    /// Mutable reference to index `i` (same contract as [`SharedSlice::set`]).
+    ///
+    /// # Safety
+    /// Caller must be the unique accessor of index `i` in the current phase.
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *(*self.ptr.add(i)).get()
+    }
+}
+
+impl<T> Clone for SharedSlice<'_, T> {
+    fn clone(&self) -> Self {
+        SharedSlice {
+            ptr: self.ptr,
+            len: self.len,
+            _marker: PhantomData,
+        }
+    }
+}
+impl<T> Copy for SharedSlice<'_, T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_thread_read_write() {
+        let mut data = vec![0u64; 8];
+        let s = SharedSlice::new(&mut data);
+        unsafe {
+            s.set(3, 42);
+            assert_eq!(*s.get(3), 42);
+            *s.get_mut(4) += 7;
+            assert_eq!(*s.get(4), 7);
+        }
+        assert_eq!(data[3], 42);
+    }
+
+    #[test]
+    fn disjoint_parallel_writes() {
+        let n = 1000;
+        let workers = 4;
+        let mut data = vec![0usize; n];
+        let s = SharedSlice::new(&mut data);
+        std::thread::scope(|scope| {
+            for w in 0..workers {
+                scope.spawn(move || {
+                    let mut i = w;
+                    while i < n {
+                        unsafe { s.set(i, i * 2) };
+                        i += workers;
+                    }
+                });
+            }
+        });
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i * 2);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Native serial baselines — the NetworkX stand-ins.
+//!
+//! The paper compares UniGPS against NetworkX's built-in operators. These
+//! are direct, textbook serial implementations (power iteration, Dijkstra,
+//! BFS/union-find, sorted-intersection triangles) used (a) as oracles for
+//! the VCProg programs and (b) as the single-machine baseline series in the
+//! Fig 8a/8b benches. Being compiled Rust they are a strictly *stronger*
+//! baseline than CPython NetworkX — see DESIGN.md §Substitutions.
+
+use crate::graph::PropertyGraph;
+use crate::vcprog::programs::sssp::INF;
+use crate::vcprog::VertexId;
+use std::collections::BinaryHeap;
+
+/// Serial PageRank by power iteration (message-passing formulation: dangling
+/// mass is dropped, matching the VCProg program).
+pub fn pagerank<V, E>(graph: &PropertyGraph<V, E>, damping: f64, iterations: u32) -> Vec<f64> {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut rank = vec![1.0 / n as f64; n];
+    let mut next = vec![0.0f64; n];
+    for _ in 0..iterations {
+        next.iter_mut().for_each(|x| *x = 0.0);
+        for v in 0..n as u32 {
+            let deg = topo.out_degree(v);
+            if deg == 0 {
+                continue;
+            }
+            let share = rank[v as usize] / deg as f64;
+            for (_eid, dst) in topo.out_edges(v) {
+                next[dst as usize] += share;
+            }
+        }
+        for v in 0..n {
+            next[v] = (1.0 - damping) / n as f64 + damping * next[v];
+        }
+        std::mem::swap(&mut rank, &mut next);
+    }
+    rank
+}
+
+/// Serial Dijkstra over integral weights (weights rounded like the VCProg
+/// SSSP program). Returns hop-distance array with `INF` for unreachable.
+pub fn dijkstra<V>(graph: &PropertyGraph<V, f64>, root: VertexId) -> Vec<i64> {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    let mut dist = vec![INF; n];
+    if n == 0 {
+        return dist;
+    }
+    dist[root as usize] = 0;
+    // Max-heap of (negated dist, vertex).
+    let mut heap: BinaryHeap<(i64, u32)> = BinaryHeap::new();
+    heap.push((0, root));
+    while let Some((nd, v)) = heap.pop() {
+        let d = -nd;
+        if d > dist[v as usize] {
+            continue;
+        }
+        for (eid, dst) in topo.out_edges(v) {
+            let w = graph.edge_prop(eid).round() as i64;
+            let cand = d.saturating_add(w);
+            if cand < dist[dst as usize] {
+                dist[dst as usize] = cand;
+                heap.push((-cand, dst));
+            }
+        }
+    }
+    dist
+}
+
+/// Serial BFS hop distances (`u32::MAX` for unreachable).
+pub fn bfs<V, E>(graph: &PropertyGraph<V, E>, root: VertexId) -> Vec<u32> {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    let mut dist = vec![u32::MAX; n];
+    if n == 0 {
+        return dist;
+    }
+    let mut queue = std::collections::VecDeque::new();
+    dist[root as usize] = 0;
+    queue.push_back(root);
+    while let Some(v) = queue.pop_front() {
+        let d = dist[v as usize];
+        for (_eid, dst) in topo.out_edges(v) {
+            if dist[dst as usize] == u32::MAX {
+                dist[dst as usize] = d + 1;
+                queue.push_back(dst);
+            }
+        }
+    }
+    dist
+}
+
+/// Weakly-connected components by union-find over the stored edges; labels
+/// are canonicalized to the minimum vertex id of each component, matching
+/// the min-label-propagation VCProg program.
+pub fn connected_components<V, E>(graph: &PropertyGraph<V, E>) -> Vec<u32> {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    for v in 0..n as u32 {
+        for (_eid, dst) in topo.out_edges(v) {
+            let (a, b) = (find(&mut parent, v), find(&mut parent, dst));
+            if a != b {
+                // Union by min id keeps labels canonical incrementally.
+                if a < b {
+                    parent[b as usize] = a;
+                } else {
+                    parent[a as usize] = b;
+                }
+            }
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+/// Global triangle count by sorted adjacency intersection (forward
+/// algorithm). Expects a symmetrized simple graph.
+pub fn triangle_count<V, E>(graph: &PropertyGraph<V, E>) -> u64 {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    // Build sorted forward adjacency: edges to higher-degree (or higher-id)
+    // vertices only — each triangle counted exactly once.
+    let rank = |v: u32| (topo.out_degree(v), v);
+    let mut fwd: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for v in 0..n as u32 {
+        for (_eid, dst) in topo.out_edges(v) {
+            if rank(v) < rank(dst) {
+                fwd[v as usize].push(dst);
+            }
+        }
+    }
+    for adj in fwd.iter_mut() {
+        adj.sort_unstable();
+        adj.dedup();
+    }
+    let mut count = 0u64;
+    for v in 0..n {
+        let adj_v = &fwd[v];
+        for &u in adj_v {
+            let adj_u = &fwd[u as usize];
+            // Sorted intersection.
+            let (mut i, mut j) = (0, 0);
+            while i < adj_v.len() && j < adj_u.len() {
+                match adj_v[i].cmp(&adj_u[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        count += 1;
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    #[test]
+    fn pagerank_uniform_on_cycle() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 0)]);
+        let r = pagerank(&g, 0.85, 20);
+        for x in &r {
+            assert!((x - 1.0 / 3.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn dijkstra_simple() {
+        let mut b = crate::graph::builder::GraphBuilder::new(true);
+        b.add_edge(0, 1, 5.0);
+        b.add_edge(0, 2, 1.0);
+        b.add_edge(2, 1, 1.0);
+        let g = b.build().unwrap();
+        assert_eq!(dijkstra(&g, 0), vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn bfs_levels() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (0, 3)]);
+        assert_eq!(bfs(&g, 0), vec![0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn cc_min_labels() {
+        let g = from_pairs(false, &[(1, 2), (3, 4), (4, 5)]);
+        assert_eq!(connected_components(&g), vec![0, 1, 1, 3, 3, 3]);
+    }
+
+    #[test]
+    fn triangles_k4() {
+        let g = from_pairs(false, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        assert_eq!(triangle_count(&g), 4);
+    }
+
+    #[test]
+    fn triangles_none_on_tree() {
+        let g = from_pairs(false, &[(0, 1), (0, 2), (0, 3)]);
+        assert_eq!(triangle_count(&g), 0);
+    }
+}

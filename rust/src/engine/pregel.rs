@@ -1,0 +1,428 @@
+//! Pregel engine — the Giraph-like BSP vertex-parallel backend.
+//!
+//! Faithful rendering of the paper's Fig 4a conversion: each superstep,
+//! every active-or-messaged vertex merges its inbox, runs `vertex_compute`,
+//! and (if active) emits along its out-edges; messages are routed through
+//! the [`MessageBoard`] (the simulated network) and a sender-side
+//! **combiner** merges messages to the same destination before routing —
+//! Giraph's Combiner optimization, toggled by [`RunOptions::combiner`] and
+//! ablated in `benches/ablations.rs`.
+//!
+//! Barrier choreography per superstep (2 barriers):
+//!
+//! ```text
+//! Phase A  compute + emit     (owned vertices; writes own props/active,
+//!                              appends to own outbox row, bumps atomics)
+//! ── barrier ──
+//! Phase B  deliver            (drain own board column into own inbox;
+//!                              leader: metrics, stop flag, reset atomics)
+//! ── barrier ──
+//! check stop flag, flip inbox parity, next superstep
+//! ```
+
+use crate::distributed::comm::MessageBoard;
+use crate::distributed::metrics::{RunMetrics, StepMetrics};
+use crate::distributed::shared::SharedSlice;
+use crate::engine::{RunOptions, TypedRun};
+use crate::error::Result;
+use crate::graph::partition::Partitioner;
+use crate::graph::PropertyGraph;
+use crate::util::timer::Timer;
+use crate::vcprog::{VCProg, VertexId};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Barrier;
+use std::sync::Mutex;
+
+/// Run `program` on the Pregel engine.
+pub fn run<P: VCProg>(
+    graph: &PropertyGraph<P::In, P::EProp>,
+    program: &P,
+    opts: &RunOptions,
+) -> Result<TypedRun<P::VProp>> {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    let workers = opts.workers.max(1).min(n.max(1));
+    let part = Partitioner::new(topo, workers, opts.partition);
+
+    // Global state arrays; each index is written only by its owner.
+    let mut props: Vec<Option<P::VProp>> = (0..n).map(|_| None).collect();
+    let mut active: Vec<bool> = vec![true; n];
+    let mut inbox_a: Vec<Option<P::Msg>> = (0..n).map(|_| None).collect();
+    let mut inbox_b: Vec<Option<P::Msg>> = (0..n).map(|_| None).collect();
+
+    let props_s = SharedSlice::new(&mut props);
+    let active_s = SharedSlice::new(&mut active);
+    let inbox_a_s = SharedSlice::new(&mut inbox_a);
+    let inbox_b_s = SharedSlice::new(&mut inbox_b);
+
+    let board: MessageBoard<P::Msg> = MessageBoard::new(workers);
+    let barrier = Barrier::new(workers);
+    let num_active = AtomicU64::new(0);
+    // Locally-delivered messages (fast path) — counted separately since
+    // they never touch the board.
+    let local_msgs_total = AtomicU64::new(0);
+    let local_msgs_step = AtomicU64::new(0);
+    let udf_calls = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let steps_done = AtomicU64::new(0);
+    let converged = AtomicBool::new(false);
+    let step_log: Mutex<Vec<StepMetrics>> = Mutex::new(Vec::new());
+    let busy_log: Mutex<Vec<std::time::Duration>> =
+        Mutex::new(vec![std::time::Duration::ZERO; workers]);
+
+    let timer = Timer::start();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let part = &part;
+            let board = &board;
+            let barrier = &barrier;
+            let num_active = &num_active;
+            let udf_calls = &udf_calls;
+            let stop = &stop;
+            let steps_done = &steps_done;
+            let converged = &converged;
+            let step_log = &step_log;
+            let busy_log = &busy_log;
+            let local_msgs_total = &local_msgs_total;
+            let local_msgs_step = &local_msgs_step;
+            scope.spawn(move || {
+                let mut local_udf: u64 = 0;
+                let mut busy = std::time::Duration::ZERO;
+                let mut phase_timer;
+                // --- init phase -------------------------------------------
+                phase_timer = crate::util::timer::CpuTimer::start();
+                for v in part.vertices_of(w, n) {
+                    let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
+                    local_udf += 1;
+                    unsafe { props_s.set(v as usize, Some(p)) };
+                }
+                busy += phase_timer.elapsed();
+                barrier.wait();
+
+                // Per-target staging buffers (batched routing) and combiner
+                // maps, reused across supersteps.
+                let mut stage: Vec<Vec<(VertexId, P::Msg)>> =
+                    (0..workers).map(|_| Vec::new()).collect();
+                let mut combine: Vec<HashMap<VertexId, P::Msg>> =
+                    (0..workers).map(|_| HashMap::new()).collect();
+                // Edge buffer for the batched-emit path (proxied programs).
+                let batch_emit = program.prefers_batch_emit();
+                let mut edge_buf: Vec<(VertexId, &P::EProp)> = Vec::new();
+
+                // Honour MAX_ITER = 0: init only, no supersteps.
+                let mut iter: u32 = 1;
+                if opts.max_iter == 0 {
+                    return;
+                }
+                let mut last_board_msgs: u64 = 0;
+                loop {
+                    let step_timer = Timer::start();
+                    let (inbox_cur, inbox_next) = if iter % 2 == 1 {
+                        (inbox_a_s, inbox_b_s)
+                    } else {
+                        (inbox_b_s, inbox_a_s)
+                    };
+
+                    // --- Phase A: compute + emit --------------------------
+                    phase_timer = crate::util::timer::CpuTimer::start();
+                    let mut local_active: u64 = 0;
+                    let mut local_delivered: u64 = 0;
+                    for v in part.vertices_of(w, n) {
+                        let vi = v as usize;
+                        let slot = unsafe { inbox_cur.get_mut(vi) };
+                        let was_active = unsafe { *active_s.get(vi) };
+                        if !was_active && slot.is_none() {
+                            continue;
+                        }
+                        let msg = match slot.take() {
+                            Some(m) => m,
+                            None => {
+                                local_udf += 1;
+                                program.empty_message()
+                            }
+                        };
+                        let prop_slot = unsafe { props_s.get_mut(vi) };
+                        let prop = prop_slot.as_ref().expect("initialized");
+                        let (new_prop, is_active) = program.vertex_compute(prop, &msg, iter);
+                        local_udf += 1;
+                        *prop_slot = Some(new_prop);
+                        unsafe { active_s.set(vi, is_active) };
+                        if is_active {
+                            local_active += 1;
+                            let prop = prop_slot.as_ref().unwrap();
+                            // Route one emitted message: local fast path
+                            // (merge straight into our inbox — §Perf: the
+                            // biggest shared-memory win), sender combiner,
+                            // or staged board routing.
+                            macro_rules! route {
+                                ($dst:expr, $m:expr) => {{
+                                    let dst: VertexId = $dst;
+                                    let m: P::Msg = $m;
+                                    let tp = part.partition_of(dst);
+                                    if tp == w {
+                                        let slot =
+                                            unsafe { inbox_next.get_mut(dst as usize) };
+                                        *slot = Some(match slot.take() {
+                                            Some(old) => {
+                                                local_udf += 1;
+                                                program.merge_message(&old, &m)
+                                            }
+                                            None => m,
+                                        });
+                                        local_delivered += 1;
+                                    } else if opts.combiner && program.combinable() {
+                                        use std::collections::hash_map::Entry;
+                                        match combine[tp].entry(dst) {
+                                            Entry::Occupied(mut e) => {
+                                                local_udf += 1;
+                                                let merged =
+                                                    program.merge_message(e.get(), &m);
+                                                e.insert(merged);
+                                            }
+                                            Entry::Vacant(e) => {
+                                                e.insert(m);
+                                            }
+                                        }
+                                    } else {
+                                        stage[tp].push((dst, m));
+                                        if stage[tp].len() >= 4096 {
+                                            board.send_batch(w, tp, &mut stage[tp]);
+                                        }
+                                    }
+                                }};
+                            }
+                            if batch_emit {
+                                // One batched call per vertex (proxied
+                                // programs: one IPC round-trip — the
+                                // pipelined-RPC optimization of §VI).
+                                edge_buf.clear();
+                                for (eid, dst) in topo.out_edges(v) {
+                                    edge_buf.push((dst, graph.edge_prop(eid)));
+                                }
+                                local_udf += 1;
+                                for (dst, m) in program.emit_to_edges(v, prop, &edge_buf) {
+                                    route!(dst, m);
+                                }
+                            } else {
+                                for (eid, dst) in topo.out_edges(v) {
+                                    local_udf += 1;
+                                    if let Some(m) = program.emit_message(
+                                        v,
+                                        dst,
+                                        prop,
+                                        graph.edge_prop(eid),
+                                    ) {
+                                        route!(dst, m);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // Flush staging buffers.
+                    for tp in 0..workers {
+                        if opts.combiner && program.combinable() {
+                            let map = &mut combine[tp];
+                            if !map.is_empty() {
+                                let mut batch: Vec<(VertexId, P::Msg)> = map.drain().collect();
+                                board.send_batch(w, tp, &mut batch);
+                            }
+                        } else if !stage[tp].is_empty() {
+                            board.send_batch(w, tp, &mut stage[tp]);
+                        }
+                    }
+                    num_active.fetch_add(local_active, Ordering::Relaxed);
+                    local_msgs_step.fetch_add(local_delivered, Ordering::Relaxed);
+                    busy += phase_timer.elapsed();
+                    barrier.wait();
+
+                    // --- Phase B: deliver ---------------------------------
+                    phase_timer = crate::util::timer::CpuTimer::start();
+                    board.drain_to(w, |dst, m| {
+                        let slot = unsafe { inbox_next.get_mut(dst as usize) };
+                        *slot = Some(match slot.take() {
+                            Some(old) => {
+                                local_udf += 1;
+                                program.merge_message(&old, &m)
+                            }
+                            None => m,
+                        });
+                    });
+                    busy += phase_timer.elapsed();
+                    // Leader-only bookkeeping window: non-leaders go straight
+                    // from this barrier to the next and touch nothing shared
+                    // in between, so the leader may read/reset the atomics.
+                    let lead = barrier.wait().is_leader();
+                    if lead {
+                        let act = num_active.swap(0, Ordering::Relaxed);
+                        let step_local = local_msgs_step.swap(0, Ordering::Relaxed);
+                        local_msgs_total.fetch_add(step_local, Ordering::Relaxed);
+                        let msgs_total = board.total_messages();
+                        let step_msgs = msgs_total - last_board_msgs + step_local;
+                        last_board_msgs = msgs_total;
+                        steps_done.store(iter as u64, Ordering::Relaxed);
+                        if opts.step_metrics {
+                            step_log.lock().unwrap().push(StepMetrics {
+                                step: iter,
+                                active: act,
+                                messages: step_msgs,
+                                elapsed: step_timer.elapsed(),
+                                mode: None,
+                            });
+                        }
+                        if act == 0 {
+                            converged.store(true, Ordering::Relaxed);
+                            stop.store(true, Ordering::Relaxed);
+                        } else if iter >= opts.max_iter {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    barrier.wait();
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    iter += 1;
+                }
+                udf_calls.fetch_add(local_udf, Ordering::Relaxed);
+                busy_log.lock().unwrap()[w] = busy;
+            });
+        }
+    });
+
+    let locals = local_msgs_total.load(Ordering::Relaxed);
+    let metrics = RunMetrics {
+        supersteps: steps_done.load(Ordering::Relaxed) as u32,
+        total_messages: board.total_messages() + locals,
+        total_message_bytes: board.total_bytes()
+            + locals * (4 + std::mem::size_of::<P::Msg>() as u64),
+        elapsed: timer.elapsed(),
+        converged: converged.load(Ordering::Relaxed),
+        steps: step_log.into_inner().unwrap(),
+        workers,
+        udf_calls: udf_calls.load(Ordering::Relaxed),
+        worker_busy: busy_log.into_inner().unwrap(),
+    };
+    Ok(TypedRun {
+        props: props.into_iter().map(|p| p.expect("initialized")).collect(),
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::RunOptions;
+    use crate::graph::builder::from_pairs;
+    use crate::vcprog::programs::sssp::{SsspBellmanFord, INF};
+    use crate::vcprog::programs::{Bfs, ConnectedComponents, DegreeCount, PageRank};
+
+    fn opts(workers: usize) -> RunOptions {
+        RunOptions::default().with_workers(workers)
+    }
+
+    #[test]
+    fn sssp_on_diamond() {
+        // 0→1 (w1), 0→2 (w1), 1→3 (w1), 2→3 (w1): dist(3)=2
+        let g = from_pairs(true, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let r = run(&g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert_eq!(r.props, vec![0, 1, 1, 2]);
+        assert!(r.metrics.converged);
+    }
+
+    #[test]
+    fn sssp_unreachable_stays_inf() {
+        let g = from_pairs(true, &[(0, 1), (2, 3)]);
+        let r = run(&g, &SsspBellmanFord::new(0), &opts(3)).unwrap();
+        assert_eq!(r.props[1], 1);
+        assert_eq!(r.props[2], INF);
+        assert_eq!(r.props[3], INF);
+    }
+
+    #[test]
+    fn cc_two_components() {
+        let g = from_pairs(false, &[(0, 1), (1, 2), (3, 4)]);
+        let r = run(&g, &ConnectedComponents::new(), &opts(2)).unwrap();
+        assert_eq!(r.props, vec![0, 0, 0, 3, 3]);
+    }
+
+    #[test]
+    fn pagerank_sums_to_one_on_cycle() {
+        // On a cycle, PR is uniform and total mass is conserved.
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let pr = PageRank::new(4, 10);
+        let o = RunOptions::default().with_workers(2).with_max_iter(pr.rounds());
+        let r = run(&g, &pr, &o).unwrap();
+        let total: f64 = r.props.iter().map(|p| p.rank).sum();
+        assert!((total - 1.0).abs() < 1e-9, "total={total}");
+        for p in &r.props {
+            assert!((p.rank - 0.25).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bfs_hops() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 3), (0, 3)]);
+        let r = run(&g, &Bfs::new(0), &opts(2)).unwrap();
+        assert_eq!(r.props, vec![0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn degree_count_matches_topology() {
+        let g = from_pairs(true, &[(0, 1), (0, 2), (1, 2), (2, 2)]);
+        let r = run(&g, &DegreeCount::new(), &opts(2)).unwrap();
+        for (v, d) in r.props.iter().enumerate() {
+            assert_eq!(d.out, g.topology().out_degree(v as u32) as u32);
+            assert_eq!(d.inn, g.topology().in_degree(v as u32) as u32);
+        }
+    }
+
+    #[test]
+    fn respects_max_iter() {
+        // CC on a long path needs ~n steps; cap at 3.
+        let g = from_pairs(false, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let o = RunOptions::default().with_workers(2).with_max_iter(3);
+        let r = run(&g, &ConnectedComponents::new(), &o).unwrap();
+        assert_eq!(r.metrics.supersteps, 3);
+        assert!(!r.metrics.converged);
+    }
+
+    #[test]
+    fn combiner_does_not_change_results() {
+        let g = crate::graph::generate::random_for_tests(64, 512, 9);
+        let mut o1 = opts(3);
+        o1.combiner = true;
+        let mut o2 = opts(3);
+        o2.combiner = false;
+        let r1 = run(&g, &SsspBellmanFord::new(0), &o1).unwrap();
+        let r2 = run(&g, &SsspBellmanFord::new(0), &o2).unwrap();
+        assert_eq!(r1.props, r2.props);
+        // Combiner strictly reduces routed messages on multi-in-degree graphs.
+        assert!(r1.metrics.total_messages <= r2.metrics.total_messages);
+    }
+
+    #[test]
+    fn single_worker_matches_many_workers() {
+        let g = crate::graph::generate::random_for_tests(50, 300, 4);
+        let r1 = run(&g, &SsspBellmanFord::new(0), &opts(1)).unwrap();
+        let r8 = run(&g, &SsspBellmanFord::new(0), &opts(8)).unwrap();
+        assert_eq!(r1.props, r8.props);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = from_pairs(true, &[]);
+        // from_pairs of empty slice → 0 vertices; ensure no panic.
+        let r = run(&g, &ConnectedComponents::new(), &opts(2)).unwrap();
+        assert!(r.props.is_empty());
+    }
+
+    #[test]
+    fn metrics_populated() {
+        let g = from_pairs(true, &[(0, 1), (1, 2)]);
+        let r = run(&g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert!(r.metrics.supersteps >= 3);
+        assert!(r.metrics.total_messages >= 2);
+        assert!(r.metrics.udf_calls > 0);
+        assert!(!r.metrics.steps.is_empty());
+    }
+}

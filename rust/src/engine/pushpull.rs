@@ -1,0 +1,384 @@
+//! Push-Pull engine — the Gemini-like adaptive backend.
+//!
+//! Faithful rendering of the paper's Fig 4c conversion plus Gemini's
+//! signature optimization: each round runs in either **sparse/push** mode
+//! (active vertices push messages along out-edges, like Pregel) or
+//! **dense/pull** mode (every vertex scans its in-edges and pulls messages
+//! emitted by previously-active sources — `DENSESIGNAL`/`DENSESLOT`). The
+//! mode is chosen per round by comparing the active frontier's out-edge
+//! count against `|E| / threshold` (Gemini uses 20), ablated in
+//! `benches/ablations.rs`.
+//!
+//! Both modes generate exactly the message multiset of Algorithm 1 — a
+//! message src→dst exists iff src was active last round and `emit_message`
+//! returned `Some` — so results are engine-identical (up to float summation
+//! order), which the cross-engine tests verify.
+//!
+//! Barrier choreography per round (3 barriers):
+//!
+//! ```text
+//! Phase E  emit/gather   push: route own active vertices' messages
+//!                        pull: fold in-edges of own vertices into own inbox
+//! ── barrier ──
+//! Phase V  deliver+compute  (push only: drain board column first)
+//! ── barrier ──
+//! Phase C  leader: stop flag, next mode, metrics, reset atomics
+//! ── barrier ──
+//! ```
+
+use crate::distributed::comm::MessageBoard;
+use crate::distributed::metrics::{RunMetrics, StepMetrics, StepMode};
+use crate::distributed::shared::SharedSlice;
+use crate::engine::{RunOptions, TypedRun};
+use crate::error::Result;
+use crate::graph::partition::Partitioner;
+use crate::graph::PropertyGraph;
+use crate::util::timer::Timer;
+use crate::vcprog::{VCProg, VertexId};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+
+/// Run `program` on the Push-Pull engine.
+pub fn run<P: VCProg>(
+    graph: &PropertyGraph<P::In, P::EProp>,
+    program: &P,
+    opts: &RunOptions,
+) -> Result<TypedRun<P::VProp>> {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    let m = topo.num_edges();
+    let workers = opts.workers.max(1).min(n.max(1));
+    let part = Partitioner::new(topo, workers, opts.partition);
+
+    let mut props: Vec<Option<P::VProp>> = (0..n).map(|_| None).collect();
+    // Active flags of the previous round (read-shared during Phase E).
+    let mut prev_active: Vec<bool> = vec![true; n];
+    let mut next_active: Vec<bool> = vec![false; n];
+    let mut inbox: Vec<Option<P::Msg>> = (0..n).map(|_| None).collect();
+
+    let props_s = SharedSlice::new(&mut props);
+    let prev_active_s = SharedSlice::new(&mut prev_active);
+    let next_active_s = SharedSlice::new(&mut next_active);
+    let inbox_s = SharedSlice::new(&mut inbox);
+
+    let board: MessageBoard<P::Msg> = MessageBoard::new(workers);
+    let barrier = Barrier::new(workers);
+    let num_active = AtomicU64::new(0);
+    let active_out_edges = AtomicU64::new(0);
+    let pull_msgs = AtomicU64::new(0);
+    let total_msgs = AtomicU64::new(0);
+    let udf_calls = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    // Mode for the *current* round, decided by the leader at the end of the
+    // previous round. Round 1 is dense (everyone starts active).
+    let pull_mode = AtomicBool::new(true);
+    let steps_done = AtomicU64::new(0);
+    let converged = AtomicBool::new(false);
+    let step_log: Mutex<Vec<StepMetrics>> = Mutex::new(Vec::new());
+
+    let timer = Timer::start();
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let part = &part;
+            let board = &board;
+            let barrier = &barrier;
+            let num_active = &num_active;
+            let active_out_edges = &active_out_edges;
+            let pull_msgs = &pull_msgs;
+            let total_msgs = &total_msgs;
+            let udf_calls = &udf_calls;
+            let stop = &stop;
+            let pull_mode = &pull_mode;
+            let steps_done = &steps_done;
+            let converged = &converged;
+            let step_log = &step_log;
+            scope.spawn(move || {
+                let mut local_udf: u64 = 0;
+                for v in part.vertices_of(w, n) {
+                    let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
+                    local_udf += 1;
+                    unsafe { props_s.set(v as usize, Some(p)) };
+                }
+                barrier.wait();
+
+                let mut stage: Vec<Vec<(VertexId, P::Msg)>> =
+                    (0..workers).map(|_| Vec::new()).collect();
+                // Honour MAX_ITER = 0: init only, no supersteps.
+                let mut iter: u32 = 1;
+                if opts.max_iter == 0 {
+                    return;
+                }
+                let mut last_board_msgs: u64 = 0;
+                loop {
+                    let step_timer = Timer::start();
+                    let pull = pull_mode.load(Ordering::Relaxed);
+
+                    // --- Phase E ------------------------------------------
+                    if pull {
+                        // Dense/pull: every owned vertex folds messages from
+                        // previously-active in-neighbors (DENSESIGNAL).
+                        let mut local_msgs: u64 = 0;
+                        for v in part.vertices_of(w, n) {
+                            let vi = v as usize;
+                            let mut accum: Option<P::Msg> = None;
+                            for (eid, src) in topo.in_edges(v) {
+                                if unsafe { *prev_active_s.get(src as usize) } {
+                                    let sp = unsafe { props_s.get(src as usize) }
+                                        .as_ref()
+                                        .expect("init");
+                                    local_udf += 1;
+                                    if let Some(msg) =
+                                        program.emit_message(src, v, sp, graph.edge_prop(eid))
+                                    {
+                                        local_msgs += 1;
+                                        accum = Some(match accum {
+                                            Some(acc) => {
+                                                local_udf += 1;
+                                                program.merge_message(&acc, &msg)
+                                            }
+                                            None => msg,
+                                        });
+                                    }
+                                }
+                            }
+                            unsafe { inbox_s.set(vi, accum) };
+                        }
+                        pull_msgs.fetch_add(local_msgs, Ordering::Relaxed);
+                    } else {
+                        // Sparse/push: active owned vertices push along
+                        // out-edges, routed via the board.
+                        let mut local_push_msgs: u64 = 0;
+                        for v in part.vertices_of(w, n) {
+                            if !unsafe { *prev_active_s.get(v as usize) } {
+                                continue;
+                            }
+                            let prop = unsafe { props_s.get(v as usize) }.as_ref().expect("init");
+                            for (eid, dst) in topo.out_edges(v) {
+                                local_udf += 1;
+                                if let Some(msg) =
+                                    program.emit_message(v, dst, prop, graph.edge_prop(eid))
+                                {
+                                    let tp = part.partition_of(dst);
+                                    if tp == w {
+                                        // Local delivery fast path (§Perf):
+                                        // own destination — merge straight
+                                        // into our inbox slot.
+                                        local_push_msgs += 1;
+                                        let slot =
+                                            unsafe { inbox_s.get_mut(dst as usize) };
+                                        *slot = Some(match slot.take() {
+                                            Some(acc) => {
+                                                local_udf += 1;
+                                                program.merge_message(&acc, &msg)
+                                            }
+                                            None => msg,
+                                        });
+                                    } else {
+                                        stage[tp].push((dst, msg));
+                                        if stage[tp].len() >= 4096 {
+                                            board.send_batch(w, tp, &mut stage[tp]);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        for tp in 0..workers {
+                            if !stage[tp].is_empty() {
+                                board.send_batch(w, tp, &mut stage[tp]);
+                            }
+                        }
+                        // Locally-delivered messages bypass the board but
+                        // still count as routed work for the metrics.
+                        pull_msgs.fetch_add(local_push_msgs, Ordering::Relaxed);
+                    }
+                    barrier.wait();
+
+                    // --- Phase V: deliver (push) + compute ----------------
+                    if !pull {
+                        board.drain_to(w, |dst, msg| {
+                            let slot = unsafe { inbox_s.get_mut(dst as usize) };
+                            *slot = Some(match slot.take() {
+                                Some(acc) => {
+                                    local_udf += 1;
+                                    program.merge_message(&acc, &msg)
+                                }
+                                None => msg,
+                            });
+                        });
+                    }
+                    let mut local_active: u64 = 0;
+                    let mut local_aoe: u64 = 0;
+                    for v in part.vertices_of(w, n) {
+                        let vi = v as usize;
+                        let was_active = unsafe { *prev_active_s.get(vi) };
+                        let slot = unsafe { inbox_s.get_mut(vi) };
+                        if !was_active && slot.is_none() {
+                            unsafe { next_active_s.set(vi, false) };
+                            continue;
+                        }
+                        let msg = match slot.take() {
+                            Some(m) => m,
+                            None => {
+                                local_udf += 1;
+                                program.empty_message()
+                            }
+                        };
+                        let prop_slot = unsafe { props_s.get_mut(vi) };
+                        let (new_prop, is_active) =
+                            program.vertex_compute(prop_slot.as_ref().expect("init"), &msg, iter);
+                        local_udf += 1;
+                        *prop_slot = Some(new_prop);
+                        unsafe { next_active_s.set(vi, is_active) };
+                        if is_active {
+                            local_active += 1;
+                            local_aoe += topo.out_degree(v) as u64;
+                        }
+                    }
+                    num_active.fetch_add(local_active, Ordering::Relaxed);
+                    active_out_edges.fetch_add(local_aoe, Ordering::Relaxed);
+                    barrier.wait();
+
+                    // --- Phase C: leader bookkeeping ----------------------
+                    let lead = barrier.wait().is_leader();
+                    if lead {
+                        let act = num_active.swap(0, Ordering::Relaxed);
+                        let aoe = active_out_edges.swap(0, Ordering::Relaxed);
+                        let board_total = board.total_messages();
+                        let push_step_msgs = board_total - last_board_msgs;
+                        last_board_msgs = board_total;
+                        let pull_step_msgs = pull_msgs.swap(0, Ordering::Relaxed);
+                        total_msgs.fetch_add(push_step_msgs + pull_step_msgs, Ordering::Relaxed);
+                        steps_done.store(iter as u64, Ordering::Relaxed);
+                        if opts.step_metrics {
+                            step_log.lock().unwrap().push(StepMetrics {
+                                step: iter,
+                                active: act,
+                                messages: push_step_msgs + pull_step_msgs,
+                                elapsed: step_timer.elapsed(),
+                                mode: Some(if pull { StepMode::Pull } else { StepMode::Push }),
+                            });
+                        }
+                        // Gemini's density heuristic for the next round.
+                        let dense_next = (aoe as f64) > m as f64 / opts.pushpull_threshold;
+                        pull_mode.store(dense_next, Ordering::Relaxed);
+                        if act == 0 {
+                            converged.store(true, Ordering::Relaxed);
+                            stop.store(true, Ordering::Relaxed);
+                        } else if iter >= opts.max_iter {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    barrier.wait();
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // Flip active arrays: previous ← next (owned slots only).
+                    for v in part.vertices_of(w, n) {
+                        let vi = v as usize;
+                        let na = unsafe { *next_active_s.get(vi) };
+                        unsafe { prev_active_s.set(vi, na) };
+                    }
+                    barrier.wait();
+                    iter += 1;
+                }
+                udf_calls.fetch_add(local_udf, Ordering::Relaxed);
+            });
+        }
+    });
+
+    let steps = step_log.into_inner().unwrap();
+    let total = total_msgs.load(Ordering::Relaxed);
+    let metrics = RunMetrics {
+        supersteps: steps_done.load(Ordering::Relaxed) as u32,
+        total_messages: total,
+        total_message_bytes: total * (4 + std::mem::size_of::<P::Msg>() as u64),
+        elapsed: timer.elapsed(),
+        converged: converged.load(Ordering::Relaxed),
+        steps,
+        workers,
+        udf_calls: udf_calls.load(Ordering::Relaxed),
+        worker_busy: Vec::new(),
+    };
+    Ok(TypedRun {
+        props: props.into_iter().map(|p| p.expect("initialized")).collect(),
+        metrics,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::metrics::StepMode;
+    use crate::engine::RunOptions;
+    use crate::graph::builder::from_pairs;
+    use crate::vcprog::programs::sssp::{SsspBellmanFord, INF};
+    use crate::vcprog::programs::{Bfs, ConnectedComponents, PageRank};
+
+    fn opts(workers: usize) -> RunOptions {
+        RunOptions::default().with_workers(workers)
+    }
+
+    #[test]
+    fn sssp_on_diamond() {
+        let g = from_pairs(true, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let r = run(&g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert_eq!(r.props, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn sssp_unreachable() {
+        let g = from_pairs(true, &[(0, 1), (2, 3)]);
+        let r = run(&g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert_eq!(r.props[3], INF);
+    }
+
+    #[test]
+    fn cc_components() {
+        let g = from_pairs(false, &[(0, 1), (1, 2), (3, 4)]);
+        let r = run(&g, &ConnectedComponents::new(), &opts(3)).unwrap();
+        assert_eq!(r.props, vec![0, 0, 0, 3, 3]);
+    }
+
+    #[test]
+    fn pagerank_mass_conserved() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let pr = PageRank::new(4, 10);
+        let o = RunOptions::default().with_workers(2).with_max_iter(pr.rounds());
+        let r = run(&g, &pr, &o).unwrap();
+        let total: f64 = r.props.iter().map(|p| p.rank).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bfs_switches_modes_on_expander() {
+        // BFS frontier starts tiny (push) and the engine must still match.
+        let g = crate::graph::generate::random_for_tests(128, 1024, 21);
+        let r = run(&g, &Bfs::new(0), &opts(2)).unwrap();
+        let modes: Vec<_> = r.metrics.steps.iter().filter_map(|s| s.mode).collect();
+        assert!(!modes.is_empty());
+        // Round 1 is always dense (all vertices start active).
+        assert_eq!(modes[0], StepMode::Pull);
+        // SSSP/BFS frontiers shrink at the end → expect at least one push round.
+        assert!(modes.contains(&StepMode::Push), "modes: {modes:?}");
+    }
+
+    #[test]
+    fn forced_push_and_pull_agree() {
+        let g = crate::graph::generate::random_for_tests(80, 600, 31);
+        let mut always_pull = opts(2);
+        always_pull.pushpull_threshold = f64::INFINITY; // aoe > m/inf=0 → always dense
+        let mut always_push = opts(2);
+        always_push.pushpull_threshold = 0.0; // aoe > m/0=inf → never dense
+        let r1 = run(&g, &SsspBellmanFord::new(0), &always_pull).unwrap();
+        let r2 = run(&g, &SsspBellmanFord::new(0), &always_push).unwrap();
+        assert_eq!(r1.props, r2.props);
+    }
+
+    #[test]
+    fn worker_invariance() {
+        let g = crate::graph::generate::random_for_tests(60, 400, 17);
+        let r1 = run(&g, &ConnectedComponents::new(), &opts(1)).unwrap();
+        let r4 = run(&g, &ConnectedComponents::new(), &opts(4)).unwrap();
+        assert_eq!(r1.props, r4.props);
+    }
+}

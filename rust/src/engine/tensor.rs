@@ -1,0 +1,332 @@
+//! Tensor engine — native operators on AOT JAX/Pallas artifacts via PJRT.
+//!
+//! This backend is the three-layer stack's answer to the paper's "author in
+//! Python, execute on a native engine" goal: the compute was written in
+//! JAX + Pallas (`python/compile/`), AOT-lowered once (`make artifacts`),
+//! and executes here through the PJRT C API with **Python nowhere on the
+//! request path**. Rust owns the iteration loop, convergence checks and
+//! metrics; the artifacts own the per-superstep math.
+//!
+//! Scope: the three paper workloads (PageRank / SSSP / CC) — the operators
+//! whose message algebra the L1 kernels implement (sum and min-plus
+//! semirings). Custom VCProg programs run on the interpreted engines.
+
+use crate::distributed::metrics::{RunMetrics, StepMetrics};
+use crate::engine::{RunOptions, RunResult};
+use crate::error::{Result, UniGpsError};
+use crate::graph::Graph;
+use crate::operators::{symmetrized, Operator};
+use crate::runtime::{lit, BlockCsc, PjRtRuntime};
+use crate::util::timer::Timer;
+use crate::vcprog::Column;
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+thread_local! {
+    /// Per-thread runtime cache keyed by artifact dir (PJRT handles are
+    /// `!Send`; compilation is expensive, so benches reuse compiled steps
+    /// across runs on the same thread).
+    static RUNTIMES: RefCell<Vec<(PathBuf, Rc<PjRtRuntime>)>> = const { RefCell::new(Vec::new()) };
+}
+
+fn runtime_for(dir: &Path) -> Result<Rc<PjRtRuntime>> {
+    RUNTIMES.with(|cell| {
+        let mut guard = cell.borrow_mut();
+        if let Some((_, rt)) = guard.iter().find(|(p, _)| p == dir) {
+            return Ok(rt.clone());
+        }
+        let rt = Rc::new(PjRtRuntime::open(dir)?);
+        guard.push((dir.to_path_buf(), rt.clone()));
+        Ok(rt)
+    })
+}
+
+/// Artifact directory used by the tensor engine; honours
+/// `UNIGPS_ARTIFACTS` then falls back to `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("UNIGPS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Run a native operator on the tensor engine.
+pub fn run_operator(graph: &Graph, op: &Operator, opts: &RunOptions) -> Result<RunResult> {
+    let dir = artifacts_dir();
+    let rt = runtime_for(&dir)?;
+    match *op {
+        Operator::PageRank { iterations } => pagerank(&rt, graph, iterations, opts),
+        Operator::Sssp { root } => sssp(&rt, graph, root, opts),
+        Operator::ConnectedComponents => cc(&rt, &symmetrized(graph), opts),
+        ref other => Err(UniGpsError::engine(format!(
+            "tensor engine supports pagerank/sssp/cc; '{}' runs on the \
+             interpreted engines",
+            other.name()
+        ))),
+    }
+}
+
+struct Prepared {
+    enc: BlockCsc,
+    steps: Vec<StepMetrics>,
+    timer: Timer,
+}
+
+fn prepare(rt: &PjRtRuntime, graph: &Graph, algorithm: &str) -> Result<(Prepared, Rc<crate::runtime::CompiledStep>)> {
+    let timer = Timer::start();
+    let enc0 = BlockCsc::build(graph);
+    let step = rt.step_for(algorithm, enc0.v_pad, enc0.be)?;
+    let enc = enc0.pad_to(step.key.be, step.key.v_pad);
+    Ok((
+        Prepared {
+            enc,
+            steps: Vec::new(),
+            timer,
+        },
+        step,
+    ))
+}
+
+fn metrics(p: Prepared, converged: bool, udf_calls: u64) -> RunMetrics {
+    let supersteps = p.steps.len() as u32;
+    let total_messages: u64 = p.steps.iter().map(|s| s.messages).sum();
+    RunMetrics {
+        supersteps,
+        total_messages,
+        total_message_bytes: total_messages * 4,
+        elapsed: p.timer.elapsed(),
+        converged,
+        steps: p.steps,
+        workers: 1,
+        udf_calls,
+        worker_busy: Vec::new(),
+    }
+}
+
+fn pagerank(rt: &PjRtRuntime, graph: &Graph, iterations: u32, opts: &RunOptions) -> Result<RunResult> {
+    let (mut p, step) = prepare(rt, graph, "pagerank")?;
+    let enc = &p.enc;
+    let n = enc.n.max(1);
+    let edges = enc.real_edges() as u64;
+    let mut rank: Vec<f32> = enc.real_mask.iter().map(|&m| m / n as f32).collect();
+
+    // Static inputs live on the device for the whole run; only the small
+    // vertex-state vector round-trips per superstep (§Perf).
+    let dims = [enc.nb, enc.be];
+    let src = rt.upload_i32(&enc.src, &dims)?;
+    let dst = rt.upload_i32(&enc.local_dst, &dims)?;
+    let valid = rt.upload_f32(&enc.valid, &dims)?;
+    let inv = rt.upload_f32(&enc.inv_outdeg, &[enc.v_pad])?;
+    let mask = rt.upload_f32(&enc.real_mask, &[enc.v_pad])?;
+    let n_real = rt.upload_f32(&[n as f32], &[1])?;
+
+    let iters = iterations.min(opts.max_iter);
+    for it in 0..iters {
+        let t = Timer::start();
+        let state = rt.upload_f32(&rank, &[enc.v_pad])?;
+        let out = step.execute_buffers(&[&state, &src, &dst, &valid, &inv, &mask, &n_real])?;
+        rank = lit::to_f32v(&out[0])?;
+        p.steps.push(StepMetrics {
+            step: it + 1,
+            active: enc.n as u64,
+            messages: edges,
+            elapsed: t.elapsed(),
+            mode: None,
+        });
+    }
+    let ranks: Vec<f64> = rank[..p.enc.n].iter().map(|&r| r as f64).collect();
+    let m = metrics(p, true, 0);
+    Ok(RunResult {
+        columns: vec![("rank".to_string(), Column::F64(ranks))],
+        metrics: m,
+    })
+}
+
+fn sssp(rt: &PjRtRuntime, graph: &Graph, root: u32, opts: &RunOptions) -> Result<RunResult> {
+    if (root as usize) >= graph.num_vertices() {
+        return Err(UniGpsError::engine(format!("root {root} out of range")));
+    }
+    // f32 distances must stay exact: all finite distances < 2^24.
+    let (mut p, step) = prepare(rt, graph, "sssp")?;
+    let enc = &p.enc;
+    let edges = enc.real_edges() as u64;
+    let mut dist = vec![f32::INFINITY; enc.v_pad];
+    dist[root as usize] = 0.0;
+
+    let dims = [enc.nb, enc.be];
+    let src = rt.upload_i32(&enc.src, &dims)?;
+    let dst = rt.upload_i32(&enc.local_dst, &dims)?;
+    let valid = rt.upload_f32(&enc.valid, &dims)?;
+    let weight = rt.upload_f32(&enc.weight, &dims)?;
+
+    let mut converged = false;
+    let mut it = 0;
+    while it < opts.max_iter {
+        let t = Timer::start();
+        let state = rt.upload_f32(&dist, &[enc.v_pad])?;
+        let out = step.execute_buffers(&[&state, &src, &dst, &valid, &weight])?;
+        dist = lit::to_f32v(&out[0])?;
+        let changed = lit::to_f32v(&out[1])?[0];
+        it += 1;
+        p.steps.push(StepMetrics {
+            step: it,
+            active: changed as u64,
+            messages: edges,
+            elapsed: t.elapsed(),
+            mode: None,
+        });
+        if changed == 0.0 {
+            converged = true;
+            break;
+        }
+    }
+    let out: Vec<i64> = dist[..p.enc.n]
+        .iter()
+        .map(|&d| if d.is_finite() { d as i64 } else { i64::MAX })
+        .collect();
+    let m = metrics(p, converged, 0);
+    Ok(RunResult {
+        columns: vec![("distance".to_string(), Column::I64(out))],
+        metrics: m,
+    })
+}
+
+fn cc(rt: &PjRtRuntime, graph: &Graph, opts: &RunOptions) -> Result<RunResult> {
+    let (mut p, step) = prepare(rt, graph, "cc")?;
+    let enc = &p.enc;
+    let edges = enc.real_edges() as u64;
+    let mut label: Vec<f32> = (0..enc.v_pad)
+        .map(|v| if v < enc.n { v as f32 } else { f32::INFINITY })
+        .collect();
+
+    let dims = [enc.nb, enc.be];
+    let src = rt.upload_i32(&enc.src, &dims)?;
+    let dst = rt.upload_i32(&enc.local_dst, &dims)?;
+    let valid = rt.upload_f32(&enc.valid, &dims)?;
+
+    let mut converged = false;
+    let mut it = 0;
+    while it < opts.max_iter {
+        let t = Timer::start();
+        let state = rt.upload_f32(&label, &[enc.v_pad])?;
+        let out = step.execute_buffers(&[&state, &src, &dst, &valid])?;
+        label = lit::to_f32v(&out[0])?;
+        let changed = lit::to_f32v(&out[1])?[0];
+        it += 1;
+        p.steps.push(StepMetrics {
+            step: it,
+            active: changed as u64,
+            messages: edges,
+            elapsed: t.elapsed(),
+            mode: None,
+        });
+        if changed == 0.0 {
+            converged = true;
+            break;
+        }
+    }
+    let out: Vec<i64> = label[..p.enc.n].iter().map(|&l| l as i64).collect();
+    let m = metrics(p, converged, 0);
+    Ok(RunResult {
+        columns: vec![("component".to_string(), Column::I64(out))],
+        metrics: m,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+    use crate::graph::builder::from_pairs;
+    use crate::operators::OperatorBuilder;
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn tensor_sssp_matches_pregel() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let g = crate::graph::generate::random_for_tests(300, 2000, 3);
+        let t = OperatorBuilder::new(&g, Operator::Sssp { root: 0 })
+            .engine(EngineKind::Tensor)
+            .run()
+            .unwrap();
+        let p = OperatorBuilder::new(&g, Operator::Sssp { root: 0 })
+            .engine(EngineKind::Pregel)
+            .run()
+            .unwrap();
+        assert_eq!(
+            t.column("distance").unwrap().as_i64().unwrap(),
+            p.column("distance").unwrap().as_i64().unwrap()
+        );
+        assert!(t.metrics.converged);
+    }
+
+    #[test]
+    fn tensor_cc_matches_serial() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let g = from_pairs(false, &[(0, 1), (1, 2), (5, 6)]);
+        let t = OperatorBuilder::new(&g, Operator::ConnectedComponents)
+            .engine(EngineKind::Tensor)
+            .run()
+            .unwrap();
+        let comp = t.column("component").unwrap().as_i64().unwrap();
+        assert_eq!(comp, &[0, 0, 0, 3, 4, 5, 5]);
+    }
+
+    #[test]
+    fn tensor_pagerank_close_to_pregel() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let g = crate::graph::generate::random_for_tests(200, 1500, 5);
+        let t = OperatorBuilder::new(&g, Operator::PageRank { iterations: 10 })
+            .engine(EngineKind::Tensor)
+            .run()
+            .unwrap();
+        let p = OperatorBuilder::new(&g, Operator::PageRank { iterations: 10 })
+            .engine(EngineKind::Pregel)
+            .run()
+            .unwrap();
+        let tr = t.column("rank").unwrap().as_f64().unwrap();
+        let pr = p.column("rank").unwrap().as_f64().unwrap();
+        for (a, b) in tr.iter().zip(pr) {
+            let scale = a.abs().max(b.abs()).max(1e-9);
+            assert!((a - b).abs() / scale < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tensor_rejects_unsupported_operator() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let g = from_pairs(true, &[(0, 1)]);
+        let r = OperatorBuilder::new(&g, Operator::Triangles)
+            .engine(EngineKind::Tensor)
+            .run();
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn tensor_sssp_bad_root() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let g = from_pairs(true, &[(0, 1)]);
+        let r = OperatorBuilder::new(&g, Operator::Sssp { root: 99 })
+            .engine(EngineKind::Tensor)
+            .run();
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,75 @@
+//! Cross-engine result validation — the executable form of the paper's
+//! "Write Once, Run Anywhere" claim.
+
+use crate::engine::{run_typed, EngineKind, RunOptions};
+use crate::error::{Result, UniGpsError};
+use crate::graph::PropertyGraph;
+use crate::vcprog::VCProg;
+
+/// Run `program` on every VCProg engine and assert the results agree
+/// (`eq` decides equality for the property type — exact for integral
+/// algorithms, tolerant for floating point). Returns the Pregel result.
+pub fn check_all_engines<P: VCProg>(
+    graph: &PropertyGraph<P::In, P::EProp>,
+    program: &P,
+    opts: &RunOptions,
+    eq: impl Fn(&P::VProp, &P::VProp) -> bool,
+) -> Result<Vec<P::VProp>> {
+    let reference = run_typed(EngineKind::Serial, graph, program, opts)?;
+    for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
+        let got = run_typed(kind, graph, program, opts)?;
+        if got.props.len() != reference.props.len() {
+            return Err(UniGpsError::engine(format!(
+                "{kind}: property count {} != serial {}",
+                got.props.len(),
+                reference.props.len()
+            )));
+        }
+        for (v, (a, b)) in got.props.iter().zip(reference.props.iter()).enumerate() {
+            if !eq(a, b) {
+                return Err(UniGpsError::engine(format!(
+                    "{kind}: vertex {v} diverges from serial reference: {a:?} vs {b:?} \
+                     (program {})",
+                    program.name()
+                )));
+            }
+        }
+    }
+    run_typed(EngineKind::Pregel, graph, program, opts).map(|r| r.props)
+}
+
+/// Exact equality helper.
+pub fn exact<T: PartialEq>(a: &T, b: &T) -> bool {
+    a == b
+}
+
+/// Relative-tolerance equality for f64-valued properties.
+pub fn approx(tol: f64) -> impl Fn(&f64, &f64) -> bool {
+    move |a, b| {
+        let scale = a.abs().max(b.abs()).max(1e-12);
+        (a - b).abs() / scale < tol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+    use crate::vcprog::programs::ConnectedComponents;
+
+    #[test]
+    fn validation_passes_for_builtin() {
+        let g = from_pairs(false, &[(0, 1), (1, 2), (3, 4)]);
+        let props =
+            check_all_engines(&g, &ConnectedComponents::new(), &RunOptions::default(), exact)
+                .unwrap();
+        assert_eq!(props, vec![0, 0, 0, 3, 3]);
+    }
+
+    #[test]
+    fn approx_comparator() {
+        let cmp = approx(1e-6);
+        assert!(cmp(&1.0, &(1.0 + 1e-9)));
+        assert!(!cmp(&1.0, &1.1));
+    }
+}

@@ -1,0 +1,95 @@
+//! Error types for UniGPS.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, UniGpsError>;
+
+/// Errors surfaced by the UniGPS framework.
+#[derive(Debug)]
+pub enum UniGpsError {
+    /// Graph input was malformed (bad edge list, inconsistent sizes, ...).
+    InvalidGraph(String),
+    /// A record field access failed (missing field / wrong type).
+    Record(String),
+    /// An engine rejected the program or options.
+    Engine(String),
+    /// Graph I/O failure.
+    Io(std::io::Error),
+    /// Unified-format parse error.
+    Parse(String),
+    /// IPC channel failure (peer died, protocol violation, timeout).
+    Ipc(String),
+    /// PJRT runtime failure (artifact missing, compile error, execute error).
+    Runtime(String),
+    /// Configuration error.
+    Config(String),
+}
+
+impl fmt::Display for UniGpsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            UniGpsError::InvalidGraph(m) => write!(f, "invalid graph: {m}"),
+            UniGpsError::Record(m) => write!(f, "record error: {m}"),
+            UniGpsError::Engine(m) => write!(f, "engine error: {m}"),
+            UniGpsError::Io(e) => write!(f, "io error: {e}"),
+            UniGpsError::Parse(m) => write!(f, "parse error: {m}"),
+            UniGpsError::Ipc(m) => write!(f, "ipc error: {m}"),
+            UniGpsError::Runtime(m) => write!(f, "runtime error: {m}"),
+            UniGpsError::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for UniGpsError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            UniGpsError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for UniGpsError {
+    fn from(e: std::io::Error) -> Self {
+        UniGpsError::Io(e)
+    }
+}
+
+impl UniGpsError {
+    /// Shorthand constructor for engine errors.
+    pub fn engine(msg: impl Into<String>) -> Self {
+        UniGpsError::Engine(msg.into())
+    }
+    /// Shorthand constructor for IPC errors.
+    pub fn ipc(msg: impl Into<String>) -> Self {
+        UniGpsError::Ipc(msg.into())
+    }
+    /// Shorthand constructor for runtime errors.
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        UniGpsError::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        let e = UniGpsError::InvalidGraph("dangling edge".into());
+        assert!(e.to_string().contains("dangling edge"));
+        let e = UniGpsError::ipc("peer gone");
+        assert!(e.to_string().contains("peer gone"));
+        let e: UniGpsError = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
+        assert!(matches!(e, UniGpsError::Io(_)));
+    }
+
+    #[test]
+    fn error_source_chain() {
+        use std::error::Error as _;
+        let e: UniGpsError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.source().is_some());
+        assert!(UniGpsError::engine("nope").source().is_none());
+    }
+}

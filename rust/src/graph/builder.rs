@@ -1,0 +1,250 @@
+//! Edge-list graph builder.
+//!
+//! Collects `(src, dst, edge_prop)` triples, then produces an immutable
+//! [`PropertyGraph`]: sorts edges into CSR order, optionally de-duplicates
+//! parallel edges and drops self-loops, symmetrizes undirected input, and
+//! derives the CSC view.
+
+use crate::error::{Result, UniGpsError};
+use crate::graph::csr::Topology;
+use crate::graph::PropertyGraph;
+use crate::vcprog::VertexId;
+use std::sync::Arc;
+
+/// Builder for [`PropertyGraph`] values.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder<E> {
+    edges: Vec<(VertexId, VertexId, E)>,
+    num_vertices: usize,
+    directed: bool,
+    dedup: bool,
+    drop_self_loops: bool,
+}
+
+impl<E: Clone> GraphBuilder<E> {
+    /// New builder; `directed=false` symmetrizes every edge at build time.
+    pub fn new(directed: bool) -> Self {
+        GraphBuilder {
+            edges: Vec::new(),
+            num_vertices: 0,
+            directed,
+            dedup: false,
+            drop_self_loops: false,
+        }
+    }
+
+    /// Enable parallel-edge de-duplication (first occurrence wins).
+    pub fn dedup(mut self, on: bool) -> Self {
+        self.dedup = on;
+        self
+    }
+
+    /// Enable dropping of self-loops.
+    pub fn drop_self_loops(mut self, on: bool) -> Self {
+        self.drop_self_loops = on;
+        self
+    }
+
+    /// Reserve capacity for `n` edges.
+    pub fn reserve(&mut self, n: usize) {
+        self.edges.reserve(n);
+    }
+
+    /// Add one edge.
+    pub fn add_edge(&mut self, src: VertexId, dst: VertexId, prop: E) {
+        self.num_vertices = self
+            .num_vertices
+            .max(src as usize + 1)
+            .max(dst as usize + 1);
+        self.edges.push((src, dst, prop));
+    }
+
+    /// Force the vertex count to at least `n` (for isolated trailing vertices).
+    pub fn ensure_vertices(&mut self, n: usize) {
+        self.num_vertices = self.num_vertices.max(n);
+    }
+
+    /// Current edge count (before symmetrization).
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// True if no edges were added.
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Finish the graph with unit vertex properties.
+    pub fn build(self) -> Result<PropertyGraph<(), E>> {
+        self.build_with_vertex_props(|_| ())
+    }
+
+    /// Finish the graph, computing each vertex's input property from its id.
+    pub fn build_with_vertex_props<V: Clone>(
+        mut self,
+        vprop: impl Fn(VertexId) -> V,
+    ) -> Result<PropertyGraph<V, E>> {
+        let n = self.num_vertices;
+        if self.drop_self_loops {
+            self.edges.retain(|(s, d, _)| s != d);
+        }
+        // Symmetrize undirected input.
+        if !self.directed {
+            let mirrored: Vec<_> = self
+                .edges
+                .iter()
+                .filter(|(s, d, _)| s != d)
+                .map(|(s, d, p)| (*d, *s, p.clone()))
+                .collect();
+            self.edges.extend(mirrored);
+        }
+        for (s, d, _) in &self.edges {
+            if *s as usize >= n || *d as usize >= n {
+                return Err(UniGpsError::InvalidGraph(format!(
+                    "edge ({s},{d}) out of range for {n} vertices"
+                )));
+            }
+        }
+        // Stable counting sort by src → CSR order (preserves insertion order
+        // within a row so "first occurrence wins" holds for dedup).
+        let mut deg = vec![0usize; n];
+        for (s, _, _) in &self.edges {
+            deg[*s as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for v in 0..n {
+            offsets[v + 1] = offsets[v] + deg[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut order = vec![0usize; self.edges.len()];
+        for (i, (s, _, _)) in self.edges.iter().enumerate() {
+            let slot = cursor[*s as usize];
+            cursor[*s as usize] += 1;
+            order[slot] = i;
+        }
+
+        let mut out_targets = Vec::with_capacity(self.edges.len());
+        let mut edge_props = Vec::with_capacity(self.edges.len());
+        if self.dedup {
+            // Within each row, sort slots by target and keep first occurrence.
+            let mut new_offsets = vec![0usize; n + 1];
+            for v in 0..n {
+                let row = &mut order[offsets[v]..offsets[v + 1]];
+                row.sort_by_key(|&i| (self.edges[i].1, i));
+                let mut last: Option<VertexId> = None;
+                for &i in row.iter() {
+                    let (_, d, ref p) = self.edges[i];
+                    if last != Some(d) {
+                        out_targets.push(d);
+                        edge_props.push(p.clone());
+                        last = Some(d);
+                    }
+                }
+                new_offsets[v + 1] = out_targets.len();
+            }
+            let topo = Topology::from_csr(n, new_offsets, out_targets, self.directed);
+            let vprops = (0..n as VertexId).map(vprop).collect();
+            return Ok(PropertyGraph::new(Arc::new(topo), vprops, edge_props));
+        }
+        for &i in &order {
+            let (_, d, ref p) = self.edges[i];
+            out_targets.push(d);
+            edge_props.push(p.clone());
+        }
+        let topo = Topology::from_csr(n, offsets, out_targets, self.directed);
+        let vprops = (0..n as VertexId).map(vprop).collect();
+        Ok(PropertyGraph::new(Arc::new(topo), vprops, edge_props))
+    }
+}
+
+/// Convenience: build a directed, unit-weight graph from `(src, dst)` pairs.
+pub fn from_pairs(directed: bool, pairs: &[(VertexId, VertexId)]) -> PropertyGraph<(), f64> {
+    let mut b = GraphBuilder::new(directed);
+    for &(s, d) in pairs {
+        b.add_edge(s, d, 1.0);
+    }
+    b.build().expect("valid pairs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directed_build_preserves_edges() {
+        let g = from_pairs(true, &[(0, 1), (0, 2), (1, 2), (2, 0)]);
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 4);
+        let t: Vec<_> = g.topology().out_edges(0).map(|(_, d)| d).collect();
+        assert_eq!(t, vec![1, 2]);
+    }
+
+    #[test]
+    fn undirected_build_symmetrizes() {
+        let g = from_pairs(false, &[(0, 1), (1, 2)]);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.topology().out_degree(1), 2);
+        assert_eq!(g.topology().in_degree(1), 2);
+    }
+
+    #[test]
+    fn undirected_self_loop_not_duplicated() {
+        let g = from_pairs(false, &[(0, 0), (0, 1)]);
+        // self loop kept once, 0-1 symmetrized
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn edge_props_follow_csr_order() {
+        let mut b = GraphBuilder::new(true);
+        b.add_edge(1, 0, 10.0);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 2, 2.0);
+        let g = b.build().unwrap();
+        // CSR row 0 = [1.0, 2.0], row 1 = [10.0]
+        let w: Vec<f64> = g.topology().out_edges(0).map(|(e, _)| g.edge_prop(e)).copied().collect();
+        assert_eq!(w, vec![1.0, 2.0]);
+        let w: Vec<f64> = g.topology().out_edges(1).map(|(e, _)| g.edge_prop(e)).copied().collect();
+        assert_eq!(w, vec![10.0]);
+    }
+
+    #[test]
+    fn dedup_keeps_first_occurrence() {
+        let mut b = GraphBuilder::new(true).dedup(true);
+        b.add_edge(0, 1, 7.0);
+        b.add_edge(0, 1, 9.0);
+        b.add_edge(0, 2, 3.0);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 2);
+        let w: Vec<f64> = g.topology().out_edges(0).map(|(e, _)| g.edge_prop(e)).copied().collect();
+        assert_eq!(w, vec![7.0, 3.0]);
+    }
+
+    #[test]
+    fn drop_self_loops_flag() {
+        let mut b = GraphBuilder::new(true).drop_self_loops(true);
+        b.add_edge(0, 0, 1.0);
+        b.add_edge(0, 1, 1.0);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn ensure_vertices_creates_isolated() {
+        let mut b: GraphBuilder<f64> = GraphBuilder::new(true);
+        b.add_edge(0, 1, 1.0);
+        b.ensure_vertices(10);
+        let g = b.build().unwrap();
+        assert_eq!(g.num_vertices(), 10);
+        assert_eq!(g.topology().out_degree(9), 0);
+    }
+
+    #[test]
+    fn vertex_props_from_closure() {
+        let mut b: GraphBuilder<f64> = GraphBuilder::new(true);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        let g = b.build_with_vertex_props(|v| v as i64 * 10).unwrap();
+        assert_eq!(*g.vertex_prop(2), 20);
+    }
+}

@@ -1,0 +1,233 @@
+//! Compressed sparse row/column graph topology.
+//!
+//! The immutable [`Topology`] stores both out-edges (CSR, for push-style
+//! engines: Pregel scatter, Push-Pull sparse mode) and in-edges (CSC, for
+//! pull-style engines: GAS gather, Push-Pull dense mode). The CSC view keeps
+//! a mapping back to the CSR edge id so edge properties — stored once, in
+//! CSR order — are reachable from both directions.
+
+use crate::vcprog::VertexId;
+
+/// Immutable graph topology with both adjacency directions.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    num_vertices: usize,
+    /// CSR row offsets, length `num_vertices + 1`.
+    out_offsets: Vec<usize>,
+    /// CSR column indices (edge targets), length `num_edges`.
+    out_targets: Vec<VertexId>,
+    /// CSC row offsets, length `num_vertices + 1`.
+    in_offsets: Vec<usize>,
+    /// CSC column indices (edge sources), length `num_edges`.
+    in_sources: Vec<VertexId>,
+    /// For each CSC slot, the CSR edge id of the same edge.
+    in_edge_ids: Vec<usize>,
+    /// Whether the logical graph is directed (undirected graphs are stored
+    /// symmetrized; this flag only records provenance).
+    directed: bool,
+}
+
+impl Topology {
+    /// Build a topology from a CSR adjacency (offsets + targets). The CSC
+    /// view is derived by a counting pass.
+    pub fn from_csr(
+        num_vertices: usize,
+        out_offsets: Vec<usize>,
+        out_targets: Vec<VertexId>,
+        directed: bool,
+    ) -> Self {
+        debug_assert_eq!(out_offsets.len(), num_vertices + 1);
+        debug_assert_eq!(*out_offsets.last().unwrap_or(&0), out_targets.len());
+        let num_edges = out_targets.len();
+
+        // Counting sort by target to build the CSC view.
+        let mut in_deg = vec![0usize; num_vertices];
+        for &t in &out_targets {
+            in_deg[t as usize] += 1;
+        }
+        let mut in_offsets = vec![0usize; num_vertices + 1];
+        for v in 0..num_vertices {
+            in_offsets[v + 1] = in_offsets[v] + in_deg[v];
+        }
+        let mut cursor = in_offsets.clone();
+        let mut in_sources = vec![0 as VertexId; num_edges];
+        let mut in_edge_ids = vec![0usize; num_edges];
+        for src in 0..num_vertices {
+            for eid in out_offsets[src]..out_offsets[src + 1] {
+                let dst = out_targets[eid] as usize;
+                let slot = cursor[dst];
+                cursor[dst] += 1;
+                in_sources[slot] = src as VertexId;
+                in_edge_ids[slot] = eid;
+            }
+        }
+
+        Topology {
+            num_vertices,
+            out_offsets,
+            out_targets,
+            in_offsets,
+            in_sources,
+            in_edge_ids,
+            directed,
+        }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.num_vertices
+    }
+
+    /// Number of (directed, stored) edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.out_targets.len()
+    }
+
+    /// Whether the logical input graph was directed.
+    #[inline]
+    pub fn directed(&self) -> bool {
+        self.directed
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        let v = v as usize;
+        self.out_offsets[v + 1] - self.out_offsets[v]
+    }
+
+    /// In-degree of `v`.
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        let v = v as usize;
+        self.in_offsets[v + 1] - self.in_offsets[v]
+    }
+
+    /// Out-neighbors of `v` with their CSR edge ids.
+    #[inline]
+    pub fn out_edges(&self, v: VertexId) -> impl Iterator<Item = (usize, VertexId)> + '_ {
+        let v = v as usize;
+        let range = self.out_offsets[v]..self.out_offsets[v + 1];
+        range.clone().zip(self.out_targets[range].iter().copied())
+    }
+
+    /// In-neighbors of `v` as `(csr_edge_id, source)`.
+    #[inline]
+    pub fn in_edges(&self, v: VertexId) -> impl Iterator<Item = (usize, VertexId)> + '_ {
+        let v = v as usize;
+        let range = self.in_offsets[v]..self.in_offsets[v + 1];
+        self.in_edge_ids[range.clone()]
+            .iter()
+            .copied()
+            .zip(self.in_sources[range].iter().copied())
+    }
+
+    /// Raw CSR slices `(offsets, targets)` — used by the block-CSC converter
+    /// and the tensor engine.
+    pub fn csr(&self) -> (&[usize], &[VertexId]) {
+        (&self.out_offsets, &self.out_targets)
+    }
+
+    /// Raw CSC slices `(offsets, sources, csr_edge_ids)`.
+    pub fn csc(&self) -> (&[usize], &[VertexId], &[usize]) {
+        (&self.in_offsets, &self.in_sources, &self.in_edge_ids)
+    }
+
+    /// Sum of out-degrees over `vs` (used by Push-Pull's mode heuristic).
+    pub fn out_degree_sum(&self, vs: impl Iterator<Item = VertexId>) -> usize {
+        vs.map(|v| self.out_degree(v)).sum()
+    }
+
+    /// Total bytes of the topology arrays (capacity planning / reports).
+    pub fn memory_bytes(&self) -> usize {
+        self.out_offsets.len() * 8
+            + self.out_targets.len() * 4
+            + self.in_offsets.len() * 8
+            + self.in_sources.len() * 4
+            + self.in_edge_ids.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 -> 1, 0 -> 2, 1 -> 2, 2 -> 0
+    fn diamond() -> Topology {
+        Topology::from_csr(3, vec![0, 2, 3, 4], vec![1, 2, 2, 0], true)
+    }
+
+    #[test]
+    fn basic_counts() {
+        let t = diamond();
+        assert_eq!(t.num_vertices(), 3);
+        assert_eq!(t.num_edges(), 4);
+        assert!(t.directed());
+    }
+
+    #[test]
+    fn degrees() {
+        let t = diamond();
+        assert_eq!(t.out_degree(0), 2);
+        assert_eq!(t.out_degree(1), 1);
+        assert_eq!(t.out_degree(2), 1);
+        assert_eq!(t.in_degree(0), 1);
+        assert_eq!(t.in_degree(1), 1);
+        assert_eq!(t.in_degree(2), 2);
+    }
+
+    #[test]
+    fn out_edges_enumerate_csr_ids() {
+        let t = diamond();
+        let e: Vec<_> = t.out_edges(0).collect();
+        assert_eq!(e, vec![(0, 1), (1, 2)]);
+        let e: Vec<_> = t.out_edges(2).collect();
+        assert_eq!(e, vec![(3, 0)]);
+    }
+
+    #[test]
+    fn in_edges_map_to_csr_edge_ids() {
+        let t = diamond();
+        // in-edges of 2 are 0->2 (csr id 1) and 1->2 (csr id 2)
+        let mut e: Vec<_> = t.in_edges(2).collect();
+        e.sort();
+        assert_eq!(e, vec![(1, 0), (2, 1)]);
+    }
+
+    #[test]
+    fn csc_is_consistent_with_csr() {
+        let t = diamond();
+        let (off, tgt) = t.csr();
+        // For every CSC entry (eid, src) of v: CSR edge eid must be src->v.
+        for v in 0..t.num_vertices() as VertexId {
+            for (eid, src) in t.in_edges(v) {
+                assert_eq!(tgt[eid], v);
+                let s = src as usize;
+                assert!(off[s] <= eid && eid < off[s + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph() {
+        let t = Topology::from_csr(0, vec![0], vec![], false);
+        assert_eq!(t.num_vertices(), 0);
+        assert_eq!(t.num_edges(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let t = Topology::from_csr(4, vec![0, 0, 1, 1, 1], vec![0], true);
+        assert_eq!(t.out_degree(0), 0);
+        assert_eq!(t.out_degree(1), 1);
+        assert_eq!(t.in_degree(0), 1);
+        assert_eq!(t.in_degree(3), 0);
+    }
+
+    #[test]
+    fn memory_accounting_nonzero() {
+        assert!(diamond().memory_bytes() > 0);
+    }
+}

@@ -1,0 +1,245 @@
+//! Synthetic graph generators.
+//!
+//! The paper's evaluation uses (a) four SNAP/LAW real-world graphs
+//! (Table II) and (b) GraphX's `logNormalGraph` generator for the data
+//! scalability study (Fig 8b). Real downloads are unavailable in this
+//! environment, so [`rmat`] / [`log_normal`] / [`erdos_renyi`] provide
+//! seeded synthetic equivalents with matching degree-skew character; the
+//! dataset registry in [`crate::graph::datasets`] maps each Table II graph
+//! to generator parameters.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::PropertyGraph;
+use crate::util::rng::Rng;
+use crate::vcprog::VertexId;
+
+/// Standard edge-weight policy for generated graphs.
+#[derive(Debug, Clone, Copy)]
+pub enum WeightKind {
+    /// All weights 1.0 (CC / BFS workloads).
+    Unit,
+    /// Uniform integer weights in `[1, max]` (SSSP workloads; integral so
+    /// min-plus results are exactly comparable across engines).
+    UniformInt(u32),
+}
+
+impl WeightKind {
+    fn sample(self, rng: &mut Rng) -> f64 {
+        match self {
+            WeightKind::Unit => 1.0,
+            WeightKind::UniformInt(max) => (1 + rng.next_below(max as u64)) as f64,
+        }
+    }
+}
+
+/// R-MAT (recursive matrix) generator — the standard skewed "social network"
+/// topology. `scale` = log2(#vertices); generates `num_edges` edges with
+/// partition probabilities `(a, b, c, d)`.
+pub fn rmat(
+    scale: u32,
+    num_edges: usize,
+    probs: (f64, f64, f64, f64),
+    directed: bool,
+    weights: WeightKind,
+    seed: u64,
+) -> PropertyGraph<(), f64> {
+    let n = 1usize << scale;
+    let (a, b, c, _d) = probs;
+    let mut rng = Rng::new(seed);
+    let mut builder = GraphBuilder::new(directed).drop_self_loops(true);
+    builder.reserve(num_edges + 8);
+    builder.ensure_vertices(n);
+    for _ in 0..num_edges {
+        let (mut x0, mut x1) = (0usize, n);
+        let (mut y0, mut y1) = (0usize, n);
+        while x1 - x0 > 1 {
+            let r = rng.next_f64();
+            // Add a little noise per level (standard Graph500 trick) to
+            // avoid exact self-similar artifacts.
+            let (qa, qb, qc) = (a, b, c);
+            let (mx, my) = ((x0 + x1) / 2, (y0 + y1) / 2);
+            if r < qa {
+                x1 = mx;
+                y1 = my;
+            } else if r < qa + qb {
+                x1 = mx;
+                y0 = my;
+            } else if r < qa + qb + qc {
+                x0 = mx;
+                y1 = my;
+            } else {
+                x0 = mx;
+                y0 = my;
+            }
+        }
+        let w = weights.sample(&mut rng);
+        builder.add_edge(x0 as VertexId, y0 as VertexId, w);
+    }
+    builder.build().expect("rmat edges in range")
+}
+
+/// Log-normal out-degree generator — the analog of GraphX's
+/// `logNormalGraph` used for the paper's Fig 8b data-scalability sweep.
+/// Each vertex draws `deg ~ LogNormal(mu, sigma)` and connects to that many
+/// uniformly random targets.
+pub fn log_normal(
+    num_vertices: usize,
+    mu: f64,
+    sigma: f64,
+    directed: bool,
+    weights: WeightKind,
+    seed: u64,
+) -> PropertyGraph<(), f64> {
+    let mut rng = Rng::new(seed);
+    let mut builder = GraphBuilder::new(directed).drop_self_loops(true);
+    builder.ensure_vertices(num_vertices);
+    for v in 0..num_vertices {
+        let deg = rng.next_lognormal(mu, sigma).round() as usize;
+        let deg = deg.min(num_vertices.saturating_sub(1));
+        for _ in 0..deg {
+            let mut dst = rng.usize_below(num_vertices);
+            if dst == v {
+                dst = (dst + 1) % num_vertices;
+            }
+            let w = weights.sample(&mut rng);
+            builder.add_edge(v as VertexId, dst as VertexId, w);
+        }
+    }
+    builder.build().expect("lognormal edges in range")
+}
+
+/// Erdős–Rényi G(n, m): `num_edges` uniform random edges.
+pub fn erdos_renyi(
+    num_vertices: usize,
+    num_edges: usize,
+    directed: bool,
+    weights: WeightKind,
+    seed: u64,
+) -> PropertyGraph<(), f64> {
+    let mut rng = Rng::new(seed);
+    let mut builder = GraphBuilder::new(directed).drop_self_loops(true);
+    builder.reserve(num_edges);
+    builder.ensure_vertices(num_vertices);
+    for _ in 0..num_edges {
+        let s = rng.usize_below(num_vertices);
+        let mut d = rng.usize_below(num_vertices);
+        if d == s {
+            d = (d + 1) % num_vertices;
+        }
+        let w = weights.sample(&mut rng);
+        builder.add_edge(s as VertexId, d as VertexId, w);
+    }
+    builder.build().expect("er edges in range")
+}
+
+/// 2-D grid graph (deterministic; handy for tests with known answers).
+pub fn grid(rows: usize, cols: usize, directed: bool) -> PropertyGraph<(), f64> {
+    let mut builder = GraphBuilder::new(directed);
+    builder.ensure_vertices(rows * cols);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                builder.add_edge(id(r, c), id(r, c + 1), 1.0);
+            }
+            if r + 1 < rows {
+                builder.add_edge(id(r, c), id(r + 1, c), 1.0);
+            }
+        }
+    }
+    builder.build().expect("grid edges in range")
+}
+
+/// Star graph: hub 0 connected to `n-1` leaves (stress test for skew).
+pub fn star(n: usize, directed: bool) -> PropertyGraph<(), f64> {
+    let mut builder = GraphBuilder::new(directed);
+    builder.ensure_vertices(n);
+    for v in 1..n {
+        builder.add_edge(0, v as VertexId, 1.0);
+    }
+    builder.build().expect("star edges in range")
+}
+
+/// Uniform random graph for property tests: `n` vertices, `m` edges, random
+/// weights, seeded. Always directed.
+pub fn random_for_tests(n: usize, m: usize, seed: u64) -> PropertyGraph<(), f64> {
+    erdos_renyi(n.max(2), m, true, WeightKind::UniformInt(10), seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_is_deterministic_and_skewed() {
+        let g1 = rmat(10, 8_192, (0.57, 0.19, 0.19, 0.05), true, WeightKind::Unit, 1);
+        let g2 = rmat(10, 8_192, (0.57, 0.19, 0.19, 0.05), true, WeightKind::Unit, 1);
+        assert_eq!(g1.num_edges(), g2.num_edges());
+        assert_eq!(g1.num_vertices(), 1024);
+        // Skew: max out-degree should far exceed the mean.
+        let topo = g1.topology();
+        let max_deg = (0..g1.num_vertices())
+            .map(|v| topo.out_degree(v as VertexId))
+            .max()
+            .unwrap();
+        let mean = g1.num_edges() as f64 / g1.num_vertices() as f64;
+        assert!(max_deg as f64 > 4.0 * mean, "max {max_deg} vs mean {mean}");
+    }
+
+    #[test]
+    fn rmat_seed_changes_graph() {
+        let g1 = rmat(8, 1000, (0.57, 0.19, 0.19, 0.05), true, WeightKind::Unit, 1);
+        let g2 = rmat(8, 1000, (0.57, 0.19, 0.19, 0.05), true, WeightKind::Unit, 2);
+        let (_, t1) = g1.topology().csr();
+        let (_, t2) = g2.topology().csr();
+        assert_ne!(t1, t2);
+    }
+
+    #[test]
+    fn log_normal_edge_count_scales_with_n() {
+        let g1 = log_normal(1_000, 1.2, 1.0, true, WeightKind::Unit, 7);
+        let g2 = log_normal(2_000, 1.2, 1.0, true, WeightKind::Unit, 7);
+        let r = g2.num_edges() as f64 / g1.num_edges() as f64;
+        assert!(r > 1.5 && r < 2.5, "edges should roughly double, got ×{r}");
+    }
+
+    #[test]
+    fn erdos_renyi_counts() {
+        let g = erdos_renyi(100, 500, true, WeightKind::UniformInt(10), 3);
+        assert_eq!(g.num_vertices(), 100);
+        assert_eq!(g.num_edges(), 500);
+        assert!(g.edge_props().iter().all(|&w| (1.0..=10.0).contains(&w)));
+    }
+
+    #[test]
+    fn undirected_generators_symmetrize() {
+        let g = erdos_renyi(50, 100, false, WeightKind::Unit, 5);
+        assert_eq!(g.num_edges(), 200);
+    }
+
+    #[test]
+    fn grid_structure() {
+        let g = grid(3, 4, true);
+        assert_eq!(g.num_vertices(), 12);
+        // Horizontal: 3 rows × 3; vertical: 2 rows × 4.
+        assert_eq!(g.num_edges(), 9 + 8);
+        assert_eq!(g.topology().out_degree(0), 2);
+        assert_eq!(g.topology().out_degree(11), 0);
+    }
+
+    #[test]
+    fn star_structure() {
+        let g = star(11, true);
+        assert_eq!(g.topology().out_degree(0), 10);
+        assert_eq!(g.topology().in_degree(5), 1);
+    }
+
+    #[test]
+    fn no_self_loops_in_random_generators() {
+        let g = random_for_tests(64, 512, 11);
+        let topo = g.topology();
+        for v in 0..g.num_vertices() as VertexId {
+            assert!(topo.out_edges(v).all(|(_, d)| d != v));
+        }
+    }
+}

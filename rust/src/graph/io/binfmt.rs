@@ -1,0 +1,158 @@
+//! Fast binary graph snapshots.
+//!
+//! Layout (little endian):
+//!
+//! ```text
+//! magic  u64  = 0x55_4E_49_47_50_53_42_31  ("UNIGPSB1")
+//! nv     u64
+//! ne     u64
+//! flags  u64  (bit0 = directed)
+//! offsets: (nv+1) × u64
+//! targets: ne × u32
+//! weights: ne × f64
+//! ```
+
+use super::{GraphSink, GraphSource};
+use crate::error::{Result, UniGpsError};
+use crate::graph::csr::Topology;
+use crate::graph::{Graph, PropertyGraph};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+const MAGIC: u64 = 0x554E_4947_5053_4231;
+
+/// Binary format adapter.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BinaryFormat;
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+impl GraphSource for BinaryFormat {
+    fn load(&self, path: &Path) -> Result<Graph> {
+        let file = std::fs::File::open(path)?;
+        let mut r = BufReader::new(file);
+        if read_u64(&mut r)? != MAGIC {
+            return Err(UniGpsError::Parse("bad magic (not a UniGPS binary graph)".into()));
+        }
+        let nv = read_u64(&mut r)? as usize;
+        let ne = read_u64(&mut r)? as usize;
+        let flags = read_u64(&mut r)?;
+        let directed = flags & 1 != 0;
+
+        let mut offsets = vec![0usize; nv + 1];
+        {
+            let mut buf = vec![0u8; (nv + 1) * 8];
+            r.read_exact(&mut buf)?;
+            for (i, chunk) in buf.chunks_exact(8).enumerate() {
+                offsets[i] = u64::from_le_bytes(chunk.try_into().unwrap()) as usize;
+            }
+        }
+        if offsets[nv] != ne {
+            return Err(UniGpsError::Parse("offset/edge-count mismatch".into()));
+        }
+        let mut targets = vec![0u32; ne];
+        {
+            let mut buf = vec![0u8; ne * 4];
+            r.read_exact(&mut buf)?;
+            for (i, chunk) in buf.chunks_exact(4).enumerate() {
+                targets[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+                if targets[i] as usize >= nv {
+                    return Err(UniGpsError::Parse(format!("edge target {} out of range", targets[i])));
+                }
+            }
+        }
+        let mut weights = vec![0f64; ne];
+        {
+            let mut buf = vec![0u8; ne * 8];
+            r.read_exact(&mut buf)?;
+            for (i, chunk) in buf.chunks_exact(8).enumerate() {
+                weights[i] = f64::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+        let topo = Topology::from_csr(nv, offsets, targets, directed);
+        Ok(PropertyGraph::new(Arc::new(topo), vec![(); nv], weights))
+    }
+}
+
+impl GraphSink for BinaryFormat {
+    fn store(&self, graph: &Graph, path: &Path) -> Result<()> {
+        let file = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(file);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&(graph.num_vertices() as u64).to_le_bytes())?;
+        w.write_all(&(graph.num_edges() as u64).to_le_bytes())?;
+        let flags: u64 = graph.topology().directed() as u64;
+        w.write_all(&flags.to_le_bytes())?;
+        let (offsets, targets) = graph.topology().csr();
+        for &o in offsets {
+            w.write_all(&(o as u64).to_le_bytes())?;
+        }
+        for &t in targets {
+            w.write_all(&t.to_le_bytes())?;
+        }
+        for &x in graph.edge_props() {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tmp_path;
+    use super::*;
+    use crate::graph::generate::{random_for_tests};
+
+    #[test]
+    fn roundtrip_random_graph() {
+        let g = random_for_tests(100, 400, 77);
+        let p = tmp_path("bin-rt.bin");
+        BinaryFormat.store(&g, &p).unwrap();
+        let back = BinaryFormat.load(&p).unwrap();
+        assert_eq!(back.num_vertices(), g.num_vertices());
+        assert_eq!(back.num_edges(), g.num_edges());
+        assert_eq!(back.topology().csr().1, g.topology().csr().1);
+        assert_eq!(back.edge_props(), g.edge_props());
+        assert_eq!(back.topology().directed(), g.topology().directed());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp_path("bin-badmagic.bin");
+        std::fs::write(&p, vec![0u8; 64]).unwrap();
+        assert!(BinaryFormat.load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let g = random_for_tests(50, 200, 5);
+        let p = tmp_path("bin-trunc.bin");
+        BinaryFormat.store(&g, &p).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &data[..data.len() / 2]).unwrap();
+        assert!(BinaryFormat.load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_out_of_range_target() {
+        let g = random_for_tests(10, 20, 5);
+        let p = tmp_path("bin-oor.bin");
+        BinaryFormat.store(&g, &p).unwrap();
+        let mut data = std::fs::read(&p).unwrap();
+        // Corrupt the first target (right after header+offsets).
+        let tgt_off = 32 + (g.num_vertices() + 1) * 8;
+        data[tgt_off..tgt_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&p, &data).unwrap();
+        assert!(BinaryFormat.load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,0 +1,132 @@
+//! SNAP-style whitespace edge lists: `src dst [weight]`, `#` comments.
+
+use super::{GraphSink, GraphSource};
+use crate::error::{Result, UniGpsError};
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Edge-list format adapter.
+#[derive(Debug, Clone)]
+pub struct EdgeListFormat {
+    /// Treat the file as a directed graph.
+    pub directed: bool,
+    /// Default weight when the third column is absent.
+    pub default_weight: f64,
+}
+
+impl Default for EdgeListFormat {
+    fn default() -> Self {
+        EdgeListFormat {
+            directed: true,
+            default_weight: 1.0,
+        }
+    }
+}
+
+impl GraphSource for EdgeListFormat {
+    fn load(&self, path: &Path) -> Result<Graph> {
+        let file = std::fs::File::open(path)?;
+        let reader = BufReader::new(file);
+        let mut builder = GraphBuilder::new(self.directed);
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+                // Recover the vertex count from our own header comment so
+                // trailing isolated vertices survive a round-trip.
+                if let Some(v) = line
+                    .split_whitespace()
+                    .find_map(|tok| tok.strip_prefix("V=").and_then(|s| s.parse::<usize>().ok()))
+                {
+                    builder.ensure_vertices(v);
+                }
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let src: u32 = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| UniGpsError::Parse(format!("line {}: bad src", lineno + 1)))?;
+            let dst: u32 = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| UniGpsError::Parse(format!("line {}: bad dst", lineno + 1)))?;
+            let w: f64 = match it.next() {
+                Some(s) => s
+                    .parse()
+                    .map_err(|_| UniGpsError::Parse(format!("line {}: bad weight", lineno + 1)))?,
+                None => self.default_weight,
+            };
+            builder.add_edge(src, dst, w);
+        }
+        builder.build()
+    }
+}
+
+impl GraphSink for EdgeListFormat {
+    fn store(&self, graph: &Graph, path: &Path) -> Result<()> {
+        let file = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(file);
+        writeln!(
+            w,
+            "# UniGPS edge list  V={} E={} directed={}",
+            graph.num_vertices(),
+            graph.num_edges(),
+            graph.topology().directed()
+        )?;
+        let topo = graph.topology();
+        for v in 0..graph.num_vertices() as u32 {
+            for (eid, dst) in topo.out_edges(v) {
+                writeln!(w, "{v}\t{dst}\t{}", graph.edge_prop(eid))?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tmp_path;
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    #[test]
+    fn roundtrip() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 0)]);
+        let p = tmp_path("el-rt.txt");
+        let fmt = EdgeListFormat::default();
+        fmt.store(&g, &p).unwrap();
+        let back = fmt.load(&p).unwrap();
+        assert_eq!(back.num_vertices(), 3);
+        assert_eq!(back.num_edges(), 3);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn parses_comments_and_default_weight() {
+        let p = tmp_path("el-com.txt");
+        std::fs::write(&p, "# comment\n% also\n0 1\n1 2 3.5\n\n").unwrap();
+        let g = EdgeListFormat::default().load(&p).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(*g.edge_prop(0), 1.0);
+        assert_eq!(*g.edge_prop(1), 3.5);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let p = tmp_path("el-bad.txt");
+        std::fs::write(&p, "0 not-a-number\n").unwrap();
+        assert!(EdgeListFormat::default().load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let r = EdgeListFormat::default().load(Path::new("/nonexistent/g.txt"));
+        assert!(matches!(r, Err(UniGpsError::Io(_))));
+    }
+}

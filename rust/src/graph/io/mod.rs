@@ -1,0 +1,119 @@
+//! Unified graph I/O (§IV-A).
+//!
+//! The paper's argument: with M engines and N data sources you need M×N
+//! format adapters unless everything goes through one intermediate format,
+//! which brings it down to M+N. This module is that intermediate layer:
+//! every external representation implements [`GraphSource`] /[`GraphSink`]
+//! against the in-memory [`crate::graph::PropertyGraph`], and every engine consumes the
+//! in-memory form only.
+//!
+//! Formats:
+//! * [`edgelist`] — SNAP-style whitespace `src dst [weight]` text.
+//! * [`unigraph`] — the GraphSON-like JSON-lines unified interchange format.
+//! * [`binfmt`] — fast binary snapshot (the "HDFS intermediate" stand-in).
+
+pub mod binfmt;
+pub mod edgelist;
+pub mod unigraph;
+
+use crate::error::Result;
+use crate::graph::Graph;
+use std::path::Path;
+
+/// Anything a graph can be loaded from.
+pub trait GraphSource {
+    /// Load a weighted graph.
+    fn load(&self, path: &Path) -> Result<Graph>;
+}
+
+/// Anything a graph can be stored to.
+pub trait GraphSink {
+    /// Store a weighted graph.
+    fn store(&self, graph: &Graph, path: &Path) -> Result<()>;
+}
+
+/// Format selector for the session-level `load`/`store` helpers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// `edgelist`
+    EdgeList,
+    /// `unigraph` (JSON lines)
+    UniGraph,
+    /// `bin`
+    Binary,
+}
+
+impl Format {
+    /// Infer from a file extension.
+    pub fn from_path(path: &Path) -> Format {
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("json") | Some("unigraph") | Some("jsonl") => Format::UniGraph,
+            Some("bin") => Format::Binary,
+            _ => Format::EdgeList,
+        }
+    }
+
+    /// Load `path` in this format.
+    pub fn load(self, path: &Path) -> Result<Graph> {
+        match self {
+            Format::EdgeList => edgelist::EdgeListFormat::default().load(path),
+            Format::UniGraph => unigraph::UniGraphFormat.load(path),
+            Format::Binary => binfmt::BinaryFormat.load(path),
+        }
+    }
+
+    /// Store `graph` to `path` in this format.
+    pub fn store(self, graph: &Graph, path: &Path) -> Result<()> {
+        match self {
+            Format::EdgeList => edgelist::EdgeListFormat::default().store(graph, path),
+            Format::UniGraph => unigraph::UniGraphFormat.store(graph, path),
+            Format::Binary => binfmt::BinaryFormat.store(graph, path),
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn tmp_path(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!(
+        "unigps-test-{}-{}-{name}",
+        std::process::id(),
+        std::thread::current().name().unwrap_or("t").replace("::", "_")
+    ));
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    #[test]
+    fn format_inference() {
+        assert_eq!(Format::from_path(Path::new("g.json")), Format::UniGraph);
+        assert_eq!(Format::from_path(Path::new("g.unigraph")), Format::UniGraph);
+        assert_eq!(Format::from_path(Path::new("g.bin")), Format::Binary);
+        assert_eq!(Format::from_path(Path::new("g.txt")), Format::EdgeList);
+        assert_eq!(Format::from_path(Path::new("g")), Format::EdgeList);
+    }
+
+    /// The M+N argument in action: any format → memory → any other format.
+    #[test]
+    fn cross_format_conversion_preserves_graph() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 0), (0, 2)]);
+        for (src_fmt, ext1) in [(Format::EdgeList, "txt"), (Format::UniGraph, "json"), (Format::Binary, "bin")] {
+            for (dst_fmt, ext2) in [(Format::EdgeList, "txt"), (Format::UniGraph, "json"), (Format::Binary, "bin")] {
+                let p1 = tmp_path(&format!("conv1.{ext1}"));
+                let p2 = tmp_path(&format!("conv2.{ext2}"));
+                src_fmt.store(&g, &p1).unwrap();
+                let loaded = src_fmt.load(&p1).unwrap();
+                dst_fmt.store(&loaded, &p2).unwrap();
+                let back = dst_fmt.load(&p2).unwrap();
+                assert_eq!(back.num_vertices(), g.num_vertices());
+                assert_eq!(back.num_edges(), g.num_edges());
+                let _ = std::fs::remove_file(&p1);
+                let _ = std::fs::remove_file(&p2);
+            }
+        }
+    }
+}

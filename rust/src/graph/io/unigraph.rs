@@ -1,0 +1,189 @@
+//! The UniGraph unified interchange format (GraphSON-like JSON lines).
+//!
+//! One JSON object per line. The first line is a header object; subsequent
+//! lines are vertices (optional — isolated vertices only) and edges:
+//!
+//! ```text
+//! {"type":"header","version":1,"directed":true,"vertices":4,"edges":3}
+//! {"type":"vertex","id":3}
+//! {"type":"edge","src":0,"dst":1,"weight":2.5}
+//! ```
+//!
+//! This is the paper's M+N intermediate format: every backend engine and
+//! every external source converts to/from this single representation.
+
+use super::{GraphSink, GraphSource};
+use crate::error::{Result, UniGpsError};
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// UniGraph JSON-lines format adapter.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UniGraphFormat;
+
+impl GraphSource for UniGraphFormat {
+    fn load(&self, path: &Path) -> Result<Graph> {
+        let file = std::fs::File::open(path)?;
+        let reader = BufReader::new(file);
+        let mut directed = true;
+        let mut declared_vertices: Option<usize> = None;
+        let mut builder: Option<GraphBuilder<f64>> = None;
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let obj = Json::parse(&line)
+                .map_err(|e| UniGpsError::Parse(format!("line {}: {e}", lineno + 1)))?;
+            let ty = obj
+                .get("type")
+                .and_then(|t| t.as_str())
+                .ok_or_else(|| UniGpsError::Parse(format!("line {}: missing type", lineno + 1)))?;
+            match ty {
+                "header" => {
+                    directed = obj.get("directed").and_then(|d| d.as_bool()).unwrap_or(true);
+                    declared_vertices = obj
+                        .get("vertices")
+                        .and_then(|v| v.as_int())
+                        .map(|v| v as usize);
+                    // Stored edges are always explicit (undirected graphs
+                    // were symmetrized before storing), so build as directed
+                    // to avoid double symmetrization; the header's flag is
+                    // provenance only.
+                    builder = Some(GraphBuilder::new(true));
+                }
+                "vertex" => {
+                    let b = builder
+                        .as_mut()
+                        .ok_or_else(|| UniGpsError::Parse("vertex before header".into()))?;
+                    let id = obj
+                        .get("id")
+                        .and_then(|v| v.as_int())
+                        .ok_or_else(|| UniGpsError::Parse(format!("line {}: bad vertex id", lineno + 1)))?;
+                    b.ensure_vertices(id as usize + 1);
+                }
+                "edge" => {
+                    let b = builder
+                        .as_mut()
+                        .ok_or_else(|| UniGpsError::Parse("edge before header".into()))?;
+                    let src = obj
+                        .get("src")
+                        .and_then(|v| v.as_int())
+                        .ok_or_else(|| UniGpsError::Parse(format!("line {}: bad src", lineno + 1)))?;
+                    let dst = obj
+                        .get("dst")
+                        .and_then(|v| v.as_int())
+                        .ok_or_else(|| UniGpsError::Parse(format!("line {}: bad dst", lineno + 1)))?;
+                    let w = obj.get("weight").and_then(|v| v.as_float()).unwrap_or(1.0);
+                    b.add_edge(src as u32, dst as u32, w);
+                }
+                other => {
+                    return Err(UniGpsError::Parse(format!(
+                        "line {}: unknown record type '{other}'",
+                        lineno + 1
+                    )))
+                }
+            }
+        }
+        let mut b = builder.ok_or_else(|| UniGpsError::Parse("missing header".into()))?;
+        if let Some(n) = declared_vertices {
+            b.ensure_vertices(n);
+        }
+        let _ = directed;
+        b.build()
+    }
+}
+
+impl GraphSink for UniGraphFormat {
+    fn store(&self, graph: &Graph, path: &Path) -> Result<()> {
+        let file = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(file);
+        let header = Json::obj(vec![
+            ("type", Json::Str("header".into())),
+            ("version", Json::Int(1)),
+            ("directed", Json::Bool(graph.topology().directed())),
+            ("vertices", Json::Int(graph.num_vertices() as i64)),
+            ("edges", Json::Int(graph.num_edges() as i64)),
+        ]);
+        writeln!(w, "{}", header.to_string())?;
+        let topo = graph.topology();
+        for v in 0..graph.num_vertices() as u32 {
+            // Emit explicit vertex records only for isolated vertices (keeps
+            // files compact; the header carries the total count anyway).
+            if topo.out_degree(v) == 0 && topo.in_degree(v) == 0 {
+                let rec = Json::obj(vec![
+                    ("type", Json::Str("vertex".into())),
+                    ("id", Json::Int(v as i64)),
+                ]);
+                writeln!(w, "{}", rec.to_string())?;
+            }
+            for (eid, dst) in topo.out_edges(v) {
+                let rec = Json::obj(vec![
+                    ("type", Json::Str("edge".into())),
+                    ("src", Json::Int(v as i64)),
+                    ("dst", Json::Int(dst as i64)),
+                    ("weight", Json::Float(*graph.edge_prop(eid))),
+                ]);
+                writeln!(w, "{}", rec.to_string())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tmp_path;
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    #[test]
+    fn roundtrip_with_weights() {
+        let mut b = GraphBuilder::new(true);
+        b.add_edge(0, 1, 2.5);
+        b.add_edge(1, 2, 0.5);
+        b.ensure_vertices(5); // isolated 3, 4
+        let g = b.build().unwrap();
+        let p = tmp_path("ug-rt.json");
+        UniGraphFormat.store(&g, &p).unwrap();
+        let back = UniGraphFormat.load(&p).unwrap();
+        assert_eq!(back.num_vertices(), 5);
+        assert_eq!(back.num_edges(), 2);
+        assert_eq!(*back.edge_prop(0), 2.5);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn header_required() {
+        let p = tmp_path("ug-nohdr.json");
+        std::fs::write(&p, "{\"type\":\"edge\",\"src\":0,\"dst\":1}\n").unwrap();
+        assert!(UniGraphFormat.load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn unknown_type_rejected() {
+        let p = tmp_path("ug-unk.json");
+        std::fs::write(
+            &p,
+            "{\"type\":\"header\",\"version\":1}\n{\"type\":\"mystery\"}\n",
+        )
+        .unwrap();
+        assert!(UniGraphFormat.load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn undirected_graph_stores_symmetrized_edges() {
+        let g = from_pairs(false, &[(0, 1)]);
+        let p = tmp_path("ug-undir.json");
+        UniGraphFormat.store(&g, &p).unwrap();
+        let back = UniGraphFormat.load(&p).unwrap();
+        assert_eq!(back.num_edges(), 2, "both directions stored explicitly");
+        let _ = std::fs::remove_file(&p);
+    }
+}

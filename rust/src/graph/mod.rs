@@ -1,0 +1,154 @@
+//! Property-graph substrate: topology, records, builders, partitioners,
+//! generators, datasets and the unified I/O format.
+
+pub mod builder;
+pub mod csr;
+pub mod datasets;
+pub mod generate;
+pub mod io;
+pub mod partition;
+pub mod record;
+
+use crate::vcprog::VertexId;
+use std::sync::Arc;
+
+pub use builder::GraphBuilder;
+pub use csr::Topology;
+
+/// A property graph: shared immutable topology plus columnar vertex / edge
+/// property arrays (edge properties in CSR order).
+#[derive(Debug, Clone)]
+pub struct PropertyGraph<V, E> {
+    topology: Arc<Topology>,
+    vertex_props: Vec<V>,
+    edge_props: Vec<E>,
+}
+
+/// The session-level default graph type: no vertex input properties, `f64`
+/// edge weights (the paper's demo graphs are weighted edge lists).
+pub type Graph = PropertyGraph<(), f64>;
+
+impl<V, E> PropertyGraph<V, E> {
+    /// Assemble from parts; property arrays must match the topology.
+    pub fn new(topology: Arc<Topology>, vertex_props: Vec<V>, edge_props: Vec<E>) -> Self {
+        assert_eq!(vertex_props.len(), topology.num_vertices());
+        assert_eq!(edge_props.len(), topology.num_edges());
+        PropertyGraph {
+            topology,
+            vertex_props,
+            edge_props,
+        }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.topology.num_vertices()
+    }
+
+    /// Number of stored (directed) edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.topology.num_edges()
+    }
+
+    /// The shared topology.
+    #[inline]
+    pub fn topology(&self) -> &Arc<Topology> {
+        &self.topology
+    }
+
+    /// A vertex's input property.
+    #[inline]
+    pub fn vertex_prop(&self, v: VertexId) -> &V {
+        &self.vertex_props[v as usize]
+    }
+
+    /// All vertex input properties.
+    #[inline]
+    pub fn vertex_props(&self) -> &[V] {
+        &self.vertex_props
+    }
+
+    /// An edge's property by CSR edge id.
+    #[inline]
+    pub fn edge_prop(&self, edge_id: usize) -> &E {
+        &self.edge_props[edge_id]
+    }
+
+    /// All edge properties (CSR order).
+    #[inline]
+    pub fn edge_props(&self) -> &[E] {
+        &self.edge_props
+    }
+
+    /// Map the edge properties, keeping topology and vertex props.
+    pub fn map_edges<F, E2>(&self, f: F) -> PropertyGraph<V, E2>
+    where
+        F: Fn(&E) -> E2,
+        V: Clone,
+    {
+        PropertyGraph {
+            topology: self.topology.clone(),
+            vertex_props: self.vertex_props.clone(),
+            edge_props: self.edge_props.iter().map(f).collect(),
+        }
+    }
+
+    /// Map the vertex properties, keeping topology and edge props.
+    pub fn map_vertices<F, V2>(&self, f: F) -> PropertyGraph<V2, E>
+    where
+        F: Fn(VertexId, &V) -> V2,
+        E: Clone,
+    {
+        PropertyGraph {
+            topology: self.topology.clone(),
+            vertex_props: self
+                .vertex_props
+                .iter()
+                .enumerate()
+                .map(|(i, v)| f(i as VertexId, v))
+                .collect(),
+            edge_props: self.edge_props.clone(),
+        }
+    }
+
+    /// Short human summary, e.g. `Graph{V=1,024, E=8,192, directed}`.
+    pub fn summary(&self) -> String {
+        format!(
+            "Graph{{V={}, E={}, {}}}",
+            crate::util::fmt_count(self.num_vertices() as u64),
+            crate::util::fmt_count(self.num_edges() as u64),
+            if self.topology.directed() { "directed" } else { "undirected" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::builder::from_pairs;
+
+    #[test]
+    fn summary_mentions_counts() {
+        let g = from_pairs(true, &[(0, 1), (1, 2)]);
+        let s = g.summary();
+        assert!(s.contains("V=3"));
+        assert!(s.contains("E=2"));
+        assert!(s.contains("directed"));
+    }
+
+    #[test]
+    fn map_edges_transforms_props() {
+        let g = from_pairs(true, &[(0, 1), (1, 2)]);
+        let g2 = g.map_edges(|w| (*w * 2.0) as i64);
+        assert_eq!(*g2.edge_prop(0), 2);
+        assert_eq!(g2.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn map_vertices_sees_ids() {
+        let g = from_pairs(true, &[(0, 1), (1, 2)]);
+        let g2 = g.map_vertices(|id, _| id as i64);
+        assert_eq!(*g2.vertex_prop(2), 2);
+    }
+}

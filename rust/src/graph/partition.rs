@@ -1,0 +1,295 @@
+//! Vertex partitioning for the simulated distributed runtime.
+//!
+//! The paper's backends partition vertices across cluster machines (Giraph:
+//! hash; Gemini: chunk/range balanced by edges). Our simulated runtime keeps
+//! the same abstraction: a [`Partitioner`] maps each vertex to one of `P`
+//! partitions, each owned by a worker thread.
+
+use crate::graph::csr::Topology;
+use crate::vcprog::VertexId;
+
+/// Partitioning strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// `v % P` — Giraph's default hash partitioning.
+    Hash,
+    /// Contiguous equal-vertex ranges.
+    Range,
+    /// Contiguous ranges balanced by out-degree (Gemini's chunking).
+    EdgeBalanced,
+}
+
+impl PartitionStrategy {
+    /// Parse from a config string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "hash" => Some(PartitionStrategy::Hash),
+            "range" => Some(PartitionStrategy::Range),
+            "edge" | "edge-balanced" => Some(PartitionStrategy::EdgeBalanced),
+            _ => None,
+        }
+    }
+}
+
+/// A concrete vertex→partition assignment.
+#[derive(Debug, Clone)]
+pub struct Partitioner {
+    num_partitions: usize,
+    strategy: PartitionStrategy,
+    /// For range strategies: partition p owns `[bounds[p], bounds[p+1])`.
+    bounds: Vec<usize>,
+}
+
+impl Partitioner {
+    /// Build a partitioner over `topo` with `p` parts.
+    pub fn new(topo: &Topology, p: usize, strategy: PartitionStrategy) -> Self {
+        assert!(p > 0, "need at least one partition");
+        let n = topo.num_vertices();
+        let bounds = match strategy {
+            PartitionStrategy::Hash => Vec::new(),
+            PartitionStrategy::Range => {
+                let mut b = Vec::with_capacity(p + 1);
+                for i in 0..=p {
+                    b.push(i * n / p);
+                }
+                b
+            }
+            PartitionStrategy::EdgeBalanced => {
+                // Greedy sweep: cut when the running edge weight passes the
+                // per-partition share. Each vertex weighs deg + 1 (Gemini's
+                // alpha term) so empty rows still cost something.
+                let total: usize = (0..n).map(|v| topo.out_degree(v as VertexId) + 1).sum();
+                let share = total.div_ceil(p);
+                let mut b = vec![0usize];
+                let mut acc = 0usize;
+                for v in 0..n {
+                    acc += topo.out_degree(v as VertexId) + 1;
+                    if acc >= share * b.len() && b.len() < p {
+                        b.push(v + 1);
+                    }
+                }
+                while b.len() < p {
+                    b.push(n);
+                }
+                b.push(n);
+                b
+            }
+        };
+        Partitioner {
+            num_partitions: p,
+            strategy,
+            bounds,
+        }
+    }
+
+    /// Number of partitions.
+    #[inline]
+    pub fn num_partitions(&self) -> usize {
+        self.num_partitions
+    }
+
+    /// Strategy in use.
+    pub fn strategy(&self) -> PartitionStrategy {
+        self.strategy
+    }
+
+    /// Partition owning vertex `v`.
+    #[inline]
+    pub fn partition_of(&self, v: VertexId) -> usize {
+        match self.strategy {
+            PartitionStrategy::Hash => (v as usize) % self.num_partitions,
+            _ => {
+                // Binary search over bounds.
+                let v = v as usize;
+                match self.bounds.binary_search(&v) {
+                    Ok(i) => i.min(self.num_partitions - 1),
+                    Err(i) => i - 1,
+                }
+            }
+        }
+    }
+
+    /// Iterate the vertices owned by partition `p` (concrete iterator — this
+    /// runs once per superstep per worker in every engine's hot loop).
+    #[inline]
+    pub fn vertices_of(&self, p: usize, num_vertices: usize) -> PartIter {
+        match self.strategy {
+            PartitionStrategy::Hash => PartIter {
+                next: p,
+                end: num_vertices,
+                step: self.num_partitions,
+            },
+            _ => PartIter {
+                next: self.bounds[p],
+                end: self.bounds[p + 1],
+                step: 1,
+            },
+        }
+    }
+
+    /// Dense local index of `v` within its owning partition (0-based,
+    /// contiguous). Used by workers to index their local state arrays.
+    #[inline]
+    pub fn local_index(&self, v: VertexId) -> usize {
+        match self.strategy {
+            PartitionStrategy::Hash => (v as usize) / self.num_partitions,
+            _ => {
+                let p = self.partition_of(v);
+                v as usize - self.bounds[p]
+            }
+        }
+    }
+
+    /// Inverse of [`Partitioner::local_index`]: the global vertex id of the
+    /// `local`-th vertex of partition `p`.
+    #[inline]
+    pub fn global_of(&self, p: usize, local: usize) -> VertexId {
+        match self.strategy {
+            PartitionStrategy::Hash => (local * self.num_partitions + p) as VertexId,
+            _ => (self.bounds[p] + local) as VertexId,
+        }
+    }
+
+    /// Number of vertices owned by partition `p`.
+    pub fn partition_size(&self, p: usize, num_vertices: usize) -> usize {
+        match self.strategy {
+            PartitionStrategy::Hash => {
+                let np = self.num_partitions;
+                if p >= num_vertices {
+                    0
+                } else {
+                    (num_vertices - p).div_ceil(np)
+                }
+            }
+            _ => self.bounds[p + 1] - self.bounds[p],
+        }
+    }
+}
+
+/// Strided vertex iterator over one partition.
+#[derive(Debug, Clone)]
+pub struct PartIter {
+    next: usize,
+    end: usize,
+    step: usize,
+}
+
+impl Iterator for PartIter {
+    type Item = VertexId;
+
+    #[inline]
+    fn next(&mut self) -> Option<VertexId> {
+        if self.next >= self.end {
+            return None;
+        }
+        let v = self.next as VertexId;
+        self.next += self.step;
+        Some(v)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = if self.next >= self.end {
+            0
+        } else {
+            (self.end - self.next).div_ceil(self.step)
+        };
+        (n, Some(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    fn chain(n: usize) -> Topology {
+        let pairs: Vec<_> = (0..n - 1).map(|i| (i as VertexId, (i + 1) as VertexId)).collect();
+        from_pairs(true, &pairs).topology().as_ref().clone()
+    }
+
+    fn check_total_cover(p: &Partitioner, n: usize) {
+        let mut owner = vec![usize::MAX; n];
+        for part in 0..p.num_partitions() {
+            for (local, v) in p.vertices_of(part, n).enumerate() {
+                assert_eq!(owner[v as usize], usize::MAX, "vertex {v} owned twice");
+                owner[v as usize] = part;
+                assert_eq!(p.partition_of(v), part, "partition_of disagrees for {v}");
+                assert_eq!(p.local_index(v), local, "local_index disagrees for {v}");
+                assert_eq!(p.global_of(part, local), v, "global_of disagrees for {v}");
+            }
+        }
+        assert!(owner.iter().all(|&o| o != usize::MAX), "some vertex unowned");
+    }
+
+    #[test]
+    fn hash_covers_all_vertices() {
+        let t = chain(17);
+        let p = Partitioner::new(&t, 4, PartitionStrategy::Hash);
+        check_total_cover(&p, 17);
+    }
+
+    #[test]
+    fn range_covers_all_vertices() {
+        let t = chain(17);
+        let p = Partitioner::new(&t, 4, PartitionStrategy::Range);
+        check_total_cover(&p, 17);
+    }
+
+    #[test]
+    fn edge_balanced_covers_all_vertices() {
+        let t = chain(33);
+        let p = Partitioner::new(&t, 5, PartitionStrategy::EdgeBalanced);
+        check_total_cover(&p, 33);
+    }
+
+    #[test]
+    fn edge_balanced_on_skewed_graph() {
+        // Star: vertex 0 has out-degree 99, everyone else 0.
+        let pairs: Vec<_> = (1..100).map(|i| (0 as VertexId, i as VertexId)).collect();
+        let g = from_pairs(true, &pairs);
+        let p = Partitioner::new(g.topology(), 4, PartitionStrategy::EdgeBalanced);
+        check_total_cover(&p, 100);
+        // The hub's partition should be small in vertex count.
+        let hub_part = p.partition_of(0);
+        assert!(p.partition_size(hub_part, 100) < 50);
+    }
+
+    #[test]
+    fn partition_sizes_sum_to_n() {
+        let t = chain(29);
+        for strat in [
+            PartitionStrategy::Hash,
+            PartitionStrategy::Range,
+            PartitionStrategy::EdgeBalanced,
+        ] {
+            let p = Partitioner::new(&t, 3, strat);
+            let sum: usize = (0..3).map(|i| p.partition_size(i, 29)).sum();
+            assert_eq!(sum, 29, "{strat:?}");
+        }
+    }
+
+    #[test]
+    fn single_partition_owns_everything() {
+        let t = chain(5);
+        let p = Partitioner::new(&t, 1, PartitionStrategy::Hash);
+        assert_eq!(p.vertices_of(0, 5).count(), 5);
+    }
+
+    #[test]
+    fn more_partitions_than_vertices() {
+        let t = chain(3);
+        let p = Partitioner::new(&t, 8, PartitionStrategy::Range);
+        check_total_cover(&p, 3);
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(PartitionStrategy::parse("hash"), Some(PartitionStrategy::Hash));
+        assert_eq!(PartitionStrategy::parse("range"), Some(PartitionStrategy::Range));
+        assert_eq!(
+            PartitionStrategy::parse("edge-balanced"),
+            Some(PartitionStrategy::EdgeBalanced)
+        );
+        assert_eq!(PartitionStrategy::parse("nope"), None);
+    }
+}

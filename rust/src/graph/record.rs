@@ -1,0 +1,510 @@
+//! Dynamic records — the paper's property/message data model (§III-B).
+//!
+//! VCProg adopts the property graph as its data model: every vertex/edge
+//! property and every message is a *record* with a fixed [`Schema`] shared by
+//! all records of that kind. The paper's Python demo builds records with
+//! `builder.setLong("distance", 0)`; [`RecordBuilder`] mirrors that API.
+//!
+//! Records also define the **wire format** used by the IPC isolation
+//! mechanism (§IV-C): `encode`/`decode` produce the row-based serialization
+//! the paper describes, used identically by the zero-copy shared-memory
+//! channel and the socket RPC baseline.
+
+use crate::error::{Result, UniGpsError};
+use std::fmt;
+use std::sync::Arc;
+
+/// Scalar field types supported by the record system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldType {
+    /// 64-bit signed integer (`setLong`).
+    Long,
+    /// 64-bit float (`setDouble`).
+    Double,
+    /// Boolean.
+    Bool,
+    /// UTF-8 string.
+    Str,
+}
+
+impl FieldType {
+    /// Single-byte tag used in the wire format.
+    pub fn tag(self) -> u8 {
+        match self {
+            FieldType::Long => 0,
+            FieldType::Double => 1,
+            FieldType::Bool => 2,
+            FieldType::Str => 3,
+        }
+    }
+
+    /// Inverse of [`FieldType::tag`].
+    pub fn from_tag(tag: u8) -> Result<Self> {
+        Ok(match tag {
+            0 => FieldType::Long,
+            1 => FieldType::Double,
+            2 => FieldType::Bool,
+            3 => FieldType::Str,
+            t => return Err(UniGpsError::Record(format!("bad field-type tag {t}"))),
+        })
+    }
+}
+
+/// A dynamically-typed field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// 64-bit signed integer.
+    Long(i64),
+    /// 64-bit float.
+    Double(f64),
+    /// Boolean.
+    Bool(bool),
+    /// UTF-8 string.
+    Str(String),
+}
+
+impl Value {
+    /// The type of this value.
+    pub fn field_type(&self) -> FieldType {
+        match self {
+            Value::Long(_) => FieldType::Long,
+            Value::Double(_) => FieldType::Double,
+            Value::Bool(_) => FieldType::Bool,
+            Value::Str(_) => FieldType::Str,
+        }
+    }
+
+    /// As i64, if a Long.
+    pub fn as_long(&self) -> Option<i64> {
+        match self {
+            Value::Long(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As f64 (accepts Long).
+    pub fn as_double(&self) -> Option<f64> {
+        match self {
+            Value::Double(v) => Some(*v),
+            Value::Long(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Long(v) => write!(f, "{v}"),
+            Value::Double(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Str(v) => write!(f, "{v}"),
+        }
+    }
+}
+
+/// A record schema: ordered, named, typed fields. All vertex properties share
+/// one schema; all edge properties share one; all messages share one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schema {
+    fields: Vec<(String, FieldType)>,
+}
+
+impl Schema {
+    /// Build a schema from `(name, type)` pairs.
+    pub fn new(fields: Vec<(&str, FieldType)>) -> Arc<Self> {
+        Arc::new(Schema {
+            fields: fields.into_iter().map(|(n, t)| (n.to_string(), t)).collect(),
+        })
+    }
+
+    /// Empty schema (e.g. unweighted edges).
+    pub fn empty() -> Arc<Self> {
+        Arc::new(Schema { fields: Vec::new() })
+    }
+
+    /// Number of fields.
+    pub fn len(&self) -> usize {
+        self.fields.len()
+    }
+
+    /// True when the schema has no fields.
+    pub fn is_empty(&self) -> bool {
+        self.fields.is_empty()
+    }
+
+    /// Index of a field by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.fields.iter().position(|(n, _)| n == name)
+    }
+
+    /// Field name/type by index.
+    pub fn field(&self, idx: usize) -> (&str, FieldType) {
+        let (n, t) = &self.fields[idx];
+        (n.as_str(), *t)
+    }
+
+    /// Iterate `(name, type)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, FieldType)> {
+        self.fields.iter().map(|(n, t)| (n.as_str(), *t))
+    }
+
+    /// Serialize the schema itself (used in artifact/IO headers).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.fields.len() as u32).to_le_bytes());
+        for (name, ty) in &self.fields {
+            out.push(ty.tag());
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+        }
+    }
+
+    /// Deserialize a schema; advances `pos`.
+    pub fn decode(buf: &[u8], pos: &mut usize) -> Result<Arc<Schema>> {
+        let n = read_u32(buf, pos)? as usize;
+        let mut fields = Vec::with_capacity(n);
+        for _ in 0..n {
+            let tag = read_u8(buf, pos)?;
+            let ty = FieldType::from_tag(tag)?;
+            let len = read_u32(buf, pos)? as usize;
+            let name = read_str(buf, pos, len)?;
+            fields.push((name, ty));
+        }
+        Ok(Arc::new(Schema { fields }))
+    }
+}
+
+/// A record instance: values laid out in schema order.
+#[derive(Clone, PartialEq)]
+pub struct Record {
+    schema: Arc<Schema>,
+    values: Vec<Value>,
+}
+
+impl fmt::Debug for Record {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Record{{")?;
+        for (i, (name, _)) in self.schema.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{name}: {}", self.values[i])?;
+        }
+        write!(f, "}}")
+    }
+}
+
+impl Record {
+    /// The record's schema.
+    pub fn schema(&self) -> &Arc<Schema> {
+        &self.schema
+    }
+
+    /// Get a field by name.
+    pub fn get(&self, name: &str) -> Result<&Value> {
+        let idx = self
+            .schema
+            .index_of(name)
+            .ok_or_else(|| UniGpsError::Record(format!("no field '{name}'")))?;
+        Ok(&self.values[idx])
+    }
+
+    /// Get a Long field (paper: `getLong`).
+    pub fn get_long(&self, name: &str) -> Result<i64> {
+        self.get(name)?
+            .as_long()
+            .ok_or_else(|| UniGpsError::Record(format!("field '{name}' is not Long")))
+    }
+
+    /// Get a Double field, accepting Long (paper: `getDouble`).
+    pub fn get_double(&self, name: &str) -> Result<f64> {
+        self.get(name)?
+            .as_double()
+            .ok_or_else(|| UniGpsError::Record(format!("field '{name}' is not Double")))
+    }
+
+    /// Set a field in place (used by `vertexCompute`-style updates).
+    pub fn set(&mut self, name: &str, value: Value) -> Result<()> {
+        let idx = self
+            .schema
+            .index_of(name)
+            .ok_or_else(|| UniGpsError::Record(format!("no field '{name}'")))?;
+        let expect = self.schema.field(idx).1;
+        if value.field_type() != expect {
+            return Err(UniGpsError::Record(format!(
+                "type mismatch for '{name}': {:?} vs {:?}",
+                value.field_type(),
+                expect
+            )));
+        }
+        self.values[idx] = value;
+        Ok(())
+    }
+
+    /// Set a Long field (paper: `setLong`).
+    pub fn set_long(&mut self, name: &str, v: i64) -> Result<()> {
+        self.set(name, Value::Long(v))
+    }
+
+    /// Set a Double field (paper: `setDouble`).
+    pub fn set_double(&mut self, name: &str, v: f64) -> Result<()> {
+        self.set(name, Value::Double(v))
+    }
+
+    /// Values in schema order.
+    pub fn values(&self) -> &[Value] {
+        &self.values
+    }
+
+    /// Row-based wire encoding (schema is assumed known by both sides —
+    /// exactly the paper's row-based serialization format).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        for v in &self.values {
+            match v {
+                Value::Long(x) => out.extend_from_slice(&x.to_le_bytes()),
+                Value::Double(x) => out.extend_from_slice(&x.to_le_bytes()),
+                Value::Bool(x) => out.push(*x as u8),
+                Value::Str(s) => {
+                    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                    out.extend_from_slice(s.as_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode a record of `schema` from `buf`, advancing `pos`.
+    pub fn decode(schema: &Arc<Schema>, buf: &[u8], pos: &mut usize) -> Result<Record> {
+        let mut values = Vec::with_capacity(schema.len());
+        for (_, ty) in schema.iter() {
+            let v = match ty {
+                FieldType::Long => Value::Long(i64::from_le_bytes(read_arr(buf, pos)?)),
+                FieldType::Double => Value::Double(f64::from_le_bytes(read_arr(buf, pos)?)),
+                FieldType::Bool => Value::Bool(read_u8(buf, pos)? != 0),
+                FieldType::Str => {
+                    let len = read_u32(buf, pos)? as usize;
+                    Value::Str(read_str(buf, pos, len)?)
+                }
+            };
+            values.push(v);
+        }
+        Ok(Record {
+            schema: schema.clone(),
+            values,
+        })
+    }
+}
+
+/// Fluent builder mirroring the paper's `vertexBuilder.setLong(...)...build()`
+/// API (Fig 3).
+#[derive(Debug, Clone)]
+pub struct RecordBuilder {
+    schema: Arc<Schema>,
+    values: Vec<Option<Value>>,
+}
+
+impl RecordBuilder {
+    /// New builder over `schema`.
+    pub fn new(schema: Arc<Schema>) -> Self {
+        let n = schema.len();
+        RecordBuilder {
+            schema,
+            values: vec![None; n],
+        }
+    }
+
+    /// Set a Long field.
+    pub fn set_long(mut self, name: &str, v: i64) -> Self {
+        self.put(name, Value::Long(v));
+        self
+    }
+
+    /// Set a Double field.
+    pub fn set_double(mut self, name: &str, v: f64) -> Self {
+        self.put(name, Value::Double(v));
+        self
+    }
+
+    /// Set a Bool field.
+    pub fn set_bool(mut self, name: &str, v: bool) -> Self {
+        self.put(name, Value::Bool(v));
+        self
+    }
+
+    /// Set a Str field.
+    pub fn set_str(mut self, name: &str, v: &str) -> Self {
+        self.put(name, Value::Str(v.to_string()));
+        self
+    }
+
+    fn put(&mut self, name: &str, v: Value) {
+        let idx = self
+            .schema
+            .index_of(name)
+            .unwrap_or_else(|| panic!("no field '{name}' in schema"));
+        assert_eq!(
+            self.schema.field(idx).1,
+            v.field_type(),
+            "type mismatch for field '{name}'"
+        );
+        self.values[idx] = Some(v);
+    }
+
+    /// Finish the record; unset fields get type-appropriate zero values.
+    pub fn build(self) -> Record {
+        let values = self
+            .values
+            .into_iter()
+            .enumerate()
+            .map(|(i, v)| {
+                v.unwrap_or(match self.schema.field(i).1 {
+                    FieldType::Long => Value::Long(0),
+                    FieldType::Double => Value::Double(0.0),
+                    FieldType::Bool => Value::Bool(false),
+                    FieldType::Str => Value::Str(String::new()),
+                })
+            })
+            .collect();
+        Record {
+            schema: self.schema,
+            values,
+        }
+    }
+}
+
+// --- byte-reading helpers -------------------------------------------------
+
+fn read_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    let b = *buf
+        .get(*pos)
+        .ok_or_else(|| UniGpsError::Record("truncated buffer".into()))?;
+    *pos += 1;
+    Ok(b)
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    let arr: [u8; 4] = read_arr(buf, pos)?;
+    Ok(u32::from_le_bytes(arr))
+}
+
+fn read_arr<const N: usize>(buf: &[u8], pos: &mut usize) -> Result<[u8; N]> {
+    if *pos + N > buf.len() {
+        return Err(UniGpsError::Record("truncated buffer".into()));
+    }
+    let mut arr = [0u8; N];
+    arr.copy_from_slice(&buf[*pos..*pos + N]);
+    *pos += N;
+    Ok(arr)
+}
+
+fn read_str(buf: &[u8], pos: &mut usize, len: usize) -> Result<String> {
+    if *pos + len > buf.len() {
+        return Err(UniGpsError::Record("truncated buffer".into()));
+    }
+    let s = std::str::from_utf8(&buf[*pos..*pos + len])
+        .map_err(|_| UniGpsError::Record("invalid utf8".into()))?
+        .to_string();
+    *pos += len;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sssp_schema() -> Arc<Schema> {
+        Schema::new(vec![("vid", FieldType::Long), ("distance", FieldType::Long)])
+    }
+
+    #[test]
+    fn builder_matches_paper_api() {
+        let schema = sssp_schema();
+        let rec = RecordBuilder::new(schema)
+            .set_long("vid", 3)
+            .set_long("distance", 42)
+            .build();
+        assert_eq!(rec.get_long("vid").unwrap(), 3);
+        assert_eq!(rec.get_long("distance").unwrap(), 42);
+    }
+
+    #[test]
+    fn unset_fields_default_to_zero() {
+        let schema = Schema::new(vec![
+            ("a", FieldType::Long),
+            ("b", FieldType::Double),
+            ("c", FieldType::Bool),
+            ("d", FieldType::Str),
+        ]);
+        let rec = RecordBuilder::new(schema).build();
+        assert_eq!(rec.get_long("a").unwrap(), 0);
+        assert_eq!(rec.get_double("b").unwrap(), 0.0);
+        assert_eq!(rec.get("c").unwrap(), &Value::Bool(false));
+        assert_eq!(rec.get("d").unwrap(), &Value::Str(String::new()));
+    }
+
+    #[test]
+    fn set_checks_types() {
+        let schema = sssp_schema();
+        let mut rec = RecordBuilder::new(schema).build();
+        assert!(rec.set_long("distance", 5).is_ok());
+        assert!(rec.set_double("distance", 1.0).is_err());
+        assert!(rec.set_long("nope", 1).is_err());
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        let rec = RecordBuilder::new(sssp_schema()).build();
+        assert!(rec.get_long("missing").is_err());
+        assert!(rec.get_double("vid").is_ok(), "long should widen to double");
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let schema = Schema::new(vec![
+            ("x", FieldType::Long),
+            ("y", FieldType::Double),
+            ("ok", FieldType::Bool),
+            ("tag", FieldType::Str),
+        ]);
+        let rec = RecordBuilder::new(schema.clone())
+            .set_long("x", -99)
+            .set_double("y", 2.75)
+            .set_bool("ok", true)
+            .set_str("tag", "héllo")
+            .build();
+        let mut buf = Vec::new();
+        rec.encode(&mut buf);
+        let mut pos = 0;
+        let back = Record::decode(&schema, &buf, &mut pos).unwrap();
+        assert_eq!(pos, buf.len());
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn schema_roundtrip() {
+        let schema = Schema::new(vec![("vid", FieldType::Long), ("r", FieldType::Double)]);
+        let mut buf = Vec::new();
+        schema.encode(&mut buf);
+        let mut pos = 0;
+        let back = Schema::decode(&buf, &mut pos).unwrap();
+        assert_eq!(*back, *schema);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let schema = sssp_schema();
+        let rec = RecordBuilder::new(schema.clone()).set_long("vid", 1).build();
+        let mut buf = Vec::new();
+        rec.encode(&mut buf);
+        buf.truncate(buf.len() - 1);
+        let mut pos = 0;
+        assert!(Record::decode(&schema, &buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn debug_format_readable() {
+        let rec = RecordBuilder::new(sssp_schema()).set_long("vid", 7).build();
+        let s = format!("{rec:?}");
+        assert!(s.contains("vid: 7"));
+    }
+}

@@ -1,0 +1,77 @@
+//! Execution-environment isolation via interprocess communication (§IV-C).
+//!
+//! The paper's mechanism lets Java/C++ engines call user-defined VCProg
+//! methods living in a separate Python runner process. Here the runner is a
+//! separate *UniGPS* process (or thread, for tests) hosting the program
+//! object, and the engine workers call the five VCProg methods through an
+//! RPC channel:
+//!
+//! * [`zerocopy`] — the paper's contribution: a **memory-mapped shared
+//!   buffer** (Fig 7) with client/server flags, busy-wait + thread-yield
+//!   synchronization, zero data copies between user spaces and no syscalls
+//!   per call.
+//! * [`socket_rpc`] — the baseline: a Unix-domain-socket RPC with
+//!   length-prefixed frames, paying the syscall + kernel-copy costs the
+//!   paper attributes to gRPC (Fig 8d).
+//!
+//! [`remote_program::RemoteVCProg`] implements [`crate::vcprog::VCProg`] by
+//! proxying the hot methods over a channel, so *any* engine transparently
+//! runs isolated programs — the paper's transparency claim. [`server`]
+//! hosts the program side; [`protocol`] defines the wire format shared by
+//! both transports.
+
+pub mod protocol;
+pub mod remote_program;
+pub mod server;
+pub mod shm;
+pub mod socket_rpc;
+pub mod zerocopy;
+
+use crate::error::Result;
+
+/// A synchronous RPC channel: one request in flight at a time.
+pub trait RpcChannel: Send {
+    /// Invoke method `method` with `payload`, returning the response bytes.
+    fn call(&mut self, method: u32, payload: &[u8]) -> Result<Vec<u8>>;
+}
+
+/// Transport selection for benches/CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Transport {
+    /// Zero-copy shared-memory channel (the paper's optimized IPC).
+    ZeroCopyShm,
+    /// Unix-domain-socket RPC (the gRPC stand-in).
+    Socket,
+}
+
+impl Transport {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "shm" | "zerocopy" => Some(Transport::ZeroCopyShm),
+            "socket" | "grpc" => Some(Transport::Socket),
+            _ => None,
+        }
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::ZeroCopyShm => "zerocopy-shm",
+            Transport::Socket => "socket-rpc",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_parse() {
+        assert_eq!(Transport::parse("shm"), Some(Transport::ZeroCopyShm));
+        assert_eq!(Transport::parse("grpc"), Some(Transport::Socket));
+        assert_eq!(Transport::parse("smoke-signals"), None);
+        assert_eq!(Transport::ZeroCopyShm.name(), "zerocopy-shm");
+    }
+}

@@ -1,0 +1,118 @@
+//! IPC wire protocol shared by both transports.
+//!
+//! Method indices for the five VCProg methods plus control methods, and the
+//! request/response payload encodings (built on the row-based
+//! [`crate::vcprog::adapter::Wire`] codecs).
+
+use crate::error::{Result, UniGpsError};
+
+/// Method indices (the paper's "IPC method index" field of Fig 7).
+pub mod method {
+    /// Instantiate the program object from a spec string (the stand-in for
+    /// deserializing the pickled Python object the paper uploads to HDFS).
+    pub const INIT_PROGRAM: u32 = 0;
+    /// Fetch the global empty message (called once; cached client-side).
+    pub const EMPTY_MESSAGE: u32 = 1;
+    /// `initVertexAttr(id, out_degree, input)`.
+    pub const INIT_VERTEX: u32 = 2;
+    /// `mergeMessage(a, b)`.
+    pub const MERGE: u32 = 3;
+    /// `vertexCompute(prop, msg, iter)`.
+    pub const COMPUTE: u32 = 4;
+    /// `emitMessage(src, dst, src_prop, edge_prop)`.
+    pub const EMIT: u32 = 5;
+    /// Liveness probe; echoes the payload.
+    pub const PING: u32 = 6;
+    /// Orderly shutdown of the server loop.
+    pub const SHUTDOWN: u32 = 7;
+    /// `emitToEdges(src, src_prop, [(dst, edge_prop)...])` — one round-trip
+    /// for a vertex's whole scatter (the paper's pipelined-RPC future work).
+    pub const EMIT_BATCH: u32 = 8;
+}
+
+/// Response status codes.
+pub mod status {
+    /// Success.
+    pub const OK: u32 = 0;
+    /// Server-side error; payload is a UTF-8 message.
+    pub const ERR: u32 = 1;
+}
+
+/// Append a length-prefixed byte slice.
+pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+/// Read a length-prefixed byte slice.
+pub fn get_bytes<'a>(buf: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
+    if *pos + 4 > buf.len() {
+        return Err(UniGpsError::Ipc("truncated frame (len)".into()));
+    }
+    let len = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap()) as usize;
+    *pos += 4;
+    if *pos + len > buf.len() {
+        return Err(UniGpsError::Ipc("truncated frame (body)".into()));
+    }
+    let s = &buf[*pos..*pos + len];
+    *pos += len;
+    Ok(s)
+}
+
+/// Append a `u32`.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read a `u32`.
+pub fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    if *pos + 4 > buf.len() {
+        return Err(UniGpsError::Ipc("truncated frame (u32)".into()));
+    }
+    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+/// Append a `u64`.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Read a `u64`.
+pub fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    if *pos + 8 > buf.len() {
+        return Err(UniGpsError::Ipc("truncated frame (u64)".into()));
+    }
+    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 7);
+        put_bytes(&mut buf, b"hello");
+        put_u64(&mut buf, 1 << 40);
+        let mut pos = 0;
+        assert_eq!(get_u32(&buf, &mut pos).unwrap(), 7);
+        assert_eq!(get_bytes(&buf, &mut pos).unwrap(), b"hello");
+        assert_eq!(get_u64(&buf, &mut pos).unwrap(), 1 << 40);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, b"abcdef");
+        let mut pos = 0;
+        assert!(get_bytes(&buf[..6], &mut pos).is_err());
+        let mut pos = 0;
+        assert!(get_u64(&buf[..3], &mut pos).is_err());
+    }
+}

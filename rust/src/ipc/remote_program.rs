@@ -1,0 +1,425 @@
+//! `RemoteVCProg` — a [`VCProg`] whose hot methods execute in the isolated
+//! runner, plus the host that launches runner processes/threads.
+//!
+//! This is the client side of Fig 6: the engine worker holds an IPC client
+//! per worker (the paper launches one dual runner process per worker) and
+//! every `init/merge/compute/emit` becomes a remote call. `empty_message` is
+//! fetched once at connection time and cached (the paper defines it as a
+//! global read-only record); `output`/`output_fields` run locally on a
+//! shadow instance — they are post-processing, not on the iteration hot
+//! path.
+
+use crate::error::{Result, UniGpsError};
+use crate::ipc::protocol::{get_bytes, get_u32, method, put_bytes, put_u32, put_u64};
+use crate::ipc::server::serve;
+use crate::ipc::socket_rpc::SocketClient;
+use crate::ipc::zerocopy::{WaitStrategy, ZeroCopyClient, DEFAULT_BUF};
+use crate::ipc::{RpcChannel, Transport};
+use crate::vcprog::adapter::{from_bytes, to_bytes, Wire};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Locate the `unigps` binary to spawn as the runner process. Examples and
+/// test binaries live under `target/<profile>/{examples,deps}/`, so
+/// `current_exe()` is usually *not* the CLI; search `UNIGPS_BIN`, then the
+/// exe itself, then `unigps` in the exe's directory and its ancestors.
+fn resolve_unigps_binary() -> Result<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("UNIGPS_BIN") {
+        let p = std::path::PathBuf::from(p);
+        if p.is_file() {
+            return Ok(p);
+        }
+    }
+    let exe = std::env::current_exe()?;
+    if exe.file_stem().and_then(|s| s.to_str()) == Some("unigps") {
+        return Ok(exe);
+    }
+    let mut dir = exe.parent();
+    for _ in 0..3 {
+        if let Some(d) = dir {
+            let cand = d.join("unigps");
+            if cand.is_file() {
+                return Ok(cand);
+            }
+            dir = d.parent();
+        }
+    }
+    Err(UniGpsError::ipc(
+        "cannot locate the `unigps` binary for runner processes; \
+         build it (`cargo build --release`) or set UNIGPS_BIN",
+    ))
+}
+
+/// How the runner side is hosted.
+pub enum RunnerHost {
+    /// Background threads inside this process (tests, deterministic benches;
+    /// shares the exact channel code with the process mode).
+    Threads(Vec<std::thread::JoinHandle<()>>),
+    /// Real child processes (`unigps ipc-server ...`) — the paper's model.
+    Processes(Vec<std::process::Child>),
+}
+
+/// A VCProg proxy executing remotely over `C` channels (one per worker).
+pub struct RemoteVCProg<P: VCProg> {
+    shadow: P,
+    channels: Vec<Mutex<Box<dyn RpcChannel>>>,
+    next: AtomicUsize,
+    calls: AtomicU64,
+    cached_empty: P::Msg,
+    host: Mutex<Option<RunnerHost>>,
+    paths: Vec<std::path::PathBuf>,
+    transport: Transport,
+    batch_emit: bool,
+}
+
+impl<P> RemoteVCProg<P>
+where
+    P: VCProg,
+    P::In: Wire,
+    P::VProp: Wire,
+    P::EProp: Wire,
+    P::Msg: Wire,
+{
+    /// Launch `workers` runners (threads or processes) for `spec`, connect a
+    /// channel to each, initialize the remote program, and return the proxy.
+    /// `shadow` must be the same program the spec names — it serves the
+    /// non-hot methods locally.
+    pub fn launch(
+        shadow: P,
+        spec: &str,
+        workers: usize,
+        transport: Transport,
+        in_process: bool,
+    ) -> Result<Self> {
+        let workers = workers.max(1);
+        let mut channels: Vec<Mutex<Box<dyn RpcChannel>>> = Vec::with_capacity(workers);
+        let mut paths = Vec::with_capacity(workers);
+        let host = if in_process {
+            let mut handles = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let path = crate::ipc::shm::ShmMap::unique_path(&format!("runner-{w}"));
+                paths.push(path.clone());
+                let t = transport;
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) = serve(t, &path, DEFAULT_BUF) {
+                        eprintln!("runner thread error: {e}");
+                    }
+                }));
+            }
+            RunnerHost::Threads(handles)
+        } else {
+            let exe = resolve_unigps_binary()?;
+            let mut children = Vec::with_capacity(workers);
+            for w in 0..workers {
+                let path = crate::ipc::shm::ShmMap::unique_path(&format!("runner-{w}"));
+                paths.push(path.clone());
+                let child = std::process::Command::new(&exe)
+                    .arg("ipc-server")
+                    .arg("--transport")
+                    .arg(match transport {
+                        Transport::ZeroCopyShm => "shm",
+                        Transport::Socket => "socket",
+                    })
+                    .arg("--path")
+                    .arg(&path)
+                    .spawn()
+                    .map_err(|e| UniGpsError::ipc(format!("spawn runner: {e}")))?;
+                children.push(child);
+            }
+            RunnerHost::Processes(children)
+        };
+
+        for path in &paths {
+            let mut ch: Box<dyn RpcChannel> = match transport {
+                Transport::ZeroCopyShm => Box::new(ZeroCopyClient::create(
+                    path,
+                    DEFAULT_BUF,
+                    WaitStrategy::BusyYield,
+                )?),
+                Transport::Socket => Box::new(SocketClient::connect(path)?),
+            };
+            ch.call(method::INIT_PROGRAM, spec.as_bytes())?;
+            channels.push(Mutex::new(ch));
+        }
+
+        // Fetch and cache the global empty message once.
+        let empty_bytes = channels[0]
+            .lock()
+            .unwrap()
+            .call(method::EMPTY_MESSAGE, &[])?;
+        let cached_empty: P::Msg = from_bytes(&empty_bytes)?;
+
+        Ok(RemoteVCProg {
+            shadow,
+            channels,
+            next: AtomicUsize::new(0),
+            calls: AtomicU64::new(0),
+            cached_empty,
+            host: Mutex::new(Some(host)),
+            paths,
+            transport,
+            batch_emit: true,
+        })
+    }
+
+    /// Toggle the pipelined emit (one EMIT_BATCH round-trip per vertex
+    /// instead of one EMIT per edge). On by default; the Fig 8d ablation
+    /// turns it off to measure the paper's per-call baseline.
+    pub fn set_batch_emit(&mut self, on: bool) {
+        self.batch_emit = on;
+    }
+
+}
+
+impl<P: VCProg> RemoteVCProg<P> {
+    /// Total remote calls made (the Fig 8d overhead driver).
+    pub fn remote_calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Round-robin a channel; falls through to the next on contention so
+    /// workers rarely block each other.
+    fn with_channel<T>(&self, f: impl FnOnce(&mut dyn RpcChannel) -> Result<T>) -> Result<T> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        let n = self.channels.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        for i in 0..n {
+            if let Ok(mut guard) = self.channels[(start + i) % n].try_lock() {
+                return f(guard.as_mut());
+            }
+        }
+        // All busy: block on the designated one.
+        let mut guard = self.channels[start].lock().unwrap();
+        f(guard.as_mut())
+    }
+
+    /// Shut the runners down (also invoked on drop).
+    pub fn shutdown(&self) {
+        for ch in &self.channels {
+            if let Ok(mut guard) = ch.lock() {
+                let _ = guard.call(method::SHUTDOWN, &[]);
+            }
+        }
+        if let Some(host) = self.host.lock().unwrap().take() {
+            match host {
+                RunnerHost::Threads(hs) => {
+                    for h in hs {
+                        let _ = h.join();
+                    }
+                }
+                RunnerHost::Processes(mut cs) => {
+                    for c in cs.iter_mut() {
+                        let _ = c.wait();
+                    }
+                }
+            }
+        }
+        if self.transport == Transport::Socket {
+            for p in &self.paths {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+    }
+}
+
+impl<P: VCProg> Drop for RemoteVCProg<P> {
+    fn drop(&mut self) {
+        if self.host.lock().map(|h| h.is_some()).unwrap_or(false) {
+            self.shutdown();
+        }
+    }
+}
+
+impl<P> VCProg for RemoteVCProg<P>
+where
+    P: VCProg,
+    P::In: Wire,
+    P::VProp: Wire,
+    P::EProp: Wire,
+    P::Msg: Wire,
+{
+    type In = P::In;
+    type VProp = P::VProp;
+    type EProp = P::EProp;
+    type Msg = P::Msg;
+
+    fn init_vertex_attr(&self, id: VertexId, out_degree: usize, input: &P::In) -> P::VProp {
+        let mut req = Vec::new();
+        put_u32(&mut req, id);
+        put_u64(&mut req, out_degree as u64);
+        put_bytes(&mut req, &to_bytes(input));
+        let resp = self
+            .with_channel(|ch| ch.call(method::INIT_VERTEX, &req))
+            .expect("remote init_vertex_attr");
+        from_bytes(&resp).expect("decode vprop")
+    }
+
+    fn empty_message(&self) -> P::Msg {
+        self.cached_empty.clone()
+    }
+
+    fn merge_message(&self, a: &P::Msg, b: &P::Msg) -> P::Msg {
+        let mut req = Vec::new();
+        put_bytes(&mut req, &to_bytes(a));
+        put_bytes(&mut req, &to_bytes(b));
+        let resp = self
+            .with_channel(|ch| ch.call(method::MERGE, &req))
+            .expect("remote merge_message");
+        from_bytes(&resp).expect("decode msg")
+    }
+
+    fn vertex_compute(&self, prop: &P::VProp, msg: &P::Msg, iter: Iteration) -> (P::VProp, bool) {
+        let mut req = Vec::new();
+        put_u32(&mut req, iter);
+        put_bytes(&mut req, &to_bytes(prop));
+        put_bytes(&mut req, &to_bytes(msg));
+        let resp = self
+            .with_channel(|ch| ch.call(method::COMPUTE, &req))
+            .expect("remote vertex_compute");
+        let mut pos = 0;
+        let active = get_u32(&resp, &mut pos).expect("decode active") != 0;
+        let prop_bytes = get_bytes(&resp, &mut pos).expect("decode prop bytes");
+        (from_bytes(prop_bytes).expect("decode vprop"), active)
+    }
+
+    fn emit_message(
+        &self,
+        src: VertexId,
+        dst: VertexId,
+        src_prop: &P::VProp,
+        edge_prop: &P::EProp,
+    ) -> Option<P::Msg> {
+        let mut req = Vec::new();
+        put_u32(&mut req, src);
+        put_u32(&mut req, dst);
+        put_bytes(&mut req, &to_bytes(src_prop));
+        put_bytes(&mut req, &to_bytes(edge_prop));
+        let resp = self
+            .with_channel(|ch| ch.call(method::EMIT, &req))
+            .expect("remote emit_message");
+        let mut pos = 0;
+        let has = get_u32(&resp, &mut pos).expect("decode emit flag");
+        if has == 0 {
+            None
+        } else {
+            let m = get_bytes(&resp, &mut pos).expect("decode msg bytes");
+            Some(from_bytes(m).expect("decode msg"))
+        }
+    }
+
+    fn emit_to_edges(
+        &self,
+        src: VertexId,
+        src_prop: &P::VProp,
+        edges: &[(VertexId, &P::EProp)],
+    ) -> Vec<(VertexId, P::Msg)> {
+        let mut req = Vec::new();
+        put_u32(&mut req, src);
+        put_bytes(&mut req, &to_bytes(src_prop));
+        put_u32(&mut req, edges.len() as u32);
+        for (dst, ep) in edges {
+            put_u32(&mut req, *dst);
+            put_bytes(&mut req, &to_bytes(*ep));
+        }
+        let resp = self
+            .with_channel(|ch| ch.call(method::EMIT_BATCH, &req))
+            .expect("remote emit_to_edges");
+        let mut pos = 0;
+        let count = get_u32(&resp, &mut pos).expect("decode count") as usize;
+        let mut out = Vec::with_capacity(count);
+        for _ in 0..count {
+            let dst = get_u32(&resp, &mut pos).expect("decode dst");
+            let m = get_bytes(&resp, &mut pos).expect("decode msg bytes");
+            out.push((dst, from_bytes(m).expect("decode msg")));
+        }
+        out
+    }
+
+    fn prefers_batch_emit(&self) -> bool {
+        self.batch_emit
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, crate::graph::record::FieldType)> {
+        self.shadow.output_fields()
+    }
+
+    fn output(&self, id: VertexId, prop: &P::VProp) -> Vec<crate::graph::record::Value> {
+        self.shadow.output(id, prop)
+    }
+
+    fn name(&self) -> &str {
+        self.shadow.name()
+    }
+
+    fn combinable(&self) -> bool {
+        self.shadow.combinable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{run_typed, EngineKind, RunOptions};
+    use crate::graph::builder::from_pairs;
+    use crate::vcprog::programs::SsspBellmanFord;
+
+    fn check_transport(transport: Transport) {
+        let g = from_pairs(true, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let remote =
+            RemoteVCProg::launch(SsspBellmanFord::new(0), "sssp root=0", 2, transport, true)
+                .unwrap();
+        let opts = RunOptions::default().with_workers(2);
+        let r = run_typed(EngineKind::Pregel, &g, &remote, &opts).unwrap();
+        assert_eq!(r.props, vec![0, 1, 1, 2]);
+        assert!(remote.remote_calls() > 0);
+        remote.shutdown();
+    }
+
+    #[test]
+    fn sssp_over_zerocopy_matches_local() {
+        check_transport(Transport::ZeroCopyShm);
+    }
+
+    #[test]
+    fn sssp_over_socket_matches_local() {
+        check_transport(Transport::Socket);
+    }
+
+    #[test]
+    fn empty_message_cached_locally() {
+        let remote = RemoteVCProg::launch(
+            SsspBellmanFord::new(0),
+            "sssp root=0",
+            1,
+            Transport::ZeroCopyShm,
+            true,
+        )
+        .unwrap();
+        let calls_before = remote.remote_calls();
+        for _ in 0..10 {
+            assert_eq!(remote.empty_message(), i64::MAX);
+        }
+        assert_eq!(remote.remote_calls(), calls_before, "no remote traffic");
+        remote.shutdown();
+    }
+
+    #[test]
+    fn all_engines_run_remote_programs() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (0, 2)]);
+        for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull, EngineKind::Serial]
+        {
+            let remote = RemoteVCProg::launch(
+                SsspBellmanFord::new(0),
+                "sssp root=0",
+                2,
+                Transport::ZeroCopyShm,
+                true,
+            )
+            .unwrap();
+            let r = run_typed(kind, &g, &remote, &RunOptions::default().with_workers(2)).unwrap();
+            assert_eq!(r.props, vec![0, 1, 1], "{kind}");
+            remote.shutdown();
+        }
+    }
+}

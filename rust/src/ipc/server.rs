@@ -1,0 +1,394 @@
+//! The VCProg runner — the server side of execution isolation (Fig 6).
+//!
+//! The paper serializes the user's Python VCProg object, ships it to every
+//! worker node, and starts a runner process that deserializes it and serves
+//! method calls. Our stand-in for the pickled object is a **program spec**
+//! string (`"sssp root=0"`) resolved against the built-in registry; the
+//! runner then serves the five VCProg methods over either transport.
+//!
+//! [`ByteProgram`] is the byte-level program interface the server hosts;
+//! any typed [`VCProg`] whose value types implement
+//! [`crate::vcprog::adapter::Wire`] adapts to it via [`ServedProgram`].
+
+use crate::error::{Result, UniGpsError};
+use crate::ipc::protocol::{get_bytes, get_u32, get_u64, method, put_bytes, put_u32};
+use crate::ipc::socket_rpc::SocketServer;
+use crate::ipc::zerocopy::{WaitStrategy, ZeroCopyServer};
+use crate::ipc::Transport;
+use crate::vcprog::adapter::Wire;
+use crate::vcprog::programs::{
+    Bfs, ConnectedComponents, DegreeCount, KCore, LabelPropagation, PageRank, Reachability,
+    SsspBellmanFord,
+};
+use crate::vcprog::VCProg;
+use std::path::Path;
+
+/// Byte-level rendering of the five VCProg methods.
+pub trait ByteProgram: Send {
+    /// `initVertexAttr` over encoded values.
+    fn init_vertex_attr(&self, id: u32, out_degree: u64, input: &[u8]) -> Result<Vec<u8>>;
+    /// `emptyMessage` encoded.
+    fn empty_message(&self) -> Result<Vec<u8>>;
+    /// `mergeMessage` over encoded messages.
+    fn merge_message(&self, a: &[u8], b: &[u8]) -> Result<Vec<u8>>;
+    /// `vertexCompute`; returns `(encoded_prop, is_active)`.
+    fn vertex_compute(&self, prop: &[u8], msg: &[u8], iter: u32) -> Result<(Vec<u8>, bool)>;
+    /// `emitMessage`; `None` = don't emit.
+    fn emit_message(
+        &self,
+        src: u32,
+        dst: u32,
+        src_prop: &[u8],
+        edge_prop: &[u8],
+    ) -> Result<Option<Vec<u8>>>;
+
+    /// Batched emit over a vertex's out-edges (default: per-edge loop).
+    fn emit_batch(
+        &self,
+        src: u32,
+        src_prop: &[u8],
+        edges: &[(u32, &[u8])],
+    ) -> Result<Vec<(u32, Vec<u8>)>> {
+        let mut out = Vec::new();
+        for (dst, ep) in edges {
+            if let Some(m) = self.emit_message(src, *dst, src_prop, ep)? {
+                out.push((*dst, m));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Adapter: any Wire-typed VCProg is a ByteProgram.
+pub struct ServedProgram<P>(pub P);
+
+impl<P> ByteProgram for ServedProgram<P>
+where
+    P: VCProg,
+    P::In: Wire,
+    P::VProp: Wire,
+    P::EProp: Wire,
+    P::Msg: Wire,
+{
+    fn init_vertex_attr(&self, id: u32, out_degree: u64, input: &[u8]) -> Result<Vec<u8>> {
+        let input = crate::vcprog::adapter::from_bytes::<P::In>(input)?;
+        let prop = self.0.init_vertex_attr(id, out_degree as usize, &input);
+        Ok(crate::vcprog::adapter::to_bytes(&prop))
+    }
+
+    fn empty_message(&self) -> Result<Vec<u8>> {
+        Ok(crate::vcprog::adapter::to_bytes(&self.0.empty_message()))
+    }
+
+    fn merge_message(&self, a: &[u8], b: &[u8]) -> Result<Vec<u8>> {
+        let a = crate::vcprog::adapter::from_bytes::<P::Msg>(a)?;
+        let b = crate::vcprog::adapter::from_bytes::<P::Msg>(b)?;
+        Ok(crate::vcprog::adapter::to_bytes(&self.0.merge_message(&a, &b)))
+    }
+
+    fn vertex_compute(&self, prop: &[u8], msg: &[u8], iter: u32) -> Result<(Vec<u8>, bool)> {
+        let prop = crate::vcprog::adapter::from_bytes::<P::VProp>(prop)?;
+        let msg = crate::vcprog::adapter::from_bytes::<P::Msg>(msg)?;
+        let (new_prop, active) = self.0.vertex_compute(&prop, &msg, iter);
+        Ok((crate::vcprog::adapter::to_bytes(&new_prop), active))
+    }
+
+    fn emit_message(
+        &self,
+        src: u32,
+        dst: u32,
+        src_prop: &[u8],
+        edge_prop: &[u8],
+    ) -> Result<Option<Vec<u8>>> {
+        let src_prop = crate::vcprog::adapter::from_bytes::<P::VProp>(src_prop)?;
+        let edge_prop = crate::vcprog::adapter::from_bytes::<P::EProp>(edge_prop)?;
+        Ok(self
+            .0
+            .emit_message(src, dst, &src_prop, &edge_prop)
+            .map(|m| crate::vcprog::adapter::to_bytes(&m)))
+    }
+}
+
+// --- Wire codecs for the built-in program property types -------------------
+
+impl Wire for crate::vcprog::programs::pagerank::PrState {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.rank.encode(out);
+        self.out_degree.encode(out);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        Ok(Self {
+            rank: f64::decode(buf, pos)?,
+            out_degree: u32::decode(buf, pos)?,
+        })
+    }
+}
+
+impl Wire for crate::vcprog::programs::degree::Degrees {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.out.encode(out);
+        self.inn.encode(out);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        Ok(Self {
+            out: u32::decode(buf, pos)?,
+            inn: u32::decode(buf, pos)?,
+        })
+    }
+}
+
+impl Wire for crate::vcprog::programs::kcore::CoreState {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.degree.encode(out);
+        self.removed.encode(out);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        Ok(Self {
+            degree: i64::decode(buf, pos)?,
+            removed: bool::decode(buf, pos)?,
+        })
+    }
+}
+
+impl Wire for crate::vcprog::programs::lpa::Histogram {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.counts.encode(out);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        Ok(Self {
+            counts: Vec::<(u32, u32)>::decode(buf, pos)?,
+        })
+    }
+}
+
+/// Parse a program spec string — the stand-in for the paper's serialized
+/// Python object. Format: `name key=value key=value ...`.
+pub fn build_program(spec: &str) -> Result<Box<dyn ByteProgram>> {
+    let mut it = spec.split_whitespace();
+    let name = it
+        .next()
+        .ok_or_else(|| UniGpsError::ipc("empty program spec"))?;
+    let mut params = std::collections::BTreeMap::new();
+    for kv in it {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| UniGpsError::ipc(format!("bad spec param '{kv}'")))?;
+        params.insert(k.to_string(), v.to_string());
+    }
+    let get_u64 = |k: &str, d: u64| -> u64 {
+        params
+            .get(k)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(d)
+    };
+    Ok(match name {
+        "sssp" => Box::new(ServedProgram(SsspBellmanFord::new(get_u64("root", 0) as u32))),
+        "bfs" => Box::new(ServedProgram(Bfs::new(get_u64("root", 0) as u32))),
+        "cc" => Box::new(ServedProgram(ConnectedComponents::new())),
+        "reachability" => Box::new(ServedProgram(Reachability::new(get_u64("root", 0) as u32))),
+        "degree" => Box::new(ServedProgram(DegreeCount::new())),
+        "kcore" => Box::new(ServedProgram(KCore::new(get_u64("k", 2) as i64))),
+        "lpa" => Box::new(ServedProgram(LabelPropagation::new(get_u64("iters", 5) as u32))),
+        "pagerank" => Box::new(ServedProgram(PageRank::new(
+            get_u64("n", 0) as usize,
+            get_u64("iters", 20) as u32,
+        ))),
+        other => return Err(UniGpsError::ipc(format!("unknown program '{other}'"))),
+    })
+}
+
+/// Dispatch one decoded request against the hosted program. Shared by both
+/// transports. Returns `(response, served_method)`.
+pub fn dispatch(
+    program_slot: &mut Option<Box<dyn ByteProgram>>,
+    m: u32,
+    req: &[u8],
+) -> Result<Vec<u8>> {
+    let need = |slot: &Option<Box<dyn ByteProgram>>| -> Result<()> {
+        if slot.is_none() {
+            return Err(UniGpsError::ipc("no program initialized"));
+        }
+        Ok(())
+    };
+    match m {
+        method::INIT_PROGRAM => {
+            let spec = std::str::from_utf8(req)
+                .map_err(|_| UniGpsError::ipc("spec not utf8"))?;
+            *program_slot = Some(build_program(spec)?);
+            Ok(Vec::new())
+        }
+        method::EMPTY_MESSAGE => {
+            need(program_slot)?;
+            program_slot.as_ref().unwrap().empty_message()
+        }
+        method::INIT_VERTEX => {
+            need(program_slot)?;
+            let mut pos = 0;
+            let id = get_u32(req, &mut pos)?;
+            let deg = get_u64(req, &mut pos)?;
+            let input = get_bytes(req, &mut pos)?;
+            program_slot.as_ref().unwrap().init_vertex_attr(id, deg, input)
+        }
+        method::MERGE => {
+            need(program_slot)?;
+            let mut pos = 0;
+            let a = get_bytes(req, &mut pos)?;
+            let b = get_bytes(req, &mut pos)?;
+            program_slot.as_ref().unwrap().merge_message(a, b)
+        }
+        method::COMPUTE => {
+            need(program_slot)?;
+            let mut pos = 0;
+            let iter = get_u32(req, &mut pos)?;
+            let prop = get_bytes(req, &mut pos)?;
+            let msg = get_bytes(req, &mut pos)?;
+            let (new_prop, active) = program_slot
+                .as_ref()
+                .unwrap()
+                .vertex_compute(prop, msg, iter)?;
+            let mut out = Vec::with_capacity(new_prop.len() + 8);
+            put_u32(&mut out, active as u32);
+            put_bytes(&mut out, &new_prop);
+            Ok(out)
+        }
+        method::EMIT => {
+            need(program_slot)?;
+            let mut pos = 0;
+            let src = get_u32(req, &mut pos)?;
+            let dst = get_u32(req, &mut pos)?;
+            let src_prop = get_bytes(req, &mut pos)?;
+            let edge_prop = get_bytes(req, &mut pos)?;
+            let out_msg = program_slot
+                .as_ref()
+                .unwrap()
+                .emit_message(src, dst, src_prop, edge_prop)?;
+            let mut out = Vec::new();
+            match out_msg {
+                Some(m) => {
+                    put_u32(&mut out, 1);
+                    put_bytes(&mut out, &m);
+                }
+                None => put_u32(&mut out, 0),
+            }
+            Ok(out)
+        }
+        method::EMIT_BATCH => {
+            need(program_slot)?;
+            let mut pos = 0;
+            let src = get_u32(req, &mut pos)?;
+            let src_prop = get_bytes(req, &mut pos)?;
+            let count = get_u32(req, &mut pos)? as usize;
+            let mut edges = Vec::with_capacity(count);
+            for _ in 0..count {
+                let dst = get_u32(req, &mut pos)?;
+                let ep = get_bytes(req, &mut pos)?;
+                edges.push((dst, ep));
+            }
+            let msgs = program_slot
+                .as_ref()
+                .unwrap()
+                .emit_batch(src, src_prop, &edges)?;
+            let mut out = Vec::new();
+            put_u32(&mut out, msgs.len() as u32);
+            for (dst, m) in msgs {
+                put_u32(&mut out, dst);
+                put_bytes(&mut out, &m);
+            }
+            Ok(out)
+        }
+        method::PING => Ok(req.to_vec()),
+        method::SHUTDOWN => Ok(Vec::new()),
+        other => Err(UniGpsError::ipc(format!("unknown method {other}"))),
+    }
+}
+
+/// Run a runner serving on `path` with the chosen transport until SHUTDOWN.
+/// This is the body of the `unigps ipc-server` subcommand and of the
+/// in-process test servers.
+pub fn serve(transport: Transport, path: &Path, buf_size: usize) -> Result<()> {
+    let mut program: Option<Box<dyn ByteProgram>> = None;
+    match transport {
+        Transport::ZeroCopyShm => {
+            // The client creates the buffer; the server attaches (retry while
+            // the file appears).
+            let mut server = attach_retry(path, buf_size)?;
+            loop {
+                let m = server.serve_one(|m, req| dispatch(&mut program, m, req))?;
+                if m == method::SHUTDOWN {
+                    return Ok(());
+                }
+            }
+        }
+        Transport::Socket => {
+            let server = SocketServer::bind(path)?;
+            server.serve(method::SHUTDOWN, |m, req| dispatch(&mut program, m, req))
+        }
+    }
+}
+
+fn attach_retry(path: &Path, buf_size: usize) -> Result<ZeroCopyServer> {
+    let mut last = None;
+    for _ in 0..400 {
+        match ZeroCopyServer::open(path, buf_size, WaitStrategy::BusyYield) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    }
+    Err(last.unwrap_or_else(|| UniGpsError::ipc("shm attach failed")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_program_specs() {
+        assert!(build_program("sssp root=3").is_ok());
+        assert!(build_program("pagerank n=100 iters=5").is_ok());
+        assert!(build_program("cc").is_ok());
+        assert!(build_program("kcore k=3").is_ok());
+        assert!(build_program("quantum-walk").is_err());
+        assert!(build_program("").is_err());
+        assert!(build_program("sssp root:is:3").is_err());
+    }
+
+    #[test]
+    fn dispatch_lifecycle() {
+        let mut slot = None;
+        // Methods before init fail.
+        assert!(dispatch(&mut slot, method::EMPTY_MESSAGE, b"").is_err());
+        // Init then empty message.
+        dispatch(&mut slot, method::INIT_PROGRAM, b"sssp root=0").unwrap();
+        let empty = dispatch(&mut slot, method::EMPTY_MESSAGE, b"").unwrap();
+        let inf: i64 = crate::vcprog::adapter::from_bytes(&empty).unwrap();
+        assert_eq!(inf, i64::MAX);
+        // Ping echoes.
+        assert_eq!(dispatch(&mut slot, method::PING, b"xyz").unwrap(), b"xyz");
+        // Unknown method.
+        assert!(dispatch(&mut slot, 99, b"").is_err());
+    }
+
+    #[test]
+    fn dispatch_vertex_methods() {
+        let mut slot = None;
+        dispatch(&mut slot, method::INIT_PROGRAM, b"sssp root=2").unwrap();
+        // INIT_VERTEX for the root gives distance 0.
+        let mut req = Vec::new();
+        put_u32(&mut req, 2);
+        crate::ipc::protocol::put_u64(&mut req, 5);
+        put_bytes(&mut req, &crate::vcprog::adapter::to_bytes(&()));
+        let prop = dispatch(&mut slot, method::INIT_VERTEX, &req).unwrap();
+        let d: i64 = crate::vcprog::adapter::from_bytes(&prop).unwrap();
+        assert_eq!(d, 0);
+        // MERGE takes the min.
+        let mut req = Vec::new();
+        put_bytes(&mut req, &crate::vcprog::adapter::to_bytes(&7i64));
+        put_bytes(&mut req, &crate::vcprog::adapter::to_bytes(&3i64));
+        let merged = dispatch(&mut slot, method::MERGE, &req).unwrap();
+        let v: i64 = crate::vcprog::adapter::from_bytes(&merged).unwrap();
+        assert_eq!(v, 3);
+    }
+}

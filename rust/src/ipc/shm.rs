@@ -1,0 +1,158 @@
+//! Memory-mapped shared buffers (the substrate of Fig 7).
+//!
+//! Both IPC peers map the same file (created under `/dev/shm`, so it lives
+//! in page cache and never touches disk) with `MAP_SHARED`; writes by one
+//! side are immediately visible to the other without any copy — the paper's
+//! zero-copy property. Atomic flag words inside the mapping synchronize the
+//! two sides (see [`crate::ipc::zerocopy`]).
+
+use crate::error::{Result, UniGpsError};
+use std::fs::OpenOptions;
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
+
+/// A shared memory mapping backed by a file.
+pub struct ShmMap {
+    ptr: *mut u8,
+    len: usize,
+    path: PathBuf,
+    owner: bool,
+}
+
+// SAFETY: the mapping is plain memory; cross-thread use is synchronized by
+// the channel protocol built on top.
+unsafe impl Send for ShmMap {}
+unsafe impl Sync for ShmMap {}
+
+impl ShmMap {
+    /// Create (and size) a new shared file and map it. The creator unlinks
+    /// the file on drop.
+    pub fn create(path: &Path, len: usize) -> Result<ShmMap> {
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)?;
+        file.set_len(len as u64)?;
+        Self::map(file.as_raw_fd(), len, path, true)
+    }
+
+    /// Open an existing shared file created by the peer. Rejects files that
+    /// have not reached the expected size yet (the creator may still be
+    /// between `create` and `set_len`; callers retry).
+    pub fn open(path: &Path, len: usize) -> Result<ShmMap> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        let actual = file.metadata()?.len();
+        if actual < len as u64 {
+            return Err(UniGpsError::ipc(format!(
+                "shm file {} not fully sized yet ({actual} < {len})",
+                path.display()
+            )));
+        }
+        Self::map(file.as_raw_fd(), len, path, false)
+    }
+
+    fn map(fd: i32, len: usize, path: &Path, owner: bool) -> Result<ShmMap> {
+        // SAFETY: standard mmap of a sized file; failure checked below.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                fd,
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            return Err(UniGpsError::ipc(format!(
+                "mmap({}) failed: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            )));
+        }
+        Ok(ShmMap {
+            ptr: ptr as *mut u8,
+            len,
+            path: path.to_path_buf(),
+            owner,
+        })
+    }
+
+    /// Mapping length.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when zero-length (never for valid maps).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw base pointer.
+    pub fn as_ptr(&self) -> *mut u8 {
+        self.ptr
+    }
+
+    /// Path of the backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// A fresh unique path under `/dev/shm` (falls back to the temp dir).
+    pub fn unique_path(tag: &str) -> PathBuf {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let c = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let base = if Path::new("/dev/shm").is_dir() {
+            PathBuf::from("/dev/shm")
+        } else {
+            std::env::temp_dir()
+        };
+        base.join(format!("unigps-{tag}-{}-{c}", std::process::id()))
+    }
+}
+
+impl Drop for ShmMap {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len came from a successful mmap.
+        unsafe {
+            libc::munmap(self.ptr as *mut libc::c_void, self.len);
+        }
+        if self.owner {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_open_share_bytes() {
+        let path = ShmMap::unique_path("test-share");
+        let a = ShmMap::create(&path, 4096).unwrap();
+        let b = ShmMap::open(&path, 4096).unwrap();
+        unsafe {
+            *a.as_ptr().add(100) = 42;
+        }
+        let got = unsafe { *b.as_ptr().add(100) };
+        assert_eq!(got, 42, "write through one mapping visible in the other");
+        drop(b);
+        drop(a);
+        assert!(!path.exists(), "owner unlinks on drop");
+    }
+
+    #[test]
+    fn open_missing_fails() {
+        let path = ShmMap::unique_path("test-missing");
+        assert!(ShmMap::open(&path, 4096).is_err());
+    }
+
+    #[test]
+    fn unique_paths_differ() {
+        assert_ne!(ShmMap::unique_path("x"), ShmMap::unique_path("x"));
+    }
+}

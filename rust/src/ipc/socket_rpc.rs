@@ -1,0 +1,196 @@
+//! Socket-based RPC baseline — the paper's gRPC stand-in (Fig 8d).
+//!
+//! A Unix-domain-socket request/response protocol with length-prefixed
+//! frames. Every call crosses the kernel twice (write + read syscalls) and
+//! copies the payload user→kernel→user on each side — exactly the overheads
+//! §IV-C.2 attributes to network-stack RPC frameworks, without needing a
+//! real gRPC dependency offline.
+//!
+//! Frame format (both directions, little endian):
+//!
+//! ```text
+//! u32 method_or_status | u32 len | len bytes
+//! ```
+
+use crate::error::{Result, UniGpsError};
+use crate::ipc::protocol::status;
+use crate::ipc::RpcChannel;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+
+fn write_frame(w: &mut impl Write, head: u32, payload: &[u8]) -> Result<()> {
+    w.write_all(&head.to_le_bytes())?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_frame(r: &mut impl Read) -> Result<(u32, Vec<u8>)> {
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head)?;
+    let tag = u32::from_le_bytes(head[0..4].try_into().unwrap());
+    let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    if len > (1 << 30) {
+        return Err(UniGpsError::ipc(format!("frame too large: {len}")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+/// Client half over a Unix stream.
+pub struct SocketClient {
+    reader: BufReader<UnixStream>,
+    writer: BufWriter<UnixStream>,
+}
+
+impl SocketClient {
+    /// Connect to the server's socket path (retrying briefly while the
+    /// server starts up).
+    pub fn connect(path: &Path) -> Result<Self> {
+        let mut last_err = None;
+        for _ in 0..200 {
+            match UnixStream::connect(path) {
+                Ok(stream) => {
+                    let reader = BufReader::new(stream.try_clone()?);
+                    let writer = BufWriter::new(stream);
+                    return Ok(SocketClient { reader, writer });
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        }
+        Err(UniGpsError::ipc(format!(
+            "connect({}) failed: {:?}",
+            path.display(),
+            last_err
+        )))
+    }
+}
+
+impl RpcChannel for SocketClient {
+    fn call(&mut self, method: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.writer, method, payload)?;
+        let (st, resp) = read_frame(&mut self.reader)?;
+        if st == status::OK {
+            Ok(resp)
+        } else {
+            Err(UniGpsError::ipc(format!(
+                "server error: {}",
+                String::from_utf8_lossy(&resp)
+            )))
+        }
+    }
+}
+
+/// Server half: accepts one connection and serves frames.
+pub struct SocketServer {
+    listener: UnixListener,
+}
+
+impl SocketServer {
+    /// Bind the socket path (removing any stale socket file first).
+    pub fn bind(path: &Path) -> Result<Self> {
+        let _ = std::fs::remove_file(path);
+        Ok(SocketServer {
+            listener: UnixListener::bind(path)?,
+        })
+    }
+
+    /// Accept one client and serve requests until `handler` has served a
+    /// request with method index `stop_method` or the peer disconnects.
+    pub fn serve(
+        &self,
+        stop_method: u32,
+        mut handler: impl FnMut(u32, &[u8]) -> Result<Vec<u8>>,
+    ) -> Result<()> {
+        let (stream, _addr) = self.listener.accept()?;
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        loop {
+            let (method, payload) = match read_frame(&mut reader) {
+                Ok(f) => f,
+                Err(UniGpsError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                    return Ok(()); // peer closed
+                }
+                Err(e) => return Err(e),
+            };
+            let (st, resp) = match handler(method, &payload) {
+                Ok(r) => (status::OK, r),
+                Err(e) => (status::ERR, e.to_string().into_bytes()),
+            };
+            write_frame(&mut writer, st, &resp)?;
+            if method == stop_method {
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ipc::protocol::method;
+    use crate::ipc::shm::ShmMap;
+
+    #[test]
+    fn echo_over_socket() {
+        let path = ShmMap::unique_path("sock-echo");
+        let server = SocketServer::bind(&path).unwrap();
+        let srv = std::thread::spawn(move || {
+            server
+                .serve(method::SHUTDOWN, |_, req| {
+                    let mut v = req.to_vec();
+                    v.reverse();
+                    Ok(v)
+                })
+                .unwrap();
+        });
+        let mut client = SocketClient::connect(&path).unwrap();
+        for i in 0..50u32 {
+            let p = format!("msg-{i}");
+            let resp = client.call(method::PING, p.as_bytes()).unwrap();
+            let mut expect = p.into_bytes();
+            expect.reverse();
+            assert_eq!(resp, expect);
+        }
+        client.call(method::SHUTDOWN, b"").unwrap();
+        srv.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let path = ShmMap::unique_path("sock-err");
+        let server = SocketServer::bind(&path).unwrap();
+        let srv = std::thread::spawn(move || {
+            server
+                .serve(method::SHUTDOWN, |m, _| {
+                    if m == method::SHUTDOWN {
+                        Ok(vec![])
+                    } else {
+                        Err(UniGpsError::ipc("kaput"))
+                    }
+                })
+                .unwrap();
+        });
+        let mut client = SocketClient::connect(&path).unwrap();
+        let err = client.call(method::PING, b"x").unwrap_err();
+        assert!(err.to_string().contains("kaput"));
+        client.call(method::SHUTDOWN, b"").unwrap();
+        srv.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn connect_to_missing_socket_fails_fast_enough() {
+        let path = ShmMap::unique_path("sock-none");
+        let t = std::time::Instant::now();
+        assert!(SocketClient::connect(&path).is_err());
+        assert!(t.elapsed().as_secs() < 10);
+    }
+}

@@ -1,0 +1,70 @@
+//! # UniGPS — a unified programming framework for distributed graph processing
+//!
+//! Reproduction of *"UniGPS: A Unified Programming Framework for Distributed
+//! Graph Processing"* (Wang et al., 2021) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The crate provides:
+//!
+//! * [`vcprog`] — the **VCProg** unified vertex-centric programming model
+//!   (the paper's §III): five user methods (`init_vertex_attr`,
+//!   `empty_message`, `merge_message`, `vertex_compute`, `emit_message`)
+//!   executed unmodified by every backend engine.
+//! * [`engine`] — backend engines reproducing the execution models the paper
+//!   integrates: Pregel (Giraph-like), GAS (GraphX-like), Push-Pull
+//!   (Gemini-like), a serial baseline (NetworkX stand-in), and a PJRT
+//!   **tensor engine** running AOT-compiled JAX/Pallas artifacts.
+//! * [`distributed`] — the simulated distributed runtime: vertex partitions,
+//!   worker threads, routed message mailboxes, BSP barriers and metrics.
+//! * [`ipc`] — the paper's execution-environment isolation mechanism (§IV-C):
+//!   a zero-copy memory-mapped IPC channel with busy-wait synchronization and
+//!   a socket-based RPC baseline (the gRPC stand-in of Fig 8d).
+//! * [`graph`] — the property-graph substrate: CSR/CSC topology, dynamic
+//!   records, partitioners, generators and the unified graph I/O format.
+//! * [`operators`] — the native operator API (`pagerank`, `sssp`, `cc`, ...)
+//!   with the paper's `engine=` selection parameter.
+//! * [`runtime`] — the PJRT runtime loading `artifacts/*.hlo.txt` produced by
+//!   `python/compile/aot.py` (JAX L2 + Pallas L1), Python never on the
+//!   request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use unigps::prelude::*;
+//!
+//! let session = Session::builder().workers(4).build();
+//! let graph = session.generate("rmat", 1 << 14, 1 << 17, 42);
+//! let out = session
+//!     .pagerank(&graph)
+//!     .engine(EngineKind::Pregel)
+//!     .max_iter(20)
+//!     .run()
+//!     .unwrap();
+//! let top = out.top_k_f64("rank", 5);
+//! println!("{top:?}");
+//! ```
+
+pub mod config;
+pub mod distributed;
+pub mod engine;
+pub mod error;
+pub mod graph;
+pub mod ipc;
+pub mod operators;
+pub mod runtime;
+pub mod session;
+pub mod util;
+pub mod vcprog;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::engine::{EngineKind, RunOptions, RunResult};
+    pub use crate::graph::record::{Record, Schema, Value};
+    pub use crate::graph::{Graph, PropertyGraph};
+    pub use crate::operators::OperatorBuilder;
+    pub use crate::session::Session;
+    pub use crate::vcprog::{VCProg, VertexId};
+}
+
+/// Crate version string (matches `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,218 @@
+//! UniGPS command-line interface.
+//!
+//! ```text
+//! unigps run --algo pagerank --engine pregel --dataset lj --scale 256 [--workers N]
+//! unigps generate --kind rmat --vertices 65536 --edges 1048576 --out g.bin
+//! unigps convert --in g.txt --out g.json
+//! unigps info --graph g.bin
+//! unigps ipc-server --transport shm --path /dev/shm/chan   (internal: VCProg runner)
+//! unigps engines
+//! ```
+//!
+//! Argument parsing is hand-rolled (`clap` is unavailable offline).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+use unigps::engine::EngineKind;
+use unigps::graph::io::Format;
+use unigps::ipc::Transport;
+use unigps::session::Session;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(a.clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: unigps <run|generate|convert|info|engines|ipc-server|version> [--flags]\n\
+         try: unigps run --algo pagerank --dataset lj --scale 1024 --engine pregel"
+    );
+    ExitCode::FAILURE
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        return usage();
+    };
+    let (_pos, flags) = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "generate" => cmd_generate(&flags),
+        "convert" => cmd_convert(&flags),
+        "info" => cmd_info(&flags),
+        "engines" => cmd_engines(),
+        "ipc-server" => cmd_ipc_server(&flags),
+        "version" | "--version" => {
+            println!("unigps {}", unigps::VERSION);
+            Ok(())
+        }
+        _ => return usage(),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type AnyErr = Box<dyn std::error::Error>;
+
+fn get<'a>(flags: &'a BTreeMap<String, String>, key: &str) -> Option<&'a str> {
+    flags.get(key).map(|s| s.as_str())
+}
+
+fn load_or_generate(
+    session: &Session,
+    flags: &BTreeMap<String, String>,
+) -> Result<unigps::graph::Graph, AnyErr> {
+    if let Some(path) = get(flags, "graph") {
+        Ok(session.load(Path::new(path))?)
+    } else if let Some(key) = get(flags, "dataset") {
+        let scale: u64 = get(flags, "scale").unwrap_or("64").parse()?;
+        session
+            .dataset(key, scale)
+            .ok_or_else(|| format!("unknown dataset '{key}' (try as/lj/ok/uk)").into())
+    } else {
+        let v: usize = get(flags, "vertices").unwrap_or("16384").parse()?;
+        let e: usize = get(flags, "edges").unwrap_or("131072").parse()?;
+        let seed: u64 = get(flags, "seed").unwrap_or("42").parse()?;
+        Ok(session.generate(get(flags, "kind").unwrap_or("rmat"), v, e, seed))
+    }
+}
+
+fn cmd_run(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let workers: usize = get(flags, "workers").unwrap_or("4").parse()?;
+    let engine = EngineKind::parse(get(flags, "engine").unwrap_or("pregel"))
+        .ok_or("unknown engine (pregel|gas|pushpull|serial|tensor)")?;
+    let session = Session::builder()
+        .workers(workers)
+        .engine(engine)
+        .artifacts_dir(get(flags, "artifacts").unwrap_or("artifacts"))
+        .build();
+    let graph = load_or_generate(&session, flags)?;
+    eprintln!("loaded {}", graph.summary());
+
+    let algo = get(flags, "algo").unwrap_or("pagerank");
+    let root: u32 = get(flags, "root").unwrap_or("0").parse()?;
+    let builder = match algo {
+        "pagerank" | "pr" => session.pagerank(&graph),
+        "sssp" => session.sssp(&graph, root),
+        "cc" => session.cc(&graph),
+        "bfs" => session.bfs(&graph, root),
+        "degrees" => session.degrees(&graph),
+        "lpa" => session.lpa(&graph, 10),
+        "kcore" => session.kcore(&graph, get(flags, "k").unwrap_or("3").parse()?),
+        "triangles" => session.triangles(&graph),
+        other => return Err(format!("unknown algo '{other}'").into()),
+    };
+    let result = builder.engine(engine).run()?;
+    eprintln!("done: {}", result.metrics.summary());
+    if let Some(out) = get(flags, "output") {
+        result.store_tsv(Path::new(out))?;
+        eprintln!("wrote {out}");
+    } else {
+        for (name, col) in &result.columns {
+            match col {
+                unigps::vcprog::Column::I64(v) => {
+                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
+                }
+                unigps::vcprog::Column::F64(v) => {
+                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let session = Session::builder().build();
+    let graph = load_or_generate(&session, flags)?;
+    let out = PathBuf::from(get(flags, "out").ok_or("--out required")?);
+    Format::from_path(&out).store(&graph, &out)?;
+    println!("wrote {} as {}", graph.summary(), out.display());
+    Ok(())
+}
+
+fn cmd_convert(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let input = PathBuf::from(get(flags, "in").ok_or("--in required")?);
+    let output = PathBuf::from(get(flags, "out").ok_or("--out required")?);
+    let g = Format::from_path(&input).load(&input)?;
+    Format::from_path(&output).store(&g, &output)?;
+    println!(
+        "converted {} -> {} ({})",
+        input.display(),
+        output.display(),
+        g.summary()
+    );
+    Ok(())
+}
+
+fn cmd_info(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let session = Session::builder().build();
+    let g = load_or_generate(&session, flags)?;
+    println!("{}", g.summary());
+    let topo = g.topology();
+    let n = g.num_vertices();
+    let mut max_out = 0usize;
+    let mut isolated = 0usize;
+    for v in 0..n as u32 {
+        let d = topo.out_degree(v);
+        max_out = max_out.max(d);
+        if d == 0 && topo.in_degree(v) == 0 {
+            isolated += 1;
+        }
+    }
+    println!("max out-degree: {max_out}");
+    println!("isolated vertices: {isolated}");
+    println!(
+        "topology memory: {}",
+        unigps::util::fmt_bytes(topo.memory_bytes() as u64)
+    );
+    Ok(())
+}
+
+fn cmd_engines() -> Result<(), AnyErr> {
+    println!("available engines (paper backend in parentheses):");
+    println!("  pregel    (Giraph)   BSP vertex-parallel + combiner");
+    println!("  gas       (GraphX)   gather-apply-scatter, edge-parallel");
+    println!("  pushpull  (Gemini)   adaptive dense/sparse");
+    println!("  serial    (NetworkX) single-thread reference");
+    println!("  tensor    (—)        PJRT over AOT JAX/Pallas artifacts");
+    println!("\ndatasets (Table II analogs): as lj ok uk");
+    Ok(())
+}
+
+fn cmd_ipc_server(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let transport = Transport::parse(get(flags, "transport").unwrap_or("shm"))
+        .ok_or("unknown transport (shm|socket)")?;
+    let path = PathBuf::from(get(flags, "path").ok_or("--path required")?);
+    let buf: usize = match get(flags, "bufsize") {
+        Some(s) => s.parse()?,
+        None => unigps::ipc::zerocopy::DEFAULT_BUF,
+    };
+    unigps::ipc::server::serve(transport, &path, buf)?;
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Native operator API (paper §IV-A/B).
+//!
+//! UniGPS exposes two programming surfaces: the VCProg API for custom
+//! programs, and pre-built **native operators** for the common algorithms.
+//! Each operator takes the paper's `engine=` parameter; builder-style
+//! options mirror Fig 3's keyword arguments.
+
+use crate::engine::{self, EngineKind, RunOptions, RunResult};
+use crate::error::Result;
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+use crate::vcprog::programs::{
+    Bfs, ConnectedComponents, DegreeCount, KCore, LabelPropagation, PageRank, SsspBellmanFord,
+    TriangleCount,
+};
+use crate::vcprog::VertexId;
+
+/// Which native operator to run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Operator {
+    /// PageRank with `iterations` updates.
+    PageRank { iterations: u32 },
+    /// Single-source shortest path from `root`.
+    Sssp { root: VertexId },
+    /// Weakly-connected components.
+    ConnectedComponents,
+    /// BFS hop distance from `root`.
+    Bfs { root: VertexId },
+    /// Label-propagation communities.
+    Lpa { iterations: u32 },
+    /// In/out degree count.
+    Degrees,
+    /// k-core membership.
+    KCore { k: i64 },
+    /// Triangle counting.
+    Triangles,
+}
+
+impl Operator {
+    /// Operator name for logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Operator::PageRank { .. } => "pagerank",
+            Operator::Sssp { .. } => "sssp",
+            Operator::ConnectedComponents => "cc",
+            Operator::Bfs { .. } => "bfs",
+            Operator::Lpa { .. } => "lpa",
+            Operator::Degrees => "degrees",
+            Operator::KCore { .. } => "kcore",
+            Operator::Triangles => "triangles",
+        }
+    }
+}
+
+/// Fluent builder returned by the operator entry points.
+#[derive(Debug, Clone)]
+pub struct OperatorBuilder<'g> {
+    graph: &'g Graph,
+    op: Operator,
+    engine: EngineKind,
+    opts: RunOptions,
+}
+
+impl<'g> OperatorBuilder<'g> {
+    /// Start building a run of `op` over `graph`.
+    pub fn new(graph: &'g Graph, op: Operator) -> Self {
+        OperatorBuilder {
+            graph,
+            op,
+            engine: EngineKind::Pregel,
+            opts: RunOptions::default(),
+        }
+    }
+
+    /// Select the backend engine (paper: the `engine=` parameter).
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.engine = kind;
+        self
+    }
+
+    /// Worker thread count.
+    pub fn workers(mut self, w: usize) -> Self {
+        self.opts.workers = w.max(1);
+        self
+    }
+
+    /// Maximum supersteps.
+    pub fn max_iter(mut self, m: u32) -> Self {
+        self.opts.max_iter = m;
+        self
+    }
+
+    /// Full options override.
+    pub fn options(mut self, opts: RunOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Execute the operator.
+    pub fn run(self) -> Result<RunResult> {
+        run_operator(self.graph, &self.op, self.engine, &self.opts)
+    }
+}
+
+/// Symmetrize a graph (used by undirected-semantics operators on directed
+/// inputs: CC, k-core, triangles — matching NetworkX's undirected view).
+pub fn symmetrized(graph: &Graph) -> Graph {
+    if !graph.topology().directed() {
+        return graph.clone();
+    }
+    let topo = graph.topology();
+    let mut b = GraphBuilder::new(true).dedup(true).drop_self_loops(true);
+    b.ensure_vertices(graph.num_vertices());
+    for v in 0..graph.num_vertices() as u32 {
+        for (eid, dst) in topo.out_edges(v) {
+            let w = *graph.edge_prop(eid);
+            b.add_edge(v, dst, w);
+            b.add_edge(dst, v, w);
+        }
+    }
+    b.build().expect("symmetrization preserves range")
+}
+
+/// Dispatch a native operator onto an engine.
+pub fn run_operator(
+    graph: &Graph,
+    op: &Operator,
+    kind: EngineKind,
+    opts: &RunOptions,
+) -> Result<RunResult> {
+    if kind == EngineKind::Tensor {
+        return crate::engine::tensor::run_operator(graph, op, opts);
+    }
+    match *op {
+        Operator::PageRank { iterations } => {
+            let prog = PageRank::new(graph.num_vertices(), iterations);
+            let mut o = opts.clone();
+            o.max_iter = o.max_iter.min(prog.rounds());
+            engine::run(kind, graph, &prog, &o)
+        }
+        Operator::Sssp { root } => engine::run(kind, graph, &SsspBellmanFord::new(root), opts),
+        Operator::ConnectedComponents => {
+            let g = symmetrized(graph);
+            engine::run(kind, &g, &ConnectedComponents::new(), opts)
+        }
+        Operator::Bfs { root } => engine::run(kind, graph, &Bfs::new(root), opts),
+        Operator::Lpa { iterations } => {
+            let g = symmetrized(graph);
+            let prog = LabelPropagation::new(iterations);
+            let mut o = opts.clone();
+            o.max_iter = o.max_iter.min(prog.rounds());
+            engine::run(kind, &g, &prog, &o)
+        }
+        Operator::Degrees => engine::run(kind, graph, &DegreeCount::new(), opts),
+        Operator::KCore { k } => {
+            let g = symmetrized(graph);
+            engine::run(kind, &g, &KCore::new(k), opts)
+        }
+        Operator::Triangles => {
+            let g = symmetrized(graph);
+            engine::run(kind, &g, &TriangleCount::new(), opts)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    #[test]
+    fn operator_names() {
+        assert_eq!(Operator::PageRank { iterations: 3 }.name(), "pagerank");
+        assert_eq!(Operator::Triangles.name(), "triangles");
+    }
+
+    #[test]
+    fn symmetrize_directed_graph() {
+        let g = from_pairs(true, &[(0, 1), (1, 2)]);
+        let s = symmetrized(&g);
+        assert_eq!(s.num_edges(), 4);
+        assert_eq!(s.topology().in_degree(0), 1);
+        // Undirected graphs pass through.
+        let u = from_pairs(false, &[(0, 1)]);
+        assert_eq!(symmetrized(&u).num_edges(), u.num_edges());
+    }
+
+    #[test]
+    fn cc_operator_on_directed_graph_gives_wcc() {
+        // 0→1, 2→1: weakly one component despite no directed path 0↔2.
+        let g = from_pairs(true, &[(0, 1), (2, 1)]);
+        let r = OperatorBuilder::new(&g, Operator::ConnectedComponents)
+            .engine(EngineKind::Serial)
+            .run()
+            .unwrap();
+        let comp = r.column("component").unwrap().as_i64().unwrap();
+        assert_eq!(comp, &[0, 0, 0]);
+    }
+
+    #[test]
+    fn sssp_operator_runs_on_all_engines() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (0, 2)]);
+        for kind in EngineKind::vcprog_engines() {
+            let r = OperatorBuilder::new(&g, Operator::Sssp { root: 0 })
+                .engine(kind)
+                .workers(2)
+                .run()
+                .unwrap();
+            let d = r.column("distance").unwrap().as_i64().unwrap();
+            assert_eq!(d, &[0, 1, 1], "{kind}");
+        }
+    }
+
+    #[test]
+    fn pagerank_caps_max_iter_to_rounds() {
+        let g = from_pairs(true, &[(0, 1), (1, 0)]);
+        let r = OperatorBuilder::new(&g, Operator::PageRank { iterations: 3 })
+            .engine(EngineKind::Serial)
+            .run()
+            .unwrap();
+        assert!(r.metrics.supersteps <= 4);
+    }
+
+    #[test]
+    fn triangles_operator() {
+        let g = from_pairs(false, &[(0, 1), (1, 2), (0, 2)]);
+        let r = OperatorBuilder::new(&g, Operator::Triangles)
+            .engine(EngineKind::Pregel)
+            .workers(2)
+            .run()
+            .unwrap();
+        let hits = r.column("hits").unwrap().as_i64().unwrap();
+        let total: i64 = hits.iter().sum();
+        assert_eq!(total / 6, 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! Artifact manifest: discovery and size-bucket selection.
+//!
+//! `aot.py` writes `manifest.json` describing every compiled (algorithm,
+//! V_pad, BE) bucket. The runtime selects the cheapest bucket that fits a
+//! given graph: smallest `v_pad ≥ v` and `be ≥ max_block_edges`, minimizing
+//! wasted padding work.
+
+use crate::error::{Result, UniGpsError};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One artifact entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactKey {
+    /// Algorithm name (`pagerank`/`sssp`/`cc`).
+    pub algorithm: String,
+    /// Padded vertex count.
+    pub v_pad: usize,
+    /// Number of destination blocks (`v_pad / bv`).
+    pub nb: usize,
+    /// Edge slots per block.
+    pub be: usize,
+    /// HLO file name within the artifact dir.
+    pub file: String,
+    /// Analytic VMEM footprint per grid step (bytes).
+    pub vmem_step_bytes: u64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Destination-block height (always 128 for the shipped kernels).
+    pub bv: usize,
+    /// All artifacts.
+    pub artifacts: Vec<ArtifactKey>,
+}
+
+impl Manifest {
+    /// Load `manifest.json`.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            UniGpsError::runtime(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(UniGpsError::Parse)?;
+        let bv = doc
+            .get("bv")
+            .and_then(|v| v.as_int())
+            .ok_or_else(|| UniGpsError::Parse("manifest: missing bv".into()))? as usize;
+        let mut artifacts = Vec::new();
+        for item in doc
+            .get("artifacts")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| UniGpsError::Parse("manifest: missing artifacts".into()))?
+        {
+            let field = |k: &str| -> Result<i64> {
+                item.get(k)
+                    .and_then(|v| v.as_int())
+                    .ok_or_else(|| UniGpsError::Parse(format!("manifest: missing {k}")))
+            };
+            artifacts.push(ArtifactKey {
+                algorithm: item
+                    .get("algorithm")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| UniGpsError::Parse("manifest: missing algorithm".into()))?
+                    .to_string(),
+                v_pad: field("v_pad")? as usize,
+                nb: field("nb")? as usize,
+                be: field("be")? as usize,
+                file: item
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| UniGpsError::Parse("manifest: missing file".into()))?
+                    .to_string(),
+                vmem_step_bytes: field("vmem_step_bytes")? as u64,
+            });
+        }
+        Ok(Manifest { bv, artifacts })
+    }
+
+    /// Smallest bucket fitting `(v, max_block_edges)` for `algorithm`.
+    pub fn select(&self, algorithm: &str, v: usize, max_block_edges: usize) -> Option<&ArtifactKey> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.algorithm == algorithm && a.v_pad >= v && a.be >= max_block_edges)
+            .min_by_key(|a| (a.v_pad, a.be))
+    }
+
+    /// All buckets for an algorithm (sorted by size), for reporting.
+    pub fn buckets(&self, algorithm: &str) -> Vec<&ArtifactKey> {
+        let mut v: Vec<&ArtifactKey> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.algorithm == algorithm)
+            .collect();
+        v.sort_by_key(|a| (a.v_pad, a.be));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "bv": 128,
+      "artifacts": [
+        {"algorithm":"cc","v_pad":1024,"nb":8,"be":512,"file":"cc_v1024_be512.hlo.txt","vmem_step_bytes":100},
+        {"algorithm":"cc","v_pad":1024,"nb":8,"be":2048,"file":"cc_v1024_be2048.hlo.txt","vmem_step_bytes":200},
+        {"algorithm":"cc","v_pad":4096,"nb":32,"be":2048,"file":"cc_v4096_be2048.hlo.txt","vmem_step_bytes":300},
+        {"algorithm":"sssp","v_pad":1024,"nb":8,"be":512,"file":"sssp_v1024_be512.hlo.txt","vmem_step_bytes":100}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_and_select_smallest_fit() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.bv, 128);
+        assert_eq!(m.artifacts.len(), 4);
+        let k = m.select("cc", 900, 100).unwrap();
+        assert_eq!(k.file, "cc_v1024_be512.hlo.txt");
+        let k = m.select("cc", 900, 1000).unwrap();
+        assert_eq!(k.file, "cc_v1024_be2048.hlo.txt");
+        let k = m.select("cc", 2000, 100).unwrap();
+        assert_eq!(k.file, "cc_v4096_be2048.hlo.txt");
+        assert!(m.select("cc", 100_000, 1).is_none());
+        assert!(m.select("pagerank", 10, 1).is_none());
+    }
+
+    #[test]
+    fn buckets_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let b = m.buckets("cc");
+        assert_eq!(b.len(), 3);
+        assert!(b[0].v_pad <= b[2].v_pad);
+    }
+
+    #[test]
+    fn bad_manifest_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"bv\":128}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! CSR → block-CSC conversion for the tensor engine.
+//!
+//! The L1 Pallas kernels consume edges grouped by destination block (128
+//! vertices per block) with a uniform per-block edge budget; this module
+//! produces that encoding from a [`Topology`] — the mirror of
+//! `python/tests/test_model.py::block_csc`, kept in lockstep by the
+//! cross-layer tests.
+
+use crate::graph::csr::Topology;
+use crate::graph::PropertyGraph;
+
+/// Destination-block height — must match `segment_ops.BV`.
+pub const BV: usize = 128;
+
+/// Block-CSC encoding of a graph, ready to feed the step artifacts.
+#[derive(Debug, Clone)]
+pub struct BlockCsc {
+    /// Real vertex count.
+    pub n: usize,
+    /// Padded vertex count (`nb * BV`).
+    pub v_pad: usize,
+    /// Number of destination blocks.
+    pub nb: usize,
+    /// Edge slots per block (max real block edges; callers pad further to
+    /// the artifact bucket's `be`).
+    pub be: usize,
+    /// Source vertex per slot, row-major `[nb][be]`.
+    pub src: Vec<i32>,
+    /// Local (within-block) destination per slot.
+    pub local_dst: Vec<i32>,
+    /// 1.0 for real edges, 0.0 for padding.
+    pub valid: Vec<f32>,
+    /// Edge weight per slot.
+    pub weight: Vec<f32>,
+    /// Inverse out-degree per padded vertex (0 for dangling/padding).
+    pub inv_outdeg: Vec<f32>,
+    /// 1.0 for real vertices.
+    pub real_mask: Vec<f32>,
+}
+
+impl BlockCsc {
+    /// Build from a weighted graph.
+    pub fn build<V>(graph: &PropertyGraph<V, f64>) -> BlockCsc {
+        Self::build_topo(graph.topology(), |eid| *graph.edge_prop(eid) as f32)
+    }
+
+    /// Build from a topology with an edge-weight accessor.
+    pub fn build_topo(topo: &Topology, weight_of: impl Fn(usize) -> f32) -> BlockCsc {
+        let n = topo.num_vertices();
+        let nb = n.div_ceil(BV).max(1);
+        let v_pad = nb * BV;
+
+        // Count edges per destination block.
+        let mut block_edges = vec![0usize; nb];
+        for v in 0..n as u32 {
+            for (_eid, dst) in topo.out_edges(v) {
+                block_edges[dst as usize / BV] += 1;
+            }
+        }
+        let be = block_edges.iter().copied().max().unwrap_or(0).max(1);
+
+        let mut src = vec![0i32; nb * be];
+        let mut local_dst = vec![0i32; nb * be];
+        let mut valid = vec![0f32; nb * be];
+        let mut weight = vec![0f32; nb * be];
+        let mut cursor = vec![0usize; nb];
+        for v in 0..n as u32 {
+            for (eid, dst) in topo.out_edges(v) {
+                let b = dst as usize / BV;
+                let slot = b * be + cursor[b];
+                cursor[b] += 1;
+                src[slot] = v as i32;
+                local_dst[slot] = (dst as usize % BV) as i32;
+                valid[slot] = 1.0;
+                weight[slot] = weight_of(eid);
+            }
+        }
+
+        let mut inv_outdeg = vec![0f32; v_pad];
+        let mut real_mask = vec![0f32; v_pad];
+        for v in 0..n {
+            real_mask[v] = 1.0;
+            let d = topo.out_degree(v as u32);
+            if d > 0 {
+                inv_outdeg[v] = 1.0 / d as f32;
+            }
+        }
+
+        BlockCsc {
+            n,
+            v_pad,
+            nb,
+            be,
+            src,
+            local_dst,
+            valid,
+            weight,
+            inv_outdeg,
+            real_mask,
+        }
+    }
+
+    /// Re-pad the per-block edge arrays to a larger `be` (the artifact
+    /// bucket's slot count). No-op when equal.
+    pub fn pad_to(&self, target_be: usize, target_v_pad: usize) -> BlockCsc {
+        assert!(target_be >= self.be, "cannot shrink be");
+        assert!(target_v_pad >= self.v_pad, "cannot shrink v_pad");
+        assert_eq!(target_v_pad % BV, 0);
+        let target_nb = target_v_pad / BV;
+        let mut out = BlockCsc {
+            n: self.n,
+            v_pad: target_v_pad,
+            nb: target_nb,
+            be: target_be,
+            src: vec![0; target_nb * target_be],
+            local_dst: vec![0; target_nb * target_be],
+            valid: vec![0.0; target_nb * target_be],
+            weight: vec![0.0; target_nb * target_be],
+            inv_outdeg: vec![0.0; target_v_pad],
+            real_mask: vec![0.0; target_v_pad],
+        };
+        for b in 0..self.nb {
+            let from = b * self.be;
+            let to = b * target_be;
+            out.src[to..to + self.be].copy_from_slice(&self.src[from..from + self.be]);
+            out.local_dst[to..to + self.be]
+                .copy_from_slice(&self.local_dst[from..from + self.be]);
+            out.valid[to..to + self.be].copy_from_slice(&self.valid[from..from + self.be]);
+            out.weight[to..to + self.be].copy_from_slice(&self.weight[from..from + self.be]);
+        }
+        out.inv_outdeg[..self.v_pad].copy_from_slice(&self.inv_outdeg);
+        out.real_mask[..self.v_pad].copy_from_slice(&self.real_mask);
+        out
+    }
+
+    /// Total real edges encoded.
+    pub fn real_edges(&self) -> usize {
+        self.valid.iter().filter(|&&v| v > 0.0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    #[test]
+    fn encodes_small_graph() {
+        let g = from_pairs(true, &[(0, 1), (0, 2), (1, 2), (3, 0)]);
+        let b = BlockCsc::build(&g);
+        assert_eq!(b.n, 4);
+        assert_eq!(b.nb, 1);
+        assert_eq!(b.v_pad, BV);
+        assert_eq!(b.real_edges(), 4);
+        // Every real edge slot maps back to a CSR edge.
+        for i in 0..b.nb * b.be {
+            if b.valid[i] > 0.0 {
+                let s = b.src[i] as u32;
+                let d = b.local_dst[i] as u32; // block 0 → global == local
+                assert!(g.topology().out_edges(s).any(|(_, dst)| dst == d));
+            }
+        }
+        assert_eq!(b.inv_outdeg[0], 0.5);
+        assert_eq!(b.inv_outdeg[2], 0.0, "dangling");
+        assert_eq!(b.real_mask[3], 1.0);
+        assert_eq!(b.real_mask[4], 0.0);
+    }
+
+    #[test]
+    fn multi_block_distribution() {
+        // Edges to vertices 0 and 200 land in blocks 0 and 1.
+        let g = from_pairs(true, &[(0, 200), (1, 200), (2, 0)]);
+        let b = BlockCsc::build(&g);
+        assert_eq!(b.nb, 2);
+        assert_eq!(b.be, 2, "block 1 holds two edges");
+        // Block 1 slots carry local dst 200-128=72.
+        let block1 = &b.local_dst[b.be..];
+        let reals: Vec<i32> = block1
+            .iter()
+            .zip(&b.valid[b.be..])
+            .filter(|(_, &v)| v > 0.0)
+            .map(|(&d, _)| d)
+            .collect();
+        assert_eq!(reals, vec![72, 72]);
+    }
+
+    #[test]
+    fn pad_to_bucket_preserves_edges() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 0)]);
+        let b = BlockCsc::build(&g);
+        let p = b.pad_to(64, 256);
+        assert_eq!(p.be, 64);
+        assert_eq!(p.v_pad, 256);
+        assert_eq!(p.nb, 2);
+        assert_eq!(p.real_edges(), b.real_edges());
+        assert_eq!(p.inv_outdeg[0], 1.0);
+        assert_eq!(p.real_mask[2], 1.0);
+        assert_eq!(p.real_mask[200], 0.0);
+    }
+
+    #[test]
+    fn weights_follow_edges() {
+        let mut builder = crate::graph::builder::GraphBuilder::new(true);
+        builder.add_edge(0, 1, 7.5);
+        let g = builder.build().unwrap();
+        let b = BlockCsc::build(&g);
+        let slot = (0..b.be).find(|&i| b.valid[i] > 0.0).unwrap();
+        assert_eq!(b.weight[slot], 7.5);
+    }
+
+    #[test]
+    fn empty_graph_encodes() {
+        let g = from_pairs(true, &[]);
+        let b = BlockCsc::build(&g);
+        assert_eq!(b.n, 0);
+        assert_eq!(b.real_edges(), 0);
+        assert!(b.be >= 1);
+    }
+}

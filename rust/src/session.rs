@@ -1,0 +1,270 @@
+//! The UniGPS session handle — the paper's `unigps` object (Fig 3).
+//!
+//! A [`Session`] bundles the default engine, worker count and artifact
+//! directory, and exposes graph loading/generation plus the native operator
+//! entry points (`session.pagerank(...)`, `session.sssp(...)`, ...) and the
+//! generic `vcprog(...)` runner for user programs.
+
+use crate::config::Config;
+use crate::engine::{self, EngineKind, RunOptions, RunResult};
+use crate::error::Result;
+use crate::graph::datasets::DatasetSpec;
+use crate::graph::generate::{self, WeightKind};
+use crate::graph::io::Format;
+use crate::graph::Graph;
+use crate::operators::{Operator, OperatorBuilder};
+use crate::vcprog::{VCProg, VertexId};
+use std::path::{Path, PathBuf};
+
+/// A configured UniGPS session.
+#[derive(Debug, Clone)]
+pub struct Session {
+    engine: EngineKind,
+    opts: RunOptions,
+    artifacts_dir: PathBuf,
+}
+
+/// Builder for [`Session`].
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    engine: EngineKind,
+    opts: RunOptions,
+    artifacts_dir: PathBuf,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            engine: EngineKind::Pregel,
+            opts: RunOptions::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Default engine for operators without an explicit `engine=`.
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.engine = kind;
+        self
+    }
+
+    /// Worker threads.
+    pub fn workers(mut self, w: usize) -> Self {
+        self.opts.workers = w.max(1);
+        self
+    }
+
+    /// Artifact directory for the tensor engine.
+    pub fn artifacts_dir(mut self, p: impl Into<PathBuf>) -> Self {
+        self.artifacts_dir = p.into();
+        self
+    }
+
+    /// Finish.
+    pub fn build(self) -> Session {
+        Session {
+            engine: self.engine,
+            opts: self.opts,
+            artifacts_dir: self.artifacts_dir,
+        }
+    }
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Create from a config file — the paper's
+    /// `UniGPS.createByHdfsConfFile(...)`.
+    pub fn from_config_file(path: &Path) -> Result<Session> {
+        let cfg = Config::load(path)?;
+        Session::from_config(&cfg)
+    }
+
+    /// Create from a parsed [`Config`].
+    pub fn from_config(cfg: &Config) -> Result<Session> {
+        let engine = EngineKind::parse(&cfg.get_or("engine", "pregel"))
+            .ok_or_else(|| crate::error::UniGpsError::Config("unknown engine".into()))?;
+        let mut opts = RunOptions::default();
+        opts.workers = cfg.get_usize("workers", opts.workers)?;
+        opts.max_iter = cfg.get_usize("max_iter", opts.max_iter as usize)? as u32;
+        opts.combiner = cfg.get_bool("combiner", opts.combiner)?;
+        opts.pushpull_threshold = cfg.get_f64("pushpull_threshold", opts.pushpull_threshold)?;
+        if let Some(p) = cfg.get("partition") {
+            opts.partition = crate::graph::partition::PartitionStrategy::parse(p)
+                .ok_or_else(|| crate::error::UniGpsError::Config("unknown partition".into()))?;
+        }
+        Ok(Session {
+            engine,
+            opts,
+            artifacts_dir: PathBuf::from(cfg.get_or("artifacts_dir", "artifacts")),
+        })
+    }
+
+    /// Default engine.
+    pub fn default_engine(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// Default run options.
+    pub fn options(&self) -> &RunOptions {
+        &self.opts
+    }
+
+    /// Artifact directory (tensor engine).
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.artifacts_dir
+    }
+
+    // --- graph acquisition --------------------------------------------------
+
+    /// Load a graph, inferring the format from the extension — the paper's
+    /// `UniGraph.createByHdfsDir(...)` analog.
+    pub fn load(&self, path: &Path) -> Result<Graph> {
+        Format::from_path(path).load(path)
+    }
+
+    /// Store a graph, inferring the format from the extension.
+    pub fn store(&self, graph: &Graph, path: &Path) -> Result<()> {
+        Format::from_path(path).store(graph, path)
+    }
+
+    /// Generate a synthetic graph: `kind` ∈ {rmat, lognormal, er, grid,
+    /// star} (unknown kinds fall back to ER).
+    pub fn generate(&self, kind: &str, vertices: usize, edges: usize, seed: u64) -> Graph {
+        match kind {
+            "rmat" => {
+                let scale = vertices.next_power_of_two().trailing_zeros();
+                generate::rmat(
+                    scale,
+                    edges,
+                    (0.57, 0.19, 0.19, 0.05),
+                    true,
+                    WeightKind::UniformInt(64),
+                    seed,
+                )
+            }
+            "lognormal" => generate::log_normal(
+                vertices,
+                1.2,
+                1.0,
+                true,
+                WeightKind::UniformInt(64),
+                seed,
+            ),
+            "grid" => {
+                let side = (vertices as f64).sqrt().ceil() as usize;
+                generate::grid(side, side, true)
+            }
+            "star" => generate::star(vertices, true),
+            _ => generate::erdos_renyi(vertices, edges, true, WeightKind::UniformInt(64), seed),
+        }
+    }
+
+    /// Generate a Table II dataset analog by key (`as`, `lj`, `ok`, `uk`).
+    pub fn dataset(&self, key: &str, scale_divisor: u64) -> Option<Graph> {
+        DatasetSpec::by_key(key).map(|d| d.generate(scale_divisor))
+    }
+
+    // --- processing ---------------------------------------------------------
+
+    /// Run a user VCProg program — the paper's `unigps.vcprog(in_graph,
+    /// user_program=..., engine=...)`.
+    pub fn vcprog<P: VCProg<In = (), EProp = f64>>(
+        &self,
+        graph: &Graph,
+        program: &P,
+        engine: Option<EngineKind>,
+    ) -> Result<RunResult> {
+        engine::run(engine.unwrap_or(self.engine), graph, program, &self.opts)
+    }
+
+    /// Native operator: PageRank (20 iterations by default; tune with the
+    /// builder).
+    pub fn pagerank<'g>(&self, graph: &'g Graph) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::PageRank { iterations: 20 })
+    }
+
+    /// Native operator: single-source shortest path.
+    pub fn sssp<'g>(&self, graph: &'g Graph, root: VertexId) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::Sssp { root })
+    }
+
+    /// Native operator: connected components.
+    pub fn cc<'g>(&self, graph: &'g Graph) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::ConnectedComponents)
+    }
+
+    /// Native operator: BFS hop distance.
+    pub fn bfs<'g>(&self, graph: &'g Graph, root: VertexId) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::Bfs { root })
+    }
+
+    /// Native operator: degree count.
+    pub fn degrees<'g>(&self, graph: &'g Graph) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::Degrees)
+    }
+
+    /// Native operator: label-propagation communities.
+    pub fn lpa<'g>(&self, graph: &'g Graph, iterations: u32) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::Lpa { iterations })
+    }
+
+    /// Native operator: k-core membership.
+    pub fn kcore<'g>(&self, graph: &'g Graph, k: i64) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::KCore { k })
+    }
+
+    /// Native operator: triangle counting.
+    pub fn triangles<'g>(&self, graph: &'g Graph) -> OperatorBuilder<'g> {
+        self.op(graph, Operator::Triangles)
+    }
+
+    fn op<'g>(&self, graph: &'g Graph, op: Operator) -> OperatorBuilder<'g> {
+        OperatorBuilder::new(graph, op)
+            .engine(self.engine)
+            .options(self.opts.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_from_config() {
+        let cfg = Config::parse("engine = gemini\nworkers = 3\ncombiner = off").unwrap();
+        let s = Session::from_config(&cfg).unwrap();
+        assert_eq!(s.default_engine(), EngineKind::PushPull);
+        assert_eq!(s.options().workers, 3);
+        assert!(!s.options().combiner);
+    }
+
+    #[test]
+    fn bad_engine_rejected() {
+        let cfg = Config::parse("engine = fortran").unwrap();
+        assert!(Session::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn generate_and_run_quickstart() {
+        let s = Session::builder().workers(2).build();
+        let g = s.generate("rmat", 256, 1024, 7);
+        let r = s.pagerank(&g).max_iter(6).run().unwrap();
+        let ranks = r.column("rank").unwrap().as_f64().unwrap();
+        assert_eq!(ranks.len(), g.num_vertices());
+        let top = r.top_k_f64("rank", 3);
+        assert_eq!(top.len(), 3);
+        assert!(top[0].1 >= top[1].1);
+    }
+
+    #[test]
+    fn dataset_lookup() {
+        let s = Session::builder().build();
+        assert!(s.dataset("lj", 4096).is_some());
+        assert!(s.dataset("nope", 64).is_none());
+    }
+}

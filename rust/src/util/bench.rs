@@ -1,0 +1,269 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with simple robust statistics
+//! (median / mean / stddev / min) and a uniform textual report format that
+//! the `benches/` binaries use to regenerate the paper's tables and figures.
+//! Every bench binary is registered with `harness = false`, so `cargo bench`
+//! simply runs their `main`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Benchmark label.
+    pub name: String,
+    /// All sample durations (seconds).
+    pub samples: Vec<f64>,
+}
+
+impl BenchStats {
+    /// Median of the samples in seconds.
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Mean of the samples in seconds.
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation in seconds.
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Minimum sample in seconds.
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    /// One-line human report.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} median {:>10}  mean {:>10}  ±{:>8}  min {:>10}  (n={})",
+            self.name,
+            fmt_dur(self.median()),
+            fmt_dur(self.mean()),
+            fmt_dur(self.stddev()),
+            fmt_dur(self.min()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_dur(secs: f64) -> String {
+    if !secs.is_finite() {
+        return "n/a".into();
+    }
+    if secs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if secs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Hard cap on total measured time; sampling stops early past this.
+    pub max_total: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 1,
+            iters: 5,
+            max_total: Duration::from_secs(60),
+        }
+    }
+}
+
+impl Bencher {
+    /// Construct with explicit warmup/iteration counts.
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher {
+            warmup,
+            iters,
+            max_total: Duration::from_secs(120),
+        }
+    }
+
+    /// Honour `UNIGPS_BENCH_FAST=1` by dropping to 1 warmup / 2 iters.
+    /// Used by CI and the final `cargo bench` log to keep wallclock bounded.
+    pub fn from_env(self) -> Self {
+        if std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1") {
+            Bencher {
+                warmup: 0,
+                iters: 2,
+                max_total: Duration::from_secs(30),
+            }
+        } else {
+            self
+        }
+    }
+
+    /// Measure closure `f`, returning robust statistics.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let total_start = Instant::now();
+        for _ in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+            if total_start.elapsed() > self.max_total && !samples.is_empty() {
+                break;
+            }
+        }
+        BenchStats {
+            name: name.to_string(),
+            samples,
+        }
+    }
+}
+
+/// Render a fixed-width table to stdout; used by the figure/table benches so
+/// the output mirrors the paper's rows.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render the table as a string.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = width[i].max(h.len());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$} | ", c, w = width[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        let mut sep = String::from("|");
+        for w in &width {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = BenchStats {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 100.0],
+        };
+        assert!((s.median() - 3.0).abs() < 1e-12);
+        assert!((s.mean() - 22.0).abs() < 1e-12);
+        assert!((s.min() - 1.0).abs() < 1e-12);
+        assert!(s.stddev() > 0.0);
+        assert!(s.report().contains("median"));
+    }
+
+    #[test]
+    fn bencher_collects_samples() {
+        let b = Bencher::new(1, 3);
+        let s = b.bench("noop", || 1 + 1);
+        assert_eq!(s.samples.len(), 3);
+        assert!(s.median() >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(2.5), "2.500s");
+        assert_eq!(fmt_dur(0.0025), "2.500ms");
+        assert_eq!(fmt_dur(2.5e-6), "2.500µs");
+        assert_eq!(fmt_dur(5e-9), "5.0ns");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["alg", "time"]);
+        t.row(&["pagerank".into(), "1.0s".into()]);
+        t.row(&["cc".into(), "0.5s".into()]);
+        let r = t.render();
+        assert!(r.contains("| alg"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment ships only the `xla` crate closure, so this
+//! module re-implements the handful of third-party conveniences the rest of
+//! the crate needs: a seedable PRNG ([`rng`]), timing helpers ([`timer`]), a
+//! micro-benchmark harness ([`crate::util::bench`], criterion stand-in), a minimal
+//! property-based testing harness ([`propcheck`], proptest stand-in) and a
+//! small JSON reader/writer ([`json`], serde_json stand-in).
+
+pub mod bench;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod timer;
+
+/// Format a byte count with binary units.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a large count with thousands separators (`1_234_567`).
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+}

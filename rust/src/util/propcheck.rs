@@ -1,0 +1,167 @@
+//! Minimal property-based testing harness (proptest is unavailable offline).
+//!
+//! Supports the idioms our invariant tests need: run a property over `N`
+//! seeded random cases, report the failing seed/case on panic, and greedily
+//! shrink integer-vector inputs. The RNG is [`crate::util::rng::Rng`], so
+//! failures are reproducible by seed.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed; case `i` uses `seed + i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+impl Config {
+    /// Convenience constructor.
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Config { cases, seed }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. `gen` builds a case from an RNG.
+/// `prop` returns `Err(reason)` to signal a violation; we panic with the
+/// reproducing seed.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng);
+        if let Err(reason) = prop(&case) {
+            panic!(
+                "property failed (case {i}, seed {case_seed:#x}): {reason}\ncase: {case:#?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but also attempts greedy shrinking via `shrink`, which
+/// should yield strictly "smaller" candidate cases.
+pub fn forall_shrink<T: std::fmt::Debug + Clone>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        let case = gen(&mut rng);
+        if let Err(first_reason) = prop(&case) {
+            // Greedy shrink: walk to a locally-minimal failing case.
+            let mut best = case.clone();
+            let mut reason = first_reason;
+            let mut budget = 200usize;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget = budget.saturating_sub(1);
+                    if let Err(r) = prop(&cand) {
+                        best = cand;
+                        reason = r;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {i}, seed {case_seed:#x}): {reason}\nshrunk case: {best:#?}"
+            );
+        }
+    }
+}
+
+/// Shrinker for integer vectors: drop halves, drop single elements, halve
+/// element values.
+pub fn shrink_vec_u64(v: &Vec<u64>) -> Vec<Vec<u64>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(v[..n / 2].to_vec());
+    out.push(v[n / 2..].to_vec());
+    if n <= 8 {
+        for i in 0..n {
+            let mut w = v.clone();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    let halved: Vec<u64> = v.iter().map(|x| x / 2).collect();
+    if &halved != v {
+        out.push(halved);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            Config::new(10, 1),
+            |r| r.next_below(100),
+            |x| {
+                count += 1;
+                if *x < 100 {
+                    Ok(())
+                } else {
+                    Err("impossible".into())
+                }
+            },
+        );
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Config::new(50, 2),
+            |r| r.next_below(10),
+            |x| if *x != 7 { Ok(()) } else { Err("hit 7".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk case")]
+    fn shrinking_reduces_case() {
+        forall_shrink(
+            Config::new(20, 3),
+            |r| (0..20).map(|_| r.next_below(1000)).collect::<Vec<u64>>(),
+            shrink_vec_u64,
+            |v| {
+                if v.iter().any(|&x| x > 500) {
+                    Err("contains big element".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinker_produces_smaller_vectors() {
+        let v: Vec<u64> = (0..10).collect();
+        let shrunk = shrink_vec_u64(&v);
+        assert!(!shrunk.is_empty());
+        assert!(shrunk.iter().all(|s| s.len() <= v.len()));
+    }
+}

@@ -1,0 +1,161 @@
+//! Timing helpers used by engines, benches and EXPERIMENTS reporting.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start timing now.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed wall time.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed wall time in floating-point seconds.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed wall time in milliseconds.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Restart and return the lap duration.
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.start;
+        self.start = now;
+        d
+    }
+}
+
+/// Accumulates named phase timings (per-superstep breakdowns etc.).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimes {
+    entries: Vec<(String, Duration)>,
+}
+
+impl PhaseTimes {
+    /// New empty accumulator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to phase `name`.
+    pub fn add(&mut self, name: &str, d: Duration) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += d;
+        } else {
+            self.entries.push((name.to_string(), d));
+        }
+    }
+
+    /// Time a closure under phase `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    /// Total across phases.
+    pub fn total(&self) -> Duration {
+        self.entries.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Iterate `(name, duration)` pairs in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, Duration)> {
+        self.entries.iter().map(|(n, d)| (n.as_str(), *d))
+    }
+
+    /// Render as a compact single-line report.
+    pub fn report(&self) -> String {
+        let mut parts = Vec::new();
+        for (n, d) in self.iter() {
+            parts.push(format!("{n}={:.1}ms", d.as_secs_f64() * 1e3));
+        }
+        parts.join(" ")
+    }
+}
+
+/// Per-thread CPU time (CLOCK_THREAD_CPUTIME_ID). Used for worker busy-time
+/// accounting: on an oversubscribed machine (the 1-core testbed), wall time
+/// counts preemption; CPU time counts actual work — which is what the
+/// machine-scalability model (Fig 8c) needs.
+pub fn thread_cpu_time() -> Duration {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain libc call with a valid out-pointer.
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    if rc != 0 {
+        return Duration::ZERO;
+    }
+    Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Stopwatch over the calling thread's CPU time.
+#[derive(Debug, Clone)]
+pub struct CpuTimer {
+    start: Duration,
+}
+
+impl CpuTimer {
+    /// Start measuring the current thread's CPU time.
+    pub fn start() -> Self {
+        CpuTimer { start: thread_cpu_time() }
+    }
+
+    /// CPU time consumed by this thread since `start`.
+    pub fn elapsed(&self) -> Duration {
+        thread_cpu_time().saturating_sub(self.start)
+    }
+}
+
+/// Throughput helper: items per second, guarding zero durations.
+pub fn per_sec(items: u64, d: Duration) -> f64 {
+    let s = d.as_secs_f64();
+    if s <= 0.0 {
+        f64::INFINITY
+    } else {
+        items as f64 / s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.secs() > 0.0);
+        assert!(t.millis() >= 1.0);
+    }
+
+    #[test]
+    fn phases_accumulate() {
+        let mut p = PhaseTimes::new();
+        p.add("compute", Duration::from_millis(5));
+        p.add("compute", Duration::from_millis(5));
+        p.add("comm", Duration::from_millis(3));
+        assert_eq!(p.total(), Duration::from_millis(13));
+        let names: Vec<_> = p.iter().map(|(n, _)| n.to_string()).collect();
+        assert_eq!(names, vec!["compute", "comm"]);
+        assert!(p.report().contains("compute="));
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((per_sec(1000, Duration::from_secs(2)) - 500.0).abs() < 1e-9);
+        assert!(per_sec(10, Duration::from_secs(0)).is_infinite());
+    }
+}

@@ -1,0 +1,145 @@
+//! Wire codecs for VCProg data types.
+//!
+//! The IPC execution-isolation mechanism (§IV-C) ships vertex properties and
+//! messages between the engine worker and the VCProg runner process using
+//! the paper's row-based serialization. [`Wire`] is the codec trait: any
+//! program whose `VProp`/`EProp`/`Msg` implement it can be served remotely
+//! (see [`crate::ipc`]); the same bytes flow over the zero-copy shared-memory
+//! channel and the socket RPC baseline.
+
+use crate::error::{Result, UniGpsError};
+
+/// Fixed, schema-less binary codec for VCProg value types.
+pub trait Wire: Sized {
+    /// Append the encoding of `self` to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+    /// Decode from `buf` starting at `pos`, advancing `pos`.
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self>;
+}
+
+fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+    if *pos + n > buf.len() {
+        return Err(UniGpsError::Ipc("truncated wire buffer".into()));
+    }
+    let s = &buf[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+macro_rules! impl_wire_num {
+    ($($t:ty),*) => {$(
+        impl Wire for $t {
+            fn encode(&self, out: &mut Vec<u8>) {
+                out.extend_from_slice(&self.to_le_bytes());
+            }
+            fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+                let n = std::mem::size_of::<$t>();
+                let s = take(buf, pos, n)?;
+                Ok(<$t>::from_le_bytes(s.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+impl_wire_num!(u32, u64, i32, i64, f32, f64);
+
+impl Wire for () {
+    fn encode(&self, _out: &mut Vec<u8>) {}
+    fn decode(_buf: &[u8], _pos: &mut usize) -> Result<Self> {
+        Ok(())
+    }
+}
+
+impl Wire for bool {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(*self as u8);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        Ok(take(buf, pos, 1)?[0] != 0)
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for (A, B) {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.0.encode(out);
+        self.1.encode(out);
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        Ok((A::decode(buf, pos)?, B::decode(buf, pos)?))
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.len() as u32).to_le_bytes());
+        for x in self {
+            x.encode(out);
+        }
+    }
+    fn decode(buf: &[u8], pos: &mut usize) -> Result<Self> {
+        let n = u32::decode(buf, pos)? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            v.push(T::decode(buf, pos)?);
+        }
+        Ok(v)
+    }
+}
+
+/// Encode a value into a fresh buffer.
+pub fn to_bytes<T: Wire>(v: &T) -> Vec<u8> {
+    let mut out = Vec::new();
+    v.encode(&mut out);
+    out
+}
+
+/// Decode a value, requiring the whole buffer to be consumed.
+pub fn from_bytes<T: Wire>(buf: &[u8]) -> Result<T> {
+    let mut pos = 0;
+    let v = T::decode(buf, &mut pos)?;
+    if pos != buf.len() {
+        return Err(UniGpsError::Ipc(format!(
+            "trailing {} bytes after wire decode",
+            buf.len() - pos
+        )));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numeric_roundtrip() {
+        assert_eq!(from_bytes::<u32>(&to_bytes(&7u32)).unwrap(), 7);
+        assert_eq!(from_bytes::<i64>(&to_bytes(&-9i64)).unwrap(), -9);
+        assert_eq!(from_bytes::<f64>(&to_bytes(&2.5f64)).unwrap(), 2.5);
+        assert!(from_bytes::<bool>(&to_bytes(&true)).unwrap());
+    }
+
+    #[test]
+    fn tuple_and_vec_roundtrip() {
+        let v: (f64, Vec<u32>) = (1.25, vec![3, 1, 4, 1, 5]);
+        let bytes = to_bytes(&v);
+        assert_eq!(from_bytes::<(f64, Vec<u32>)>(&bytes).unwrap(), v);
+    }
+
+    #[test]
+    fn unit_is_zero_bytes() {
+        assert!(to_bytes(&()).is_empty());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let bytes = to_bytes(&(1u64, 2u64));
+        assert!(from_bytes::<(u64, u64)>(&bytes[..12]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut bytes = to_bytes(&3u32);
+        bytes.push(0);
+        assert!(from_bytes::<u32>(&bytes).is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! The **VCProg** unified vertex-centric programming model (paper §III).
+//!
+//! VCProg expresses graph processing as an iterative update of vertex
+//! properties. Each iteration has three phases (paper Fig 1):
+//!
+//! 1. **merge messages** — each vertex folds its incoming messages with
+//!    [`VCProg::merge_message`], starting from [`VCProg::empty_message`];
+//! 2. **update vertex** — [`VCProg::vertex_compute`] produces the new
+//!    property and the active flag;
+//! 3. **send messages** — for every outgoing edge of an active vertex,
+//!    [`VCProg::emit_message`] decides whether/what to send.
+//!
+//! A program runs until all vertices are inactive and no messages are in
+//! flight, or `max_iter` rounds elapse (Algorithm 1). The same program object
+//! is executed *unchanged* by every backend engine (Pregel, GAS, Push-Pull,
+//! serial, tensor) — the paper's "Write Once, Run Anywhere" claim, which the
+//! integration tests verify literally.
+//!
+//! ## Contract
+//!
+//! * `merge_message` must be **commutative**: `merge(a,b) == merge(b,a)`
+//!   (the paper requires interchangeable message order), and associative.
+//! * `empty_message` must be the **identity** of `merge_message`:
+//!   `merge(m, empty) == m`.
+//! * `emit_message` must be a pure function of `(src, dst, src_prop,
+//!   edge_prop)` — engines may call it in any order, from any worker, any
+//!   number of times.
+//!
+//! These laws are exactly what lets one program run under push (Pregel),
+//! pull (GAS / Push-Pull dense) and hybrid schedules; the property tests in
+//! `tests/` check them for every built-in program.
+
+pub mod adapter;
+pub mod programs;
+
+use crate::graph::record::{FieldType, Value};
+use std::fmt::Debug;
+
+/// Vertex identifier (u32 — ample for the scaled datasets).
+pub type VertexId = u32;
+
+/// Iteration counter passed to `vertex_compute`. The first iteration is `1`
+/// (matching Algorithm 1); every vertex is active in iteration 1 and
+/// receives the empty message.
+pub type Iteration = u32;
+
+/// The unified vertex-centric program interface — the Rust rendering of the
+/// paper's `VCProg` abstract base class (Fig 2).
+///
+/// Type parameters mirror the paper's data model: the vertex property
+/// (`VProp`), edge property (`EProp`) and message (`Msg`) each have a single
+/// schema shared by all instances. `In` is the *input* vertex property from
+/// the loaded graph that [`VCProg::init_vertex_attr`] consumes.
+pub trait VCProg: Send + Sync {
+    /// Input vertex property type (from the loaded graph).
+    type In: Clone + Send + Sync;
+    /// Working/output vertex property type.
+    type VProp: Clone + Send + Sync + Debug + PartialEq;
+    /// Edge property type.
+    type EProp: Clone + Send + Sync;
+    /// Message type.
+    type Msg: Clone + Send + Sync + Debug;
+
+    /// Phase 0 (before iterations): produce the initial property of vertex
+    /// `id` from its out-degree and input property.
+    fn init_vertex_attr(&self, id: VertexId, out_degree: usize, input: &Self::In) -> Self::VProp;
+
+    /// The global, read-only empty message: the identity of `merge_message`.
+    fn empty_message(&self) -> Self::Msg;
+
+    /// Phase 1: combine two messages. Must be commutative and associative
+    /// with `empty_message` as identity.
+    fn merge_message(&self, a: &Self::Msg, b: &Self::Msg) -> Self::Msg;
+
+    /// Phase 2: compute the updated property of a vertex from its previous
+    /// property, the merged message, and the iteration number (1-based).
+    /// Returns `(new_prop, is_active)`.
+    fn vertex_compute(
+        &self,
+        prop: &Self::VProp,
+        msg: &Self::Msg,
+        iter: Iteration,
+    ) -> (Self::VProp, bool);
+
+    /// Phase 3: decide whether to send a message along the edge
+    /// `(src, dst)`. `None` means "do not emit" (the paper's
+    /// `is_emit=False`).
+    fn emit_message(
+        &self,
+        src: VertexId,
+        dst: VertexId,
+        src_prop: &Self::VProp,
+        edge_prop: &Self::EProp,
+    ) -> Option<Self::Msg>;
+
+    /// Names and types of the per-vertex output columns this program
+    /// produces (the paper: "vertex properties are output in tabular form").
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)>;
+
+    /// Convert one final vertex property to its output row (same arity and
+    /// order as [`VCProg::output_fields`]).
+    fn output(&self, id: VertexId, prop: &Self::VProp) -> Vec<Value>;
+
+    /// Human-readable program name (for logs/metrics).
+    fn name(&self) -> &str {
+        "vcprog"
+    }
+
+    /// Whether two messages merged with `merge_message` could ever differ
+    /// from sending both separately — engines use this to enable sender-side
+    /// combining (Giraph's Combiner). Default: combinable (true), which is
+    /// sound given the algebraic laws above.
+    fn combinable(&self) -> bool {
+        true
+    }
+
+    /// Emit over all out-edges of `src` at once. Semantically identical to
+    /// calling [`VCProg::emit_message`] per edge (the default does exactly
+    /// that); proxied programs override this to collapse a vertex's whole
+    /// scatter into **one** IPC round-trip — the paper's §VI "pipeline RPC
+    /// invocations" future work, ablated in `benches/fig8d_ipc_optimization.rs`.
+    fn emit_to_edges(
+        &self,
+        src: VertexId,
+        src_prop: &Self::VProp,
+        edges: &[(VertexId, &Self::EProp)],
+    ) -> Vec<(VertexId, Self::Msg)> {
+        edges
+            .iter()
+            .filter_map(|(dst, ep)| self.emit_message(src, *dst, src_prop, ep).map(|m| (*dst, m)))
+            .collect()
+    }
+
+    /// True when the engine should prefer [`VCProg::emit_to_edges`] over
+    /// per-edge emission (costs one small allocation per vertex, so only
+    /// proxied programs opt in).
+    fn prefers_batch_emit(&self) -> bool {
+        false
+    }
+}
+
+/// Output column data extracted from final vertex properties.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Column {
+    /// 64-bit integers.
+    I64(Vec<i64>),
+    /// 64-bit floats.
+    F64(Vec<f64>),
+}
+
+impl Column {
+    /// Column length.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::I64(v) => v.len(),
+            Column::F64(v) => v.len(),
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// As i64 slice.
+    pub fn as_i64(&self) -> Option<&[i64]> {
+        match self {
+            Column::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// As f64 slice.
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Column::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Materialize a program's outputs over the final property vector into named
+/// columns (used by every engine's result path).
+pub fn collect_columns<P: VCProg>(program: &P, props: &[P::VProp]) -> Vec<(String, Column)> {
+    let fields = program.output_fields();
+    let mut cols: Vec<(String, Column)> = fields
+        .iter()
+        .map(|(n, t)| {
+            let col = match t {
+                FieldType::Long => Column::I64(Vec::with_capacity(props.len())),
+                FieldType::Double => Column::F64(Vec::with_capacity(props.len())),
+                other => panic!("unsupported output field type {other:?}"),
+            };
+            (n.to_string(), col)
+        })
+        .collect();
+    for (id, prop) in props.iter().enumerate() {
+        let row = program.output(id as VertexId, prop);
+        assert_eq!(row.len(), cols.len(), "output row arity mismatch");
+        for (slot, value) in row.into_iter().enumerate() {
+            match (&mut cols[slot].1, value) {
+                (Column::I64(v), Value::Long(x)) => v.push(x),
+                (Column::F64(v), Value::Double(x)) => v.push(x),
+                (Column::F64(v), Value::Long(x)) => v.push(x as f64),
+                (c, v) => panic!("output type mismatch in column {slot}: {c:?} <- {v:?}"),
+            }
+        }
+    }
+    cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vcprog::programs::cc::ConnectedComponents;
+
+    #[test]
+    fn collect_columns_shapes() {
+        let prog = ConnectedComponents::new();
+        let props = vec![0u32, 0, 2];
+        let cols = collect_columns(&prog, &props);
+        assert_eq!(cols.len(), 1);
+        assert_eq!(cols[0].0, "component");
+        assert_eq!(cols[0].1.as_i64().unwrap(), &[0, 0, 2]);
+    }
+
+    #[test]
+    fn column_accessors() {
+        let c = Column::F64(vec![1.0, 2.0]);
+        assert_eq!(c.len(), 2);
+        assert!(!c.is_empty());
+        assert!(c.as_i64().is_none());
+        assert_eq!(c.as_f64().unwrap()[1], 2.0);
+    }
+}

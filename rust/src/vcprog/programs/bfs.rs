@@ -1,0 +1,105 @@
+//! Breadth-first search: hop distance from a root (unweighted SSSP).
+
+use crate::graph::record::{FieldType, Value};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+
+/// Hop-infinity sentinel.
+pub const UNREACHED: u32 = u32::MAX;
+
+/// BFS program computing hop distances.
+#[derive(Debug, Clone)]
+pub struct Bfs {
+    /// Root vertex.
+    pub root: VertexId,
+}
+
+impl Bfs {
+    /// BFS from `root`.
+    pub fn new(root: VertexId) -> Self {
+        Bfs { root }
+    }
+}
+
+impl VCProg for Bfs {
+    type In = ();
+    type VProp = u32;
+    type EProp = f64;
+    type Msg = u32;
+
+    fn init_vertex_attr(&self, id: VertexId, _out_degree: usize, _input: &()) -> u32 {
+        if id == self.root {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    fn empty_message(&self) -> u32 {
+        UNREACHED
+    }
+
+    fn merge_message(&self, a: &u32, b: &u32) -> u32 {
+        *a.min(b)
+    }
+
+    fn vertex_compute(&self, prop: &u32, msg: &u32, iter: Iteration) -> (u32, bool) {
+        if iter == 1 {
+            return (*prop, *prop == 0);
+        }
+        if *msg < *prop {
+            (*msg, true)
+        } else {
+            (*prop, false)
+        }
+    }
+
+    fn emit_message(
+        &self,
+        _src: VertexId,
+        _dst: VertexId,
+        src_prop: &u32,
+        _edge_prop: &f64,
+    ) -> Option<u32> {
+        if *src_prop == UNREACHED {
+            None
+        } else {
+            Some(src_prop + 1)
+        }
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+        vec![("hops", FieldType::Long)]
+    }
+
+    fn output(&self, _id: VertexId, prop: &u32) -> Vec<Value> {
+        vec![Value::Long(if *prop == UNREACHED { -1 } else { *prop as i64 })]
+    }
+
+    fn name(&self) -> &str {
+        "bfs"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laws_and_seed() {
+        let p = Bfs::new(3);
+        assert_eq!(p.merge_message(&2, &p.empty_message()), 2);
+        assert_eq!(p.init_vertex_attr(3, 0, &()), 0);
+        assert_eq!(p.init_vertex_attr(0, 0, &()), UNREACHED);
+        let (_, active) = p.vertex_compute(&0, &UNREACHED, 1);
+        assert!(active);
+        let (_, active) = p.vertex_compute(&UNREACHED, &UNREACHED, 1);
+        assert!(!active);
+    }
+
+    #[test]
+    fn unreached_output_is_minus_one() {
+        let p = Bfs::new(0);
+        assert_eq!(p.output(1, &UNREACHED), vec![Value::Long(-1)]);
+        assert_eq!(p.output(1, &4), vec![Value::Long(4)]);
+    }
+}

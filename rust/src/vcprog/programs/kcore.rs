@@ -1,0 +1,146 @@
+//! k-core decomposition membership: iterative peeling of vertices with
+//! degree < k.
+//!
+//! A vertex that drops below degree `k` removes itself and notifies its
+//! out-neighbors (message = number of removed in-neighbors, sum semiring);
+//! survivors decrement their effective degree and may cascade. On a
+//! symmetrized graph the survivors are exactly the k-core.
+
+use crate::graph::record::{FieldType, Value};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+
+/// Vertex state for peeling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoreState {
+    /// Remaining effective degree.
+    pub degree: i64,
+    /// Whether the vertex has been peeled off.
+    pub removed: bool,
+}
+
+/// k-core membership program.
+#[derive(Debug, Clone)]
+pub struct KCore {
+    /// The core order `k`.
+    pub k: i64,
+}
+
+impl KCore {
+    /// k-core with the given `k`.
+    pub fn new(k: i64) -> Self {
+        KCore { k }
+    }
+}
+
+impl VCProg for KCore {
+    type In = ();
+    type VProp = CoreState;
+    type EProp = f64;
+    type Msg = i64;
+
+    fn init_vertex_attr(&self, _id: VertexId, out_degree: usize, _input: &()) -> CoreState {
+        CoreState {
+            degree: out_degree as i64,
+            removed: false,
+        }
+    }
+
+    fn empty_message(&self) -> i64 {
+        0
+    }
+
+    fn merge_message(&self, a: &i64, b: &i64) -> i64 {
+        a + b
+    }
+
+    fn vertex_compute(&self, prop: &CoreState, msg: &i64, _iter: Iteration) -> (CoreState, bool) {
+        if prop.removed {
+            // Already peeled; stay silent.
+            return (prop.clone(), false);
+        }
+        let degree = prop.degree - msg;
+        if degree < self.k {
+            // Peel off now and notify neighbors (active → emit this round).
+            (
+                CoreState {
+                    degree,
+                    removed: true,
+                },
+                true,
+            )
+        } else {
+            (
+                CoreState {
+                    degree,
+                    removed: false,
+                },
+                false,
+            )
+        }
+    }
+
+    fn emit_message(
+        &self,
+        _src: VertexId,
+        _dst: VertexId,
+        src_prop: &CoreState,
+        _edge_prop: &f64,
+    ) -> Option<i64> {
+        // Only just-removed vertices are active, so this fires exactly once
+        // per removed vertex.
+        if src_prop.removed {
+            Some(1)
+        } else {
+            None
+        }
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+        vec![("in_core", FieldType::Long)]
+    }
+
+    fn output(&self, _id: VertexId, prop: &CoreState) -> Vec<Value> {
+        vec![Value::Long(!prop.removed as i64)]
+    }
+
+    fn name(&self) -> &str {
+        "kcore"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_degree_vertex_peels_immediately() {
+        let p = KCore::new(2);
+        let s = p.init_vertex_attr(0, 1, &());
+        let (s2, active) = p.vertex_compute(&s, &0, 1);
+        assert!(s2.removed);
+        assert!(active);
+        assert_eq!(p.emit_message(0, 1, &s2, &1.0), Some(1));
+    }
+
+    #[test]
+    fn high_degree_vertex_survives_then_cascades() {
+        let p = KCore::new(2);
+        let s = p.init_vertex_attr(0, 2, &());
+        let (s1, active) = p.vertex_compute(&s, &0, 1);
+        assert!(!s1.removed);
+        assert!(!active);
+        // Loses one neighbor → degree 1 < 2 → peel.
+        let (s2, active) = p.vertex_compute(&s1, &1, 2);
+        assert!(s2.removed);
+        assert!(active);
+    }
+
+    #[test]
+    fn removed_vertices_stay_silent() {
+        let p = KCore::new(2);
+        let s = CoreState { degree: 0, removed: true };
+        let (s2, active) = p.vertex_compute(&s, &3, 5);
+        assert!(s2.removed);
+        assert!(!active);
+    }
+}

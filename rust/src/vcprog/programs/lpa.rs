@@ -1,0 +1,174 @@
+//! Community detection by label propagation (LPA).
+//!
+//! Each vertex adopts the most frequent label among its in-neighbors, with
+//! deterministic tie-breaking (smallest label wins). Messages carry a small
+//! label histogram; the merge sums counts, which is commutative and
+//! associative with the empty histogram as identity — demonstrating that
+//! VCProg handles non-scalar message algebras.
+
+use crate::graph::record::{FieldType, Value};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+
+/// A sparse label histogram, kept sorted by label.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Histogram {
+    /// `(label, count)` pairs, ascending by label.
+    pub counts: Vec<(u32, u32)>,
+}
+
+impl Histogram {
+    /// Singleton histogram.
+    pub fn single(label: u32) -> Self {
+        Histogram {
+            counts: vec![(label, 1)],
+        }
+    }
+
+    /// Merge two histograms by summing counts (sorted merge).
+    pub fn merge(&self, other: &Histogram) -> Histogram {
+        let (a, b) = (&self.counts, &other.counts);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push((a[i].0, a[i].1 + b[j].1));
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        Histogram { counts: out }
+    }
+
+    /// The winning label: max count, ties to the smallest label.
+    pub fn argmax(&self) -> Option<u32> {
+        self.counts
+            .iter()
+            .max_by(|(la, ca), (lb, cb)| ca.cmp(cb).then(lb.cmp(la)))
+            .map(|(l, _)| *l)
+    }
+}
+
+/// Label-propagation community detection.
+#[derive(Debug, Clone)]
+pub struct LabelPropagation {
+    /// Number of propagation rounds.
+    pub iterations: u32,
+}
+
+impl LabelPropagation {
+    /// LPA with `iterations` propagation rounds.
+    pub fn new(iterations: u32) -> Self {
+        LabelPropagation { iterations }
+    }
+
+    /// Total VCProg rounds: 1 broadcast + `iterations` updates.
+    pub fn rounds(&self) -> u32 {
+        self.iterations + 1
+    }
+}
+
+impl VCProg for LabelPropagation {
+    type In = ();
+    type VProp = u32;
+    type EProp = f64;
+    type Msg = Histogram;
+
+    fn init_vertex_attr(&self, id: VertexId, _out_degree: usize, _input: &()) -> u32 {
+        id
+    }
+
+    fn empty_message(&self) -> Histogram {
+        Histogram::default()
+    }
+
+    fn merge_message(&self, a: &Histogram, b: &Histogram) -> Histogram {
+        a.merge(b)
+    }
+
+    fn vertex_compute(&self, prop: &u32, msg: &Histogram, iter: Iteration) -> (u32, bool) {
+        if iter == 1 {
+            return (*prop, true);
+        }
+        let label = msg.argmax().unwrap_or(*prop);
+        (label, iter < self.rounds())
+    }
+
+    fn emit_message(
+        &self,
+        _src: VertexId,
+        _dst: VertexId,
+        src_prop: &u32,
+        _edge_prop: &f64,
+    ) -> Option<Histogram> {
+        Some(Histogram::single(*src_prop))
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+        vec![("community", FieldType::Long)]
+    }
+
+    fn output(&self, _id: VertexId, prop: &u32) -> Vec<Value> {
+        vec![Value::Long(*prop as i64)]
+    }
+
+    fn name(&self) -> &str {
+        "lpa"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_merge_commutative() {
+        let a = Histogram { counts: vec![(1, 2), (3, 1)] };
+        let b = Histogram { counts: vec![(2, 5), (3, 4)] };
+        assert_eq!(a.merge(&b), b.merge(&a));
+        assert_eq!(
+            a.merge(&b).counts,
+            vec![(1, 2), (2, 5), (3, 5)]
+        );
+    }
+
+    #[test]
+    fn empty_is_identity() {
+        let a = Histogram { counts: vec![(7, 3)] };
+        assert_eq!(a.merge(&Histogram::default()), a);
+    }
+
+    #[test]
+    fn argmax_breaks_ties_low() {
+        let h = Histogram { counts: vec![(2, 3), (5, 3), (9, 1)] };
+        assert_eq!(h.argmax(), Some(2));
+        assert_eq!(Histogram::default().argmax(), None);
+    }
+
+    #[test]
+    fn keeps_label_without_messages() {
+        let p = LabelPropagation::new(2);
+        let (l, _) = p.vertex_compute(&4, &Histogram::default(), 2);
+        assert_eq!(l, 4);
+    }
+
+    #[test]
+    fn stops_after_rounds() {
+        let p = LabelPropagation::new(2);
+        let (_, active) = p.vertex_compute(&0, &Histogram::single(1), 2);
+        assert!(active);
+        let (_, active) = p.vertex_compute(&0, &Histogram::single(1), 3);
+        assert!(!active);
+    }
+}

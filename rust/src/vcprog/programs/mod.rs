@@ -1,0 +1,27 @@
+//! Built-in VCProg programs.
+//!
+//! Every algorithm here is written **against the VCProg API only** — no
+//! engine internals — which is what the paper's "Write Once, Run Anywhere"
+//! property requires. The native-operator layer ([`crate::operators`]) wraps
+//! these with friendlier entry points, mirroring the paper's split between
+//! the VCProg API and the native operator API (Fig 3 bottom).
+
+pub mod bfs;
+pub mod cc;
+pub mod degree;
+pub mod kcore;
+pub mod lpa;
+pub mod pagerank;
+pub mod reachability;
+pub mod sssp;
+pub mod triangle;
+
+pub use bfs::Bfs;
+pub use cc::ConnectedComponents;
+pub use degree::DegreeCount;
+pub use kcore::KCore;
+pub use lpa::LabelPropagation;
+pub use pagerank::PageRank;
+pub use reachability::Reachability;
+pub use sssp::SsspBellmanFord;
+pub use triangle::TriangleCount;

@@ -1,0 +1,160 @@
+//! PageRank as a VCProg program.
+//!
+//! Standard message-passing PageRank (the paper's PR workload): each active
+//! vertex sends `rank / out_degree` along its out-edges; each vertex updates
+//! `rank = (1-d)/N + d * Σ incoming`. Runs for a fixed number of iterations
+//! so results are engine-order independent up to floating-point summation
+//! order (the cross-engine tests compare with a small tolerance).
+
+use crate::graph::record::{FieldType, Value};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+
+/// Per-vertex PageRank state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrState {
+    /// Current rank.
+    pub rank: f64,
+    /// Cached out-degree (used by emit).
+    pub out_degree: u32,
+}
+
+/// PageRank program.
+#[derive(Debug, Clone)]
+pub struct PageRank {
+    /// Total number of vertices `N`.
+    pub num_vertices: usize,
+    /// Damping factor (paper-typical 0.85).
+    pub damping: f64,
+    /// Number of rank-update iterations to run.
+    pub iterations: u32,
+}
+
+impl PageRank {
+    /// PageRank with `iterations` updates over an `n`-vertex graph.
+    pub fn new(num_vertices: usize, iterations: u32) -> Self {
+        PageRank {
+            num_vertices,
+            damping: 0.85,
+            iterations,
+        }
+    }
+
+    /// Total VCProg rounds needed: one send-only round plus `iterations`
+    /// update rounds (engines should set `max_iter >= rounds()`).
+    pub fn rounds(&self) -> u32 {
+        self.iterations + 1
+    }
+}
+
+impl VCProg for PageRank {
+    type In = ();
+    type VProp = PrState;
+    type EProp = f64;
+    type Msg = f64;
+
+    fn init_vertex_attr(&self, _id: VertexId, out_degree: usize, _input: &()) -> PrState {
+        PrState {
+            rank: 1.0 / self.num_vertices as f64,
+            out_degree: out_degree as u32,
+        }
+    }
+
+    fn empty_message(&self) -> f64 {
+        0.0
+    }
+
+    fn merge_message(&self, a: &f64, b: &f64) -> f64 {
+        a + b
+    }
+
+    fn vertex_compute(&self, prop: &PrState, msg: &f64, iter: Iteration) -> (PrState, bool) {
+        if iter == 1 {
+            // Round 1 only seeds the first messages; ranks stay 1/N.
+            return (prop.clone(), iter < self.rounds());
+        }
+        let rank = (1.0 - self.damping) / self.num_vertices as f64 + self.damping * msg;
+        (
+            PrState {
+                rank,
+                out_degree: prop.out_degree,
+            },
+            iter < self.rounds(),
+        )
+    }
+
+    fn emit_message(
+        &self,
+        _src: VertexId,
+        _dst: VertexId,
+        src_prop: &PrState,
+        _edge_prop: &f64,
+    ) -> Option<f64> {
+        if src_prop.out_degree == 0 {
+            None
+        } else {
+            Some(src_prop.rank / src_prop.out_degree as f64)
+        }
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+        vec![("rank", FieldType::Double)]
+    }
+
+    fn output(&self, _id: VertexId, prop: &PrState) -> Vec<Value> {
+        vec![Value::Double(prop.rank)]
+    }
+
+    fn name(&self) -> &str {
+        "pagerank"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_laws() {
+        let pr = PageRank::new(10, 5);
+        let e = pr.empty_message();
+        assert_eq!(pr.merge_message(&2.5, &e), 2.5);
+        assert_eq!(pr.merge_message(&1.0, &2.0), pr.merge_message(&2.0, &1.0));
+    }
+
+    #[test]
+    fn init_uniform() {
+        let pr = PageRank::new(4, 3);
+        let s = pr.init_vertex_attr(0, 7, &());
+        assert_eq!(s.rank, 0.25);
+        assert_eq!(s.out_degree, 7);
+    }
+
+    #[test]
+    fn dangling_vertex_emits_nothing() {
+        let pr = PageRank::new(4, 3);
+        let s = PrState { rank: 0.25, out_degree: 0 };
+        assert!(pr.emit_message(0, 1, &s, &1.0).is_none());
+    }
+
+    #[test]
+    fn compute_applies_damping() {
+        let pr = PageRank::new(10, 3);
+        let s = PrState { rank: 0.1, out_degree: 2 };
+        let (s2, active) = pr.vertex_compute(&s, &0.2, 2);
+        let expect = 0.15 / 10.0 + 0.85 * 0.2;
+        assert!((s2.rank - expect).abs() < 1e-12);
+        assert!(active);
+        // Final round: inactive afterwards.
+        let (_, active) = pr.vertex_compute(&s, &0.2, pr.rounds());
+        assert!(!active);
+    }
+
+    #[test]
+    fn first_round_preserves_rank() {
+        let pr = PageRank::new(10, 3);
+        let s = pr.init_vertex_attr(0, 1, &());
+        let (s2, active) = pr.vertex_compute(&s, &0.0, 1);
+        assert_eq!(s2.rank, s.rank);
+        assert!(active);
+    }
+}

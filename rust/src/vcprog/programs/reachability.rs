@@ -1,0 +1,102 @@
+//! Reachability from a root: boolean frontier propagation.
+//!
+//! The minimal "is there a path root→v" program — a BFS without distances,
+//! useful as the simplest possible VCProg example in the docs.
+
+use crate::graph::record::{FieldType, Value};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+
+/// Reachability program.
+#[derive(Debug, Clone)]
+pub struct Reachability {
+    /// Root vertex.
+    pub root: VertexId,
+}
+
+impl Reachability {
+    /// Reachability from `root`.
+    pub fn new(root: VertexId) -> Self {
+        Reachability { root }
+    }
+}
+
+impl VCProg for Reachability {
+    type In = ();
+    type VProp = bool;
+    type EProp = f64;
+    type Msg = bool;
+
+    fn init_vertex_attr(&self, id: VertexId, _out_degree: usize, _input: &()) -> bool {
+        id == self.root
+    }
+
+    fn empty_message(&self) -> bool {
+        false
+    }
+
+    fn merge_message(&self, a: &bool, b: &bool) -> bool {
+        *a || *b
+    }
+
+    fn vertex_compute(&self, prop: &bool, msg: &bool, iter: Iteration) -> (bool, bool) {
+        if iter == 1 {
+            return (*prop, *prop); // root starts the wave
+        }
+        if *msg && !*prop {
+            (true, true) // newly reached → propagate
+        } else {
+            (*prop, false)
+        }
+    }
+
+    fn emit_message(
+        &self,
+        _src: VertexId,
+        _dst: VertexId,
+        src_prop: &bool,
+        _edge_prop: &f64,
+    ) -> Option<bool> {
+        if *src_prop {
+            Some(true)
+        } else {
+            None
+        }
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+        vec![("reachable", FieldType::Long)]
+    }
+
+    fn output(&self, _id: VertexId, prop: &bool) -> Vec<Value> {
+        vec![Value::Long(*prop as i64)]
+    }
+
+    fn name(&self) -> &str {
+        "reachability"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn or_algebra() {
+        let p = Reachability::new(0);
+        assert!(p.merge_message(&true, &false));
+        assert!(!p.merge_message(&false, &p.empty_message()));
+    }
+
+    #[test]
+    fn wave_semantics() {
+        let p = Reachability::new(0);
+        // Root active in round 1.
+        assert_eq!(p.vertex_compute(&true, &false, 1), (true, true));
+        // Non-root idle in round 1.
+        assert_eq!(p.vertex_compute(&false, &false, 1), (false, false));
+        // Newly reached propagates once.
+        assert_eq!(p.vertex_compute(&false, &true, 2), (true, true));
+        // Already reached stays silent.
+        assert_eq!(p.vertex_compute(&true, &true, 3), (true, false));
+    }
+}

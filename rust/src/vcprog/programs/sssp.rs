@@ -1,0 +1,153 @@
+//! Single-source shortest path (Bellman-Ford) — the paper's running example
+//! (Fig 3, `UniSSSP`).
+//!
+//! Distances are kept as `i64` (edge weights are rounded to integers) so the
+//! min-plus semiring is exact and every engine returns bit-identical
+//! results. `i64::MAX` plays the paper's `sys.maxsize` infinity.
+
+use crate::graph::record::{FieldType, Value};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+
+/// Infinity distance (paper: `sys.maxsize`).
+pub const INF: i64 = i64::MAX;
+
+/// Bellman-Ford SSSP program.
+#[derive(Debug, Clone)]
+pub struct SsspBellmanFord {
+    /// Source vertex (paper: `self.ROOT`).
+    pub root: VertexId,
+}
+
+impl SsspBellmanFord {
+    /// SSSP from `root`.
+    pub fn new(root: VertexId) -> Self {
+        SsspBellmanFord { root }
+    }
+}
+
+impl VCProg for SsspBellmanFord {
+    type In = ();
+    type VProp = i64;
+    type EProp = f64;
+    type Msg = i64;
+
+    fn init_vertex_attr(&self, id: VertexId, _out_degree: usize, _input: &()) -> i64 {
+        if id == self.root {
+            0
+        } else {
+            INF
+        }
+    }
+
+    fn empty_message(&self) -> i64 {
+        INF
+    }
+
+    fn merge_message(&self, a: &i64, b: &i64) -> i64 {
+        *a.min(b)
+    }
+
+    fn vertex_compute(&self, prop: &i64, msg: &i64, iter: Iteration) -> (i64, bool) {
+        let mut dist = *prop;
+        let mut active = false;
+        if *msg < dist {
+            dist = *msg;
+            active = true;
+        }
+        // Paper Fig 3: in the first iteration only the root activates (to
+        // seed the propagation).
+        if iter == 1 && dist == 0 && self.rooted(prop) {
+            active = true;
+        }
+        (dist, active)
+    }
+
+    fn emit_message(
+        &self,
+        _src: VertexId,
+        _dst: VertexId,
+        src_prop: &i64,
+        edge_prop: &f64,
+    ) -> Option<i64> {
+        if *src_prop == INF {
+            None
+        } else {
+            Some(src_prop.saturating_add(edge_prop.round() as i64))
+        }
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+        vec![("distance", FieldType::Long)]
+    }
+
+    fn output(&self, _id: VertexId, prop: &i64) -> Vec<Value> {
+        vec![Value::Long(*prop)]
+    }
+
+    fn name(&self) -> &str {
+        "sssp"
+    }
+}
+
+impl SsspBellmanFord {
+    /// True when this property can only belong to the root in iteration 1
+    /// (distance 0 before any message arrived).
+    fn rooted(&self, prop: &i64) -> bool {
+        *prop == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_is_min_with_inf_identity() {
+        let p = SsspBellmanFord::new(0);
+        assert_eq!(p.merge_message(&5, &3), 3);
+        assert_eq!(p.merge_message(&5, &INF), 5);
+        assert_eq!(p.merge_message(&INF, &INF), INF);
+    }
+
+    #[test]
+    fn init_marks_root() {
+        let p = SsspBellmanFord::new(2);
+        assert_eq!(p.init_vertex_attr(2, 3, &()), 0);
+        assert_eq!(p.init_vertex_attr(0, 3, &()), INF);
+    }
+
+    #[test]
+    fn root_active_in_round_one() {
+        let p = SsspBellmanFord::new(0);
+        let (d, active) = p.vertex_compute(&0, &INF, 1);
+        assert_eq!(d, 0);
+        assert!(active);
+        let (d, active) = p.vertex_compute(&INF, &INF, 1);
+        assert_eq!(d, INF);
+        assert!(!active);
+    }
+
+    #[test]
+    fn improvement_activates() {
+        let p = SsspBellmanFord::new(0);
+        let (d, active) = p.vertex_compute(&10, &7, 3);
+        assert_eq!(d, 7);
+        assert!(active);
+        let (d, active) = p.vertex_compute(&7, &9, 4);
+        assert_eq!(d, 7);
+        assert!(!active);
+    }
+
+    #[test]
+    fn unreached_vertices_emit_nothing() {
+        let p = SsspBellmanFord::new(0);
+        assert!(p.emit_message(1, 2, &INF, &4.0).is_none());
+        assert_eq!(p.emit_message(0, 1, &3, &4.0), Some(7));
+    }
+
+    #[test]
+    fn saturating_add_guards_overflow() {
+        let p = SsspBellmanFord::new(0);
+        assert_eq!(p.emit_message(0, 1, &(INF - 1), &4.0), Some(INF));
+    }
+}

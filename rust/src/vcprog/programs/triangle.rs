@@ -1,0 +1,229 @@
+//! Triangle counting as a VCProg program.
+//!
+//! Three rounds on a symmetrized **simple** graph:
+//!
+//! 1. every vertex broadcasts `(own id, ∅)`;
+//! 2. each vertex learns its in-neighbor set (the senders of round-1
+//!    messages), stores it, and broadcasts `(own id, neighbor set)`;
+//! 3. each vertex intersects **every received set individually** with its
+//!    own neighbor set. A triangle through `v` is found twice (once via each
+//!    of its other two corners), so `triangles(v) = hits/2` and the global
+//!    count is `Σ hits / 6`.
+//!
+//! Messages are sender-tagged sets merged by sender id — a commutative,
+//! associative multiset union with `∅` as identity. Per-sender tagging is
+//! essential: merging the sets themselves would collapse common neighbors
+//! shared by several senders and under-count (caught by the oracle tests).
+//! This program exercises variable-size message payloads through every
+//! engine and the IPC serialization path.
+
+use crate::graph::record::{FieldType, Value};
+use crate::vcprog::{Iteration, VCProg, VertexId};
+
+fn intersect_count(a: &[u32], b: &[u32]) -> u64 {
+    let (mut i, mut j, mut c) = (0, 0, 0u64);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                c += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Message: sender-tagged neighbor sets, ascending by sender.
+pub type TriMsg = Vec<(u32, Vec<u32>)>;
+
+/// Vertex state across the three rounds.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TriState {
+    /// Sorted in-neighbor set (learned in round 2).
+    pub neighbors: Vec<u32>,
+    /// Set once neighbors have been learned (distinguishes rounds in emit).
+    pub learned: bool,
+    /// 2 × number of triangles through this vertex (from round 3).
+    pub hits: u64,
+}
+
+/// Triangle-count program (expects a symmetrized simple graph).
+#[derive(Debug, Clone, Default)]
+pub struct TriangleCount;
+
+impl TriangleCount {
+    /// New triangle counter.
+    pub fn new() -> Self {
+        TriangleCount
+    }
+
+    /// Global triangle count from the per-vertex `hits` output column.
+    pub fn global_from_hits(hits: &[i64]) -> u64 {
+        let total: i64 = hits.iter().sum();
+        (total / 6) as u64
+    }
+}
+
+impl VCProg for TriangleCount {
+    type In = ();
+    type VProp = TriState;
+    type EProp = f64;
+    type Msg = TriMsg;
+
+    fn init_vertex_attr(&self, _id: VertexId, _out_degree: usize, _input: &()) -> TriState {
+        TriState::default()
+    }
+
+    fn empty_message(&self) -> TriMsg {
+        Vec::new()
+    }
+
+    fn merge_message(&self, a: &TriMsg, b: &TriMsg) -> TriMsg {
+        // Sorted merge by sender id. On a simple graph each sender appears at
+        // most once per round, so equal keys only arise from merging with
+        // self-duplicates; keep both sides' payload union in that case.
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[i].clone());
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(b[j].clone());
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push(a[i].clone());
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        out
+    }
+
+    fn vertex_compute(&self, prop: &TriState, msg: &TriMsg, iter: Iteration) -> (TriState, bool) {
+        match iter {
+            1 => (prop.clone(), true), // broadcast own id
+            2 => {
+                // Senders of round-1 messages are exactly the in-neighbors.
+                let neighbors: Vec<u32> = msg.iter().map(|(s, _)| *s).collect();
+                (
+                    TriState {
+                        neighbors,
+                        learned: true,
+                        hits: 0,
+                    },
+                    true, // broadcast neighbor set
+                )
+            }
+            3 => {
+                let hits: u64 = msg
+                    .iter()
+                    .map(|(_, set)| intersect_count(&prop.neighbors, set))
+                    .sum();
+                (
+                    TriState {
+                        neighbors: prop.neighbors.clone(),
+                        learned: true,
+                        hits,
+                    },
+                    false,
+                )
+            }
+            _ => (prop.clone(), false),
+        }
+    }
+
+    fn emit_message(
+        &self,
+        src: VertexId,
+        _dst: VertexId,
+        src_prop: &TriState,
+        _edge_prop: &f64,
+    ) -> Option<TriMsg> {
+        if !src_prop.learned {
+            // Round 1: announce own id.
+            Some(vec![(src, Vec::new())])
+        } else {
+            // Round 2: send the neighbor set, tagged by sender.
+            Some(vec![(src, src_prop.neighbors.clone())])
+        }
+    }
+
+    fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+        vec![("hits", FieldType::Long)]
+    }
+
+    fn output(&self, _id: VertexId, prop: &TriState) -> Vec<Value> {
+        vec![Value::Long(prop.hits as i64)]
+    }
+
+    fn name(&self) -> &str {
+        "triangle"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_laws() {
+        let t = TriangleCount::new();
+        let a: TriMsg = vec![(1, vec![2, 3]), (5, vec![1])];
+        let b: TriMsg = vec![(2, vec![9]), (7, vec![])];
+        assert_eq!(t.merge_message(&a, &b), t.merge_message(&b, &a));
+        assert_eq!(t.merge_message(&a, &t.empty_message()), a);
+        let merged = t.merge_message(&a, &b);
+        let senders: Vec<u32> = merged.iter().map(|(s, _)| *s).collect();
+        assert_eq!(senders, vec![1, 2, 5, 7]);
+    }
+
+    #[test]
+    fn intersect_counts() {
+        assert_eq!(intersect_count(&[1, 2, 3], &[2, 3, 4]), 2);
+        assert_eq!(intersect_count(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn round_progression_single_triangle() {
+        // Triangle 0-1-2 seen from vertex 0.
+        let t = TriangleCount::new();
+        let s0 = t.init_vertex_attr(0, 2, &());
+        let (s1, a1) = t.vertex_compute(&s0, &vec![], 1);
+        assert!(a1);
+        // Round 2: messages from in-neighbors 1 and 2.
+        let msg2: TriMsg = vec![(1, vec![]), (2, vec![])];
+        let (s2, a2) = t.vertex_compute(&s1, &msg2, 2);
+        assert!(a2);
+        assert_eq!(s2.neighbors, vec![1, 2]);
+        // Round 3: neighbor sets of 1 and 2.
+        let msg3: TriMsg = vec![(1, vec![0, 2]), (2, vec![0, 1])];
+        let (s3, a3) = t.vertex_compute(&s2, &msg3, 3);
+        assert!(!a3);
+        assert_eq!(s3.hits, 2, "one triangle → 2 hits per corner");
+    }
+
+    #[test]
+    fn shared_edge_triangles_counted_per_sender() {
+        // Triangles (0,1,2) and (0,1,3) share edge 0-1; from vertex 0:
+        // neighbors {1,2,3}; sets: N(1)={0,2,3}, N(2)={0,1}, N(3)={0,1}.
+        let t = TriangleCount::new();
+        let s = TriState {
+            neighbors: vec![1, 2, 3],
+            learned: true,
+            hits: 0,
+        };
+        let msg: TriMsg = vec![(1, vec![0, 2, 3]), (2, vec![0, 1]), (3, vec![0, 1])];
+        let (s3, _) = t.vertex_compute(&s, &msg, 3);
+        assert_eq!(s3.hits, 4, "two triangles → 4 hits at vertex 0");
+    }
+}

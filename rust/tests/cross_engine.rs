@@ -1,0 +1,224 @@
+//! Integration: cross-engine equivalence — the paper's "Write Once, Run
+//! Anywhere" claim, checked for every built-in program over seeded random
+//! graphs and adversarial topologies.
+
+use unigps::engine::validate::{approx, check_all_engines, exact};
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::builder::from_pairs;
+use unigps::graph::generate;
+use unigps::operators::symmetrized;
+use unigps::util::propcheck::{forall, Config};
+use unigps::vcprog::programs::*;
+
+fn opts() -> RunOptions {
+    RunOptions::default().with_workers(3)
+}
+
+#[test]
+fn sssp_equivalent_on_random_graphs() {
+    forall(
+        Config::new(12, 0x55),
+        |rng| {
+            let n = 10 + rng.usize_below(150);
+            let m = n * (1 + rng.usize_below(6));
+            generate::random_for_tests(n, m, rng.next_u64())
+        },
+        |g| {
+            check_all_engines(g, &SsspBellmanFord::new(0), &opts(), exact)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn cc_equivalent_on_random_graphs() {
+    forall(
+        Config::new(12, 0x66),
+        |rng| {
+            let n = 10 + rng.usize_below(120);
+            let m = n * (1 + rng.usize_below(4));
+            let g = generate::random_for_tests(n, m, rng.next_u64());
+            symmetrized(&g)
+        },
+        |g| {
+            check_all_engines(g, &ConnectedComponents::new(), &opts(), exact)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn bfs_equivalent_on_random_graphs() {
+    forall(
+        Config::new(10, 0x77),
+        |rng| {
+            let n = 10 + rng.usize_below(100);
+            generate::random_for_tests(n, n * 3, rng.next_u64())
+        },
+        |g| {
+            check_all_engines(g, &Bfs::new(0), &opts(), exact)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn pagerank_equivalent_within_fp_tolerance() {
+    forall(
+        Config::new(8, 0x88),
+        |rng| {
+            let n = 10 + rng.usize_below(100);
+            generate::random_for_tests(n, n * 4, rng.next_u64())
+        },
+        |g| {
+            let prog = PageRank::new(g.num_vertices(), 8);
+            let mut o = opts();
+            o.max_iter = prog.rounds();
+            let cmp = approx(1e-9);
+            check_all_engines(g, &prog, &o, |a, b| cmp(&a.rank, &b.rank))
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn degree_and_kcore_and_reachability_equivalent() {
+    forall(
+        Config::new(8, 0x99),
+        |rng| {
+            let n = 8 + rng.usize_below(80);
+            let g = generate::random_for_tests(n, n * 3, rng.next_u64());
+            symmetrized(&g)
+        },
+        |g| {
+            check_all_engines(g, &DegreeCount::new(), &opts(), exact)
+                .map_err(|e| format!("degree: {e}"))?;
+            check_all_engines(g, &KCore::new(3), &opts(), exact)
+                .map_err(|e| format!("kcore: {e}"))?;
+            check_all_engines(g, &Reachability::new(0), &opts(), exact)
+                .map_err(|e| format!("reachability: {e}"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn triangle_equivalent_and_matches_oracle() {
+    forall(
+        Config::new(6, 0xAA),
+        |rng| {
+            let n = 8 + rng.usize_below(40);
+            let g = generate::random_for_tests(n, n * 3, rng.next_u64());
+            symmetrized(&g)
+        },
+        |g| {
+            let props = check_all_engines(g, &TriangleCount::new(), &opts(), exact)
+                .map_err(|e| e.to_string())?;
+            let hits: Vec<i64> = props.iter().map(|p| p.hits as i64).collect();
+            let got = TriangleCount::global_from_hits(&hits);
+            let want = unigps::engine::baselines::triangle_count(g);
+            if got != want {
+                return Err(format!("triangles {got} != oracle {want}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lpa_equivalent_across_engines() {
+    // LPA is iteration-count-deterministic; engines must agree exactly.
+    forall(
+        Config::new(6, 0xAB),
+        |rng| {
+            let n = 8 + rng.usize_below(60);
+            let g = generate::random_for_tests(n, n * 3, rng.next_u64());
+            symmetrized(&g)
+        },
+        |g| {
+            let prog = LabelPropagation::new(4);
+            let mut o = opts();
+            o.max_iter = prog.rounds();
+            check_all_engines(g, &prog, &o, exact)
+                .map(|_| ())
+                .map_err(|e| e.to_string())
+        },
+    );
+}
+
+#[test]
+fn adversarial_topologies() {
+    // Star (extreme skew), grid (long diameter), singleton + isolated.
+    let graphs = vec![
+        generate::star(200, true),
+        generate::grid(20, 20, true),
+        from_pairs(true, &[(0, 0)]), // single self-loop
+    ];
+    for g in &graphs {
+        check_all_engines(g, &SsspBellmanFord::new(0), &opts(), exact).unwrap();
+        check_all_engines(&symmetrized(g), &ConnectedComponents::new(), &opts(), exact).unwrap();
+    }
+}
+
+#[test]
+fn partition_and_worker_invariance() {
+    use unigps::graph::partition::PartitionStrategy;
+    let g = generate::random_for_tests(150, 900, 0xBEEF);
+    let reference = run_typed(EngineKind::Pregel, &g, &SsspBellmanFord::new(0), &opts())
+        .unwrap()
+        .props;
+    for workers in [1, 2, 5, 8] {
+        for strat in [
+            PartitionStrategy::Hash,
+            PartitionStrategy::Range,
+            PartitionStrategy::EdgeBalanced,
+        ] {
+            let mut o = RunOptions::default().with_workers(workers);
+            o.partition = strat;
+            for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
+                let got = run_typed(kind, &g, &SsspBellmanFord::new(0), &o).unwrap().props;
+                assert_eq!(got, reference, "{kind} w={workers} {strat:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn merge_algebra_laws_hold() {
+    // merge(m, empty) == m and merge(a,b) == merge(b,a) for built-ins.
+    let sssp = SsspBellmanFord::new(0);
+    let cc = ConnectedComponents::new();
+    let pr = PageRank::new(100, 5);
+    forall(
+        Config::new(64, 0xCC),
+        |rng| (rng.next_u64() as i64 >> 1, rng.next_u64() as i64 >> 1, rng.next_u64()),
+        |(a, b, s)| {
+            use unigps::vcprog::VCProg;
+            if sssp.merge_message(a, b) != sssp.merge_message(b, a) {
+                return Err("sssp merge not commutative".into());
+            }
+            if sssp.merge_message(a, &sssp.empty_message()) != *a {
+                return Err("sssp empty not identity".into());
+            }
+            let (la, lb) = ((*a as u32) >> 1, (*b as u32) >> 1);
+            if cc.merge_message(&la, &lb) != cc.merge_message(&lb, &la) {
+                return Err("cc merge not commutative".into());
+            }
+            if cc.merge_message(&la, &cc.empty_message()) != la {
+                return Err("cc empty not identity".into());
+            }
+            let (fa, fb) = ((*s as f64) * 1e-19, (la as f64) * 1e-3);
+            if pr.merge_message(&fa, &pr.empty_message()) != fa {
+                return Err("pr empty not identity".into());
+            }
+            if pr.merge_message(&fa, &fb) != pr.merge_message(&fb, &fa) {
+                return Err("pr merge not commutative".into());
+            }
+            Ok(())
+        },
+    );
+}

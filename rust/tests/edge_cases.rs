@@ -1,0 +1,143 @@
+//! Integration: adversarial/edge-case inputs through every engine.
+
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::builder::{from_pairs, GraphBuilder};
+use unigps::operators::{symmetrized, Operator, OperatorBuilder};
+use unigps::vcprog::programs::sssp::{SsspBellmanFord, INF};
+use unigps::vcprog::programs::{ConnectedComponents, DegreeCount, PageRank};
+
+fn opts(w: usize) -> RunOptions {
+    RunOptions::default().with_workers(w)
+}
+
+#[test]
+fn single_vertex_no_edges() {
+    let mut b: GraphBuilder<f64> = GraphBuilder::new(true);
+    b.ensure_vertices(1);
+    let g = b.build().unwrap();
+    for kind in EngineKind::vcprog_engines() {
+        let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert_eq!(r.props, vec![0], "{kind}");
+        assert!(r.metrics.converged);
+    }
+}
+
+#[test]
+fn self_loops_deliver_next_round() {
+    // Self-loop on the root: SSSP must not livelock (dist+w ≥ dist ⇒ no
+    // improvement ⇒ convergence).
+    let mut b = GraphBuilder::new(true);
+    b.add_edge(0, 0, 1.0);
+    b.add_edge(0, 1, 2.0);
+    let g = b.build().unwrap();
+    for kind in EngineKind::vcprog_engines() {
+        let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert_eq!(r.props, vec![0, 2], "{kind}");
+        assert!(r.metrics.converged, "{kind}");
+    }
+}
+
+#[test]
+fn zero_weight_cycle_converges() {
+    // 0 ⇄ 1 with zero weights: relaxation reaches a fixpoint, engines must
+    // terminate (no strictly-improving update exists).
+    let mut b = GraphBuilder::new(true);
+    b.add_edge(0, 1, 0.0);
+    b.add_edge(1, 0, 0.0);
+    let g = b.build().unwrap();
+    for kind in EngineKind::vcprog_engines() {
+        let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert_eq!(r.props, vec![0, 0], "{kind}");
+        assert!(r.metrics.converged, "{kind}");
+    }
+}
+
+#[test]
+fn parallel_edges_counted_by_degree() {
+    let mut b = GraphBuilder::new(true);
+    b.add_edge(0, 1, 3.0);
+    b.add_edge(0, 1, 7.0);
+    let g = b.build().unwrap();
+    for kind in EngineKind::vcprog_engines() {
+        let r = run_typed(kind, &g, &DegreeCount::new(), &opts(2)).unwrap();
+        assert_eq!(r.props[0].out, 2, "{kind}");
+        assert_eq!(r.props[1].inn, 2, "{kind}");
+        // And SSSP takes the cheaper parallel edge.
+        let s = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts(2)).unwrap();
+        assert_eq!(s.props[1], 3, "{kind}");
+    }
+}
+
+#[test]
+fn max_iter_zero_returns_init_state() {
+    let g = from_pairs(true, &[(0, 1)]);
+    let mut o = opts(2);
+    o.max_iter = 0;
+    for kind in EngineKind::vcprog_engines() {
+        let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &o).unwrap();
+        assert_eq!(r.props, vec![0, INF], "{kind}: no iterations → init state");
+        assert_eq!(r.metrics.supersteps, 0, "{kind}");
+    }
+}
+
+#[test]
+fn more_workers_than_vertices() {
+    let g = from_pairs(true, &[(0, 1), (1, 2)]);
+    for kind in EngineKind::vcprog_engines() {
+        let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts(64)).unwrap();
+        assert_eq!(r.props, vec![0, 1, 2], "{kind}");
+    }
+}
+
+#[test]
+fn disconnected_forest_cc() {
+    // 100 isolated vertices → 100 singleton components.
+    let mut b: GraphBuilder<f64> = GraphBuilder::new(true);
+    b.ensure_vertices(100);
+    let g = b.build().unwrap();
+    for kind in EngineKind::vcprog_engines() {
+        let r = run_typed(kind, &g, &ConnectedComponents::new(), &opts(4)).unwrap();
+        for (v, &label) in r.props.iter().enumerate() {
+            assert_eq!(label, v as u32, "{kind}");
+        }
+    }
+}
+
+#[test]
+fn dangling_mass_pagerank_consistent_across_engines() {
+    // Dangling sink: engines must agree bit-for-bit on structure (rank of
+    // dangling vertex keeps receiving, emits nothing).
+    let g = from_pairs(true, &[(0, 1), (1, 2), (0, 2)]); // 2 is a sink
+    let prog = PageRank::new(3, 15);
+    let mut o = opts(2);
+    o.max_iter = prog.rounds();
+    let serial = run_typed(EngineKind::Serial, &g, &prog, &o).unwrap().props;
+    for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
+        let r = run_typed(kind, &g, &prog, &o).unwrap();
+        for (a, b) in r.props.iter().zip(&serial) {
+            assert!((a.rank - b.rank).abs() < 1e-12, "{kind}");
+        }
+    }
+    // Sink rank exceeds sources' (it collects from both).
+    assert!(serial[2].rank > serial[0].rank);
+}
+
+#[test]
+fn operator_on_empty_graph() {
+    let b: GraphBuilder<f64> = GraphBuilder::new(true);
+    let g = b.build().unwrap();
+    let r = OperatorBuilder::new(&g, Operator::ConnectedComponents)
+        .engine(EngineKind::Pregel)
+        .run()
+        .unwrap();
+    assert_eq!(r.column("component").unwrap().len(), 0);
+}
+
+#[test]
+fn symmetrized_idempotent() {
+    let g = from_pairs(true, &[(0, 1), (1, 0), (1, 2)]);
+    let s1 = symmetrized(&g);
+    let s2 = symmetrized(&s1);
+    assert_eq!(s1.num_edges(), s2.num_edges());
+    assert_eq!(s1.topology().csr().1, s2.topology().csr().1);
+}

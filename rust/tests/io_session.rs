@@ -1,0 +1,163 @@
+//! Integration: unified graph I/O + session/config/CLI-facing surface.
+
+use std::path::PathBuf;
+use unigps::config::Config;
+use unigps::engine::EngineKind;
+use unigps::graph::io::Format;
+use unigps::graph::record::{FieldType, RecordBuilder, Schema};
+use unigps::session::Session;
+use unigps::util::propcheck::{forall, Config as PropConfig};
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("unigps-it-{}-{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn round_trip_every_format_preserves_results() {
+    // The M+N argument, end to end: results must be invariant under any
+    // store→load cycle in any format.
+    let session = Session::builder().workers(2).build();
+    let g = session.generate("rmat", 512, 2048, 13);
+    let want = session.sssp(&g, 0).run().unwrap();
+    let want_d = want.column("distance").unwrap().as_i64().unwrap().to_vec();
+
+    for (fmt, ext) in [
+        (Format::EdgeList, "txt"),
+        (Format::UniGraph, "json"),
+        (Format::Binary, "bin"),
+    ] {
+        let p = tmp(&format!("roundtrip.{ext}"));
+        fmt.store(&g, &p).unwrap();
+        let loaded = session.load(&p).unwrap();
+        assert_eq!(loaded.num_edges(), g.num_edges(), "{ext}");
+        let got = session.sssp(&loaded, 0).run().unwrap();
+        assert_eq!(
+            got.column("distance").unwrap().as_i64().unwrap(),
+            &want_d[..],
+            "{ext}"
+        );
+        let _ = std::fs::remove_file(&p);
+    }
+}
+
+#[test]
+fn random_graph_io_roundtrip_property() {
+    forall(
+        PropConfig::new(8, 0xF0),
+        |rng| {
+            let n = 5 + rng.usize_below(100);
+            unigps::graph::generate::random_for_tests(n, n * 2, rng.next_u64())
+        },
+        |g| {
+            let p = tmp("prop.bin");
+            Format::Binary.store(g, &p).map_err(|e| e.to_string())?;
+            let back = Format::Binary.load(&p).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&p);
+            if back.topology().csr() != g.topology().csr() {
+                return Err("CSR changed across binary roundtrip".into());
+            }
+            if back.edge_props() != g.edge_props() {
+                return Err("weights changed across binary roundtrip".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn session_from_config_runs_operators() {
+    let p = tmp("session.conf");
+    std::fs::write(
+        &p,
+        "# test config\nengine = gemini\nworkers = 2\nmax_iter = 500\npartition = edge-balanced\n",
+    )
+    .unwrap();
+    let session = Session::from_config_file(&p).unwrap();
+    assert_eq!(session.default_engine(), EngineKind::PushPull);
+    let g = session.generate("er", 300, 1200, 5);
+    let r = session.cc(&g).run().unwrap();
+    assert_eq!(r.column("component").unwrap().len(), 300);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn config_overrides_and_errors() {
+    let mut c = Config::parse("engine = pregel\nworkers = 4").unwrap();
+    c.set("workers", "7");
+    assert_eq!(c.get_usize("workers", 0).unwrap(), 7);
+    assert!(Session::from_config(&Config::parse("engine = cobol").unwrap()).is_err());
+    assert!(Session::from_config(&Config::parse("partition = diagonal").unwrap()).is_err());
+}
+
+#[test]
+fn record_system_supports_paper_demo() {
+    // The Fig 3 record-building dance.
+    let schema = Schema::new(vec![("vid", FieldType::Long), ("distance", FieldType::Long)]);
+    let mut rec = RecordBuilder::new(schema.clone())
+        .set_long("vid", 7)
+        .set_long("distance", i64::MAX)
+        .build();
+    assert_eq!(rec.get_long("distance").unwrap(), i64::MAX);
+    rec.set_long("distance", 42).unwrap();
+    // Wire round-trip (what the IPC layer ships).
+    let mut buf = Vec::new();
+    rec.encode(&mut buf);
+    let mut pos = 0;
+    let back = unigps::graph::record::Record::decode(&schema, &buf, &mut pos).unwrap();
+    assert_eq!(back.get_long("distance").unwrap(), 42);
+}
+
+#[test]
+fn store_tsv_output_table() {
+    let session = Session::builder().workers(2).build();
+    let g = session.generate("grid", 16, 0, 0);
+    let r = session.bfs(&g, 0).run().unwrap();
+    let p = tmp("out.tsv");
+    r.store_tsv(&p).unwrap();
+    let text = std::fs::read_to_string(&p).unwrap();
+    let mut lines = text.lines();
+    assert_eq!(lines.next().unwrap(), "vid\thops");
+    assert_eq!(text.lines().count(), g.num_vertices() + 1);
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn cli_binary_end_to_end() {
+    let exe = env!("CARGO_BIN_EXE_unigps");
+    // generate → info → run with output file.
+    let gpath = tmp("cli-graph.bin");
+    let out = std::process::Command::new(exe)
+        .args(["generate", "--kind", "er", "--vertices", "200", "--edges", "800"])
+        .args(["--out", gpath.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = std::process::Command::new(exe)
+        .args(["info", "--graph", gpath.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("V=200"));
+
+    let tsv = tmp("cli-out.tsv");
+    let out = std::process::Command::new(exe)
+        .args(["run", "--algo", "cc", "--graph", gpath.to_str().unwrap()])
+        .args(["--engine", "gas", "--workers", "2", "--output", tsv.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(tsv.exists());
+
+    // Unknown engine fails with a clean error.
+    let out = std::process::Command::new(exe)
+        .args(["run", "--engine", "mapreduce"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+
+    let _ = std::fs::remove_file(&gpath);
+    let _ = std::fs::remove_file(&tsv);
+}

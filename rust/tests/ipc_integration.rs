@@ -1,0 +1,155 @@
+//! Integration: the execution-isolation mechanism end to end — remote
+//! programs over both transports, thread- and process-hosted runners,
+//! concurrency, failure handling, and transparency across all engines.
+
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::generate;
+use unigps::ipc::remote_program::RemoteVCProg;
+use unigps::ipc::Transport;
+use unigps::operators::symmetrized;
+use unigps::util::propcheck::{forall, Config};
+use unigps::vcprog::programs::{ConnectedComponents, PageRank, SsspBellmanFord};
+use unigps::vcprog::VCProg;
+
+fn opts() -> RunOptions {
+    RunOptions::default().with_workers(2)
+}
+
+#[test]
+fn remote_sssp_matches_local_property() {
+    forall(
+        Config::new(5, 0xD0),
+        |rng| {
+            let n = 10 + rng.usize_below(60);
+            generate::random_for_tests(n, n * 3, rng.next_u64())
+        },
+        |g| {
+            let local = run_typed(EngineKind::Pregel, g, &SsspBellmanFord::new(0), &opts())
+                .map_err(|e| e.to_string())?
+                .props;
+            let remote = RemoteVCProg::launch(
+                SsspBellmanFord::new(0),
+                "sssp root=0",
+                2,
+                Transport::ZeroCopyShm,
+                true,
+            )
+            .map_err(|e| e.to_string())?;
+            let got = run_typed(EngineKind::Pregel, g, &remote, &opts())
+                .map_err(|e| e.to_string())?
+                .props;
+            remote.shutdown();
+            if got != local {
+                return Err("remote != local".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn remote_cc_over_socket_on_all_engines() {
+    let g = symmetrized(&generate::random_for_tests(50, 250, 0xD1));
+    let local = run_typed(EngineKind::Serial, &g, &ConnectedComponents::new(), &opts())
+        .unwrap()
+        .props;
+    for kind in EngineKind::vcprog_engines() {
+        let remote =
+            RemoteVCProg::launch(ConnectedComponents::new(), "cc", 2, Transport::Socket, true)
+                .unwrap();
+        let got = run_typed(kind, &g, &remote, &opts()).unwrap().props;
+        remote.shutdown();
+        assert_eq!(got, local, "{kind}");
+    }
+}
+
+#[test]
+fn remote_pagerank_matches_local() {
+    let g = generate::random_for_tests(60, 300, 0xD2);
+    let n = g.num_vertices();
+    let prog = PageRank::new(n, 6);
+    let mut o = opts();
+    o.max_iter = prog.rounds();
+    let local = run_typed(EngineKind::Pregel, &g, &prog, &o).unwrap().props;
+    let remote = RemoteVCProg::launch(
+        prog,
+        &format!("pagerank n={n} iters=6"),
+        2,
+        Transport::ZeroCopyShm,
+        true,
+    )
+    .unwrap();
+    let got = run_typed(EngineKind::Pregel, &g, &remote, &o).unwrap().props;
+    remote.shutdown();
+    for (a, b) in got.iter().zip(&local) {
+        assert!((a.rank - b.rank).abs() < 1e-12, "{} vs {}", a.rank, b.rank);
+    }
+}
+
+#[test]
+fn remote_program_survives_concurrent_callers() {
+    // Hammer one remote program from many threads simultaneously; every
+    // call must return a correct merge result.
+    let remote = std::sync::Arc::new(
+        RemoteVCProg::launch(
+            SsspBellmanFord::new(0),
+            "sssp root=0",
+            4,
+            Transport::ZeroCopyShm,
+            true,
+        )
+        .unwrap(),
+    );
+    std::thread::scope(|s| {
+        for t in 0..8 {
+            let remote = remote.clone();
+            s.spawn(move || {
+                for i in 0..200i64 {
+                    let m = remote.merge_message(&(t * 1000 + i), &(i * 7));
+                    assert_eq!(m, (t * 1000 + i).min(i * 7));
+                }
+            });
+        }
+    });
+    assert!(remote.remote_calls() >= 1600);
+    remote.shutdown();
+}
+
+#[test]
+fn bad_spec_fails_cleanly() {
+    let r = RemoteVCProg::launch(
+        SsspBellmanFord::new(0),
+        "not-a-program",
+        1,
+        Transport::ZeroCopyShm,
+        true,
+    );
+    assert!(r.is_err(), "unknown program spec must fail launch");
+}
+
+#[test]
+fn process_mode_round_trip() {
+    // Spawn real child processes (requires the unigps binary; skip if the
+    // binary isn't built yet).
+    if std::process::Command::new(env!("CARGO_BIN_EXE_unigps"))
+        .arg("version")
+        .output()
+        .is_err()
+    {
+        eprintln!("skipping: unigps binary unavailable");
+        return;
+    }
+    std::env::set_var("UNIGPS_BIN", env!("CARGO_BIN_EXE_unigps"));
+    let g = generate::random_for_tests(40, 160, 0xD4);
+    let local = run_typed(EngineKind::Pregel, &g, &SsspBellmanFord::new(0), &opts())
+        .unwrap()
+        .props;
+    for transport in [Transport::ZeroCopyShm, Transport::Socket] {
+        let remote =
+            RemoteVCProg::launch(SsspBellmanFord::new(0), "sssp root=0", 2, transport, false)
+                .unwrap();
+        let got = run_typed(EngineKind::Pregel, &g, &remote, &opts()).unwrap().props;
+        remote.shutdown();
+        assert_eq!(got, local, "{}", transport.name());
+    }
+}

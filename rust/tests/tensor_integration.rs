@@ -1,0 +1,119 @@
+//! Integration: the tensor engine (L1 Pallas + L2 JAX artifacts via PJRT)
+//! against the interpreted engines and serial oracles. Skips gracefully
+//! when `make artifacts` hasn't run.
+
+use unigps::engine::{baselines, EngineKind};
+use unigps::graph::generate;
+use unigps::operators::{Operator, OperatorBuilder};
+use unigps::util::propcheck::{forall, Config};
+
+fn have_artifacts() -> bool {
+    unigps::engine::tensor::artifacts_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn tensor_sssp_matches_dijkstra_property() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    forall(
+        Config::new(4, 0xE0),
+        |rng| {
+            let n = 20 + rng.usize_below(400);
+            generate::random_for_tests(n, n * 4, rng.next_u64())
+        },
+        |g| {
+            let t = OperatorBuilder::new(g, Operator::Sssp { root: 0 })
+                .engine(EngineKind::Tensor)
+                .run()
+                .map_err(|e| e.to_string())?;
+            let got = t.column("distance").unwrap().as_i64().unwrap();
+            let want = baselines::dijkstra(g, 0);
+            if got != &want[..] {
+                return Err("tensor sssp != dijkstra".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tensor_cc_matches_union_find_property() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    forall(
+        Config::new(4, 0xE1),
+        |rng| {
+            let n = 20 + rng.usize_below(300);
+            // Sparse so multiple components exist.
+            generate::random_for_tests(n, n / 2 + 1, rng.next_u64())
+        },
+        |g| {
+            let sym = unigps::operators::symmetrized(g);
+            let t = OperatorBuilder::new(g, Operator::ConnectedComponents)
+                .engine(EngineKind::Tensor)
+                .run()
+                .map_err(|e| e.to_string())?;
+            let got = t.column("component").unwrap().as_i64().unwrap();
+            let want: Vec<i64> = baselines::connected_components(&sym)
+                .into_iter()
+                .map(|c| c as i64)
+                .collect();
+            if got != &want[..] {
+                return Err("tensor cc != union-find".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tensor_pagerank_matches_power_iteration() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = generate::random_for_tests(250, 2000, 0xE2);
+    let t = OperatorBuilder::new(&g, Operator::PageRank { iterations: 12 })
+        .engine(EngineKind::Tensor)
+        .run()
+        .unwrap();
+    let got = t.column("rank").unwrap().as_f64().unwrap();
+    let want = baselines::pagerank(&g, 0.85, 12);
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        let scale = a.abs().max(b.abs()).max(1e-12);
+        assert!((a - b).abs() / scale < 1e-3, "v{i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn tensor_bucket_reuse_is_cached() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Two graphs in the same bucket: second run must not recompile (fast).
+    let g1 = generate::random_for_tests(100, 500, 1);
+    let g2 = generate::random_for_tests(120, 600, 2);
+    let t = std::time::Instant::now();
+    OperatorBuilder::new(&g1, Operator::Sssp { root: 0 })
+        .engine(EngineKind::Tensor)
+        .run()
+        .unwrap();
+    let first = t.elapsed();
+    let t = std::time::Instant::now();
+    OperatorBuilder::new(&g2, Operator::Sssp { root: 0 })
+        .engine(EngineKind::Tensor)
+        .run()
+        .unwrap();
+    let second = t.elapsed();
+    // Compilation dominates the first run; the second should be faster or
+    // at least not dramatically slower.
+    assert!(
+        second < first * 3,
+        "expected compiled-step reuse: first {first:?}, second {second:?}"
+    );
+}
