@@ -8,6 +8,9 @@
 //!    graph.
 //! 4. Barrier implementation: OS-blocking vs spinning vs condvar (the
 //!    busy-wait-vs-lock discussion of §IV-C.2, applied at superstep scale).
+//! 5. Message routing substrate: the superstep runtime's flat sharded
+//!    buffers + dense combine slots vs the old HashMap-combine +
+//!    mutex-board routing, on the same power-law message workload.
 
 use unigps::distributed::barrier::{BspBarrier, CondvarBarrier, SpinBarrier};
 use unigps::engine::{run_typed, EngineKind, RunOptions};
@@ -29,6 +32,7 @@ fn main() {
     pushpull_threshold_ablation(&graph);
     partition_ablation(&sym);
     barrier_ablation();
+    routing_ablation(&graph);
 }
 
 fn combiner_ablation(graph: &unigps::graph::Graph) {
@@ -151,5 +155,139 @@ fn barrier_ablation() {
     let b = CondvarBarrier::new(workers);
     run("condvar", &|| b.wait(), &mut t);
     t.print();
-    println!("   expect: spin+yield fastest at this worker count — the same reasoning\n   as the paper's busy-wait IPC choice.");
+    println!("   expect: spin+yield fastest at this worker count — the same reasoning\n   as the paper's busy-wait IPC choice.\n");
+}
+
+/// Routing substrate ablation: every out-edge of the power-law graph emits
+/// one message per round, sender-combined per destination, routed to the
+/// destination's shard (`vid % workers`), then drained by the owner.
+///
+/// (a) **flat**: the superstep runtime's path — dense per-destination
+///     combine slots + double-buffered flat `Vec` shards, no locks/hashing.
+/// (b) **hash**: the pre-runtime path — `HashMap` sender combine + the
+///     mutex-guarded [`MessageBoard`](unigps::distributed::comm::MessageBoard).
+fn routing_ablation(graph: &unigps::graph::Graph) {
+    use std::collections::HashMap;
+    use std::sync::Barrier;
+    use unigps::distributed::comm::{FlatBoard, MessageBoard};
+
+    println!("-- [5] message routing: flat sharded buffers vs hash-map routing --");
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let workers = 4usize;
+    let rounds: usize = if fast { 6 } else { 24 };
+    let topo = graph.topology();
+    let n = graph.num_vertices();
+    // Destination list per sending worker (hash partitioning: vid % P).
+    let mut dests: Vec<Vec<u32>> = vec![Vec::new(); workers];
+    for v in 0..n as u32 {
+        for (_eid, dst) in topo.out_edges(v) {
+            dests[v as usize % workers].push(dst);
+        }
+    }
+    let total_msgs: usize = dests.iter().map(|d| d.len()).sum::<usize>() * rounds;
+
+    let flat_secs = {
+        let board: FlatBoard<u64> = FlatBoard::new(workers);
+        let barrier = Barrier::new(workers);
+        let timer = Timer::start();
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let board = &board;
+                let barrier = &barrier;
+                let dests = &dests;
+                s.spawn(move || {
+                    let mut slots: Vec<Option<u64>> = vec![None; n];
+                    let mut touched: Vec<u32> = Vec::new();
+                    let mut sink = 0u64;
+                    for r in 0..rounds {
+                        let parity = (r & 1) as u32;
+                        for (i, &dst) in dests[w].iter().enumerate() {
+                            let payload = i as u64;
+                            let slot = &mut slots[dst as usize];
+                            match slot.take() {
+                                Some(old) => *slot = Some(old.min(payload)),
+                                None => {
+                                    *slot = Some(payload);
+                                    touched.push(dst);
+                                }
+                            }
+                        }
+                        for &dst in &touched {
+                            let msg = slots[dst as usize].take().unwrap();
+                            // SAFETY: worker `w` is the only sender of row `w`.
+                            unsafe { board.push(parity, w, dst as usize % workers, dst, msg) };
+                        }
+                        touched.clear();
+                        barrier.wait();
+                        // SAFETY: sends of this parity finished at the barrier.
+                        unsafe { board.drain(parity, w, |_dst, m| sink = sink.wrapping_add(m)) };
+                        barrier.wait();
+                    }
+                    std::hint::black_box(sink);
+                });
+            }
+        });
+        timer.secs()
+    };
+
+    let hash_secs = {
+        let board: MessageBoard<u64> = MessageBoard::new(workers);
+        let barrier = Barrier::new(workers);
+        let timer = Timer::start();
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let board = &board;
+                let barrier = &barrier;
+                let dests = &dests;
+                s.spawn(move || {
+                    let mut combine: Vec<HashMap<u32, u64>> =
+                        (0..workers).map(|_| HashMap::new()).collect();
+                    let mut sink = 0u64;
+                    for _r in 0..rounds {
+                        for (i, &dst) in dests[w].iter().enumerate() {
+                            let payload = i as u64;
+                            use std::collections::hash_map::Entry;
+                            match combine[dst as usize % workers].entry(dst) {
+                                Entry::Occupied(mut e) => {
+                                    let v = (*e.get()).min(payload);
+                                    e.insert(v);
+                                }
+                                Entry::Vacant(e) => {
+                                    e.insert(payload);
+                                }
+                            }
+                        }
+                        for (tp, map) in combine.iter_mut().enumerate() {
+                            let mut batch: Vec<(u32, u64)> = map.drain().collect();
+                            board.send_batch(w, tp, &mut batch);
+                        }
+                        barrier.wait();
+                        board.drain_to(w, |_dst, m| sink = sink.wrapping_add(m));
+                        barrier.wait();
+                    }
+                    std::hint::black_box(sink);
+                });
+            }
+        });
+        timer.secs()
+    };
+
+    let mut t = Table::new(&["substrate", "time", "msgs/s", "speedup"]);
+    t.row(&[
+        "hash combine + mutex board (old)".into(),
+        fmt_dur(hash_secs),
+        format!("{:.1}M", total_msgs as f64 / hash_secs.max(1e-12) / 1e6),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "flat sharded buffers (runtime)".into(),
+        fmt_dur(flat_secs),
+        format!("{:.1}M", total_msgs as f64 / flat_secs.max(1e-12) / 1e6),
+        format!("{:.2}x", hash_secs / flat_secs.max(1e-12)),
+    ]);
+    t.print();
+    println!(
+        "   target: flat ≥1.3x faster at {workers} workers on the power-law \
+         graph (no hashing, no locks, buffers reused across rounds)."
+    );
 }

@@ -1,0 +1,27 @@
+"""Pytest bootstrap for the L1/L2 test suite.
+
+* Makes the `compile` package importable whether pytest runs from the repo
+  root (`python -m pytest python/tests -q`, as CI does) or from `python/`.
+* Skips the property-based modules when `hypothesis` is not installed (the
+  offline build environment has no package index); CI installs it and runs
+  the full suite.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+
+collect_ignore = []
+try:
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover - offline environment only
+    collect_ignore = [
+        "tests/test_kernels.py",
+        "tests/test_model.py",
+        "tests/test_properties.py",
+    ]
+    sys.stderr.write(
+        "conftest: hypothesis not installed — skipping property-based "
+        "modules (CI runs them)\n"
+    )

@@ -1,13 +1,25 @@
 //! Inter-partition message routing — the simulated "network".
 //!
-//! A [`MessageBoard`] is a P×P grid of outboxes: worker `w` appends messages
-//! destined for partition `p` into cell `(w, p)` (uncontended: each worker
-//! owns its row), and after the compute barrier each worker drains column
-//! `w` (uncontended by phase discipline; the mutexes make it safe
-//! regardless). Message and byte counters feed the run metrics — they stand
-//! in for the paper's cluster-network traffic accounting.
+//! Two substrates live here:
+//!
+//! * [`FlatBoard`] — the engines' hot path (used via
+//!   [`crate::engine::superstep`]): a **double-buffered** P×P grid of flat
+//!   `Vec<(dst, msg)>` buffers with *no* per-message locking or hashing.
+//!   Worker `w` owns row `w` exclusively during a send phase and drains
+//!   column `w` during the barrier-separated drain phase, so plain
+//!   `UnsafeCell` access is sound by the same phase discipline as
+//!   [`crate::distributed::shared::SharedSlice`]. Buffers retain their
+//!   capacity across supersteps (double-buffered by superstep parity), so
+//!   steady-state routing allocates nothing.
+//! * [`MessageBoard`] — the original mutex-guarded grid, kept for the
+//!   routing ablation in `benches/ablations.rs` and for code that wants
+//!   safe unsynchronized-phase-free sends.
+//!
+//! Message and byte counters feed the run metrics — they stand in for the
+//! paper's cluster-network traffic accounting.
 
 use crate::vcprog::VertexId;
+use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -96,9 +108,160 @@ impl<M: Send> MessageBoard<M> {
     }
 }
 
+/// Double-buffered per-worker×per-destination-shard flat message buffers —
+/// the engines' lock-free, hash-free routing substrate (see the module doc
+/// for the ownership discipline).
+pub struct FlatBoard<M> {
+    parts: usize,
+    /// Two parities of a row-major `cells[from * parts + to]` grid.
+    cells: [Vec<UnsafeCell<Vec<Routed<M>>>>; 2],
+    messages: AtomicU64,
+    bytes: AtomicU64,
+}
+
+// SAFETY: access discipline is enforced by the engines — worker `from` is
+// the only writer of row `from` during a send phase, worker `to` the only
+// accessor of column `to` during the barrier-separated drain phase.
+unsafe impl<M: Send> Send for FlatBoard<M> {}
+unsafe impl<M: Send> Sync for FlatBoard<M> {}
+
+impl<M: Send> FlatBoard<M> {
+    /// Board for `parts` partitions.
+    pub fn new(parts: usize) -> Self {
+        let mk = || (0..parts * parts).map(|_| UnsafeCell::new(Vec::new())).collect();
+        FlatBoard {
+            parts,
+            cells: [mk(), mk()],
+            messages: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of partitions.
+    pub fn parts(&self) -> usize {
+        self.parts
+    }
+
+    /// Append one message to the `(from, to)` buffer of `parity`.
+    ///
+    /// # Safety
+    /// The caller must be the exclusive sender for worker `from` in the
+    /// current phase, and no drain of the same parity may run concurrently
+    /// (engines separate the phases with barriers).
+    #[inline]
+    pub unsafe fn push(&self, parity: u32, from: usize, to: usize, dst: VertexId, msg: M) {
+        let cell = &mut *self.cells[(parity & 1) as usize][from * self.parts + to].get();
+        cell.push((dst, msg));
+    }
+
+    /// Drain every buffer addressed to partition `to` in `parity`, invoking
+    /// `f` per message. Buffer capacity is retained for reuse.
+    ///
+    /// # Safety
+    /// The caller must be the exclusive drainer for partition `to` in the
+    /// current phase, barrier-separated from sends of the same parity.
+    pub unsafe fn drain(&self, parity: u32, to: usize, mut f: impl FnMut(VertexId, M)) {
+        for from in 0..self.parts {
+            let cell = &mut *self.cells[(parity & 1) as usize][from * self.parts + to].get();
+            for (dst, msg) in cell.drain(..) {
+                f(dst, msg);
+            }
+        }
+    }
+
+    /// Record `msgs` routed messages totalling `bytes` (sender-side batch
+    /// accounting — keeps atomics off the per-message path).
+    pub fn add_counts(&self, msgs: u64, bytes: u64) {
+        if msgs > 0 {
+            self.messages.fetch_add(msgs, Ordering::Relaxed);
+            self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Total messages routed so far.
+    pub fn total_messages(&self) -> u64 {
+        self.messages.load(Ordering::Relaxed)
+    }
+
+    /// Approximate bytes routed so far.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn flat_board_routes_and_reuses_capacity() {
+        let board: FlatBoard<u64> = FlatBoard::new(3);
+        unsafe {
+            board.push(0, 0, 1, 10, 100);
+            board.push(0, 2, 1, 11, 200);
+            board.push(0, 0, 2, 12, 300);
+        }
+        board.add_counts(3, 3 * 12);
+        let mut got = Vec::new();
+        unsafe { board.drain(0, 1, |dst, m| got.push((dst, m))) };
+        got.sort();
+        assert_eq!(got, vec![(10, 100), (11, 200)]);
+        let mut got2 = Vec::new();
+        unsafe { board.drain(0, 2, |dst, m| got2.push((dst, m))) };
+        assert_eq!(got2, vec![(12, 300)]);
+        // Already drained.
+        let mut got3 = Vec::new();
+        unsafe { board.drain(0, 1, |dst, m| got3.push((dst, m))) };
+        assert!(got3.is_empty());
+        assert_eq!(board.total_messages(), 3);
+        assert!(board.total_bytes() >= 36);
+    }
+
+    #[test]
+    fn flat_board_parities_are_independent() {
+        let board: FlatBoard<u32> = FlatBoard::new(2);
+        unsafe {
+            board.push(0, 0, 1, 5, 50);
+            board.push(1, 0, 1, 6, 60);
+        }
+        let mut even = Vec::new();
+        unsafe { board.drain(0, 1, |dst, m| even.push((dst, m))) };
+        assert_eq!(even, vec![(5, 50)]);
+        let mut odd = Vec::new();
+        unsafe { board.drain(1, 1, |dst, m| odd.push((dst, m))) };
+        assert_eq!(odd, vec![(6, 60)]);
+    }
+
+    #[test]
+    fn flat_board_concurrent_senders_land_on_owning_shard() {
+        // Radix routing property: worker `w` drains only messages whose
+        // destination shard is `w`.
+        let parts = 4;
+        let board: FlatBoard<usize> = FlatBoard::new(parts);
+        std::thread::scope(|s| {
+            for from in 0..parts {
+                let b = &board;
+                s.spawn(move || {
+                    for i in 0..100u32 {
+                        let dst = from as u32 * 100 + i;
+                        // SAFETY: this thread is the only sender for `from`.
+                        unsafe { b.push(0, from, dst as usize % parts, dst, i as usize) };
+                    }
+                });
+            }
+        });
+        let mut total = 0;
+        for to in 0..parts {
+            // SAFETY: sends finished (scope joined).
+            unsafe {
+                board.drain(0, to, |dst, _| {
+                    assert_eq!(dst as usize % parts, to, "message on wrong shard");
+                    total += 1;
+                })
+            };
+        }
+        assert_eq!(total, parts * 100);
+    }
 
     #[test]
     fn routes_to_correct_partition() {

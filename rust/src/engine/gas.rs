@@ -11,29 +11,30 @@
 //! round** — fall straight out of this structure, which is why the GAS
 //! backend suffers most under IPC-served UDFs (Fig 8a).
 //!
-//! Barrier choreography per round (2 barriers):
+//! Partitioning, active-set tracking and the barrier/convergence loop come
+//! from the shared [`superstep`](crate::engine::superstep) runtime; message
+//! routing does not apply here (edge slots are the "network"), so the
+//! scatter phase reports its writes via
+//! [`SuperstepRuntime::add_step_messages`].
+//!
+//! Barrier choreography per round (3 barriers):
 //!
 //! ```text
 //! Phase G/A  gather + apply   (reads edge_msg everywhere — frozen; writes
-//!                              own props/active; bumps atomics)
+//!                              own props and next-active bits)
 //! ── barrier ──
-//! Phase S    scatter          (writes edge_msg of own CSR rows;
-//!                              leader bookkeeping in the same window is
-//!                              safe: atomics only change in Phase G/A)
-//! ── barrier ──
-//! check stop, next round
+//! Phase S    scatter          (writes edge_msg of own CSR rows, reading
+//!                              this round's next-active bits)
+//! ── end_step: barrier, leader bookkeeping, barrier ──
 //! ```
 
-use crate::distributed::metrics::{RunMetrics, StepMetrics};
 use crate::distributed::shared::SharedSlice;
+use crate::engine::superstep::SuperstepRuntime;
 use crate::engine::{RunOptions, TypedRun};
 use crate::error::Result;
-use crate::graph::partition::Partitioner;
 use crate::graph::PropertyGraph;
 use crate::util::timer::Timer;
 use crate::vcprog::VCProg;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex};
 
 /// Run `program` on the GAS engine.
 pub fn run<P: VCProg>(
@@ -44,62 +45,40 @@ pub fn run<P: VCProg>(
     let topo = graph.topology();
     let n = topo.num_vertices();
     let m = topo.num_edges();
-    let workers = opts.workers.max(1).min(n.max(1));
-    let part = Partitioner::new(topo, workers, opts.partition);
 
     let mut props: Vec<Option<P::VProp>> = (0..n).map(|_| None).collect();
-    let mut active: Vec<bool> = vec![true; n];
     // Message state on edges, indexed by CSR edge id.
     let mut edge_msg: Vec<Option<P::Msg>> = (0..m).map(|_| None).collect();
 
     let props_s = SharedSlice::new(&mut props);
-    let active_s = SharedSlice::new(&mut active);
     let edge_msg_s = SharedSlice::new(&mut edge_msg);
 
-    let barrier = Barrier::new(workers);
-    let num_active = AtomicU64::new(0);
-    let num_msgs = AtomicU64::new(0);
-    let total_msgs = AtomicU64::new(0);
-    let udf_calls = AtomicU64::new(0);
-    let stop = AtomicBool::new(false);
-    let steps_done = AtomicU64::new(0);
-    let converged = AtomicBool::new(false);
-    let step_log: Mutex<Vec<StepMetrics>> = Mutex::new(Vec::new());
+    let rt: SuperstepRuntime<'_, P::Msg> = SuperstepRuntime::new(topo, opts, false);
 
-    let timer = Timer::start();
     std::thread::scope(|scope| {
-        for w in 0..workers {
-            let part = &part;
-            let barrier = &barrier;
-            let num_active = &num_active;
-            let num_msgs = &num_msgs;
-            let total_msgs = &total_msgs;
-            let udf_calls = &udf_calls;
-            let stop = &stop;
-            let steps_done = &steps_done;
-            let converged = &converged;
-            let step_log = &step_log;
+        for w in 0..rt.workers {
+            let rt = &rt;
             scope.spawn(move || {
-                let mut local_udf: u64 = 0;
-                for v in part.vertices_of(w, n) {
+                let mut ctx = rt.ctx(w);
+                for v in rt.vertices_of(w) {
                     let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
-                    local_udf += 1;
+                    ctx.udf += 1;
                     unsafe { props_s.set(v as usize, Some(p)) };
                 }
-                barrier.wait();
+                rt.barrier.wait();
 
                 // Honour MAX_ITER = 0: init only, no supersteps.
-                let mut iter: u32 = 1;
                 if opts.max_iter == 0 {
+                    ctx.retire();
                     return;
                 }
+                let mut iter: u32 = 1;
                 loop {
                     let step_timer = Timer::start();
                     // --- Phase G/A: gather + apply ------------------------
                     // Fig 4b: APPLY runs for *every* vertex every round (the
                     // edge-parallel cost model).
-                    let mut local_active: u64 = 0;
-                    for v in part.vertices_of(w, n) {
+                    for v in rt.vertices_of(w) {
                         let vi = v as usize;
                         let mut accum: Option<P::Msg> = None;
                         for (eid, _src) in topo.in_edges(v) {
@@ -107,7 +86,7 @@ pub fn run<P: VCProg>(
                             if let Some(m) = unsafe { edge_msg_s.get(eid) }.as_ref() {
                                 accum = Some(match accum {
                                     Some(acc) => {
-                                        local_udf += 1;
+                                        ctx.udf += 1;
                                         program.merge_message(&acc, m)
                                     }
                                     None => m.clone(),
@@ -117,33 +96,29 @@ pub fn run<P: VCProg>(
                         let msg = match accum {
                             Some(a) => a,
                             None => {
-                                local_udf += 1;
+                                ctx.udf += 1;
                                 program.empty_message()
                             }
                         };
                         let prop_slot = unsafe { props_s.get_mut(vi) };
                         let (new_prop, is_active) =
                             program.vertex_compute(prop_slot.as_ref().expect("init"), &msg, iter);
-                        local_udf += 1;
+                        ctx.udf += 1;
                         *prop_slot = Some(new_prop);
-                        unsafe { active_s.set(vi, is_active) };
-                        if is_active {
-                            local_active += 1;
-                        }
+                        rt.active.set_next(v, is_active);
                     }
-                    num_active.fetch_add(local_active, Ordering::Relaxed);
-                    barrier.wait();
+                    rt.barrier.wait();
 
                     // --- Phase S: scatter ---------------------------------
                     let mut local_msgs: u64 = 0;
-                    for v in part.vertices_of(w, n) {
+                    for v in rt.vertices_of(w) {
                         let vi = v as usize;
-                        let is_active = unsafe { *active_s.get(vi) };
+                        let is_active = rt.active.next(v);
                         let prop = unsafe { props_s.get(vi) }.as_ref().expect("init");
                         for (eid, dst) in topo.out_edges(v) {
                             let slot = unsafe { edge_msg_s.get_mut(eid) };
                             if is_active && iter < opts.max_iter {
-                                local_udf += 1;
+                                ctx.udf += 1;
                                 match program.emit_message(v, dst, prop, graph.edge_prop(eid)) {
                                     Some(msg) => {
                                         local_msgs += 1;
@@ -156,57 +131,19 @@ pub fn run<P: VCProg>(
                             }
                         }
                     }
-                    num_msgs.fetch_add(local_msgs, Ordering::Relaxed);
+                    rt.add_step_messages(local_msgs);
 
-                    // Leader bookkeeping: safe in this window because the
-                    // atomics below are only mutated in Phase G/A (num_active)
-                    // or just finished (num_msgs additions happen before this
-                    // barrier... see second barrier).
-                    let lead = barrier.wait().is_leader();
-                    if lead {
-                        let act = num_active.swap(0, Ordering::Relaxed);
-                        let msgs = num_msgs.swap(0, Ordering::Relaxed);
-                        total_msgs.fetch_add(msgs, Ordering::Relaxed);
-                        steps_done.store(iter as u64, Ordering::Relaxed);
-                        if opts.step_metrics {
-                            step_log.lock().unwrap().push(StepMetrics {
-                                step: iter,
-                                active: act,
-                                messages: msgs,
-                                elapsed: step_timer.elapsed(),
-                                mode: None,
-                            });
-                        }
-                        if act == 0 {
-                            converged.store(true, Ordering::Relaxed);
-                            stop.store(true, Ordering::Relaxed);
-                        } else if iter >= opts.max_iter {
-                            stop.store(true, Ordering::Relaxed);
-                        }
-                    }
-                    barrier.wait();
-                    if stop.load(Ordering::Relaxed) {
+                    if rt.end_step(iter, &step_timer, None, |_| {}) {
                         break;
                     }
                     iter += 1;
                 }
-                udf_calls.fetch_add(local_udf, Ordering::Relaxed);
+                ctx.retire();
             });
         }
     });
 
-    let total_messages = total_msgs.load(Ordering::Relaxed);
-    let metrics = RunMetrics {
-        supersteps: steps_done.load(Ordering::Relaxed) as u32,
-        total_messages,
-        total_message_bytes: total_messages * (4 + std::mem::size_of::<P::Msg>() as u64),
-        elapsed: timer.elapsed(),
-        converged: converged.load(Ordering::Relaxed),
-        steps: step_log.into_inner().unwrap(),
-        workers,
-        udf_calls: udf_calls.load(Ordering::Relaxed),
-        worker_busy: Vec::new(),
-    };
+    let metrics = rt.into_metrics(Vec::new());
     Ok(TypedRun {
         props: props.into_iter().map(|p| p.expect("initialized")).collect(),
         metrics,

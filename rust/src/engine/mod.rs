@@ -1,4 +1,4 @@
-//! Backend engines.
+//! Backend engines over the shared superstep runtime.
 //!
 //! The paper integrates three existing systems as backends — Giraph
 //! (Pregel), GraphX (GAS) and Gemini (Push-Pull) — plus NetworkX as the
@@ -6,6 +6,33 @@
 //! faithfully (conversion templates of paper Fig 4) over the simulated
 //! distributed runtime, and adds the PJRT **tensor engine** that runs
 //! AOT-compiled JAX/Pallas artifacts.
+//!
+//! ## Architecture
+//!
+//! The three distributed engines are thin *execution-model shells* around
+//! one shared [`superstep`] runtime, which owns everything a BSP superstep
+//! needs regardless of model:
+//!
+//! * worker partitioning of the vertex range
+//!   ([`superstep::SuperstepRuntime::vertices_of`]);
+//! * double-buffered per-worker × per-destination-shard **flat message
+//!   buffers** with radix routing by `vid % workers`
+//!   ([`crate::distributed::comm::FlatBoard`]) — no `HashMap` and no locks
+//!   on the hot path, with a local-shard fast path that merges straight
+//!   into the owner's inbox;
+//! * optional **sender-side combining** (Giraph's Combiner) behind
+//!   [`VCProg::combinable`], implemented as dense per-destination slots;
+//! * **active-set tracking** in a double-buffered atomic bitset with a
+//!   cheap population count for the convergence decision
+//!   ([`superstep::ActiveSet`]), which also feeds Push-Pull's dense/sparse
+//!   density heuristic;
+//! * the per-step barrier/leader-bookkeeping epilogue and all metrics
+//!   accounting ([`superstep::SuperstepRuntime::end_step`]).
+//!
+//! What remains in each engine file is exactly what distinguishes the
+//! execution model: Pregel's active-or-messaged scheduling with inbox
+//! double-buffering, GAS's edge-resident message state and per-edge APPLY
+//! cost model, and Push-Pull's adaptive dense/pull vs sparse/push modes.
 //!
 //! Every engine executes the same [`VCProg`] program object unchanged; the
 //! integration tests assert result equality across engines — the paper's
@@ -16,6 +43,7 @@ pub mod gas;
 pub mod pregel;
 pub mod pushpull;
 pub mod serial;
+pub mod superstep;
 pub mod tensor;
 pub mod validate;
 
@@ -95,8 +123,10 @@ pub struct RunOptions {
     pub partition: PartitionStrategy,
     /// Enable sender-side message combining (Giraph's Combiner). Pays off
     /// when routing a message is expensive (real networks, UDF-over-IPC);
-    /// on shared memory the hash-combine costs more than routing saves
-    /// (ablated in `benches/ablations.rs`), so the default is off.
+    /// on shared memory combining costs more than routing saves (ablated in
+    /// `benches/ablations.rs`), so the default is off. Memory note: the
+    /// runtime's dense combine slots cost O(|V|) per worker while enabled
+    /// (see ROADMAP "Combiner memory" for the planned per-shard variant).
     pub combiner: bool,
     /// Push-Pull density threshold: switch to dense/pull when the active
     /// out-edge fraction exceeds `1/threshold` (Gemini uses 20).
@@ -161,13 +191,17 @@ impl RunResult {
     }
 
     /// Top-k `(vertex, value)` pairs of a float column, descending.
+    ///
+    /// Uses [`f64::total_cmp`], so NaN scores are handled without panicking
+    /// (NaN compares greatest under the IEEE total order and therefore
+    /// sorts first — callers see misbehaving scores instead of a crash).
     pub fn top_k_f64(&self, name: &str, k: usize) -> Vec<(u32, f64)> {
         let col = match self.column(name).and_then(|c| c.as_f64()) {
             Some(c) => c,
             None => return Vec::new(),
         };
         let mut pairs: Vec<(u32, f64)> = col.iter().enumerate().map(|(i, &v)| (i as u32, v)).collect();
-        pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        pairs.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
         pairs.truncate(k);
         pairs
     }
@@ -218,7 +252,9 @@ pub fn run_typed<P: VCProg>(
     }
 }
 
-/// Run and collect tabular output columns.
+/// Run and collect tabular output columns. A program whose `output` rows
+/// disagree with its `output_fields` schema surfaces as a typed
+/// [`UniGpsError::Engine`] instead of aborting the process.
 pub fn run<P: VCProg>(
     kind: EngineKind,
     graph: &PropertyGraph<P::In, P::EProp>,
@@ -227,7 +263,7 @@ pub fn run<P: VCProg>(
 ) -> Result<RunResult> {
     let typed = run_typed(kind, graph, program, opts)?;
     Ok(RunResult {
-        columns: collect_columns(program, &typed.props),
+        columns: collect_columns(program, &typed.props)?,
         metrics: typed.metrics,
     })
 }
@@ -260,5 +296,29 @@ mod tests {
         let g = from_pairs(true, &[(0, 1)]);
         let r = run_typed(EngineKind::Tensor, &g, &ConnectedComponents::new(), &RunOptions::default());
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn top_k_f64_survives_nan_scores() {
+        // Regression: `partial_cmp().unwrap()` panicked on NaN columns.
+        let r = RunResult {
+            columns: vec![(
+                "score".to_string(),
+                Column::F64(vec![1.0, f64::NAN, 3.0, 2.0, f64::NAN]),
+            )],
+            metrics: RunMetrics::default(),
+        };
+        let top = r.top_k_f64("score", 3);
+        assert_eq!(top.len(), 3);
+        // NaN sorts greatest under the total order; the first finite entry
+        // after the NaNs must be the true maximum.
+        let finite: Vec<_> = top.iter().filter(|(_, s)| s.is_finite()).collect();
+        assert!(finite.iter().all(|(v, s)| *v == 2 && *s == 3.0));
+        // All-finite columns keep the plain descending order.
+        let r = RunResult {
+            columns: vec![("score".to_string(), Column::F64(vec![1.0, 3.0, 2.0]))],
+            metrics: RunMetrics::default(),
+        };
+        assert_eq!(r.top_k_f64("score", 2), vec![(1, 3.0), (2, 2.0)]);
     }
 }

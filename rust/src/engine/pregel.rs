@@ -2,37 +2,35 @@
 //!
 //! Faithful rendering of the paper's Fig 4a conversion: each superstep,
 //! every active-or-messaged vertex merges its inbox, runs `vertex_compute`,
-//! and (if active) emits along its out-edges; messages are routed through
-//! the [`MessageBoard`] (the simulated network) and a sender-side
-//! **combiner** merges messages to the same destination before routing —
-//! Giraph's Combiner optimization, toggled by [`RunOptions::combiner`] and
-//! ablated in `benches/ablations.rs`.
+//! and (if active) emits along its out-edges. Message routing, active-set
+//! tracking and the barrier/convergence loop live in the shared
+//! [`superstep`](crate::engine::superstep) runtime: messages are
+//! radix-routed into flat per-worker shards (local destinations merge
+//! straight into the inbox), and the sender-side **combiner** — Giraph's
+//! Combiner optimization, toggled by [`RunOptions::combiner`] and ablated
+//! in `benches/ablations.rs` — collapses same-destination messages in dense
+//! slots before they reach the board.
 //!
-//! Barrier choreography per superstep (2 barriers):
+//! Barrier choreography per superstep (3 barriers, all in the runtime or
+//! at phase edges):
 //!
 //! ```text
-//! Phase A  compute + emit     (owned vertices; writes own props/active,
-//!                              appends to own outbox row, bumps atomics)
+//! Phase A  compute + emit   (owned vertices; writes own props, next-active
+//!                            bits, own board row / own inbox slots)
 //! ── barrier ──
-//! Phase B  deliver            (drain own board column into own inbox;
-//!                              leader: metrics, stop flag, reset atomics)
-//! ── barrier ──
-//! check stop flag, flip inbox parity, next superstep
+//! Phase B  deliver          (drain own board shard into own inbox)
+//! ── end_step: barrier, leader bookkeeping, barrier ──
 //! ```
 
-use crate::distributed::comm::MessageBoard;
-use crate::distributed::metrics::{RunMetrics, StepMetrics};
 use crate::distributed::shared::SharedSlice;
+use crate::engine::superstep::SuperstepRuntime;
 use crate::engine::{RunOptions, TypedRun};
 use crate::error::Result;
-use crate::graph::partition::Partitioner;
 use crate::graph::PropertyGraph;
-use crate::util::timer::Timer;
+use crate::util::timer::{CpuTimer, Timer};
 use crate::vcprog::{VCProg, VertexId};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Barrier;
 use std::sync::Mutex;
+use std::time::Duration;
 
 /// Run `program` on the Pregel engine.
 pub fn run<P: VCProg>(
@@ -42,156 +40,81 @@ pub fn run<P: VCProg>(
 ) -> Result<TypedRun<P::VProp>> {
     let topo = graph.topology();
     let n = topo.num_vertices();
-    let workers = opts.workers.max(1).min(n.max(1));
-    let part = Partitioner::new(topo, workers, opts.partition);
 
     // Global state arrays; each index is written only by its owner.
     let mut props: Vec<Option<P::VProp>> = (0..n).map(|_| None).collect();
-    let mut active: Vec<bool> = vec![true; n];
     let mut inbox_a: Vec<Option<P::Msg>> = (0..n).map(|_| None).collect();
     let mut inbox_b: Vec<Option<P::Msg>> = (0..n).map(|_| None).collect();
 
     let props_s = SharedSlice::new(&mut props);
-    let active_s = SharedSlice::new(&mut active);
     let inbox_a_s = SharedSlice::new(&mut inbox_a);
     let inbox_b_s = SharedSlice::new(&mut inbox_b);
 
-    let board: MessageBoard<P::Msg> = MessageBoard::new(workers);
-    let barrier = Barrier::new(workers);
-    let num_active = AtomicU64::new(0);
-    // Locally-delivered messages (fast path) — counted separately since
-    // they never touch the board.
-    let local_msgs_total = AtomicU64::new(0);
-    let local_msgs_step = AtomicU64::new(0);
-    let udf_calls = AtomicU64::new(0);
-    let stop = AtomicBool::new(false);
-    let steps_done = AtomicU64::new(0);
-    let converged = AtomicBool::new(false);
-    let step_log: Mutex<Vec<StepMetrics>> = Mutex::new(Vec::new());
-    let busy_log: Mutex<Vec<std::time::Duration>> =
-        Mutex::new(vec![std::time::Duration::ZERO; workers]);
+    let rt: SuperstepRuntime<'_, P::Msg> =
+        SuperstepRuntime::new(topo, opts, opts.combiner && program.combinable());
+    let busy_log: Mutex<Vec<Duration>> = Mutex::new(vec![Duration::ZERO; rt.workers]);
 
-    let timer = Timer::start();
     std::thread::scope(|scope| {
-        for w in 0..workers {
-            let part = &part;
-            let board = &board;
-            let barrier = &barrier;
-            let num_active = &num_active;
-            let udf_calls = &udf_calls;
-            let stop = &stop;
-            let steps_done = &steps_done;
-            let converged = &converged;
-            let step_log = &step_log;
+        for w in 0..rt.workers {
+            let rt = &rt;
             let busy_log = &busy_log;
-            let local_msgs_total = &local_msgs_total;
-            let local_msgs_step = &local_msgs_step;
             scope.spawn(move || {
-                let mut local_udf: u64 = 0;
-                let mut busy = std::time::Duration::ZERO;
-                let mut phase_timer;
+                let mut ctx = rt.ctx(w);
+                let mut busy = Duration::ZERO;
                 // --- init phase -------------------------------------------
-                phase_timer = crate::util::timer::CpuTimer::start();
-                for v in part.vertices_of(w, n) {
+                let mut phase_timer = CpuTimer::start();
+                for v in rt.vertices_of(w) {
                     let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
-                    local_udf += 1;
+                    ctx.udf += 1;
                     unsafe { props_s.set(v as usize, Some(p)) };
                 }
                 busy += phase_timer.elapsed();
-                barrier.wait();
+                rt.barrier.wait();
 
-                // Per-target staging buffers (batched routing) and combiner
-                // maps, reused across supersteps.
-                let mut stage: Vec<Vec<(VertexId, P::Msg)>> =
-                    (0..workers).map(|_| Vec::new()).collect();
-                let mut combine: Vec<HashMap<VertexId, P::Msg>> =
-                    (0..workers).map(|_| HashMap::new()).collect();
+                // Honour MAX_ITER = 0: init only, no supersteps.
+                if opts.max_iter == 0 {
+                    ctx.retire();
+                    busy_log.lock().unwrap()[w] = busy;
+                    return;
+                }
+
                 // Edge buffer for the batched-emit path (proxied programs).
                 let batch_emit = program.prefers_batch_emit();
                 let mut edge_buf: Vec<(VertexId, &P::EProp)> = Vec::new();
-
-                // Honour MAX_ITER = 0: init only, no supersteps.
                 let mut iter: u32 = 1;
-                if opts.max_iter == 0 {
-                    return;
-                }
-                let mut last_board_msgs: u64 = 0;
                 loop {
                     let step_timer = Timer::start();
-                    let (inbox_cur, inbox_next) = if iter % 2 == 1 {
+                    let parity = iter & 1;
+                    let (inbox_cur, inbox_next) = if parity == 1 {
                         (inbox_a_s, inbox_b_s)
                     } else {
                         (inbox_b_s, inbox_a_s)
                     };
 
                     // --- Phase A: compute + emit --------------------------
-                    phase_timer = crate::util::timer::CpuTimer::start();
-                    let mut local_active: u64 = 0;
-                    let mut local_delivered: u64 = 0;
-                    for v in part.vertices_of(w, n) {
+                    phase_timer = CpuTimer::start();
+                    for v in rt.vertices_of(w) {
                         let vi = v as usize;
                         let slot = unsafe { inbox_cur.get_mut(vi) };
-                        let was_active = unsafe { *active_s.get(vi) };
+                        let was_active = rt.active.prev(v);
                         if !was_active && slot.is_none() {
                             continue;
                         }
                         let msg = match slot.take() {
                             Some(m) => m,
                             None => {
-                                local_udf += 1;
+                                ctx.udf += 1;
                                 program.empty_message()
                             }
                         };
                         let prop_slot = unsafe { props_s.get_mut(vi) };
-                        let prop = prop_slot.as_ref().expect("initialized");
-                        let (new_prop, is_active) = program.vertex_compute(prop, &msg, iter);
-                        local_udf += 1;
+                        let (new_prop, is_active) =
+                            program.vertex_compute(prop_slot.as_ref().expect("initialized"), &msg, iter);
+                        ctx.udf += 1;
                         *prop_slot = Some(new_prop);
-                        unsafe { active_s.set(vi, is_active) };
+                        rt.active.set_next(v, is_active);
                         if is_active {
-                            local_active += 1;
                             let prop = prop_slot.as_ref().unwrap();
-                            // Route one emitted message: local fast path
-                            // (merge straight into our inbox — §Perf: the
-                            // biggest shared-memory win), sender combiner,
-                            // or staged board routing.
-                            macro_rules! route {
-                                ($dst:expr, $m:expr) => {{
-                                    let dst: VertexId = $dst;
-                                    let m: P::Msg = $m;
-                                    let tp = part.partition_of(dst);
-                                    if tp == w {
-                                        let slot =
-                                            unsafe { inbox_next.get_mut(dst as usize) };
-                                        *slot = Some(match slot.take() {
-                                            Some(old) => {
-                                                local_udf += 1;
-                                                program.merge_message(&old, &m)
-                                            }
-                                            None => m,
-                                        });
-                                        local_delivered += 1;
-                                    } else if opts.combiner && program.combinable() {
-                                        use std::collections::hash_map::Entry;
-                                        match combine[tp].entry(dst) {
-                                            Entry::Occupied(mut e) => {
-                                                local_udf += 1;
-                                                let merged =
-                                                    program.merge_message(e.get(), &m);
-                                                e.insert(merged);
-                                            }
-                                            Entry::Vacant(e) => {
-                                                e.insert(m);
-                                            }
-                                        }
-                                    } else {
-                                        stage[tp].push((dst, m));
-                                        if stage[tp].len() >= 4096 {
-                                            board.send_batch(w, tp, &mut stage[tp]);
-                                        }
-                                    }
-                                }};
-                            }
                             if batch_emit {
                                 // One batched call per vertex (proxied
                                 // programs: one IPC round-trip — the
@@ -200,108 +123,49 @@ pub fn run<P: VCProg>(
                                 for (eid, dst) in topo.out_edges(v) {
                                     edge_buf.push((dst, graph.edge_prop(eid)));
                                 }
-                                local_udf += 1;
+                                ctx.udf += 1;
                                 for (dst, m) in program.emit_to_edges(v, prop, &edge_buf) {
-                                    route!(dst, m);
+                                    // SAFETY: worker `w` owns its send phase
+                                    // and its vertices' inbox_next slots.
+                                    unsafe { ctx.route(program, inbox_next, parity, dst, m) };
                                 }
                             } else {
                                 for (eid, dst) in topo.out_edges(v) {
-                                    local_udf += 1;
-                                    if let Some(m) = program.emit_message(
-                                        v,
-                                        dst,
-                                        prop,
-                                        graph.edge_prop(eid),
-                                    ) {
-                                        route!(dst, m);
+                                    ctx.udf += 1;
+                                    if let Some(m) =
+                                        program.emit_message(v, dst, prop, graph.edge_prop(eid))
+                                    {
+                                        // SAFETY: as above.
+                                        unsafe { ctx.route(program, inbox_next, parity, dst, m) };
                                     }
                                 }
                             }
                         }
                     }
-                    // Flush staging buffers.
-                    for tp in 0..workers {
-                        if opts.combiner && program.combinable() {
-                            let map = &mut combine[tp];
-                            if !map.is_empty() {
-                                let mut batch: Vec<(VertexId, P::Msg)> = map.drain().collect();
-                                board.send_batch(w, tp, &mut batch);
-                            }
-                        } else if !stage[tp].is_empty() {
-                            board.send_batch(w, tp, &mut stage[tp]);
-                        }
-                    }
-                    num_active.fetch_add(local_active, Ordering::Relaxed);
-                    local_msgs_step.fetch_add(local_delivered, Ordering::Relaxed);
+                    // SAFETY: still within worker `w`'s send phase.
+                    unsafe { ctx.flush(parity) };
                     busy += phase_timer.elapsed();
-                    barrier.wait();
+                    rt.barrier.wait();
 
                     // --- Phase B: deliver ---------------------------------
-                    phase_timer = crate::util::timer::CpuTimer::start();
-                    board.drain_to(w, |dst, m| {
-                        let slot = unsafe { inbox_next.get_mut(dst as usize) };
-                        *slot = Some(match slot.take() {
-                            Some(old) => {
-                                local_udf += 1;
-                                program.merge_message(&old, &m)
-                            }
-                            None => m,
-                        });
-                    });
+                    phase_timer = CpuTimer::start();
+                    // SAFETY: sends of `parity` finished at the barrier;
+                    // worker `w` drains only its own shard and inbox slots.
+                    unsafe { ctx.deliver(program, inbox_next, parity) };
                     busy += phase_timer.elapsed();
-                    // Leader-only bookkeeping window: non-leaders go straight
-                    // from this barrier to the next and touch nothing shared
-                    // in between, so the leader may read/reset the atomics.
-                    let lead = barrier.wait().is_leader();
-                    if lead {
-                        let act = num_active.swap(0, Ordering::Relaxed);
-                        let step_local = local_msgs_step.swap(0, Ordering::Relaxed);
-                        local_msgs_total.fetch_add(step_local, Ordering::Relaxed);
-                        let msgs_total = board.total_messages();
-                        let step_msgs = msgs_total - last_board_msgs + step_local;
-                        last_board_msgs = msgs_total;
-                        steps_done.store(iter as u64, Ordering::Relaxed);
-                        if opts.step_metrics {
-                            step_log.lock().unwrap().push(StepMetrics {
-                                step: iter,
-                                active: act,
-                                messages: step_msgs,
-                                elapsed: step_timer.elapsed(),
-                                mode: None,
-                            });
-                        }
-                        if act == 0 {
-                            converged.store(true, Ordering::Relaxed);
-                            stop.store(true, Ordering::Relaxed);
-                        } else if iter >= opts.max_iter {
-                            stop.store(true, Ordering::Relaxed);
-                        }
-                    }
-                    barrier.wait();
-                    if stop.load(Ordering::Relaxed) {
+
+                    if rt.end_step(iter, &step_timer, None, |_| {}) {
                         break;
                     }
                     iter += 1;
                 }
-                udf_calls.fetch_add(local_udf, Ordering::Relaxed);
+                ctx.retire();
                 busy_log.lock().unwrap()[w] = busy;
             });
         }
     });
 
-    let locals = local_msgs_total.load(Ordering::Relaxed);
-    let metrics = RunMetrics {
-        supersteps: steps_done.load(Ordering::Relaxed) as u32,
-        total_messages: board.total_messages() + locals,
-        total_message_bytes: board.total_bytes()
-            + locals * (4 + std::mem::size_of::<P::Msg>() as u64),
-        elapsed: timer.elapsed(),
-        converged: converged.load(Ordering::Relaxed),
-        steps: step_log.into_inner().unwrap(),
-        workers,
-        udf_calls: udf_calls.load(Ordering::Relaxed),
-        worker_busy: busy_log.into_inner().unwrap(),
-    };
+    let metrics = rt.into_metrics(busy_log.into_inner().unwrap());
     Ok(TypedRun {
         props: props.into_iter().map(|p| p.expect("initialized")).collect(),
         metrics,
@@ -424,5 +288,17 @@ mod tests {
         assert!(r.metrics.total_messages >= 2);
         assert!(r.metrics.udf_calls > 0);
         assert!(!r.metrics.steps.is_empty());
+    }
+
+    #[test]
+    fn per_step_message_counts_sum_to_total() {
+        // Regression: the pre-runtime engines kept the board watermark in a
+        // thread-local, so per-step message counts went wrong whenever the
+        // std barrier elected a different leader. The shared runtime keeps
+        // it in a shared atomic — steps must sum exactly to the total.
+        let g = crate::graph::generate::random_for_tests(80, 600, 23);
+        let r = run(&g, &SsspBellmanFord::new(0), &opts(4)).unwrap();
+        let per_step: u64 = r.metrics.steps.iter().map(|s| s.messages).sum();
+        assert_eq!(per_step, r.metrics.total_messages);
     }
 }

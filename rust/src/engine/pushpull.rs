@@ -9,6 +9,13 @@
 //! count against `|E| / threshold` (Gemini uses 20), ablated in
 //! `benches/ablations.rs`.
 //!
+//! Push-mode routing, active-set tracking and the barrier/convergence loop
+//! come from the shared [`superstep`](crate::engine::superstep) runtime;
+//! the density decision is fed straight from the shared active bitset (the
+//! leader folds out-degrees over the set bits in its bookkeeping window).
+//! The dense/pull specialization stays here: it is what makes this engine
+//! Gemini rather than Pregel.
+//!
 //! Both modes generate exactly the message multiset of Algorithm 1 — a
 //! message src→dst exists iff src was active last round and `emit_message`
 //! returned `Some` — so results are engine-identical (up to float summation
@@ -20,23 +27,20 @@
 //! Phase E  emit/gather   push: route own active vertices' messages
 //!                        pull: fold in-edges of own vertices into own inbox
 //! ── barrier ──
-//! Phase V  deliver+compute  (push only: drain board column first)
-//! ── barrier ──
-//! Phase C  leader: stop flag, next mode, metrics, reset atomics
-//! ── barrier ──
+//! Phase V  deliver+compute  (push only: drain own board shard first)
+//! ── end_step: barrier, leader bookkeeping (incl. next-mode decision
+//!    from the active bitset), barrier ──
 //! ```
 
-use crate::distributed::comm::MessageBoard;
-use crate::distributed::metrics::{RunMetrics, StepMetrics, StepMode};
+use crate::distributed::metrics::StepMode;
 use crate::distributed::shared::SharedSlice;
+use crate::engine::superstep::SuperstepRuntime;
 use crate::engine::{RunOptions, TypedRun};
 use crate::error::Result;
-use crate::graph::partition::Partitioner;
 use crate::graph::PropertyGraph;
 use crate::util::timer::Timer;
-use crate::vcprog::{VCProg, VertexId};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Barrier, Mutex};
+use crate::vcprog::VCProg;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Run `program` on the Push-Pull engine.
 pub fn run<P: VCProg>(
@@ -47,70 +51,40 @@ pub fn run<P: VCProg>(
     let topo = graph.topology();
     let n = topo.num_vertices();
     let m = topo.num_edges();
-    let workers = opts.workers.max(1).min(n.max(1));
-    let part = Partitioner::new(topo, workers, opts.partition);
 
     let mut props: Vec<Option<P::VProp>> = (0..n).map(|_| None).collect();
-    // Active flags of the previous round (read-shared during Phase E).
-    let mut prev_active: Vec<bool> = vec![true; n];
-    let mut next_active: Vec<bool> = vec![false; n];
     let mut inbox: Vec<Option<P::Msg>> = (0..n).map(|_| None).collect();
 
     let props_s = SharedSlice::new(&mut props);
-    let prev_active_s = SharedSlice::new(&mut prev_active);
-    let next_active_s = SharedSlice::new(&mut next_active);
     let inbox_s = SharedSlice::new(&mut inbox);
 
-    let board: MessageBoard<P::Msg> = MessageBoard::new(workers);
-    let barrier = Barrier::new(workers);
-    let num_active = AtomicU64::new(0);
-    let active_out_edges = AtomicU64::new(0);
-    let pull_msgs = AtomicU64::new(0);
-    let total_msgs = AtomicU64::new(0);
-    let udf_calls = AtomicU64::new(0);
-    let stop = AtomicBool::new(false);
+    let rt: SuperstepRuntime<'_, P::Msg> = SuperstepRuntime::new(topo, opts, false);
     // Mode for the *current* round, decided by the leader at the end of the
     // previous round. Round 1 is dense (everyone starts active).
     let pull_mode = AtomicBool::new(true);
-    let steps_done = AtomicU64::new(0);
-    let converged = AtomicBool::new(false);
-    let step_log: Mutex<Vec<StepMetrics>> = Mutex::new(Vec::new());
 
-    let timer = Timer::start();
     std::thread::scope(|scope| {
-        for w in 0..workers {
-            let part = &part;
-            let board = &board;
-            let barrier = &barrier;
-            let num_active = &num_active;
-            let active_out_edges = &active_out_edges;
-            let pull_msgs = &pull_msgs;
-            let total_msgs = &total_msgs;
-            let udf_calls = &udf_calls;
-            let stop = &stop;
+        for w in 0..rt.workers {
+            let rt = &rt;
             let pull_mode = &pull_mode;
-            let steps_done = &steps_done;
-            let converged = &converged;
-            let step_log = &step_log;
             scope.spawn(move || {
-                let mut local_udf: u64 = 0;
-                for v in part.vertices_of(w, n) {
+                let mut ctx = rt.ctx(w);
+                for v in rt.vertices_of(w) {
                     let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
-                    local_udf += 1;
+                    ctx.udf += 1;
                     unsafe { props_s.set(v as usize, Some(p)) };
                 }
-                barrier.wait();
+                rt.barrier.wait();
 
-                let mut stage: Vec<Vec<(VertexId, P::Msg)>> =
-                    (0..workers).map(|_| Vec::new()).collect();
                 // Honour MAX_ITER = 0: init only, no supersteps.
-                let mut iter: u32 = 1;
                 if opts.max_iter == 0 {
+                    ctx.retire();
                     return;
                 }
-                let mut last_board_msgs: u64 = 0;
+                let mut iter: u32 = 1;
                 loop {
                     let step_timer = Timer::start();
+                    let parity = iter & 1;
                     let pull = pull_mode.load(Ordering::Relaxed);
 
                     // --- Phase E ------------------------------------------
@@ -118,22 +92,22 @@ pub fn run<P: VCProg>(
                         // Dense/pull: every owned vertex folds messages from
                         // previously-active in-neighbors (DENSESIGNAL).
                         let mut local_msgs: u64 = 0;
-                        for v in part.vertices_of(w, n) {
+                        for v in rt.vertices_of(w) {
                             let vi = v as usize;
                             let mut accum: Option<P::Msg> = None;
                             for (eid, src) in topo.in_edges(v) {
-                                if unsafe { *prev_active_s.get(src as usize) } {
+                                if rt.active.prev(src) {
                                     let sp = unsafe { props_s.get(src as usize) }
                                         .as_ref()
                                         .expect("init");
-                                    local_udf += 1;
+                                    ctx.udf += 1;
                                     if let Some(msg) =
                                         program.emit_message(src, v, sp, graph.edge_prop(eid))
                                     {
                                         local_msgs += 1;
                                         accum = Some(match accum {
                                             Some(acc) => {
-                                                local_udf += 1;
+                                                ctx.udf += 1;
                                                 program.merge_message(&acc, &msg)
                                             }
                                             None => msg,
@@ -143,162 +117,81 @@ pub fn run<P: VCProg>(
                             }
                             unsafe { inbox_s.set(vi, accum) };
                         }
-                        pull_msgs.fetch_add(local_msgs, Ordering::Relaxed);
+                        rt.add_step_messages(local_msgs);
                     } else {
                         // Sparse/push: active owned vertices push along
-                        // out-edges, routed via the board.
-                        let mut local_push_msgs: u64 = 0;
-                        for v in part.vertices_of(w, n) {
-                            if !unsafe { *prev_active_s.get(v as usize) } {
+                        // out-edges through the shared flat-board router
+                        // (local destinations merge straight into the inbox).
+                        for v in rt.vertices_of(w) {
+                            if !rt.active.prev(v) {
                                 continue;
                             }
                             let prop = unsafe { props_s.get(v as usize) }.as_ref().expect("init");
                             for (eid, dst) in topo.out_edges(v) {
-                                local_udf += 1;
+                                ctx.udf += 1;
                                 if let Some(msg) =
                                     program.emit_message(v, dst, prop, graph.edge_prop(eid))
                                 {
-                                    let tp = part.partition_of(dst);
-                                    if tp == w {
-                                        // Local delivery fast path (§Perf):
-                                        // own destination — merge straight
-                                        // into our inbox slot.
-                                        local_push_msgs += 1;
-                                        let slot =
-                                            unsafe { inbox_s.get_mut(dst as usize) };
-                                        *slot = Some(match slot.take() {
-                                            Some(acc) => {
-                                                local_udf += 1;
-                                                program.merge_message(&acc, &msg)
-                                            }
-                                            None => msg,
-                                        });
-                                    } else {
-                                        stage[tp].push((dst, msg));
-                                        if stage[tp].len() >= 4096 {
-                                            board.send_batch(w, tp, &mut stage[tp]);
-                                        }
-                                    }
+                                    // SAFETY: worker `w` owns its send phase
+                                    // and its vertices' inbox slots.
+                                    unsafe { ctx.route(program, inbox_s, parity, dst, msg) };
                                 }
                             }
                         }
-                        for tp in 0..workers {
-                            if !stage[tp].is_empty() {
-                                board.send_batch(w, tp, &mut stage[tp]);
-                            }
-                        }
-                        // Locally-delivered messages bypass the board but
-                        // still count as routed work for the metrics.
-                        pull_msgs.fetch_add(local_push_msgs, Ordering::Relaxed);
+                        // SAFETY: still within worker `w`'s send phase.
+                        unsafe { ctx.flush(parity) };
                     }
-                    barrier.wait();
+                    rt.barrier.wait();
 
                     // --- Phase V: deliver (push) + compute ----------------
                     if !pull {
-                        board.drain_to(w, |dst, msg| {
-                            let slot = unsafe { inbox_s.get_mut(dst as usize) };
-                            *slot = Some(match slot.take() {
-                                Some(acc) => {
-                                    local_udf += 1;
-                                    program.merge_message(&acc, &msg)
-                                }
-                                None => msg,
-                            });
-                        });
+                        // SAFETY: sends of `parity` finished at the barrier.
+                        unsafe { ctx.deliver(program, inbox_s, parity) };
                     }
-                    let mut local_active: u64 = 0;
-                    let mut local_aoe: u64 = 0;
-                    for v in part.vertices_of(w, n) {
+                    for v in rt.vertices_of(w) {
                         let vi = v as usize;
-                        let was_active = unsafe { *prev_active_s.get(vi) };
+                        let was_active = rt.active.prev(v);
                         let slot = unsafe { inbox_s.get_mut(vi) };
                         if !was_active && slot.is_none() {
-                            unsafe { next_active_s.set(vi, false) };
+                            // Next-active bit stays clear (buffer pre-zeroed).
                             continue;
                         }
                         let msg = match slot.take() {
                             Some(m) => m,
                             None => {
-                                local_udf += 1;
+                                ctx.udf += 1;
                                 program.empty_message()
                             }
                         };
                         let prop_slot = unsafe { props_s.get_mut(vi) };
                         let (new_prop, is_active) =
                             program.vertex_compute(prop_slot.as_ref().expect("init"), &msg, iter);
-                        local_udf += 1;
+                        ctx.udf += 1;
                         *prop_slot = Some(new_prop);
-                        unsafe { next_active_s.set(vi, is_active) };
-                        if is_active {
-                            local_active += 1;
-                            local_aoe += topo.out_degree(v) as u64;
-                        }
+                        rt.active.set_next(v, is_active);
                     }
-                    num_active.fetch_add(local_active, Ordering::Relaxed);
-                    active_out_edges.fetch_add(local_aoe, Ordering::Relaxed);
-                    barrier.wait();
 
-                    // --- Phase C: leader bookkeeping ----------------------
-                    let lead = barrier.wait().is_leader();
-                    if lead {
-                        let act = num_active.swap(0, Ordering::Relaxed);
-                        let aoe = active_out_edges.swap(0, Ordering::Relaxed);
-                        let board_total = board.total_messages();
-                        let push_step_msgs = board_total - last_board_msgs;
-                        last_board_msgs = board_total;
-                        let pull_step_msgs = pull_msgs.swap(0, Ordering::Relaxed);
-                        total_msgs.fetch_add(push_step_msgs + pull_step_msgs, Ordering::Relaxed);
-                        steps_done.store(iter as u64, Ordering::Relaxed);
-                        if opts.step_metrics {
-                            step_log.lock().unwrap().push(StepMetrics {
-                                step: iter,
-                                active: act,
-                                messages: push_step_msgs + pull_step_msgs,
-                                elapsed: step_timer.elapsed(),
-                                mode: Some(if pull { StepMode::Pull } else { StepMode::Push }),
-                            });
-                        }
-                        // Gemini's density heuristic for the next round.
+                    let mode = Some(if pull { StepMode::Pull } else { StepMode::Push });
+                    let stop = rt.end_step(iter, &step_timer, mode, |_act| {
+                        // Gemini's density heuristic for the next round, fed
+                        // from the shared active bitset (leader window, before
+                        // the set advances).
+                        let mut aoe: u64 = 0;
+                        rt.active.for_each_next(|v| aoe += topo.out_degree(v) as u64);
                         let dense_next = (aoe as f64) > m as f64 / opts.pushpull_threshold;
                         pull_mode.store(dense_next, Ordering::Relaxed);
-                        if act == 0 {
-                            converged.store(true, Ordering::Relaxed);
-                            stop.store(true, Ordering::Relaxed);
-                        } else if iter >= opts.max_iter {
-                            stop.store(true, Ordering::Relaxed);
-                        }
-                    }
-                    barrier.wait();
-                    if stop.load(Ordering::Relaxed) {
+                    });
+                    if stop {
                         break;
                     }
-                    // Flip active arrays: previous ← next (owned slots only).
-                    for v in part.vertices_of(w, n) {
-                        let vi = v as usize;
-                        let na = unsafe { *next_active_s.get(vi) };
-                        unsafe { prev_active_s.set(vi, na) };
-                    }
-                    barrier.wait();
                     iter += 1;
                 }
-                udf_calls.fetch_add(local_udf, Ordering::Relaxed);
+                ctx.retire();
             });
         }
     });
 
-    let steps = step_log.into_inner().unwrap();
-    let total = total_msgs.load(Ordering::Relaxed);
-    let metrics = RunMetrics {
-        supersteps: steps_done.load(Ordering::Relaxed) as u32,
-        total_messages: total,
-        total_message_bytes: total * (4 + std::mem::size_of::<P::Msg>() as u64),
-        elapsed: timer.elapsed(),
-        converged: converged.load(Ordering::Relaxed),
-        steps,
-        workers,
-        udf_calls: udf_calls.load(Ordering::Relaxed),
-        worker_busy: Vec::new(),
-    };
+    let metrics = rt.into_metrics(Vec::new());
     Ok(TypedRun {
         props: props.into_iter().map(|p| p.expect("initialized")).collect(),
         metrics,

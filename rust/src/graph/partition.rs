@@ -99,12 +99,14 @@ impl Partitioner {
         match self.strategy {
             PartitionStrategy::Hash => (v as usize) % self.num_partitions,
             _ => {
-                // Binary search over bounds.
+                // Owner p satisfies bounds[p] <= v < bounds[p+1]. `bounds`
+                // may contain duplicates (empty partitions when P > |V| or
+                // under extreme skew); `binary_search` returns an *arbitrary*
+                // duplicate, which used to assign vertices to empty
+                // partitions that no worker iterates — the owner is the
+                // *last* bound <= v, i.e. the partition point minus one.
                 let v = v as usize;
-                match self.bounds.binary_search(&v) {
-                    Ok(i) => i.min(self.num_partitions - 1),
-                    Err(i) => i - 1,
-                }
+                self.bounds.partition_point(|&b| b <= v) - 1
             }
         }
     }
@@ -280,6 +282,30 @@ mod tests {
         let t = chain(3);
         let p = Partitioner::new(&t, 8, PartitionStrategy::Range);
         check_total_cover(&p, 3);
+    }
+
+    #[test]
+    fn duplicate_bounds_never_assign_to_empty_partitions() {
+        // Regression: with duplicate bounds (empty partitions) the old
+        // binary_search-based partition_of could return an empty partition,
+        // so the vertex was routed to a worker that never iterates it —
+        // lost messages and "initialized" panics downstream.
+        for n in [1usize, 2, 3, 5, 7] {
+            let t = chain(n.max(2));
+            for parts in [2usize, 4, 8, 16] {
+                for strat in [PartitionStrategy::Range, PartitionStrategy::EdgeBalanced] {
+                    let p = Partitioner::new(&t, parts, strat);
+                    check_total_cover(&p, n.max(2));
+                    for v in 0..n.max(2) as VertexId {
+                        let owner = p.partition_of(v);
+                        assert!(
+                            p.partition_size(owner, n.max(2)) > 0,
+                            "vertex {v} assigned to empty partition {owner} ({strat:?}, P={parts})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

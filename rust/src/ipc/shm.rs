@@ -11,6 +11,36 @@ use std::fs::OpenOptions;
 use std::os::unix::io::AsRawFd;
 use std::path::{Path, PathBuf};
 
+/// Minimal mmap bindings against the system C library (the `libc` crate is
+/// not vendored in the offline build environment). The constants are
+/// identical on every Unix this repo targets (Linux, macOS); the hand-rolled
+/// signature declares `off_t` as `i64`, so the binding is gated to 64-bit
+/// targets (32-bit callers get a clean runtime error instead of ABI UB).
+#[cfg(target_pointer_width = "64")]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_SHARED: c_int = 1;
+
+    pub fn map_failed() -> *mut c_void {
+        -1isize as *mut c_void
+    }
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
 /// A shared memory mapping backed by a file.
 pub struct ShmMap {
     ptr: *mut u8,
@@ -53,19 +83,29 @@ impl ShmMap {
         Self::map(file.as_raw_fd(), len, path, false)
     }
 
+    #[cfg(not(target_pointer_width = "64"))]
+    fn map(_fd: i32, _len: usize, path: &Path, _owner: bool) -> Result<ShmMap> {
+        Err(UniGpsError::ipc(format!(
+            "shared-memory mapping of {} requires a 64-bit target \
+             (hand-rolled mmap binding assumes 64-bit off_t)",
+            path.display()
+        )))
+    }
+
+    #[cfg(target_pointer_width = "64")]
     fn map(fd: i32, len: usize, path: &Path, owner: bool) -> Result<ShmMap> {
         // SAFETY: standard mmap of a sized file; failure checked below.
         let ptr = unsafe {
-            libc::mmap(
+            sys::mmap(
                 std::ptr::null_mut(),
                 len,
-                libc::PROT_READ | libc::PROT_WRITE,
-                libc::MAP_SHARED,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED,
                 fd,
                 0,
             )
         };
-        if ptr == libc::MAP_FAILED {
+        if ptr == sys::map_failed() {
             return Err(UniGpsError::ipc(format!(
                 "mmap({}) failed: {}",
                 path.display(),
@@ -116,9 +156,11 @@ impl ShmMap {
 
 impl Drop for ShmMap {
     fn drop(&mut self) {
-        // SAFETY: ptr/len came from a successful mmap.
+        // SAFETY: ptr/len came from a successful mmap (64-bit targets only —
+        // `map` never constructs a ShmMap elsewhere).
+        #[cfg(target_pointer_width = "64")]
         unsafe {
-            libc::munmap(self.ptr as *mut libc::c_void, self.len);
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
         }
         if self.owner {
             let _ = std::fs::remove_file(&self.path);

@@ -1,0 +1,127 @@
+//! Stub PJRT backend used when the `pjrt` feature is off (the default in
+//! the offline build environment, where the `xla` crate is unavailable).
+//!
+//! [`PjRtRuntime::open`] always fails with a clean typed error, so none of
+//! the other methods are ever reached through the public API — the tensor
+//! engine surfaces the error and its tests/examples skip when artifacts are
+//! absent. The types mirror the real backend's surface exactly so the
+//! tensor engine compiles unchanged under either feature set.
+
+use crate::error::{Result, UniGpsError};
+use crate::runtime::artifact::{ArtifactKey, Manifest};
+use std::path::Path;
+use std::rc::Rc;
+
+fn unavailable() -> UniGpsError {
+    UniGpsError::runtime(
+        "PJRT runtime unavailable: built without the `pjrt` feature \
+         (the `xla` crate is not vendored offline); interpreted engines \
+         remain fully functional",
+    )
+}
+
+/// Opaque stand-in for `xla::Literal`.
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+/// Opaque stand-in for `xla::PjRtBuffer`.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+/// Stand-in for a loaded, compiled step function. Never constructed —
+/// [`PjRtRuntime::open`] fails first.
+#[derive(Debug)]
+pub struct CompiledStep {
+    /// Artifact metadata.
+    pub key: ArtifactKey,
+}
+
+impl CompiledStep {
+    /// Always fails (stub backend).
+    pub fn execute(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    /// Always fails (stub backend).
+    pub fn execute_buffers(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+}
+
+/// Stand-in for the artifact-backed runtime.
+pub struct PjRtRuntime {
+    manifest: Manifest,
+}
+
+impl PjRtRuntime {
+    /// Always fails with a typed "built without pjrt" error.
+    pub fn open(_dir: &Path) -> Result<PjRtRuntime> {
+        Err(unavailable())
+    }
+
+    /// The artifact manifest (unreachable: `open` always fails).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Always fails (stub backend).
+    pub fn step_for(
+        &self,
+        _algorithm: &str,
+        _v: usize,
+        _max_block_edges: usize,
+    ) -> Result<Rc<CompiledStep>> {
+        Err(unavailable())
+    }
+
+    /// Number of compiled executables currently cached (always zero).
+    pub fn cached(&self) -> usize {
+        0
+    }
+
+    /// Always fails (stub backend).
+    pub fn upload_f32(&self, _data: &[f32], _dims: &[usize]) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+
+    /// Always fails (stub backend).
+    pub fn upload_i32(&self, _data: &[i32], _dims: &[usize]) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+}
+
+/// Literal helpers mirroring the real backend's `lit` module.
+pub mod lit {
+    use super::*;
+
+    /// f32 vector literal (stub).
+    pub fn f32v(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// i32 matrix literal (stub).
+    pub fn i32m(_data: &[i32], _rows: usize, _cols: usize) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// f32 matrix literal (stub).
+    pub fn f32m(_data: &[f32], _rows: usize, _cols: usize) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    /// Extract an f32 vector from a literal (stub).
+    pub fn to_f32v(_l: &Literal) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_reports_missing_feature() {
+        let err = PjRtRuntime::open(Path::new("artifacts")).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

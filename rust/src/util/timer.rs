@@ -91,14 +91,35 @@ impl PhaseTimes {
 /// accounting: on an oversubscribed machine (the 1-core testbed), wall time
 /// counts preemption; CPU time counts actual work — which is what the
 /// machine-scalability model (Fig 8c) needs.
+///
+/// Bound directly against the system C library (the `libc` crate is not
+/// vendored in the offline build environment). The hand-rolled `timespec`
+/// uses 64-bit fields, so the binding is gated to 64-bit Linux; other
+/// platforms report zero, which degrades the Fig 8c model gracefully.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 pub fn thread_cpu_time() -> Duration {
-    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
-    // SAFETY: plain libc call with a valid out-pointer.
-    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+    const CLOCK_THREAD_CPUTIME_ID: i32 = 3;
+    extern "C" {
+        fn clock_gettime(clockid: i32, tp: *mut Timespec) -> i32;
+    }
+    let mut ts = Timespec { tv_sec: 0, tv_nsec: 0 };
+    // SAFETY: plain C call with a valid out-pointer; std already links libc.
+    let rc = unsafe { clock_gettime(CLOCK_THREAD_CPUTIME_ID, &mut ts) };
     if rc != 0 {
         return Duration::ZERO;
     }
     Duration::new(ts.tv_sec as u64, ts.tv_nsec as u32)
+}
+
+/// Fallback for platforms without the 64-bit Linux binding above.
+#[cfg(not(all(target_os = "linux", target_pointer_width = "64")))]
+pub fn thread_cpu_time() -> Duration {
+    Duration::ZERO
 }
 
 /// Stopwatch over the calling thread's CPU time.

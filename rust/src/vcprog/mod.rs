@@ -33,6 +33,7 @@
 pub mod adapter;
 pub mod programs;
 
+use crate::error::{Result, UniGpsError};
 use crate::graph::record::{FieldType, Value};
 use std::fmt::Debug;
 
@@ -181,32 +182,58 @@ impl Column {
 
 /// Materialize a program's outputs over the final property vector into named
 /// columns (used by every engine's result path).
-pub fn collect_columns<P: VCProg>(program: &P, props: &[P::VProp]) -> Vec<(String, Column)> {
+///
+/// A program whose `output` rows disagree with its `output_fields` schema
+/// (wrong arity, wrong value type, unsupported field type) yields a typed
+/// [`UniGpsError::Engine`] rather than aborting the process — user programs
+/// (including remote/IPC-served ones) must not be able to panic the engine.
+pub fn collect_columns<P: VCProg>(
+    program: &P,
+    props: &[P::VProp],
+) -> Result<Vec<(String, Column)>> {
     let fields = program.output_fields();
-    let mut cols: Vec<(String, Column)> = fields
-        .iter()
-        .map(|(n, t)| {
-            let col = match t {
-                FieldType::Long => Column::I64(Vec::with_capacity(props.len())),
-                FieldType::Double => Column::F64(Vec::with_capacity(props.len())),
-                other => panic!("unsupported output field type {other:?}"),
-            };
-            (n.to_string(), col)
-        })
-        .collect();
+    let mut cols: Vec<(String, Column)> = Vec::with_capacity(fields.len());
+    for (n, t) in &fields {
+        let col = match t {
+            FieldType::Long => Column::I64(Vec::with_capacity(props.len())),
+            FieldType::Double => Column::F64(Vec::with_capacity(props.len())),
+            other => {
+                return Err(UniGpsError::engine(format!(
+                    "program '{}': unsupported output field type {other:?} for column '{n}' \
+                     (tabular output supports Long and Double)",
+                    program.name()
+                )))
+            }
+        };
+        cols.push((n.to_string(), col));
+    }
     for (id, prop) in props.iter().enumerate() {
         let row = program.output(id as VertexId, prop);
-        assert_eq!(row.len(), cols.len(), "output row arity mismatch");
+        if row.len() != cols.len() {
+            return Err(UniGpsError::engine(format!(
+                "program '{}': output row for vertex {id} has {} values but \
+                 output_fields declares {} columns",
+                program.name(),
+                row.len(),
+                cols.len()
+            )));
+        }
         for (slot, value) in row.into_iter().enumerate() {
             match (&mut cols[slot].1, value) {
                 (Column::I64(v), Value::Long(x)) => v.push(x),
                 (Column::F64(v), Value::Double(x)) => v.push(x),
                 (Column::F64(v), Value::Long(x)) => v.push(x as f64),
-                (c, v) => panic!("output type mismatch in column {slot}: {c:?} <- {v:?}"),
+                (c, v) => {
+                    return Err(UniGpsError::engine(format!(
+                        "program '{}': output type mismatch at vertex {id}, column {slot}: \
+                         expected {c:?}, got {v:?}",
+                        program.name()
+                    )))
+                }
             }
         }
     }
-    cols
+    Ok(cols)
 }
 
 #[cfg(test)]
@@ -218,10 +245,73 @@ mod tests {
     fn collect_columns_shapes() {
         let prog = ConnectedComponents::new();
         let props = vec![0u32, 0, 2];
-        let cols = collect_columns(&prog, &props);
+        let cols = collect_columns(&prog, &props).unwrap();
         assert_eq!(cols.len(), 1);
         assert_eq!(cols[0].0, "component");
         assert_eq!(cols[0].1.as_i64().unwrap(), &[0, 0, 2]);
+    }
+
+    /// A deliberately misbehaving program for the error paths: declares one
+    /// Long column but emits rows controlled by the vertex property.
+    struct Misbehaving {
+        fields: Vec<(&'static str, FieldType)>,
+    }
+
+    impl VCProg for Misbehaving {
+        type In = ();
+        type VProp = u8;
+        type EProp = f64;
+        type Msg = u32;
+
+        fn init_vertex_attr(&self, _id: VertexId, _d: usize, _i: &()) -> u8 {
+            0
+        }
+        fn empty_message(&self) -> u32 {
+            0
+        }
+        fn merge_message(&self, a: &u32, b: &u32) -> u32 {
+            a + b
+        }
+        fn vertex_compute(&self, p: &u8, _m: &u32, _i: Iteration) -> (u8, bool) {
+            (*p, false)
+        }
+        fn emit_message(&self, _s: VertexId, _d: VertexId, _p: &u8, _e: &f64) -> Option<u32> {
+            None
+        }
+        fn output_fields(&self) -> Vec<(&'static str, FieldType)> {
+            self.fields.clone()
+        }
+        fn output(&self, _id: VertexId, prop: &u8) -> Vec<Value> {
+            match prop {
+                0 => vec![Value::Long(1)],
+                1 => vec![],                          // arity mismatch
+                _ => vec![Value::Str("oops".into())], // type mismatch
+            }
+        }
+        fn name(&self) -> &str {
+            "misbehaving"
+        }
+    }
+
+    #[test]
+    fn collect_columns_rejects_bad_programs_without_panicking() {
+        let long_field = Misbehaving {
+            fields: vec![("x", FieldType::Long)],
+        };
+        // Well-formed rows pass.
+        assert!(collect_columns(&long_field, &[0u8, 0]).is_ok());
+        // Arity mismatch → typed engine error.
+        let err = collect_columns(&long_field, &[0u8, 1]).unwrap_err();
+        assert!(err.to_string().contains("output row"), "{err}");
+        // Value/type mismatch → typed engine error.
+        let err = collect_columns(&long_field, &[2u8]).unwrap_err();
+        assert!(err.to_string().contains("type mismatch"), "{err}");
+        // Unsupported declared field type → typed engine error.
+        let bad_schema = Misbehaving {
+            fields: vec![("x", FieldType::Str)],
+        };
+        let err = collect_columns(&bad_schema, &[0u8]).unwrap_err();
+        assert!(err.to_string().contains("unsupported output field type"), "{err}");
     }
 
     #[test]
