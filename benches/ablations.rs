@@ -11,6 +11,10 @@
 //! 5. Message routing substrate: the superstep runtime's flat sharded
 //!    buffers + dense combine slots vs the old HashMap-combine +
 //!    mutex-board routing, on the same power-law message workload.
+//! 6. Superstep handoff: the full end-of-step barrier vs the overlapped
+//!    per-shard seal pipeline (`RunOptions::pipeline`), on the lj analog.
+//!    Also writes `BENCH_superstep.json` so the perf trajectory of the
+//!    superstep hot loop is machine-trackable across PRs.
 
 use unigps::distributed::barrier::{BspBarrier, CondvarBarrier, SpinBarrier};
 use unigps::engine::{run_typed, EngineKind, RunOptions};
@@ -33,6 +37,7 @@ fn main() {
     partition_ablation(&sym);
     barrier_ablation();
     routing_ablation(&graph);
+    superstep_pipeline_ablation(&graph, div);
 }
 
 fn combiner_ablation(graph: &unigps::graph::Graph) {
@@ -290,4 +295,93 @@ fn routing_ablation(graph: &unigps::graph::Graph) {
         "   target: flat ≥1.3x faster at {workers} workers on the power-law \
          graph (no hashing, no locks, buffers reused across rounds)."
     );
+    println!();
+}
+
+/// Superstep handoff ablation: the same engine/algorithm pairs with the
+/// full end-of-step barrier (the pre-pipeline schedule) vs the overlapped
+/// per-shard seal handoff + parallel convergence reduction. Results are
+/// bit-identical (property-tested in `rust/tests/superstep_runtime.rs`);
+/// this measures the wall-clock delta and records it in
+/// `BENCH_superstep.json` as the perf-trajectory anchor for the superstep
+/// hot loop.
+fn superstep_pipeline_ablation(graph: &unigps::graph::Graph, div: u64) {
+    println!("-- [6] superstep handoff: full barrier vs overlapped pipeline --");
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let reps = if fast { 2 } else { 5 };
+    let workers = 4;
+    let n = graph.num_vertices();
+    let m = graph.topology().num_edges();
+
+    // Best-of-reps wall-clock for one (engine, algo, schedule) cell.
+    let measure = |kind: EngineKind, algo: &str, pipeline: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let mut opts = RunOptions::default().with_workers(workers);
+            opts.pipeline = pipeline;
+            opts.step_metrics = false;
+            let timer = Timer::start();
+            match algo {
+                "pagerank" => {
+                    let prog = PageRank::new(n, 10);
+                    opts.max_iter = prog.rounds();
+                    std::hint::black_box(run_typed(kind, graph, &prog, &opts).unwrap());
+                }
+                _ => {
+                    std::hint::black_box(
+                        run_typed(kind, graph, &SsspBellmanFord::new(0), &opts).unwrap(),
+                    );
+                }
+            }
+            best = best.min(timer.secs());
+        }
+        best
+    };
+
+    let cases: [(EngineKind, &str); 3] = [
+        (EngineKind::Pregel, "pagerank"),
+        (EngineKind::Pregel, "sssp"),
+        (EngineKind::PushPull, "sssp"),
+    ];
+    let mut t = Table::new(&["engine/algo", "barriered", "overlapped", "speedup"]);
+    let mut entries = String::new();
+    let mut log_speedup_sum = 0.0f64;
+    for (i, &(kind, algo)) in cases.iter().enumerate() {
+        let barriered = measure(kind, algo, false);
+        let overlapped = measure(kind, algo, true);
+        let speedup = barriered / overlapped.max(1e-12);
+        log_speedup_sum += speedup.ln();
+        t.row(&[
+            format!("{kind}/{algo}"),
+            fmt_dur(barriered),
+            fmt_dur(overlapped),
+            format!("{speedup:.2}x"),
+        ]);
+        if i > 0 {
+            entries.push_str(",\n");
+        }
+        entries.push_str(&format!(
+            "    {{\"engine\": \"{kind}\", \"algo\": \"{algo}\", \
+             \"barriered_secs\": {barriered:.6}, \"overlapped_secs\": {overlapped:.6}, \
+             \"speedup\": {speedup:.4}}}"
+        ));
+    }
+    let geomean = (log_speedup_sum / cases.len() as f64).exp();
+    t.print();
+    println!(
+        "   geomean speedup {geomean:.2}x — target: overlapped ≥1.15x on the lj \
+         analog at {workers} workers (one fewer sync point per step, sealed \
+         rows drain while stragglers emit, parallel convergence reduction)."
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"superstep_handoff\",\n  \"graph\": {{\"key\": \"lj\", \
+         \"scale_div\": {div}, \"vertices\": {n}, \"edges\": {m}}},\n  \
+         \"workers\": {workers},\n  \"reps\": {reps},\n  \"results\": [\n{entries}\n  ],\n  \
+         \"speedup_geomean\": {geomean:.4}\n}}\n"
+    );
+    match std::fs::write("BENCH_superstep.json", &json) {
+        Ok(()) => println!("   wrote BENCH_superstep.json"),
+        Err(e) => println!("   WARN: could not write BENCH_superstep.json: {e}"),
+    }
 }

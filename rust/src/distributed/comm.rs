@@ -6,11 +6,21 @@
 //!   [`crate::engine::superstep`]): a **double-buffered** P×P grid of flat
 //!   `Vec<(dst, msg)>` buffers with *no* per-message locking or hashing.
 //!   Worker `w` owns row `w` exclusively during a send phase and drains
-//!   column `w` during the barrier-separated drain phase, so plain
-//!   `UnsafeCell` access is sound by the same phase discipline as
+//!   column `w` during a drain phase, so plain `UnsafeCell` access is sound
+//!   by the same phase discipline as
 //!   [`crate::distributed::shared::SharedSlice`]. Buffers retain their
 //!   capacity across supersteps (double-buffered by superstep parity), so
 //!   steady-state routing allocates nothing.
+//!
+//!   Phase separation can be enforced two ways: a full barrier between the
+//!   send and drain phases (the classic BSP schedule), or the **per-shard
+//!   seal handoff** of the overlapped pipeline — each `(from, to)` cell
+//!   carries a monotone epoch counter ([`FlatBoard::seal_row`]) that the
+//!   sender release-stores once it has finished writing that cell for a
+//!   superstep, and that the receiver acquire-loads
+//!   ([`FlatBoard::sealed_epoch`]) before draining, so a shard becomes
+//!   drainable (and, one parity later, fillable for step k+1) as soon as
+//!   its sender seals it — without waiting for the other senders.
 //! * [`MessageBoard`] — the original mutex-guarded grid, kept for the
 //!   routing ablation in `benches/ablations.rs` and for code that wants
 //!   safe unsynchronized-phase-free sends.
@@ -115,6 +125,12 @@ pub struct FlatBoard<M> {
     parts: usize,
     /// Two parities of a row-major `cells[from * parts + to]` grid.
     cells: [Vec<UnsafeCell<Vec<Routed<M>>>>; 2],
+    /// Per-`(from, to)` seal epochs for the overlapped superstep handoff:
+    /// `seals[from * parts + to]` is the latest superstep whose cell the
+    /// sender has finished writing (monotone; both parities share one
+    /// counter because epochs alternate parity). Zero-initialised, so
+    /// nothing is pre-sealed for epoch ≥ 1.
+    seals: Vec<AtomicU64>,
     messages: AtomicU64,
     bytes: AtomicU64,
 }
@@ -132,6 +148,7 @@ impl<M: Send> FlatBoard<M> {
         FlatBoard {
             parts,
             cells: [mk(), mk()],
+            seals: (0..parts * parts).map(|_| AtomicU64::new(0)).collect(),
             messages: AtomicU64::new(0),
             bytes: AtomicU64::new(0),
         }
@@ -154,6 +171,38 @@ impl<M: Send> FlatBoard<M> {
         cell.push((dst, msg));
     }
 
+    /// Seal the `(from, to)` cell for `epoch`: the sender has finished
+    /// writing it, and the receiver may drain it from here on. The
+    /// release store publishes every preceding [`FlatBoard::push`] to a
+    /// receiver that acquire-loads the epoch via
+    /// [`FlatBoard::sealed_epoch`].
+    #[inline]
+    pub fn seal_row(&self, from: usize, to: usize, epoch: u64) {
+        self.seals[from * self.parts + to].store(epoch, Ordering::Release);
+    }
+
+    /// Latest epoch sealed by `from` for shard `to` (acquire load — pairs
+    /// with [`FlatBoard::seal_row`]).
+    #[inline]
+    pub fn sealed_epoch(&self, from: usize, to: usize) -> u64 {
+        self.seals[from * self.parts + to].load(Ordering::Acquire)
+    }
+
+    /// Drain the single `(from, to)` buffer of `parity`, invoking `f` per
+    /// message. Buffer capacity is retained for reuse.
+    ///
+    /// # Safety
+    /// The sender `from` must have finished writing the cell for this
+    /// parity — either a barrier separates the phases, or the caller has
+    /// observed `sealed_epoch(from, to) >= epoch` for the epoch being
+    /// drained — and the caller must be the cell's only drainer.
+    pub unsafe fn drain_from(&self, parity: u32, from: usize, to: usize, mut f: impl FnMut(VertexId, M)) {
+        let cell = &mut *self.cells[(parity & 1) as usize][from * self.parts + to].get();
+        for (dst, msg) in cell.drain(..) {
+            f(dst, msg);
+        }
+    }
+
     /// Drain every buffer addressed to partition `to` in `parity`, invoking
     /// `f` per message. Buffer capacity is retained for reuse.
     ///
@@ -162,10 +211,7 @@ impl<M: Send> FlatBoard<M> {
     /// current phase, barrier-separated from sends of the same parity.
     pub unsafe fn drain(&self, parity: u32, to: usize, mut f: impl FnMut(VertexId, M)) {
         for from in 0..self.parts {
-            let cell = &mut *self.cells[(parity & 1) as usize][from * self.parts + to].get();
-            for (dst, msg) in cell.drain(..) {
-                f(dst, msg);
-            }
+            self.drain_from(parity, from, to, &mut f);
         }
     }
 
@@ -261,6 +307,68 @@ mod tests {
             };
         }
         assert_eq!(total, parts * 100);
+    }
+
+    #[test]
+    fn seal_epochs_hand_off_rows() {
+        let board: FlatBoard<u64> = FlatBoard::new(2);
+        // Nothing is pre-sealed for a real (>= 1) epoch.
+        assert_eq!(board.sealed_epoch(0, 1), 0);
+        unsafe { board.push(1, 0, 1, 7, 70) };
+        board.seal_row(0, 1, 1);
+        assert_eq!(board.sealed_epoch(0, 1), 1);
+        let mut got = Vec::new();
+        // SAFETY: single-threaded; the seal marks the cell complete.
+        unsafe { board.drain_from(1, 0, 1, |d, m| got.push((d, m))) };
+        assert_eq!(got, vec![(7, 70)]);
+        // Seals are monotone across epochs and independent per pair.
+        board.seal_row(0, 1, 3);
+        assert_eq!(board.sealed_epoch(0, 1), 3);
+        assert_eq!(board.sealed_epoch(1, 0), 0);
+    }
+
+    #[test]
+    fn sealed_row_drains_while_other_senders_still_push() {
+        // The pipelined handoff: the receiver may drain a sender's cell as
+        // soon as that sender seals it, even though another sender is still
+        // pushing to its own (different) cell of the same shard.
+        let board: FlatBoard<u64> = FlatBoard::new(3);
+        std::thread::scope(|s| {
+            // Fast sender: worker 0 fills and seals its row for shard 2.
+            s.spawn(|| {
+                for i in 0..1000u32 {
+                    // SAFETY: this thread is the only sender for row 0.
+                    unsafe { board.push(1, 0, 2, i, i as u64) };
+                }
+                board.seal_row(0, 2, 1);
+            });
+            // Slow sender: worker 1 keeps pushing to its own row.
+            s.spawn(|| {
+                for i in 0..1000u32 {
+                    // SAFETY: this thread is the only sender for row 1.
+                    unsafe { board.push(1, 1, 2, i, i as u64) };
+                }
+                board.seal_row(1, 2, 1);
+            });
+            // Receiver: worker 2 drains row 0 as soon as it is sealed.
+            s.spawn(|| {
+                while board.sealed_epoch(0, 2) < 1 {
+                    std::thread::yield_now();
+                }
+                let mut n = 0u32;
+                // SAFETY: the acquired seal orders all of row 0's pushes
+                // before this drain; row 1 is untouched here.
+                unsafe { board.drain_from(1, 0, 2, |_, _| n += 1) };
+                assert_eq!(n, 1000);
+                while board.sealed_epoch(1, 2) < 1 {
+                    std::thread::yield_now();
+                }
+                let mut n = 0u32;
+                // SAFETY: as above, for row 1.
+                unsafe { board.drain_from(1, 1, 2, |_, _| n += 1) };
+                assert_eq!(n, 1000);
+            });
+        });
     }
 
     #[test]

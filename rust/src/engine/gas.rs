@@ -11,13 +11,13 @@
 //! round** — fall straight out of this structure, which is why the GAS
 //! backend suffers most under IPC-served UDFs (Fig 8a).
 //!
-//! Partitioning, active-set tracking and the barrier/convergence loop come
-//! from the shared [`superstep`](crate::engine::superstep) runtime; message
+//! Partitioning, active-set tracking and the convergence loop come from
+//! the shared [`superstep`](crate::engine::superstep) runtime; message
 //! routing does not apply here (edge slots are the "network"), so the
 //! scatter phase reports its writes via
 //! [`SuperstepRuntime::add_step_messages`].
 //!
-//! Barrier choreography per round (3 barriers):
+//! Choreography per round:
 //!
 //! ```text
 //! Phase G/A  gather + apply   (reads edge_msg everywhere — frozen; writes
@@ -25,8 +25,18 @@
 //! ── barrier ──
 //! Phase S    scatter          (writes edge_msg of own CSR rows, reading
 //!                              this round's next-active bits)
-//! ── end_step: barrier, leader bookkeeping, barrier ──
+//! ── epilogue: pipelined → write gate + parallel convergence reduction +
+//!    last-arriver bookkeeping (finish_step); barriered → barrier, leader
+//!    bookkeeping, barrier (end_step) ──
 //! ```
+//!
+//! GAS is the one engine whose mid-phase sync cannot be relaxed into the
+//! runtime's per-shard seal handoff: every gather reads edge slots written
+//! by *arbitrary remote* scatters (any in-neighbor's CSR row), so there is
+//! no per-shard ownership to hand off — the full barrier *is* the correct
+//! specialization. The engine still picks up the pipelined epilogue: the
+//! word-parallel convergence reduction and the gated (barrier-free)
+//! bookkeeping.
 
 use crate::distributed::shared::SharedSlice;
 use crate::engine::superstep::SuperstepRuntime;
@@ -133,7 +143,7 @@ pub fn run<P: VCProg>(
                     }
                     rt.add_step_messages(local_msgs);
 
-                    if rt.end_step(iter, &step_timer, None, |_| {}) {
+                    if rt.close_step(w, iter, &step_timer, None, |_, _| {}) {
                         break;
                     }
                     iter += 1;
@@ -210,6 +220,20 @@ mod tests {
         let steps = r.metrics.supersteps as u64;
         // At least one apply per vertex per round.
         assert!(r.metrics.udf_calls >= steps * 4);
+    }
+
+    #[test]
+    fn pipelined_matches_barriered() {
+        let g = crate::graph::generate::random_for_tests(70, 500, 29);
+        let mut on = opts(3);
+        on.pipeline = true;
+        let mut off = opts(3);
+        off.pipeline = false;
+        let a = run(&g, &SsspBellmanFord::new(0), &on).unwrap();
+        let b = run(&g, &SsspBellmanFord::new(0), &off).unwrap();
+        assert_eq!(a.props, b.props);
+        assert_eq!(a.metrics.total_messages, b.metrics.total_messages);
+        assert_eq!(a.metrics.supersteps, b.metrics.supersteps);
     }
 
     #[test]

@@ -21,13 +21,20 @@
 //!   on the hot path, with a local-shard fast path that merges straight
 //!   into the owner's inbox;
 //! * optional **sender-side combining** (Giraph's Combiner) behind
-//!   [`VCProg::combinable`], implemented as dense per-destination slots;
+//!   [`VCProg::combinable`], implemented as dense per-shard slots over
+//!   local vertex indices (O(|V|/P) per peer, lazily allocated);
 //! * **active-set tracking** in a double-buffered atomic bitset with a
-//!   cheap population count for the convergence decision
+//!   word-parallel population count for the convergence decision
 //!   ([`superstep::ActiveSet`]), which also feeds Push-Pull's dense/sparse
-//!   density heuristic;
-//! * the per-step barrier/leader-bookkeeping epilogue and all metrics
-//!   accounting ([`superstep::SuperstepRuntime::end_step`]).
+//!   density heuristic via cached out-degree prefix sums;
+//! * the per-step epilogue and all metrics accounting, in two schedules:
+//!   the classic full barrier ([`superstep::SuperstepRuntime::end_step`])
+//!   and the default **overlapped per-shard handoff**
+//!   ([`superstep::SuperstepRuntime::finish_step`]) that lets receivers
+//!   drain each sender's shard as soon as it is sealed and lets fast
+//!   workers enter the next superstep while stragglers still drain
+//!   (see the [`superstep`] module docs for the protocol and its
+//!   soundness argument).
 //!
 //! What remains in each engine file is exactly what distinguishes the
 //! execution model: Pregel's active-or-messaged scheduling with inbox
@@ -124,15 +131,25 @@ pub struct RunOptions {
     /// Enable sender-side message combining (Giraph's Combiner). Pays off
     /// when routing a message is expensive (real networks, UDF-over-IPC);
     /// on shared memory combining costs more than routing saves (ablated in
-    /// `benches/ablations.rs`), so the default is off. Memory note: the
-    /// runtime's dense combine slots cost O(|V|) per worker while enabled
-    /// (see ROADMAP "Combiner memory" for the planned per-shard variant).
+    /// `benches/ablations.rs`), so the default is off. Memory note: combine
+    /// slots are dense over *local* indices per destination shard —
+    /// `partition_size(shard)` entries, lazily allocated per peer actually
+    /// messaged, i.e. O(|V|/P) per peer rather than one O(|V|) array.
     pub combiner: bool,
     /// Push-Pull density threshold: switch to dense/pull when the active
     /// out-edge fraction exceeds `1/threshold` (Gemini uses 20).
     pub pushpull_threshold: f64,
     /// Record per-superstep metrics.
     pub step_metrics: bool,
+    /// Overlapped superstep pipeline (default on): the end-of-step barrier
+    /// is relaxed into a per-shard seal handoff with a parallel convergence
+    /// reduction, so receivers drain a sender's shard as soon as that
+    /// sender seals it and fast workers start step k+1 while stragglers
+    /// still drain step k. Results are bit-identical to the barriered
+    /// schedule (`false`, kept as the ablation baseline — see
+    /// `benches/ablations.rs` [6] and the
+    /// [`superstep`](crate::engine::superstep) protocol docs).
+    pub pipeline: bool,
 }
 
 impl Default for RunOptions {
@@ -144,6 +161,7 @@ impl Default for RunOptions {
             combiner: false,
             pushpull_threshold: 20.0,
             step_metrics: true,
+            pipeline: true,
         }
     }
 }

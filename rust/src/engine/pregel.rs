@@ -11,16 +11,30 @@
 //! in `benches/ablations.rs` — collapses same-destination messages in dense
 //! slots before they reach the board.
 //!
-//! Barrier choreography per superstep (3 barriers, all in the runtime or
-//! at phase edges):
+//! Choreography per superstep. Under the default **overlapped pipeline**
+//! (`RunOptions::pipeline`) there is no per-step barrier at all — the
+//! runtime's seal handoff and counting gates replace it:
 //!
 //! ```text
 //! Phase A  compute + emit   (owned vertices; writes own props, next-active
 //!                            bits, own board row / own inbox slots)
+//! flush: seal own rows ── arrive at write gate ──
+//!   while stragglers emit: drain already-sealed rows (try_deliver)
+//! finish_step: parallel convergence reduction, last-arriver bookkeeping
+//! Phase B  deliver remaining rows — overlaps fast workers' next Phase A
+//! ```
+//!
+//! With `pipeline = false` the classic 3-barrier schedule runs instead:
+//!
+//! ```text
+//! Phase A  compute + emit
 //! ── barrier ──
 //! Phase B  deliver          (drain own board shard into own inbox)
 //! ── end_step: barrier, leader bookkeeping, barrier ──
 //! ```
+//!
+//! Both schedules drain rows in sender order, so results (including
+//! floating-point merge order) are bit-identical.
 
 use crate::distributed::shared::SharedSlice;
 use crate::engine::superstep::SuperstepRuntime;
@@ -127,7 +141,7 @@ pub fn run<P: VCProg>(
                                 for (dst, m) in program.emit_to_edges(v, prop, &edge_buf) {
                                     // SAFETY: worker `w` owns its send phase
                                     // and its vertices' inbox_next slots.
-                                    unsafe { ctx.route(program, inbox_next, parity, dst, m) };
+                                    unsafe { ctx.route(program, inbox_next, iter, dst, m) };
                                 }
                             } else {
                                 for (eid, dst) in topo.out_edges(v) {
@@ -136,25 +150,63 @@ pub fn run<P: VCProg>(
                                         program.emit_message(v, dst, prop, graph.edge_prop(eid))
                                     {
                                         // SAFETY: as above.
-                                        unsafe { ctx.route(program, inbox_next, parity, dst, m) };
+                                        unsafe { ctx.route(program, inbox_next, iter, dst, m) };
                                     }
                                 }
                             }
                         }
                     }
-                    // SAFETY: still within worker `w`'s send phase.
-                    unsafe { ctx.flush(parity) };
-                    busy += phase_timer.elapsed();
-                    rt.barrier.wait();
-
-                    // --- Phase B: deliver ---------------------------------
-                    phase_timer = CpuTimer::start();
-                    // SAFETY: sends of `parity` finished at the barrier;
-                    // worker `w` drains only its own shard and inbox slots.
-                    unsafe { ctx.deliver(program, inbox_next, parity) };
+                    // SAFETY: still within worker `w`'s send phase; flush
+                    // seals this worker's rows for `iter` (pipelined).
+                    unsafe { ctx.flush(iter) };
                     busy += phase_timer.elapsed();
 
-                    if rt.end_step(iter, &step_timer, None, |_| {}) {
+                    let stop = if rt.pipeline {
+                        // Overlapped handoff: publish this worker's writes,
+                        // then drain already-sealed rows (in sender order)
+                        // while stragglers finish emitting. Only the actual
+                        // drain work is charged to `busy` — gate spins are
+                        // wait time, mirroring how the barriered schedule's
+                        // blocking waits fall outside the phase timers (so
+                        // worker_busy stays a load-imbalance signal).
+                        rt.arrive_writes();
+                        while !rt.writes_done() {
+                            if ctx.next_row_sealed(iter) {
+                                phase_timer = CpuTimer::start();
+                                // SAFETY: try_deliver touches only rows
+                                // whose seal it acquired plus this worker's
+                                // own inbox slots.
+                                unsafe { ctx.try_deliver(program, inbox_next, iter) };
+                                busy += phase_timer.elapsed();
+                            } else {
+                                std::thread::yield_now();
+                            }
+                        }
+                        let stop = rt.finish_step(w, iter, &step_timer, None, |_, _| {});
+                        // --- Phase B: drain the rest ----------------------
+                        // Every sender sealed its rows before the reduce
+                        // gate, so this never blocks — and it overlaps fast
+                        // workers' Phase A of step iter+1 (they write the
+                        // other parity and their own slots only).
+                        phase_timer = CpuTimer::start();
+                        // SAFETY: sealed rows + own inbox slots, as above.
+                        unsafe { ctx.deliver(program, inbox_next, iter) };
+                        busy += phase_timer.elapsed();
+                        stop
+                    } else {
+                        rt.barrier.wait();
+
+                        // --- Phase B: deliver -----------------------------
+                        phase_timer = CpuTimer::start();
+                        // SAFETY: sends of `iter` finished at the barrier;
+                        // worker `w` drains only its own shard and inbox
+                        // slots.
+                        unsafe { ctx.deliver(program, inbox_next, iter) };
+                        busy += phase_timer.elapsed();
+
+                        rt.end_step(iter, &step_timer, None, |_, _| {})
+                    };
+                    if stop {
                         break;
                     }
                     iter += 1;
@@ -262,6 +314,20 @@ mod tests {
         assert_eq!(r1.props, r2.props);
         // Combiner strictly reduces routed messages on multi-in-degree graphs.
         assert!(r1.metrics.total_messages <= r2.metrics.total_messages);
+    }
+
+    #[test]
+    fn pipelined_matches_barriered() {
+        let g = crate::graph::generate::random_for_tests(70, 500, 11);
+        let mut on = opts(4);
+        on.pipeline = true;
+        let mut off = opts(4);
+        off.pipeline = false;
+        let a = run(&g, &SsspBellmanFord::new(0), &on).unwrap();
+        let b = run(&g, &SsspBellmanFord::new(0), &off).unwrap();
+        assert_eq!(a.props, b.props);
+        assert_eq!(a.metrics.total_messages, b.metrics.total_messages);
+        assert_eq!(a.metrics.supersteps, b.metrics.supersteps);
     }
 
     #[test]

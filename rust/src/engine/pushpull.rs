@@ -9,27 +9,42 @@
 //! count against `|E| / threshold` (Gemini uses 20), ablated in
 //! `benches/ablations.rs`.
 //!
-//! Push-mode routing, active-set tracking and the barrier/convergence loop
-//! come from the shared [`superstep`](crate::engine::superstep) runtime;
-//! the density decision is fed straight from the shared active bitset (the
-//! leader folds out-degrees over the set bits in its bookkeeping window).
-//! The dense/pull specialization stays here: it is what makes this engine
-//! Gemini rather than Pregel.
+//! Push-mode routing, active-set tracking and the convergence loop come
+//! from the shared [`superstep`](crate::engine::superstep) runtime; the
+//! density decision is fed from the runtime's convergence reduction, which
+//! folds active out-degrees word-parallel over cached CSR prefix sums (no
+//! per-step re-walk of the active set). The dense/pull specialization
+//! stays here: it is what makes this engine Gemini rather than Pregel.
 //!
 //! Both modes generate exactly the message multiset of Algorithm 1 — a
 //! message src→dst exists iff src was active last round and `emit_message`
 //! returned `Some` — so results are engine-identical (up to float summation
 //! order), which the cross-engine tests verify.
 //!
-//! Barrier choreography per round (3 barriers):
+//! Choreography per round. Under the default overlapped pipeline
+//! (`RunOptions::pipeline`), **push** rounds replace the mid barrier with
+//! the per-shard seal handoff — a worker drains sender f's shard as soon
+//! as f seals it, while later senders are still emitting:
 //!
 //! ```text
-//! Phase E  emit/gather   push: route own active vertices' messages
-//!                        pull: fold in-edges of own vertices into own inbox
+//! Phase E  emit: route own active vertices' messages, seal own rows
+//! Phase V  deliver (await each row's seal, in sender order) + compute
+//! ── arrive at write gate; finish_step: parallel reduction (active count
+//!    + out-degree fold → next-mode decision), last-arriver bookkeeping ──
+//! ```
+//!
+//! **Pull** rounds keep the full mid barrier in both schedules: the
+//! dense gather reads *remote* props and prev-bits, so compute must not
+//! start anywhere before every gather is finished. With
+//! `pipeline = false`, push rounds use the mid barrier too and the round
+//! closes with the barriered `end_step` (ablation baseline):
+//!
+//! ```text
+//! Phase E  emit/gather
 //! ── barrier ──
 //! Phase V  deliver+compute  (push only: drain own board shard first)
-//! ── end_step: barrier, leader bookkeeping (incl. next-mode decision
-//!    from the active bitset), barrier ──
+//! ── end_step: barrier, leader bookkeeping (incl. next-mode decision),
+//!    barrier ──
 //! ```
 
 use crate::distributed::metrics::StepMode;
@@ -58,9 +73,11 @@ pub fn run<P: VCProg>(
     let props_s = SharedSlice::new(&mut props);
     let inbox_s = SharedSlice::new(&mut inbox);
 
-    let rt: SuperstepRuntime<'_, P::Msg> = SuperstepRuntime::new(topo, opts, false);
-    // Mode for the *current* round, decided by the leader at the end of the
-    // previous round. Round 1 is dense (everyone starts active).
+    let rt: SuperstepRuntime<'_, P::Msg> =
+        SuperstepRuntime::new(topo, opts, false).with_degree_reduction();
+    // Mode for the *current* round, decided by the bookkeeping worker at
+    // the end of the previous round. Round 1 is dense (everyone starts
+    // active).
     let pull_mode = AtomicBool::new(true);
 
     std::thread::scope(|scope| {
@@ -84,7 +101,6 @@ pub fn run<P: VCProg>(
                 let mut iter: u32 = 1;
                 loop {
                     let step_timer = Timer::start();
-                    let parity = iter & 1;
                     let pull = pull_mode.load(Ordering::Relaxed);
 
                     // --- Phase E ------------------------------------------
@@ -134,19 +150,29 @@ pub fn run<P: VCProg>(
                                 {
                                     // SAFETY: worker `w` owns its send phase
                                     // and its vertices' inbox slots.
-                                    unsafe { ctx.route(program, inbox_s, parity, dst, msg) };
+                                    unsafe { ctx.route(program, inbox_s, iter, dst, msg) };
                                 }
                             }
                         }
-                        // SAFETY: still within worker `w`'s send phase.
-                        unsafe { ctx.flush(parity) };
+                        // SAFETY: still within worker `w`'s send phase;
+                        // flush seals this worker's rows (pipelined).
+                        unsafe { ctx.flush(iter) };
                     }
-                    rt.barrier.wait();
+                    // Pull rounds always need the full stop: the dense
+                    // gather above read *remote* props, which Phase V is
+                    // about to overwrite. Push rounds only need it in the
+                    // barriered schedule — the pipelined drain below waits
+                    // on each sender's seal instead.
+                    if pull || !rt.pipeline {
+                        rt.barrier.wait();
+                    }
 
                     // --- Phase V: deliver (push) + compute ----------------
                     if !pull {
-                        // SAFETY: sends of `parity` finished at the barrier.
-                        unsafe { ctx.deliver(program, inbox_s, parity) };
+                        // SAFETY: pipelined — each row is drained only
+                        // after acquiring its seal; barriered — sends of
+                        // `iter` finished at the barrier above.
+                        unsafe { ctx.deliver(program, inbox_s, iter) };
                     }
                     for v in rt.vertices_of(w) {
                         let vi = v as usize;
@@ -172,16 +198,17 @@ pub fn run<P: VCProg>(
                     }
 
                     let mode = Some(if pull { StepMode::Pull } else { StepMode::Push });
-                    let stop = rt.end_step(iter, &step_timer, mode, |_act| {
-                        // Gemini's density heuristic for the next round, fed
-                        // from the shared active bitset (leader window, before
-                        // the set advances).
-                        let mut aoe: u64 = 0;
-                        rt.active.for_each_next(|v| aoe += topo.out_degree(v) as u64);
+                    // Gemini's density heuristic for the next round: the
+                    // runtime's convergence reduction folds active
+                    // out-degrees (word-parallel, prefix-sum accelerated)
+                    // and hands the sum to the bookkeeping window, before
+                    // the active set advances and before other workers
+                    // resume — so every worker reads the new mode.
+                    let decide_mode = |_act: u64, aoe: u64| {
                         let dense_next = (aoe as f64) > m as f64 / opts.pushpull_threshold;
                         pull_mode.store(dense_next, Ordering::Relaxed);
-                    });
-                    if stop {
+                    };
+                    if rt.close_step(w, iter, &step_timer, mode, decide_mode) {
                         break;
                     }
                     iter += 1;
@@ -265,6 +292,26 @@ mod tests {
         let r1 = run(&g, &SsspBellmanFord::new(0), &always_pull).unwrap();
         let r2 = run(&g, &SsspBellmanFord::new(0), &always_push).unwrap();
         assert_eq!(r1.props, r2.props);
+    }
+
+    #[test]
+    fn pipelined_matches_barriered_across_modes() {
+        // The seal handoff must not change results, step counts or the
+        // mode sequence — in pure push, pure pull, or adaptive runs.
+        let g = crate::graph::generate::random_for_tests(90, 700, 3);
+        for thr in [0.0, 20.0, f64::INFINITY] {
+            let mut on = opts(3);
+            on.pushpull_threshold = thr;
+            let mut off = on.clone();
+            off.pipeline = false;
+            let a = run(&g, &SsspBellmanFord::new(0), &on).unwrap();
+            let b = run(&g, &SsspBellmanFord::new(0), &off).unwrap();
+            assert_eq!(a.props, b.props, "thr={thr}");
+            assert_eq!(a.metrics.supersteps, b.metrics.supersteps, "thr={thr}");
+            let modes_a: Vec<_> = a.metrics.steps.iter().map(|s| s.mode).collect();
+            let modes_b: Vec<_> = b.metrics.steps.iter().map(|s| s.mode).collect();
+            assert_eq!(modes_a, modes_b, "thr={thr}");
+        }
     }
 
     #[test]

@@ -15,24 +15,79 @@
 //!   [`FlatBoard`](crate::distributed::comm::FlatBoard) — no `HashMap`, no
 //!   locks, no steady-state allocation. Messages to the local shard take
 //!   the fast path and merge straight into the owner's inbox slot;
-//! * **sender-side combining** behind [`VCProg::combinable`]: a dense
-//!   per-destination slot array plus a touched-list (again no hashing),
-//!   flushed into the flat board at the end of the emit phase;
+//! * **sender-side combining** behind [`VCProg::combinable`]: dense
+//!   per-destination-shard slot arrays addressed by
+//!   [`Partitioner::local_index`], so a worker's combine memory is
+//!   `partition_size(shard)` per shard it actually talks to — `O(|V|/P)`
+//!   per peer instead of the old single `O(|V|)` array — lazily allocated
+//!   and flushed shard-by-shard into the flat board (a worker messaging
+//!   every shard still totals `|V| - |V|/P` slots; the win is per-shard
+//!   granularity for the seal handoff plus laziness for sparse
+//!   communication patterns, not a smaller worst-case total);
 //! * **active-set tracking** ([`ActiveSet`]): a double-buffered atomic
-//!   bitset with a cheap population count for the convergence decision and
-//!   a set-bit iterator that feeds Push-Pull's density heuristic;
-//! * **the BSP step epilogue** ([`SuperstepRuntime::end_step`]): barrier,
-//!   single-leader bookkeeping (per-step metrics, convergence/stop flags,
-//!   active-set flip) and the release barrier. Step message accounting
-//!   lives in shared atomics, so it stays correct even though
-//!   `std::sync::Barrier` elects a *different* leader each round (the old
-//!   per-engine copies kept the board watermark in a thread-local and
-//!   silently mis-attributed per-step message counts when leadership
-//!   migrated).
+//!   bitset whose population count is the convergence signal and whose raw
+//!   words feed the parallel convergence reduction below;
+//! * **the BSP step epilogue**, in two flavours selected by
+//!   [`RunOptions::pipeline`] — see the protocol below.
+//!
+//! # Step epilogues: full barrier vs overlapped per-shard handoff
+//!
+//! **Barriered** ([`SuperstepRuntime::end_step`], `pipeline = false`, kept
+//! as the ablation baseline): the classic schedule — a barrier ends the
+//! phase, one leader does the bookkeeping (per-step metrics, convergence /
+//! max-iter stop decision, active-set flip) while everyone else waits, and
+//! a release barrier opens the next step.
+//!
+//! **Overlapped** (`pipeline = true`, the default): the end-of-step barrier
+//! is relaxed into a per-shard handoff plus two counting gates:
+//!
+//! 1. *Seal* — a sender flushes its combiner slots shard-by-shard and
+//!    release-stores a per-`(sender, shard)` epoch counter on the board
+//!    ([`FlatBoard::seal_row`](crate::distributed::comm::FlatBoard::seal_row)).
+//!    A shard of the inbound board is drainable as soon as **its own
+//!    sender** sealed it — not when the slowest worker finished.
+//! 2. *Write gate* ([`SuperstepRuntime::arrive_writes`]) — each worker
+//!    announces that all its shared writes of the step (next-active bits,
+//!    board pushes + seals, message counters) are published. While waiting
+//!    for stragglers, Pregel-style engines drain already-sealed rows in
+//!    sender order ([`WorkerCtx::try_deliver`]), overlapping communication
+//!    with the stragglers' compute.
+//! 3. *Parallel convergence reduction* ([`SuperstepRuntime::finish_step`])
+//!    — once the write gate opens, every worker folds a word range of the
+//!    active bitset (population count, plus an out-degree fold over set
+//!    bits for Push-Pull's density heuristic, accelerated by the cached
+//!    CSR out-degree prefix sums: a fully-set word costs one subtraction).
+//!    The last worker through the reduce gate performs the leader
+//!    bookkeeping with the accumulated sums, flips the active set and
+//!    publishes `step_done`.
+//! 4. *Step gate* — workers resume step k+1 as soon as `step_done >= k`.
+//!    A Pregel worker drains its remaining rows **after** the gate, so a
+//!    fast worker starts phase A of step k+1 while stragglers still drain
+//!    step k.
+//!
+//! Soundness of cell reuse under overlap: a worker entering step k+1 can
+//! write only parity-`(k+1)` cells, while a straggler drains parity-`k`
+//! cells — and no worker can reach step k+2 (same parity as k) before
+//! every worker passed the reduce gate of k+1, which in program order is
+//! after that worker's step-k drain. The active-set flip is exclusive for
+//! the same reason: the bookkeeping worker is the *last* one through the
+//! reduce gate, and everyone else is blocked on `step_done` (or past it,
+//! in code that does not touch the bitset) while it runs. All gate
+//! crossings use release/acquire pairs, so the relaxed bit/counter writes
+//! they publish are ordered.
+//!
+//! Message **delivery order is deterministic** in both schedules: rows are
+//! drained in sender order and each cell is FIFO, so results are
+//! bit-identical between the barriered and overlapped epilogues even for
+//! order-sensitive (floating-point) merges — property-tested in
+//! `rust/tests/superstep_runtime.rs`.
 //!
 //! Engines keep only what genuinely differs between execution models: which
 //! vertices participate in a step, where gathered state lives (inbox slots
-//! vs edge slots), and Push-Pull's dense/sparse mode switch.
+//! vs edge slots), Push-Pull's dense/sparse mode switch — and which parts
+//! of the handoff their data dependencies allow (GAS reads remote edge
+//! slots in every gather, so its mid-phase sync stays a full barrier and it
+//! picks up only the gated epilogue + parallel reduction).
 
 use crate::distributed::comm::FlatBoard;
 use crate::distributed::metrics::{RunMetrics, StepMetrics, StepMode};
@@ -42,8 +97,25 @@ use crate::graph::csr::Topology;
 use crate::graph::partition::{PartIter, Partitioner};
 use crate::util::timer::Timer;
 use crate::vcprog::{VCProg, VertexId};
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Barrier, Mutex};
+
+/// Spin briefly, then yield: the wait primitive behind the pipeline's
+/// gates and seal waits. Yielding matters — CI machines run more workers
+/// than cores, and a pure spin would starve the straggler being waited on.
+#[inline]
+fn spin_wait(mut done: impl FnMut() -> bool) {
+    let mut spins = 0u32;
+    while !done() {
+        if spins < 128 {
+            spins += 1;
+            std::hint::spin_loop();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+}
 
 /// Double-buffered atomic active bitset.
 ///
@@ -51,9 +123,9 @@ use std::sync::{Barrier, Mutex};
 /// current step reads), `next` collects this step's flags. Individual bits
 /// are updated with relaxed RMW ops — under hash partitioning the vertices
 /// of different workers interleave within one 64-bit word, so word-level
-/// atomicity is required; the surrounding barriers provide the ordering.
-/// [`ActiveSet::advance`] (leader-only window) flips the roles and clears
-/// the new `next` buffer.
+/// atomicity is required; the surrounding barriers/gates provide the
+/// ordering. [`ActiveSet::advance`] (exclusive bookkeeping window) flips
+/// the roles and clears the new `next` buffer.
 pub struct ActiveSet {
     n: usize,
     bufs: [Vec<AtomicU64>; 2],
@@ -97,6 +169,13 @@ impl ActiveSet {
         self.n == 0
     }
 
+    /// Number of 64-bit words backing each buffer (the unit the parallel
+    /// convergence reduction partitions across workers).
+    #[inline]
+    pub fn num_words(&self) -> usize {
+        self.bufs[0].len()
+    }
+
     #[inline]
     fn prev_buf(&self) -> &[AtomicU64] {
         &self.bufs[self.parity.load(Ordering::Relaxed)]
@@ -121,6 +200,13 @@ impl ActiveSet {
         (self.next_buf()[v / 64].load(Ordering::Relaxed) >> (v % 64)) & 1 == 1
     }
 
+    /// Raw word `wi` of the current step's flags (reduction / bookkeeping
+    /// windows: all writers of the step must have arrived at a gate first).
+    #[inline]
+    pub fn next_word(&self, wi: usize) -> u64 {
+        self.next_buf()[wi].load(Ordering::Relaxed)
+    }
+
     /// Record `v`'s activity for the current superstep. The `next` buffer
     /// starts cleared each step and each vertex is written at most once per
     /// step by its owning worker, so marking a vertex *inactive* is a no-op
@@ -138,7 +224,7 @@ impl ActiveSet {
     }
 
     /// Population count of the current step's flags — the convergence
-    /// signal (leader bookkeeping window).
+    /// signal (bookkeeping window).
     pub fn count_next(&self) -> u64 {
         self.next_buf()
             .iter()
@@ -146,11 +232,16 @@ impl ActiveSet {
             .sum()
     }
 
-    /// Visit every vertex whose current-step flag is set (used by
-    /// Push-Pull's density heuristic; leader bookkeeping window).
+    /// Visit every vertex whose current-step flag is set (bookkeeping
+    /// window). Zero words are skipped outright and set words are walked by
+    /// trailing-zeros, so a sparse frontier costs one load per word plus
+    /// work proportional to the number of set bits — never a probe per bit.
     pub fn for_each_next(&self, mut f: impl FnMut(VertexId)) {
         for (wi, word) in self.next_buf().iter().enumerate() {
             let mut bits = word.load(Ordering::Relaxed);
+            if bits == 0 {
+                continue;
+            }
             while bits != 0 {
                 let b = bits.trailing_zeros() as usize;
                 f((wi * 64 + b) as VertexId);
@@ -162,7 +253,8 @@ impl ActiveSet {
     /// Flip `next` into `prev` and clear the new `next` buffer.
     ///
     /// Must run while no other thread touches the set — the engines call it
-    /// from the single-leader bookkeeping window between two barriers.
+    /// from the exclusive bookkeeping window (between two barriers, or as
+    /// the last worker through the pipelined reduce gate).
     pub fn advance(&self) {
         let p = self.parity.load(Ordering::Relaxed);
         self.parity.store(1 - p, Ordering::Relaxed);
@@ -174,7 +266,7 @@ impl ActiveSet {
 }
 
 /// Shared state of one engine run: partitioning, the flat message board,
-/// the active set, the barrier, and all step/run accounting.
+/// the active set, the barrier/gates, and all step/run accounting.
 pub struct SuperstepRuntime<'g, M: Send> {
     /// Vertex→worker assignment (radix routing key).
     pub part: Partitioner,
@@ -182,14 +274,28 @@ pub struct SuperstepRuntime<'g, M: Send> {
     pub workers: usize,
     /// Vertex count.
     pub n: usize,
-    /// The BSP barrier all phases synchronize on.
+    /// The BSP barrier used by the barriered schedule and by phases whose
+    /// data dependencies need a full stop even under the pipeline (GAS
+    /// gather/scatter edge-state exchange, Push-Pull's dense/pull rounds).
     pub barrier: Barrier,
     /// Double-buffered active bitset.
     pub active: ActiveSet,
     /// Flat sharded message buffers (push/pull engines; GAS keeps message
     /// state on edges and never touches it).
     pub board: FlatBoard<M>,
+    /// Overlapped per-shard handoff enabled ([`RunOptions::pipeline`])?
+    pub pipeline: bool,
     topo: &'g Topology,
+    /// CSR out-degree prefix sums (`deg_prefix[v]` = Σ out-degree of
+    /// vertices `< v`), cached once per run so the per-step density
+    /// reduction never re-walks the CSR — a fully-set bitset word folds to
+    /// one subtraction. This is [`Topology::out_degree_prefix`], i.e. the
+    /// CSR offsets themselves: a zero-copy cache.
+    deg_prefix: &'g [usize],
+    /// Fold out-degrees during the convergence reduction? Off by default;
+    /// Push-Pull turns it on for its density heuristic so Pregel/GAS don't
+    /// pay per-active-bit work they never read.
+    need_degrees: bool,
     max_iter: u32,
     step_metrics: bool,
     combine: bool,
@@ -205,9 +311,19 @@ pub struct SuperstepRuntime<'g, M: Send> {
     /// scatter writes, Push-Pull dense-mode gathers).
     extra_step: AtomicU64,
     extra_total: AtomicU64,
-    /// Board watermark at the end of the previous step (shared, because the
-    /// barrier elects a different leader each round).
+    /// Board watermark at the end of the previous step (shared, because a
+    /// different worker may do the bookkeeping each round).
     last_board: AtomicU64,
+    // --- pipelined-epilogue gate state ---------------------------------
+    /// Workers that have published all shared writes of the current step.
+    write_done: AtomicUsize,
+    /// Workers that have contributed their reduction range this step.
+    reduce_done: AtomicUsize,
+    /// Partial sums of the parallel convergence reduction.
+    act_sum: AtomicU64,
+    aoe_sum: AtomicU64,
+    /// Last step whose bookkeeping is published (workers gate on it).
+    step_done: AtomicU64,
     step_log: Mutex<Vec<StepMetrics>>,
     timer: Timer,
 }
@@ -225,7 +341,10 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
             barrier: Barrier::new(workers),
             active: ActiveSet::new(n, true),
             board: FlatBoard::new(workers),
+            pipeline: opts.pipeline,
             topo,
+            deg_prefix: topo.out_degree_prefix(),
+            need_degrees: false,
             max_iter: opts.max_iter,
             step_metrics: opts.step_metrics,
             combine,
@@ -239,9 +358,21 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
             extra_step: AtomicU64::new(0),
             extra_total: AtomicU64::new(0),
             last_board: AtomicU64::new(0),
+            write_done: AtomicUsize::new(0),
+            reduce_done: AtomicUsize::new(0),
+            act_sum: AtomicU64::new(0),
+            aoe_sum: AtomicU64::new(0),
+            step_done: AtomicU64::new(0),
             step_log: Mutex::new(Vec::new()),
             timer: Timer::start(),
         }
+    }
+
+    /// Also fold out-degrees over the active set during the convergence
+    /// reduction (Push-Pull's density input, delivered to `leader_extra`).
+    pub fn with_degree_reduction(mut self) -> Self {
+        self.need_degrees = true;
+        self
     }
 
     /// The topology this run executes over.
@@ -260,69 +391,200 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         WorkerCtx {
             w,
             rt: self,
-            slots: if self.combine {
-                (0..self.n).map(|_| None).collect()
+            shards: if self.combine {
+                (0..self.workers).map(|_| CombineShard::new()).collect()
             } else {
                 Vec::new()
             },
-            touched: Vec::new(),
             udf: 0,
             local: 0,
             routed: 0,
+            drained: 0,
         }
     }
 
     /// Record engine-specific non-board messages for this step's metrics
-    /// (call before [`SuperstepRuntime::end_step`]).
+    /// (call before the step epilogue).
     pub fn add_step_messages(&self, msgs: u64) {
         if msgs > 0 {
             self.extra_step.fetch_add(msgs, Ordering::Relaxed);
         }
     }
 
-    /// BSP step epilogue: one barrier, single-leader bookkeeping (per-step
-    /// metrics, convergence and max-iter stop decision, active-set flip),
-    /// and the release barrier. `leader_extra` runs in the leader's
-    /// exclusive window with the step's active count, *before* the active
-    /// set is advanced — Push-Pull derives its next mode from the bitset
-    /// there. Returns `true` when the superstep loop must stop.
+    /// Fold a word range of the current step's active flags: population
+    /// count plus (when enabled) the out-degree sum over set bits. A
+    /// fully-set word takes the prefix-sum fast path — one subtraction for
+    /// 64 vertices — which is the common case in dense rounds.
+    fn reduce_words(&self, words: Range<usize>) -> (u64, u64) {
+        let mut act = 0u64;
+        let mut aoe = 0u64;
+        for wi in words {
+            let bits = self.active.next_word(wi);
+            if bits == 0 {
+                continue;
+            }
+            act += bits.count_ones() as u64;
+            if !self.need_degrees {
+                continue;
+            }
+            let base = wi * 64;
+            if bits == u64::MAX {
+                // Tail bits past |V| are never set, so a full word always
+                // lies entirely within the vertex range.
+                aoe += (self.deg_prefix[base + 64] - self.deg_prefix[base]) as u64;
+            } else {
+                let mut b = bits;
+                while b != 0 {
+                    let v = base + b.trailing_zeros() as usize;
+                    aoe += (self.deg_prefix[v + 1] - self.deg_prefix[v]) as u64;
+                    b &= b - 1;
+                }
+            }
+        }
+        (act, aoe)
+    }
+
+    /// The word range worker `w` reduces in [`SuperstepRuntime::finish_step`].
+    fn word_range(&self, w: usize) -> Range<usize> {
+        let words = self.active.num_words();
+        let per = words.div_ceil(self.workers);
+        (w * per).min(words)..((w + 1) * per).min(words)
+    }
+
+    /// Single-bookkeeper step close-out, shared by both epilogues: per-step
+    /// metrics, engine hook, convergence / max-iter stop decision, and the
+    /// active-set flip. Must run in an exclusive window with all of the
+    /// step's shared writes visible.
+    fn bookkeep(
+        &self,
+        iter: u32,
+        act: u64,
+        aoe: u64,
+        step_timer: &Timer,
+        mode: Option<StepMode>,
+        leader_extra: impl FnOnce(u64, u64),
+    ) {
+        let local = self.local_step.swap(0, Ordering::Relaxed);
+        self.local_total.fetch_add(local, Ordering::Relaxed);
+        let extra = self.extra_step.swap(0, Ordering::Relaxed);
+        self.extra_total.fetch_add(extra, Ordering::Relaxed);
+        let board_total = self.board.total_messages();
+        let board_prev = self.last_board.swap(board_total, Ordering::Relaxed);
+        self.steps_done.store(iter as u64, Ordering::Relaxed);
+        if self.step_metrics {
+            self.step_log.lock().unwrap().push(StepMetrics {
+                step: iter,
+                active: act,
+                messages: (board_total - board_prev) + local + extra,
+                elapsed: step_timer.elapsed(),
+                mode,
+            });
+        }
+        leader_extra(act, aoe);
+        if act == 0 {
+            self.converged.store(true, Ordering::Relaxed);
+            self.stop.store(true, Ordering::Relaxed);
+        } else if iter >= self.max_iter {
+            self.stop.store(true, Ordering::Relaxed);
+        }
+        self.active.advance();
+    }
+
+    /// Barriered BSP step epilogue (`pipeline = false`): one barrier,
+    /// single-leader bookkeeping, release barrier. `leader_extra` runs in
+    /// the leader's exclusive window with the step's active count and (when
+    /// degree reduction is enabled) active out-degree sum, *before* the
+    /// active set is advanced — Push-Pull derives its next mode from it.
+    /// Returns `true` when the superstep loop must stop.
     pub fn end_step(
         &self,
         iter: u32,
         step_timer: &Timer,
         mode: Option<StepMode>,
-        leader_extra: impl FnOnce(u64),
+        leader_extra: impl FnOnce(u64, u64),
     ) -> bool {
         let lead = self.barrier.wait().is_leader();
         if lead {
-            let act = self.active.count_next();
-            let local = self.local_step.swap(0, Ordering::Relaxed);
-            self.local_total.fetch_add(local, Ordering::Relaxed);
-            let extra = self.extra_step.swap(0, Ordering::Relaxed);
-            self.extra_total.fetch_add(extra, Ordering::Relaxed);
-            let board_total = self.board.total_messages();
-            let board_prev = self.last_board.swap(board_total, Ordering::Relaxed);
-            self.steps_done.store(iter as u64, Ordering::Relaxed);
-            if self.step_metrics {
-                self.step_log.lock().unwrap().push(StepMetrics {
-                    step: iter,
-                    active: act,
-                    messages: (board_total - board_prev) + local + extra,
-                    elapsed: step_timer.elapsed(),
-                    mode,
-                });
-            }
-            leader_extra(act);
-            if act == 0 {
-                self.converged.store(true, Ordering::Relaxed);
-                self.stop.store(true, Ordering::Relaxed);
-            } else if iter >= self.max_iter {
-                self.stop.store(true, Ordering::Relaxed);
-            }
-            self.active.advance();
+            let (act, aoe) = self.reduce_words(0..self.active.num_words());
+            self.bookkeep(iter, act, aoe, step_timer, mode, leader_extra);
         }
         self.barrier.wait();
         self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Announce that this worker has published every shared write of the
+    /// current step — next-active bits, board pushes + row seals, message
+    /// counters. Pipelined epilogue only; call exactly once per worker per
+    /// step, before [`SuperstepRuntime::finish_step`].
+    pub fn arrive_writes(&self) {
+        self.write_done.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Have all workers passed [`SuperstepRuntime::arrive_writes`] for the
+    /// current step? (Acquire: a `true` answer makes their writes visible.)
+    pub fn writes_done(&self) -> bool {
+        self.write_done.load(Ordering::Acquire) == self.workers
+    }
+
+    /// Pipelined step epilogue (`pipeline = true`): wait for the write
+    /// gate, contribute this worker's word range to the parallel
+    /// convergence reduction, and either perform the bookkeeping (last
+    /// worker through the reduce gate) or wait for `step_done`. Semantics
+    /// of `leader_extra` and the return value match
+    /// [`SuperstepRuntime::end_step`].
+    pub fn finish_step(
+        &self,
+        w: usize,
+        iter: u32,
+        step_timer: &Timer,
+        mode: Option<StepMode>,
+        leader_extra: impl FnOnce(u64, u64),
+    ) -> bool {
+        spin_wait(|| self.writes_done());
+        let (act, aoe) = self.reduce_words(self.word_range(w));
+        if act > 0 {
+            self.act_sum.fetch_add(act, Ordering::Relaxed);
+        }
+        if aoe > 0 {
+            self.aoe_sum.fetch_add(aoe, Ordering::Relaxed);
+        }
+        // The release sequence on `reduce_done` orders every worker's
+        // partial sums before the last arriver's bookkeeping read.
+        if self.reduce_done.fetch_add(1, Ordering::AcqRel) + 1 == self.workers {
+            let act = self.act_sum.swap(0, Ordering::Relaxed);
+            let aoe = self.aoe_sum.swap(0, Ordering::Relaxed);
+            // Reset the gates for the next step before opening it; workers
+            // re-arm them only after acquiring `step_done`.
+            self.write_done.store(0, Ordering::Relaxed);
+            self.reduce_done.store(0, Ordering::Relaxed);
+            self.bookkeep(iter, act, aoe, step_timer, mode, leader_extra);
+            self.step_done.store(iter as u64, Ordering::Release);
+        } else {
+            spin_wait(|| self.step_done.load(Ordering::Acquire) >= iter as u64);
+        }
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Schedule-dispatching step epilogue for engines with no work to
+    /// overlap between their last shared write and the step close
+    /// (Push-Pull, GAS): under the pipeline this is `arrive_writes` +
+    /// [`SuperstepRuntime::finish_step`], otherwise the barriered
+    /// [`SuperstepRuntime::end_step`]. Pregel stays on the explicit
+    /// primitives because it drains sealed rows between the two.
+    pub fn close_step(
+        &self,
+        w: usize,
+        iter: u32,
+        step_timer: &Timer,
+        mode: Option<StepMode>,
+        leader_extra: impl FnOnce(u64, u64),
+    ) -> bool {
+        if self.pipeline {
+            self.arrive_writes();
+            self.finish_step(w, iter, step_timer, mode, leader_extra)
+        } else {
+            self.end_step(iter, step_timer, mode, leader_extra)
+        }
     }
 
     /// Aggregate run metrics once every worker has retired its context.
@@ -343,37 +605,61 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
     }
 }
 
-/// Per-worker handle: message routing (local fast path, dense combiner
-/// slots, flat board), UDF-call accounting.
+/// Sender-side combiner state for one destination shard: dense slots over
+/// the shard's *local* vertex indices plus the touched-list that preserves
+/// first-touch flush order. `slots` stays empty until the first combined
+/// message for the shard, then holds exactly `partition_size(shard)`
+/// entries — never `|V|`.
+struct CombineShard<M> {
+    slots: Vec<Option<M>>,
+    touched: Vec<u32>,
+}
+
+impl<M> CombineShard<M> {
+    fn new() -> Self {
+        CombineShard {
+            slots: Vec::new(),
+            touched: Vec::new(),
+        }
+    }
+}
+
+/// Per-worker handle: message routing (local fast path, per-shard dense
+/// combiner slots, flat board), sealed-row draining, UDF-call accounting.
 pub struct WorkerCtx<'a, 'g, M: Send> {
     /// This worker's index.
     pub w: usize,
     rt: &'a SuperstepRuntime<'g, M>,
-    /// Dense sender-side combiner slots (len |V| when combining, else 0).
-    slots: Vec<Option<M>>,
-    /// Destinations with a pending combined message, in first-touch order.
-    touched: Vec<VertexId>,
+    /// Per-destination-shard combiner state (len P when combining, else 0).
+    shards: Vec<CombineShard<M>>,
     /// VCProg user-method invocations by this worker.
     pub udf: u64,
     local: u64,
     routed: u64,
+    /// Drain cursor: sender rows `[0, drained)` already drained this step
+    /// (rows are always drained in sender order, so delivery — and thus
+    /// merge order — is deterministic in both epilogues).
+    drained: usize,
 }
 
 impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
-    /// Route one emitted message. The local shard merges straight into the
-    /// owner's `inbox` slot; remote shards go through the dense combiner
-    /// (when enabled) or the flat board under superstep `parity`.
+    /// Route one emitted message of superstep `epoch`. The local shard
+    /// merges straight into the owner's `inbox` slot; remote shards go
+    /// through the per-shard dense combiner (when enabled) or the flat
+    /// board under the epoch's parity.
     ///
     /// # Safety
     /// The caller must own worker `self.w`'s send phase: `inbox` slots of
     /// this worker's vertices are writable by this worker only, and board
-    /// row `self.w` of `parity` must not be drained concurrently.
+    /// row `self.w` of the epoch's parity must not be drained concurrently
+    /// (it is handed to receivers by [`WorkerCtx::flush`]'s seals, or by a
+    /// barrier in the barriered schedule).
     #[inline]
     pub unsafe fn route<P: VCProg<Msg = M>>(
         &mut self,
         program: &P,
         inbox: SharedSlice<'_, Option<M>>,
-        parity: u32,
+        epoch: u32,
         dst: VertexId,
         msg: M,
     ) {
@@ -389,9 +675,19 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
                 None => msg,
             });
             self.local += 1;
-        } else if self.rt.combine {
-            // Sender-side combining: dense slot per destination, no hashing.
-            let slot = &mut self.slots[dst as usize];
+        } else if !self.shards.is_empty() {
+            // Sender-side combining: dense slot per destination, addressed
+            // by the destination's local index within its shard, no hashing.
+            let li = self.rt.part.local_index(dst);
+            let shard = &mut self.shards[tp];
+            if shard.slots.is_empty() {
+                // First message for this shard: allocate partition-sized
+                // slots (O(|V|/P), not O(|V|)).
+                shard
+                    .slots
+                    .resize_with(self.rt.part.partition_size(tp, self.rt.n), || None);
+            }
+            let slot = &mut shard.slots[li];
             match slot.take() {
                 Some(old) => {
                     self.udf += 1;
@@ -399,31 +695,50 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
                 }
                 None => {
                     *slot = Some(msg);
-                    self.touched.push(dst);
+                    shard.touched.push(li as u32);
                 }
             }
         } else {
-            self.rt.board.push(parity, self.w, tp, dst, msg);
+            self.rt.board.push(epoch & 1, self.w, tp, dst, msg);
             self.routed += 1;
         }
     }
 
-    /// End of the emit phase: drain the combiner slots into the flat board
-    /// and publish this phase's counters.
+    /// Allocated combine-slot array length per destination shard
+    /// (introspection for the memory regression tests/benches): `0` until
+    /// the first combined message for that shard, `partition_size(shard)`
+    /// afterwards.
+    pub fn combine_slot_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.slots.len()).collect()
+    }
+
+    /// End of the emit phase: drain the combiner slots shard-by-shard into
+    /// the flat board, sealing each row for `epoch` as it completes (under
+    /// the pipelined schedule), and publish this phase's counters.
     ///
     /// # Safety
-    /// Same sender discipline as [`WorkerCtx::route`].
-    pub unsafe fn flush(&mut self, parity: u32) {
-        if !self.touched.is_empty() {
-            let touched = std::mem::take(&mut self.touched);
-            for &dst in &touched {
-                let msg = self.slots[dst as usize].take().expect("combined message");
-                let tp = self.rt.part.partition_of(dst);
-                self.rt.board.push(parity, self.w, tp, dst, msg);
-                self.routed += 1;
+    /// Same sender discipline as [`WorkerCtx::route`]; after this call the
+    /// worker must not push further messages for `epoch`.
+    pub unsafe fn flush(&mut self, epoch: u32) {
+        let parity = epoch & 1;
+        for tp in 0..self.rt.workers {
+            if let Some(shard) = self.shards.get_mut(tp) {
+                if !shard.touched.is_empty() {
+                    let touched = std::mem::take(&mut shard.touched);
+                    for &li in &touched {
+                        let msg = shard.slots[li as usize].take().expect("combined message");
+                        let dst = self.rt.part.global_of(tp, li as usize);
+                        self.rt.board.push(parity, self.w, tp, dst, msg);
+                        self.routed += 1;
+                    }
+                    shard.touched = touched;
+                    shard.touched.clear();
+                }
             }
-            self.touched = touched;
-            self.touched.clear();
+            if self.rt.pipeline {
+                // Hand the row off: its receiver may drain it from here on.
+                self.rt.board.seal_row(self.w, tp, epoch as u64);
+            }
         }
         if self.local > 0 {
             self.rt.local_step.fetch_add(self.local, Ordering::Relaxed);
@@ -437,20 +752,21 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
         }
     }
 
-    /// Drain this worker's board shard for `parity`, merging each message
-    /// into the owner's inbox slot.
+    /// Drain one sender's row into the owner's inbox slots.
     ///
     /// # Safety
-    /// Must run in a drain phase barrier-separated from sends of `parity`;
-    /// `inbox` slots of this worker's vertices are exclusively accessible.
-    pub unsafe fn deliver<P: VCProg<Msg = M>>(
+    /// The sender must have finished writing the row for this epoch, and
+    /// `inbox` slots of this worker's vertices must be exclusively
+    /// accessible.
+    unsafe fn drain_row<P: VCProg<Msg = M>>(
         &mut self,
         program: &P,
         inbox: SharedSlice<'_, Option<M>>,
-        parity: u32,
+        epoch: u32,
+        from: usize,
     ) {
         let mut udf = 0u64;
-        self.rt.board.drain(parity, self.w, |dst, msg| {
+        self.rt.board.drain_from(epoch & 1, from, self.w, |dst, msg| {
             let slot = inbox.get_mut(dst as usize);
             *slot = Some(match slot.take() {
                 Some(old) => {
@@ -461,6 +777,69 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
             });
         });
         self.udf += udf;
+    }
+
+    /// Is the next row in drain order already sealed for `epoch`? A cheap
+    /// (one acquire load) probe so engines waiting at the write gate can
+    /// tell drainable work apart from pure waiting — e.g. to keep busy-time
+    /// accounting honest.
+    #[inline]
+    pub fn next_row_sealed(&self, epoch: u32) -> bool {
+        self.drained < self.rt.workers
+            && self.rt.board.sealed_epoch(self.drained, self.w) >= epoch as u64
+    }
+
+    /// Drain, in sender order and without blocking, every not-yet-drained
+    /// row already sealed for `epoch`. Returns `true` once the whole shard
+    /// has been drained this step. Used by engines to overlap delivery
+    /// with stragglers' compute while waiting at the write gate.
+    ///
+    /// # Safety
+    /// `inbox` slots of this worker's vertices must be exclusively
+    /// accessible; pipelined schedule only (rows are handed off by seals).
+    pub unsafe fn try_deliver<P: VCProg<Msg = M>>(
+        &mut self,
+        program: &P,
+        inbox: SharedSlice<'_, Option<M>>,
+        epoch: u32,
+    ) -> bool {
+        while self.drained < self.rt.workers
+            && self.rt.board.sealed_epoch(self.drained, self.w) >= epoch as u64
+        {
+            self.drain_row(program, inbox, epoch, self.drained);
+            self.drained += 1;
+        }
+        self.drained == self.rt.workers
+    }
+
+    /// Drain this worker's remaining board rows for `epoch` in sender
+    /// order, merging each message into the owner's inbox slot. Under the
+    /// pipelined schedule each row is awaited via its seal (so the call may
+    /// begin while other senders are still emitting); under the barriered
+    /// schedule the caller's barrier discipline stands in for the seals.
+    /// Resets the drain cursor for the next step.
+    ///
+    /// # Safety
+    /// `inbox` slots of this worker's vertices must be exclusively
+    /// accessible; in the barriered schedule, sends of `epoch` must be
+    /// barrier-separated from this call.
+    pub unsafe fn deliver<P: VCProg<Msg = M>>(
+        &mut self,
+        program: &P,
+        inbox: SharedSlice<'_, Option<M>>,
+        epoch: u32,
+    ) {
+        while self.drained < self.rt.workers {
+            let from = self.drained;
+            if self.rt.pipeline {
+                let board = &self.rt.board;
+                let to = self.w;
+                spin_wait(|| board.sealed_epoch(from, to) >= epoch as u64);
+            }
+            self.drain_row(program, inbox, epoch, from);
+            self.drained += 1;
+        }
+        self.drained = 0;
     }
 
     /// Publish this worker's UDF-call count into the run totals.
@@ -543,6 +922,133 @@ mod tests {
     }
 
     #[test]
+    fn for_each_next_skips_zero_words_on_sparse_sets() {
+        // Satellite regression: a sparse frontier over a large bitset must
+        // be walked via word skipping + trailing-zeros — the visit list is
+        // exact and in ascending order, with no per-bit probing of the
+        // ~16k empty words.
+        let n = 64 * 16_384; // 16k words
+        let a = ActiveSet::new(n, false);
+        let set = [3u32, 64, 65, 4_095, 65_535, (n - 1) as u32];
+        for &v in &set {
+            a.set_next(v, true);
+        }
+        let mut seen = Vec::new();
+        a.for_each_next(|v| seen.push(v));
+        assert_eq!(seen, set.to_vec());
+        assert_eq!(a.count_next(), set.len() as u64);
+        assert_eq!(a.num_words(), 16_384);
+        assert_eq!(a.next_word(0), (1 << 3));
+        assert_eq!(a.next_word(1), 0b11);
+    }
+
+    #[test]
+    fn parallel_reduction_matches_serial_fold() {
+        let g = crate::graph::generate::random_for_tests(200, 900, 5);
+        let topo = g.topology();
+        let opts = RunOptions::default().with_workers(3);
+        let rt: SuperstepRuntime<'_, i64> =
+            SuperstepRuntime::new(topo, &opts, false).with_degree_reduction();
+        for v in (0..200u32).step_by(3) {
+            rt.active.set_next(v, true);
+        }
+        // Exercise the fully-set-word prefix fast path too.
+        for v in 64..128u32 {
+            rt.active.set_next(v, true);
+        }
+        let words = rt.active.num_words();
+        let (act, aoe) = rt.reduce_words(0..words);
+        assert_eq!(act, rt.active.count_next());
+        let mut want = 0u64;
+        rt.active.for_each_next(|v| want += topo.out_degree(v) as u64);
+        assert_eq!(aoe, want, "degree fold must match the per-bit walk");
+        // Disjoint ranges compose — the parallel reduction is exact.
+        let (a1, o1) = rt.reduce_words(0..2);
+        let (a2, o2) = rt.reduce_words(2..words);
+        assert_eq!((a1 + a2, o1 + o2), (act, aoe));
+        // Per-worker ranges cover all words exactly once.
+        let mut covered = 0;
+        for w in 0..rt.workers {
+            covered += rt.word_range(w).len();
+        }
+        assert_eq!(covered, words);
+    }
+
+    #[test]
+    fn pipelined_epilogue_counts_and_stops_at_max_iter() {
+        // Drive finish_step directly from several workers: the gated
+        // epilogue must aggregate the parallel reduction, keep every worker
+        // in lockstep on the stop decision, and honour max_iter.
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let topo = g.topology();
+        let mut opts = RunOptions::default().with_workers(3).with_max_iter(4);
+        opts.step_metrics = true;
+        let rt: SuperstepRuntime<'_, i64> = SuperstepRuntime::new(topo, &opts, false);
+        std::thread::scope(|s| {
+            for w in 0..rt.workers {
+                let rt = &rt;
+                s.spawn(move || {
+                    let mut iter = 1u32;
+                    loop {
+                        let t = Timer::start();
+                        for v in rt.vertices_of(w) {
+                            rt.active.set_next(v, true);
+                        }
+                        rt.arrive_writes();
+                        let stop = rt.finish_step(w, iter, &t, None, |act, _| {
+                            assert_eq!(act, 4, "all four vertices counted");
+                        });
+                        if stop {
+                            break;
+                        }
+                        iter += 1;
+                    }
+                    assert_eq!(iter, 4, "stopped exactly at max_iter");
+                });
+            }
+        });
+        let m = rt.into_metrics(Vec::new());
+        assert_eq!(m.supersteps, 4);
+        assert!(!m.converged);
+        assert_eq!(m.steps.len(), 4);
+        assert!(m.steps.iter().all(|s| s.active == 4));
+    }
+
+    #[test]
+    fn pipelined_epilogue_detects_convergence() {
+        let g = from_pairs(true, &[(0, 1), (1, 2)]);
+        let topo = g.topology();
+        let opts = RunOptions::default().with_workers(2);
+        let rt: SuperstepRuntime<'_, i64> = SuperstepRuntime::new(topo, &opts, false);
+        std::thread::scope(|s| {
+            for w in 0..rt.workers {
+                let rt = &rt;
+                s.spawn(move || {
+                    let mut iter = 1u32;
+                    loop {
+                        let t = Timer::start();
+                        // Step 1: everyone active; step 2: nobody.
+                        if iter == 1 {
+                            for v in rt.vertices_of(w) {
+                                rt.active.set_next(v, true);
+                            }
+                        }
+                        rt.arrive_writes();
+                        if rt.finish_step(w, iter, &t, None, |_, _| {}) {
+                            break;
+                        }
+                        iter += 1;
+                    }
+                    assert_eq!(iter, 2, "quiesced on the empty step");
+                });
+            }
+        });
+        let m = rt.into_metrics(Vec::new());
+        assert!(m.converged);
+        assert_eq!(m.supersteps, 2);
+    }
+
+    #[test]
     fn router_radix_routes_to_owning_shard() {
         // Messages pushed through WorkerCtx::route must land on the shard
         // that owns the destination vertex (vid % workers under hashing).
@@ -606,10 +1112,58 @@ mod tests {
         for msg in [9i64, 4, 7] {
             unsafe { ctx.route(&program, inbox_s, 1, 1, msg) };
         }
+        // Slots are per-shard and local-index sized: only worker 1's shard
+        // allocated, at partition_size — not |V|.
+        assert_eq!(ctx.combine_slot_lens(), vec![0, rt.part.partition_size(1, n)]);
         unsafe { ctx.flush(1) };
         assert_eq!(rt.board.total_messages(), 1, "combined to one message");
         let mut got = Vec::new();
         unsafe { rt.board.drain(1, 1, |dst, m| got.push((dst, m))) };
         assert_eq!(got, vec![(1, 4)], "min survived the combine");
+    }
+
+    #[test]
+    fn sealed_handoff_delivers_before_the_gate() {
+        // try_deliver must drain exactly the sealed sender-order prefix.
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2), (1, 3)]);
+        let topo = g.topology();
+        let opts = RunOptions {
+            workers: 3,
+            partition: PartitionStrategy::Hash,
+            combiner: false,
+            ..RunOptions::default()
+        };
+        let rt: SuperstepRuntime<'_, i64> = SuperstepRuntime::new(topo, &opts, false);
+        assert!(rt.pipeline, "pipeline is the default schedule");
+        let program = SsspBellmanFord::new(0);
+        let n = rt.n;
+        let mut inbox: Vec<Option<i64>> = (0..n).map(|_| None).collect();
+        let inbox_s = SharedSlice::new(&mut inbox);
+
+        // Senders 0 and 1 each send to vertex 2 (owned by worker 2).
+        let mut c0 = rt.ctx(0);
+        unsafe { c0.route(&program, inbox_s, 1, 2, 10) };
+        unsafe { c0.flush(1) }; // seals rows of sender 0 for epoch 1
+        let mut c1 = rt.ctx(1);
+        unsafe { c1.route(&program, inbox_s, 1, 2, 3) };
+
+        let mut c2 = rt.ctx(2);
+        // Sender 2 (the receiver itself) seals its empty rows up front, as
+        // every worker's emit phase does.
+        unsafe { c2.flush(1) };
+        // Sender 1 has not sealed epoch 1: only rows 0..=0 may drain (the
+        // cursor stops at the first unsealed sender to keep merge order
+        // deterministic).
+        let all = unsafe { c2.try_deliver(&program, inbox_s, 1) };
+        assert!(!all, "row of sender 1 not sealed yet");
+        assert_eq!(*unsafe { inbox_s.get(2) }, Some(10));
+        unsafe { c1.flush(1) };
+        // Now the rest drains; deliver resets the cursor for the next step.
+        unsafe { c2.deliver(&program, inbox_s, 1) };
+        assert_eq!(
+            *unsafe { inbox_s.get(2) },
+            Some(3),
+            "min-merge applied in sender order"
+        );
     }
 }

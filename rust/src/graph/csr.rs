@@ -135,9 +135,24 @@ impl Topology {
         (&self.in_offsets, &self.in_sources, &self.in_edge_ids)
     }
 
-    /// Sum of out-degrees over `vs` (used by Push-Pull's mode heuristic).
+    /// Sum of out-degrees over `vs`. Kept as the slow-path reference for
+    /// arbitrary vertex streams; per-superstep density folds should use
+    /// [`Topology::out_degree_prefix`] instead (the superstep runtime
+    /// caches it once per run and folds whole bitset words in O(1)).
     pub fn out_degree_sum(&self, vs: impl Iterator<Item = VertexId>) -> usize {
         vs.map(|v| self.out_degree(v)).sum()
+    }
+
+    /// Out-degree prefix sums: `prefix[v]` is the total out-degree of all
+    /// vertices `< v`, with `prefix[|V|] == |E|`. This is exactly the CSR
+    /// row-offset array, so the "cache" is zero-copy — the point of
+    /// exposing it under this name is the contract: `prefix[b] - prefix[a]`
+    /// is the out-degree sum of the contiguous vertex range `[a, b)`, which
+    /// lets the runtime's convergence reduction fold a fully-active 64-bit
+    /// bitset word with one subtraction instead of 64 degree lookups.
+    #[inline]
+    pub fn out_degree_prefix(&self) -> &[usize] {
+        &self.out_offsets
     }
 
     /// Total bytes of the topology arrays (capacity planning / reports).
@@ -229,5 +244,19 @@ mod tests {
     #[test]
     fn memory_accounting_nonzero() {
         assert!(diamond().memory_bytes() > 0);
+    }
+
+    #[test]
+    fn out_degree_prefix_folds_ranges() {
+        let t = diamond();
+        let p = t.out_degree_prefix();
+        assert_eq!(p.len(), t.num_vertices() + 1);
+        assert_eq!(p[t.num_vertices()], t.num_edges());
+        for v in 0..t.num_vertices() {
+            assert_eq!(p[v + 1] - p[v], t.out_degree(v as VertexId));
+        }
+        // Range fold equals the per-vertex sum — the runtime's full-word
+        // fast path depends on this.
+        assert_eq!(p[3] - p[0], t.out_degree_sum(0..3u32));
     }
 }

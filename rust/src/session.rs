@@ -92,6 +92,7 @@ impl Session {
         opts.workers = cfg.get_usize("workers", opts.workers)?;
         opts.max_iter = cfg.get_usize("max_iter", opts.max_iter as usize)? as u32;
         opts.combiner = cfg.get_bool("combiner", opts.combiner)?;
+        opts.pipeline = cfg.get_bool("pipeline", opts.pipeline)?;
         opts.pushpull_threshold = cfg.get_f64("pushpull_threshold", opts.pushpull_threshold)?;
         if let Some(p) = cfg.get("partition") {
             opts.partition = crate::graph::partition::PartitionStrategy::parse(p)

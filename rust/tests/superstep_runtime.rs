@@ -1,7 +1,11 @@
 //! Integration: the shared superstep runtime behind all distributed
-//! engines — cross-engine identity over many random graphs, combiner
-//! on/off equivalence, and active-bitset convergence behavior.
+//! engines — cross-engine identity over many random graphs, the
+//! overlapped-pipeline vs full-barrier identity property, combiner on/off
+//! equivalence, combiner memory shape, and active-bitset convergence
+//! behavior.
 
+use unigps::distributed::shared::SharedSlice;
+use unigps::engine::superstep::SuperstepRuntime;
 use unigps::engine::{run_typed, EngineKind, RunOptions};
 use unigps::graph::generate;
 use unigps::graph::partition::PartitionStrategy;
@@ -45,6 +49,108 @@ fn all_engines_identical_on_50_random_graphs() {
             Ok(())
         },
     );
+}
+
+/// Property: the overlapped per-shard handoff is a pure scheduling change.
+/// On the same 50-random-graph corpus shape as the cross-engine identity
+/// property, every distributed engine must produce **bit-identical**
+/// results — and identical message totals and superstep counts — with the
+/// pipeline on and off, with and without the sender-side combiner.
+#[test]
+fn pipelined_matches_barriered_on_50_random_graphs() {
+    forall(
+        Config::new(50, 0x0F17),
+        |rng| {
+            let n = 2 + rng.usize_below(120);
+            let m = n * (1 + rng.usize_below(5));
+            let workers = 1 + rng.usize_below(6);
+            let strategy = *rng.choose(&[
+                PartitionStrategy::Hash,
+                PartitionStrategy::Range,
+                PartitionStrategy::EdgeBalanced,
+            ]);
+            (generate::random_for_tests(n, m, rng.next_u64()), workers, strategy)
+        },
+        |(g, workers, strategy)| {
+            let prog = SsspBellmanFord::new(0);
+            for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
+                for combiner in [false, true] {
+                    let mut over = RunOptions::default().with_workers(*workers);
+                    over.partition = *strategy;
+                    over.combiner = combiner;
+                    over.pipeline = true;
+                    let mut bar = over.clone();
+                    bar.pipeline = false;
+                    let a = run_typed(kind, g, &prog, &over).map_err(|e| e.to_string())?;
+                    let b = run_typed(kind, g, &prog, &bar).map_err(|e| e.to_string())?;
+                    let tag = format!("{kind} w={workers} {strategy:?} combiner={combiner}");
+                    if a.props != b.props {
+                        return Err(format!("{tag}: pipelined results diverged"));
+                    }
+                    if a.metrics.total_messages != b.metrics.total_messages {
+                        return Err(format!("{tag}: message totals diverged"));
+                    }
+                    if a.metrics.supersteps != b.metrics.supersteps {
+                        return Err(format!("{tag}: superstep counts diverged"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Combiner memory regression: sender-side combine-slot arrays are dense
+/// over *local* indices of the destination shard — `partition_size(p)`
+/// entries, lazily allocated per peer — never one `|V|`-sized array.
+#[test]
+fn combiner_slots_are_partition_sized_not_vertex_sized() {
+    let n = 103usize;
+    let g = generate::random_for_tests(n, 400, 77);
+    for strategy in [
+        PartitionStrategy::Hash,
+        PartitionStrategy::Range,
+        PartitionStrategy::EdgeBalanced,
+    ] {
+        let mut opts = RunOptions::default().with_workers(4);
+        opts.partition = strategy;
+        opts.combiner = true;
+        let topo = g.topology();
+        let rt: SuperstepRuntime<'_, i64> = SuperstepRuntime::new(topo, &opts, true);
+        let prog = SsspBellmanFord::new(0);
+        let mut inbox: Vec<Option<i64>> = (0..n).map(|_| None).collect();
+        let inbox_s = SharedSlice::new(&mut inbox);
+        let mut ctx = rt.ctx(0);
+        // Worker 0 messages every vertex: remote ones go through the
+        // combiner, so every remote shard allocates its slot array.
+        for dst in 0..n as u32 {
+            // SAFETY: single-threaded test; worker 0 owns its send phase.
+            unsafe { ctx.route(&prog, inbox_s, 1, dst, 1) };
+        }
+        let lens = ctx.combine_slot_lens();
+        assert_eq!(lens.len(), rt.workers, "{strategy:?}");
+        let mut remote_total = 0usize;
+        for (p, len) in lens.iter().enumerate() {
+            if p == 0 {
+                // Local destinations take the inbox fast path and must not
+                // allocate combine slots at all.
+                assert_eq!(*len, 0, "{strategy:?}: local shard allocated slots");
+            } else {
+                assert_eq!(
+                    *len,
+                    rt.part.partition_size(p, n),
+                    "{strategy:?}: slot array must be partition_size({p})"
+                );
+                assert!(*len < n, "{strategy:?}: slot array is |V|-sized");
+                remote_total += len;
+            }
+        }
+        assert_eq!(
+            remote_total,
+            n - rt.part.partition_size(0, n),
+            "{strategy:?}: combine memory must be |V| - |V_local|, split per shard"
+        );
+    }
 }
 
 /// Sender-side combining must be a pure optimization: identical results,
@@ -103,20 +209,25 @@ fn bitset_convergence_detection() {
     let g = unigps::graph::builder::from_pairs(true, &pairs);
     for kind in EngineKind::vcprog_engines() {
         for workers in [1, 3, 7] {
-            let opts = RunOptions::default().with_workers(workers);
-            let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts).unwrap();
-            assert!(r.metrics.converged, "{kind} w={workers}");
-            // The wave takes 10 steps to cover the path; one more step with
-            // zero active vertices closes the run (engine scheduling may
-            // save or add a quiesce step, hence the range).
-            assert!(
-                (10..=12).contains(&r.metrics.supersteps),
-                "{kind} w={workers}: {} supersteps",
-                r.metrics.supersteps
-            );
-            assert_eq!(r.props, (0i64..=9).collect::<Vec<_>>(), "{kind}");
-            // The final recorded step must have zero active vertices.
-            assert_eq!(r.metrics.steps.last().unwrap().active, 0, "{kind}");
+            for pipeline in [true, false] {
+                let mut opts = RunOptions::default().with_workers(workers);
+                opts.pipeline = pipeline;
+                let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts).unwrap();
+                let tag = format!("{kind} w={workers} pipeline={pipeline}");
+                assert!(r.metrics.converged, "{tag}");
+                // The wave takes 10 steps to cover the path; one more step
+                // with zero active vertices closes the run (engine
+                // scheduling may save or add a quiesce step, hence the
+                // range).
+                assert!(
+                    (10..=12).contains(&r.metrics.supersteps),
+                    "{tag}: {} supersteps",
+                    r.metrics.supersteps
+                );
+                assert_eq!(r.props, (0i64..=9).collect::<Vec<_>>(), "{tag}");
+                // The final recorded step must have zero active vertices.
+                assert_eq!(r.metrics.steps.last().unwrap().active, 0, "{tag}");
+            }
         }
     }
 }
@@ -128,9 +239,12 @@ fn bitset_convergence_detection() {
 fn step_messages_sum_to_total_on_all_engines() {
     let g = generate::random_for_tests(90, 700, 0xACC);
     for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
-        let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &RunOptions::default().with_workers(4))
-            .unwrap();
-        let per_step: u64 = r.metrics.steps.iter().map(|s| s.messages).sum();
-        assert_eq!(per_step, r.metrics.total_messages, "{kind}");
+        for pipeline in [true, false] {
+            let mut opts = RunOptions::default().with_workers(4);
+            opts.pipeline = pipeline;
+            let r = run_typed(kind, &g, &SsspBellmanFord::new(0), &opts).unwrap();
+            let per_step: u64 = r.metrics.steps.iter().map(|s| s.messages).sum();
+            assert_eq!(per_step, r.metrics.total_messages, "{kind} pipeline={pipeline}");
+        }
     }
 }
