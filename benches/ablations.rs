@@ -15,6 +15,10 @@
 //!    per-shard seal pipeline (`RunOptions::pipeline`), on the lj analog.
 //!    Also writes `BENCH_superstep.json` so the perf trajectory of the
 //!    superstep hot loop is machine-trackable across PRs.
+//! 7. Serving: N short jobs through `unigps serve` (resident snapshot
+//!    cache, concurrent scheduler slots) vs N cold one-shot runs that each
+//!    re-generate the graph — the end-to-end amortization argument of the
+//!    serve subsystem. Writes `BENCH_serve.json`.
 
 use unigps::distributed::barrier::{BspBarrier, CondvarBarrier, SpinBarrier};
 use unigps::engine::{run_typed, EngineKind, RunOptions};
@@ -38,6 +42,7 @@ fn main() {
     barrier_ablation();
     routing_ablation(&graph);
     superstep_pipeline_ablation(&graph, div);
+    serve_throughput_ablation(div);
 }
 
 fn combiner_ablation(graph: &unigps::graph::Graph) {
@@ -383,5 +388,115 @@ fn superstep_pipeline_ablation(graph: &unigps::graph::Graph, div: u64) {
     match std::fs::write("BENCH_superstep.json", &json) {
         Ok(()) => println!("   wrote BENCH_superstep.json"),
         Err(e) => println!("   WARN: could not write BENCH_superstep.json: {e}"),
+    }
+    println!();
+}
+
+/// Serving ablation: N short jobs against one dataset spec, (a) cold —
+/// each run re-generates the graph and owns the whole machine, exactly
+/// what N `unigps run` invocations cost — vs (b) warm — the same N jobs
+/// submitted by concurrent clients to a resident server whose snapshot
+/// cache loads the graph once and whose scheduler splits the cores across
+/// slots. Records the delta in `BENCH_serve.json`.
+fn serve_throughput_ablation(div: u64) {
+    use unigps::ipc::shm::ShmMap;
+    use unigps::operators::{run_operator, Operator};
+    use unigps::serve::{ServeClient, ServeConfig, Server};
+    use unigps::session::Session;
+
+    println!("-- [7] serve: warm-cache concurrent jobs vs cold one-shot runs --");
+    let fast = std::env::var("UNIGPS_BENCH_FAST").ok().as_deref() == Some("1");
+    let jobs: usize = if fast { 8 } else { 24 };
+    let clients = 4usize;
+    let workers = 4usize;
+    let ops: [(&str, Operator); 3] = [
+        ("algo = pagerank\niterations = 5", Operator::PageRank { iterations: 5 }),
+        ("algo = sssp\nroot = 0", Operator::Sssp { root: 0 }),
+        ("algo = cc", Operator::ConnectedComponents),
+    ];
+
+    // (a) Cold: the one-shot CLI path — load/generate then run, per job.
+    let cold_secs = {
+        let timer = Timer::start();
+        for i in 0..jobs {
+            let graph = DatasetSpec::by_key("lj").unwrap().generate(div);
+            let mut opts = RunOptions::default().with_workers(workers);
+            opts.step_metrics = false;
+            let r = run_operator(&graph, &ops[i % ops.len()].1, EngineKind::Pregel, &opts)
+                .unwrap();
+            std::hint::black_box(r);
+        }
+        timer.secs()
+    };
+
+    // (b) Warm: the same jobs through a resident server.
+    let socket = ShmMap::unique_path("serve-bench");
+    let mut cfg = ServeConfig::new(&socket);
+    cfg.slots = 2;
+    cfg.queue_cap = jobs.max(8);
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = workers;
+    let server = Server::bind(Session::builder().build(), cfg).unwrap();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+    let (warm_secs, loads, hits) = {
+        let timer = Timer::start();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let socket = &socket;
+                let ops = &ops;
+                s.spawn(move || {
+                    let mut client = ServeClient::connect(socket).unwrap();
+                    for i in (c..jobs).step_by(clients) {
+                        let spec = format!(
+                            "dataset = lj\nscale = {div}\nworkers = {workers}\n\
+                             step_metrics = off\n{}",
+                            ops[i % ops.len()].0
+                        );
+                        let id = client.submit(&spec).unwrap();
+                        client
+                            .wait(id, std::time::Duration::from_secs(600))
+                            .unwrap();
+                    }
+                });
+            }
+        });
+        let secs = timer.secs();
+        let mut client = ServeClient::connect(&socket).unwrap();
+        let stats = client.stats().unwrap();
+        client.shutdown().unwrap();
+        (secs, stats.cache.loads, stats.cache.hits)
+    };
+    server_thread.join().unwrap();
+
+    let speedup = cold_secs / warm_secs.max(1e-12);
+    let mut t = Table::new(&["path", "time", "jobs/s", "speedup"]);
+    t.row(&[
+        "cold one-shot runs".into(),
+        fmt_dur(cold_secs),
+        format!("{:.2}", jobs as f64 / cold_secs.max(1e-12)),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "resident server (warm cache)".into(),
+        fmt_dur(warm_secs),
+        format!("{:.2}", jobs as f64 / warm_secs.max(1e-12)),
+        format!("{speedup:.2}x"),
+    ]);
+    t.print();
+    println!(
+        "   cache: {loads} load(s), {hits} hits for {jobs} jobs — expect 1 load and \
+         speedup > 1x once per-job graph generation dominates short jobs."
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_throughput\",\n  \"graph\": {{\"key\": \"lj\", \
+         \"scale_div\": {div}}},\n  \"jobs\": {jobs},\n  \"clients\": {clients},\n  \
+         \"slots\": 2,\n  \"total_workers\": {workers},\n  \
+         \"cold_secs\": {cold_secs:.6},\n  \"warm_secs\": {warm_secs:.6},\n  \
+         \"speedup\": {speedup:.4},\n  \"cache_loads\": {loads},\n  \"cache_hits\": {hits}\n}}\n"
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("   wrote BENCH_serve.json"),
+        Err(e) => println!("   WARN: could not write BENCH_serve.json: {e}"),
     }
 }

@@ -16,10 +16,14 @@
 //! * worker partitioning of the vertex range
 //!   ([`superstep::SuperstepRuntime::vertices_of`]);
 //! * double-buffered per-worker × per-destination-shard **flat message
-//!   buffers** with radix routing by `vid % workers`
-//!   ([`crate::distributed::comm::FlatBoard`]) — no `HashMap` and no locks
-//!   on the hot path, with a local-shard fast path that merges straight
-//!   into the owner's inbox;
+//!   buffers** ([`crate::distributed::comm::FlatBoard`]) with radix
+//!   routing by
+//!   [`Partitioner::partition_of`](crate::graph::partition::Partitioner::partition_of)
+//!   — `dst % P` under the
+//!   default hash strategy, contiguous-bounds lookup under the `range`
+//!   and `edge-balanced` strategies ([`RunOptions::partition`]) — no
+//!   `HashMap` and no locks on the hot path, with a local-shard fast path
+//!   that merges straight into the owner's inbox;
 //! * optional **sender-side combining** (Giraph's Combiner) behind
 //!   [`VCProg::combinable`], implemented as dense per-shard slots over
 //!   local vertex indices (O(|V|/P) per peer, lazily allocated);

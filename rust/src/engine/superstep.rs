@@ -9,9 +9,11 @@
 //! * **worker partitioning** of the vertex range ([`SuperstepRuntime::vertices_of`],
 //!   backed by [`Partitioner`]);
 //! * **flat sharded message routing** ([`WorkerCtx::route`]): messages are
-//!   radix-routed by `Partitioner::partition_of(dst)` (`vid % workers`
-//!   under hash partitioning) into the double-buffered per-worker ×
-//!   per-destination-shard flat buffers of
+//!   radix-routed by [`Partitioner::partition_of`] — `dst % P` under the
+//!   default hash strategy, a contiguous-bounds `partition_point` lookup
+//!   under the `range` and `edge-balanced` strategies, all three covered
+//!   by the cross-engine identity property — into the double-buffered
+//!   per-worker × per-destination-shard flat buffers of
 //!   [`FlatBoard`](crate::distributed::comm::FlatBoard) — no `HashMap`, no
 //!   locks, no steady-state allocation. Messages to the local shard take
 //!   the fast path and merge straight into the owner's inbox slot;

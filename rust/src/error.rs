@@ -24,6 +24,9 @@ pub enum UniGpsError {
     Runtime(String),
     /// Configuration error.
     Config(String),
+    /// Serving-subsystem failure (admission queue full, unknown job,
+    /// result not ready, server shutting down).
+    Serve(String),
 }
 
 impl fmt::Display for UniGpsError {
@@ -37,6 +40,7 @@ impl fmt::Display for UniGpsError {
             UniGpsError::Ipc(m) => write!(f, "ipc error: {m}"),
             UniGpsError::Runtime(m) => write!(f, "runtime error: {m}"),
             UniGpsError::Config(m) => write!(f, "config error: {m}"),
+            UniGpsError::Serve(m) => write!(f, "serve error: {m}"),
         }
     }
 }
@@ -69,6 +73,10 @@ impl UniGpsError {
     pub fn runtime(msg: impl Into<String>) -> Self {
         UniGpsError::Runtime(msg.into())
     }
+    /// Shorthand constructor for serving errors.
+    pub fn serve(msg: impl Into<String>) -> Self {
+        UniGpsError::Serve(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -81,6 +89,8 @@ mod tests {
         assert!(e.to_string().contains("dangling edge"));
         let e = UniGpsError::ipc("peer gone");
         assert!(e.to_string().contains("peer gone"));
+        let e = UniGpsError::serve("queue full");
+        assert!(e.to_string().contains("serve error: queue full"));
         let e: UniGpsError = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
         assert!(matches!(e, UniGpsError::Io(_)));
     }

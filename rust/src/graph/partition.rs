@@ -29,6 +29,16 @@ impl PartitionStrategy {
             _ => None,
         }
     }
+
+    /// Canonical config-string name (inverse of [`PartitionStrategy::parse`]).
+    /// Used for snapshot-cache keys and for synthesizing job specs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Hash => "hash",
+            PartitionStrategy::Range => "range",
+            PartitionStrategy::EdgeBalanced => "edge-balanced",
+        }
+    }
 }
 
 /// A concrete vertex→partition assignment.
@@ -317,5 +327,13 @@ mod tests {
             Some(PartitionStrategy::EdgeBalanced)
         );
         assert_eq!(PartitionStrategy::parse("nope"), None);
+        // name() is the inverse of parse() for every strategy.
+        for s in [
+            PartitionStrategy::Hash,
+            PartitionStrategy::Range,
+            PartitionStrategy::EdgeBalanced,
+        ] {
+            assert_eq!(PartitionStrategy::parse(s.name()), Some(s));
+        }
     }
 }

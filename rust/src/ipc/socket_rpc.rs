@@ -11,6 +11,12 @@
 //! ```text
 //! u32 method_or_status | u32 len | len bytes
 //! ```
+//!
+//! [`read_frame`] and [`write_frame`] are public because the serving
+//! subsystem ([`crate::serve`]) reuses this framing on a socket reachable
+//! by untrusted clients; both reject frames larger than [`MAX_FRAME_LEN`]
+//! with a typed [`UniGpsError::Ipc`] *before* allocating, so a hostile
+//! length header cannot force an attacker-controlled allocation.
 
 use crate::error::{Result, UniGpsError};
 use crate::ipc::protocol::status;
@@ -19,7 +25,38 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
 
-fn write_frame(w: &mut impl Write, head: u32, payload: &[u8]) -> Result<()> {
+/// Hard cap on a frame's payload length for **untrusted** peers (64 MiB)
+/// — the limit [`read_frame`]/[`write_frame`] enforce, and what the
+/// serving subsystem ([`crate::serve`]) speaks on its public socket.
+/// Covers the result tables this repo ships at its default bench scales
+/// (a full-scale `uk` column would exceed it — the serve subsystem
+/// answers such requests with a typed ERR frame rather than a dropped
+/// connection; chunked result streaming is a ROADMAP follow-on), while
+/// keeping a forged length header from exhausting memory.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Frame cap for the **trusted** VCProg isolation channel (1 GiB, the
+/// historical envelope): [`SocketClient`]/[`SocketServer`] connect two
+/// processes of the same `unigps` invocation, and one `EMIT_BATCH` for a
+/// high-degree hub vertex can legitimately exceed [`MAX_FRAME_LEN`].
+pub const MAX_TRUSTED_FRAME_LEN: usize = 1 << 30;
+
+/// Write one `head | len | payload` frame, refusing payloads over
+/// `max_len` with a typed error so a sender never emits a frame its peer
+/// is required to refuse. Nothing is written for a refused frame, so the
+/// stream stays cleanly framed.
+pub fn write_frame_limited(
+    w: &mut impl Write,
+    head: u32,
+    payload: &[u8],
+    max_len: usize,
+) -> Result<()> {
+    if payload.len() > max_len {
+        return Err(UniGpsError::ipc(format!(
+            "refusing to write frame of {} bytes (limit {max_len})",
+            payload.len()
+        )));
+    }
     w.write_all(&head.to_le_bytes())?;
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
@@ -27,17 +64,34 @@ fn write_frame(w: &mut impl Write, head: u32, payload: &[u8]) -> Result<()> {
     Ok(())
 }
 
-fn read_frame(r: &mut impl Read) -> Result<(u32, Vec<u8>)> {
+/// [`write_frame_limited`] at the untrusted [`MAX_FRAME_LEN`] cap.
+pub fn write_frame(w: &mut impl Write, head: u32, payload: &[u8]) -> Result<()> {
+    write_frame_limited(w, head, payload, MAX_FRAME_LEN)
+}
+
+/// Read one frame, returning `(head, payload)`. A length field over
+/// `max_len` is rejected with a typed [`UniGpsError::Ipc`] before any
+/// payload allocation happens; truncated streams surface as
+/// [`UniGpsError::Io`]. Reader and writer must agree on the limit — a
+/// lenient writer against a strict reader desyncs the stream.
+pub fn read_frame_limited(r: &mut impl Read, max_len: usize) -> Result<(u32, Vec<u8>)> {
     let mut head = [0u8; 8];
     r.read_exact(&mut head)?;
     let tag = u32::from_le_bytes(head[0..4].try_into().unwrap());
     let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
-    if len > (1 << 30) {
-        return Err(UniGpsError::ipc(format!("frame too large: {len}")));
+    if len > max_len {
+        return Err(UniGpsError::ipc(format!(
+            "frame length {len} exceeds limit {max_len}; rejecting before allocation"
+        )));
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     Ok((tag, payload))
+}
+
+/// [`read_frame_limited`] at the untrusted [`MAX_FRAME_LEN`] cap.
+pub fn read_frame(r: &mut impl Read) -> Result<(u32, Vec<u8>)> {
+    read_frame_limited(r, MAX_FRAME_LEN)
 }
 
 /// Client half over a Unix stream.
@@ -74,8 +128,8 @@ impl SocketClient {
 
 impl RpcChannel for SocketClient {
     fn call(&mut self, method: u32, payload: &[u8]) -> Result<Vec<u8>> {
-        write_frame(&mut self.writer, method, payload)?;
-        let (st, resp) = read_frame(&mut self.reader)?;
+        write_frame_limited(&mut self.writer, method, payload, MAX_TRUSTED_FRAME_LEN)?;
+        let (st, resp) = read_frame_limited(&mut self.reader, MAX_TRUSTED_FRAME_LEN)?;
         if st == status::OK {
             Ok(resp)
         } else {
@@ -112,7 +166,7 @@ impl SocketServer {
         let mut reader = BufReader::new(stream.try_clone()?);
         let mut writer = BufWriter::new(stream);
         loop {
-            let (method, payload) = match read_frame(&mut reader) {
+            let (method, payload) = match read_frame_limited(&mut reader, MAX_TRUSTED_FRAME_LEN) {
                 Ok(f) => f,
                 Err(UniGpsError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
                     return Ok(()); // peer closed
@@ -123,7 +177,7 @@ impl SocketServer {
                 Ok(r) => (status::OK, r),
                 Err(e) => (status::ERR, e.to_string().into_bytes()),
             };
-            write_frame(&mut writer, st, &resp)?;
+            write_frame_limited(&mut writer, st, &resp, MAX_TRUSTED_FRAME_LEN)?;
             if method == stop_method {
                 return Ok(());
             }
@@ -192,5 +246,81 @@ mod tests {
         let t = std::time::Instant::now();
         assert!(SocketClient::connect(&path).is_err());
         assert!(t.elapsed().as_secs() < 10);
+    }
+
+    #[test]
+    fn frame_roundtrip_through_buffer() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, 9, b"payload").unwrap();
+        let (tag, payload) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(tag, 9);
+        assert_eq!(payload, b"payload");
+        // Empty payloads are legal frames.
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, 0, b"").unwrap();
+        let (tag, payload) = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!((tag, payload.len()), (0, 0));
+    }
+
+    #[test]
+    fn oversized_length_header_rejected_before_allocation() {
+        // A hostile client forges a 4 GiB length field; the reader must
+        // reject it with a typed error without allocating the payload.
+        for forged in [u32::MAX, (MAX_FRAME_LEN as u32) + 1] {
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&7u32.to_le_bytes());
+            frame.extend_from_slice(&forged.to_le_bytes());
+            let err = read_frame(&mut frame.as_slice()).unwrap_err();
+            assert!(matches!(err, UniGpsError::Ipc(_)), "want typed Ipc, got {err:?}");
+            assert!(err.to_string().contains("exceeds limit"), "{err}");
+        }
+        // The limit itself is still accepted as a *length*: a frame of
+        // exactly MAX_FRAME_LEN that then truncates fails as Io, not Ipc.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&7u32.to_le_bytes());
+        frame.extend_from_slice(&(MAX_FRAME_LEN as u32).to_le_bytes());
+        let err = read_frame(&mut frame.as_slice()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Io(_)), "truncation is an Io error, got {err:?}");
+    }
+
+    #[test]
+    fn truncated_header_and_body_rejected() {
+        // Header cut short.
+        let err = read_frame(&mut [1u8, 2, 3].as_slice()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Io(_)));
+        // Body shorter than the declared length.
+        let mut frame = Vec::new();
+        frame.extend_from_slice(&7u32.to_le_bytes());
+        frame.extend_from_slice(&16u32.to_le_bytes());
+        frame.extend_from_slice(b"short");
+        let err = read_frame(&mut frame.as_slice()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Io(_)));
+    }
+
+    #[test]
+    fn oversized_write_refused() {
+        let huge = vec![0u8; MAX_FRAME_LEN + 1];
+        let mut sink: Vec<u8> = Vec::new();
+        let err = write_frame(&mut sink, 1, &huge).unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)));
+        assert!(sink.is_empty(), "nothing may be written for a refused frame");
+    }
+
+    #[test]
+    fn trusted_channel_keeps_the_larger_envelope() {
+        // The VCProg isolation channel may carry frames past the untrusted
+        // cap (hub-vertex EMIT_BATCH); the untrusted reader must refuse the
+        // same frame.
+        let payload = vec![7u8; MAX_FRAME_LEN + 1];
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame_limited(&mut buf, 3, &payload, MAX_TRUSTED_FRAME_LEN).unwrap();
+        let err = read_frame(&mut buf.as_slice()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)), "untrusted reader refuses");
+        let (tag, got) = read_frame_limited(&mut buf.as_slice(), MAX_TRUSTED_FRAME_LEN).unwrap();
+        assert_eq!((tag, got.len()), (3, payload.len()));
+        // The trusted envelope is still a hard cap.
+        let mut sink: Vec<u8> = Vec::new();
+        let err = write_frame_limited(&mut sink, 3, &payload, payload.len() - 1).unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)));
     }
 }

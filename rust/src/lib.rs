@@ -26,6 +26,11 @@
 //! * [`runtime`] — the PJRT runtime loading `artifacts/*.hlo.txt` produced by
 //!   `python/compile/aot.py` (JAX L2 + Pallas L1), Python never on the
 //!   request path.
+//! * [`serve`] — the resident job service (`unigps serve`): a concurrent
+//!   job scheduler with FIFO admission + backpressure and a shared
+//!   LRU graph-snapshot cache behind a Unix-domain-socket protocol, so a
+//!   pipeline of short jobs pays the graph load/partition cost once
+//!   instead of per invocation.
 //!
 //! ## Quickstart
 //!
@@ -52,6 +57,7 @@ pub mod graph;
 pub mod ipc;
 pub mod operators;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod util;
 pub mod vcprog;
@@ -62,6 +68,7 @@ pub mod prelude {
     pub use crate::graph::record::{Record, Schema, Value};
     pub use crate::graph::{Graph, PropertyGraph};
     pub use crate::operators::OperatorBuilder;
+    pub use crate::serve::{ServeClient, ServeConfig, Server};
     pub use crate::session::Session;
     pub use crate::vcprog::{VCProg, VertexId};
 }

@@ -7,6 +7,10 @@
 //! unigps info --graph g.bin
 //! unigps ipc-server --transport shm --path /dev/shm/chan   (internal: VCProg runner)
 //! unigps engines
+//! unigps serve --socket /tmp/unigps.sock [--slots 2] [--queue 64] [--cache-mb 512]
+//! unigps submit --socket /tmp/unigps.sock --algo sssp --dataset lj --scale 1024 [--wait]
+//! unigps status --socket /tmp/unigps.sock [--job N]
+//! unigps shutdown --socket /tmp/unigps.sock
 //! ```
 //!
 //! Argument parsing is hand-rolled (`clap` is unavailable offline).
@@ -17,6 +21,7 @@ use std::process::ExitCode;
 use unigps::engine::EngineKind;
 use unigps::graph::io::Format;
 use unigps::ipc::Transport;
+use unigps::serve::{ServeClient, ServeConfig, Server};
 use unigps::session::Session;
 
 fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
@@ -43,8 +48,9 @@ fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: unigps <run|generate|convert|info|engines|ipc-server|version> [--flags]\n\
-         try: unigps run --algo pagerank --dataset lj --scale 1024 --engine pregel"
+        "usage: unigps <run|generate|convert|info|engines|ipc-server|serve|submit|status|shutdown|version> [--flags]\n\
+         try: unigps run --algo pagerank --dataset lj --scale 1024 --engine pregel\n\
+         or:  unigps serve --socket /tmp/unigps.sock    (then submit/status/shutdown)"
     );
     ExitCode::FAILURE
 }
@@ -62,6 +68,10 @@ fn main() -> ExitCode {
         "info" => cmd_info(&flags),
         "engines" => cmd_engines(),
         "ipc-server" => cmd_ipc_server(&flags),
+        "serve" => cmd_serve(&flags),
+        "submit" => cmd_submit(&flags),
+        "status" => cmd_status(&flags),
+        "shutdown" => cmd_shutdown(&flags),
         "version" | "--version" => {
             println!("unigps {}", unigps::VERSION);
             Ok(())
@@ -202,6 +212,119 @@ fn cmd_engines() -> Result<(), AnyErr> {
     println!("  serial    (NetworkX) single-thread reference");
     println!("  tensor    (—)        PJRT over AOT JAX/Pallas artifacts");
     println!("\ndatasets (Table II analogs): as lj ok uk");
+    Ok(())
+}
+
+fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let socket = get(flags, "socket").ok_or("--socket required")?;
+    let mut cfg = ServeConfig::new(socket);
+    if let Some(s) = get(flags, "slots") {
+        cfg.slots = s.parse::<usize>()?.max(1);
+    }
+    if let Some(s) = get(flags, "queue") {
+        cfg.queue_cap = s.parse()?;
+    }
+    if let Some(s) = get(flags, "cache-mb") {
+        cfg.cache_budget = s.parse::<usize>()? << 20;
+    }
+    if let Some(s) = get(flags, "workers") {
+        cfg.total_workers = s.parse::<usize>()?.max(1);
+    }
+    let session = match get(flags, "config") {
+        Some(p) => Session::from_config_file(Path::new(p))?,
+        None => Session::builder().build(),
+    };
+    eprintln!(
+        "serving on {} — {} slots × {} workers each, queue {}, cache budget {}",
+        cfg.socket().display(),
+        cfg.slots,
+        cfg.per_job_workers(),
+        cfg.queue_cap,
+        unigps::util::fmt_bytes(cfg.cache_budget as u64),
+    );
+    let server = Server::bind(session, cfg)?;
+    server.run()?;
+    eprintln!("server drained and stopped");
+    Ok(())
+}
+
+/// Synthesize `key = value` job-spec text from CLI flags (or read it from
+/// `--spec <file>` verbatim).
+fn spec_from_flags(flags: &BTreeMap<String, String>) -> Result<String, AnyErr> {
+    if let Some(path) = get(flags, "spec") {
+        return Ok(std::fs::read_to_string(path)?);
+    }
+    const SPEC_KEYS: [&str; 19] = [
+        "algo", "engine", "dataset", "scale", "kind", "vertices", "edges", "seed", "graph",
+        "workers", "partition", "max_iter", "combiner", "pipeline", "step_metrics", "iterations",
+        "root", "k", "delay_ms",
+    ];
+    let mut spec = String::new();
+    for key in SPEC_KEYS {
+        if let Some(v) = get(flags, key) {
+            spec.push_str(&format!("{key} = {v}\n"));
+        }
+    }
+    Ok(spec)
+}
+
+fn cmd_submit(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let socket = PathBuf::from(get(flags, "socket").ok_or("--socket required")?);
+    let spec = spec_from_flags(flags)?;
+    let mut client = ServeClient::connect(&socket)?;
+    let id = client.submit(&spec)?;
+    println!("job {id} submitted");
+    if get(flags, "wait").is_some() {
+        let result = client.wait(id, std::time::Duration::from_secs(3600))?;
+        eprintln!("job {id} done: {}", result.metrics.summary());
+        for (name, col) in &result.columns {
+            match col {
+                unigps::vcprog::Column::I64(v) => {
+                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
+                }
+                unigps::vcprog::Column::F64(v) => {
+                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let socket = PathBuf::from(get(flags, "socket").ok_or("--socket required")?);
+    let mut client = ServeClient::connect(&socket)?;
+    if let Some(job) = get(flags, "job") {
+        let st = client.status(job.parse()?)?;
+        match st.error {
+            Some(e) => println!("job {}: {} ({e})", st.id, st.state),
+            None => println!("job {}: {}", st.id, st.state),
+        }
+    } else {
+        let s = client.stats()?;
+        println!(
+            "jobs: {} submitted, {} queued, {} running, {} completed, {} failed, {} rejected",
+            s.jobs.submitted, s.jobs.queued, s.jobs.running, s.jobs.completed, s.jobs.failed,
+            s.jobs.rejected
+        );
+        println!(
+            "cache: {} loads, {} hits, {} misses, {} evictions, {} resident ({})",
+            s.cache.loads,
+            s.cache.hits,
+            s.cache.misses,
+            s.cache.evictions,
+            s.cache.resident,
+            unigps::util::fmt_bytes(s.cache.resident_bytes),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_shutdown(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let socket = PathBuf::from(get(flags, "socket").ok_or("--socket required")?);
+    let mut client = ServeClient::connect(&socket)?;
+    client.shutdown()?;
+    println!("shutdown requested (server drains admitted jobs first)");
     Ok(())
 }
 

@@ -1,0 +1,354 @@
+//! Shared graph-snapshot cache.
+//!
+//! One resident, immutable [`Graph`] per canonical dataset spec (plus
+//! partition strategy — the scheduler keys on both so future
+//! partition-resident layouts slot in without a key change), handed to
+//! jobs as `Arc<Graph>` clones. Loading is **single-flight**: when many
+//! jobs miss on one key concurrently, exactly one performs the load while
+//! the rest block on a condvar and are counted as hits once the snapshot
+//! is ready — so a burst of N identical jobs costs one load and N−1 hits.
+//! Ready snapshots are LRU-evicted once the resident total exceeds the
+//! byte budget (the most recent insert itself is never evicted, so a
+//! single over-budget graph still serves its jobs).
+
+use crate::error::Result;
+use crate::graph::Graph;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Cache observability counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Graph loads actually performed (single-flight: ≤ misses).
+    pub loads: u64,
+    /// Requests served from a resident snapshot (including waiters that
+    /// blocked on an in-flight load).
+    pub hits: u64,
+    /// Requests that initiated a load.
+    pub misses: u64,
+    /// Snapshots evicted under budget pressure.
+    pub evictions: u64,
+    /// Snapshots currently resident.
+    pub resident: u64,
+    /// Bytes currently resident.
+    pub resident_bytes: u64,
+}
+
+/// Estimated resident size of a graph snapshot: CSR/CSC topology plus the
+/// `f64` edge-property column (vertex props are zero-sized on [`Graph`]).
+pub fn graph_bytes(g: &Graph) -> usize {
+    g.topology().memory_bytes() + g.edge_props().len() * std::mem::size_of::<f64>()
+}
+
+enum Slot {
+    /// A loader is materializing this key; waiters block on the condvar.
+    Loading,
+    /// Resident snapshot.
+    Ready {
+        graph: Arc<Graph>,
+        bytes: usize,
+        last_used: u64,
+    },
+}
+
+struct Inner {
+    slots: HashMap<String, Slot>,
+    /// Logical clock for LRU ordering.
+    tick: u64,
+    total_bytes: usize,
+    loads: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// The shared snapshot cache (all methods take `&self`; safe to share via
+/// `Arc` across scheduler slots and connection handlers).
+pub struct SnapshotCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+    ready: Condvar,
+}
+
+impl SnapshotCache {
+    /// Create with a byte budget.
+    pub fn new(budget_bytes: usize) -> SnapshotCache {
+        SnapshotCache {
+            budget: budget_bytes,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                tick: 0,
+                total_bytes: 0,
+                loads: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        let resident = inner
+            .slots
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { .. }))
+            .count() as u64;
+        CacheStats {
+            loads: inner.loads,
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            resident,
+            resident_bytes: inner.total_bytes as u64,
+        }
+    }
+
+    /// Fetch the snapshot for `key`, loading it with `load` on a miss.
+    /// Concurrent callers on the same key perform exactly one load; a
+    /// failed load propagates its typed error to the initiating caller and
+    /// lets waiters retry (one of them becomes the next loader).
+    pub fn get_or_load(
+        &self,
+        key: &str,
+        load: impl FnOnce() -> Result<Graph>,
+    ) -> Result<Arc<Graph>> {
+        enum Probe {
+            Hit(Arc<Graph>),
+            Wait,
+            Miss,
+        }
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let probe = {
+                let state = &mut *inner;
+                state.tick += 1;
+                let tick = state.tick;
+                match state.slots.get_mut(key) {
+                    Some(Slot::Ready { graph, last_used, .. }) => {
+                        *last_used = tick;
+                        state.hits += 1;
+                        Probe::Hit(graph.clone())
+                    }
+                    Some(Slot::Loading) => Probe::Wait,
+                    None => Probe::Miss,
+                }
+            };
+            match probe {
+                Probe::Hit(graph) => return Ok(graph),
+                Probe::Wait => inner = self.ready.wait(inner).unwrap(),
+                Probe::Miss => break,
+            }
+        }
+        // Miss: claim the key, load outside the lock, publish under it.
+        // The claim guard releases the `Loading` slot on *any* exit that
+        // does not publish — error return or a panic unwinding out of the
+        // loader — so waiters are never parked on a dead claim.
+        struct ClaimGuard<'a> {
+            cache: &'a SnapshotCache,
+            key: &'a str,
+            armed: bool,
+        }
+        impl Drop for ClaimGuard<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                if let Ok(mut inner) = self.cache.inner.lock() {
+                    if matches!(inner.slots.get(self.key), Some(Slot::Loading)) {
+                        inner.slots.remove(self.key);
+                    }
+                }
+                self.cache.ready.notify_all();
+            }
+        }
+        inner.misses += 1;
+        inner.slots.insert(key.to_string(), Slot::Loading);
+        drop(inner);
+        let mut claim = ClaimGuard {
+            cache: self,
+            key,
+            armed: true,
+        };
+        let loaded = load();
+        let mut inner = self.inner.lock().unwrap();
+        match loaded {
+            Ok(g) => {
+                let bytes = graph_bytes(&g);
+                let graph = Arc::new(g);
+                inner.loads += 1;
+                inner.tick += 1;
+                let tick = inner.tick;
+                inner.total_bytes += bytes;
+                inner.slots.insert(
+                    key.to_string(),
+                    Slot::Ready {
+                        graph: graph.clone(),
+                        bytes,
+                        last_used: tick,
+                    },
+                );
+                self.evict_over_budget(&mut inner, key);
+                claim.armed = false;
+                self.ready.notify_all();
+                Ok(graph)
+            }
+            Err(e) => {
+                // Release the lock first; the claim guard re-locks to
+                // withdraw the claim and wake waiters (one retries).
+                drop(inner);
+                Err(e)
+            }
+        }
+    }
+
+    /// Evict least-recently-used Ready snapshots (never `keep`, never
+    /// in-flight loads) until the resident total fits the budget.
+    fn evict_over_budget(&self, inner: &mut Inner, keep: &str) {
+        while inner.total_bytes > self.budget {
+            let victim = inner
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready { last_used, .. } if k != keep => Some((*last_used, k.clone())),
+                    _ => None,
+                })
+                .min();
+            let Some((_, victim)) = victim else { break };
+            if let Some(Slot::Ready { bytes, .. }) = inner.slots.remove(&victim) {
+                inner.total_bytes -= bytes;
+                inner.evictions += 1;
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for SnapshotCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("SnapshotCache")
+            .field("budget", &self.budget)
+            .field("stats", &stats)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::UniGpsError;
+    use crate::graph::generate;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn small_graph(seed: u64) -> Graph {
+        generate::random_for_tests(64, 256, seed)
+    }
+
+    #[test]
+    fn hit_after_miss_shares_one_snapshot() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let a = cache.get_or_load("k", || Ok(small_graph(1))).unwrap();
+        let b = cache.get_or_load("k", || panic!("must not reload")).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same resident snapshot");
+        let s = cache.stats();
+        assert_eq!((s.loads, s.misses, s.hits, s.resident), (1, 1, 1, 1));
+        assert!(s.resident_bytes > 0);
+    }
+
+    #[test]
+    fn lru_eviction_under_budget() {
+        let g = small_graph(1);
+        let one = graph_bytes(&g);
+        // Budget fits two snapshots, not three.
+        let cache = SnapshotCache::new(2 * one + one / 2);
+        cache.get_or_load("a", || Ok(small_graph(1))).unwrap();
+        cache.get_or_load("b", || Ok(small_graph(2))).unwrap();
+        // Touch "a" so "b" is the LRU victim.
+        cache.get_or_load("a", || panic!("resident")).unwrap();
+        cache.get_or_load("c", || Ok(small_graph(3))).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident, 2);
+        // "b" was evicted; "a" survived.
+        cache.get_or_load("a", || panic!("a must still be resident")).unwrap();
+        let reloaded = AtomicU64::new(0);
+        cache
+            .get_or_load("b", || {
+                reloaded.fetch_add(1, Ordering::Relaxed);
+                Ok(small_graph(2))
+            })
+            .unwrap();
+        assert_eq!(reloaded.load(Ordering::Relaxed), 1, "b reloads after eviction");
+    }
+
+    #[test]
+    fn over_budget_single_snapshot_stays_resident() {
+        let cache = SnapshotCache::new(1); // absurdly small budget
+        cache.get_or_load("big", || Ok(small_graph(1))).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.resident, 1, "latest insert is never its own victim");
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn concurrent_misses_load_exactly_once() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let loads = AtomicU64::new(0);
+        let threads: u64 = 8;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    let g = cache
+                        .get_or_load("shared", || {
+                            loads.fetch_add(1, Ordering::Relaxed);
+                            // Widen the race window so waiters really block.
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(small_graph(7))
+                        })
+                        .unwrap();
+                    assert_eq!(g.num_vertices(), 64);
+                });
+            }
+        });
+        assert_eq!(loads.load(Ordering::Relaxed), 1, "single-flight");
+        let s = cache.stats();
+        assert_eq!(s.loads, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, threads - 1, "waiters count as hits");
+    }
+
+    #[test]
+    fn panicking_load_releases_the_claim() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = cache.get_or_load("k", || panic!("loader exploded"));
+        }));
+        assert!(unwound.is_err(), "loader panic propagates");
+        // The claim was withdrawn during unwinding: the key is retryable
+        // and no waiter can park on a dead Loading slot.
+        cache.get_or_load("k", || Ok(small_graph(1))).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.loads, s.misses, s.resident), (1, 2, 1));
+    }
+
+    #[test]
+    fn failed_load_releases_the_claim() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let err = cache
+            .get_or_load("k", || Err(UniGpsError::Config("no such dataset".into())))
+            .unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)));
+        // The key is retryable and the cache is not wedged.
+        cache.get_or_load("k", || Ok(small_graph(1))).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.loads, 1);
+        assert_eq!(s.misses, 2);
+    }
+}

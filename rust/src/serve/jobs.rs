@@ -1,0 +1,589 @@
+//! Job specs, the job state machine and the serving wire codecs.
+//!
+//! A job is described by the same `key = value` config text a
+//! [`Session`](crate::session::Session) is built from — the spec is layered
+//! over the server's session via [`Session::overlay_config`], so `engine`,
+//! `workers`, `partition`, `combiner`, `pipeline` and `max_iter` mean
+//! exactly what they mean everywhere else — plus job-only keys:
+//!
+//! | key | meaning | default |
+//! |-----|---------|---------|
+//! | `algo` | operator: `pagerank`, `sssp`, `cc`, `bfs`, `degrees`, `lpa`, `kcore`, `triangles` | `pagerank` |
+//! | `iterations` | PageRank / LPA rounds | 20 / 10 |
+//! | `root` | SSSP / BFS source vertex | 0 |
+//! | `k` | k-core threshold | 3 |
+//! | `dataset` + `scale` | Table II analog by key at `1/scale` | — |
+//! | `kind` + `vertices` + `edges` + `seed` | seeded synthetic generator | — |
+//! | `graph` | load from a file path (format by extension) | — |
+//! | `delay_ms` | synthetic service time before execution (test/bench aid, ≤ 60 s) | 0 |
+//!
+//! Exactly one graph source (`dataset`, `graph`, or synthetic) must be
+//! given. Statuses and result tables cross the wire with the
+//! length-checked [`crate::ipc::protocol`] primitives.
+//!
+//! [`Session::overlay_config`]: crate::session::Session::overlay_config
+
+use crate::config::Config;
+use crate::engine::{EngineKind, RunResult};
+use crate::error::{Result, UniGpsError};
+use crate::graph::datasets::DatasetSpec;
+use crate::graph::Graph;
+use crate::ipc::protocol::{get_bytes, get_u32, get_u64, put_bytes, put_u32, put_u64};
+use crate::operators::Operator;
+use crate::session::Session;
+use crate::vcprog::Column;
+use std::path::PathBuf;
+
+/// Server-assigned job identifier (monotone per server instance).
+pub type JobId = u64;
+
+/// Largest synthetic vertex count a job spec may request (2^27 ≈ 134M —
+/// well past every bench scale; a forged spec must not be able to request
+/// a petabyte CSR and abort the server on allocation failure).
+pub const MAX_SYNTH_VERTICES: usize = 1 << 27;
+
+/// Largest synthetic edge count a job spec may request (2^30 ≈ 1B).
+pub const MAX_SYNTH_EDGES: usize = 1 << 30;
+
+/// Largest `delay_ms` a job spec may request (60 s) — the field exists for
+/// tests/benches, and an uncapped value would let one hostile spec pin a
+/// scheduler slot indefinitely.
+pub const MAX_DELAY_MS: u64 = 60_000;
+
+/// Largest on-disk graph file a `graph = <path>` spec may load (8 GiB) —
+/// the in-memory graph is roughly proportional to the file, so this is
+/// the file-source analog of the synthetic-generator caps.
+pub const MAX_GRAPH_FILE_BYTES: u64 = 8 << 30;
+
+/// Where a job's input graph comes from. The [`DatasetRef::canonical`]
+/// string is the snapshot-cache key prefix, so two specs naming the same
+/// data deterministically share one resident snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DatasetRef {
+    /// A Table II analog by key (`as`/`lj`/`ok`/`uk`) at `1/scale`.
+    Named {
+        /// Dataset key.
+        key: String,
+        /// Scale divisor.
+        scale: u64,
+    },
+    /// A seeded synthetic graph (deterministic for a given tuple).
+    Synthetic {
+        /// Generator kind (`rmat`, `lognormal`, `er`, `grid`, `star`).
+        kind: String,
+        /// Vertex count.
+        vertices: usize,
+        /// Edge count.
+        edges: usize,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// A graph file on disk (assumed immutable while cached).
+    File(PathBuf),
+}
+
+impl DatasetRef {
+    /// Canonical cache-key string.
+    pub fn canonical(&self) -> String {
+        match self {
+            DatasetRef::Named { key, scale } => format!("dataset:{key}/{scale}"),
+            DatasetRef::Synthetic {
+                kind,
+                vertices,
+                edges,
+                seed,
+            } => format!("synthetic:{kind}/v{vertices}/e{edges}/s{seed}"),
+            DatasetRef::File(p) => format!("file:{}", p.display()),
+        }
+    }
+
+    /// Materialize the graph (the cost the snapshot cache amortizes).
+    pub fn load(&self, session: &Session) -> Result<Graph> {
+        match self {
+            DatasetRef::Named { key, scale } => DatasetSpec::by_key(key)
+                .map(|d| d.generate(*scale))
+                .ok_or_else(|| {
+                    UniGpsError::Config(format!("unknown dataset '{key}' (try as/lj/ok/uk)"))
+                }),
+            DatasetRef::Synthetic {
+                kind,
+                vertices,
+                edges,
+                seed,
+            } => Ok(session.generate(kind, *vertices, *edges, *seed)),
+            DatasetRef::File(p) => {
+                // File sources must honor the same allocation caps as the
+                // synthetic generators — a spec must not be able to point
+                // the resident server at an arbitrarily large file.
+                let len = std::fs::metadata(p)?.len();
+                if len > MAX_GRAPH_FILE_BYTES {
+                    return Err(UniGpsError::Config(format!(
+                        "graph file {} is {len} bytes (limit {MAX_GRAPH_FILE_BYTES})",
+                        p.display()
+                    )));
+                }
+                session.load(p)
+            }
+        }
+    }
+}
+
+/// A parsed, validated job: resolved session (engine + run options), the
+/// native operator to run, and the input graph reference.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Engine + run options resolved from the spec over the server session.
+    pub session: Session,
+    /// The native operator this job runs.
+    pub op: Operator,
+    /// Input graph reference.
+    pub dataset: DatasetRef,
+    /// Synthetic pre-execution service time in milliseconds (test/bench
+    /// aid; 0 in normal operation).
+    pub delay_ms: u64,
+}
+
+impl JobSpec {
+    /// Parse `key = value` spec text, layering it over `base` (the server's
+    /// session). All failures are typed [`UniGpsError::Config`] values.
+    pub fn parse(text: &str, base: &Session) -> Result<JobSpec> {
+        let cfg = Config::parse(text)?;
+        let session = base.overlay_config(&cfg)?;
+        let op = Self::parse_operator(&cfg)?;
+        let dataset = Self::parse_dataset(&cfg)?;
+        let delay_ms = cfg.get_usize("delay_ms", 0)? as u64;
+        if delay_ms > MAX_DELAY_MS {
+            return Err(UniGpsError::Config(format!(
+                "delay_ms must be <= {MAX_DELAY_MS}, got {delay_ms}"
+            )));
+        }
+        Ok(JobSpec {
+            session,
+            op,
+            dataset,
+            delay_ms,
+        })
+    }
+
+    /// The engine this job runs on.
+    pub fn engine(&self) -> EngineKind {
+        self.session.default_engine()
+    }
+
+    fn parse_operator(cfg: &Config) -> Result<Operator> {
+        let root = cfg.get_usize("root", 0)? as u32;
+        Ok(match cfg.get_or("algo", "pagerank").as_str() {
+            "pagerank" | "pr" => Operator::PageRank {
+                iterations: cfg.get_usize("iterations", 20)? as u32,
+            },
+            "sssp" => Operator::Sssp { root },
+            "cc" => Operator::ConnectedComponents,
+            "bfs" => Operator::Bfs { root },
+            "degrees" => Operator::Degrees,
+            "lpa" => Operator::Lpa {
+                iterations: cfg.get_usize("iterations", 10)? as u32,
+            },
+            "kcore" => Operator::KCore {
+                k: cfg.get_usize("k", 3)? as i64,
+            },
+            "triangles" => Operator::Triangles,
+            other => {
+                return Err(UniGpsError::Config(format!(
+                    "unknown algo '{other}' (pagerank|sssp|cc|bfs|degrees|lpa|kcore|triangles)"
+                )))
+            }
+        })
+    }
+
+    fn parse_dataset(cfg: &Config) -> Result<DatasetRef> {
+        if let Some(key) = cfg.get("dataset") {
+            let scale = cfg.get_usize("scale", 64)? as u64;
+            if scale == 0 {
+                return Err(UniGpsError::Config("scale must be >= 1".into()));
+            }
+            Ok(DatasetRef::Named {
+                key: key.to_string(),
+                scale,
+            })
+        } else if let Some(path) = cfg.get("graph") {
+            Ok(DatasetRef::File(PathBuf::from(path)))
+        } else if cfg.get("vertices").is_some() || cfg.get("kind").is_some() {
+            // The framing layer refuses attacker-controlled allocations
+            // (`MAX_FRAME_LEN`); the spec layer must not reintroduce them
+            // through the generator parameters.
+            let vertices = cfg.get_usize("vertices", 16384)?;
+            let edges = cfg.get_usize("edges", 131072)?;
+            if vertices == 0 || vertices > MAX_SYNTH_VERTICES {
+                return Err(UniGpsError::Config(format!(
+                    "vertices must be in 1..={MAX_SYNTH_VERTICES}, got {vertices}"
+                )));
+            }
+            if edges > MAX_SYNTH_EDGES {
+                return Err(UniGpsError::Config(format!(
+                    "edges must be <= {MAX_SYNTH_EDGES}, got {edges}"
+                )));
+            }
+            Ok(DatasetRef::Synthetic {
+                kind: cfg.get_or("kind", "rmat"),
+                vertices,
+                edges,
+                seed: cfg.get_usize("seed", 42)? as u64,
+            })
+        } else {
+            Err(UniGpsError::Config(
+                "job spec needs a graph source: dataset = <key>, graph = <path>, \
+                 or kind/vertices/edges/seed"
+                    .into(),
+            ))
+        }
+    }
+}
+
+/// Job state machine: `Queued → Running → Done | Failed`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted, waiting in the FIFO queue.
+    Queued,
+    /// Executing in a scheduler slot.
+    Running,
+    /// Finished; the result table is available.
+    Done,
+    /// Finished with a typed error (see [`JobStatus::error`]).
+    Failed,
+}
+
+impl JobState {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// True once the job can make no further progress.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+
+    fn code(self) -> u32 {
+        match self {
+            JobState::Queued => 0,
+            JobState::Running => 1,
+            JobState::Done => 2,
+            JobState::Failed => 3,
+        }
+    }
+
+    fn from_code(c: u32) -> Result<JobState> {
+        Ok(match c {
+            0 => JobState::Queued,
+            1 => JobState::Running,
+            2 => JobState::Done,
+            3 => JobState::Failed,
+            other => return Err(UniGpsError::Ipc(format!("bad job-state code {other}"))),
+        })
+    }
+}
+
+impl std::fmt::Display for JobState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A job's externally visible status.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobStatus {
+    /// Job id.
+    pub id: JobId,
+    /// Current state.
+    pub state: JobState,
+    /// Failure message when `state == Failed`.
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    /// Encode for the wire.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u64(&mut out, self.id);
+        put_u32(&mut out, self.state.code());
+        put_bytes(&mut out, self.error.as_deref().unwrap_or("").as_bytes());
+        out
+    }
+
+    /// Decode from the wire.
+    pub fn decode(buf: &[u8]) -> Result<JobStatus> {
+        let mut pos = 0;
+        let id = get_u64(buf, &mut pos)?;
+        let state = JobState::from_code(get_u32(buf, &mut pos)?)?;
+        let err = String::from_utf8_lossy(get_bytes(buf, &mut pos)?).into_owned();
+        Ok(JobStatus {
+            id,
+            state,
+            error: if err.is_empty() { None } else { Some(err) },
+        })
+    }
+}
+
+const COL_I64: u32 = 0;
+const COL_F64: u32 = 1;
+
+/// Encode a result table + the cross-process subset of its metrics.
+/// Values travel as raw little-endian 64-bit words, so a decoded column is
+/// bit-identical to the engine's output (including float payload bits).
+pub fn encode_result(r: &RunResult) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, r.metrics.supersteps);
+    put_u32(&mut out, r.metrics.workers as u32);
+    put_u32(&mut out, u32::from(r.metrics.converged));
+    put_u64(&mut out, r.metrics.total_messages);
+    put_u64(&mut out, r.metrics.total_message_bytes);
+    put_u64(&mut out, r.metrics.udf_calls);
+    put_u64(&mut out, r.metrics.elapsed.as_micros() as u64);
+    put_u32(&mut out, r.columns.len() as u32);
+    for (name, col) in &r.columns {
+        put_bytes(&mut out, name.as_bytes());
+        match col {
+            Column::I64(v) => {
+                put_u32(&mut out, COL_I64);
+                put_u64(&mut out, v.len() as u64);
+                for x in v {
+                    put_u64(&mut out, *x as u64);
+                }
+            }
+            Column::F64(v) => {
+                put_u32(&mut out, COL_F64);
+                put_u64(&mut out, v.len() as u64);
+                for x in v {
+                    put_u64(&mut out, x.to_bits());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Decode a result table. Per-step metrics and worker busy times do not
+/// cross the wire; the scalar metrics (supersteps, messages, convergence,
+/// elapsed) do.
+pub fn decode_result(buf: &[u8]) -> Result<RunResult> {
+    let mut pos = 0;
+    // Field expressions evaluate in literal order, which matches the
+    // encode order above.
+    let metrics = crate::distributed::metrics::RunMetrics {
+        supersteps: get_u32(buf, &mut pos)?,
+        workers: get_u32(buf, &mut pos)? as usize,
+        converged: get_u32(buf, &mut pos)? != 0,
+        total_messages: get_u64(buf, &mut pos)?,
+        total_message_bytes: get_u64(buf, &mut pos)?,
+        udf_calls: get_u64(buf, &mut pos)?,
+        elapsed: std::time::Duration::from_micros(get_u64(buf, &mut pos)?),
+        ..Default::default()
+    };
+    let ncols = get_u32(buf, &mut pos)? as usize;
+    let mut columns = Vec::with_capacity(ncols);
+    for _ in 0..ncols {
+        let name = String::from_utf8_lossy(get_bytes(buf, &mut pos)?).into_owned();
+        let tag = get_u32(buf, &mut pos)?;
+        let len = get_u64(buf, &mut pos)? as usize;
+        // Each value is 8 wire bytes; an impossible length is a protocol
+        // violation, not an allocation request.
+        if buf.len().saturating_sub(pos) < len.saturating_mul(8) {
+            return Err(UniGpsError::Ipc(format!(
+                "result column '{name}' declares {len} values but the frame is too short"
+            )));
+        }
+        let col = match tag {
+            COL_I64 => {
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(get_u64(buf, &mut pos)? as i64);
+                }
+                Column::I64(v)
+            }
+            COL_F64 => {
+                let mut v = Vec::with_capacity(len);
+                for _ in 0..len {
+                    v.push(f64::from_bits(get_u64(buf, &mut pos)?));
+                }
+                Column::F64(v)
+            }
+            other => return Err(UniGpsError::Ipc(format!("bad column tag {other}"))),
+        };
+        columns.push((name, col));
+    }
+    Ok(RunResult { columns, metrics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::metrics::RunMetrics;
+    use crate::graph::partition::PartitionStrategy;
+
+    fn base() -> Session {
+        Session::builder().workers(3).build()
+    }
+
+    #[test]
+    fn spec_parses_algo_engine_and_dataset() {
+        let spec = JobSpec::parse(
+            "algo = sssp\nroot = 5\nengine = gemini\ndataset = lj\nscale = 2048\npartition = range",
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(spec.engine(), EngineKind::PushPull);
+        assert_eq!(spec.op, Operator::Sssp { root: 5 });
+        assert_eq!(
+            spec.dataset,
+            DatasetRef::Named {
+                key: "lj".into(),
+                scale: 2048
+            }
+        );
+        assert_eq!(spec.session.options().partition, PartitionStrategy::Range);
+        assert_eq!(spec.session.options().workers, 3, "base session default kept");
+        assert_eq!(spec.delay_ms, 0);
+    }
+
+    #[test]
+    fn spec_synthetic_and_file_sources() {
+        let spec = JobSpec::parse("vertices = 256\nedges = 1024\nseed = 9", &base()).unwrap();
+        assert_eq!(
+            spec.dataset,
+            DatasetRef::Synthetic {
+                kind: "rmat".into(),
+                vertices: 256,
+                edges: 1024,
+                seed: 9
+            }
+        );
+        let spec = JobSpec::parse("graph = /data/g.bin\nalgo = cc", &base()).unwrap();
+        assert_eq!(spec.dataset, DatasetRef::File(PathBuf::from("/data/g.bin")));
+        assert_eq!(spec.op, Operator::ConnectedComponents);
+    }
+
+    #[test]
+    fn spec_rejections_are_typed() {
+        for bad in [
+            "algo = dijkstra\ndataset = lj",       // unknown algo
+            "algo = pagerank",                     // no graph source
+            "dataset = lj\nengine = fortran",      // unknown engine
+            "dataset = lj\npartition = voronoi",   // unknown partition
+            "dataset = lj\nworkers = many",        // type error
+            "not a key value line",                // malformed config
+            "dataset = lj\nscale = 0",             // divide-by-zero scale
+            "vertices = 0",                        // degenerate generator
+            "vertices = 10000000000000000",        // allocation-bomb vertices
+            "vertices = 64\nedges = 10000000000000000", // allocation-bomb edges
+            "vertices = 64\ndelay_ms = 86400000",  // slot-pinning delay
+        ] {
+            let err = JobSpec::parse(bad, &base()).unwrap_err();
+            assert!(matches!(err, UniGpsError::Config(_)), "{bad:?} -> {err:?}");
+        }
+    }
+
+    #[test]
+    fn canonical_keys_distinguish_sources() {
+        let a = DatasetRef::Named { key: "lj".into(), scale: 64 };
+        let b = DatasetRef::Named { key: "lj".into(), scale: 128 };
+        let c = DatasetRef::Synthetic { kind: "rmat".into(), vertices: 64, edges: 128, seed: 1 };
+        assert_ne!(a.canonical(), b.canonical());
+        assert_ne!(a.canonical(), c.canonical());
+        assert_eq!(a.canonical(), "dataset:lj/64");
+    }
+
+    #[test]
+    fn status_roundtrip() {
+        for status in [
+            JobStatus { id: 7, state: JobState::Queued, error: None },
+            JobStatus { id: 8, state: JobState::Running, error: None },
+            JobStatus { id: u64::MAX, state: JobState::Done, error: None },
+            JobStatus {
+                id: 0,
+                state: JobState::Failed,
+                error: Some("engine error: boom".into()),
+            },
+        ] {
+            assert_eq!(JobStatus::decode(&status.encode()).unwrap(), status);
+        }
+        assert!(JobStatus::decode(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn state_machine_terminality() {
+        assert!(!JobState::Queued.is_terminal());
+        assert!(!JobState::Running.is_terminal());
+        assert!(JobState::Done.is_terminal());
+        assert!(JobState::Failed.is_terminal());
+        assert_eq!(JobState::Running.to_string(), "running");
+    }
+
+    #[test]
+    fn result_roundtrip_is_bit_identical() {
+        let r = RunResult {
+            columns: vec![
+                ("rank".into(), Column::F64(vec![0.1, -0.0, f64::NAN, 3e300])),
+                ("component".into(), Column::I64(vec![i64::MIN, -1, 0, i64::MAX])),
+            ],
+            metrics: RunMetrics {
+                supersteps: 12,
+                total_messages: 3456,
+                total_message_bytes: 27648,
+                elapsed: std::time::Duration::from_micros(98765),
+                converged: true,
+                steps: vec![],
+                workers: 4,
+                udf_calls: 999,
+                worker_busy: vec![],
+            },
+        };
+        let back = decode_result(&encode_result(&r)).unwrap();
+        assert_eq!(back.columns.len(), 2);
+        let (name, col) = &back.columns[0];
+        assert_eq!(name, "rank");
+        let f = col.as_f64().unwrap();
+        let orig = r.columns[0].1.as_f64().unwrap();
+        for (a, b) in f.iter().zip(orig) {
+            assert_eq!(a.to_bits(), b.to_bits(), "float bits preserved (incl. NaN/-0.0)");
+        }
+        assert_eq!(back.columns[1].1.as_i64().unwrap(), &[i64::MIN, -1, 0, i64::MAX]);
+        assert_eq!(back.metrics.supersteps, 12);
+        assert_eq!(back.metrics.total_messages, 3456);
+        assert_eq!(back.metrics.workers, 4);
+        assert!(back.metrics.converged);
+        assert_eq!(back.metrics.elapsed.as_micros(), 98765);
+    }
+
+    #[test]
+    fn result_decode_rejects_corrupt_frames() {
+        let r = RunResult {
+            columns: vec![("x".into(), Column::I64(vec![1, 2, 3]))],
+            metrics: RunMetrics::default(),
+        };
+        let good = encode_result(&r);
+        // Truncations at every prefix must fail typed, never panic.
+        for cut in 0..good.len() {
+            assert!(decode_result(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // A forged huge column length is a protocol violation, not an
+        // allocation request.
+        let mut forged = Vec::new();
+        for _ in 0..3 {
+            put_u32(&mut forged, 0);
+        }
+        for _ in 0..4 {
+            put_u64(&mut forged, 0);
+        }
+        put_u32(&mut forged, 1); // one column
+        put_bytes(&mut forged, b"rank");
+        put_u32(&mut forged, COL_F64);
+        put_u64(&mut forged, u64::MAX); // absurd length
+        let err = decode_result(&forged).unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)));
+    }
+}

@@ -1,0 +1,174 @@
+//! `unigps serve` — the resident graph-analytics job service.
+//!
+//! The paper's architecture (Fig 3) is a *session* object in front of a
+//! pool of backend engines: analysts describe jobs (graph + program +
+//! `engine=` parameter) and never touch distributed internals. The CLI
+//! reproduced that API shape but not its economics — every `unigps run`
+//! re-parsed flags, re-generated/loaded the graph, ran exactly one program
+//! and exited, so a pipeline of short jobs paid the dominant load/partition
+//! cost per job (the end-to-end-time observation of the Waterloo systems
+//! comparison, arXiv 1806.08082) and shared nothing (the one-resident-graph
+//! pipeline model GraphX argues for, arXiv 1402.2394).
+//!
+//! This module keeps the session resident and serves jobs over a
+//! Unix-domain socket:
+//!
+//! * [`server`] — the accept loop. Reuses the length-prefixed framing of
+//!   [`crate::ipc::socket_rpc`] (hardened: frames over
+//!   [`crate::ipc::socket_rpc::MAX_FRAME_LEN`] are rejected before
+//!   allocation) and [`crate::ipc::protocol`]-style message encodings for
+//!   submit / status / result / stats / shutdown. One handler thread per
+//!   client connection; [`server::ServeClient`] is the matching client.
+//! * [`jobs`] — the job spec (`key = value` text parsed with the same
+//!   config plumbing as [`crate::session::Session`], layered over the
+//!   server session via [`crate::session::Session::overlay_config`]), the
+//!   queued → running → done/failed state machine, and the wire codecs for
+//!   statuses and result tables. Errors propagate as typed
+//!   [`crate::error::UniGpsError`] values end to end.
+//! * [`cache`] — the shared graph-snapshot cache: `Arc<Graph>` keyed by
+//!   canonical dataset spec + partition strategy, single-flight loading
+//!   (concurrent misses on one key perform exactly one load), LRU eviction
+//!   under a byte budget, hit/miss/eviction counters. This is the paper's
+//!   "one UniGraph, many programs" sharing made operational.
+//! * [`scheduler`] — bounded-concurrency execution: a FIFO admission queue
+//!   with backpressure (queue full ⇒ typed [`UniGpsError::Serve`]
+//!   rejection, never unbounded buffering) feeding a fixed pool of job
+//!   slots. The machine's cores are *split* across slots — each job runs
+//!   [`crate::engine`] with `workers = total_workers / slots` — instead of
+//!   letting N concurrent jobs each spawn `total_workers` threads and
+//!   oversubscribe the box.
+//!
+//! [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+//!
+//! ```no_run
+//! use unigps::serve::{ServeClient, ServeConfig, Server};
+//! use unigps::session::Session;
+//! use std::path::Path;
+//!
+//! // Server (normally `unigps serve --socket /tmp/unigps.sock`):
+//! let cfg = ServeConfig::new("/tmp/unigps.sock");
+//! let server = Server::bind(Session::builder().build(), cfg).unwrap();
+//! std::thread::spawn(move || server.run().unwrap());
+//!
+//! // Client (normally `unigps submit ...`):
+//! let mut client = ServeClient::connect(Path::new("/tmp/unigps.sock")).unwrap();
+//! let id = client.submit("algo = pagerank\ndataset = lj\nscale = 1024").unwrap();
+//! let result = client.wait(id, std::time::Duration::from_secs(60)).unwrap();
+//! println!("{}", result.metrics.summary());
+//! ```
+
+pub mod cache;
+pub mod jobs;
+pub mod scheduler;
+pub mod server;
+
+pub use cache::{CacheStats, SnapshotCache};
+pub use jobs::{JobId, JobSpec, JobState, JobStatus};
+pub use scheduler::{SchedStats, Scheduler};
+pub use server::{ServeClient, ServeStats, Server};
+
+use std::path::{Path, PathBuf};
+
+/// Serving-protocol method indices, extending
+/// [`crate::ipc::protocol::method`] (indices 0–8 belong to the VCProg
+/// isolation protocol; serving methods start at 16).
+pub mod method {
+    /// Submit a job spec (`key = value` text); response is the `u64` job id.
+    pub const SUBMIT: u32 = 16;
+    /// Query a job's status by id; response is an encoded
+    /// [`super::JobStatus`].
+    pub const STATUS: u32 = 17;
+    /// Fetch a finished job's result table by id.
+    pub const RESULT: u32 = 18;
+    /// Fetch server-wide cache + scheduler statistics.
+    pub const STATS: u32 = 19;
+    /// Orderly server shutdown (drains queued and running jobs first).
+    pub use crate::ipc::protocol::method::SHUTDOWN;
+}
+
+/// Configuration of a serving instance.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Unix-domain socket path the server listens on.
+    pub socket: PathBuf,
+    /// Maximum jobs executing concurrently (scheduler slots).
+    pub slots: usize,
+    /// Admission-queue capacity; submits beyond it are rejected with a
+    /// typed error (backpressure, not buffering).
+    pub queue_cap: usize,
+    /// Snapshot-cache memory budget in bytes (LRU-evicted above this).
+    pub cache_budget: usize,
+    /// Total worker threads to split across the slots. Each job runs with
+    /// `max(1, total_workers / slots)` workers (a spec asking for fewer
+    /// keeps its smaller count).
+    pub total_workers: usize,
+}
+
+impl ServeConfig {
+    /// Defaults: 2 slots over all available cores, a 64-job queue and a
+    /// 512 MiB snapshot budget.
+    pub fn new(socket: impl Into<PathBuf>) -> ServeConfig {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        ServeConfig {
+            socket: socket.into(),
+            slots: 2,
+            queue_cap: 64,
+            cache_budget: 512 << 20,
+            total_workers: cores,
+        }
+    }
+
+    /// Worker threads each job slot runs with (cores split across slots,
+    /// never oversubscribed).
+    pub fn per_job_workers(&self) -> usize {
+        (self.total_workers / self.slots.max(1)).max(1)
+    }
+
+    /// The socket path.
+    pub fn socket(&self) -> &Path {
+        &self.socket
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_job_workers_splits_cores() {
+        let mut cfg = ServeConfig::new("/tmp/x.sock");
+        cfg.total_workers = 8;
+        cfg.slots = 2;
+        assert_eq!(cfg.per_job_workers(), 4);
+        cfg.slots = 3;
+        assert_eq!(cfg.per_job_workers(), 2);
+        // More slots than cores still grants every job one worker.
+        cfg.slots = 16;
+        assert_eq!(cfg.per_job_workers(), 1);
+        // Degenerate slot counts never divide by zero.
+        cfg.slots = 0;
+        assert_eq!(cfg.per_job_workers(), 8);
+    }
+
+    #[test]
+    fn method_indices_do_not_collide_with_vcprog_protocol() {
+        use crate::ipc::protocol::method as vc;
+        for m in [method::SUBMIT, method::STATUS, method::RESULT, method::STATS] {
+            for v in [
+                vc::INIT_PROGRAM,
+                vc::EMPTY_MESSAGE,
+                vc::INIT_VERTEX,
+                vc::MERGE,
+                vc::COMPUTE,
+                vc::EMIT,
+                vc::PING,
+                vc::SHUTDOWN,
+                vc::EMIT_BATCH,
+            ] {
+                assert_ne!(m, v);
+            }
+        }
+    }
+}

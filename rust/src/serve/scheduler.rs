@@ -1,0 +1,482 @@
+//! Bounded-concurrency job scheduler with FIFO admission and backpressure.
+//!
+//! Submits are parsed ([`JobSpec::parse`]) before admission, so malformed
+//! specs fail fast with typed [`UniGpsError::Config`] errors and never
+//! occupy queue space. Admitted jobs enter a FIFO queue of bounded
+//! capacity; when it is full, [`Scheduler::submit`] returns a typed
+//! [`UniGpsError::Serve`] rejection — backpressure the client sees,
+//! instead of unbounded server-side buffering. A fixed pool of runner
+//! threads ("slots") drains the queue; each job executes with
+//! `min(requested, total_workers / slots)` engine workers so concurrent
+//! jobs split the machine's cores instead of oversubscribing them.
+//! Shutdown is graceful: already-admitted jobs finish, then the runners
+//! exit.
+//!
+//! [`UniGpsError::Config`]: crate::error::UniGpsError::Config
+//! [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+
+use crate::engine::RunResult;
+use crate::error::{Result, UniGpsError};
+use crate::operators::run_operator;
+use crate::serve::cache::SnapshotCache;
+use crate::serve::jobs::{JobId, JobSpec, JobState, JobStatus};
+use crate::serve::ServeConfig;
+use crate::session::Session;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Scheduler observability counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Jobs admitted to the queue.
+    pub submitted: u64,
+    /// Submits rejected by backpressure (queue full or shutting down).
+    pub rejected: u64,
+    /// Jobs finished successfully.
+    pub completed: u64,
+    /// Jobs finished with an error.
+    pub failed: u64,
+    /// Jobs currently waiting in the queue.
+    pub queued: usize,
+    /// Jobs currently executing.
+    pub running: usize,
+}
+
+/// Finished jobs (Done or Failed) retained for status/result queries;
+/// older ones are evicted in completion order so a long-lived server's
+/// job table — which holds full result columns — stays bounded.
+pub const MAX_FINISHED_JOBS: usize = 1024;
+
+struct JobRecord {
+    spec: JobSpec,
+    state: JobState,
+    error: Option<String>,
+    result: Option<Arc<RunResult>>,
+}
+
+struct Inner {
+    queue: VecDeque<JobId>,
+    jobs: HashMap<JobId, JobRecord>,
+    /// Terminal jobs in completion order (the eviction queue).
+    finished: VecDeque<JobId>,
+    next_id: JobId,
+    submitted: u64,
+    rejected: u64,
+    completed: u64,
+    failed: u64,
+    running: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Signals runners that work (or shutdown) is available.
+    work: Condvar,
+    cache: Arc<SnapshotCache>,
+    /// The server session job specs are layered over.
+    base: Session,
+    queue_cap: usize,
+    /// Per-slot engine worker budget (cores split across slots).
+    job_workers: usize,
+}
+
+/// The job scheduler. Create with [`Scheduler::start`]; share via `Arc`.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    runners: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Scheduler {
+    /// Start `cfg.slots` runner threads over `cache`. (A zero-slot
+    /// scheduler admits but never executes — useful for deterministic
+    /// backpressure tests.)
+    pub fn start(base: Session, cache: Arc<SnapshotCache>, cfg: &ServeConfig) -> Scheduler {
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                jobs: HashMap::new(),
+                finished: VecDeque::new(),
+                next_id: 1,
+                submitted: 0,
+                rejected: 0,
+                completed: 0,
+                failed: 0,
+                running: 0,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            cache,
+            base,
+            queue_cap: cfg.queue_cap.max(1),
+            job_workers: cfg.per_job_workers(),
+        });
+        let runners = (0..cfg.slots)
+            .map(|slot| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("unigps-slot-{slot}"))
+                    .spawn(move || runner_loop(&shared))
+                    .expect("spawn scheduler slot")
+            })
+            .collect();
+        Scheduler {
+            shared,
+            runners: Mutex::new(runners),
+        }
+    }
+
+    /// Parse and admit a job. Typed failures: [`UniGpsError::Config`] for
+    /// bad specs, [`UniGpsError::Serve`] when the queue is full or the
+    /// scheduler is shutting down.
+    ///
+    /// [`UniGpsError::Config`]: crate::error::UniGpsError::Config
+    /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+    pub fn submit(&self, spec_text: &str) -> Result<JobId> {
+        let spec = JobSpec::parse(spec_text, &self.shared.base)?;
+        let mut inner = self.shared.inner.lock().unwrap();
+        if inner.shutdown {
+            inner.rejected += 1;
+            return Err(UniGpsError::serve("scheduler is shutting down"));
+        }
+        if inner.queue.len() >= self.shared.queue_cap {
+            inner.rejected += 1;
+            return Err(UniGpsError::serve(format!(
+                "queue full ({} jobs queued, capacity {}); retry later",
+                inner.queue.len(),
+                self.shared.queue_cap
+            )));
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.jobs.insert(
+            id,
+            JobRecord {
+                spec,
+                state: JobState::Queued,
+                error: None,
+                result: None,
+            },
+        );
+        inner.queue.push_back(id);
+        inner.submitted += 1;
+        drop(inner);
+        self.shared.work.notify_one();
+        Ok(id)
+    }
+
+    /// A job's status, or `None` for an unknown id (never assigned, or a
+    /// finished job already evicted past [`MAX_FINISHED_JOBS`]).
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        let inner = self.shared.inner.lock().unwrap();
+        inner.jobs.get(&id).map(|rec| JobStatus {
+            id,
+            state: rec.state,
+            error: rec.error.clone(),
+        })
+    }
+
+    /// A finished job's result (shared, not deep-copied — the table can be
+    /// O(|V|) and this runs under the scheduler lock). Typed
+    /// [`UniGpsError::Serve`] when the id is unknown (including evicted
+    /// past [`MAX_FINISHED_JOBS`]) or the job is not `Done` (`Failed`
+    /// reports the job's own error).
+    ///
+    /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+    pub fn result(&self, id: JobId) -> Result<Arc<RunResult>> {
+        let inner = self.shared.inner.lock().unwrap();
+        let rec = inner
+            .jobs
+            .get(&id)
+            .ok_or_else(|| UniGpsError::serve(format!("unknown job {id}")))?;
+        match rec.state {
+            JobState::Done => Ok(rec.result.clone().expect("done job has a result")),
+            JobState::Failed => Err(UniGpsError::serve(format!(
+                "job {id} failed: {}",
+                rec.error.as_deref().unwrap_or("unknown error")
+            ))),
+            state => Err(UniGpsError::serve(format!("job {id} is {state}, not done"))),
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> SchedStats {
+        let inner = self.shared.inner.lock().unwrap();
+        SchedStats {
+            submitted: inner.submitted,
+            rejected: inner.rejected,
+            completed: inner.completed,
+            failed: inner.failed,
+            queued: inner.queue.len(),
+            running: inner.running,
+        }
+    }
+
+    /// Graceful shutdown: refuse new submits, drain queued and running
+    /// jobs, join the runner threads. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            inner.shutdown = true;
+        }
+        self.shared.work.notify_all();
+        let handles: Vec<_> = self.runners.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for Scheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Scheduler").field("stats", &self.stats()).finish()
+    }
+}
+
+/// One scheduler slot: pop → run → record, until shutdown with an empty
+/// queue.
+fn runner_loop(shared: &Shared) {
+    loop {
+        let id = {
+            let mut inner = shared.inner.lock().unwrap();
+            loop {
+                if let Some(id) = inner.queue.pop_front() {
+                    inner.running += 1;
+                    break id;
+                }
+                if inner.shutdown {
+                    return;
+                }
+                inner = shared.work.wait(inner).unwrap();
+            }
+        };
+        let spec = {
+            let mut inner = shared.inner.lock().unwrap();
+            let rec = inner.jobs.get_mut(&id).expect("queued job has a record");
+            rec.state = JobState::Running;
+            rec.spec.clone()
+        };
+        // A panicking job (malformed generator parameters, engine bug) must
+        // not kill the slot thread or wedge the record in Running — it
+        // becomes a Failed job like any other error.
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(shared, &spec)))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    Err(UniGpsError::serve(format!("job panicked: {msg}")))
+                });
+        let mut inner = shared.inner.lock().unwrap();
+        inner.running -= 1;
+        match outcome {
+            Ok(result) => {
+                inner.completed += 1;
+                let rec = inner.jobs.get_mut(&id).expect("running job has a record");
+                rec.state = JobState::Done;
+                rec.result = Some(Arc::new(result));
+            }
+            Err(e) => {
+                inner.failed += 1;
+                let rec = inner.jobs.get_mut(&id).expect("running job has a record");
+                rec.state = JobState::Failed;
+                rec.error = Some(e.to_string());
+            }
+        }
+        finish_record(&mut inner, id);
+    }
+}
+
+/// Record a terminal job in completion order and evict the oldest finished
+/// records beyond [`MAX_FINISHED_JOBS`] — a resident server must not
+/// retain every result table it ever produced.
+fn finish_record(inner: &mut Inner, id: JobId) {
+    inner.finished.push_back(id);
+    while inner.finished.len() > MAX_FINISHED_JOBS {
+        if let Some(old) = inner.finished.pop_front() {
+            inner.jobs.remove(&old);
+        }
+    }
+}
+
+/// Execute one job: resolve the snapshot through the cache, split the
+/// cores, run the operator.
+fn run_job(shared: &Shared, spec: &JobSpec) -> Result<RunResult> {
+    if spec.delay_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(spec.delay_ms));
+    }
+    let opts = {
+        let mut o = spec.session.options().clone();
+        o.workers = o.workers.min(shared.job_workers).max(1);
+        o
+    };
+    let key = format!("{}|{}", spec.dataset.canonical(), opts.partition.name());
+    let graph = shared
+        .cache
+        .get_or_load(&key, || spec.dataset.load(&shared.base))?;
+    run_operator(&graph, &spec.op, spec.engine(), &opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineKind, RunOptions};
+    use std::time::{Duration, Instant};
+
+    fn cfg(slots: usize, queue_cap: usize) -> ServeConfig {
+        let mut c = ServeConfig::new("/tmp/unused.sock");
+        c.slots = slots;
+        c.queue_cap = queue_cap;
+        c.total_workers = 4;
+        c
+    }
+
+    fn wait_done(sched: &Scheduler, id: JobId) -> JobStatus {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let st = sched.status(id).expect("known job");
+            if st.state.is_terminal() {
+                return st;
+            }
+            assert!(Instant::now() < deadline, "job {id} stuck in {}", st.state);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    const SPEC: &str = "algo = sssp\nvertices = 96\nedges = 384\nseed = 3\nworkers = 2";
+
+    #[test]
+    fn submit_run_and_fetch_result() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        let id = sched.submit(SPEC).unwrap();
+        let st = wait_done(&sched, id);
+        assert_eq!(st.state, JobState::Done, "error: {:?}", st.error);
+        let result = sched.result(id).unwrap();
+        // Identical to a direct engine run with the same split options.
+        let g = Session::builder().build().generate("rmat", 96, 384, 3);
+        let opts = RunOptions::default().with_workers(2);
+        let direct = run_operator(
+            &g,
+            &crate::operators::Operator::Sssp { root: 0 },
+            EngineKind::Pregel,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(result.columns, direct.columns);
+        let s = sched.stats();
+        assert_eq!((s.completed, s.failed, s.queued, s.running), (1, 0, 0, 0));
+        sched.shutdown();
+    }
+
+    #[test]
+    fn queue_full_is_a_typed_rejection() {
+        // Zero slots: nothing drains, so admission is deterministic.
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(0, 3),
+        );
+        for _ in 0..3 {
+            sched.submit(SPEC).unwrap();
+        }
+        let err = sched.submit(SPEC).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)), "got {err:?}");
+        assert!(err.to_string().contains("queue full"), "{err}");
+        let s = sched.stats();
+        assert_eq!((s.submitted, s.rejected, s.queued), (3, 1, 3));
+        sched.shutdown();
+    }
+
+    #[test]
+    fn bad_specs_fail_before_admission() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(0, 4),
+        );
+        let err = sched.submit("algo = warp\nvertices = 8").unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)));
+        assert_eq!(sched.stats().queued, 0, "parse failures take no queue space");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_report_their_error() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 4),
+        );
+        let id = sched.submit("algo = cc\ndataset = atlantis").unwrap();
+        let st = wait_done(&sched, id);
+        assert_eq!(st.state, JobState::Failed);
+        assert!(st.error.as_deref().unwrap_or("").contains("unknown dataset"));
+        let err = sched.result(id).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)));
+        assert_eq!(sched.stats().failed, 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn hostile_specs_rejected_and_slot_survives_failures() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        // `scale = 0` would divide by zero inside the dataset generator;
+        // the spec layer rejects it (typed) before it can panic a slot.
+        let bad = sched.submit("algo = cc\ndataset = lj\nscale = 0").unwrap_err();
+        assert!(matches!(bad, UniGpsError::Config(_)), "scale=0 rejected at parse: {bad:?}");
+        // Should a panic ever slip past the parse caps, runner_loop's
+        // catch_unwind turns it into a Failed job instead of a dead slot.
+        // Either way the slot must keep serving after a failed job:
+        let id = sched.submit("algo = cc\ndataset = atlantis").unwrap();
+        assert_eq!(wait_done(&sched, id).state, JobState::Failed);
+        let id = sched.submit(SPEC).unwrap();
+        assert_eq!(wait_done(&sched, id).state, JobState::Done, "slot survives failures");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_jobs() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(2, 16),
+        );
+        let ids: Vec<_> = (0..6).map(|_| sched.submit(SPEC).unwrap()).collect();
+        sched.shutdown();
+        for id in ids {
+            let st = sched.status(id).unwrap();
+            assert_eq!(st.state, JobState::Done, "job {id} not drained: {:?}", st.error);
+        }
+        let err = sched.submit(SPEC).unwrap_err();
+        assert!(err.to_string().contains("shutting down"));
+    }
+
+    #[test]
+    fn unknown_job_queries_are_typed() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(0, 2),
+        );
+        assert!(sched.status(999).is_none());
+        let err = sched.result(999).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)));
+        sched.shutdown();
+    }
+}

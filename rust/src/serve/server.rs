@@ -1,0 +1,365 @@
+//! The serving front end: a Unix-domain-socket accept loop and its client.
+//!
+//! Reuses the hardened length-prefixed framing of
+//! [`crate::ipc::socket_rpc`] (`u32 method_or_status | u32 len | payload`,
+//! frames over [`MAX_FRAME_LEN`](crate::ipc::socket_rpc::MAX_FRAME_LEN)
+//! rejected before allocation) and the [`crate::ipc::protocol`] status
+//! codes. Each accepted connection gets a handler thread that serves
+//! frames until the peer disconnects; all handlers share one
+//! [`Scheduler`] and one [`SnapshotCache`]. A `SHUTDOWN` frame stops the
+//! accept loop and drains the scheduler (queued and running jobs finish
+//! first).
+
+use crate::engine::RunResult;
+use crate::error::{Result, UniGpsError};
+use crate::ipc::protocol::{get_u64, put_u64, status};
+use crate::ipc::socket_rpc::{read_frame, write_frame, SocketClient};
+use crate::ipc::RpcChannel;
+use crate::serve::cache::{CacheStats, SnapshotCache};
+use crate::serve::jobs::{decode_result, encode_result, JobId, JobStatus};
+use crate::serve::scheduler::{SchedStats, Scheduler};
+use crate::serve::{method, ServeConfig};
+use crate::session::Session;
+use std::collections::HashMap;
+use std::io::{BufReader, BufWriter};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server-wide statistics: snapshot cache + scheduler counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Snapshot-cache counters.
+    pub cache: CacheStats,
+    /// Scheduler counters.
+    pub jobs: SchedStats,
+}
+
+impl ServeStats {
+    /// Encode for the wire.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for v in [
+            self.cache.loads,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.evictions,
+            self.cache.resident,
+            self.cache.resident_bytes,
+            self.jobs.submitted,
+            self.jobs.rejected,
+            self.jobs.completed,
+            self.jobs.failed,
+            self.jobs.queued as u64,
+            self.jobs.running as u64,
+        ] {
+            put_u64(&mut out, v);
+        }
+        out
+    }
+
+    /// Decode from the wire.
+    pub fn decode(buf: &[u8]) -> Result<ServeStats> {
+        let mut pos = 0;
+        let mut take = || get_u64(buf, &mut pos);
+        Ok(ServeStats {
+            cache: CacheStats {
+                loads: take()?,
+                hits: take()?,
+                misses: take()?,
+                evictions: take()?,
+                resident: take()?,
+                resident_bytes: take()?,
+            },
+            jobs: SchedStats {
+                submitted: take()?,
+                rejected: take()?,
+                completed: take()?,
+                failed: take()?,
+                queued: take()? as usize,
+                running: take()? as usize,
+            },
+        })
+    }
+}
+
+/// The resident job server. Bind, then [`Server::run`] until a client
+/// sends `SHUTDOWN`.
+pub struct Server {
+    listener: UnixListener,
+    cfg: ServeConfig,
+    sched: Scheduler,
+    cache: Arc<SnapshotCache>,
+    stop: AtomicBool,
+    /// Live connections (socket clones), so shutdown can unblock handler
+    /// threads parked in `read_frame` on idle clients. Handlers remove
+    /// their own entry on exit, bounding the table to open connections.
+    conns: Mutex<HashMap<u64, UnixStream>>,
+    next_conn: AtomicU64,
+}
+
+impl Server {
+    /// Bind the socket (replacing any stale file) and start the scheduler
+    /// slots. Job specs are layered over `session` — its engine, worker
+    /// count, partition strategy and options are the serving defaults.
+    pub fn bind(session: Session, cfg: ServeConfig) -> Result<Server> {
+        let _ = std::fs::remove_file(&cfg.socket);
+        let listener = UnixListener::bind(&cfg.socket)?;
+        let cache = Arc::new(SnapshotCache::new(cfg.cache_budget));
+        let sched = Scheduler::start(session, cache.clone(), &cfg);
+        Ok(Server {
+            listener,
+            cfg,
+            sched,
+            cache,
+            stop: AtomicBool::new(false),
+            conns: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(0),
+        })
+    }
+
+    /// The bound configuration.
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Current server-wide statistics.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            cache: self.cache.stats(),
+            jobs: self.sched.stats(),
+        }
+    }
+
+    /// Accept clients until a `SHUTDOWN` frame arrives, then disconnect
+    /// remaining clients, drain the scheduler (queued and running jobs
+    /// complete) and return. Transient `accept` failures (e.g. fd
+    /// exhaustion under many clients) are retried, never fatal.
+    pub fn run(&self) -> Result<()> {
+        std::thread::scope(|scope| {
+            loop {
+                if self.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let stream = match self.listener.accept() {
+                    Ok((stream, _addr)) => stream,
+                    Err(_) if self.stop.load(Ordering::SeqCst) => break,
+                    Err(_) => {
+                        // Transient (EMFILE, EINTR, ...): back off briefly
+                        // and keep serving instead of killing the server.
+                        std::thread::sleep(Duration::from_millis(20));
+                        continue;
+                    }
+                };
+                if self.stop.load(Ordering::SeqCst) {
+                    break; // the shutdown waker, or a late connection
+                }
+                let id = self.next_conn.fetch_add(1, Ordering::SeqCst);
+                if let Ok(clone) = stream.try_clone() {
+                    self.conns.lock().unwrap().insert(id, clone);
+                }
+                scope.spawn(move || {
+                    // A handler error (protocol violation, broken pipe)
+                    // poisons only its own connection.
+                    let _ = self.handle_connection(stream);
+                    self.conns.lock().unwrap().remove(&id);
+                });
+            }
+            // Refuse new connects fast (path gone beats a backlog hang),
+            // then unblock handlers parked on idle clients so the scope
+            // can join them.
+            let _ = std::fs::remove_file(&self.cfg.socket);
+            let remaining: Vec<UnixStream> = self
+                .conns
+                .lock()
+                .unwrap()
+                .drain()
+                .map(|(_, stream)| stream)
+                .collect();
+            for stream in remaining {
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+            }
+        });
+        self.sched.shutdown();
+        Ok(())
+    }
+
+    /// Serve one client connection until EOF or `SHUTDOWN`.
+    fn handle_connection(&self, stream: UnixStream) -> Result<()> {
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        loop {
+            let (m, payload) = match read_frame(&mut reader) {
+                Ok(f) => f,
+                Err(UniGpsError::Io(e)) if e.kind() == std::io::ErrorKind::UnexpectedEof => {
+                    return Ok(()); // peer closed
+                }
+                Err(e) => return Err(e),
+            };
+            match self.dispatch(m, &payload) {
+                // A response over MAX_FRAME_LEN is refused by write_frame
+                // *before* any bytes hit the stream, so the connection is
+                // still cleanly framed — surface a typed error instead of
+                // dropping the client on a raw EOF.
+                Ok(resp) => match write_frame(&mut writer, status::OK, &resp) {
+                    Err(UniGpsError::Ipc(msg)) => write_frame(
+                        &mut writer,
+                        status::ERR,
+                        format!("response too large for one frame: {msg}").as_bytes(),
+                    )?,
+                    other => other?,
+                },
+                Err(e) => write_frame(&mut writer, status::ERR, e.to_string().as_bytes())?,
+            }
+            if m == method::SHUTDOWN {
+                self.stop.store(true, Ordering::SeqCst);
+                // Wake the acceptor so it observes the stop flag.
+                let _ = UnixStream::connect(&self.cfg.socket);
+                return Ok(());
+            }
+        }
+    }
+
+    fn dispatch(&self, m: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        match m {
+            method::SUBMIT => {
+                let spec = std::str::from_utf8(payload)
+                    .map_err(|_| UniGpsError::ipc("submit payload is not UTF-8"))?;
+                let id = self.sched.submit(spec)?;
+                let mut out = Vec::new();
+                put_u64(&mut out, id);
+                Ok(out)
+            }
+            method::STATUS => {
+                let mut pos = 0;
+                let id = get_u64(payload, &mut pos)?;
+                let st = self
+                    .sched
+                    .status(id)
+                    .ok_or_else(|| UniGpsError::serve(format!("unknown job {id}")))?;
+                Ok(st.encode())
+            }
+            method::RESULT => {
+                let mut pos = 0;
+                let id = get_u64(payload, &mut pos)?;
+                Ok(encode_result(&self.sched.result(id)?))
+            }
+            method::STATS => Ok(self.stats().encode()),
+            method::SHUTDOWN => Ok(Vec::new()),
+            other => Err(UniGpsError::Ipc(format!("unknown serve method {other}"))),
+        }
+    }
+}
+
+impl std::fmt::Debug for Server {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Server").field("cfg", &self.cfg).finish()
+    }
+}
+
+/// Client for a [`Server`], one synchronous request at a time (open one
+/// client per thread; the server handles connections concurrently).
+pub struct ServeClient {
+    chan: SocketClient,
+}
+
+impl ServeClient {
+    /// Connect to a server's socket (retrying briefly while it starts).
+    pub fn connect(path: &Path) -> Result<ServeClient> {
+        Ok(ServeClient {
+            chan: SocketClient::connect(path)?,
+        })
+    }
+
+    /// Submit a job spec (`key = value` text); returns the job id.
+    pub fn submit(&mut self, spec: &str) -> Result<JobId> {
+        let resp = self.chan.call(method::SUBMIT, spec.as_bytes())?;
+        let mut pos = 0;
+        get_u64(&resp, &mut pos)
+    }
+
+    /// Query a job's status.
+    pub fn status(&mut self, id: JobId) -> Result<JobStatus> {
+        let mut req = Vec::new();
+        put_u64(&mut req, id);
+        JobStatus::decode(&self.chan.call(method::STATUS, &req)?)
+    }
+
+    /// Fetch a finished job's result table.
+    pub fn result(&mut self, id: JobId) -> Result<RunResult> {
+        let mut req = Vec::new();
+        put_u64(&mut req, id);
+        decode_result(&self.chan.call(method::RESULT, &req)?)
+    }
+
+    /// Fetch server-wide statistics.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        ServeStats::decode(&self.chan.call(method::STATS, &[])?)
+    }
+
+    /// Poll until the job reaches a terminal state, then return its result
+    /// (or the job's typed failure). Errs after `timeout`. Polling backs
+    /// off exponentially (2 ms → 128 ms) so long-running jobs don't keep
+    /// the server busy answering ~500 status calls per second per waiter.
+    pub fn wait(&mut self, id: JobId, timeout: Duration) -> Result<RunResult> {
+        let deadline = Instant::now() + timeout;
+        let mut backoff = Duration::from_millis(2);
+        loop {
+            let st = self.status(id)?;
+            if st.state.is_terminal() {
+                return self.result(id);
+            }
+            if Instant::now() >= deadline {
+                return Err(UniGpsError::serve(format!(
+                    "timed out after {timeout:?} waiting for job {id} ({})",
+                    st.state
+                )));
+            }
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_millis(128));
+        }
+    }
+
+    /// Ask the server to shut down (it drains admitted jobs first).
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.chan.call(method::SHUTDOWN, &[])?;
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for ServeClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ServeClient")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_roundtrip() {
+        let s = ServeStats {
+            cache: CacheStats {
+                loads: 1,
+                hits: 11,
+                misses: 1,
+                evictions: 0,
+                resident: 1,
+                resident_bytes: 123_456,
+            },
+            jobs: SchedStats {
+                submitted: 12,
+                rejected: 2,
+                completed: 11,
+                failed: 1,
+                queued: 3,
+                running: 2,
+            },
+        };
+        assert_eq!(ServeStats::decode(&s.encode()).unwrap(), s);
+        assert!(ServeStats::decode(&[0u8; 11]).is_err());
+    }
+}

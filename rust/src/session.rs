@@ -84,24 +84,45 @@ impl Session {
         Session::from_config(&cfg)
     }
 
-    /// Create from a parsed [`Config`].
+    /// Create from a parsed [`Config`] (builder defaults for missing keys).
     pub fn from_config(cfg: &Config) -> Result<Session> {
-        let engine = EngineKind::parse(&cfg.get_or("engine", "pregel"))
-            .ok_or_else(|| crate::error::UniGpsError::Config("unknown engine".into()))?;
-        let mut opts = RunOptions::default();
-        opts.workers = cfg.get_usize("workers", opts.workers)?;
+        Session::builder().build().overlay_config(cfg)
+    }
+
+    /// Return a copy of this session with any keys present in `cfg`
+    /// overriding the current settings; missing keys keep this session's
+    /// values. This is the single config-plumbing path: [`Session::from_config`]
+    /// layers a config over builder defaults, and the serving subsystem
+    /// ([`crate::serve`]) layers each submitted job spec over the server
+    /// session the same way.
+    pub fn overlay_config(&self, cfg: &Config) -> Result<Session> {
+        let engine = match cfg.get("engine") {
+            None => self.engine,
+            Some(e) => EngineKind::parse(e).ok_or_else(|| {
+                crate::error::UniGpsError::Config(format!("unknown engine '{e}'"))
+            })?,
+        };
+        let mut opts = self.opts.clone();
+        opts.workers = cfg.get_usize("workers", opts.workers)?.max(1);
         opts.max_iter = cfg.get_usize("max_iter", opts.max_iter as usize)? as u32;
         opts.combiner = cfg.get_bool("combiner", opts.combiner)?;
         opts.pipeline = cfg.get_bool("pipeline", opts.pipeline)?;
+        opts.step_metrics = cfg.get_bool("step_metrics", opts.step_metrics)?;
         opts.pushpull_threshold = cfg.get_f64("pushpull_threshold", opts.pushpull_threshold)?;
         if let Some(p) = cfg.get("partition") {
             opts.partition = crate::graph::partition::PartitionStrategy::parse(p)
-                .ok_or_else(|| crate::error::UniGpsError::Config("unknown partition".into()))?;
+                .ok_or_else(|| {
+                    crate::error::UniGpsError::Config(format!("unknown partition '{p}'"))
+                })?;
         }
+        let artifacts_dir = match cfg.get("artifacts_dir") {
+            None => self.artifacts_dir.clone(),
+            Some(p) => PathBuf::from(p),
+        };
         Ok(Session {
             engine,
             opts,
-            artifacts_dir: PathBuf::from(cfg.get_or("artifacts_dir", "artifacts")),
+            artifacts_dir,
         })
     }
 
@@ -248,6 +269,30 @@ mod tests {
     fn bad_engine_rejected() {
         let cfg = Config::parse("engine = fortran").unwrap();
         assert!(Session::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn overlay_keeps_base_settings_for_missing_keys() {
+        let base = Session::builder()
+            .workers(7)
+            .engine(EngineKind::Gas)
+            .artifacts_dir("custom-artifacts")
+            .build();
+        let over = base
+            .overlay_config(&Config::parse("combiner = on").unwrap())
+            .unwrap();
+        assert_eq!(over.default_engine(), EngineKind::Gas, "engine kept");
+        assert_eq!(over.options().workers, 7, "workers kept");
+        assert!(over.options().combiner, "combiner overridden");
+        assert_eq!(over.artifacts_dir(), Path::new("custom-artifacts"));
+        let over = base
+            .overlay_config(&Config::parse("engine = serial\nworkers = 2").unwrap())
+            .unwrap();
+        assert_eq!(over.default_engine(), EngineKind::Serial);
+        assert_eq!(over.options().workers, 2);
+        assert!(base
+            .overlay_config(&Config::parse("partition = voronoi").unwrap())
+            .is_err());
     }
 
     #[test]

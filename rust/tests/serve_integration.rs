@@ -1,0 +1,227 @@
+//! Integration: the `unigps serve` subsystem end to end — one server
+//! thread, concurrent client threads over the Unix-domain socket, mixed
+//! operators against one dataset spec. Checks the three serving
+//! guarantees: results are bit-identical to direct `engine::run` calls
+//! with the same options, the snapshot cache loads the graph exactly once
+//! (hit counter = jobs − 1), and the admission queue rejects overload with
+//! a typed error instead of buffering it.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+use unigps::engine::{EngineKind, RunOptions, RunResult};
+use unigps::ipc::shm::ShmMap;
+use unigps::operators::{run_operator, Operator};
+use unigps::serve::{ServeClient, ServeConfig, Server};
+use unigps::session::Session;
+use unigps::vcprog::Column;
+
+/// The one dataset spec every job in these tests shares.
+const VERTICES: usize = 512;
+const EDGES: usize = 2048;
+const SEED: u64 = 909;
+const JOB_WORKERS: usize = 2;
+
+fn dataset_spec_lines() -> String {
+    format!("kind = rmat\nvertices = {VERTICES}\nedges = {EDGES}\nseed = {SEED}\nworkers = {JOB_WORKERS}")
+}
+
+/// The graph every spec above resolves to (seeded, so byte-deterministic).
+fn dataset_graph() -> unigps::graph::Graph {
+    Session::builder().build().generate("rmat", VERTICES, EDGES, SEED)
+}
+
+/// (spec suffix, operator, engine) for the mixed workload. Engines vary so
+/// the scheduler demonstrably runs heterogeneous backends concurrently.
+fn workload() -> Vec<(String, Operator, EngineKind)> {
+    vec![
+        (
+            "algo = pagerank\niterations = 5\nengine = pregel".into(),
+            Operator::PageRank { iterations: 5 },
+            EngineKind::Pregel,
+        ),
+        (
+            "algo = sssp\nroot = 0\nengine = pushpull".into(),
+            Operator::Sssp { root: 0 },
+            EngineKind::PushPull,
+        ),
+        (
+            "algo = cc\nengine = gas".into(),
+            Operator::ConnectedComponents,
+            EngineKind::Gas,
+        ),
+    ]
+}
+
+/// The exact options the scheduler derives for these specs: requested
+/// workers (2) ≤ per-slot share, everything else serving defaults.
+fn job_options() -> RunOptions {
+    RunOptions::default().with_workers(JOB_WORKERS)
+}
+
+fn columns_bit_identical(a: &RunResult, b: &RunResult) -> bool {
+    a.columns.len() == b.columns.len()
+        && a.columns.iter().zip(&b.columns).all(|((an, ac), (bn, bc))| {
+            an == bn
+                && match (ac, bc) {
+                    (Column::I64(x), Column::I64(y)) => x == y,
+                    (Column::F64(x), Column::F64(y)) => {
+                        x.len() == y.len()
+                            && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                    }
+                    _ => false,
+                }
+        })
+}
+
+fn start_server(cfg: ServeConfig) -> (PathBuf, std::thread::JoinHandle<()>) {
+    let socket = cfg.socket.clone();
+    let server = Server::bind(Session::builder().build(), cfg).expect("bind serve socket");
+    let handle = std::thread::spawn(move || server.run().expect("serve loop"));
+    (socket, handle)
+}
+
+/// ≥4 concurrent clients submit mixed pagerank/sssp/cc jobs against the
+/// same dataset spec; every result is bit-identical to a direct
+/// `engine::run` with the scheduler's options, and the snapshot cache
+/// reports exactly one load with hit counter = jobs − 1.
+#[test]
+fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-int"));
+    cfg.slots = 2;
+    cfg.queue_cap = 64;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = 4; // split 2 ways -> 2 workers per job
+    assert_eq!(cfg.per_job_workers(), JOB_WORKERS);
+    let (socket, server) = start_server(cfg);
+
+    // Ground truth: direct engine::run dispatch on the same graph with the
+    // same options the scheduler derives.
+    let graph = dataset_graph();
+    let opts = job_options();
+    let expected: Vec<RunResult> = workload()
+        .iter()
+        .map(|(_, op, engine)| run_operator(&graph, op, *engine, &opts).unwrap())
+        .collect();
+    let expected = Arc::new(expected);
+
+    let clients: usize = 4;
+    let jobs_per_client: usize = 3; // 12 jobs total, all three operators each
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let socket = &socket;
+            let expected = expected.clone();
+            s.spawn(move || {
+                let mut client = ServeClient::connect(socket).expect("connect");
+                for j in 0..jobs_per_client {
+                    let which = (c + j) % expected.len();
+                    let spec =
+                        format!("{}\n{}", dataset_spec_lines(), workload()[which].0);
+                    let id = client.submit(&spec).expect("submit");
+                    let got = client
+                        .wait(id, Duration::from_secs(120))
+                        .expect("job finishes");
+                    assert!(
+                        columns_bit_identical(&got, &expected[which]),
+                        "client {c} job {j} (workload {which}) diverged from direct run"
+                    );
+                    assert!(got.metrics.supersteps > 0);
+                }
+            });
+        }
+    });
+
+    // Cache accounting: 12 jobs over one (dataset, partition) key.
+    let mut client = ServeClient::connect(&socket).expect("connect for stats");
+    let stats = client.stats().expect("stats");
+    let total_jobs = (clients * jobs_per_client) as u64;
+    assert_eq!(stats.jobs.completed, total_jobs, "all jobs completed");
+    assert_eq!(stats.jobs.failed, 0);
+    assert_eq!(stats.cache.loads, 1, "exactly one snapshot load");
+    assert_eq!(stats.cache.misses, 1);
+    assert_eq!(
+        stats.cache.hits,
+        total_jobs - 1,
+        "hit counter = jobs - 1 (every job after the first shares the snapshot)"
+    );
+    assert_eq!(stats.cache.resident, 1);
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join().expect("server thread");
+    assert!(!socket.exists(), "socket file removed on shutdown");
+}
+
+/// Backpressure: with one slot and a two-deep queue, a burst of delayed
+/// jobs must produce at least one typed queue-full rejection, while every
+/// admitted job still completes and is never silently dropped.
+#[test]
+fn queue_overload_is_rejected_with_a_typed_error() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-bp"));
+    cfg.slots = 1;
+    cfg.queue_cap = 2;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = 2;
+    let (socket, server) = start_server(cfg);
+
+    let mut client = ServeClient::connect(&socket).expect("connect");
+    // Each job sleeps 400ms before executing, so the single slot cannot
+    // drain the burst: capacity is 1 running + 2 queued = 3 of 5.
+    let spec = format!("{}\nalgo = sssp\ndelay_ms = 400", dataset_spec_lines());
+    let mut admitted = Vec::new();
+    let mut rejections = Vec::new();
+    for _ in 0..5 {
+        match client.submit(&spec) {
+            Ok(id) => admitted.push(id),
+            Err(e) => rejections.push(e.to_string()),
+        }
+    }
+    assert!(
+        !rejections.is_empty(),
+        "5 delayed submits into slots=1/queue=2 must overflow"
+    );
+    // The queue alone admits 2; whether the slot has already popped the
+    // first job (admitting a 3rd) is a benign race.
+    assert!(admitted.len() >= 2, "queue capacity admits at least 2");
+    for r in &rejections {
+        assert!(r.contains("queue full"), "typed backpressure rejection, got: {r}");
+    }
+    for id in &admitted {
+        let result = client.wait(*id, Duration::from_secs(120));
+        assert!(result.is_ok(), "admitted job {id} must complete: {result:?}");
+    }
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.jobs.rejected, rejections.len() as u64);
+    assert_eq!(stats.jobs.completed, admitted.len() as u64);
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join().expect("server thread");
+}
+
+/// Status/result error paths over the wire: unknown jobs and not-yet-done
+/// results surface as server-side errors, not hangs or garbage.
+#[test]
+fn wire_error_paths_are_clean() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-err"));
+    cfg.slots = 1;
+    cfg.total_workers = 2;
+    let (socket, server) = start_server(cfg);
+
+    let mut client = ServeClient::connect(&socket).expect("connect");
+    let err = client.status(424242).unwrap_err();
+    assert!(err.to_string().contains("unknown job"), "{err}");
+    let err = client.result(424242).unwrap_err();
+    assert!(err.to_string().contains("unknown job"), "{err}");
+    // A bad spec is rejected at submit time with the parse error.
+    let err = client.submit("algo = astrology\nvertices = 64").unwrap_err();
+    assert!(err.to_string().contains("unknown algo"), "{err}");
+    // A job that fails at load time reports Failed + its typed error text.
+    let id = client.submit("algo = cc\ndataset = atlantis").expect("admitted");
+    let err = client.wait(id, Duration::from_secs(60)).unwrap_err();
+    assert!(err.to_string().contains("unknown dataset"), "{err}");
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join().expect("server thread");
+}

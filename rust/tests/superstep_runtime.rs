@@ -13,9 +13,18 @@ use unigps::operators::symmetrized;
 use unigps::util::propcheck::{forall, Config};
 use unigps::vcprog::programs::{ConnectedComponents, SsspBellmanFord};
 
+/// All three partition strategies, checked exhaustively per case (not one
+/// sampled per graph, so every graph×strategy pair is exercised).
+const ALL_STRATEGIES: [PartitionStrategy; 3] = [
+    PartitionStrategy::Hash,
+    PartitionStrategy::Range,
+    PartitionStrategy::EdgeBalanced,
+];
+
 /// Property: every VCProg engine produces identical results on 50 random
-/// graphs, across worker counts and partition strategies (all engines run
-/// the shared superstep runtime; Serial is the executable specification).
+/// graphs, across worker counts and under **every** partition strategy —
+/// hash, range and edge-balanced — per graph (all engines run the shared
+/// superstep runtime; Serial is the executable specification).
 #[test]
 fn all_engines_identical_on_50_random_graphs() {
     forall(
@@ -24,26 +33,31 @@ fn all_engines_identical_on_50_random_graphs() {
             let n = 2 + rng.usize_below(120);
             let m = n * (1 + rng.usize_below(5));
             let workers = 1 + rng.usize_below(6);
-            let strategy = *rng.choose(&[
-                PartitionStrategy::Hash,
-                PartitionStrategy::Range,
-                PartitionStrategy::EdgeBalanced,
-            ]);
-            (generate::random_for_tests(n, m, rng.next_u64()), workers, strategy)
+            (generate::random_for_tests(n, m, rng.next_u64()), workers)
         },
-        |(g, workers, strategy)| {
-            let mut opts = RunOptions::default().with_workers(*workers);
-            opts.partition = *strategy;
+        |(g, workers)| {
             let prog = SsspBellmanFord::new(0);
-            let reference = run_typed(EngineKind::Serial, g, &prog, &opts)
-                .map_err(|e| e.to_string())?
-                .props;
-            for kind in EngineKind::vcprog_engines() {
-                let got = run_typed(kind, g, &prog, &opts)
-                    .map_err(|e| e.to_string())?
-                    .props;
-                if got != reference {
-                    return Err(format!("{kind} diverged from serial (w={workers}, {strategy:?})"));
+            // The serial reference is partition-independent; compute once.
+            let reference = run_typed(
+                EngineKind::Serial,
+                g,
+                &prog,
+                &RunOptions::default().with_workers(*workers),
+            )
+            .map_err(|e| e.to_string())?
+            .props;
+            for strategy in ALL_STRATEGIES {
+                let mut opts = RunOptions::default().with_workers(*workers);
+                opts.partition = strategy;
+                for kind in EngineKind::vcprog_engines() {
+                    let got = run_typed(kind, g, &prog, &opts)
+                        .map_err(|e| e.to_string())?
+                        .props;
+                    if got != reference {
+                        return Err(format!(
+                            "{kind} diverged from serial (w={workers}, {strategy:?})"
+                        ));
+                    }
                 }
             }
             Ok(())
@@ -55,7 +69,8 @@ fn all_engines_identical_on_50_random_graphs() {
 /// On the same 50-random-graph corpus shape as the cross-engine identity
 /// property, every distributed engine must produce **bit-identical**
 /// results — and identical message totals and superstep counts — with the
-/// pipeline on and off, with and without the sender-side combiner.
+/// pipeline on and off, with and without the sender-side combiner, under
+/// every partition strategy (hash, range, edge-balanced) per graph.
 #[test]
 fn pipelined_matches_barriered_on_50_random_graphs() {
     forall(
@@ -64,34 +79,31 @@ fn pipelined_matches_barriered_on_50_random_graphs() {
             let n = 2 + rng.usize_below(120);
             let m = n * (1 + rng.usize_below(5));
             let workers = 1 + rng.usize_below(6);
-            let strategy = *rng.choose(&[
-                PartitionStrategy::Hash,
-                PartitionStrategy::Range,
-                PartitionStrategy::EdgeBalanced,
-            ]);
-            (generate::random_for_tests(n, m, rng.next_u64()), workers, strategy)
+            (generate::random_for_tests(n, m, rng.next_u64()), workers)
         },
-        |(g, workers, strategy)| {
+        |(g, workers)| {
             let prog = SsspBellmanFord::new(0);
-            for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
-                for combiner in [false, true] {
-                    let mut over = RunOptions::default().with_workers(*workers);
-                    over.partition = *strategy;
-                    over.combiner = combiner;
-                    over.pipeline = true;
-                    let mut bar = over.clone();
-                    bar.pipeline = false;
-                    let a = run_typed(kind, g, &prog, &over).map_err(|e| e.to_string())?;
-                    let b = run_typed(kind, g, &prog, &bar).map_err(|e| e.to_string())?;
-                    let tag = format!("{kind} w={workers} {strategy:?} combiner={combiner}");
-                    if a.props != b.props {
-                        return Err(format!("{tag}: pipelined results diverged"));
-                    }
-                    if a.metrics.total_messages != b.metrics.total_messages {
-                        return Err(format!("{tag}: message totals diverged"));
-                    }
-                    if a.metrics.supersteps != b.metrics.supersteps {
-                        return Err(format!("{tag}: superstep counts diverged"));
+            for strategy in ALL_STRATEGIES {
+                for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
+                    for combiner in [false, true] {
+                        let mut over = RunOptions::default().with_workers(*workers);
+                        over.partition = strategy;
+                        over.combiner = combiner;
+                        over.pipeline = true;
+                        let mut bar = over.clone();
+                        bar.pipeline = false;
+                        let a = run_typed(kind, g, &prog, &over).map_err(|e| e.to_string())?;
+                        let b = run_typed(kind, g, &prog, &bar).map_err(|e| e.to_string())?;
+                        let tag = format!("{kind} w={workers} {strategy:?} combiner={combiner}");
+                        if a.props != b.props {
+                            return Err(format!("{tag}: pipelined results diverged"));
+                        }
+                        if a.metrics.total_messages != b.metrics.total_messages {
+                            return Err(format!("{tag}: message totals diverged"));
+                        }
+                        if a.metrics.supersteps != b.metrics.supersteps {
+                            return Err(format!("{tag}: superstep counts diverged"));
+                        }
                     }
                 }
             }
