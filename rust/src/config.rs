@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 /// Parsed configuration.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Config {
     values: BTreeMap<String, String>,
 }
@@ -94,6 +94,16 @@ impl Config {
     /// Iterate all `(key, value)` pairs (sorted).
     pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
         self.values.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// True when no keys are set.
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    /// Number of keys set.
+    pub fn len(&self) -> usize {
+        self.values.len()
     }
 }
 

@@ -15,7 +15,7 @@ use crate::distributed::metrics::{RunMetrics, StepMetrics};
 use crate::engine::{RunOptions, RunResult};
 use crate::error::{Result, UniGpsError};
 use crate::graph::Graph;
-use crate::operators::{symmetrized, Operator};
+use crate::operators::Operator;
 use crate::runtime::{lit, BlockCsc, PjRtRuntime};
 use crate::util::timer::Timer;
 use crate::vcprog::Column;
@@ -50,14 +50,16 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// Run a native operator on the tensor engine.
+/// Run a native operator on the tensor engine. Callers resolve the
+/// operator's required view first (`operators::run_operator` / the plan
+/// executor symmetrize for CC), so `graph` is used as given.
 pub fn run_operator(graph: &Graph, op: &Operator, opts: &RunOptions) -> Result<RunResult> {
     let dir = artifacts_dir();
     let rt = runtime_for(&dir)?;
     match *op {
         Operator::PageRank { iterations } => pagerank(&rt, graph, iterations, opts),
         Operator::Sssp { root } => sssp(&rt, graph, root, opts),
-        Operator::ConnectedComponents => cc(&rt, &symmetrized(graph), opts),
+        Operator::ConnectedComponents => cc(&rt, graph, opts),
         ref other => Err(UniGpsError::engine(format!(
             "tensor engine supports pagerank/sssp/cc; '{}' runs on the \
              interpreted engines",

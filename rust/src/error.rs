@@ -1,4 +1,11 @@
 //! Error types for UniGPS.
+//!
+//! Every failure is a typed [`UniGpsError`] variant, and every variant has
+//! a stable wire code ([`ErrorKind`]) so errors crossing the serve socket
+//! are reconstructed as the *same* variant on the client — a
+//! backpressure rejection stays [`UniGpsError::Backpressure`] end to end,
+//! and retry logic matches on the kind instead of substring-matching
+//! `queue full` in a message string.
 
 use std::fmt;
 
@@ -22,11 +29,95 @@ pub enum UniGpsError {
     Ipc(String),
     /// PJRT runtime failure (artifact missing, compile error, execute error).
     Runtime(String),
-    /// Configuration error.
+    /// Configuration error (bad spec, bad plan, unknown key).
     Config(String),
-    /// Serving-subsystem failure (admission queue full, unknown job,
-    /// result not ready, server shutting down).
+    /// Serving-subsystem failure (unknown job, result not ready, server
+    /// shutting down).
     Serve(String),
+    /// Admission backpressure: the serving queue is full. Transient by
+    /// construction — the request was well-formed and retrying after a
+    /// backoff is the intended client response (unlike [`Self::Serve`]).
+    Backpressure(String),
+}
+
+/// Stable wire code for each [`UniGpsError`] variant — what serve ERR
+/// frames carry so clients rebuild the typed error.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// [`UniGpsError::InvalidGraph`].
+    InvalidGraph,
+    /// [`UniGpsError::Record`].
+    Record,
+    /// [`UniGpsError::Engine`].
+    Engine,
+    /// [`UniGpsError::Io`].
+    Io,
+    /// [`UniGpsError::Parse`].
+    Parse,
+    /// [`UniGpsError::Ipc`].
+    Ipc,
+    /// [`UniGpsError::Runtime`].
+    Runtime,
+    /// [`UniGpsError::Config`].
+    Config,
+    /// [`UniGpsError::Serve`].
+    Serve,
+    /// [`UniGpsError::Backpressure`].
+    Backpressure,
+}
+
+impl ErrorKind {
+    /// Wire code.
+    pub fn code(self) -> u32 {
+        match self {
+            ErrorKind::InvalidGraph => 0,
+            ErrorKind::Record => 1,
+            ErrorKind::Engine => 2,
+            ErrorKind::Io => 3,
+            ErrorKind::Parse => 4,
+            ErrorKind::Ipc => 5,
+            ErrorKind::Runtime => 6,
+            ErrorKind::Config => 7,
+            ErrorKind::Serve => 8,
+            ErrorKind::Backpressure => 9,
+        }
+    }
+
+    /// Decode a wire code; unknown codes map to [`ErrorKind::Ipc`] (a
+    /// protocol-level surprise, never a panic).
+    pub fn from_code(code: u32) -> ErrorKind {
+        match code {
+            0 => ErrorKind::InvalidGraph,
+            1 => ErrorKind::Record,
+            2 => ErrorKind::Engine,
+            3 => ErrorKind::Io,
+            4 => ErrorKind::Parse,
+            5 => ErrorKind::Ipc,
+            6 => ErrorKind::Runtime,
+            7 => ErrorKind::Config,
+            8 => ErrorKind::Serve,
+            9 => ErrorKind::Backpressure,
+            _ => ErrorKind::Ipc,
+        }
+    }
+
+    /// Rebuild a typed error of this kind from a message (the client half
+    /// of the serve ERR codec).
+    pub fn rebuild(self, msg: impl Into<String>) -> UniGpsError {
+        let msg = msg.into();
+        match self {
+            ErrorKind::InvalidGraph => UniGpsError::InvalidGraph(msg),
+            ErrorKind::Record => UniGpsError::Record(msg),
+            ErrorKind::Engine => UniGpsError::Engine(msg),
+            ErrorKind::Io => UniGpsError::Io(std::io::Error::other(msg)),
+            ErrorKind::Parse => UniGpsError::Parse(msg),
+            ErrorKind::Ipc => UniGpsError::Ipc(msg),
+            ErrorKind::Runtime => UniGpsError::Runtime(msg),
+            ErrorKind::Config => UniGpsError::Config(msg),
+            ErrorKind::Serve => UniGpsError::Serve(msg),
+            ErrorKind::Backpressure => UniGpsError::Backpressure(msg),
+        }
+    }
 }
 
 impl fmt::Display for UniGpsError {
@@ -41,6 +132,7 @@ impl fmt::Display for UniGpsError {
             UniGpsError::Runtime(m) => write!(f, "runtime error: {m}"),
             UniGpsError::Config(m) => write!(f, "config error: {m}"),
             UniGpsError::Serve(m) => write!(f, "serve error: {m}"),
+            UniGpsError::Backpressure(m) => write!(f, "backpressure: {m}"),
         }
     }
 }
@@ -77,6 +169,48 @@ impl UniGpsError {
     pub fn serve(msg: impl Into<String>) -> Self {
         UniGpsError::Serve(msg.into())
     }
+    /// Shorthand constructor for backpressure rejections.
+    pub fn backpressure(msg: impl Into<String>) -> Self {
+        UniGpsError::Backpressure(msg.into())
+    }
+
+    /// This error's wire kind.
+    pub fn kind(&self) -> ErrorKind {
+        match self {
+            UniGpsError::InvalidGraph(_) => ErrorKind::InvalidGraph,
+            UniGpsError::Record(_) => ErrorKind::Record,
+            UniGpsError::Engine(_) => ErrorKind::Engine,
+            UniGpsError::Io(_) => ErrorKind::Io,
+            UniGpsError::Parse(_) => ErrorKind::Parse,
+            UniGpsError::Ipc(_) => ErrorKind::Ipc,
+            UniGpsError::Runtime(_) => ErrorKind::Runtime,
+            UniGpsError::Config(_) => ErrorKind::Config,
+            UniGpsError::Serve(_) => ErrorKind::Serve,
+            UniGpsError::Backpressure(_) => ErrorKind::Backpressure,
+        }
+    }
+
+    /// True for transient admission rejections worth retrying after a
+    /// backoff.
+    pub fn is_backpressure(&self) -> bool {
+        matches!(self, UniGpsError::Backpressure(_))
+    }
+
+    /// The bare message, without the variant prefix `Display` adds.
+    pub fn message(&self) -> String {
+        match self {
+            UniGpsError::InvalidGraph(m)
+            | UniGpsError::Record(m)
+            | UniGpsError::Engine(m)
+            | UniGpsError::Parse(m)
+            | UniGpsError::Ipc(m)
+            | UniGpsError::Runtime(m)
+            | UniGpsError::Config(m)
+            | UniGpsError::Serve(m)
+            | UniGpsError::Backpressure(m) => m.clone(),
+            UniGpsError::Io(e) => e.to_string(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -89,8 +223,10 @@ mod tests {
         assert!(e.to_string().contains("dangling edge"));
         let e = UniGpsError::ipc("peer gone");
         assert!(e.to_string().contains("peer gone"));
-        let e = UniGpsError::serve("queue full");
-        assert!(e.to_string().contains("serve error: queue full"));
+        let e = UniGpsError::serve("unknown job 7");
+        assert!(e.to_string().contains("serve error: unknown job 7"));
+        let e = UniGpsError::backpressure("queue full (8 queued)");
+        assert!(e.to_string().contains("backpressure: queue full"));
         let e: UniGpsError = std::io::Error::new(std::io::ErrorKind::Other, "x").into();
         assert!(matches!(e, UniGpsError::Io(_)));
     }
@@ -101,5 +237,36 @@ mod tests {
         let e: UniGpsError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
         assert!(e.source().is_some());
         assert!(UniGpsError::engine("nope").source().is_none());
+    }
+
+    #[test]
+    fn kinds_roundtrip_through_wire_codes() {
+        let samples = [
+            UniGpsError::InvalidGraph("a".into()),
+            UniGpsError::Record("b".into()),
+            UniGpsError::Engine("c".into()),
+            UniGpsError::Io(std::io::Error::other("d")),
+            UniGpsError::Parse("e".into()),
+            UniGpsError::Ipc("f".into()),
+            UniGpsError::Runtime("g".into()),
+            UniGpsError::Config("h".into()),
+            UniGpsError::Serve("i".into()),
+            UniGpsError::Backpressure("j".into()),
+        ];
+        for e in samples {
+            let kind = e.kind();
+            let back = ErrorKind::from_code(kind.code()).rebuild(e.message());
+            assert_eq!(back.kind(), kind, "{e:?}");
+            assert_eq!(back.message(), e.message());
+        }
+        // Unknown codes degrade to Ipc, never panic.
+        assert_eq!(ErrorKind::from_code(999), ErrorKind::Ipc);
+    }
+
+    #[test]
+    fn backpressure_is_distinguishable() {
+        assert!(UniGpsError::backpressure("queue full").is_backpressure());
+        assert!(!UniGpsError::serve("unknown job").is_backpressure());
+        assert!(!UniGpsError::Config("bad".into()).is_backpressure());
     }
 }

@@ -94,6 +94,27 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u32, Vec<u8>)> {
     read_frame_limited(r, MAX_FRAME_LEN)
 }
 
+/// Connect to a Unix socket path, retrying briefly (200 × 5 ms) while
+/// the server starts up. Shared by the VCProg isolation client and the
+/// serving client so the retry policy lives in one place.
+pub fn connect_with_retry(path: &Path) -> Result<UnixStream> {
+    let mut last_err = None;
+    for _ in 0..200 {
+        match UnixStream::connect(path) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    }
+    Err(UniGpsError::ipc(format!(
+        "connect({}) failed: {:?}",
+        path.display(),
+        last_err
+    )))
+}
+
 /// Client half over a Unix stream.
 pub struct SocketClient {
     reader: BufReader<UnixStream>,
@@ -104,25 +125,11 @@ impl SocketClient {
     /// Connect to the server's socket path (retrying briefly while the
     /// server starts up).
     pub fn connect(path: &Path) -> Result<Self> {
-        let mut last_err = None;
-        for _ in 0..200 {
-            match UnixStream::connect(path) {
-                Ok(stream) => {
-                    let reader = BufReader::new(stream.try_clone()?);
-                    let writer = BufWriter::new(stream);
-                    return Ok(SocketClient { reader, writer });
-                }
-                Err(e) => {
-                    last_err = Some(e);
-                    std::thread::sleep(std::time::Duration::from_millis(5));
-                }
-            }
-        }
-        Err(UniGpsError::ipc(format!(
-            "connect({}) failed: {:?}",
-            path.display(),
-            last_err
-        )))
+        let stream = connect_with_retry(path)?;
+        Ok(SocketClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
     }
 }
 

@@ -21,16 +21,24 @@
 //!   a socket-based RPC baseline (the gRPC stand-in of Fig 8d).
 //! * [`graph`] — the property-graph substrate: CSR/CSC topology, dynamic
 //!   records, partitioners, generators and the unified graph I/O format.
+//! * [`plan`] — the **logical-plan IR**: the one program description every
+//!   surface (operator builders, sessions, the CLI, serving job specs)
+//!   lowers to, expressing multi-stage pipelines — graph source, pure
+//!   transforms (symmetrize, degree relabel), filter subgraphs, run
+//!   stages with per-stage `engine=`/options, and result post-ops
+//!   (select/top-k/join) — with text and wire codecs.
 //! * [`operators`] — the native operator API (`pagerank`, `sssp`, `cc`, ...)
-//!   with the paper's `engine=` selection parameter.
+//!   with the paper's `engine=` selection parameter; single-op sugar over
+//!   the plan IR.
 //! * [`runtime`] — the PJRT runtime loading `artifacts/*.hlo.txt` produced by
 //!   `python/compile/aot.py` (JAX L2 + Pallas L1), Python never on the
 //!   request path.
 //! * [`serve`] — the resident job service (`unigps serve`): a concurrent
-//!   job scheduler with FIFO admission + backpressure and a shared
-//!   LRU graph-snapshot cache behind a Unix-domain-socket protocol, so a
-//!   pipeline of short jobs pays the graph load/partition cost once
-//!   instead of per invocation.
+//!   job scheduler with FIFO admission + typed backpressure and a shared
+//!   LRU graph-snapshot cache (base datasets *and* derived variants like
+//!   the symmetrized view, both single-flight) behind a
+//!   Unix-domain-socket protocol, so a pipeline of short jobs pays the
+//!   graph load/partition/symmetrize cost once instead of per invocation.
 //!
 //! ## Quickstart
 //!
@@ -56,6 +64,7 @@ pub mod error;
 pub mod graph;
 pub mod ipc;
 pub mod operators;
+pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod session;
@@ -68,6 +77,7 @@ pub mod prelude {
     pub use crate::graph::record::{Record, Schema, Value};
     pub use crate::graph::{Graph, PropertyGraph};
     pub use crate::operators::OperatorBuilder;
+    pub use crate::plan::{DatasetRef, Plan, PostOp, Stage, Transform};
     pub use crate::serve::{ServeClient, ServeConfig, Server};
     pub use crate::session::Session;
     pub use crate::vcprog::{VCProg, VertexId};

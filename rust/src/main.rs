@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! unigps run --algo pagerank --engine pregel --dataset lj --scale 256 [--workers N]
+//! unigps run --plan pipeline.plan          (multi-stage plan file, see docs/plans.md)
 //! unigps generate --kind rmat --vertices 65536 --edges 1048576 --out g.bin
 //! unigps convert --in g.txt --out g.json
 //! unigps info --graph g.bin
@@ -9,6 +10,7 @@
 //! unigps engines
 //! unigps serve --socket /tmp/unigps.sock [--slots 2] [--queue 64] [--cache-mb 512]
 //! unigps submit --socket /tmp/unigps.sock --algo sssp --dataset lj --scale 1024 [--wait]
+//! unigps submit --socket /tmp/unigps.sock --plan pipeline.plan [--wait]
 //! unigps status --socket /tmp/unigps.sock [--job N]
 //! unigps shutdown --socket /tmp/unigps.sock
 //! ```
@@ -112,7 +114,74 @@ fn load_or_generate(
     }
 }
 
+fn print_result_columns(result: &unigps::engine::RunResult) {
+    for (name, col) in &result.columns {
+        match col {
+            unigps::vcprog::Column::I64(v) => {
+                println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
+            }
+            unigps::vcprog::Column::F64(v) => {
+                println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
+            }
+        }
+    }
+}
+
+/// Overlay recognized CLI flags onto a parsed plan's *defaults* — they
+/// beat the plan file's top section, but a per-stage override in the
+/// file (deliberate fine-grained choice) still wins for that stage —
+/// and reject flags a plan file must own (`--algo`, the graph-source
+/// flags) instead of silently ignoring them.
+fn apply_plan_flags(
+    plan: &mut unigps::plan::Plan,
+    flags: &BTreeMap<String, String>,
+) -> Result<(), AnyErr> {
+    const PLAN_ONLY: [&str; 13] = [
+        "algo", "custom", "dataset", "scale", "kind", "vertices", "edges", "seed", "graph",
+        "iterations", "root", "k", "spec",
+    ];
+    for key in PLAN_ONLY {
+        if get(flags, key).is_some() {
+            return Err(format!(
+                "--{key} conflicts with --plan; put it in the plan file instead"
+            )
+            .into());
+        }
+    }
+    for key in unigps::plan::text::OPTION_KEYS {
+        if let Some(v) = get(flags, key) {
+            plan.defaults.set(key, v);
+        }
+    }
+    if let Some(v) = get(flags, "delay_ms") {
+        plan.defaults.set("delay_ms", v);
+    }
+    Ok(())
+}
+
+/// Execute a plan file in process: parse, then run through the session
+/// (one base load, pure transforms derived once per execution).
+fn cmd_run_plan(path: &str, flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let mut plan = unigps::plan::Plan::parse_text(&std::fs::read_to_string(path)?)?;
+    apply_plan_flags(&mut plan, flags)?;
+    let session = Session::builder()
+        .artifacts_dir(get(flags, "artifacts").unwrap_or("artifacts"))
+        .build();
+    let result = session.run_plan(&plan)?;
+    eprintln!("plan done: {}", result.metrics.summary());
+    if let Some(out) = get(flags, "output") {
+        result.store_tsv(Path::new(out))?;
+        eprintln!("wrote {out}");
+    } else {
+        print_result_columns(&result);
+    }
+    Ok(())
+}
+
 fn cmd_run(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    if let Some(plan) = get(flags, "plan") {
+        return cmd_run_plan(plan, flags);
+    }
     let workers: usize = get(flags, "workers").unwrap_or("4").parse()?;
     let engine = EngineKind::parse(get(flags, "engine").unwrap_or("pregel"))
         .ok_or("unknown engine (pregel|gas|pushpull|serial|tensor)")?;
@@ -143,16 +212,7 @@ fn cmd_run(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
         result.store_tsv(Path::new(out))?;
         eprintln!("wrote {out}");
     } else {
-        for (name, col) in &result.columns {
-            match col {
-                unigps::vcprog::Column::I64(v) => {
-                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
-                }
-                unigps::vcprog::Column::F64(v) => {
-                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
-                }
-            }
-        }
+        print_result_columns(&result);
     }
     Ok(())
 }
@@ -270,23 +330,22 @@ fn spec_from_flags(flags: &BTreeMap<String, String>) -> Result<String, AnyErr> {
 
 fn cmd_submit(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
     let socket = PathBuf::from(get(flags, "socket").ok_or("--socket required")?);
-    let spec = spec_from_flags(flags)?;
     let mut client = ServeClient::connect(&socket)?;
-    let id = client.submit(&spec)?;
+    // --plan submits the parsed plan over the binary wire codec; --spec
+    // and bare flags travel as spec text (the server parses both forms).
+    let id = match get(flags, "plan") {
+        Some(path) => {
+            let mut plan = unigps::plan::Plan::parse_text(&std::fs::read_to_string(path)?)?;
+            apply_plan_flags(&mut plan, flags)?;
+            client.submit_plan(&plan)?
+        }
+        None => client.submit(&spec_from_flags(flags)?)?,
+    };
     println!("job {id} submitted");
     if get(flags, "wait").is_some() {
         let result = client.wait(id, std::time::Duration::from_secs(3600))?;
         eprintln!("job {id} done: {}", result.metrics.summary());
-        for (name, col) in &result.columns {
-            match col {
-                unigps::vcprog::Column::I64(v) => {
-                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
-                }
-                unigps::vcprog::Column::F64(v) => {
-                    println!("{name}[0..8] = {:?}", &v[..v.len().min(8)])
-                }
-            }
-        }
+        print_result_columns(&result);
     }
     Ok(())
 }
@@ -308,10 +367,14 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
             s.jobs.rejected
         );
         println!(
-            "cache: {} loads, {} hits, {} misses, {} evictions, {} resident ({})",
+            "cache: {} loads, {} hits, {} misses | derived: {} loads, {} hits, {} misses \
+             | {} evictions, {} resident ({})",
             s.cache.loads,
             s.cache.hits,
             s.cache.misses,
+            s.cache.derived_loads,
+            s.cache.derived_hits,
+            s.cache.derived_misses,
             s.cache.evictions,
             s.cache.resident,
             unigps::util::fmt_bytes(s.cache.resident_bytes),

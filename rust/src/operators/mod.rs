@@ -1,14 +1,33 @@
-//! Native operator API (paper §IV-A/B).
+//! Native operators — single-op sugar over the plan IR (paper §IV-A/B).
 //!
 //! UniGPS exposes two programming surfaces: the VCProg API for custom
 //! programs, and pre-built **native operators** for the common algorithms.
-//! Each operator takes the paper's `engine=` parameter; builder-style
-//! options mirror Fig 3's keyword arguments.
+//! Since the plan unification, an operator invocation is just the
+//! smallest possible [`Plan`](crate::plan::Plan): the fluent
+//! [`OperatorBuilder`] records the operator plus an override config
+//! (`engine=`, `workers=`, ...) and lowers to a one-stage plan
+//! ([`OperatorBuilder::to_plan`]) that the shared plan executor runs —
+//! the *same* IR the `Session` convenience methods emit and the serving
+//! job specs decode to, so "which surface did this come from" can never
+//! change results.
+//!
+//! Two layers remain native here because the executor builds on them:
+//!
+//! * [`run_operator_prepared`] — dispatch an operator onto an engine,
+//!   assuming the graph is already in the operator's required view.
+//! * [`run_operator`] — the historical one-shot entry point: applies the
+//!   undirected view ([`symmetrized`]) for CC / LPA / k-core / triangles
+//!   ([`Operator::needs_symmetrized`]), then dispatches. Multi-op callers
+//!   should prefer a plan, which resolves the symmetrized view **once**
+//!   (and, under `unigps serve`, shares it across jobs via derived
+//!   snapshot keys).
 
 use crate::engine::{self, EngineKind, RunOptions, RunResult};
 use crate::error::Result;
 use crate::graph::builder::GraphBuilder;
 use crate::graph::Graph;
+use crate::plan::{Plan, Stage};
+use crate::session::Session;
 use crate::vcprog::programs::{
     Bfs, ConnectedComponents, DegreeCount, KCore, LabelPropagation, PageRank, SsspBellmanFord,
     TriangleCount,
@@ -50,60 +69,101 @@ impl Operator {
             Operator::Triangles => "triangles",
         }
     }
+
+    /// True for operators with undirected semantics on directed inputs
+    /// (CC, LPA, k-core, triangles — matching NetworkX's undirected
+    /// view): they run on the [`symmetrized`] graph.
+    pub fn needs_symmetrized(&self) -> bool {
+        matches!(
+            self,
+            Operator::ConnectedComponents
+                | Operator::Lpa { .. }
+                | Operator::KCore { .. }
+                | Operator::Triangles
+        )
+    }
 }
 
-/// Fluent builder returned by the operator entry points.
+/// Fluent builder returned by the operator entry points — thin sugar
+/// that records overrides and emits a one-stage [`Plan`].
 #[derive(Debug, Clone)]
 pub struct OperatorBuilder<'g> {
     graph: &'g Graph,
     op: Operator,
-    engine: EngineKind,
-    opts: RunOptions,
+    base: Session,
+    overrides: crate::config::Config,
 }
 
 impl<'g> OperatorBuilder<'g> {
-    /// Start building a run of `op` over `graph`.
+    /// Start building a run of `op` over `graph` with builder-default
+    /// session settings (Pregel, 4 workers).
     pub fn new(graph: &'g Graph, op: Operator) -> Self {
+        Self::over(graph, op, Session::builder().build())
+    }
+
+    /// Start building over an explicit base session (what
+    /// `Session::pagerank(...)` etc. use, so session defaults flow in).
+    pub fn over(graph: &'g Graph, op: Operator, base: Session) -> Self {
         OperatorBuilder {
             graph,
             op,
-            engine: EngineKind::Pregel,
-            opts: RunOptions::default(),
+            base,
+            overrides: crate::config::Config::new(),
         }
     }
 
     /// Select the backend engine (paper: the `engine=` parameter).
     pub fn engine(mut self, kind: EngineKind) -> Self {
-        self.engine = kind;
+        self.overrides.set("engine", kind.name());
         self
     }
 
     /// Worker thread count.
     pub fn workers(mut self, w: usize) -> Self {
-        self.opts.workers = w.max(1);
+        self.overrides.set("workers", &w.max(1).to_string());
         self
     }
 
     /// Maximum supersteps.
     pub fn max_iter(mut self, m: u32) -> Self {
-        self.opts.max_iter = m;
+        self.overrides.set("max_iter", &m.to_string());
         self
     }
 
-    /// Full options override.
+    /// Full options override (sets every option key).
     pub fn options(mut self, opts: RunOptions) -> Self {
-        self.opts = opts;
+        self.overrides.set("workers", &opts.workers.to_string());
+        self.overrides.set("max_iter", &opts.max_iter.to_string());
+        self.overrides.set("partition", opts.partition.name());
+        self.overrides.set("combiner", if opts.combiner { "true" } else { "false" });
+        self.overrides.set("pipeline", if opts.pipeline { "true" } else { "false" });
+        self.overrides
+            .set("step_metrics", if opts.step_metrics { "true" } else { "false" });
+        self.overrides
+            .set("pushpull_threshold", &opts.pushpull_threshold.to_string());
         self
     }
 
-    /// Execute the operator.
+    /// Lower to the plan IR: a one-stage plan whose stage carries this
+    /// builder's override config. The graph itself stays out of the plan
+    /// (plans name sources; builders hold the graph and execute via
+    /// [`Plan::run_on`]).
+    pub fn to_plan(&self) -> Plan {
+        Plan::new().stage(Stage {
+            op: crate::plan::StageOp::Op(self.op.clone()),
+            overrides: self.overrides.clone(),
+        })
+    }
+
+    /// Execute: lower to a plan and run it on the held graph.
     pub fn run(self) -> Result<RunResult> {
-        run_operator(self.graph, &self.op, self.engine, &self.opts)
+        self.to_plan().run_on(self.graph, &self.base)
     }
 }
 
 /// Symmetrize a graph (used by undirected-semantics operators on directed
-/// inputs: CC, k-core, triangles — matching NetworkX's undirected view).
+/// inputs: CC, LPA, k-core, triangles — matching NetworkX's undirected
+/// view). Deterministic, so derived snapshot caches may key on it.
 pub fn symmetrized(graph: &Graph) -> Graph {
     if !graph.topology().directed() {
         return graph.clone();
@@ -121,8 +181,11 @@ pub fn symmetrized(graph: &Graph) -> Graph {
     b.build().expect("symmetrization preserves range")
 }
 
-/// Dispatch a native operator onto an engine.
-pub fn run_operator(
+/// Dispatch a native operator onto an engine, assuming `graph` is already
+/// in the operator's required view (callers resolve
+/// [`Operator::needs_symmetrized`] first — the plan executor does this
+/// through its snapshot store so the undirected view is built once).
+pub fn run_operator_prepared(
     graph: &Graph,
     op: &Operator,
     kind: EngineKind,
@@ -139,27 +202,33 @@ pub fn run_operator(
             engine::run(kind, graph, &prog, &o)
         }
         Operator::Sssp { root } => engine::run(kind, graph, &SsspBellmanFord::new(root), opts),
-        Operator::ConnectedComponents => {
-            let g = symmetrized(graph);
-            engine::run(kind, &g, &ConnectedComponents::new(), opts)
-        }
+        Operator::ConnectedComponents => engine::run(kind, graph, &ConnectedComponents::new(), opts),
         Operator::Bfs { root } => engine::run(kind, graph, &Bfs::new(root), opts),
         Operator::Lpa { iterations } => {
-            let g = symmetrized(graph);
             let prog = LabelPropagation::new(iterations);
             let mut o = opts.clone();
             o.max_iter = o.max_iter.min(prog.rounds());
-            engine::run(kind, &g, &prog, &o)
+            engine::run(kind, graph, &prog, &o)
         }
         Operator::Degrees => engine::run(kind, graph, &DegreeCount::new(), opts),
-        Operator::KCore { k } => {
-            let g = symmetrized(graph);
-            engine::run(kind, &g, &KCore::new(k), opts)
-        }
-        Operator::Triangles => {
-            let g = symmetrized(graph);
-            engine::run(kind, &g, &TriangleCount::new(), opts)
-        }
+        Operator::KCore { k } => engine::run(kind, graph, &KCore::new(k), opts),
+        Operator::Triangles => engine::run(kind, graph, &TriangleCount::new(), opts),
+    }
+}
+
+/// One-shot dispatch: apply the operator's required view, then run. The
+/// historical entry point, still what single-op callers and ground-truth
+/// tests use; plans amortize the view across stages instead.
+pub fn run_operator(
+    graph: &Graph,
+    op: &Operator,
+    kind: EngineKind,
+    opts: &RunOptions,
+) -> Result<RunResult> {
+    if op.needs_symmetrized() {
+        run_operator_prepared(&symmetrized(graph), op, kind, opts)
+    } else {
+        run_operator_prepared(graph, op, kind, opts)
     }
 }
 
@@ -172,6 +241,8 @@ mod tests {
     fn operator_names() {
         assert_eq!(Operator::PageRank { iterations: 3 }.name(), "pagerank");
         assert_eq!(Operator::Triangles.name(), "triangles");
+        assert!(Operator::Triangles.needs_symmetrized());
+        assert!(!Operator::Sssp { root: 0 }.needs_symmetrized());
     }
 
     #[test]
@@ -232,5 +303,47 @@ mod tests {
         let hits = r.column("hits").unwrap().as_i64().unwrap();
         let total: i64 = hits.iter().sum();
         assert_eq!(total / 6, 1);
+    }
+
+    #[test]
+    fn builder_lowers_to_a_one_stage_plan() {
+        let g = from_pairs(true, &[(0, 1)]);
+        let plan = OperatorBuilder::new(&g, Operator::Sssp { root: 5 })
+            .engine(EngineKind::Gas)
+            .workers(3)
+            .to_plan();
+        assert_eq!(plan.stages().len(), 1);
+        let stage = plan.stages()[0];
+        assert_eq!(stage.op, crate::plan::StageOp::Op(Operator::Sssp { root: 5 }));
+        assert_eq!(stage.overrides.get("engine"), Some("gas"));
+        assert_eq!(stage.overrides.get("workers"), Some("3"));
+        assert!(plan.source.is_none(), "builders hold the graph, not a source");
+    }
+
+    #[test]
+    fn builder_options_override_wins_over_base_session() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (0, 2)]);
+        let base = Session::builder().workers(7).engine(EngineKind::Gas).build();
+        let r = OperatorBuilder::over(&g, Operator::Sssp { root: 0 }, base)
+            .options(RunOptions::default().with_workers(2))
+            .run()
+            .unwrap();
+        assert_eq!(r.metrics.workers, 2, "explicit options beat session defaults");
+    }
+
+    #[test]
+    fn run_operator_matches_prepared_on_symmetrized_input() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 0), (3, 0)]);
+        let opts = RunOptions::default().with_workers(2);
+        let via_wrapper =
+            run_operator(&g, &Operator::ConnectedComponents, EngineKind::Pregel, &opts).unwrap();
+        let via_prepared = run_operator_prepared(
+            &symmetrized(&g),
+            &Operator::ConnectedComponents,
+            EngineKind::Pregel,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(via_wrapper.columns, via_prepared.columns);
     }
 }

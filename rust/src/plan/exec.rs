@@ -1,0 +1,888 @@
+//! The plan executor: graph-variant resolution, stage dispatch, post-ops.
+//!
+//! Execution walks [`Plan::steps`](crate::plan::Plan) in order, holding
+//! one *current graph*. Transforms replace it; run stages execute on it
+//! (fetching the symmetrized view when the operator needs undirected
+//! semantics, exactly like the historical per-op `symmetrized()` call —
+//! but resolved through a [`SnapshotStore`] so it happens **once**).
+//!
+//! ## Snapshot stores and derived keys
+//!
+//! Pure transforms (`Symmetrize`, `RelabelByDegree`) are deterministic
+//! functions of the current graph, so their results are addressed by a
+//! *derived key*: the base snapshot key plus the canonical transform-tag
+//! chain (`…|sym`, `…|sym|deg`). The base graph enters as a
+//! [`GraphHandle`] — borrowed in process (no copy), snapshot-shared under
+//! serve — and the [`SnapshotStore`] trait abstracts where derived
+//! variants live:
+//!
+//! * [`MemoStore`] — per-execution memoization for the in-process paths
+//!   ([`Plan::run_on`] / [`Plan::run`]): a 3-stage plan symmetrizes once
+//!   instead of once per undirected-semantics op.
+//! * the serving scheduler's cache-backed store — derived keys resolve
+//!   through the shared [`SnapshotCache`](crate::serve::cache::SnapshotCache)
+//!   with the same single-flight discipline as base snapshots, so N
+//!   concurrent identical plans perform one base load **and one derive**
+//!   total (tracked by the cache's split dataset-level vs derived-level
+//!   counters).
+//!
+//! `SubgraphByColumn` depends on an earlier stage's output, so its result
+//! is never shared across plans; it is computed per execution and the
+//! chain resets (`pure = false`).
+//!
+//! ## Vertex identity
+//!
+//! Relabeling and filtering change the local vertex id space. The
+//! executor threads an *origin map* (local id → base-graph id) through
+//! every transform; each stage output remembers the map its graph had, and
+//! post-ops join stage outputs on original ids. A plan whose final table
+//! ran on a transformed id space gets a `vertex` column of original ids
+//! prepended; plans on the base id space return their table unchanged
+//! (bit-identical to the historical single-op paths).
+
+use crate::config::Config;
+use crate::engine::{self, EngineKind, RunOptions, RunResult};
+use crate::error::{Result, UniGpsError};
+use crate::graph::builder::GraphBuilder;
+use crate::graph::Graph;
+use crate::operators::{run_operator_prepared, symmetrized};
+use crate::plan::{Cmp, JoinItem, Plan, PlanStep, PostOp, Stage, StageOp, Transform};
+use crate::session::Session;
+use crate::vcprog::programs::Reachability;
+use crate::vcprog::Column;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// The plan's base graph as the executor holds it: borrowed from the
+/// caller (the fluent single-op path — no copy) or shared out of a
+/// snapshot store / loader. Cheap to clone either way.
+#[derive(Clone)]
+pub enum GraphHandle<'g> {
+    /// A caller-owned graph ([`Plan::run_on`]).
+    Borrowed(&'g Graph),
+    /// A resident snapshot (loaders, caches, derived variants).
+    Shared(Arc<Graph>),
+}
+
+impl GraphHandle<'_> {
+    /// The underlying graph.
+    pub fn graph(&self) -> &Graph {
+        match self {
+            GraphHandle::Borrowed(g) => g,
+            GraphHandle::Shared(g) => g,
+        }
+    }
+}
+
+/// Where the executor gets *derived* graph variants (the base graph is a
+/// [`GraphHandle`] the caller resolves — borrowed in process, cache- or
+/// loader-shared otherwise). Variants are addressed by their canonical
+/// pure-transform tag chain; implementations decide the sharing scope —
+/// the per-execution [`MemoStore`] here, the cross-job snapshot cache in
+/// [`crate::serve`].
+pub trait SnapshotStore {
+    /// The variant reached by applying `chain` (in order) to the base
+    /// graph; `derive` computes it when not already resident.
+    fn derived(
+        &mut self,
+        chain: &[&'static str],
+        derive: &mut dyn FnMut() -> Result<Graph>,
+    ) -> Result<Arc<Graph>>;
+}
+
+/// Per-execution derived-variant memoization (the in-process store): a
+/// 3-stage plan symmetrizes once instead of once per stage.
+#[derive(Default)]
+pub struct MemoStore {
+    memo: HashMap<String, Arc<Graph>>,
+}
+
+impl MemoStore {
+    /// An empty memo.
+    pub fn new() -> MemoStore {
+        MemoStore::default()
+    }
+}
+
+impl SnapshotStore for MemoStore {
+    fn derived(
+        &mut self,
+        chain: &[&'static str],
+        derive: &mut dyn FnMut() -> Result<Graph>,
+    ) -> Result<Arc<Graph>> {
+        let key = chain.join("|");
+        if let Some(g) = self.memo.get(&key) {
+            return Ok(g.clone());
+        }
+        let g = Arc::new(derive()?);
+        self.memo.insert(key, g.clone());
+        Ok(g)
+    }
+}
+
+/// Run a registered custom VCProg by name — the plan IR's escape hatch
+/// for programs without a native-operator wrapper. Registered programs:
+///
+/// | name | params | output |
+/// |------|--------|--------|
+/// | `reachability` | `root` (default 0) | `reachable` per vertex |
+///
+/// Unknown names fail with a typed [`UniGpsError::Config`]. In-process
+/// callers with a bespoke program type should use
+/// [`Session::vcprog`](crate::session::Session::vcprog) directly.
+pub fn run_custom(
+    name: &str,
+    params: &Config,
+    graph: &Graph,
+    kind: EngineKind,
+    opts: &RunOptions,
+) -> Result<RunResult> {
+    match name {
+        "reachability" => {
+            let root = params.get_usize("root", 0)? as u32;
+            engine::run(kind, graph, &Reachability::new(root), opts)
+        }
+        other => Err(UniGpsError::Config(format!(
+            "unknown custom program '{other}' (registered: reachability)"
+        ))),
+    }
+}
+
+/// The detailed outcome of executing a plan.
+#[derive(Debug, Clone)]
+pub struct PlanOutput {
+    /// Per-stage result tables, in stage order (each with its own
+    /// metrics; rows in that stage's local vertex order).
+    pub stages: Vec<RunResult>,
+    /// The final table: post-ops applied (or the last stage's table when
+    /// the plan has none), metrics aggregated across stages.
+    pub result: RunResult,
+}
+
+/// One stage output plus the vertex-identity map of the graph it ran on.
+struct StageOutput {
+    result: RunResult,
+    /// Local row → base-graph vertex id; `None` = identity.
+    origin: Option<Arc<Vec<u32>>>,
+}
+
+/// Executor state: the current graph and how it relates to the base.
+struct ExecState<'g> {
+    graph: GraphHandle<'g>,
+    /// Canonical pure-transform chain since the base (valid while `pure`).
+    chain: Vec<&'static str>,
+    /// False once a stage-dependent transform made the graph unshareable.
+    pure: bool,
+    /// The graph is known symmetric (undirected, or symmetrized, or a
+    /// symmetry-preserving transform of one).
+    symmetric: bool,
+    /// Local id → base id (`None` = identity).
+    origin: Option<Arc<Vec<u32>>>,
+    /// Memoized op-local symmetrized view of the current *impure* graph.
+    local_sym: Option<Arc<Graph>>,
+}
+
+impl ExecState<'_> {
+    fn replace_graph(&mut self, graph: Arc<Graph>) {
+        self.graph = GraphHandle::Shared(graph);
+        self.local_sym = None;
+    }
+}
+
+/// Execute `plan` against `base` session settings: `base_graph` is the
+/// plan's resolved base (borrowed in process, snapshot-shared under
+/// serve), derived variants resolve through `store`, and `worker_cap`
+/// bounds every stage's worker count (the serving scheduler passes its
+/// per-slot core share; in-process paths pass `usize::MAX`).
+pub fn execute(
+    plan: &Plan,
+    base: &Session,
+    base_graph: GraphHandle<'_>,
+    store: &mut dyn SnapshotStore,
+    worker_cap: usize,
+) -> Result<PlanOutput> {
+    plan.validate()?;
+    let defaults = base.overlay_config(&plan.defaults)?;
+    // Resolve every stage's session up front so a bad per-stage override
+    // fails before any compute runs.
+    let mut stage_sessions = Vec::new();
+    for step in &plan.steps {
+        if let PlanStep::Run(stage) = step {
+            stage_sessions.push(defaults.overlay_config(&stage.overrides)?);
+        }
+    }
+
+    let mut state = ExecState {
+        symmetric: !base_graph.graph().topology().directed(),
+        graph: base_graph,
+        chain: Vec::new(),
+        pure: true,
+        origin: None,
+        local_sym: None,
+    };
+    let mut outputs: Vec<StageOutput> = Vec::new();
+
+    for step in &plan.steps {
+        match step {
+            PlanStep::Transform(t) => apply_transform(t, &mut state, store, &outputs)?,
+            PlanStep::Run(stage) => {
+                let session = &stage_sessions[outputs.len()];
+                let mut opts = session.options().clone();
+                opts.workers = opts.workers.min(worker_cap).max(1);
+                let result = run_stage(stage, &mut state, store, session, &opts)?;
+                outputs.push(StageOutput {
+                    result,
+                    origin: state.origin.clone(),
+                });
+            }
+        }
+    }
+
+    let result = finish(&plan.post, &outputs)?;
+    Ok(PlanOutput {
+        stages: outputs.into_iter().map(|o| o.result).collect(),
+        result,
+    })
+}
+
+/// Resolve a pure variant of the current graph: through the store (shared
+/// derived key) while the chain is pure, locally otherwise.
+fn pure_variant(
+    state: &mut ExecState<'_>,
+    store: &mut dyn SnapshotStore,
+    tag: &'static str,
+    derive: impl Fn(&Graph) -> Result<Graph>,
+) -> Result<Arc<Graph>> {
+    if state.pure {
+        let mut chain = state.chain.clone();
+        chain.push(tag);
+        let parent = state.graph.clone();
+        store.derived(&chain, &mut || derive(parent.graph()))
+    } else {
+        Ok(Arc::new(derive(state.graph.graph())?))
+    }
+}
+
+fn apply_transform(
+    t: &Transform,
+    state: &mut ExecState<'_>,
+    store: &mut dyn SnapshotStore,
+    outputs: &[StageOutput],
+) -> Result<()> {
+    match t {
+        Transform::Symmetrize => {
+            if state.symmetric {
+                return Ok(()); // idempotent: key chain stays normalized
+            }
+            let g = pure_variant(state, store, "sym", |g| Ok(symmetrized(g)))?;
+            state.replace_graph(g);
+            if state.pure {
+                state.chain.push("sym");
+            }
+            state.symmetric = true;
+        }
+        Transform::RelabelByDegree => {
+            // The permutation is cheap relative to the rebuild; recompute
+            // it from the parent even on a derived-cache hit so the origin
+            // map is always available.
+            let perm = degree_order(state.graph.graph());
+            let g = pure_variant(state, store, "deg", |g| Ok(relabel(g, &perm)))?;
+            state.replace_graph(g);
+            if state.pure {
+                state.chain.push("deg");
+            }
+            let origin: Vec<u32> = match &state.origin {
+                None => perm.clone(),
+                Some(o) => perm.iter().map(|&old| o[old as usize]).collect(),
+            };
+            state.origin = Some(Arc::new(origin));
+            // Relabeling permutes both endpoints; symmetry is preserved.
+        }
+        Transform::SubgraphByColumn {
+            stage,
+            column,
+            pred,
+        } => {
+            let out = outputs.get(*stage).ok_or_else(|| {
+                UniGpsError::Config(format!("subgraph filter references unknown stage {stage}"))
+            })?;
+            if out.origin != state.origin {
+                return Err(UniGpsError::Config(format!(
+                    "subgraph filter needs stage {stage} to have run on the current \
+                     vertex set; insert the filter before later relabel/filter steps"
+                )));
+            }
+            let col = out.result.column(column).ok_or_else(|| {
+                UniGpsError::Config(format!(
+                    "subgraph filter: stage {stage} has no column '{column}'"
+                ))
+            })?;
+            let n = state.graph.graph().num_vertices();
+            if col.len() != n {
+                return Err(UniGpsError::Config(format!(
+                    "subgraph filter: column '{column}' has {} rows but the graph has {n} \
+                     vertices",
+                    col.len()
+                )));
+            }
+            let keep: Vec<u32> = (0..n as u32)
+                .filter(|&v| pred.cmp.holds(column_value(col, v as usize), pred.value))
+                .collect();
+            if keep.is_empty() {
+                return Err(UniGpsError::Config(format!(
+                    "subgraph filter '{column} {} {}' kept 0 of {n} vertices",
+                    pred.cmp.name(),
+                    pred.value
+                )));
+            }
+            let g = Arc::new(induced_subgraph(state.graph.graph(), &keep));
+            state.replace_graph(g);
+            let origin: Vec<u32> = match &state.origin {
+                None => keep.clone(),
+                Some(o) => keep.iter().map(|&v| o[v as usize]).collect(),
+            };
+            state.origin = Some(Arc::new(origin));
+            state.pure = false;
+            state.chain.clear();
+            // A vertex-induced subgraph of a symmetric graph is symmetric.
+        }
+    }
+    Ok(())
+}
+
+fn run_stage(
+    stage: &Stage,
+    state: &mut ExecState<'_>,
+    store: &mut dyn SnapshotStore,
+    session: &Session,
+    opts: &RunOptions,
+) -> Result<RunResult> {
+    let needs_sym = match &stage.op {
+        StageOp::Op(op) => op.needs_symmetrized(),
+        StageOp::Custom { .. } => false,
+    };
+    let graph = if needs_sym && !state.symmetric {
+        // Op-local undirected view (historical `run_operator` semantics):
+        // the plan's current graph is unchanged for later steps.
+        if state.pure {
+            GraphHandle::Shared(pure_variant(state, store, "sym", |g| Ok(symmetrized(g)))?)
+        } else if let Some(g) = &state.local_sym {
+            GraphHandle::Shared(g.clone())
+        } else {
+            let g = Arc::new(symmetrized(state.graph.graph()));
+            state.local_sym = Some(g.clone());
+            GraphHandle::Shared(g)
+        }
+    } else {
+        state.graph.clone()
+    };
+    let graph = graph.graph();
+    match &stage.op {
+        StageOp::Op(op) => run_operator_prepared(graph, op, session.default_engine(), opts),
+        StageOp::Custom { name, params } => {
+            run_custom(name, params, graph, session.default_engine(), opts)
+        }
+    }
+}
+
+/// Vertex ids ordered by descending out-degree, ties by ascending id:
+/// `perm[new_id] = old_id`.
+fn degree_order(g: &Graph) -> Vec<u32> {
+    let topo = g.topology();
+    let mut order: Vec<u32> = (0..g.num_vertices() as u32).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(topo.out_degree(v)), v));
+    order
+}
+
+/// Rebuild `g` with vertices renamed by `perm` (`perm[new] = old`),
+/// preserving edge multiplicity and weights. Undirected topologies store
+/// both mirror directions physically and the builder re-mirrors at build
+/// time, so only the canonical half (`src <= dst`) is emitted for them.
+fn relabel(g: &Graph, perm: &[u32]) -> Graph {
+    let topo = g.topology();
+    let directed = topo.directed();
+    let mut new_of = vec![0u32; perm.len()];
+    for (new, &old) in perm.iter().enumerate() {
+        new_of[old as usize] = new as u32;
+    }
+    let mut b = GraphBuilder::new(directed);
+    b.ensure_vertices(g.num_vertices());
+    b.reserve(g.num_edges());
+    for v in 0..g.num_vertices() as u32 {
+        for (eid, dst) in topo.out_edges(v) {
+            if !directed && dst < v {
+                continue; // the mirror copy; the builder regenerates it
+            }
+            b.add_edge(new_of[v as usize], new_of[dst as usize], *g.edge_prop(eid));
+        }
+    }
+    b.build().expect("relabel preserves vertex range")
+}
+
+/// The subgraph induced on `keep` (sorted ascending): edges survive when
+/// both endpoints do; weights carried over; ids compacted in `keep` order.
+fn induced_subgraph(g: &Graph, keep: &[u32]) -> Graph {
+    let topo = g.topology();
+    let directed = topo.directed();
+    const GONE: u32 = u32::MAX;
+    let mut new_of = vec![GONE; g.num_vertices()];
+    for (new, &old) in keep.iter().enumerate() {
+        new_of[old as usize] = new as u32;
+    }
+    let mut b = GraphBuilder::new(directed);
+    b.ensure_vertices(keep.len());
+    for &old in keep {
+        let src = new_of[old as usize];
+        for (eid, dst) in topo.out_edges(old) {
+            if !directed && dst < old {
+                continue; // the mirror copy; the builder regenerates it
+            }
+            let dst = new_of[dst as usize];
+            if dst != GONE {
+                b.add_edge(src, dst, *g.edge_prop(eid));
+            }
+        }
+    }
+    b.build().expect("subgraph ids are compact")
+}
+
+fn column_value(col: &Column, row: usize) -> f64 {
+    match col {
+        Column::I64(v) => v[row] as f64,
+        Column::F64(v) => v[row],
+    }
+}
+
+fn select_rows(col: &Column, rows: &[usize]) -> Column {
+    match col {
+        Column::I64(v) => Column::I64(rows.iter().map(|&r| v[r]).collect()),
+        Column::F64(v) => Column::F64(rows.iter().map(|&r| v[r]).collect()),
+    }
+}
+
+/// The working table post-ops thread through.
+struct Table {
+    /// Base-graph vertex id per row; `None` = identity over the base set.
+    vertex: Option<Vec<u32>>,
+    columns: Vec<(String, Column)>,
+}
+
+impl Table {
+    fn from_stage(out: &StageOutput) -> Table {
+        Table {
+            vertex: out.origin.as_ref().map(|o| o.as_ref().clone()),
+            columns: out.result.columns.clone(),
+        }
+    }
+
+    fn row_id(&self, row: usize) -> u32 {
+        match &self.vertex {
+            Some(v) => v[row],
+            None => row as u32,
+        }
+    }
+
+    fn rows(&self) -> usize {
+        self.columns.first().map(|(_, c)| c.len()).unwrap_or(0)
+    }
+}
+
+/// Apply post-ops and aggregate metrics into the final [`RunResult`].
+fn finish(post: &[PostOp], outputs: &[StageOutput]) -> Result<RunResult> {
+    let last = outputs.last().expect("validated: at least one stage");
+    let mut table = Table::from_stage(last);
+    for p in post {
+        table = apply_post(p, table, outputs)?;
+    }
+    let mut columns = table.columns;
+    if let Some(ids) = table.vertex {
+        let mut out = Vec::with_capacity(columns.len() + 1);
+        out.push((
+            "vertex".to_string(),
+            Column::I64(ids.iter().map(|&v| v as i64).collect()),
+        ));
+        out.extend(columns);
+        columns = out;
+    }
+    Ok(RunResult {
+        columns,
+        metrics: aggregate_metrics(outputs),
+    })
+}
+
+fn source_table(
+    stage: &Option<usize>,
+    working: Table,
+    outputs: &[StageOutput],
+) -> Result<Table> {
+    match stage {
+        None => Ok(working),
+        Some(i) => outputs
+            .get(*i)
+            .map(Table::from_stage)
+            .ok_or_else(|| UniGpsError::Config(format!("post-op references unknown stage {i}"))),
+    }
+}
+
+fn apply_post(p: &PostOp, working: Table, outputs: &[StageOutput]) -> Result<Table> {
+    match p {
+        PostOp::Select { stage, columns } => {
+            let src = source_table(stage, working, outputs)?;
+            let mut picked = Vec::with_capacity(columns.len());
+            for name in columns {
+                let col = src
+                    .columns
+                    .iter()
+                    .find(|(n, _)| n == name)
+                    .ok_or_else(|| {
+                        UniGpsError::Config(format!("select: no column '{name}'"))
+                    })?;
+                picked.push(col.clone());
+            }
+            Ok(Table {
+                vertex: src.vertex,
+                columns: picked,
+            })
+        }
+        PostOp::TopK { stage, column, k } => {
+            let src = source_table(stage, working, outputs)?;
+            let col = src
+                .columns
+                .iter()
+                .find(|(n, _)| n == column)
+                .map(|(_, c)| c)
+                .ok_or_else(|| UniGpsError::Config(format!("topk: no column '{column}'")))?;
+            let mut rows: Vec<usize> = (0..src.rows()).collect();
+            rows.sort_by(|&a, &b| {
+                column_value(col, b)
+                    .total_cmp(&column_value(col, a))
+                    .then(src.row_id(a).cmp(&src.row_id(b)))
+            });
+            rows.truncate(*k);
+            let vertex = Some(rows.iter().map(|&r| src.row_id(r)).collect());
+            let columns = src
+                .columns
+                .iter()
+                .map(|(n, c)| (n.clone(), select_rows(c, &rows)))
+                .collect();
+            Ok(Table { vertex, columns })
+        }
+        PostOp::JoinColumns { items } => {
+            // Row index per base vertex id, per referenced stage.
+            let mut maps: HashMap<usize, HashMap<u32, usize>> = HashMap::new();
+            for it in items {
+                let out = outputs.get(it.stage).ok_or_else(|| {
+                    UniGpsError::Config(format!("join references unknown stage {}", it.stage))
+                })?;
+                maps.entry(it.stage).or_insert_with(|| match &out.origin {
+                    None => (0..out.result.columns.first().map(|(_, c)| c.len()).unwrap_or(0))
+                        .map(|r| (r as u32, r))
+                        .collect(),
+                    Some(o) => o.iter().enumerate().map(|(r, &v)| (v, r)).collect(),
+                });
+            }
+            // Inner join: ids present in every referenced stage, ascending.
+            let first = &maps[&items[0].stage];
+            let mut ids: Vec<u32> = first
+                .keys()
+                .copied()
+                .filter(|id| maps.values().all(|m| m.contains_key(id)))
+                .collect();
+            ids.sort_unstable();
+            let mut columns = Vec::with_capacity(items.len());
+            for it in items {
+                let out = &outputs[it.stage];
+                let col = out.result.column(&it.column).ok_or_else(|| {
+                    UniGpsError::Config(format!(
+                        "join: stage {} has no column '{}'",
+                        it.stage, it.column
+                    ))
+                })?;
+                let map = &maps[&it.stage];
+                let rows: Vec<usize> = ids.iter().map(|id| map[id]).collect();
+                columns.push((it.out_name().to_string(), select_rows(col, &rows)));
+            }
+            Ok(Table {
+                vertex: Some(ids),
+                columns,
+            })
+        }
+    }
+}
+
+/// One stage's metrics pass through unchanged (single-op back-compat);
+/// multi-stage plans aggregate: sums for counters and elapsed, max
+/// workers, AND of convergence, step breakdowns concatenated.
+fn aggregate_metrics(outputs: &[StageOutput]) -> crate::distributed::metrics::RunMetrics {
+    if outputs.len() == 1 {
+        return outputs[0].result.metrics.clone();
+    }
+    let mut agg = crate::distributed::metrics::RunMetrics {
+        converged: true,
+        ..Default::default()
+    };
+    for o in outputs {
+        let m = &o.result.metrics;
+        agg.supersteps += m.supersteps;
+        agg.total_messages += m.total_messages;
+        agg.total_message_bytes += m.total_message_bytes;
+        agg.udf_calls += m.udf_calls;
+        agg.elapsed += m.elapsed;
+        agg.converged &= m.converged;
+        agg.workers = agg.workers.max(m.workers);
+        agg.steps.extend(m.steps.iter().cloned());
+    }
+    agg
+}
+
+impl Plan {
+    /// Execute against a caller-provided graph (the in-process path the
+    /// [`OperatorBuilder`](crate::operators::OperatorBuilder) sugar uses).
+    /// Derived variants are memoized per call.
+    pub fn run_on(&self, graph: &Graph, session: &Session) -> Result<RunResult> {
+        self.run_on_detailed(graph, session).map(|o| o.result)
+    }
+
+    /// [`Plan::run_on`], returning per-stage tables too. The graph is
+    /// borrowed as-is — no copy on the single-op fast path.
+    pub fn run_on_detailed(&self, graph: &Graph, session: &Session) -> Result<PlanOutput> {
+        let mut store = MemoStore::new();
+        execute(self, session, GraphHandle::Borrowed(graph), &mut store, usize::MAX)
+    }
+
+    /// Execute by materializing the plan's [source](crate::plan::DatasetRef)
+    /// through `session` (the CLI `run --plan` path).
+    pub fn run(&self, session: &Session) -> Result<RunResult> {
+        self.run_detailed(session).map(|o| o.result)
+    }
+
+    /// [`Plan::run`], returning per-stage tables too.
+    pub fn run_detailed(&self, session: &Session) -> Result<PlanOutput> {
+        let source = self.source.as_ref().ok_or_else(|| {
+            UniGpsError::Config("plan has no graph source (use run_on, or add one)".into())
+        })?;
+        let base = Arc::new(source.load(session)?);
+        let mut store = MemoStore::new();
+        execute(self, session, GraphHandle::Shared(base), &mut store, usize::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+    use crate::operators::Operator;
+    use crate::plan::{DatasetRef, Pred};
+
+    fn session() -> Session {
+        Session::builder().workers(2).build()
+    }
+
+    #[test]
+    fn single_op_plan_matches_run_operator() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (0, 2)]);
+        let plan = Plan::single(Operator::Sssp { root: 0 });
+        let r = plan.run_on(&g, &session()).unwrap();
+        let direct = crate::operators::run_operator(
+            &g,
+            &Operator::Sssp { root: 0 },
+            EngineKind::Pregel,
+            session().options(),
+        )
+        .unwrap();
+        assert_eq!(r.columns, direct.columns);
+        assert_eq!(r.metrics.supersteps, direct.metrics.supersteps);
+    }
+
+    #[test]
+    fn symmetrize_is_shared_across_stages() {
+        // Count derives through a store wrapper: a sym transform followed
+        // by two undirected-semantics stages must derive exactly once.
+        struct Counting {
+            inner: MemoStore,
+            derives: usize,
+        }
+        impl SnapshotStore for Counting {
+            fn derived(
+                &mut self,
+                chain: &[&'static str],
+                derive: &mut dyn FnMut() -> Result<Graph>,
+            ) -> Result<Arc<Graph>> {
+                let fresh = !self.inner.memo.contains_key(&chain.join("|"));
+                let g = self.inner.derived(chain, derive)?;
+                if fresh {
+                    self.derives += 1;
+                }
+                Ok(g)
+            }
+        }
+        let g = from_pairs(true, &[(0, 1), (1, 2), (2, 3), (3, 0), (1, 3)]);
+        let plan = Plan::new()
+            .transform(Transform::Symmetrize)
+            .stage(Stage::op(Operator::ConnectedComponents))
+            .stage(Stage::op(Operator::KCore { k: 2 }));
+        let mut store = Counting {
+            inner: MemoStore::new(),
+            derives: 0,
+        };
+        let out = execute(
+            &plan,
+            &session(),
+            GraphHandle::Borrowed(&g),
+            &mut store,
+            usize::MAX,
+        )
+        .unwrap();
+        assert_eq!(store.derives, 1, "one symmetrize for transform + 2 stages");
+        assert_eq!(out.stages.len(), 2);
+        // And the results match the historical per-op path.
+        let cc = crate::operators::run_operator(
+            &g,
+            &Operator::ConnectedComponents,
+            EngineKind::Pregel,
+            session().options(),
+        )
+        .unwrap();
+        assert_eq!(out.stages[0].columns, cc.columns);
+    }
+
+    #[test]
+    fn relabel_by_degree_carries_origin_ids() {
+        // Star around vertex 3: relabel moves it to id 0.
+        let g = from_pairs(true, &[(3, 0), (3, 1), (3, 2), (0, 1)]);
+        let plan = Plan::new()
+            .transform(Transform::RelabelByDegree)
+            .stage(Stage::op(Operator::Degrees));
+        let r = plan.run_on(&g, &session()).unwrap();
+        let vertex = r.column("vertex").unwrap().as_i64().unwrap();
+        assert_eq!(vertex[0], 3, "highest-degree original id first");
+        let out = r.column("out_degree").unwrap().as_i64().unwrap();
+        assert_eq!(out[0], 3, "its out-degree rides along");
+        assert_eq!(vertex.len(), g.num_vertices());
+    }
+
+    #[test]
+    fn subgraph_filter_then_stage_joins_on_original_ids() {
+        // Two triangles joined by a bridge; kcore(2) keeps both triangles,
+        // drops nothing here — so filter on degrees >= 2 instead.
+        let g = from_pairs(
+            false,
+            &[(0, 1), (1, 2), (0, 2), (2, 3), (3, 4), (4, 5), (3, 5)],
+        );
+        let plan = Plan::new()
+            .stage(Stage::op(Operator::Degrees))
+            .transform(Transform::SubgraphByColumn {
+                stage: 0,
+                column: "out_degree".into(),
+                pred: Pred { cmp: Cmp::Ge, value: 3.0 },
+            })
+            .stage(Stage::op(Operator::Degrees))
+            .post(PostOp::JoinColumns {
+                items: vec![
+                    JoinItem { stage: 0, column: "out_degree".into(), rename: Some("deg_full".into()) },
+                    JoinItem { stage: 1, column: "out_degree".into(), rename: Some("deg_sub".into()) },
+                ],
+            });
+        let r = plan.run_on(&g, &session()).unwrap();
+        // Vertices 2 and 3 have degree 3 in the undirected view.
+        let vertex = r.column("vertex").unwrap().as_i64().unwrap();
+        assert_eq!(vertex, &[2, 3]);
+        let full = r.column("deg_full").unwrap().as_i64().unwrap();
+        assert_eq!(full, &[3, 3]);
+        let sub = r.column("deg_sub").unwrap().as_i64().unwrap();
+        assert_eq!(sub, &[1, 1], "only the bridge edge survives the filter");
+    }
+
+    #[test]
+    fn topk_and_select_post_ops() {
+        let g = from_pairs(true, &[(0, 1), (0, 2), (0, 3), (1, 2)]);
+        let plan = Plan::new()
+            .stage(Stage::op(Operator::Degrees))
+            .post(PostOp::TopK { stage: None, column: "out_degree".into(), k: 2 })
+            .post(PostOp::Select { stage: None, columns: vec!["out_degree".into()] });
+        let r = plan.run_on(&g, &session()).unwrap();
+        let vertex = r.column("vertex").unwrap().as_i64().unwrap();
+        assert_eq!(vertex, &[0, 1]);
+        let out = r.column("out_degree").unwrap().as_i64().unwrap();
+        assert_eq!(out, &[3, 1]);
+        assert_eq!(r.columns.len(), 2, "vertex + selected column only");
+    }
+
+    #[test]
+    fn filter_keeping_nothing_is_a_typed_error() {
+        let g = from_pairs(true, &[(0, 1)]);
+        let plan = Plan::new()
+            .stage(Stage::op(Operator::Degrees))
+            .transform(Transform::SubgraphByColumn {
+                stage: 0,
+                column: "out_degree".into(),
+                pred: Pred { cmp: Cmp::Ge, value: 99.0 },
+            })
+            .stage(Stage::op(Operator::Degrees));
+        let err = plan.run_on(&g, &session()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("kept 0"), "{err}");
+    }
+
+    #[test]
+    fn custom_stage_runs_registered_program() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (3, 4)]);
+        let mut params = Config::new();
+        params.set("root", "0");
+        let plan = Plan::new().stage(Stage::custom("reachability", params));
+        let r = plan.run_on(&g, &session()).unwrap();
+        let reachable = r.column("reachable").unwrap().as_i64().unwrap();
+        assert_eq!(reachable, &[1, 1, 1, 0, 0]);
+        // Unknown names fail typed.
+        let plan = Plan::new().stage(Stage::custom("astrology", Config::new()));
+        assert!(matches!(
+            plan.run_on(&g, &session()).unwrap_err(),
+            UniGpsError::Config(_)
+        ));
+    }
+
+    #[test]
+    fn per_stage_engine_and_options_apply() {
+        let g = from_pairs(true, &[(0, 1), (1, 2), (0, 2)]);
+        let plan = Plan::new()
+            .stage(Stage::op(Operator::Sssp { root: 0 }).engine(EngineKind::Serial))
+            .stage(
+                Stage::op(Operator::Sssp { root: 0 })
+                    .engine(EngineKind::PushPull)
+                    .set("workers", 3),
+            );
+        let out = plan.run_on_detailed(&g, &session()).unwrap();
+        assert_eq!(out.stages[0].metrics.workers, 1, "serial runs one worker");
+        assert_eq!(out.stages[1].metrics.workers, 3, "stage override wins");
+        assert_eq!(
+            out.stages[0].column("distance").unwrap().as_i64().unwrap(),
+            out.stages[1].column("distance").unwrap().as_i64().unwrap()
+        );
+    }
+
+    #[test]
+    fn run_resolves_named_sources_and_missing_source_is_typed() {
+        let plan = Plan::single(Operator::Degrees).source(DatasetRef::Synthetic {
+            kind: "er".into(),
+            vertices: 64,
+            edges: 128,
+            seed: 5,
+        });
+        let r = plan.run(&session()).unwrap();
+        assert_eq!(r.column("out_degree").unwrap().len(), 64);
+        let err = Plan::single(Operator::Degrees).run(&session()).unwrap_err();
+        assert!(err.to_string().contains("no graph source"), "{err}");
+    }
+
+    #[test]
+    fn multi_stage_metrics_aggregate() {
+        let g = from_pairs(true, &[(0, 1), (1, 2)]);
+        let plan = Plan::new()
+            .stage(Stage::op(Operator::Degrees))
+            .stage(Stage::op(Operator::Sssp { root: 0 }));
+        let out = plan.run_on_detailed(&g, &session()).unwrap();
+        let sum: u32 = out.stages.iter().map(|s| s.metrics.supersteps).sum();
+        assert_eq!(out.result.metrics.supersteps, sum);
+        assert!(out.result.metrics.converged);
+    }
+}

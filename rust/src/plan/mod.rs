@@ -1,0 +1,500 @@
+//! The logical-plan IR — the one program description every surface
+//! lowers to and every executor consumes.
+//!
+//! The paper's central claim is a *single* programming surface over many
+//! execution substrates. Before this module existed the repo had three
+//! divergent ones — the fluent [`OperatorBuilder`](crate::operators::OperatorBuilder),
+//! the [`Session`](crate::session::Session) convenience methods, and the
+//! serving path's `key = value` job specs — each able to express exactly
+//! one operator per invocation. A [`Plan`] unifies them: it names a graph
+//! [source](DatasetRef), an ordered list of [steps](PlanStep) (graph
+//! [transforms](Transform) and [run stages](Stage)), and result
+//! [post-ops](PostOp), so a GraphScope-style chain (build → symmetrize →
+//! k-core → LPA → join) is one submission instead of N processes.
+//!
+//! * [`source`] — [`DatasetRef`]: named / synthetic / file graph sources
+//!   with canonical cache keys and allocation caps.
+//! * [`exec`] — the executor: resolves graph variants through a
+//!   [`SnapshotStore`](exec::SnapshotStore) (a per-plan memo locally; the
+//!   serving subsystem's derived-key snapshot cache behind `unigps
+//!   serve`), runs each stage on its engine, applies post-ops.
+//! * [`text`] — the sectioned `key = value` plan file format
+//!   (`unigps run --plan <file>`, documented in `docs/plans.md`).
+//! * [`wire`] — the length-checked binary codec plans travel in over the
+//!   serve socket.
+//!
+//! Every surface is now sugar over this IR:
+//! [`OperatorBuilder::to_plan`](crate::operators::OperatorBuilder::to_plan),
+//! `Session::{pagerank, sssp, ...}` (which return that builder), and
+//! [`JobSpec::parse`](crate::serve::jobs::JobSpec::parse) (which still
+//! accepts the historical flat single-op spec text and lowers it to a
+//! one-stage plan) all produce the same `Plan` values — asserted by the
+//! round-trip equality tests in `rust/tests/plan_runtime.rs`.
+
+pub mod exec;
+pub mod source;
+pub mod text;
+pub mod wire;
+
+pub use exec::{GraphHandle, MemoStore, PlanOutput, SnapshotStore};
+pub use source::DatasetRef;
+
+use crate::config::Config;
+use crate::error::{Result, UniGpsError};
+use crate::operators::Operator;
+
+/// How to compare a column value in a [`Transform::SubgraphByColumn`]
+/// filter. Values compare as `f64` (integer columns convert losslessly at
+/// the magnitudes graph algorithms produce).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    /// Keep rows equal to the value.
+    Eq,
+    /// Keep rows not equal to the value.
+    Ne,
+    /// Keep rows `>=` the value.
+    Ge,
+    /// Keep rows `<=` the value.
+    Le,
+    /// Keep rows `>` the value.
+    Gt,
+    /// Keep rows `<` the value.
+    Lt,
+}
+
+impl Cmp {
+    /// Parse the text-format name.
+    pub fn parse(s: &str) -> Option<Cmp> {
+        match s {
+            "eq" | "==" => Some(Cmp::Eq),
+            "ne" | "!=" => Some(Cmp::Ne),
+            "ge" | ">=" => Some(Cmp::Ge),
+            "le" | "<=" => Some(Cmp::Le),
+            "gt" | ">" => Some(Cmp::Gt),
+            "lt" | "<" => Some(Cmp::Lt),
+            _ => None,
+        }
+    }
+
+    /// Text-format name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Cmp::Eq => "eq",
+            Cmp::Ne => "ne",
+            Cmp::Ge => "ge",
+            Cmp::Le => "le",
+            Cmp::Gt => "gt",
+            Cmp::Lt => "lt",
+        }
+    }
+
+    /// Evaluate the predicate.
+    pub fn holds(&self, lhs: f64, rhs: f64) -> bool {
+        match self {
+            Cmp::Eq => lhs == rhs,
+            Cmp::Ne => lhs != rhs,
+            Cmp::Ge => lhs >= rhs,
+            Cmp::Le => lhs <= rhs,
+            Cmp::Gt => lhs > rhs,
+            Cmp::Lt => lhs < rhs,
+        }
+    }
+}
+
+/// A row predicate: `column <cmp> value`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pred {
+    /// Comparison operator.
+    pub cmp: Cmp,
+    /// Right-hand value (integer columns compare as `f64`).
+    pub value: f64,
+}
+
+/// A graph transform step. `Symmetrize` and `RelabelByDegree` are *pure*
+/// — a deterministic function of the current graph alone — so the serving
+/// executor caches their results under derived snapshot keys
+/// (`<base>|sym`, `<base>|deg`) and N concurrent plans share one
+/// derivation. `SubgraphByColumn` depends on an earlier stage's output and
+/// is computed per plan execution.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Transform {
+    /// Add every edge's reverse (dedup'd, self-loops dropped) — the
+    /// undirected view CC / LPA / k-core / triangles semantics need.
+    /// Idempotent: symmetrizing an already-symmetric graph is a no-op, and
+    /// the derived cache key normalizes accordingly.
+    Symmetrize,
+    /// Relabel vertices by descending out-degree (ties by original id),
+    /// so hot hubs occupy adjacent low ids. Stage outputs on a relabeled
+    /// graph carry their original ids through the executor's origin
+    /// mapping; post-ops join on original ids.
+    RelabelByDegree,
+    /// Keep only vertices whose `column` in stage `stage`'s output
+    /// satisfies `pred`, inducing the subgraph on them (both edge
+    /// endpoints must survive). The referenced stage must have run on a
+    /// graph with the same vertex set as the current one.
+    SubgraphByColumn {
+        /// Index of the stage (0-based, in plan order) whose output column
+        /// drives the filter.
+        stage: usize,
+        /// Output column name in that stage's result table.
+        column: String,
+        /// Row predicate.
+        pred: Pred,
+    },
+}
+
+impl Transform {
+    /// Canonical derived-cache tag for pure transforms; `None` for
+    /// transforms that depend on stage outputs.
+    pub fn pure_tag(&self) -> Option<&'static str> {
+        match self {
+            Transform::Symmetrize => Some("sym"),
+            Transform::RelabelByDegree => Some("deg"),
+            Transform::SubgraphByColumn { .. } => None,
+        }
+    }
+}
+
+/// What a [`Stage`] runs: a native operator, or a named custom VCProg
+/// resolved through [`exec::run_custom`]'s registry (programs that exist
+/// in [`crate::vcprog::programs`] but have no operator wrapper, e.g.
+/// `reachability`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageOp {
+    /// A native operator (pagerank, sssp, cc, ...).
+    Op(Operator),
+    /// A registered custom VCProg by name, with its parameters.
+    Custom {
+        /// Registry name.
+        name: String,
+        /// Program parameters (`root = 5`, ...).
+        params: Config,
+    },
+}
+
+impl StageOp {
+    /// Display/logging name.
+    pub fn name(&self) -> &str {
+        match self {
+            StageOp::Op(op) => op.name(),
+            StageOp::Custom { name, .. } => name,
+        }
+    }
+}
+
+/// One run stage: what to execute, plus per-stage session overrides
+/// (`engine`, `workers`, `max_iter`, `partition`, `combiner`, ... — any
+/// key [`Session::overlay_config`](crate::session::Session::overlay_config)
+/// understands) layered over the plan defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stage {
+    /// The program to run.
+    pub op: StageOp,
+    /// Per-stage config overlay (empty = inherit the plan defaults).
+    pub overrides: Config,
+}
+
+impl Stage {
+    /// A stage running a native operator with no overrides.
+    pub fn op(op: Operator) -> Stage {
+        Stage {
+            op: StageOp::Op(op),
+            overrides: Config::new(),
+        }
+    }
+
+    /// A stage running a registered custom VCProg.
+    pub fn custom(name: impl Into<String>, params: Config) -> Stage {
+        Stage {
+            op: StageOp::Custom {
+                name: name.into(),
+                params,
+            },
+            overrides: Config::new(),
+        }
+    }
+
+    /// Set one override key (builder style).
+    pub fn set(mut self, key: &str, value: impl ToString) -> Stage {
+        self.overrides.set(key, &value.to_string());
+        self
+    }
+
+    /// Select this stage's engine (shorthand for `set("engine", ...)`).
+    pub fn engine(self, kind: crate::engine::EngineKind) -> Stage {
+        self.set("engine", kind.name())
+    }
+}
+
+/// One step of a plan, in execution order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanStep {
+    /// Transform the current graph.
+    Transform(Transform),
+    /// Run a stage on the current graph, appending its output table.
+    Run(Stage),
+}
+
+/// A result post-op. Post-ops run after every stage, each producing the
+/// new working table (initially the last stage's output); the final
+/// working table is the plan's result. Stage outputs are addressed by
+/// 0-based stage index; rows align on *original* (base-graph) vertex ids,
+/// so stages that ran on relabeled or filtered graphs join correctly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PostOp {
+    /// Keep only `columns`, from stage `stage` (or the working table when
+    /// `None`).
+    Select {
+        /// Source stage index; `None` = current working table.
+        stage: Option<usize>,
+        /// Column names to keep, in order.
+        columns: Vec<String>,
+    },
+    /// Keep the `k` rows with the largest `column` values (descending,
+    /// [`f64::total_cmp`] order, ties by ascending vertex id), from stage
+    /// `stage` (or the working table when `None`).
+    TopK {
+        /// Source stage index; `None` = current working table.
+        stage: Option<usize>,
+        /// Column to rank by.
+        column: String,
+        /// Rows to keep.
+        k: usize,
+    },
+    /// Inner-join the named stage columns on original vertex id: the
+    /// output has one row per vertex present in **all** referenced
+    /// stages' graphs, ascending by id.
+    JoinColumns {
+        /// Columns to join.
+        items: Vec<JoinItem>,
+    },
+}
+
+/// One column reference inside [`PostOp::JoinColumns`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct JoinItem {
+    /// Source stage index.
+    pub stage: usize,
+    /// Column name in that stage's output.
+    pub column: String,
+    /// Output column name (`None` = keep `column`; required when two
+    /// items would otherwise collide).
+    pub rename: Option<String>,
+}
+
+impl JoinItem {
+    /// The name this column gets in the joined table.
+    pub fn out_name(&self) -> &str {
+        self.rename.as_deref().unwrap_or(&self.column)
+    }
+}
+
+/// The logical plan: source, defaults, steps, post-ops. Build fluently
+/// (`Plan::new().source(...).defaults(...).transform(...).stage(...)`),
+/// parse from [`text`], or decode from [`wire`]; execute with
+/// [`Plan::run`] / [`Plan::run_on`] or submit over `unigps serve`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Plan {
+    /// Where the base graph comes from. `None` = the caller provides the
+    /// graph ([`Plan::run_on`]); required for serve submission.
+    pub source: Option<DatasetRef>,
+    /// Plan-level config overlay (engine, workers, partition, ...) applied
+    /// over the executing session before any stage overrides.
+    pub defaults: Config,
+    /// Transforms and run stages, in order.
+    pub steps: Vec<PlanStep>,
+    /// Result post-ops (empty = the last stage's table is the result).
+    pub post: Vec<PostOp>,
+}
+
+impl Plan {
+    /// An empty plan.
+    pub fn new() -> Plan {
+        Plan::default()
+    }
+
+    /// A one-stage plan running `op` — what the single-op surfaces lower
+    /// to.
+    pub fn single(op: Operator) -> Plan {
+        Plan::new().stage(Stage::op(op))
+    }
+
+    /// Set the graph source.
+    pub fn source(mut self, source: DatasetRef) -> Plan {
+        self.source = Some(source);
+        self
+    }
+
+    /// Set one plan-default key.
+    pub fn default_key(mut self, key: &str, value: impl ToString) -> Plan {
+        self.defaults.set(key, &value.to_string());
+        self
+    }
+
+    /// Replace the plan defaults wholesale.
+    pub fn defaults(mut self, defaults: Config) -> Plan {
+        self.defaults = defaults;
+        self
+    }
+
+    /// Append a transform step.
+    pub fn transform(mut self, t: Transform) -> Plan {
+        self.steps.push(PlanStep::Transform(t));
+        self
+    }
+
+    /// Append a run stage.
+    pub fn stage(mut self, s: Stage) -> Plan {
+        self.steps.push(PlanStep::Run(s));
+        self
+    }
+
+    /// Append a post-op.
+    pub fn post(mut self, p: PostOp) -> Plan {
+        self.post.push(p);
+        self
+    }
+
+    /// The run stages, in order (what post-op stage indices address).
+    pub fn stages(&self) -> Vec<&Stage> {
+        self.steps
+            .iter()
+            .filter_map(|s| match s {
+                PlanStep::Run(stage) => Some(stage),
+                PlanStep::Transform(_) => None,
+            })
+            .collect()
+    }
+
+    /// Structural validation: at least one stage, post-op/filter stage
+    /// indices in range, join output names unique. Executors call this
+    /// before running; surfaces can call it early for fast feedback.
+    pub fn validate(&self) -> Result<()> {
+        let nstages = self.stages().len();
+        if nstages == 0 {
+            return Err(UniGpsError::Config(
+                "plan has no run stage (nothing to execute)".into(),
+            ));
+        }
+        let mut seen = 0usize;
+        for step in &self.steps {
+            match step {
+                PlanStep::Run(_) => seen += 1,
+                PlanStep::Transform(Transform::SubgraphByColumn { stage, .. }) => {
+                    if *stage >= seen {
+                        return Err(UniGpsError::Config(format!(
+                            "subgraph filter references stage {stage}, but only {seen} \
+                             stage(s) have run at that point"
+                        )));
+                    }
+                }
+                PlanStep::Transform(_) => {}
+            }
+        }
+        for p in &self.post {
+            let refs: Vec<usize> = match p {
+                PostOp::Select { stage, .. } | PostOp::TopK { stage, .. } => {
+                    stage.iter().copied().collect()
+                }
+                PostOp::JoinColumns { items } => {
+                    let mut names = std::collections::BTreeSet::new();
+                    for it in items {
+                        if !names.insert(it.out_name()) {
+                            return Err(UniGpsError::Config(format!(
+                                "join produces duplicate column '{}' (use a rename)",
+                                it.out_name()
+                            )));
+                        }
+                    }
+                    if items.is_empty() {
+                        return Err(UniGpsError::Config("join has no columns".into()));
+                    }
+                    items.iter().map(|it| it.stage).collect()
+                }
+            };
+            for s in refs {
+                if s >= nstages {
+                    return Err(UniGpsError::Config(format!(
+                        "post-op references stage {s}, but the plan has {nstages} stage(s)"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+
+    #[test]
+    fn fluent_construction_and_stage_listing() {
+        let plan = Plan::new()
+            .source(DatasetRef::Named { key: "lj".into(), scale: 1024 })
+            .default_key("workers", 2)
+            .transform(Transform::Symmetrize)
+            .stage(Stage::op(Operator::ConnectedComponents).engine(EngineKind::Gas))
+            .stage(Stage::op(Operator::KCore { k: 3 }))
+            .post(PostOp::JoinColumns {
+                items: vec![
+                    JoinItem { stage: 0, column: "component".into(), rename: None },
+                    JoinItem { stage: 1, column: "core".into(), rename: None },
+                ],
+            });
+        assert_eq!(plan.stages().len(), 2);
+        assert_eq!(plan.stages()[1].op.name(), "kcore");
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_structural_errors() {
+        // No stages.
+        let err = Plan::new().transform(Transform::Symmetrize).validate().unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)));
+        // Post-op stage out of range.
+        let err = Plan::single(Operator::Degrees)
+            .post(PostOp::TopK { stage: Some(3), column: "out".into(), k: 5 })
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("stage 3"), "{err}");
+        // Filter referencing a stage that has not run yet.
+        let err = Plan::new()
+            .transform(Transform::SubgraphByColumn {
+                stage: 0,
+                column: "core".into(),
+                pred: Pred { cmp: Cmp::Ge, value: 1.0 },
+            })
+            .stage(Stage::op(Operator::KCore { k: 2 }))
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("subgraph filter"), "{err}");
+        // Duplicate join column names.
+        let err = Plan::single(Operator::Degrees)
+            .post(PostOp::JoinColumns {
+                items: vec![
+                    JoinItem { stage: 0, column: "out".into(), rename: None },
+                    JoinItem { stage: 0, column: "out".into(), rename: None },
+                ],
+            })
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate column"), "{err}");
+    }
+
+    #[test]
+    fn cmp_parse_and_holds() {
+        assert_eq!(Cmp::parse("ge"), Some(Cmp::Ge));
+        assert_eq!(Cmp::parse(">="), Some(Cmp::Ge));
+        assert_eq!(Cmp::parse("sorta"), None);
+        assert!(Cmp::Ge.holds(1.0, 1.0));
+        assert!(Cmp::Gt.holds(2.0, 1.0));
+        assert!(!Cmp::Gt.holds(1.0, 1.0));
+        assert!(Cmp::Eq.holds(3.0, 3.0));
+        assert!(Cmp::Ne.holds(3.0, 4.0));
+        assert!(Cmp::Le.holds(1.0, 1.0));
+        assert!(Cmp::Lt.holds(0.0, 1.0));
+        assert_eq!(Cmp::parse(Cmp::Le.name()), Some(Cmp::Le));
+    }
+}

@@ -1,0 +1,219 @@
+//! Graph sources a [`Plan`](crate::plan::Plan) can name.
+//!
+//! [`DatasetRef`] describes where a plan's base graph comes from — a
+//! Table II analog by key, a seeded synthetic generator tuple, or a graph
+//! file on disk. The [`DatasetRef::canonical`] string is the dataset-level
+//! snapshot-cache key prefix, so two plans naming the same data
+//! deterministically share one resident snapshot (and, via the derived
+//! keys in [`crate::plan::exec`], one symmetrized variant too).
+//!
+//! This type used to live in `serve::jobs`; it moved here when the plan IR
+//! became the shared surface, because every consumer of a plan (CLI,
+//! session, serve) needs to resolve the same source descriptions. The
+//! serving module re-exports it for compatibility.
+
+use crate::config::Config;
+use crate::error::{Result, UniGpsError};
+use crate::graph::datasets::DatasetSpec;
+use crate::graph::Graph;
+use crate::session::Session;
+use std::path::PathBuf;
+
+/// Largest synthetic vertex count a spec may request (2^27 ≈ 134M —
+/// well past every bench scale; a forged spec must not be able to request
+/// a petabyte CSR and abort a resident server on allocation failure).
+pub const MAX_SYNTH_VERTICES: usize = 1 << 27;
+
+/// Largest synthetic edge count a spec may request (2^30 ≈ 1B).
+pub const MAX_SYNTH_EDGES: usize = 1 << 30;
+
+/// Largest on-disk graph file a `graph = <path>` spec may load (8 GiB) —
+/// the in-memory graph is roughly proportional to the file, so this is
+/// the file-source analog of the synthetic-generator caps.
+pub const MAX_GRAPH_FILE_BYTES: u64 = 8 << 30;
+
+/// Where a plan's input graph comes from. The [`DatasetRef::canonical`]
+/// string is the snapshot-cache key prefix, so two specs naming the same
+/// data deterministically share one resident snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DatasetRef {
+    /// A Table II analog by key (`as`/`lj`/`ok`/`uk`) at `1/scale`.
+    Named {
+        /// Dataset key.
+        key: String,
+        /// Scale divisor.
+        scale: u64,
+    },
+    /// A seeded synthetic graph (deterministic for a given tuple).
+    Synthetic {
+        /// Generator kind (`rmat`, `lognormal`, `er`, `grid`, `star`).
+        kind: String,
+        /// Vertex count.
+        vertices: usize,
+        /// Edge count.
+        edges: usize,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// A graph file on disk (assumed immutable while cached).
+    File(PathBuf),
+}
+
+impl DatasetRef {
+    /// Canonical cache-key string.
+    pub fn canonical(&self) -> String {
+        match self {
+            DatasetRef::Named { key, scale } => format!("dataset:{key}/{scale}"),
+            DatasetRef::Synthetic {
+                kind,
+                vertices,
+                edges,
+                seed,
+            } => format!("synthetic:{kind}/v{vertices}/e{edges}/s{seed}"),
+            DatasetRef::File(p) => format!("file:{}", p.display()),
+        }
+    }
+
+    /// Materialize the graph (the cost the snapshot cache amortizes).
+    pub fn load(&self, session: &Session) -> Result<Graph> {
+        match self {
+            DatasetRef::Named { key, scale } => DatasetSpec::by_key(key)
+                .map(|d| d.generate(*scale))
+                .ok_or_else(|| {
+                    UniGpsError::Config(format!("unknown dataset '{key}' (try as/lj/ok/uk)"))
+                }),
+            DatasetRef::Synthetic {
+                kind,
+                vertices,
+                edges,
+                seed,
+            } => Ok(session.generate(kind, *vertices, *edges, *seed)),
+            DatasetRef::File(p) => {
+                // File sources must honor the same allocation caps as the
+                // synthetic generators — a spec must not be able to point
+                // a resident server at an arbitrarily large file.
+                let len = std::fs::metadata(p)?.len();
+                if len > MAX_GRAPH_FILE_BYTES {
+                    return Err(UniGpsError::Config(format!(
+                        "graph file {} is {len} bytes (limit {MAX_GRAPH_FILE_BYTES})",
+                        p.display()
+                    )));
+                }
+                session.load(p)
+            }
+        }
+    }
+
+    /// Enforce the allocation caps — the spec layer must not reintroduce
+    /// the attacker-controlled allocations the framing layer refuses
+    /// (`MAX_FRAME_LEN`) through the generator parameters. Called on
+    /// every admission path: parsed text and wire-decoded plans alike.
+    pub fn check_caps(&self) -> Result<()> {
+        match self {
+            DatasetRef::Named { scale, .. } => {
+                if *scale == 0 {
+                    return Err(UniGpsError::Config("scale must be >= 1".into()));
+                }
+            }
+            DatasetRef::Synthetic { vertices, edges, .. } => {
+                if *vertices == 0 || *vertices > MAX_SYNTH_VERTICES {
+                    return Err(UniGpsError::Config(format!(
+                        "vertices must be in 1..={MAX_SYNTH_VERTICES}, got {vertices}"
+                    )));
+                }
+                if *edges > MAX_SYNTH_EDGES {
+                    return Err(UniGpsError::Config(format!(
+                        "edges must be <= {MAX_SYNTH_EDGES}, got {edges}"
+                    )));
+                }
+            }
+            // File sizes are checked at load time (the file can change
+            // between parse and load; `load` stats it under the cap).
+            DatasetRef::File(_) => {}
+        }
+        Ok(())
+    }
+
+    /// Parse a source from `key = value` config text, enforcing the
+    /// allocation caps. `Ok(None)` when the config names no source at all;
+    /// a typed [`UniGpsError::Config`] when it names a malformed one.
+    pub fn from_config(cfg: &Config) -> Result<Option<DatasetRef>> {
+        let src = if let Some(key) = cfg.get("dataset") {
+            DatasetRef::Named {
+                key: key.to_string(),
+                scale: cfg.get_usize("scale", 64)? as u64,
+            }
+        } else if let Some(path) = cfg.get("graph") {
+            DatasetRef::File(PathBuf::from(path))
+        } else if cfg.get("vertices").is_some() || cfg.get("kind").is_some() {
+            DatasetRef::Synthetic {
+                kind: cfg.get_or("kind", "rmat"),
+                vertices: cfg.get_usize("vertices", 16384)?,
+                edges: cfg.get_usize("edges", 131072)?,
+                seed: cfg.get_usize("seed", 42)? as u64,
+            }
+        } else {
+            return Ok(None);
+        };
+        src.check_caps()?;
+        Ok(Some(src))
+    }
+
+    /// Write this source back as the `key = value` lines
+    /// [`DatasetRef::from_config`] parses.
+    pub fn to_config_lines(&self) -> String {
+        match self {
+            DatasetRef::Named { key, scale } => format!("dataset = {key}\nscale = {scale}\n"),
+            DatasetRef::Synthetic {
+                kind,
+                vertices,
+                edges,
+                seed,
+            } => format!("kind = {kind}\nvertices = {vertices}\nedges = {edges}\nseed = {seed}\n"),
+            DatasetRef::File(p) => format!("graph = {}\n", p.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_keys_distinguish_sources() {
+        let a = DatasetRef::Named { key: "lj".into(), scale: 64 };
+        let b = DatasetRef::Named { key: "lj".into(), scale: 128 };
+        let c = DatasetRef::Synthetic { kind: "rmat".into(), vertices: 64, edges: 128, seed: 1 };
+        assert_ne!(a.canonical(), b.canonical());
+        assert_ne!(a.canonical(), c.canonical());
+        assert_eq!(a.canonical(), "dataset:lj/64");
+    }
+
+    #[test]
+    fn from_config_roundtrips_through_config_lines() {
+        for src in [
+            DatasetRef::Named { key: "ok".into(), scale: 4096 },
+            DatasetRef::Synthetic { kind: "er".into(), vertices: 100, edges: 400, seed: 7 },
+            DatasetRef::File(PathBuf::from("/data/g.bin")),
+        ] {
+            let cfg = Config::parse(&src.to_config_lines()).unwrap();
+            assert_eq!(DatasetRef::from_config(&cfg).unwrap(), Some(src));
+        }
+        let none = Config::parse("algo = pagerank").unwrap();
+        assert_eq!(DatasetRef::from_config(&none).unwrap(), None);
+    }
+
+    #[test]
+    fn allocation_caps_enforced() {
+        for bad in [
+            "dataset = lj\nscale = 0",
+            "vertices = 0",
+            "vertices = 10000000000000000",
+            "vertices = 64\nedges = 10000000000000000",
+        ] {
+            let cfg = Config::parse(bad).unwrap();
+            let err = DatasetRef::from_config(&cfg).unwrap_err();
+            assert!(matches!(err, UniGpsError::Config(_)), "{bad:?} -> {err:?}");
+        }
+    }
+}

@@ -1,0 +1,585 @@
+//! The plan file format: sectioned `key = value` text.
+//!
+//! A plan file is the flat job-spec dialect plus `[section]` headers. The
+//! lines *before* the first header are the top section: the graph source
+//! (`dataset`/`scale`, `kind`/`vertices`/`edges`/`seed`, or `graph`) and
+//! plan-level defaults (`engine`, `workers`, `partition`, ... — anything
+//! [`Session::overlay_config`](crate::session::Session::overlay_config)
+//! understands, plus `delay_ms` for the serving test/bench aid). Then, in
+//! execution order:
+//!
+//! ```text
+//! dataset = lj
+//! scale = 1024
+//! engine = pregel          # plan default
+//!
+//! [transform]
+//! op = symmetrize          # or: relabel | subgraph (stage/column/cmp/value)
+//!
+//! [stage]
+//! algo = cc                # or: custom = reachability
+//! engine = gas             # per-stage override
+//!
+//! [stage]
+//! algo = kcore
+//! k = 3
+//!
+//! [post]
+//! op = join                # or: select (stage?/columns) | topk (stage?/column/k)
+//! columns = 0:component, 1:in_core=core
+//! ```
+//!
+//! The full grammar is documented in `docs/plans.md`. Text with **no**
+//! section headers is not parsed here — it is the historical flat
+//! single-op form, which [`JobSpec::parse`](crate::serve::jobs::JobSpec::parse)
+//! lowers to a one-stage plan via [`stage_from_config`].
+
+use crate::config::Config;
+use crate::error::{Result, UniGpsError};
+use crate::operators::Operator;
+use crate::plan::{Cmp, DatasetRef, JoinItem, Plan, PlanStep, PostOp, Pred, Stage, StageOp, Transform};
+
+/// Keys naming a stage's program and its parameters.
+const OP_KEYS: [&str; 5] = ["algo", "custom", "iterations", "root", "k"];
+
+/// Session / run-option keys accepted as plan defaults or stage overrides.
+pub const OPTION_KEYS: [&str; 9] = [
+    "engine",
+    "workers",
+    "max_iter",
+    "combiner",
+    "pipeline",
+    "step_metrics",
+    "pushpull_threshold",
+    "partition",
+    "artifacts_dir",
+];
+
+/// Keys naming the graph source.
+const SOURCE_KEYS: [&str; 7] = ["dataset", "scale", "kind", "vertices", "edges", "seed", "graph"];
+
+/// True when `text` is in the sectioned plan format (vs the flat
+/// single-op job-spec form).
+pub fn is_plan_text(text: &str) -> bool {
+    text.lines().any(|l| l.trim_start().starts_with('['))
+}
+
+/// Strip a trailing `# comment` (a `#` at line start or preceded by
+/// whitespace — a `#` glued to non-space survives, so values like paths
+/// containing `#` stay intact). Plan files support inline comments this
+/// way; the flat spec form keeps `Config::parse`'s whole-line-only rule.
+fn strip_inline_comment(line: &str) -> &str {
+    for (i, b) in line.bytes().enumerate() {
+        if b == b'#' && (i == 0 || line.as_bytes()[i - 1].is_ascii_whitespace()) {
+            return &line[..i];
+        }
+    }
+    line
+}
+
+/// Parse the operator (and its parameters) out of a config. `Ok(None)`
+/// when no `algo`/`custom` key is present.
+pub fn stage_op_from_config(cfg: &Config) -> Result<Option<StageOp>> {
+    if let Some(name) = cfg.get("custom") {
+        let mut params = Config::new();
+        for key in ["root", "iterations", "k"] {
+            if let Some(v) = cfg.get(key) {
+                params.set(key, v);
+            }
+        }
+        return Ok(Some(StageOp::Custom {
+            name: name.to_string(),
+            params,
+        }));
+    }
+    let Some(algo) = cfg.get("algo") else {
+        return Ok(None);
+    };
+    let root = cfg.get_usize("root", 0)? as u32;
+    let op = match algo {
+        "pagerank" | "pr" => Operator::PageRank {
+            iterations: cfg.get_usize("iterations", 20)? as u32,
+        },
+        "sssp" => Operator::Sssp { root },
+        "cc" => Operator::ConnectedComponents,
+        "bfs" => Operator::Bfs { root },
+        "degrees" => Operator::Degrees,
+        "lpa" => Operator::Lpa {
+            iterations: cfg.get_usize("iterations", 10)? as u32,
+        },
+        "kcore" => Operator::KCore {
+            k: cfg.get_usize("k", 3)? as i64,
+        },
+        "triangles" => Operator::Triangles,
+        other => {
+            return Err(UniGpsError::Config(format!(
+                "unknown algo '{other}' (pagerank|sssp|cc|bfs|degrees|lpa|kcore|triangles)"
+            )))
+        }
+    };
+    Ok(Some(StageOp::Op(op)))
+}
+
+/// Lower a config to a run [`Stage`]: the program from `algo`/`custom`
+/// (defaulting to pagerank when `default_pagerank`, as the historical
+/// flat spec form did), overrides from the recognized option keys. Other
+/// keys are ignored — callers wanting strictness (the sectioned parser)
+/// check them separately.
+pub fn stage_from_config(cfg: &Config, default_pagerank: bool) -> Result<Stage> {
+    let op = match stage_op_from_config(cfg)? {
+        Some(op) => op,
+        None if default_pagerank => StageOp::Op(Operator::PageRank {
+            iterations: cfg.get_usize("iterations", 20)? as u32,
+        }),
+        None => {
+            return Err(UniGpsError::Config(
+                "stage needs `algo = <operator>` or `custom = <program>`".into(),
+            ))
+        }
+    };
+    let mut overrides = Config::new();
+    for key in OPTION_KEYS {
+        if let Some(v) = cfg.get(key) {
+            overrides.set(key, v);
+        }
+    }
+    Ok(Stage { op, overrides })
+}
+
+fn reject_unknown_keys(cfg: &Config, section: &str, known: &[&str]) -> Result<()> {
+    for (k, _) in cfg.iter() {
+        if !known.contains(&k) {
+            return Err(UniGpsError::Config(format!(
+                "unknown key '{k}' in the {section} of the plan"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn parse_transform(cfg: &Config) -> Result<Transform> {
+    match cfg.get("op") {
+        Some("symmetrize") => {
+            reject_unknown_keys(cfg, "[transform] section", &["op"])?;
+            Ok(Transform::Symmetrize)
+        }
+        Some("relabel") => {
+            reject_unknown_keys(cfg, "[transform] section", &["op"])?;
+            Ok(Transform::RelabelByDegree)
+        }
+        Some("subgraph") => {
+            reject_unknown_keys(cfg, "[transform] section", &["op", "stage", "column", "cmp", "value"])?;
+            let stage = cfg.get_usize("stage", usize::MAX)?;
+            if stage == usize::MAX {
+                return Err(UniGpsError::Config("subgraph transform needs `stage = N`".into()));
+            }
+            let column = cfg
+                .get("column")
+                .ok_or_else(|| UniGpsError::Config("subgraph transform needs `column`".into()))?
+                .to_string();
+            let cmp = match cfg.get("cmp") {
+                None => Cmp::Ge,
+                Some(s) => Cmp::parse(s).ok_or_else(|| {
+                    UniGpsError::Config(format!("unknown cmp '{s}' (eq|ne|ge|le|gt|lt)"))
+                })?,
+            };
+            let value = cfg.get_f64("value", 1.0)?;
+            Ok(Transform::SubgraphByColumn {
+                stage,
+                column,
+                pred: Pred { cmp, value },
+            })
+        }
+        Some(other) => Err(UniGpsError::Config(format!(
+            "unknown transform op '{other}' (symmetrize|relabel|subgraph)"
+        ))),
+        None => Err(UniGpsError::Config(
+            "[transform] section needs `op = symmetrize|relabel|subgraph`".into(),
+        )),
+    }
+}
+
+fn parse_column_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|c| c.trim().to_string())
+        .filter(|c| !c.is_empty())
+        .collect()
+}
+
+fn parse_join_items(s: &str) -> Result<Vec<JoinItem>> {
+    let mut items = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (stage, rest) = part.split_once(':').ok_or_else(|| {
+            UniGpsError::Config(format!(
+                "join column '{part}' must be `stage:column` or `stage:column=rename`"
+            ))
+        })?;
+        let stage = stage.trim().parse::<usize>().map_err(|_| {
+            UniGpsError::Config(format!("join column '{part}': bad stage index"))
+        })?;
+        let (column, rename) = match rest.split_once('=') {
+            Some((c, r)) => (c.trim().to_string(), Some(r.trim().to_string())),
+            None => (rest.trim().to_string(), None),
+        };
+        items.push(JoinItem { stage, column, rename });
+    }
+    if items.is_empty() {
+        return Err(UniGpsError::Config("join has no columns".into()));
+    }
+    Ok(items)
+}
+
+fn parse_post(cfg: &Config) -> Result<PostOp> {
+    let opt_stage = match cfg.get("stage") {
+        None => None,
+        Some(_) => Some(cfg.get_usize("stage", 0)?),
+    };
+    match cfg.get("op") {
+        Some("select") => {
+            reject_unknown_keys(cfg, "[post] section", &["op", "stage", "columns"])?;
+            let columns = parse_column_list(cfg.get("columns").ok_or_else(|| {
+                UniGpsError::Config("select post-op needs `columns = a, b`".into())
+            })?);
+            if columns.is_empty() {
+                return Err(UniGpsError::Config("select has no columns".into()));
+            }
+            Ok(PostOp::Select {
+                stage: opt_stage,
+                columns,
+            })
+        }
+        Some("topk") => {
+            reject_unknown_keys(cfg, "[post] section", &["op", "stage", "column", "k"])?;
+            let column = cfg
+                .get("column")
+                .ok_or_else(|| UniGpsError::Config("topk post-op needs `column`".into()))?
+                .to_string();
+            let k = cfg.get_usize("k", 10)?;
+            Ok(PostOp::TopK {
+                stage: opt_stage,
+                column,
+                k,
+            })
+        }
+        Some("join") => {
+            reject_unknown_keys(cfg, "[post] section", &["op", "columns"])?;
+            let items = parse_join_items(cfg.get("columns").ok_or_else(|| {
+                UniGpsError::Config(
+                    "join post-op needs `columns = stage:column[=rename], ...`".into(),
+                )
+            })?)?;
+            Ok(PostOp::JoinColumns { items })
+        }
+        Some(other) => Err(UniGpsError::Config(format!(
+            "unknown post op '{other}' (select|topk|join)"
+        ))),
+        None => Err(UniGpsError::Config(
+            "[post] section needs `op = select|topk|join`".into(),
+        )),
+    }
+}
+
+impl Plan {
+    /// Parse the sectioned plan text format. The top section may name a
+    /// source (required for serve submission, optional for
+    /// [`Plan::run_on`]); `delay_ms` is accepted there and surfaced
+    /// through the returned config (the serving layer reads it).
+    pub fn parse_text(text: &str) -> Result<Plan> {
+        // Split into (section-name, body) chunks; the implicit first
+        // section is the top section.
+        let mut sections: Vec<(String, String)> = vec![(String::new(), String::new())];
+        for line in text.lines() {
+            let line = strip_inline_comment(line);
+            let trimmed = line.trim();
+            if let Some(name) = trimmed.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| {
+                    UniGpsError::Config(format!("malformed section header '{trimmed}'"))
+                })?;
+                sections.push((name.trim().to_string(), String::new()));
+            } else {
+                let body = &mut sections.last_mut().expect("nonempty").1;
+                body.push_str(line);
+                body.push('\n');
+            }
+        }
+
+        let top = Config::parse(&sections[0].1)?;
+        let source = DatasetRef::from_config(&top)?;
+        // The top section is as strict as the bracketed ones: a typo'd
+        // option (`partion = range`) must not silently run with defaults.
+        let known: Vec<&str> = SOURCE_KEYS
+            .iter()
+            .chain(OPTION_KEYS.iter())
+            .chain(std::iter::once(&"delay_ms"))
+            .copied()
+            .collect();
+        reject_unknown_keys(&top, "top section", &known)?;
+        let mut defaults = Config::new();
+        for (k, v) in top.iter() {
+            if !SOURCE_KEYS.contains(&k) {
+                defaults.set(k, v);
+            }
+        }
+
+        let mut plan = Plan {
+            source,
+            defaults,
+            steps: Vec::new(),
+            post: Vec::new(),
+        };
+        for (name, body) in sections[1..].iter() {
+            let cfg = Config::parse(body)?;
+            match name.as_str() {
+                "transform" => plan.steps.push(PlanStep::Transform(parse_transform(&cfg)?)),
+                "stage" => {
+                    let known: Vec<&str> =
+                        OP_KEYS.iter().chain(OPTION_KEYS.iter()).copied().collect();
+                    reject_unknown_keys(&cfg, "[stage] section", &known)?;
+                    plan.steps.push(PlanStep::Run(stage_from_config(&cfg, false)?));
+                }
+                "post" => plan.post.push(parse_post(&cfg)?),
+                other => {
+                    return Err(UniGpsError::Config(format!(
+                        "unknown section [{other}] (transform|stage|post)"
+                    )))
+                }
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Serialize back to the text format [`Plan::parse_text`] accepts.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        if let Some(src) = &self.source {
+            out.push_str(&src.to_config_lines());
+        }
+        for (k, v) in self.defaults.iter() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for step in &self.steps {
+            match step {
+                PlanStep::Transform(t) => {
+                    out.push_str("\n[transform]\n");
+                    match t {
+                        Transform::Symmetrize => out.push_str("op = symmetrize\n"),
+                        Transform::RelabelByDegree => out.push_str("op = relabel\n"),
+                        Transform::SubgraphByColumn { stage, column, pred } => {
+                            out.push_str(&format!(
+                                "op = subgraph\nstage = {stage}\ncolumn = {column}\n\
+                                 cmp = {}\nvalue = {}\n",
+                                pred.cmp.name(),
+                                pred.value
+                            ));
+                        }
+                    }
+                }
+                PlanStep::Run(stage) => {
+                    out.push_str("\n[stage]\n");
+                    match &stage.op {
+                        StageOp::Op(op) => {
+                            out.push_str(&format!("algo = {}\n", op.name()));
+                            match op {
+                                Operator::PageRank { iterations } => {
+                                    out.push_str(&format!("iterations = {iterations}\n"))
+                                }
+                                Operator::Lpa { iterations } => {
+                                    out.push_str(&format!("iterations = {iterations}\n"))
+                                }
+                                Operator::Sssp { root } | Operator::Bfs { root } => {
+                                    out.push_str(&format!("root = {root}\n"))
+                                }
+                                Operator::KCore { k } => out.push_str(&format!("k = {k}\n")),
+                                Operator::ConnectedComponents
+                                | Operator::Degrees
+                                | Operator::Triangles => {}
+                            }
+                        }
+                        StageOp::Custom { name, params } => {
+                            out.push_str(&format!("custom = {name}\n"));
+                            for (k, v) in params.iter() {
+                                out.push_str(&format!("{k} = {v}\n"));
+                            }
+                        }
+                    }
+                    for (k, v) in stage.overrides.iter() {
+                        out.push_str(&format!("{k} = {v}\n"));
+                    }
+                }
+            }
+        }
+        for p in &self.post {
+            out.push_str("\n[post]\n");
+            match p {
+                PostOp::Select { stage, columns } => {
+                    out.push_str("op = select\n");
+                    if let Some(s) = stage {
+                        out.push_str(&format!("stage = {s}\n"));
+                    }
+                    out.push_str(&format!("columns = {}\n", columns.join(", ")));
+                }
+                PostOp::TopK { stage, column, k } => {
+                    out.push_str("op = topk\n");
+                    if let Some(s) = stage {
+                        out.push_str(&format!("stage = {s}\n"));
+                    }
+                    out.push_str(&format!("column = {column}\nk = {k}\n"));
+                }
+                PostOp::JoinColumns { items } => {
+                    let cols: Vec<String> = items
+                        .iter()
+                        .map(|it| match &it.rename {
+                            Some(r) => format!("{}:{}={r}", it.stage, it.column),
+                            None => format!("{}:{}", it.stage, it.column),
+                        })
+                        .collect();
+                    out.push_str(&format!("op = join\ncolumns = {}\n", cols.join(", ")));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+
+    const FRAUD: &str = "\
+kind = rmat
+vertices = 512
+edges = 2048
+seed = 7
+engine = pregel
+workers = 2
+
+[transform]
+op = symmetrize
+
+[stage]
+algo = kcore
+k = 3
+
+[stage]
+algo = lpa
+iterations = 8
+engine = gas
+
+[post]
+op = join
+columns = 0:in_core, 1:community=label
+";
+
+    #[test]
+    fn parse_text_builds_the_expected_ir() {
+        let plan = Plan::parse_text(FRAUD).unwrap();
+        assert!(matches!(
+            plan.source,
+            Some(DatasetRef::Synthetic { vertices: 512, .. })
+        ));
+        assert_eq!(plan.defaults.get("engine"), Some("pregel"));
+        assert_eq!(plan.steps.len(), 3);
+        assert!(matches!(plan.steps[0], PlanStep::Transform(Transform::Symmetrize)));
+        let stages = plan.stages();
+        assert_eq!(stages[0].op, StageOp::Op(Operator::KCore { k: 3 }));
+        assert_eq!(
+            stages[1].op,
+            StageOp::Op(Operator::Lpa { iterations: 8 })
+        );
+        assert_eq!(stages[1].overrides.get("engine"), Some("gas"));
+        assert_eq!(plan.post.len(), 1);
+        let PostOp::JoinColumns { items } = &plan.post[0] else {
+            panic!("expected join")
+        };
+        assert_eq!(items[1].out_name(), "label");
+    }
+
+    #[test]
+    fn text_roundtrip_is_identity() {
+        let plan = Plan::parse_text(FRAUD).unwrap();
+        let text = plan.to_text();
+        let again = Plan::parse_text(&text).unwrap();
+        assert_eq!(plan, again, "parse(to_text(p)) == p");
+    }
+
+    #[test]
+    fn roundtrip_covers_every_construct() {
+        let plan = Plan::new()
+            .source(DatasetRef::Named { key: "lj".into(), scale: 2048 })
+            .default_key("partition", "range")
+            .stage(Stage::op(Operator::Degrees))
+            .transform(Transform::SubgraphByColumn {
+                stage: 0,
+                column: "out_degree".into(),
+                pred: Pred { cmp: Cmp::Gt, value: 2.0 },
+            })
+            .transform(Transform::RelabelByDegree)
+            .stage(Stage::custom("reachability", {
+                let mut p = Config::new();
+                p.set("root", "0");
+                p
+            }).engine(EngineKind::PushPull))
+            .post(PostOp::TopK { stage: Some(0), column: "out_degree".into(), k: 5 })
+            .post(PostOp::Select { stage: None, columns: vec!["out_degree".into()] });
+        let again = Plan::parse_text(&plan.to_text()).unwrap();
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn malformed_plans_fail_typed() {
+        for bad in [
+            "[stage\nalgo = cc",                        // unterminated header
+            "[chapter]\nalgo = cc",                     // unknown section
+            "[stage]\nwarp = 9",                        // unknown key in stage
+            "[stage]\nworkers = 2",                     // stage without a program
+            "[transform]\nop = fold",                   // unknown transform
+            "[transform]\nop = subgraph\ncolumn = c",   // subgraph without stage
+            "[stage]\nalgo = cc\n[post]\nop = shuffle", // unknown post op
+            "[stage]\nalgo = cc\n[post]\nop = join\ncolumns = component", // no stage index
+            "partion = range\n[stage]\nalgo = cc",    // typo'd top-section key
+            "[post]\nop = topk\ncolumn = rank",         // no stages at all
+        ] {
+            let err = Plan::parse_text(bad).unwrap_err();
+            assert!(matches!(err, UniGpsError::Config(_)), "{bad:?} -> {err:?}");
+        }
+    }
+
+    #[test]
+    fn inline_comments_are_stripped_in_plan_files() {
+        let plan = Plan::parse_text(
+            "kind = rmat            # synthetic source\n\
+             vertices = 64\n\
+             engine = pregel        # plan default\n\
+             # a full-line comment\n\
+             [stage]                # header comment\n\
+             algo = kcore           # pagerank|sssp|...\n\
+             k = 2\n",
+        )
+        .unwrap();
+        assert_eq!(plan.defaults.get("engine"), Some("pregel"));
+        assert_eq!(plan.stages()[0].op, StageOp::Op(Operator::KCore { k: 2 }));
+    }
+
+    #[test]
+    fn is_plan_text_detects_sections() {
+        assert!(is_plan_text(FRAUD));
+        assert!(!is_plan_text("algo = pagerank\ndataset = lj"));
+    }
+
+    #[test]
+    fn flat_stage_lowering_matches_sectioned() {
+        let cfg = Config::parse("algo = sssp\nroot = 5\nengine = gemini\nworkers = 3").unwrap();
+        let flat = stage_from_config(&cfg, true).unwrap();
+        let sectioned = Plan::parse_text(
+            "[stage]\nalgo = sssp\nroot = 5\nengine = gemini\nworkers = 3",
+        )
+        .unwrap();
+        assert_eq!(&flat, sectioned.stages()[0]);
+    }
+}

@@ -1,0 +1,445 @@
+//! Binary wire codec for [`Plan`] values.
+//!
+//! Plans travel over the serve socket inside the length-checked framing of
+//! [`crate::ipc::socket_rpc`]; this codec uses the same
+//! [`crate::ipc::protocol`] primitives as every other serve payload, so a
+//! forged frame fails with a typed [`UniGpsError::Ipc`] — never a panic or
+//! an attacker-sized allocation (step/post counts are capped before any
+//! buffer is built). The codec is exact: `decode(encode(p)) == p`,
+//! including float predicate values (carried as raw bits).
+
+use crate::config::Config;
+use crate::error::{Result, UniGpsError};
+use crate::ipc::protocol::{get_bytes, get_u32, get_u64, put_bytes, put_u32, put_u64};
+use crate::operators::Operator;
+use crate::plan::{
+    Cmp, DatasetRef, JoinItem, Plan, PlanStep, PostOp, Pred, Stage, StageOp, Transform,
+};
+use std::path::PathBuf;
+
+/// Hard cap on steps / post-ops / config keys / join items in a decoded
+/// plan — far above any real pipeline, low enough that a forged count
+/// cannot request a large allocation.
+pub const MAX_PLAN_ITEMS: usize = 1024;
+
+fn get_count(buf: &[u8], pos: &mut usize, what: &str) -> Result<usize> {
+    let n = get_u32(buf, pos)? as usize;
+    if n > MAX_PLAN_ITEMS {
+        return Err(UniGpsError::Ipc(format!(
+            "plan declares {n} {what} (limit {MAX_PLAN_ITEMS})"
+        )));
+    }
+    Ok(n)
+}
+
+fn get_string(buf: &[u8], pos: &mut usize) -> Result<String> {
+    Ok(String::from_utf8_lossy(get_bytes(buf, pos)?).into_owned())
+}
+
+fn put_config(out: &mut Vec<u8>, cfg: &Config) {
+    put_u32(out, cfg.len() as u32);
+    for (k, v) in cfg.iter() {
+        put_bytes(out, k.as_bytes());
+        put_bytes(out, v.as_bytes());
+    }
+}
+
+fn get_config(buf: &[u8], pos: &mut usize) -> Result<Config> {
+    let n = get_count(buf, pos, "config keys")?;
+    let mut cfg = Config::new();
+    for _ in 0..n {
+        let k = get_string(buf, pos)?;
+        let v = get_string(buf, pos)?;
+        cfg.set(&k, &v);
+    }
+    Ok(cfg)
+}
+
+fn put_source(out: &mut Vec<u8>, src: &DatasetRef) {
+    match src {
+        DatasetRef::Named { key, scale } => {
+            put_u32(out, 0);
+            put_bytes(out, key.as_bytes());
+            put_u64(out, *scale);
+        }
+        DatasetRef::Synthetic {
+            kind,
+            vertices,
+            edges,
+            seed,
+        } => {
+            put_u32(out, 1);
+            put_bytes(out, kind.as_bytes());
+            put_u64(out, *vertices as u64);
+            put_u64(out, *edges as u64);
+            put_u64(out, *seed);
+        }
+        DatasetRef::File(p) => {
+            put_u32(out, 2);
+            put_bytes(out, p.display().to_string().as_bytes());
+        }
+    }
+}
+
+fn get_source(buf: &[u8], pos: &mut usize) -> Result<DatasetRef> {
+    Ok(match get_u32(buf, pos)? {
+        0 => DatasetRef::Named {
+            key: get_string(buf, pos)?,
+            scale: get_u64(buf, pos)?,
+        },
+        1 => DatasetRef::Synthetic {
+            kind: get_string(buf, pos)?,
+            vertices: get_u64(buf, pos)? as usize,
+            edges: get_u64(buf, pos)? as usize,
+            seed: get_u64(buf, pos)?,
+        },
+        2 => DatasetRef::File(PathBuf::from(get_string(buf, pos)?)),
+        other => return Err(UniGpsError::Ipc(format!("bad source tag {other}"))),
+    })
+}
+
+fn put_operator(out: &mut Vec<u8>, op: &Operator) {
+    match op {
+        Operator::PageRank { iterations } => {
+            put_u32(out, 0);
+            put_u32(out, *iterations);
+        }
+        Operator::Sssp { root } => {
+            put_u32(out, 1);
+            put_u32(out, *root);
+        }
+        Operator::ConnectedComponents => put_u32(out, 2),
+        Operator::Bfs { root } => {
+            put_u32(out, 3);
+            put_u32(out, *root);
+        }
+        Operator::Lpa { iterations } => {
+            put_u32(out, 4);
+            put_u32(out, *iterations);
+        }
+        Operator::Degrees => put_u32(out, 5),
+        Operator::KCore { k } => {
+            put_u32(out, 6);
+            put_u64(out, *k as u64);
+        }
+        Operator::Triangles => put_u32(out, 7),
+    }
+}
+
+fn get_operator(buf: &[u8], pos: &mut usize) -> Result<Operator> {
+    Ok(match get_u32(buf, pos)? {
+        0 => Operator::PageRank {
+            iterations: get_u32(buf, pos)?,
+        },
+        1 => Operator::Sssp {
+            root: get_u32(buf, pos)?,
+        },
+        2 => Operator::ConnectedComponents,
+        3 => Operator::Bfs {
+            root: get_u32(buf, pos)?,
+        },
+        4 => Operator::Lpa {
+            iterations: get_u32(buf, pos)?,
+        },
+        5 => Operator::Degrees,
+        6 => Operator::KCore {
+            k: get_u64(buf, pos)? as i64,
+        },
+        7 => Operator::Triangles,
+        other => return Err(UniGpsError::Ipc(format!("bad operator code {other}"))),
+    })
+}
+
+fn cmp_code(c: Cmp) -> u32 {
+    match c {
+        Cmp::Eq => 0,
+        Cmp::Ne => 1,
+        Cmp::Ge => 2,
+        Cmp::Le => 3,
+        Cmp::Gt => 4,
+        Cmp::Lt => 5,
+    }
+}
+
+fn cmp_from_code(c: u32) -> Result<Cmp> {
+    Ok(match c {
+        0 => Cmp::Eq,
+        1 => Cmp::Ne,
+        2 => Cmp::Ge,
+        3 => Cmp::Le,
+        4 => Cmp::Gt,
+        5 => Cmp::Lt,
+        other => return Err(UniGpsError::Ipc(format!("bad cmp code {other}"))),
+    })
+}
+
+fn put_step(out: &mut Vec<u8>, step: &PlanStep) {
+    match step {
+        PlanStep::Transform(t) => {
+            put_u32(out, 0);
+            match t {
+                Transform::Symmetrize => put_u32(out, 0),
+                Transform::RelabelByDegree => put_u32(out, 1),
+                Transform::SubgraphByColumn { stage, column, pred } => {
+                    put_u32(out, 2);
+                    put_u64(out, *stage as u64);
+                    put_bytes(out, column.as_bytes());
+                    put_u32(out, cmp_code(pred.cmp));
+                    put_u64(out, pred.value.to_bits());
+                }
+            }
+        }
+        PlanStep::Run(stage) => {
+            put_u32(out, 1);
+            match &stage.op {
+                StageOp::Op(op) => {
+                    put_u32(out, 0);
+                    put_operator(out, op);
+                }
+                StageOp::Custom { name, params } => {
+                    put_u32(out, 1);
+                    put_bytes(out, name.as_bytes());
+                    put_config(out, params);
+                }
+            }
+            put_config(out, &stage.overrides);
+        }
+    }
+}
+
+fn get_step(buf: &[u8], pos: &mut usize) -> Result<PlanStep> {
+    Ok(match get_u32(buf, pos)? {
+        0 => PlanStep::Transform(match get_u32(buf, pos)? {
+            0 => Transform::Symmetrize,
+            1 => Transform::RelabelByDegree,
+            2 => Transform::SubgraphByColumn {
+                stage: get_u64(buf, pos)? as usize,
+                column: get_string(buf, pos)?,
+                pred: Pred {
+                    cmp: cmp_from_code(get_u32(buf, pos)?)?,
+                    value: f64::from_bits(get_u64(buf, pos)?),
+                },
+            },
+            other => return Err(UniGpsError::Ipc(format!("bad transform tag {other}"))),
+        }),
+        1 => {
+            let op = match get_u32(buf, pos)? {
+                0 => StageOp::Op(get_operator(buf, pos)?),
+                1 => StageOp::Custom {
+                    name: get_string(buf, pos)?,
+                    params: get_config(buf, pos)?,
+                },
+                other => return Err(UniGpsError::Ipc(format!("bad stage-op tag {other}"))),
+            };
+            PlanStep::Run(Stage {
+                op,
+                overrides: get_config(buf, pos)?,
+            })
+        }
+        other => return Err(UniGpsError::Ipc(format!("bad step tag {other}"))),
+    })
+}
+
+fn put_post(out: &mut Vec<u8>, p: &PostOp) {
+    match p {
+        PostOp::Select { stage, columns } => {
+            put_u32(out, 0);
+            put_u64(out, stage.map(|s| s as u64 + 1).unwrap_or(0));
+            put_u32(out, columns.len() as u32);
+            for c in columns {
+                put_bytes(out, c.as_bytes());
+            }
+        }
+        PostOp::TopK { stage, column, k } => {
+            put_u32(out, 1);
+            put_u64(out, stage.map(|s| s as u64 + 1).unwrap_or(0));
+            put_bytes(out, column.as_bytes());
+            put_u64(out, *k as u64);
+        }
+        PostOp::JoinColumns { items } => {
+            put_u32(out, 2);
+            put_u32(out, items.len() as u32);
+            for it in items {
+                put_u64(out, it.stage as u64);
+                put_bytes(out, it.column.as_bytes());
+                match &it.rename {
+                    Some(r) => {
+                        put_u32(out, 1);
+                        put_bytes(out, r.as_bytes());
+                    }
+                    None => put_u32(out, 0),
+                }
+            }
+        }
+    }
+}
+
+fn get_opt_stage(buf: &[u8], pos: &mut usize) -> Result<Option<usize>> {
+    let raw = get_u64(buf, pos)?;
+    Ok(if raw == 0 { None } else { Some(raw as usize - 1) })
+}
+
+fn get_post(buf: &[u8], pos: &mut usize) -> Result<PostOp> {
+    Ok(match get_u32(buf, pos)? {
+        0 => {
+            let stage = get_opt_stage(buf, pos)?;
+            let n = get_count(buf, pos, "select columns")?;
+            let mut columns = Vec::new();
+            for _ in 0..n {
+                columns.push(get_string(buf, pos)?);
+            }
+            PostOp::Select { stage, columns }
+        }
+        1 => PostOp::TopK {
+            stage: get_opt_stage(buf, pos)?,
+            column: get_string(buf, pos)?,
+            k: get_u64(buf, pos)? as usize,
+        },
+        2 => {
+            let n = get_count(buf, pos, "join items")?;
+            let mut items = Vec::new();
+            for _ in 0..n {
+                let stage = get_u64(buf, pos)? as usize;
+                let column = get_string(buf, pos)?;
+                let rename = match get_u32(buf, pos)? {
+                    0 => None,
+                    _ => Some(get_string(buf, pos)?),
+                };
+                items.push(JoinItem { stage, column, rename });
+            }
+            PostOp::JoinColumns { items }
+        }
+        other => return Err(UniGpsError::Ipc(format!("bad post-op tag {other}"))),
+    })
+}
+
+/// Encode a plan for the wire.
+pub fn encode_plan(plan: &Plan) -> Vec<u8> {
+    let mut out = Vec::new();
+    match &plan.source {
+        Some(src) => {
+            put_u32(&mut out, 1);
+            put_source(&mut out, src);
+        }
+        None => put_u32(&mut out, 0),
+    }
+    put_config(&mut out, &plan.defaults);
+    put_u32(&mut out, plan.steps.len() as u32);
+    for step in &plan.steps {
+        put_step(&mut out, step);
+    }
+    put_u32(&mut out, plan.post.len() as u32);
+    for p in &plan.post {
+        put_post(&mut out, p);
+    }
+    out
+}
+
+/// Decode a plan from the wire; every malformation is a typed
+/// [`UniGpsError::Ipc`].
+pub fn decode_plan(buf: &[u8]) -> Result<Plan> {
+    let mut pos = 0;
+    let source = match get_u32(buf, &mut pos)? {
+        0 => None,
+        _ => Some(get_source(buf, &mut pos)?),
+    };
+    let defaults = get_config(buf, &mut pos)?;
+    let nsteps = get_count(buf, &mut pos, "steps")?;
+    let mut steps = Vec::new();
+    for _ in 0..nsteps {
+        steps.push(get_step(buf, &mut pos)?);
+    }
+    let npost = get_count(buf, &mut pos, "post-ops")?;
+    let mut post = Vec::new();
+    for _ in 0..npost {
+        post.push(get_post(buf, &mut pos)?);
+    }
+    Ok(Plan {
+        source,
+        defaults,
+        steps,
+        post,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineKind;
+
+    fn exhaustive_plan() -> Plan {
+        Plan::new()
+            .source(DatasetRef::Synthetic {
+                kind: "rmat".into(),
+                vertices: 512,
+                edges: 2048,
+                seed: 7,
+            })
+            .default_key("engine", "pregel")
+            .default_key("workers", 2)
+            .transform(Transform::Symmetrize)
+            .stage(Stage::op(Operator::KCore { k: -3 }).engine(EngineKind::Gas))
+            .transform(Transform::SubgraphByColumn {
+                stage: 0,
+                column: "in_core".into(),
+                pred: Pred { cmp: Cmp::Ge, value: 1.0 },
+            })
+            .transform(Transform::RelabelByDegree)
+            .stage(Stage::custom("reachability", {
+                let mut p = Config::new();
+                p.set("root", "3");
+                p
+            }))
+            .post(PostOp::Select { stage: Some(0), columns: vec!["in_core".into()] })
+            .post(PostOp::TopK { stage: None, column: "in_core".into(), k: 9 })
+            .post(PostOp::JoinColumns {
+                items: vec![
+                    JoinItem { stage: 0, column: "in_core".into(), rename: Some("core".into()) },
+                    JoinItem { stage: 1, column: "reachable".into(), rename: None },
+                ],
+            })
+    }
+
+    #[test]
+    fn wire_roundtrip_is_identity() {
+        for plan in [
+            Plan::single(Operator::PageRank { iterations: 20 }),
+            Plan::new().stage(Stage::op(Operator::Triangles)),
+            exhaustive_plan(),
+        ] {
+            assert_eq!(decode_plan(&encode_plan(&plan)).unwrap(), plan);
+        }
+        // Every named source kind survives, including file paths.
+        for src in [
+            DatasetRef::Named { key: "uk".into(), scale: 1 },
+            DatasetRef::File(PathBuf::from("/tmp/g.bin")),
+        ] {
+            let plan = Plan::single(Operator::Degrees).source(src);
+            assert_eq!(decode_plan(&encode_plan(&plan)).unwrap(), plan);
+        }
+    }
+
+    #[test]
+    fn truncations_and_forgeries_fail_typed() {
+        let good = encode_plan(&exhaustive_plan());
+        for cut in 0..good.len() {
+            match decode_plan(&good[..cut]) {
+                Err(UniGpsError::Ipc(_)) => {}
+                Err(e) => panic!("cut at {cut}: wrong error kind {e:?}"),
+                Ok(_) => {
+                    // A prefix that happens to decode must at least not
+                    // equal the original (no silent truncation).
+                    assert_ne!(cut, good.len());
+                }
+            }
+        }
+        // A forged step count is a protocol violation, not an allocation.
+        let mut forged = Vec::new();
+        put_u32(&mut forged, 0); // no source
+        put_u32(&mut forged, 0); // empty defaults
+        put_u32(&mut forged, u32::MAX); // absurd step count
+        let err = decode_plan(&forged).unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)));
+        assert!(err.to_string().contains("limit"), "{err}");
+    }
+}

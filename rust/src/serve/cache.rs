@@ -1,37 +1,61 @@
-//! Shared graph-snapshot cache.
+//! Shared graph-snapshot cache: base datasets and derived variants.
 //!
-//! One resident, immutable [`Graph`] per canonical dataset spec (plus
-//! partition strategy — the scheduler keys on both so future
-//! partition-resident layouts slot in without a key change), handed to
-//! jobs as `Arc<Graph>` clones. Loading is **single-flight**: when many
-//! jobs miss on one key concurrently, exactly one performs the load while
-//! the rest block on a condvar and are counted as hits once the snapshot
-//! is ready — so a burst of N identical jobs costs one load and N−1 hits.
-//! Ready snapshots are LRU-evicted once the resident total exceeds the
-//! byte budget (the most recent insert itself is never evicted, so a
-//! single over-budget graph still serves its jobs).
+//! One resident, immutable [`Graph`] per key, handed to jobs as
+//! `Arc<Graph>` clones. Keys come in two levels:
+//!
+//! * **dataset-level** ([`SnapshotCache::get_or_load`]): canonical dataset
+//!   spec + partition strategy — the base snapshot a job's plan starts
+//!   from. Counted in [`CacheStats::loads`]/`hits`/`misses`.
+//! * **derived-level** ([`SnapshotCache::get_or_derive`]): a base key plus
+//!   a pure-transform chain (`…|sym`, `…|sym|deg`) — the symmetrized /
+//!   relabeled variants the plan executor requests. Counted separately in
+//!   [`CacheStats::derived_loads`]/`derived_hits`/`derived_misses`, so
+//!   the serving integration tests' "exactly one dataset load" accounting
+//!   keeps its meaning while derivations are amortized too.
+//!
+//! Loading is **single-flight** at both levels: when many jobs miss on one
+//! key concurrently, exactly one performs the load/derivation while the
+//! rest block on a condvar and are counted as hits once the snapshot is
+//! ready — so a burst of N identical 3-stage plans costs one base load
+//! plus one symmetrize, with N−1 hits at each level. Ready snapshots
+//! (base and derived alike) are LRU-evicted once the resident total
+//! exceeds the byte budget (the most recent insert itself is never
+//! evicted, so a single over-budget graph still serves its jobs).
 
 use crate::error::Result;
 use crate::graph::Graph;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Cache observability counters.
+/// Cache observability counters, split dataset-level vs derived-level.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Graph loads actually performed (single-flight: ≤ misses).
+    /// Dataset loads actually performed (single-flight: ≤ misses).
     pub loads: u64,
-    /// Requests served from a resident snapshot (including waiters that
-    /// blocked on an in-flight load).
+    /// Dataset requests served from a resident snapshot (including
+    /// waiters that blocked on an in-flight load).
     pub hits: u64,
-    /// Requests that initiated a load.
+    /// Dataset requests that initiated a load.
     pub misses: u64,
-    /// Snapshots evicted under budget pressure.
+    /// Derived-variant derivations actually performed.
+    pub derived_loads: u64,
+    /// Derived-variant requests served from a resident snapshot.
+    pub derived_hits: u64,
+    /// Derived-variant requests that initiated a derivation.
+    pub derived_misses: u64,
+    /// Snapshots evicted under budget pressure (either level).
     pub evictions: u64,
-    /// Snapshots currently resident.
+    /// Snapshots currently resident (either level).
     pub resident: u64,
-    /// Bytes currently resident.
+    /// Bytes currently resident (either level).
     pub resident_bytes: u64,
+}
+
+/// Which counter set a fetch updates.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum KeyLevel {
+    Dataset,
+    Derived,
 }
 
 /// Estimated resident size of a graph snapshot: CSR/CSC topology plus the
@@ -51,14 +75,29 @@ enum Slot {
     },
 }
 
+#[derive(Default)]
+struct Counters {
+    loads: u64,
+    hits: u64,
+    misses: u64,
+}
+
+impl Inner {
+    fn counters(&mut self, level: KeyLevel) -> &mut Counters {
+        match level {
+            KeyLevel::Dataset => &mut self.dataset,
+            KeyLevel::Derived => &mut self.derived,
+        }
+    }
+}
+
 struct Inner {
     slots: HashMap<String, Slot>,
     /// Logical clock for LRU ordering.
     tick: u64,
     total_bytes: usize,
-    loads: u64,
-    hits: u64,
-    misses: u64,
+    dataset: Counters,
+    derived: Counters,
     evictions: u64,
 }
 
@@ -79,9 +118,8 @@ impl SnapshotCache {
                 slots: HashMap::new(),
                 tick: 0,
                 total_bytes: 0,
-                loads: 0,
-                hits: 0,
-                misses: 0,
+                dataset: Counters::default(),
+                derived: Counters::default(),
                 evictions: 0,
             }),
             ready: Condvar::new(),
@@ -102,22 +140,47 @@ impl SnapshotCache {
             .filter(|s| matches!(s, Slot::Ready { .. }))
             .count() as u64;
         CacheStats {
-            loads: inner.loads,
-            hits: inner.hits,
-            misses: inner.misses,
+            loads: inner.dataset.loads,
+            hits: inner.dataset.hits,
+            misses: inner.dataset.misses,
+            derived_loads: inner.derived.loads,
+            derived_hits: inner.derived.hits,
+            derived_misses: inner.derived.misses,
             evictions: inner.evictions,
             resident,
             resident_bytes: inner.total_bytes as u64,
         }
     }
 
-    /// Fetch the snapshot for `key`, loading it with `load` on a miss.
-    /// Concurrent callers on the same key perform exactly one load; a
-    /// failed load propagates its typed error to the initiating caller and
-    /// lets waiters retry (one of them becomes the next loader).
+    /// Fetch the base snapshot for a dataset-level `key`, loading it with
+    /// `load` on a miss. Concurrent callers on the same key perform
+    /// exactly one load; a failed load propagates its typed error to the
+    /// initiating caller and lets waiters retry (one of them becomes the
+    /// next loader).
     pub fn get_or_load(
         &self,
         key: &str,
+        load: impl FnOnce() -> Result<Graph>,
+    ) -> Result<Arc<Graph>> {
+        self.fetch(key, KeyLevel::Dataset, load)
+    }
+
+    /// Fetch a derived variant (`<base key>|sym`, ...), deriving it with
+    /// `derive` on a miss. Same single-flight discipline as
+    /// [`SnapshotCache::get_or_load`], counted in the derived-level
+    /// counters.
+    pub fn get_or_derive(
+        &self,
+        key: &str,
+        derive: impl FnOnce() -> Result<Graph>,
+    ) -> Result<Arc<Graph>> {
+        self.fetch(key, KeyLevel::Derived, derive)
+    }
+
+    fn fetch(
+        &self,
+        key: &str,
+        level: KeyLevel,
         load: impl FnOnce() -> Result<Graph>,
     ) -> Result<Arc<Graph>> {
         enum Probe {
@@ -131,15 +194,18 @@ impl SnapshotCache {
                 let state = &mut *inner;
                 state.tick += 1;
                 let tick = state.tick;
-                match state.slots.get_mut(key) {
+                let probe = match state.slots.get_mut(key) {
                     Some(Slot::Ready { graph, last_used, .. }) => {
                         *last_used = tick;
-                        state.hits += 1;
                         Probe::Hit(graph.clone())
                     }
                     Some(Slot::Loading) => Probe::Wait,
                     None => Probe::Miss,
+                };
+                if matches!(probe, Probe::Hit(_)) {
+                    state.counters(level).hits += 1;
                 }
+                probe
             };
             match probe {
                 Probe::Hit(graph) => return Ok(graph),
@@ -169,7 +235,7 @@ impl SnapshotCache {
                 self.cache.ready.notify_all();
             }
         }
-        inner.misses += 1;
+        inner.counters(level).misses += 1;
         inner.slots.insert(key.to_string(), Slot::Loading);
         drop(inner);
         let mut claim = ClaimGuard {
@@ -183,7 +249,7 @@ impl SnapshotCache {
             Ok(g) => {
                 let bytes = graph_bytes(&g);
                 let graph = Arc::new(g);
-                inner.loads += 1;
+                inner.counters(level).loads += 1;
                 inner.tick += 1;
                 let tick = inner.tick;
                 inner.total_bytes += bytes;
@@ -259,7 +325,25 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "same resident snapshot");
         let s = cache.stats();
         assert_eq!((s.loads, s.misses, s.hits, s.resident), (1, 1, 1, 1));
+        assert_eq!((s.derived_loads, s.derived_hits, s.derived_misses), (0, 0, 0));
         assert!(s.resident_bytes > 0);
+    }
+
+    #[test]
+    fn derived_keys_count_separately_from_dataset_keys() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let base = cache.get_or_load("d", || Ok(small_graph(1))).unwrap();
+        let sym = cache
+            .get_or_derive("d|sym", || Ok(crate::operators::symmetrized(&base)))
+            .unwrap();
+        let again = cache
+            .get_or_derive("d|sym", || panic!("must not re-derive"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&sym, &again));
+        let s = cache.stats();
+        assert_eq!((s.loads, s.misses, s.hits), (1, 1, 0), "dataset level untouched");
+        assert_eq!((s.derived_loads, s.derived_misses, s.derived_hits), (1, 1, 1));
+        assert_eq!(s.resident, 2, "base + derived both resident");
     }
 
     #[test]
@@ -286,6 +370,30 @@ mod tests {
             })
             .unwrap();
         assert_eq!(reloaded.load(Ordering::Relaxed), 1, "b reloads after eviction");
+    }
+
+    #[test]
+    fn derived_snapshots_participate_in_eviction() {
+        let g = small_graph(1);
+        let one = graph_bytes(&g);
+        let cache = SnapshotCache::new(2 * one + one / 2);
+        cache.get_or_load("a", || Ok(small_graph(1))).unwrap();
+        cache.get_or_derive("a|sym", || Ok(small_graph(2))).unwrap();
+        // Touch the derived variant so the *base* is the LRU victim.
+        cache.get_or_derive("a|sym", || panic!("resident")).unwrap();
+        cache.get_or_load("b", || Ok(small_graph(3))).unwrap();
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        // The derived variant survived; the base must reload.
+        cache.get_or_derive("a|sym", || panic!("derived survived")).unwrap();
+        let reloaded = AtomicU64::new(0);
+        cache
+            .get_or_load("a", || {
+                reloaded.fetch_add(1, Ordering::Relaxed);
+                Ok(small_graph(1))
+            })
+            .unwrap();
+        assert_eq!(reloaded.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -322,6 +430,31 @@ mod tests {
         assert_eq!(s.loads, 1);
         assert_eq!(s.misses, 1);
         assert_eq!(s.hits, threads - 1, "waiters count as hits");
+    }
+
+    #[test]
+    fn concurrent_derives_run_exactly_once() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let derives = AtomicU64::new(0);
+        let threads: u64 = 8;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    cache
+                        .get_or_derive("d|sym", || {
+                            derives.fetch_add(1, Ordering::Relaxed);
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                            Ok(small_graph(9))
+                        })
+                        .unwrap();
+                });
+            }
+        });
+        assert_eq!(derives.load(Ordering::Relaxed), 1, "single-flight derivation");
+        let s = cache.stats();
+        assert_eq!((s.derived_loads, s.derived_misses), (1, 1));
+        assert_eq!(s.derived_hits, threads - 1);
+        assert_eq!((s.loads, s.hits, s.misses), (0, 0, 0));
     }
 
     #[test]

@@ -1,16 +1,24 @@
 //! Job specs, the job state machine and the serving wire codecs.
 //!
-//! A job is described by the same `key = value` config text a
-//! [`Session`](crate::session::Session) is built from — the spec is layered
-//! over the server's session via [`Session::overlay_config`], so `engine`,
-//! `workers`, `partition`, `combiner`, `pipeline` and `max_iter` mean
-//! exactly what they mean everywhere else — plus job-only keys:
+//! A job **is a plan**: [`JobSpec`] carries a [`Plan`] (source + steps +
+//! post-ops) plus the session resolved from the plan's defaults over the
+//! server's session via [`Session::overlay_config`]. Two spec texts are
+//! accepted:
+//!
+//! * the **sectioned plan format** ([`Plan::parse_text`], documented in
+//!   `docs/plans.md`) — multi-stage pipelines with transforms, per-stage
+//!   `engine=`/options, and result post-ops;
+//! * the historical **flat single-op form** — plain `key = value` lines
+//!   with `algo`, operator parameters and session options — which lowers
+//!   to a one-stage plan, so old clients keep working and land on the
+//!   same executor. Flat keys:
 //!
 //! | key | meaning | default |
 //! |-----|---------|---------|
 //! | `algo` | operator: `pagerank`, `sssp`, `cc`, `bfs`, `degrees`, `lpa`, `kcore`, `triangles` | `pagerank` |
+//! | `custom` | registered custom VCProg instead of `algo` | — |
 //! | `iterations` | PageRank / LPA rounds | 20 / 10 |
-//! | `root` | SSSP / BFS source vertex | 0 |
+//! | `root` | SSSP / BFS / custom source vertex | 0 |
 //! | `k` | k-core threshold | 3 |
 //! | `dataset` + `scale` | Table II analog by key at `1/scale` | — |
 //! | `kind` + `vertices` + `edges` + `seed` | seeded synthetic generator | — |
@@ -18,140 +26,89 @@
 //! | `delay_ms` | synthetic service time before execution (test/bench aid, ≤ 60 s) | 0 |
 //!
 //! Exactly one graph source (`dataset`, `graph`, or synthetic) must be
-//! given. Statuses and result tables cross the wire with the
-//! length-checked [`crate::ipc::protocol`] primitives.
+//! given — in the flat keys or the plan's top section. Plans can also be
+//! submitted pre-encoded ([`crate::plan::wire`]) via the `SUBMIT_PLAN`
+//! method; both paths run [`JobSpec::from_plan`] so the allocation caps
+//! hold regardless of transport. Statuses and result tables cross the
+//! wire with the length-checked [`crate::ipc::protocol`] primitives.
 //!
 //! [`Session::overlay_config`]: crate::session::Session::overlay_config
 
 use crate::config::Config;
 use crate::engine::{EngineKind, RunResult};
 use crate::error::{Result, UniGpsError};
-use crate::graph::datasets::DatasetSpec;
-use crate::graph::Graph;
 use crate::ipc::protocol::{get_bytes, get_u32, get_u64, put_bytes, put_u32, put_u64};
-use crate::operators::Operator;
+use crate::plan::text::{is_plan_text, stage_from_config};
+use crate::plan::{Plan, PlanStep};
 use crate::session::Session;
 use crate::vcprog::Column;
-use std::path::PathBuf;
+
+// Compatibility re-exports: these lived here before the plan IR became
+// the shared surface.
+pub use crate::plan::source::{
+    DatasetRef, MAX_GRAPH_FILE_BYTES, MAX_SYNTH_EDGES, MAX_SYNTH_VERTICES,
+};
 
 /// Server-assigned job identifier (monotone per server instance).
 pub type JobId = u64;
-
-/// Largest synthetic vertex count a job spec may request (2^27 ≈ 134M —
-/// well past every bench scale; a forged spec must not be able to request
-/// a petabyte CSR and abort the server on allocation failure).
-pub const MAX_SYNTH_VERTICES: usize = 1 << 27;
-
-/// Largest synthetic edge count a job spec may request (2^30 ≈ 1B).
-pub const MAX_SYNTH_EDGES: usize = 1 << 30;
 
 /// Largest `delay_ms` a job spec may request (60 s) — the field exists for
 /// tests/benches, and an uncapped value would let one hostile spec pin a
 /// scheduler slot indefinitely.
 pub const MAX_DELAY_MS: u64 = 60_000;
 
-/// Largest on-disk graph file a `graph = <path>` spec may load (8 GiB) —
-/// the in-memory graph is roughly proportional to the file, so this is
-/// the file-source analog of the synthetic-generator caps.
-pub const MAX_GRAPH_FILE_BYTES: u64 = 8 << 30;
-
-/// Where a job's input graph comes from. The [`DatasetRef::canonical`]
-/// string is the snapshot-cache key prefix, so two specs naming the same
-/// data deterministically share one resident snapshot.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum DatasetRef {
-    /// A Table II analog by key (`as`/`lj`/`ok`/`uk`) at `1/scale`.
-    Named {
-        /// Dataset key.
-        key: String,
-        /// Scale divisor.
-        scale: u64,
-    },
-    /// A seeded synthetic graph (deterministic for a given tuple).
-    Synthetic {
-        /// Generator kind (`rmat`, `lognormal`, `er`, `grid`, `star`).
-        kind: String,
-        /// Vertex count.
-        vertices: usize,
-        /// Edge count.
-        edges: usize,
-        /// Generator seed.
-        seed: u64,
-    },
-    /// A graph file on disk (assumed immutable while cached).
-    File(PathBuf),
-}
-
-impl DatasetRef {
-    /// Canonical cache-key string.
-    pub fn canonical(&self) -> String {
-        match self {
-            DatasetRef::Named { key, scale } => format!("dataset:{key}/{scale}"),
-            DatasetRef::Synthetic {
-                kind,
-                vertices,
-                edges,
-                seed,
-            } => format!("synthetic:{kind}/v{vertices}/e{edges}/s{seed}"),
-            DatasetRef::File(p) => format!("file:{}", p.display()),
-        }
-    }
-
-    /// Materialize the graph (the cost the snapshot cache amortizes).
-    pub fn load(&self, session: &Session) -> Result<Graph> {
-        match self {
-            DatasetRef::Named { key, scale } => DatasetSpec::by_key(key)
-                .map(|d| d.generate(*scale))
-                .ok_or_else(|| {
-                    UniGpsError::Config(format!("unknown dataset '{key}' (try as/lj/ok/uk)"))
-                }),
-            DatasetRef::Synthetic {
-                kind,
-                vertices,
-                edges,
-                seed,
-            } => Ok(session.generate(kind, *vertices, *edges, *seed)),
-            DatasetRef::File(p) => {
-                // File sources must honor the same allocation caps as the
-                // synthetic generators — a spec must not be able to point
-                // the resident server at an arbitrarily large file.
-                let len = std::fs::metadata(p)?.len();
-                if len > MAX_GRAPH_FILE_BYTES {
-                    return Err(UniGpsError::Config(format!(
-                        "graph file {} is {len} bytes (limit {MAX_GRAPH_FILE_BYTES})",
-                        p.display()
-                    )));
-                }
-                session.load(p)
-            }
-        }
-    }
-}
-
-/// A parsed, validated job: resolved session (engine + run options), the
-/// native operator to run, and the input graph reference.
+/// A parsed, validated job: the plan to execute, and the session resolved
+/// from the plan defaults over the server session.
 #[derive(Debug, Clone)]
 pub struct JobSpec {
     /// Engine + run options resolved from the spec over the server session.
     pub session: Session,
-    /// The native operator this job runs.
-    pub op: Operator,
-    /// Input graph reference.
-    pub dataset: DatasetRef,
+    /// The plan this job executes (source always present).
+    pub plan: Plan,
     /// Synthetic pre-execution service time in milliseconds (test/bench
     /// aid; 0 in normal operation).
     pub delay_ms: u64,
 }
 
 impl JobSpec {
-    /// Parse `key = value` spec text, layering it over `base` (the server's
-    /// session). All failures are typed [`UniGpsError::Config`] values.
+    /// Parse spec text, layering it over `base` (the server's session).
+    /// Sectioned text parses as a full plan; flat `key = value` text
+    /// lowers to a one-stage plan. All failures are typed
+    /// [`UniGpsError::Config`] values.
     pub fn parse(text: &str, base: &Session) -> Result<JobSpec> {
+        if is_plan_text(text) {
+            return JobSpec::from_plan(Plan::parse_text(text)?, base);
+        }
         let cfg = Config::parse(text)?;
-        let session = base.overlay_config(&cfg)?;
-        let op = Self::parse_operator(&cfg)?;
-        let dataset = Self::parse_dataset(&cfg)?;
-        let delay_ms = cfg.get_usize("delay_ms", 0)? as u64;
+        let source = DatasetRef::from_config(&cfg)?.ok_or_else(no_source)?;
+        let stage = stage_from_config(&cfg, true)?;
+        let mut plan = Plan::new().source(source);
+        plan.steps.push(PlanStep::Run(stage));
+        if let Some(d) = cfg.get("delay_ms") {
+            plan.defaults.set("delay_ms", d);
+        }
+        JobSpec::from_plan_with_session(plan, base.overlay_config(&cfg)?)
+    }
+
+    /// Validate a decoded or constructed plan into a job over `base`:
+    /// source required and capped, structure validated, `delay_ms`
+    /// (read from the plan defaults) capped. The wire `SUBMIT_PLAN` path
+    /// lands here, so forged plans meet the same limits as parsed text.
+    pub fn from_plan(plan: Plan, base: &Session) -> Result<JobSpec> {
+        let session = base.overlay_config(&plan.defaults)?;
+        JobSpec::from_plan_with_session(plan, session)
+    }
+
+    fn from_plan_with_session(plan: Plan, session: Session) -> Result<JobSpec> {
+        let source = plan.source.as_ref().ok_or_else(no_source)?;
+        source.check_caps()?;
+        plan.validate()?;
+        // Stage overrides must resolve — catch a bad per-stage engine at
+        // admission instead of inside a scheduler slot.
+        for stage in plan.stages() {
+            session.overlay_config(&stage.overrides)?;
+        }
+        let delay_ms = plan.defaults.get_usize("delay_ms", 0)? as u64;
         if delay_ms > MAX_DELAY_MS {
             return Err(UniGpsError::Config(format!(
                 "delay_ms must be <= {MAX_DELAY_MS}, got {delay_ms}"
@@ -159,84 +116,28 @@ impl JobSpec {
         }
         Ok(JobSpec {
             session,
-            op,
-            dataset,
+            plan,
             delay_ms,
         })
     }
 
-    /// The engine this job runs on.
+    /// The engine this job's stages default to.
     pub fn engine(&self) -> EngineKind {
         self.session.default_engine()
     }
 
-    fn parse_operator(cfg: &Config) -> Result<Operator> {
-        let root = cfg.get_usize("root", 0)? as u32;
-        Ok(match cfg.get_or("algo", "pagerank").as_str() {
-            "pagerank" | "pr" => Operator::PageRank {
-                iterations: cfg.get_usize("iterations", 20)? as u32,
-            },
-            "sssp" => Operator::Sssp { root },
-            "cc" => Operator::ConnectedComponents,
-            "bfs" => Operator::Bfs { root },
-            "degrees" => Operator::Degrees,
-            "lpa" => Operator::Lpa {
-                iterations: cfg.get_usize("iterations", 10)? as u32,
-            },
-            "kcore" => Operator::KCore {
-                k: cfg.get_usize("k", 3)? as i64,
-            },
-            "triangles" => Operator::Triangles,
-            other => {
-                return Err(UniGpsError::Config(format!(
-                    "unknown algo '{other}' (pagerank|sssp|cc|bfs|degrees|lpa|kcore|triangles)"
-                )))
-            }
-        })
+    /// The job's graph source (always present after validation).
+    pub fn dataset(&self) -> &DatasetRef {
+        self.plan.source.as_ref().expect("validated: source present")
     }
+}
 
-    fn parse_dataset(cfg: &Config) -> Result<DatasetRef> {
-        if let Some(key) = cfg.get("dataset") {
-            let scale = cfg.get_usize("scale", 64)? as u64;
-            if scale == 0 {
-                return Err(UniGpsError::Config("scale must be >= 1".into()));
-            }
-            Ok(DatasetRef::Named {
-                key: key.to_string(),
-                scale,
-            })
-        } else if let Some(path) = cfg.get("graph") {
-            Ok(DatasetRef::File(PathBuf::from(path)))
-        } else if cfg.get("vertices").is_some() || cfg.get("kind").is_some() {
-            // The framing layer refuses attacker-controlled allocations
-            // (`MAX_FRAME_LEN`); the spec layer must not reintroduce them
-            // through the generator parameters.
-            let vertices = cfg.get_usize("vertices", 16384)?;
-            let edges = cfg.get_usize("edges", 131072)?;
-            if vertices == 0 || vertices > MAX_SYNTH_VERTICES {
-                return Err(UniGpsError::Config(format!(
-                    "vertices must be in 1..={MAX_SYNTH_VERTICES}, got {vertices}"
-                )));
-            }
-            if edges > MAX_SYNTH_EDGES {
-                return Err(UniGpsError::Config(format!(
-                    "edges must be <= {MAX_SYNTH_EDGES}, got {edges}"
-                )));
-            }
-            Ok(DatasetRef::Synthetic {
-                kind: cfg.get_or("kind", "rmat"),
-                vertices,
-                edges,
-                seed: cfg.get_usize("seed", 42)? as u64,
-            })
-        } else {
-            Err(UniGpsError::Config(
-                "job spec needs a graph source: dataset = <key>, graph = <path>, \
-                 or kind/vertices/edges/seed"
-                    .into(),
-            ))
-        }
-    }
+fn no_source() -> UniGpsError {
+    UniGpsError::Config(
+        "job spec needs a graph source: dataset = <key>, graph = <path>, \
+         or kind/vertices/edges/seed"
+            .into(),
+    )
 }
 
 /// Job state machine: `Queued → Running → Done | Failed`.
@@ -385,7 +286,7 @@ pub fn decode_result(buf: &[u8]) -> Result<RunResult> {
         ..Default::default()
     };
     let ncols = get_u32(buf, &mut pos)? as usize;
-    let mut columns = Vec::with_capacity(ncols);
+    let mut columns = Vec::with_capacity(ncols.min(64));
     for _ in 0..ncols {
         let name = String::from_utf8_lossy(get_bytes(buf, &mut pos)?).into_owned();
         let tag = get_u32(buf, &mut pos)?;
@@ -424,23 +325,29 @@ mod tests {
     use super::*;
     use crate::distributed::metrics::RunMetrics;
     use crate::graph::partition::PartitionStrategy;
+    use crate::operators::Operator;
+    use crate::plan::StageOp;
+    use std::path::PathBuf;
 
     fn base() -> Session {
         Session::builder().workers(3).build()
     }
 
     #[test]
-    fn spec_parses_algo_engine_and_dataset() {
+    fn flat_spec_lowers_to_a_one_stage_plan() {
         let spec = JobSpec::parse(
             "algo = sssp\nroot = 5\nengine = gemini\ndataset = lj\nscale = 2048\npartition = range",
             &base(),
         )
         .unwrap();
         assert_eq!(spec.engine(), EngineKind::PushPull);
-        assert_eq!(spec.op, Operator::Sssp { root: 5 });
+        let stages = spec.plan.stages();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].op, StageOp::Op(Operator::Sssp { root: 5 }));
+        assert_eq!(stages[0].overrides.get("engine"), Some("gemini"));
         assert_eq!(
-            spec.dataset,
-            DatasetRef::Named {
+            spec.dataset(),
+            &DatasetRef::Named {
                 key: "lj".into(),
                 scale: 2048
             }
@@ -454,8 +361,8 @@ mod tests {
     fn spec_synthetic_and_file_sources() {
         let spec = JobSpec::parse("vertices = 256\nedges = 1024\nseed = 9", &base()).unwrap();
         assert_eq!(
-            spec.dataset,
-            DatasetRef::Synthetic {
+            spec.dataset(),
+            &DatasetRef::Synthetic {
                 kind: "rmat".into(),
                 vertices: 256,
                 edges: 1024,
@@ -463,8 +370,24 @@ mod tests {
             }
         );
         let spec = JobSpec::parse("graph = /data/g.bin\nalgo = cc", &base()).unwrap();
-        assert_eq!(spec.dataset, DatasetRef::File(PathBuf::from("/data/g.bin")));
-        assert_eq!(spec.op, Operator::ConnectedComponents);
+        assert_eq!(spec.dataset(), &DatasetRef::File(PathBuf::from("/data/g.bin")));
+        assert_eq!(
+            spec.plan.stages()[0].op,
+            StageOp::Op(Operator::ConnectedComponents)
+        );
+    }
+
+    #[test]
+    fn sectioned_spec_parses_as_a_multi_stage_plan() {
+        let text = "\
+kind = rmat\nvertices = 128\nedges = 512\nseed = 1\ndelay_ms = 5\n\n\
+[transform]\nop = symmetrize\n\n\
+[stage]\nalgo = cc\n\n\
+[stage]\nalgo = kcore\nk = 2\nengine = gas\n";
+        let spec = JobSpec::parse(text, &base()).unwrap();
+        assert_eq!(spec.plan.stages().len(), 2);
+        assert_eq!(spec.delay_ms, 5);
+        assert_eq!(spec.session.options().workers, 3, "base defaults kept");
     }
 
     #[test]
@@ -481,6 +404,8 @@ mod tests {
             "vertices = 10000000000000000",        // allocation-bomb vertices
             "vertices = 64\nedges = 10000000000000000", // allocation-bomb edges
             "vertices = 64\ndelay_ms = 86400000",  // slot-pinning delay
+            "[stage]\nalgo = cc",                  // plan without a source
+            "dataset = lj\n[stage]\nalgo = cc\nengine = warp", // bad stage override
         ] {
             let err = JobSpec::parse(bad, &base()).unwrap_err();
             assert!(matches!(err, UniGpsError::Config(_)), "{bad:?} -> {err:?}");
@@ -488,13 +413,38 @@ mod tests {
     }
 
     #[test]
-    fn canonical_keys_distinguish_sources() {
-        let a = DatasetRef::Named { key: "lj".into(), scale: 64 };
-        let b = DatasetRef::Named { key: "lj".into(), scale: 128 };
-        let c = DatasetRef::Synthetic { kind: "rmat".into(), vertices: 64, edges: 128, seed: 1 };
-        assert_ne!(a.canonical(), b.canonical());
-        assert_ne!(a.canonical(), c.canonical());
-        assert_eq!(a.canonical(), "dataset:lj/64");
+    fn from_plan_enforces_caps_on_wire_submitted_plans() {
+        // A forged plan skips text parsing; caps must still hold.
+        let plan = Plan::single(Operator::Degrees).source(DatasetRef::Synthetic {
+            kind: "rmat".into(),
+            vertices: usize::MAX,
+            edges: 1,
+            seed: 0,
+        });
+        let err = JobSpec::from_plan(plan, &base()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
+        // And delay_ms read from plan defaults is capped.
+        let plan = Plan::single(Operator::Degrees)
+            .source(DatasetRef::Named { key: "lj".into(), scale: 64 })
+            .default_key("delay_ms", 86_400_000u64);
+        assert!(JobSpec::from_plan(plan, &base()).is_err());
+    }
+
+    #[test]
+    fn flat_and_sectioned_specs_lower_to_the_same_plan() {
+        let flat = JobSpec::parse(
+            "algo = sssp\nroot = 5\nengine = gas\nworkers = 2\nvertices = 64\nedges = 128\nseed = 3",
+            &base(),
+        )
+        .unwrap();
+        let sectioned = JobSpec::parse(
+            "kind = rmat\nvertices = 64\nedges = 128\nseed = 3\n\n\
+             [stage]\nalgo = sssp\nroot = 5\nengine = gas\nworkers = 2\n",
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(flat.plan.steps, sectioned.plan.steps, "same lowered stages");
+        assert_eq!(flat.plan.source, sectioned.plan.source);
     }
 
     #[test]

@@ -19,26 +19,33 @@
 //!   allocation) and [`crate::ipc::protocol`]-style message encodings for
 //!   submit / status / result / stats / shutdown. One handler thread per
 //!   client connection; [`server::ServeClient`] is the matching client.
-//! * [`jobs`] — the job spec (`key = value` text parsed with the same
-//!   config plumbing as [`crate::session::Session`], layered over the
-//!   server session via [`crate::session::Session::overlay_config`]), the
-//!   queued → running → done/failed state machine, and the wire codecs for
-//!   statuses and result tables. Errors propagate as typed
-//!   [`crate::error::UniGpsError`] values end to end.
+//! * [`jobs`] — the job spec: a [`crate::plan::Plan`] (multi-stage
+//!   pipelines in the sectioned plan format, or the historical flat
+//!   `key = value` single-op form lowered to a one-stage plan) plus the
+//!   session resolved over the server session via
+//!   [`crate::session::Session::overlay_config`]; the queued → running →
+//!   done/failed state machine; and the wire codecs for statuses and
+//!   result tables. Errors propagate as typed
+//!   [`crate::error::UniGpsError`] values end to end — ERR frames carry
+//!   the error kind, so clients get the same variant back.
 //! * [`cache`] — the shared graph-snapshot cache: `Arc<Graph>` keyed by
-//!   canonical dataset spec + partition strategy, single-flight loading
-//!   (concurrent misses on one key perform exactly one load), LRU eviction
-//!   under a byte budget, hit/miss/eviction counters. This is the paper's
-//!   "one UniGraph, many programs" sharing made operational.
+//!   canonical dataset spec + partition strategy at the dataset level and
+//!   by pure-transform chains (`…|sym`) at the derived level,
+//!   single-flight loading at both levels (concurrent misses on one key
+//!   perform exactly one load/derivation), LRU eviction under a byte
+//!   budget, split dataset/derived counters. This is the paper's "one
+//!   UniGraph, many programs" sharing made operational — including the
+//!   symmetrized views undirected-semantics operators need.
 //! * [`scheduler`] — bounded-concurrency execution: a FIFO admission queue
-//!   with backpressure (queue full ⇒ typed [`UniGpsError::Serve`]
+//!   with backpressure (queue full ⇒ typed [`UniGpsError::Backpressure`]
 //!   rejection, never unbounded buffering) feeding a fixed pool of job
-//!   slots. The machine's cores are *split* across slots — each job runs
-//!   [`crate::engine`] with `workers = total_workers / slots` — instead of
-//!   letting N concurrent jobs each spawn `total_workers` threads and
-//!   oversubscribe the box.
+//!   slots, each executing its job's plan via [`crate::plan::exec`]. The
+//!   machine's cores are *split* across slots — every stage runs
+//!   [`crate::engine`] with at most `total_workers / slots` workers —
+//!   instead of letting N concurrent jobs each spawn `total_workers`
+//!   threads and oversubscribe the box.
 //!
-//! [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+//! [`UniGpsError::Backpressure`]: crate::error::UniGpsError::Backpressure
 //!
 //! ```no_run
 //! use unigps::serve::{ServeClient, ServeConfig, Server};
@@ -63,7 +70,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use cache::{CacheStats, SnapshotCache};
-pub use jobs::{JobId, JobSpec, JobState, JobStatus};
+pub use jobs::{DatasetRef, JobId, JobSpec, JobState, JobStatus};
 pub use scheduler::{SchedStats, Scheduler};
 pub use server::{ServeClient, ServeStats, Server};
 
@@ -82,6 +89,9 @@ pub mod method {
     pub const RESULT: u32 = 18;
     /// Fetch server-wide cache + scheduler statistics.
     pub const STATS: u32 = 19;
+    /// Submit a wire-encoded [`crate::plan::Plan`]
+    /// ([`crate::plan::wire::encode_plan`]); response is the `u64` job id.
+    pub const SUBMIT_PLAN: u32 = 20;
     /// Orderly server shutdown (drains queued and running jobs first).
     pub use crate::ipc::protocol::method::SHUTDOWN;
 }
@@ -155,7 +165,13 @@ mod tests {
     #[test]
     fn method_indices_do_not_collide_with_vcprog_protocol() {
         use crate::ipc::protocol::method as vc;
-        for m in [method::SUBMIT, method::STATUS, method::RESULT, method::STATS] {
+        for m in [
+            method::SUBMIT,
+            method::STATUS,
+            method::RESULT,
+            method::STATS,
+            method::SUBMIT_PLAN,
+        ] {
             for v in [
                 vc::INIT_PROGRAM,
                 vc::EMPTY_MESSAGE,

@@ -1,23 +1,33 @@
 //! Bounded-concurrency job scheduler with FIFO admission and backpressure.
 //!
-//! Submits are parsed ([`JobSpec::parse`]) before admission, so malformed
-//! specs fail fast with typed [`UniGpsError::Config`] errors and never
-//! occupy queue space. Admitted jobs enter a FIFO queue of bounded
-//! capacity; when it is full, [`Scheduler::submit`] returns a typed
-//! [`UniGpsError::Serve`] rejection — backpressure the client sees,
-//! instead of unbounded server-side buffering. A fixed pool of runner
-//! threads ("slots") drains the queue; each job executes with
+//! Submits are parsed ([`JobSpec::parse`] or the wire plan codec) before
+//! admission, so malformed specs fail fast with typed
+//! [`UniGpsError::Config`] errors and never occupy queue space. Admitted
+//! jobs enter a FIFO queue of bounded capacity; when it is full,
+//! [`Scheduler::submit`] returns a typed [`UniGpsError::Backpressure`]
+//! rejection — backpressure the client sees (and can match on, end to
+//! end, thanks to the kind-tagged ERR frames), instead of unbounded
+//! server-side buffering. A fixed pool of runner threads ("slots") drains
+//! the queue; each job executes its **plan** through
+//! [`crate::plan::exec::execute`] with a cache-backed snapshot store, so
+//! base snapshots resolve through [`SnapshotCache::get_or_load`] and pure
+//! transform variants (symmetrize, relabel) through
+//! [`SnapshotCache::get_or_derive`] — N concurrent identical pipelines
+//! cost one load plus one derivation. Every stage is capped at
 //! `min(requested, total_workers / slots)` engine workers so concurrent
 //! jobs split the machine's cores instead of oversubscribing them.
 //! Shutdown is graceful: already-admitted jobs finish, then the runners
 //! exit.
 //!
 //! [`UniGpsError::Config`]: crate::error::UniGpsError::Config
-//! [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+//! [`UniGpsError::Backpressure`]: crate::error::UniGpsError::Backpressure
+//! [`SnapshotCache::get_or_load`]: crate::serve::cache::SnapshotCache::get_or_load
+//! [`SnapshotCache::get_or_derive`]: crate::serve::cache::SnapshotCache::get_or_derive
 
 use crate::engine::RunResult;
 use crate::error::{Result, UniGpsError};
-use crate::operators::run_operator;
+use crate::graph::Graph;
+use crate::plan::exec::{execute, GraphHandle, SnapshotStore};
 use crate::serve::cache::SnapshotCache;
 use crate::serve::jobs::{JobId, JobSpec, JobState, JobStatus};
 use crate::serve::ServeConfig;
@@ -127,13 +137,28 @@ impl Scheduler {
     }
 
     /// Parse and admit a job. Typed failures: [`UniGpsError::Config`] for
-    /// bad specs, [`UniGpsError::Serve`] when the queue is full or the
-    /// scheduler is shutting down.
+    /// bad specs, [`UniGpsError::Backpressure`] when the queue is full,
+    /// [`UniGpsError::Serve`] when the scheduler is shutting down.
     ///
     /// [`UniGpsError::Config`]: crate::error::UniGpsError::Config
+    /// [`UniGpsError::Backpressure`]: crate::error::UniGpsError::Backpressure
     /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
     pub fn submit(&self, spec_text: &str) -> Result<JobId> {
         let spec = JobSpec::parse(spec_text, &self.shared.base)?;
+        self.submit_spec(spec)
+    }
+
+    /// Validate and admit a wire-decoded [`Plan`](crate::plan::Plan) (the
+    /// `SUBMIT_PLAN` method): [`JobSpec::from_plan`] applies the same
+    /// source caps and structural checks as text parsing.
+    pub fn submit_plan(&self, plan: crate::plan::Plan) -> Result<JobId> {
+        let spec = JobSpec::from_plan(plan, &self.shared.base)?;
+        self.submit_spec(spec)
+    }
+
+    /// Admit an already-validated job (text and plan submits land here).
+    /// Same typed rejections as [`Scheduler::submit`].
+    pub fn submit_spec(&self, spec: JobSpec) -> Result<JobId> {
         let mut inner = self.shared.inner.lock().unwrap();
         if inner.shutdown {
             inner.rejected += 1;
@@ -141,7 +166,7 @@ impl Scheduler {
         }
         if inner.queue.len() >= self.shared.queue_cap {
             inner.rejected += 1;
-            return Err(UniGpsError::serve(format!(
+            return Err(UniGpsError::backpressure(format!(
                 "queue full ({} jobs queued, capacity {}); retry later",
                 inner.queue.len(),
                 self.shared.queue_cap
@@ -307,28 +332,65 @@ fn finish_record(inner: &mut Inner, id: JobId) {
     }
 }
 
-/// Execute one job: resolve the snapshot through the cache, split the
-/// cores, run the operator.
+/// Cache-backed [`SnapshotStore`]: pure-transform variants resolve
+/// through derived keys (`<base>|sym`, ...) with the same single-flight
+/// discipline as the base snapshot, so N concurrent identical plans share
+/// one load and one derivation.
+struct CachedStore<'a> {
+    cache: &'a SnapshotCache,
+    base_key: String,
+}
+
+impl SnapshotStore for CachedStore<'_> {
+    fn derived(
+        &mut self,
+        chain: &[&'static str],
+        derive: &mut dyn FnMut() -> Result<Graph>,
+    ) -> Result<Arc<Graph>> {
+        let key = format!("{}|{}", self.base_key, chain.join("|"));
+        self.cache.get_or_derive(&key, derive)
+    }
+}
+
+/// Execute one job: resolve the base snapshot through the dataset-level
+/// cache, run the plan with a derived-key store, capping every stage at
+/// the slot's core share.
 fn run_job(shared: &Shared, spec: &JobSpec) -> Result<RunResult> {
     if spec.delay_ms > 0 {
         std::thread::sleep(std::time::Duration::from_millis(spec.delay_ms));
     }
-    let opts = {
-        let mut o = spec.session.options().clone();
-        o.workers = o.workers.min(shared.job_workers).max(1);
-        o
-    };
-    let key = format!("{}|{}", spec.dataset.canonical(), opts.partition.name());
-    let graph = shared
+    let source = spec.dataset();
+    // The base key carries the job's partition strategy (resolved from
+    // the plan defaults) so future partition-resident layouts can slot in
+    // without a key change; the snapshot bytes themselves are
+    // partition-independent.
+    let base_key = format!(
+        "{}|{}",
+        source.canonical(),
+        spec.session.options().partition.name()
+    );
+    let base = shared
         .cache
-        .get_or_load(&key, || spec.dataset.load(&shared.base))?;
-    run_operator(&graph, &spec.op, spec.engine(), &opts)
+        .get_or_load(&base_key, || source.load(&shared.base))?;
+    let mut store = CachedStore {
+        cache: &shared.cache,
+        base_key,
+    };
+    let out = execute(
+        &spec.plan,
+        &spec.session,
+        GraphHandle::Shared(base),
+        &mut store,
+        shared.job_workers,
+    )?;
+    Ok(out.result)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::{EngineKind, RunOptions};
+    use crate::operators::run_operator;
     use std::time::{Duration, Instant};
 
     fn cfg(slots: usize, queue_cap: usize) -> ServeConfig {
@@ -392,7 +454,8 @@ mod tests {
             sched.submit(SPEC).unwrap();
         }
         let err = sched.submit(SPEC).unwrap_err();
-        assert!(matches!(err, UniGpsError::Serve(_)), "got {err:?}");
+        assert!(matches!(err, UniGpsError::Backpressure(_)), "got {err:?}");
+        assert!(err.is_backpressure());
         assert!(err.to_string().contains("queue full"), "{err}");
         let s = sched.stats();
         assert_eq!((s.submitted, s.rejected, s.queued), (3, 1, 3));

@@ -4,18 +4,25 @@
 //! [`crate::ipc::socket_rpc`] (`u32 method_or_status | u32 len | payload`,
 //! frames over [`MAX_FRAME_LEN`](crate::ipc::socket_rpc::MAX_FRAME_LEN)
 //! rejected before allocation) and the [`crate::ipc::protocol`] status
-//! codes. Each accepted connection gets a handler thread that serves
+//! codes. **ERR frames are kind-tagged** ([`encode_error`] /
+//! [`decode_error`]): the payload is `u32 error-kind | message`, so
+//! [`ServeClient`] rebuilds the *same* [`UniGpsError`] variant the server
+//! raised — a queue-full rejection arrives as
+//! [`UniGpsError::Backpressure`] and retry loops match on
+//! [`UniGpsError::is_backpressure`] instead of substring-matching message
+//! text. Each accepted connection gets a handler thread that serves
 //! frames until the peer disconnects; all handlers share one
-//! [`Scheduler`] and one [`SnapshotCache`]. A `SHUTDOWN` frame stops the
-//! accept loop and drains the scheduler (queued and running jobs finish
-//! first).
+//! [`Scheduler`] and one [`SnapshotCache`](crate::serve::cache::SnapshotCache).
+//! A `SHUTDOWN` frame stops the accept loop and drains the scheduler
+//! (queued and running jobs finish first).
 
 use crate::engine::RunResult;
-use crate::error::{Result, UniGpsError};
-use crate::ipc::protocol::{get_u64, put_u64, status};
-use crate::ipc::socket_rpc::{read_frame, write_frame, SocketClient};
-use crate::ipc::RpcChannel;
-use crate::serve::cache::{CacheStats, SnapshotCache};
+use crate::error::{ErrorKind, Result, UniGpsError};
+use crate::ipc::protocol::{get_u32, get_u64, put_u64, status};
+use crate::ipc::socket_rpc::{connect_with_retry, read_frame, write_frame};
+use crate::plan::wire::{decode_plan, encode_plan};
+use crate::plan::Plan;
+use crate::serve::cache::CacheStats;
 use crate::serve::jobs::{decode_result, encode_result, JobId, JobStatus};
 use crate::serve::scheduler::{SchedStats, Scheduler};
 use crate::serve::{method, ServeConfig};
@@ -27,6 +34,28 @@ use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Encode a typed error for an ERR frame: `u32 kind code | UTF-8 message`.
+pub fn encode_error(e: &UniGpsError) -> Vec<u8> {
+    let mut out = Vec::new();
+    crate::ipc::protocol::put_u32(&mut out, e.kind().code());
+    out.extend_from_slice(e.message().as_bytes());
+    out
+}
+
+/// Decode an ERR frame payload back into the typed error it carried.
+/// Malformed payloads degrade to [`UniGpsError::Ipc`], never a panic.
+pub fn decode_error(payload: &[u8]) -> UniGpsError {
+    let mut pos = 0;
+    match get_u32(payload, &mut pos) {
+        Ok(code) => ErrorKind::from_code(code)
+            .rebuild(String::from_utf8_lossy(&payload[pos..]).into_owned()),
+        Err(_) => UniGpsError::ipc(format!(
+            "malformed ERR frame: {}",
+            String::from_utf8_lossy(payload)
+        )),
+    }
+}
 
 /// Server-wide statistics: snapshot cache + scheduler counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -45,6 +74,9 @@ impl ServeStats {
             self.cache.loads,
             self.cache.hits,
             self.cache.misses,
+            self.cache.derived_loads,
+            self.cache.derived_hits,
+            self.cache.derived_misses,
             self.cache.evictions,
             self.cache.resident,
             self.cache.resident_bytes,
@@ -69,6 +101,9 @@ impl ServeStats {
                 loads: take()?,
                 hits: take()?,
                 misses: take()?,
+                derived_loads: take()?,
+                derived_hits: take()?,
+                derived_misses: take()?,
                 evictions: take()?,
                 resident: take()?,
                 resident_bytes: take()?,
@@ -91,7 +126,7 @@ pub struct Server {
     listener: UnixListener,
     cfg: ServeConfig,
     sched: Scheduler,
-    cache: Arc<SnapshotCache>,
+    cache: Arc<crate::serve::cache::SnapshotCache>,
     stop: AtomicBool,
     /// Live connections (socket clones), so shutdown can unblock handler
     /// threads parked in `read_frame` on idle clients. Handlers remove
@@ -107,7 +142,7 @@ impl Server {
     pub fn bind(session: Session, cfg: ServeConfig) -> Result<Server> {
         let _ = std::fs::remove_file(&cfg.socket);
         let listener = UnixListener::bind(&cfg.socket)?;
-        let cache = Arc::new(SnapshotCache::new(cfg.cache_budget));
+        let cache = Arc::new(crate::serve::cache::SnapshotCache::new(cfg.cache_budget));
         let sched = Scheduler::start(session, cache.clone(), &cfg);
         Ok(Server {
             listener,
@@ -204,14 +239,15 @@ impl Server {
                 // still cleanly framed — surface a typed error instead of
                 // dropping the client on a raw EOF.
                 Ok(resp) => match write_frame(&mut writer, status::OK, &resp) {
-                    Err(UniGpsError::Ipc(msg)) => write_frame(
-                        &mut writer,
-                        status::ERR,
-                        format!("response too large for one frame: {msg}").as_bytes(),
-                    )?,
+                    Err(UniGpsError::Ipc(msg)) => {
+                        let e = UniGpsError::ipc(format!(
+                            "response too large for one frame: {msg}"
+                        ));
+                        write_frame(&mut writer, status::ERR, &encode_error(&e))?
+                    }
                     other => other?,
                 },
-                Err(e) => write_frame(&mut writer, status::ERR, e.to_string().as_bytes())?,
+                Err(e) => write_frame(&mut writer, status::ERR, &encode_error(&e))?,
             }
             if m == method::SHUTDOWN {
                 self.stop.store(true, Ordering::SeqCst);
@@ -228,6 +264,13 @@ impl Server {
                 let spec = std::str::from_utf8(payload)
                     .map_err(|_| UniGpsError::ipc("submit payload is not UTF-8"))?;
                 let id = self.sched.submit(spec)?;
+                let mut out = Vec::new();
+                put_u64(&mut out, id);
+                Ok(out)
+            }
+            method::SUBMIT_PLAN => {
+                let plan = decode_plan(payload)?;
+                let id = self.sched.submit_plan(plan)?;
                 let mut out = Vec::new();
                 put_u64(&mut out, id);
                 Ok(out)
@@ -261,42 +304,84 @@ impl std::fmt::Debug for Server {
 
 /// Client for a [`Server`], one synchronous request at a time (open one
 /// client per thread; the server handles connections concurrently).
+/// Speaks the strict untrusted framing (`MAX_FRAME_LEN`) the server
+/// enforces, and decodes kind-tagged ERR frames back into typed
+/// [`UniGpsError`] values.
 pub struct ServeClient {
-    chan: SocketClient,
+    reader: BufReader<UnixStream>,
+    writer: BufWriter<UnixStream>,
 }
 
 impl ServeClient {
     /// Connect to a server's socket (retrying briefly while it starts).
     pub fn connect(path: &Path) -> Result<ServeClient> {
+        let stream = connect_with_retry(path)?;
         Ok(ServeClient {
-            chan: SocketClient::connect(path)?,
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
         })
     }
 
-    /// Submit a job spec (`key = value` text); returns the job id.
+    fn call(&mut self, m: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        write_frame(&mut self.writer, m, payload)?;
+        let (st, resp) = read_frame(&mut self.reader)?;
+        if st == status::OK {
+            Ok(resp)
+        } else {
+            Err(decode_error(&resp))
+        }
+    }
+
+    /// Submit a job spec (flat `key = value` text or a sectioned plan
+    /// file); returns the job id.
     pub fn submit(&mut self, spec: &str) -> Result<JobId> {
-        let resp = self.chan.call(method::SUBMIT, spec.as_bytes())?;
+        let resp = self.call(method::SUBMIT, spec.as_bytes())?;
         let mut pos = 0;
         get_u64(&resp, &mut pos)
+    }
+
+    /// Submit a [`Plan`] value over the binary wire codec (no text round
+    /// trip); returns the job id.
+    pub fn submit_plan(&mut self, plan: &Plan) -> Result<JobId> {
+        let resp = self.call(method::SUBMIT_PLAN, &encode_plan(plan))?;
+        let mut pos = 0;
+        get_u64(&resp, &mut pos)
+    }
+
+    /// Submit, retrying typed [backpressure](UniGpsError::is_backpressure)
+    /// rejections with exponential backoff (4 ms → 256 ms) until
+    /// `timeout`. Non-backpressure errors return immediately.
+    pub fn submit_with_retry(&mut self, spec: &str, timeout: Duration) -> Result<JobId> {
+        let deadline = Instant::now() + timeout;
+        let mut backoff = Duration::from_millis(4);
+        loop {
+            match self.submit(spec) {
+                Err(e) if e.is_backpressure() && Instant::now() < deadline => {
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(256));
+                }
+                other => return other,
+            }
+        }
     }
 
     /// Query a job's status.
     pub fn status(&mut self, id: JobId) -> Result<JobStatus> {
         let mut req = Vec::new();
         put_u64(&mut req, id);
-        JobStatus::decode(&self.chan.call(method::STATUS, &req)?)
+        JobStatus::decode(&self.call(method::STATUS, &req)?)
     }
 
     /// Fetch a finished job's result table.
     pub fn result(&mut self, id: JobId) -> Result<RunResult> {
         let mut req = Vec::new();
         put_u64(&mut req, id);
-        decode_result(&self.chan.call(method::RESULT, &req)?)
+        decode_result(&self.call(method::RESULT, &req)?)
     }
 
     /// Fetch server-wide statistics.
     pub fn stats(&mut self) -> Result<ServeStats> {
-        ServeStats::decode(&self.chan.call(method::STATS, &[])?)
+        ServeStats::decode(&self.call(method::STATS, &[])?)
     }
 
     /// Poll until the job reaches a terminal state, then return its result
@@ -324,7 +409,7 @@ impl ServeClient {
 
     /// Ask the server to shut down (it drains admitted jobs first).
     pub fn shutdown(&mut self) -> Result<()> {
-        self.chan.call(method::SHUTDOWN, &[])?;
+        self.call(method::SHUTDOWN, &[])?;
         Ok(())
     }
 }
@@ -346,8 +431,11 @@ mod tests {
                 loads: 1,
                 hits: 11,
                 misses: 1,
+                derived_loads: 2,
+                derived_hits: 9,
+                derived_misses: 2,
                 evictions: 0,
-                resident: 1,
+                resident: 3,
                 resident_bytes: 123_456,
             },
             jobs: SchedStats {
@@ -361,5 +449,22 @@ mod tests {
         };
         assert_eq!(ServeStats::decode(&s.encode()).unwrap(), s);
         assert!(ServeStats::decode(&[0u8; 11]).is_err());
+    }
+
+    #[test]
+    fn error_codec_preserves_the_variant() {
+        for e in [
+            UniGpsError::backpressure("queue full (64 queued, capacity 64); retry later"),
+            UniGpsError::serve("unknown job 9"),
+            UniGpsError::Config("unknown algo 'warp'".into()),
+            UniGpsError::ipc("frame length 999 exceeds limit"),
+        ] {
+            let back = decode_error(&encode_error(&e));
+            assert_eq!(back.kind(), e.kind(), "{e:?}");
+            assert_eq!(back.message(), e.message());
+        }
+        // Truncated/garbage payloads degrade to Ipc.
+        assert!(matches!(decode_error(&[1, 2]), UniGpsError::Ipc(_)));
+        assert!(matches!(decode_error(b""), UniGpsError::Ipc(_)));
     }
 }

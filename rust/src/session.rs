@@ -1,9 +1,21 @@
 //! The UniGPS session handle — the paper's `unigps` object (Fig 3).
 //!
-//! A [`Session`] bundles the default engine, worker count and artifact
-//! directory, and exposes graph loading/generation plus the native operator
-//! entry points (`session.pagerank(...)`, `session.sssp(...)`, ...) and the
-//! generic `vcprog(...)` runner for user programs.
+//! A [`Session`] bundles the default engine, run options and artifact
+//! directory, and exposes graph loading/generation plus the processing
+//! entry points. Since the plan unification, every convenience method is
+//! sugar over the logical-plan IR ([`crate::plan::Plan`]):
+//! `session.pagerank(&g)` returns an [`OperatorBuilder`] that lowers to a
+//! one-stage plan, and [`Session::run_plan`] / [`Session::run_plan_on`]
+//! execute arbitrary multi-stage plans (transforms + stages + post-ops)
+//! with this session's settings as the base layer — the same IR the CLI's
+//! `run --plan` and the serving job specs execute, so results cannot
+//! depend on which surface submitted the work. The session is also the
+//! config-plumbing root: [`Session::overlay_config`] layers plan defaults
+//! and per-stage overrides exactly like config files and job specs.
+//!
+//! The generic [`Session::vcprog`] runner remains for bespoke user
+//! program types that cannot cross a wire (plans reach registered custom
+//! programs via [`crate::plan::StageOp::Custom`]).
 
 use crate::config::Config;
 use crate::engine::{self, EngineKind, RunOptions, RunResult};
@@ -13,6 +25,7 @@ use crate::graph::generate::{self, WeightKind};
 use crate::graph::io::Format;
 use crate::graph::Graph;
 use crate::operators::{Operator, OperatorBuilder};
+use crate::plan::Plan;
 use crate::vcprog::{VCProg, VertexId};
 use std::path::{Path, PathBuf};
 
@@ -204,6 +217,19 @@ impl Session {
         engine::run(engine.unwrap_or(self.engine), graph, program, &self.opts)
     }
 
+    /// Execute a multi-stage [`Plan`], materializing its source through
+    /// this session (the CLI `run --plan` path). Plan defaults and
+    /// per-stage overrides layer over this session's settings.
+    pub fn run_plan(&self, plan: &Plan) -> Result<RunResult> {
+        plan.run(self)
+    }
+
+    /// Execute a [`Plan`] against an already-loaded graph (the plan's
+    /// `source`, if any, is ignored).
+    pub fn run_plan_on(&self, graph: &Graph, plan: &Plan) -> Result<RunResult> {
+        plan.run_on(graph, self)
+    }
+
     /// Native operator: PageRank (20 iterations by default; tune with the
     /// builder).
     pub fn pagerank<'g>(&self, graph: &'g Graph) -> OperatorBuilder<'g> {
@@ -246,9 +272,10 @@ impl Session {
     }
 
     fn op<'g>(&self, graph: &'g Graph, op: Operator) -> OperatorBuilder<'g> {
-        OperatorBuilder::new(graph, op)
-            .engine(self.engine)
-            .options(self.opts.clone())
+        // The session rides along as the builder's base layer, so the
+        // lowered plan carries only *explicit* overrides — every surface
+        // emits the same IR for the same request.
+        OperatorBuilder::over(graph, op, self.clone())
     }
 }
 

@@ -1,0 +1,265 @@
+//! Integration: the logical-plan IR end to end — plan execution is
+//! bit-identical to the equivalent sequence of manual `run_operator`
+//! calls on 30 random graphs under every partition strategy with the
+//! superstep pipeline on and off; every single-op surface (fluent
+//! builder, session methods, flat job specs) lowers to the same `Plan`
+//! value; and the text/wire codecs round-trip the IR exactly.
+
+use unigps::config::Config;
+use unigps::engine::{EngineKind, RunOptions, RunResult};
+use unigps::graph::generate;
+use unigps::graph::partition::PartitionStrategy;
+use unigps::operators::{run_operator, Operator, OperatorBuilder};
+use unigps::plan::{Cmp, JoinItem, Plan, PostOp, Pred, Stage, Transform};
+use unigps::serve::jobs::JobSpec;
+use unigps::session::Session;
+use unigps::util::propcheck::{forall, Config as PropConfig};
+use unigps::vcprog::Column;
+
+const ALL_STRATEGIES: [PartitionStrategy; 3] = [
+    PartitionStrategy::Hash,
+    PartitionStrategy::Range,
+    PartitionStrategy::EdgeBalanced,
+];
+
+fn bits_equal(a: &RunResult, b: &RunResult) -> bool {
+    a.columns.len() == b.columns.len()
+        && a.columns.iter().zip(&b.columns).all(|((an, ac), (bn, bc))| {
+            an == bn
+                && match (ac, bc) {
+                    (Column::I64(x), Column::I64(y)) => x == y,
+                    (Column::F64(x), Column::F64(y)) => {
+                        x.len() == y.len()
+                            && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                    }
+                    _ => false,
+                }
+        })
+}
+
+/// Property: a 3-stage plan (symmetrize → cc → kcore → sssp, mixed
+/// engines) produces stage tables bit-identical to the manual
+/// `run_operator` sequence with the same options — under every partition
+/// strategy, with the overlapped superstep pipeline on and off.
+#[test]
+fn plan_matches_manual_operator_sequence_on_30_random_graphs() {
+    forall(
+        PropConfig::new(30, 0x9A17),
+        |rng| {
+            let n = 4 + rng.usize_below(96);
+            let m = n * (1 + rng.usize_below(5));
+            let workers = 1 + rng.usize_below(4);
+            let k = 1 + rng.usize_below(4) as i64;
+            (generate::random_for_tests(n, m, rng.next_u64()), workers, k)
+        },
+        |(g, workers, k)| {
+            let stages: [(Operator, EngineKind); 3] = [
+                (Operator::ConnectedComponents, EngineKind::Gas),
+                (Operator::KCore { k: *k }, EngineKind::Pregel),
+                (Operator::Sssp { root: 0 }, EngineKind::PushPull),
+            ];
+            // After the explicit symmetrize transform, *every* stage runs
+            // on the undirected view — including sssp, whose manual
+            // ground truth therefore also takes the symmetrized graph
+            // (for cc/kcore, `run_operator`'s op-local symmetrize is
+            // idempotent on it).
+            let sym = unigps::operators::symmetrized(g);
+            for strategy in ALL_STRATEGIES {
+                for pipeline in [true, false] {
+                    let mut opts = RunOptions::default().with_workers(*workers);
+                    opts.partition = strategy;
+                    opts.pipeline = pipeline;
+
+                    let mut plan = Plan::new()
+                        .default_key("workers", workers)
+                        .default_key("partition", strategy.name())
+                        .default_key("pipeline", pipeline)
+                        .transform(Transform::Symmetrize);
+                    for (op, engine) in &stages {
+                        plan = plan.stage(Stage::op(op.clone()).engine(*engine));
+                    }
+                    let out = plan
+                        .run_on_detailed(g, &Session::builder().build())
+                        .map_err(|e| e.to_string())?;
+
+                    for (i, (op, engine)) in stages.iter().enumerate() {
+                        let manual = run_operator(&sym, op, *engine, &opts)
+                            .map_err(|e| e.to_string())?;
+                        if !bits_equal(&out.stages[i], &manual) {
+                            return Err(format!(
+                                "stage {i} ({}) diverged from run_operator \
+                                 (w={workers}, {strategy:?}, pipeline={pipeline})",
+                                op.name()
+                            ));
+                        }
+                    }
+                    // No post-ops: the final table is the last stage's.
+                    if out.result.columns != out.stages[2].columns {
+                        return Err("final table != last stage table".into());
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: the symmetrize transform is exactly the per-op symmetrize —
+/// a plan running sssp (directed semantics) *after* an explicit
+/// symmetrize matches `run_operator` on the symmetrized graph.
+#[test]
+fn explicit_symmetrize_matches_op_local_symmetrize_on_30_random_graphs() {
+    forall(
+        PropConfig::new(30, 0xC0DE),
+        |rng| {
+            let n = 4 + rng.usize_below(80);
+            let m = n * (1 + rng.usize_below(4));
+            (generate::random_for_tests(n, m, rng.next_u64()),)
+        },
+        |(g,)| {
+            let session = Session::builder().workers(2).build();
+            let plan = Plan::new()
+                .transform(Transform::Symmetrize)
+                .stage(Stage::op(Operator::Sssp { root: 0 }));
+            let via_plan = plan.run_on(g, &session).map_err(|e| e.to_string())?;
+            let sym = unigps::operators::symmetrized(g);
+            let manual = run_operator(
+                &sym,
+                &Operator::Sssp { root: 0 },
+                EngineKind::Pregel,
+                session.options(),
+            )
+            .map_err(|e| e.to_string())?;
+            if !bits_equal(&via_plan, &manual) {
+                return Err("sssp on explicit symmetrized view diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance: the fluent builder, the session convenience methods and
+/// the flat job-spec form all lower to the same `Plan` IR value.
+#[test]
+fn every_single_op_surface_lowers_to_the_same_plan() {
+    let g = generate::random_for_tests(32, 64, 5);
+
+    // Surface 1: the fluent builder.
+    let from_builder = OperatorBuilder::new(&g, Operator::Sssp { root: 5 })
+        .engine(EngineKind::Gas)
+        .workers(3)
+        .to_plan();
+
+    // Surface 2: the session convenience method (same explicit overrides).
+    let session = Session::builder().build();
+    let from_session = session.sssp(&g, 5).engine(EngineKind::Gas).workers(3).to_plan();
+
+    // Surface 3: the flat serve job-spec text (plus a source, which the
+    // in-process surfaces don't carry — they hold the graph itself).
+    let spec = JobSpec::parse(
+        "algo = sssp\nroot = 5\nengine = gas\nworkers = 3\n\
+         kind = rmat\nvertices = 64\nedges = 128\nseed = 9",
+        &Session::builder().build(),
+    )
+    .unwrap();
+    let mut from_spec = spec.plan.clone();
+    from_spec.source = None;
+
+    // Surface 4: hand-built IR.
+    let mut overrides = Config::new();
+    overrides.set("engine", "gas");
+    overrides.set("workers", "3");
+    let by_hand = Plan::new().stage(Stage {
+        op: unigps::plan::StageOp::Op(Operator::Sssp { root: 5 }),
+        overrides,
+    });
+
+    assert_eq!(from_builder, from_session, "builder == session method");
+    assert_eq!(from_builder, from_spec, "builder == parsed job spec");
+    assert_eq!(from_builder, by_hand, "builder == hand-built IR");
+
+    // And the lowered plan actually runs identically on every surface.
+    let via_builder = OperatorBuilder::new(&g, Operator::Sssp { root: 5 })
+        .engine(EngineKind::Gas)
+        .workers(3)
+        .run()
+        .unwrap();
+    let via_plan = by_hand.run_on(&g, &Session::builder().build()).unwrap();
+    assert!(bits_equal(&via_builder, &via_plan));
+}
+
+/// The full fraud-style pipeline round-trips through both codecs and
+/// executes identically before and after each round trip.
+#[test]
+fn pipeline_roundtrips_through_text_and_wire_and_still_runs() {
+    let g = generate::random_for_tests(256, 2048, 77);
+    let plan = Plan::new()
+        .default_key("workers", 2)
+        .transform(Transform::Symmetrize)
+        .stage(Stage::op(Operator::KCore { k: 2 }))
+        .transform(Transform::SubgraphByColumn {
+            stage: 0,
+            column: "in_core".into(),
+            pred: Pred { cmp: Cmp::Eq, value: 1.0 },
+        })
+        .stage(Stage::op(Operator::Lpa { iterations: 6 }).engine(EngineKind::Gas))
+        .post(PostOp::JoinColumns {
+            items: vec![
+                JoinItem { stage: 0, column: "in_core".into(), rename: None },
+                JoinItem { stage: 1, column: "community".into(), rename: Some("ring".into()) },
+            ],
+        });
+
+    let via_text = Plan::parse_text(&plan.to_text()).unwrap();
+    assert_eq!(plan, via_text);
+    let via_wire = unigps::plan::wire::decode_plan(&unigps::plan::wire::encode_plan(&plan)).unwrap();
+    assert_eq!(plan, via_wire);
+
+    let session = Session::builder().workers(2).build();
+    let a = plan.run_on(&g, &session).unwrap();
+    let b = via_text.run_on(&g, &session).unwrap();
+    let c = via_wire.run_on(&g, &session).unwrap();
+    assert!(bits_equal(&a, &b), "text round trip changed results");
+    assert!(bits_equal(&a, &c), "wire round trip changed results");
+
+    // Join semantics: rows only for core vertices, labeled by LPA on the
+    // core subgraph, keyed by original vertex id.
+    let vertex = a.column("vertex").unwrap().as_i64().unwrap();
+    let in_core = a.column("in_core").unwrap().as_i64().unwrap();
+    assert!(!vertex.is_empty());
+    assert!(vertex.windows(2).all(|w| w[0] < w[1]), "ids ascend");
+    assert!(in_core.iter().all(|&c| c == 1), "only core rows survive the join");
+    assert!(a.column("ring").is_some());
+}
+
+/// Derived-variant memoization in the in-process path: a plan with an
+/// explicit symmetrize and three undirected-semantics stages symmetrizes
+/// once (the executor memoizes variants per execution).
+#[test]
+fn in_process_plan_symmetrizes_once_for_many_stages() {
+    let g = generate::random_for_tests(128, 512, 11);
+    let session = Session::builder().workers(2).build();
+    let plan = Plan::new()
+        .transform(Transform::Symmetrize)
+        .stage(Stage::op(Operator::ConnectedComponents))
+        .stage(Stage::op(Operator::KCore { k: 2 }))
+        .stage(Stage::op(Operator::Triangles));
+    let out = plan.run_on_detailed(&g, &session).unwrap();
+    assert_eq!(out.stages.len(), 3);
+    // Cross-check each stage against the historical per-op path.
+    let opts = session.options();
+    for (i, op) in [
+        Operator::ConnectedComponents,
+        Operator::KCore { k: 2 },
+        Operator::Triangles,
+    ]
+    .iter()
+    .enumerate()
+    {
+        let manual = run_operator(&g, op, EngineKind::Pregel, opts).unwrap();
+        assert!(bits_equal(&out.stages[i], &manual), "stage {i} diverged");
+    }
+    // Aggregated metrics cover all stages.
+    let total: u32 = out.stages.iter().map(|s| s.metrics.supersteps).sum();
+    assert_eq!(out.result.metrics.supersteps, total);
+}

@@ -1,17 +1,21 @@
 //! Integration: the `unigps serve` subsystem end to end — one server
 //! thread, concurrent client threads over the Unix-domain socket, mixed
-//! operators against one dataset spec. Checks the three serving
-//! guarantees: results are bit-identical to direct `engine::run` calls
-//! with the same options, the snapshot cache loads the graph exactly once
-//! (hit counter = jobs − 1), and the admission queue rejects overload with
-//! a typed error instead of buffering it.
+//! operators and multi-stage plans against one dataset spec. Checks the
+//! serving guarantees: results are bit-identical to direct `engine::run`
+//! calls with the same options, the snapshot cache loads the base graph
+//! exactly once (dataset-level hit counter = requests − 1) and derives
+//! shared variants exactly once (derived-level counters), the admission
+//! queue rejects overload with a typed backpressure error instead of
+//! buffering it, and ERR frames carry the error kind end to end.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 use unigps::engine::{EngineKind, RunOptions, RunResult};
+use unigps::error::UniGpsError;
 use unigps::ipc::shm::ShmMap;
 use unigps::operators::{run_operator, Operator};
+use unigps::plan::{Plan, Stage, Transform};
 use unigps::serve::{ServeClient, ServeConfig, Server};
 use unigps::session::Session;
 use unigps::vcprog::Column;
@@ -83,8 +87,10 @@ fn start_server(cfg: ServeConfig) -> (PathBuf, std::thread::JoinHandle<()>) {
 
 /// ≥4 concurrent clients submit mixed pagerank/sssp/cc jobs against the
 /// same dataset spec; every result is bit-identical to a direct
-/// `engine::run` with the scheduler's options, and the snapshot cache
-/// reports exactly one load with hit counter = jobs − 1.
+/// `engine::run` with the scheduler's options, the snapshot cache reports
+/// exactly one base load with dataset hit counter = jobs − 1, and the cc
+/// jobs' shared symmetrized view derives exactly once (derived-level
+/// counters, so the dataset accounting keeps its historical meaning).
 #[test]
 fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
     let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-int"));
@@ -131,20 +137,29 @@ fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
         }
     });
 
-    // Cache accounting: 12 jobs over one (dataset, partition) key.
+    // Cache accounting: 12 jobs over one (dataset, partition) key; the 4
+    // cc jobs share one derived (symmetrized) snapshot.
     let mut client = ServeClient::connect(&socket).expect("connect for stats");
     let stats = client.stats().expect("stats");
     let total_jobs = (clients * jobs_per_client) as u64;
+    let cc_jobs = total_jobs / 3;
     assert_eq!(stats.jobs.completed, total_jobs, "all jobs completed");
     assert_eq!(stats.jobs.failed, 0);
-    assert_eq!(stats.cache.loads, 1, "exactly one snapshot load");
+    assert_eq!(stats.cache.loads, 1, "exactly one base snapshot load");
     assert_eq!(stats.cache.misses, 1);
     assert_eq!(
         stats.cache.hits,
         total_jobs - 1,
-        "hit counter = jobs - 1 (every job after the first shares the snapshot)"
+        "dataset hit counter = jobs - 1 (every job after the first shares the snapshot)"
     );
-    assert_eq!(stats.cache.resident, 1);
+    assert_eq!(stats.cache.derived_loads, 1, "one symmetrize for all cc jobs");
+    assert_eq!(stats.cache.derived_misses, 1);
+    assert_eq!(
+        stats.cache.derived_hits,
+        cc_jobs - 1,
+        "every cc job after the first shares the symmetrized snapshot"
+    );
+    assert_eq!(stats.cache.resident, 2, "base + symmetrized variant resident");
 
     client.shutdown().expect("shutdown");
     drop(client);
@@ -152,9 +167,85 @@ fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
     assert!(!socket.exists(), "socket file removed on shutdown");
 }
 
+/// The acceptance pipeline: a 3-stage plan (symmetrize → cc → kcore)
+/// submitted by N concurrent clients — half as sectioned text, half over
+/// the binary plan codec — performs exactly one base snapshot load and
+/// one symmetrize, every stage result bit-identical to the manual
+/// `run_operator` sequence with the same options.
+#[test]
+fn three_stage_plan_shares_one_base_load_and_one_derive() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-plan"));
+    cfg.slots = 2;
+    cfg.queue_cap = 64;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = 4;
+    let (socket, server) = start_server(cfg);
+
+    let plan_text = format!(
+        "{}\n\n[transform]\nop = symmetrize\n\n\
+         [stage]\nalgo = cc\nengine = gas\n\n\
+         [stage]\nalgo = kcore\nk = 3\n",
+        dataset_spec_lines()
+    );
+    let plan = Plan::parse_text(&plan_text).expect("plan parses");
+
+    // Ground truth: the manual call sequence the plan replaces. The final
+    // table of a post-op-free plan is the last stage's (kcore) table.
+    let graph = dataset_graph();
+    let opts = job_options();
+    let expected_kcore = run_operator(
+        &graph,
+        &Operator::KCore { k: 3 },
+        EngineKind::Pregel,
+        &opts,
+    )
+    .unwrap();
+
+    let clients: usize = 4;
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let socket = &socket;
+            let plan = &plan;
+            let plan_text = &plan_text;
+            let expected = &expected_kcore;
+            s.spawn(move || {
+                let mut client = ServeClient::connect(socket).expect("connect");
+                // Half the clients exercise the text path, half the wire
+                // codec — both must land on the same executor.
+                let id = if c % 2 == 0 {
+                    client.submit(plan_text).expect("submit text plan")
+                } else {
+                    client.submit_plan(plan).expect("submit wire plan")
+                };
+                let got = client.wait(id, Duration::from_secs(120)).expect("plan job");
+                assert!(
+                    columns_bit_identical(&got, expected),
+                    "client {c}: plan result diverged from manual kcore run"
+                );
+            });
+        }
+    });
+
+    let mut client = ServeClient::connect(&socket).expect("stats client");
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.jobs.completed, clients as u64);
+    assert_eq!(stats.jobs.failed, 0);
+    assert_eq!(stats.cache.loads, 1, "one base load across {clients} plans");
+    assert_eq!(stats.cache.derived_loads, 1, "one symmetrize across {clients} plans");
+    assert_eq!(stats.cache.hits, clients as u64 - 1);
+    assert_eq!(stats.cache.derived_hits, clients as u64 - 1);
+    assert_eq!(stats.cache.resident, 2);
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join().expect("server thread");
+}
+
 /// Backpressure: with one slot and a two-deep queue, a burst of delayed
-/// jobs must produce at least one typed queue-full rejection, while every
-/// admitted job still completes and is never silently dropped.
+/// jobs must produce typed [`UniGpsError::Backpressure`] rejections —
+/// reconstructed from the kind-tagged ERR frame, so clients match on the
+/// kind, not message text — while every admitted job still completes and
+/// is never silently dropped.
 #[test]
 fn queue_overload_is_rejected_with_a_typed_error() {
     let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-bp"));
@@ -173,7 +264,7 @@ fn queue_overload_is_rejected_with_a_typed_error() {
     for _ in 0..5 {
         match client.submit(&spec) {
             Ok(id) => admitted.push(id),
-            Err(e) => rejections.push(e.to_string()),
+            Err(e) => rejections.push(e),
         }
     }
     assert!(
@@ -184,14 +275,24 @@ fn queue_overload_is_rejected_with_a_typed_error() {
     // first job (admitting a 3rd) is a benign race.
     assert!(admitted.len() >= 2, "queue capacity admits at least 2");
     for r in &rejections {
-        assert!(r.contains("queue full"), "typed backpressure rejection, got: {r}");
+        assert!(
+            r.is_backpressure(),
+            "typed backpressure crosses the wire, got: {r:?}"
+        );
+        assert!(matches!(r, UniGpsError::Backpressure(_)), "{r:?}");
+        assert!(r.to_string().contains("queue full"), "{r}");
     }
+    // A retrying submit eventually lands once the slot drains the burst.
+    let id = client
+        .submit_with_retry(&spec, Duration::from_secs(60))
+        .expect("backpressure retry eventually admits");
+    admitted.push(id);
     for id in &admitted {
         let result = client.wait(*id, Duration::from_secs(120));
         assert!(result.is_ok(), "admitted job {id} must complete: {result:?}");
     }
     let stats = client.stats().expect("stats");
-    assert_eq!(stats.jobs.rejected, rejections.len() as u64);
+    assert!(stats.jobs.rejected >= rejections.len() as u64);
     assert_eq!(stats.jobs.completed, admitted.len() as u64);
 
     client.shutdown().expect("shutdown");
@@ -199,10 +300,11 @@ fn queue_overload_is_rejected_with_a_typed_error() {
     server.join().expect("server thread");
 }
 
-/// Status/result error paths over the wire: unknown jobs and not-yet-done
-/// results surface as server-side errors, not hangs or garbage.
+/// Status/result error paths over the wire: unknown jobs, bad specs and
+/// failed loads surface as typed server-side errors — the ERR kind tag
+/// restores the exact [`UniGpsError`] variant — not hangs or garbage.
 #[test]
-fn wire_error_paths_are_clean() {
+fn wire_error_paths_are_clean_and_typed() {
     let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-err"));
     cfg.slots = 1;
     cfg.total_workers = 2;
@@ -210,12 +312,19 @@ fn wire_error_paths_are_clean() {
 
     let mut client = ServeClient::connect(&socket).expect("connect");
     let err = client.status(424242).unwrap_err();
+    assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
     assert!(err.to_string().contains("unknown job"), "{err}");
     let err = client.result(424242).unwrap_err();
-    assert!(err.to_string().contains("unknown job"), "{err}");
-    // A bad spec is rejected at submit time with the parse error.
+    assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
+    // A bad spec is rejected at submit time with the typed parse error.
     let err = client.submit("algo = astrology\nvertices = 64").unwrap_err();
+    assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
     assert!(err.to_string().contains("unknown algo"), "{err}");
+    // A forged wire plan fails typed too (no source).
+    let err = client
+        .submit_plan(&Plan::single(Operator::Degrees))
+        .unwrap_err();
+    assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
     // A job that fails at load time reports Failed + its typed error text.
     let id = client.submit("algo = cc\ndataset = atlantis").expect("admitted");
     let err = client.wait(id, Duration::from_secs(60)).unwrap_err();
@@ -224,4 +333,55 @@ fn wire_error_paths_are_clean() {
     client.shutdown().expect("shutdown");
     drop(client);
     server.join().expect("server thread");
+}
+
+/// A plan with a filter + join post-op runs over serve and matches the
+/// in-process plan executor bit for bit (same IR, same results, any
+/// surface).
+#[test]
+fn pipeline_with_postops_matches_in_process_execution() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-post"));
+    cfg.slots = 1;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = 2;
+    let (socket, server) = start_server(cfg);
+
+    let plan_text = format!(
+        "{}\n\n[transform]\nop = symmetrize\n\n\
+         [stage]\nalgo = kcore\nk = 3\n\n\
+         [stage]\nalgo = lpa\niterations = 8\n\n\
+         [post]\nop = join\ncolumns = 0:in_core, 1:community\n\n\
+         [post]\nop = topk\ncolumn = in_core\nk = 16\n",
+        dataset_spec_lines()
+    );
+    let plan = Plan::parse_text(&plan_text).expect("plan parses");
+    // In-process ground truth through the very same IR value.
+    let session = Session::builder().workers(JOB_WORKERS).build();
+    let local = session.run_plan_on(&dataset_graph(), &plan).expect("local run");
+
+    let mut client = ServeClient::connect(&socket).expect("connect");
+    let id = client.submit(&plan_text).expect("submit");
+    let remote = client.wait(id, Duration::from_secs(120)).expect("job");
+    assert!(
+        columns_bit_identical(&remote, &local),
+        "serve and in-process plan execution diverged"
+    );
+    assert_eq!(remote.columns[0].0, "vertex", "post-ops surface original ids");
+    assert_eq!(remote.column("in_core").unwrap().len(), 16);
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join().expect("server thread");
+
+    // The fluent builder path lowers to the same IR as text parsing.
+    let built = Plan::new()
+        .transform(Transform::Symmetrize)
+        .stage(Stage::op(Operator::KCore { k: 3 }))
+        .stage(Stage::op(Operator::Lpa { iterations: 8 }));
+    let parsed = Plan::parse_text(
+        "[transform]\nop = symmetrize\n\n[stage]\nalgo = kcore\nk = 3\n\n\
+         [stage]\nalgo = lpa\niterations = 8\n",
+    )
+    .unwrap();
+    assert_eq!(built.steps, parsed.steps, "one IR behind every surface");
 }
