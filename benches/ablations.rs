@@ -18,7 +18,9 @@
 //! 7. Serving: N short jobs through `unigps serve` (resident snapshot
 //!    cache, concurrent scheduler slots) vs N cold one-shot runs that each
 //!    re-generate the graph — the end-to-end amortization argument of the
-//!    serve subsystem. Writes `BENCH_serve.json`.
+//!    serve subsystem — plus the transport overhead of the same
+//!    status+chunked-result RPC cycle over the Unix socket vs
+//!    authenticated TCP loopback. Writes `BENCH_serve.json`.
 
 use unigps::distributed::barrier::{BspBarrier, CondvarBarrier, SpinBarrier};
 use unigps::engine::{run_typed, EngineKind, RunOptions};
@@ -399,9 +401,10 @@ fn superstep_pipeline_ablation(graph: &unigps::graph::Graph, div: u64) {
 /// cache loads the graph once and whose scheduler splits the cores across
 /// slots. Records the delta in `BENCH_serve.json`.
 fn serve_throughput_ablation(div: u64) {
+    use unigps::client::Client;
     use unigps::ipc::shm::ShmMap;
     use unigps::operators::{run_operator, Operator};
-    use unigps::serve::{ServeClient, ServeConfig, Server};
+    use unigps::serve::{RemoteClient, ServeClient, ServeConfig, Server};
     use unigps::session::Session;
 
     println!("-- [7] serve: warm-cache concurrent jobs vs cold one-shot runs --");
@@ -514,6 +517,45 @@ fn serve_throughput_ablation(div: u64) {
     };
     server_thread.join().unwrap();
 
+    // (d) Transport overhead: the same status + chunked-result RPC cycle
+    // against a warm server, over the Unix socket vs authenticated TCP
+    // loopback — the per-call cost of the network transport, isolated
+    // from engine time (the job is finished; only frames move).
+    let socket_t = ShmMap::unique_path("serve-bench-tcp");
+    let mut cfg = ServeConfig::new(&socket_t);
+    cfg.slots = 1;
+    cfg.queue_cap = 8;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = workers;
+    cfg.tcp = Some("127.0.0.1:0".into());
+    cfg.token = Some("bench-token".into());
+    let server = Server::bind(Session::builder().build(), cfg).unwrap();
+    let tcp_addr = server.tcp_addr().unwrap();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+    let rpc_iters: usize = if fast { 40 } else { 300 };
+    let warm_spec = format!(
+        "dataset = lj\nscale = {div}\nworkers = {workers}\nstep_metrics = off\nalgo = cc"
+    );
+    let mut uds_client = ServeClient::connect(&socket_t).unwrap();
+    let warm_id = uds_client.submit(&warm_spec).unwrap();
+    uds_client.wait(warm_id, std::time::Duration::from_secs(600)).unwrap();
+    let rpc_cycle = |client: &mut dyn Client| {
+        let timer = Timer::start();
+        for _ in 0..rpc_iters {
+            client.status(warm_id).unwrap();
+            std::hint::black_box(client.result(warm_id).unwrap());
+        }
+        timer.secs()
+    };
+    let uds_rpc_secs = rpc_cycle(&mut uds_client);
+    let mut tcp_client = RemoteClient::connect_tcp(&tcp_addr.to_string(), "bench-token").unwrap();
+    let tcp_rpc_secs = rpc_cycle(&mut tcp_client);
+    uds_client.shutdown().unwrap();
+    drop(uds_client);
+    drop(tcp_client);
+    server_thread.join().unwrap();
+    let tcp_over_uds = tcp_rpc_secs / uds_rpc_secs.max(1e-12);
+
     let speedup = cold_secs / warm_secs.max(1e-12);
     let pipelined_speedup = cold_secs / pipelined_secs.max(1e-12);
     let mut t = Table::new(&["path", "time", "jobs/s", "speedup"]);
@@ -544,6 +586,12 @@ fn serve_throughput_ablation(div: u64) {
         "   pipelined: {plans} plan submissions covered the same {jobs} operator runs \
          with {derived_loads} symmetrize derivation(s)."
     );
+    println!(
+        "   transport: {rpc_iters} status+result cycles — uds {:.1} µs/cycle, \
+         tcp {:.1} µs/cycle ({tcp_over_uds:.2}x uds)",
+        uds_rpc_secs * 1e6 / rpc_iters as f64,
+        tcp_rpc_secs * 1e6 / rpc_iters as f64,
+    );
 
     let json = format!(
         "{{\n  \"bench\": \"serve_throughput\",\n  \"graph\": {{\"key\": \"lj\", \
@@ -554,7 +602,11 @@ fn serve_throughput_ablation(div: u64) {
          \"pipelined_secs\": {pipelined_secs:.6},\n  \
          \"pipelined_speedup\": {pipelined_speedup:.4},\n  \
          \"derived_loads\": {derived_loads},\n  \
-         \"cache_loads\": {loads},\n  \"cache_hits\": {hits}\n}}\n"
+         \"cache_loads\": {loads},\n  \"cache_hits\": {hits},\n  \
+         \"rpc_iters\": {rpc_iters},\n  \
+         \"uds_rpc_secs\": {uds_rpc_secs:.6},\n  \
+         \"tcp_rpc_secs\": {tcp_rpc_secs:.6},\n  \
+         \"tcp_over_uds\": {tcp_over_uds:.4}\n}}\n"
     );
     match std::fs::write("BENCH_serve.json", &json) {
         Ok(()) => println!("   wrote BENCH_serve.json"),

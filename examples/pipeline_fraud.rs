@@ -11,7 +11,14 @@
 //! Run with `cargo run --example pipeline_fraud`. The same plan text
 //! (printed at the end) works with `unigps run --plan <file>` and
 //! `unigps submit --plan <file>`.
+//!
+//! The submission goes through the unified [`Client`] trait — here the
+//! in-process [`LocalClient`], but swapping in
+//! `RemoteClient::connect_tcp("host:7077", token)` (or a Unix-socket
+//! `ServeClient`) changes nothing below the construction line: one
+//! client API over every transport.
 
+use std::time::Duration;
 use unigps::plan::{Cmp, JoinItem, Plan, PostOp, Pred, Stage, Transform};
 use unigps::prelude::*;
 
@@ -51,7 +58,12 @@ fn main() {
             ],
         });
 
-    let out = session.run_plan(&plan).expect("pipeline runs");
+    // Submit through the unified client surface: same call sequence
+    // against a local executor, a Unix-socket server, or a TCP server.
+    let mut client = LocalClient::new(session);
+    let id = client.submit_plan(&plan).expect("plan admitted");
+    let out = client.wait(id, Duration::from_secs(600)).expect("pipeline runs");
+    client.shutdown().expect("drained");
 
     let vertex = out.column("vertex").expect("ids").as_i64().expect("i64");
     let ring = out.column("ring").expect("rings").as_i64().expect("i64");

@@ -1,0 +1,224 @@
+//! One execution-client API over every transport.
+//!
+//! The paper's core promise is that a user program is written once
+//! against a unified interface and the machinery behind it is invisible
+//! (§1). [`Client`] is that promise at the client boundary: submit /
+//! status / wait / result / stats / shutdown, identical whether the jobs
+//! run in this process or behind a socket. Implementations:
+//!
+//! * [`LocalClient`] — wraps a [`Session`] plus an in-process
+//!   [`Scheduler`](crate::serve::Scheduler) and
+//!   [`SnapshotCache`](crate::serve::SnapshotCache). No sockets, no
+//!   serialization — but the same admission queue, typed backpressure,
+//!   core-splitting and snapshot sharing a server gives, so a program
+//!   developed against it behaves identically when pointed at a server.
+//! * [`RemoteClient`](crate::serve::RemoteClient)`<T>` — the wire
+//!   client, generic over the connection
+//!   [`Transport`](crate::serve::transport::Transport): Unix-domain
+//!   socket ([`UdsTransport`](crate::serve::transport::UdsTransport)) or
+//!   authenticated TCP
+//!   ([`TcpTransport`](crate::serve::transport::TcpTransport)).
+//!
+//! The CLI (`unigps submit/status/shutdown`), the integration tests and
+//! `examples/pipeline_fraud.rs` all drive this trait; none of them care
+//! which implementation they hold.
+//!
+//! ```no_run
+//! use unigps::client::{Client, LocalClient};
+//! use unigps::session::Session;
+//! use std::time::Duration;
+//!
+//! let mut client = LocalClient::new(Session::builder().build());
+//! let id = client.submit("algo = pagerank\ndataset = lj\nscale = 1024").unwrap();
+//! let result = client.wait(id, Duration::from_secs(60)).unwrap();
+//! println!("{}", result.metrics.summary());
+//! ```
+
+use crate::engine::RunResult;
+use crate::error::{Result, UniGpsError};
+use crate::plan::Plan;
+use crate::serve::cache::SnapshotCache;
+use crate::serve::jobs::{JobId, JobStatus};
+use crate::serve::scheduler::Scheduler;
+use crate::serve::server::ServeStats;
+use crate::serve::ServeConfig;
+use crate::session::Session;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The unified execution-client surface. Object-safe: the CLI holds a
+/// `Box<dyn Client>` chosen by its `--connect` flag.
+pub trait Client {
+    /// Submit a job spec (flat `key = value` text or a sectioned plan
+    /// file); returns the job id.
+    fn submit(&mut self, spec: &str) -> Result<JobId>;
+
+    /// Submit a [`Plan`] value directly (no text round trip); returns the
+    /// job id.
+    fn submit_plan(&mut self, plan: &Plan) -> Result<JobId>;
+
+    /// Query a job's status. Unknown ids are a typed
+    /// [`UniGpsError::Serve`] error.
+    ///
+    /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+    fn status(&mut self, id: JobId) -> Result<JobStatus>;
+
+    /// Block until the job reaches a terminal state, then return its
+    /// result (or the job's typed failure). Errs after `timeout`.
+    /// Implementations wait on completion signals (an in-process condvar,
+    /// or the server-side `WAIT` long-poll) — no client-side polling.
+    fn wait(&mut self, id: JobId, timeout: Duration) -> Result<Arc<RunResult>>;
+
+    /// Fetch a finished job's result table.
+    fn result(&mut self, id: JobId) -> Result<Arc<RunResult>>;
+
+    /// Server-wide (or in-process equivalent) cache + scheduler counters.
+    fn stats(&mut self) -> Result<ServeStats>;
+
+    /// Shut the executor down (admitted jobs drain first).
+    fn shutdown(&mut self) -> Result<()>;
+
+    /// Submit, retrying typed
+    /// [backpressure](crate::error::UniGpsError::is_backpressure)
+    /// rejections with exponential backoff (4 ms → 256 ms) until
+    /// `timeout`. Non-backpressure errors return immediately.
+    fn submit_with_retry(&mut self, spec: &str, timeout: Duration) -> Result<JobId> {
+        let deadline = Instant::now() + timeout;
+        let mut backoff = Duration::from_millis(4);
+        loop {
+            match self.submit(spec) {
+                Err(e) if e.is_backpressure() && Instant::now() < deadline => {
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(256));
+                }
+                other => return other,
+            }
+        }
+    }
+}
+
+/// Shared timeout shape: waited `timeout`, job still in `state`.
+pub(crate) fn wait_timeout_error(id: JobId, timeout: Duration, state: &str) -> UniGpsError {
+    UniGpsError::serve(format!("timed out after {timeout:?} waiting for job {id} ({state})"))
+}
+
+/// In-process [`Client`]: a [`Session`] fronted by the same scheduler and
+/// snapshot cache `unigps serve` runs, minus every socket. Jobs admitted
+/// here share snapshots, split cores across slots and report the same
+/// typed errors a server would — [`LocalClient`] is "the server in a
+/// library".
+pub struct LocalClient {
+    sched: Scheduler,
+    cache: Arc<SnapshotCache>,
+}
+
+impl LocalClient {
+    /// An in-process executor over `session` with the default
+    /// [`ServeConfig`] sizing (2 slots splitting the machine's cores, a
+    /// 64-job queue, 512 MiB snapshot budget).
+    pub fn new(session: Session) -> LocalClient {
+        LocalClient::with_config(session, &ServeConfig::in_process())
+    }
+
+    /// An in-process executor with explicit sizing. Only the scheduler
+    /// fields of `cfg` matter (`slots`, `queue_cap`, `cache_budget`,
+    /// `total_workers`); the transport fields are ignored — nothing is
+    /// bound.
+    pub fn with_config(session: Session, cfg: &ServeConfig) -> LocalClient {
+        let cache = Arc::new(SnapshotCache::new(cfg.cache_budget));
+        let sched = Scheduler::start(session, cache.clone(), cfg);
+        LocalClient { sched, cache }
+    }
+}
+
+impl Client for LocalClient {
+    fn submit(&mut self, spec: &str) -> Result<JobId> {
+        self.sched.submit(spec)
+    }
+
+    fn submit_plan(&mut self, plan: &Plan) -> Result<JobId> {
+        self.sched.submit_plan(plan.clone())
+    }
+
+    fn status(&mut self, id: JobId) -> Result<JobStatus> {
+        self.sched.status(id)
+    }
+
+    fn wait(&mut self, id: JobId, timeout: Duration) -> Result<Arc<RunResult>> {
+        let st = self.sched.wait_terminal(id, timeout)?;
+        if st.state.is_terminal() {
+            self.sched.result(id)
+        } else {
+            Err(wait_timeout_error(id, timeout, st.state.name()))
+        }
+    }
+
+    fn result(&mut self, id: JobId) -> Result<Arc<RunResult>> {
+        self.sched.result(id)
+    }
+
+    fn stats(&mut self) -> Result<ServeStats> {
+        Ok(ServeStats {
+            cache: self.cache.stats(),
+            jobs: self.sched.stats(),
+        })
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.sched.shutdown();
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for LocalClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LocalClient").finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = "algo = sssp\nvertices = 96\nedges = 384\nseed = 3\nworkers = 2";
+
+    #[test]
+    fn local_client_runs_jobs_without_sockets() {
+        let mut client = LocalClient::new(Session::builder().build());
+        let id = client.submit(SPEC).unwrap();
+        let result = client.wait(id, Duration::from_secs(60)).unwrap();
+        assert!(!result.columns.is_empty());
+        assert!(client.status(id).unwrap().state.is_terminal());
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.jobs.completed, 1);
+        assert_eq!(stats.cache.loads, 1);
+        client.shutdown().unwrap();
+        // Post-shutdown submits are typed rejections, like a server's.
+        let err = client.submit(SPEC).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
+    }
+
+    #[test]
+    fn local_client_errors_are_typed() {
+        let mut client = LocalClient::new(Session::builder().build());
+        let err = client.status(404).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
+        assert!(err.to_string().contains("unknown job"), "{err}");
+        let err = client.submit("algo = astrology\nvertices = 64").unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
+        client.shutdown().unwrap();
+    }
+
+    #[test]
+    fn local_wait_times_out_with_state() {
+        // Zero slots: the job can never run, so wait must time out and
+        // name the stuck state.
+        let mut cfg = ServeConfig::in_process();
+        cfg.slots = 0;
+        let mut client = LocalClient::with_config(Session::builder().build(), &cfg);
+        let id = client.submit(SPEC).unwrap();
+        let err = client.wait(id, Duration::from_millis(50)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+        assert!(err.to_string().contains("queued"), "{err}");
+    }
+}

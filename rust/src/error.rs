@@ -38,6 +38,10 @@ pub enum UniGpsError {
     /// construction — the request was well-formed and retrying after a
     /// backoff is the intended client response (unlike [`Self::Serve`]).
     Backpressure(String),
+    /// Authentication failure on a remote transport (missing HELLO, bad
+    /// preshared token). Never transient: retrying without a different
+    /// credential cannot succeed.
+    Auth(String),
 }
 
 /// Stable wire code for each [`UniGpsError`] variant — what serve ERR
@@ -64,6 +68,8 @@ pub enum ErrorKind {
     Serve,
     /// [`UniGpsError::Backpressure`].
     Backpressure,
+    /// [`UniGpsError::Auth`].
+    Auth,
 }
 
 impl ErrorKind {
@@ -80,6 +86,7 @@ impl ErrorKind {
             ErrorKind::Config => 7,
             ErrorKind::Serve => 8,
             ErrorKind::Backpressure => 9,
+            ErrorKind::Auth => 10,
         }
     }
 
@@ -97,6 +104,7 @@ impl ErrorKind {
             7 => ErrorKind::Config,
             8 => ErrorKind::Serve,
             9 => ErrorKind::Backpressure,
+            10 => ErrorKind::Auth,
             _ => ErrorKind::Ipc,
         }
     }
@@ -116,6 +124,7 @@ impl ErrorKind {
             ErrorKind::Config => UniGpsError::Config(msg),
             ErrorKind::Serve => UniGpsError::Serve(msg),
             ErrorKind::Backpressure => UniGpsError::Backpressure(msg),
+            ErrorKind::Auth => UniGpsError::Auth(msg),
         }
     }
 }
@@ -133,6 +142,7 @@ impl fmt::Display for UniGpsError {
             UniGpsError::Config(m) => write!(f, "config error: {m}"),
             UniGpsError::Serve(m) => write!(f, "serve error: {m}"),
             UniGpsError::Backpressure(m) => write!(f, "backpressure: {m}"),
+            UniGpsError::Auth(m) => write!(f, "auth error: {m}"),
         }
     }
 }
@@ -173,6 +183,10 @@ impl UniGpsError {
     pub fn backpressure(msg: impl Into<String>) -> Self {
         UniGpsError::Backpressure(msg.into())
     }
+    /// Shorthand constructor for authentication failures.
+    pub fn auth(msg: impl Into<String>) -> Self {
+        UniGpsError::Auth(msg.into())
+    }
 
     /// This error's wire kind.
     pub fn kind(&self) -> ErrorKind {
@@ -187,6 +201,7 @@ impl UniGpsError {
             UniGpsError::Config(_) => ErrorKind::Config,
             UniGpsError::Serve(_) => ErrorKind::Serve,
             UniGpsError::Backpressure(_) => ErrorKind::Backpressure,
+            UniGpsError::Auth(_) => ErrorKind::Auth,
         }
     }
 
@@ -207,7 +222,8 @@ impl UniGpsError {
             | UniGpsError::Runtime(m)
             | UniGpsError::Config(m)
             | UniGpsError::Serve(m)
-            | UniGpsError::Backpressure(m) => m.clone(),
+            | UniGpsError::Backpressure(m)
+            | UniGpsError::Auth(m) => m.clone(),
             UniGpsError::Io(e) => e.to_string(),
         }
     }
@@ -252,6 +268,7 @@ mod tests {
             UniGpsError::Config("h".into()),
             UniGpsError::Serve("i".into()),
             UniGpsError::Backpressure("j".into()),
+            UniGpsError::Auth("k".into()),
         ];
         for e in samples {
             let kind = e.kind();

@@ -25,14 +25,15 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::Path;
 
-/// Hard cap on a frame's payload length for **untrusted** peers (64 MiB)
-/// — the limit [`read_frame`]/[`write_frame`] enforce, and what the
-/// serving subsystem ([`crate::serve`]) speaks on its public socket.
-/// Covers the result tables this repo ships at its default bench scales
-/// (a full-scale `uk` column would exceed it — the serve subsystem
-/// answers such requests with a typed ERR frame rather than a dropped
-/// connection; chunked result streaming is a ROADMAP follow-on), while
-/// keeping a forged length header from exhausting memory.
+/// Hard cap on a *single* frame's payload length for **untrusted** peers
+/// (64 MiB) — the limit [`read_frame`]/[`write_frame`] enforce, and what
+/// the serving subsystem ([`crate::serve`]) speaks on its public
+/// endpoints (Unix socket and TCP alike). This caps one frame, not one
+/// result: result tables of any size cross the serve wire as a sequence
+/// of capped `RESULT_CHUNK` frames
+/// ([`crate::serve::transport::write_result_stream`]), so a full-scale
+/// `uk` column streams fine while a forged length header still cannot
+/// force an attacker-controlled allocation.
 pub const MAX_FRAME_LEN: usize = 64 << 20;
 
 /// Frame cap for the **trusted** VCProg isolation channel (1 GiB, the
@@ -94,6 +95,22 @@ pub fn read_frame(r: &mut impl Read) -> Result<(u32, Vec<u8>)> {
     read_frame_limited(r, MAX_FRAME_LEN)
 }
 
+/// One request/response exchange over any framed byte-stream pair:
+/// write a `method` frame, read back `(head, payload)`. Generic over
+/// `Read + Write`, so the same call path serves the trusted VCProg
+/// Unix-socket channel and the serve protocol on either of its
+/// transports (UDS or TCP).
+pub fn call_limited<R: Read, W: Write>(
+    reader: &mut R,
+    writer: &mut W,
+    method: u32,
+    payload: &[u8],
+    max_len: usize,
+) -> Result<(u32, Vec<u8>)> {
+    write_frame_limited(writer, method, payload, max_len)?;
+    read_frame_limited(reader, max_len)
+}
+
 /// Connect to a Unix socket path, retrying briefly (200 × 5 ms) while
 /// the server starts up. Shared by the VCProg isolation client and the
 /// serving client so the retry policy lives in one place.
@@ -135,8 +152,13 @@ impl SocketClient {
 
 impl RpcChannel for SocketClient {
     fn call(&mut self, method: u32, payload: &[u8]) -> Result<Vec<u8>> {
-        write_frame_limited(&mut self.writer, method, payload, MAX_TRUSTED_FRAME_LEN)?;
-        let (st, resp) = read_frame_limited(&mut self.reader, MAX_TRUSTED_FRAME_LEN)?;
+        let (st, resp) = call_limited(
+            &mut self.reader,
+            &mut self.writer,
+            method,
+            payload,
+            MAX_TRUSTED_FRAME_LEN,
+        )?;
         if st == status::OK {
             Ok(resp)
         } else {

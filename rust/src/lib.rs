@@ -36,9 +36,16 @@
 //! * [`serve`] — the resident job service (`unigps serve`): a concurrent
 //!   job scheduler with FIFO admission + typed backpressure and a shared
 //!   LRU graph-snapshot cache (base datasets *and* derived variants like
-//!   the symmetrized view, both single-flight) behind a
-//!   Unix-domain-socket protocol, so a pipeline of short jobs pays the
-//!   graph load/partition/symmetrize cost once instead of per invocation.
+//!   the symmetrized view, both single-flight) behind one wire protocol
+//!   on two transports — the Unix-domain socket and token-authenticated
+//!   TCP — with chunked result streaming and server-side `WAIT`
+//!   long-polling, so a pipeline of short jobs pays the graph
+//!   load/partition/symmetrize cost once instead of per invocation.
+//! * [`client`] — the one execution-client API over every transport:
+//!   the [`client::Client`] trait (submit / status / wait / result /
+//!   stats / shutdown) implemented in process by [`client::LocalClient`]
+//!   and on the wire by [`serve::RemoteClient`], so programs, the CLI,
+//!   tests and examples are written once and pointed anywhere.
 //!
 //! ## Quickstart
 //!
@@ -57,6 +64,7 @@
 //! println!("{top:?}");
 //! ```
 
+pub mod client;
 pub mod config;
 pub mod distributed;
 pub mod engine;
@@ -73,12 +81,15 @@ pub mod vcprog;
 
 /// Convenience re-exports for the common API surface.
 pub mod prelude {
+    pub use crate::client::{Client, LocalClient};
     pub use crate::engine::{EngineKind, RunOptions, RunResult};
     pub use crate::graph::record::{Record, Schema, Value};
     pub use crate::graph::{Graph, PropertyGraph};
     pub use crate::operators::OperatorBuilder;
     pub use crate::plan::{DatasetRef, Plan, PostOp, Stage, Transform};
-    pub use crate::serve::{ServeClient, ServeConfig, Server};
+    pub use crate::serve::{
+        RemoteClient, ServeClient, ServeConfig, Server, TcpTransport, UdsTransport,
+    };
     pub use crate::session::Session;
     pub use crate::vcprog::{VCProg, VertexId};
 }

@@ -9,21 +9,29 @@
 //! unigps ipc-server --transport shm --path /dev/shm/chan   (internal: VCProg runner)
 //! unigps engines
 //! unigps serve --socket /tmp/unigps.sock [--slots 2] [--queue 64] [--cache-mb 512]
+//!              [--tcp 0.0.0.0:7077 --token-file tok]
 //! unigps submit --socket /tmp/unigps.sock --algo sssp --dataset lj --scale 1024 [--wait]
-//! unigps submit --socket /tmp/unigps.sock --plan pipeline.plan [--wait]
-//! unigps status --socket /tmp/unigps.sock [--job N]
+//! unigps submit --connect tcp://host:7077 --token-file tok --plan pipeline.plan [--wait]
+//! unigps status --connect uds:///tmp/unigps.sock [--job N]
 //! unigps shutdown --socket /tmp/unigps.sock
 //! ```
 //!
-//! Argument parsing is hand-rolled (`clap` is unavailable offline).
+//! The submit/status/shutdown commands are thin consumers of the
+//! [`unigps::client::Client`] trait: `--connect tcp://host:port` (with
+//! `--token-file`) builds a TCP client, `--connect uds://<path>` or
+//! `--socket <path>` a Unix-socket client — every subcommand works
+//! identically over either. Argument parsing is hand-rolled (`clap` is
+//! unavailable offline).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use unigps::client::Client;
 use unigps::engine::EngineKind;
 use unigps::graph::io::Format;
 use unigps::ipc::Transport;
-use unigps::serve::{ServeClient, ServeConfig, Server};
+use unigps::serve::transport::parse_endpoint;
+use unigps::serve::{RemoteClient, ServeClient, ServeConfig, Server};
 use unigps::session::Session;
 
 fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
@@ -275,9 +283,29 @@ fn cmd_engines() -> Result<(), AnyErr> {
     Ok(())
 }
 
+/// Read a preshared token file: one line, surrounding whitespace trimmed.
+fn read_token_file(path: &str) -> Result<String, AnyErr> {
+    let token = std::fs::read_to_string(path)?.trim().to_string();
+    if token.is_empty() {
+        return Err(format!("token file '{path}' is empty").into());
+    }
+    Ok(token)
+}
+
 fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
     let socket = get(flags, "socket").ok_or("--socket required")?;
     let mut cfg = ServeConfig::new(socket);
+    // A token without --tcp is still honored: the server then validates
+    // HELLO frames from Unix-socket clients that choose to send one.
+    if let Some(token_file) = get(flags, "token-file") {
+        cfg.token = Some(read_token_file(token_file)?);
+    }
+    if let Some(addr) = get(flags, "tcp") {
+        cfg.tcp = Some(addr.to_string());
+        if cfg.token.is_none() {
+            return Err("--tcp requires --token-file (preshared client token)".into());
+        }
+    }
     if let Some(s) = get(flags, "slots") {
         cfg.slots = s.parse::<usize>()?.max(1);
     }
@@ -303,9 +331,33 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
         unigps::util::fmt_bytes(cfg.cache_budget as u64),
     );
     let server = Server::bind(session, cfg)?;
+    if let Some(addr) = server.tcp_addr() {
+        eprintln!("also serving on tcp://{addr} (token-authenticated)");
+    }
     server.run()?;
     eprintln!("server drained and stopped");
     Ok(())
+}
+
+/// Build the [`Client`] a subcommand talks through, from `--connect
+/// tcp://host:port | uds://<path>` (TCP requires `--token-file`) or the
+/// historical `--socket <path>`.
+fn client_from_flags(flags: &BTreeMap<String, String>) -> Result<Box<dyn Client>, AnyErr> {
+    let endpoint = match (get(flags, "connect"), get(flags, "socket")) {
+        (Some(uri), _) => uri.to_string(),
+        (None, Some(path)) => path.to_string(),
+        (None, None) => return Err("--connect <uri> or --socket <path> required".into()),
+    };
+    let (tcp, uds) = parse_endpoint(&endpoint)?;
+    if let Some(addr) = tcp {
+        let token_file = get(flags, "token-file")
+            .ok_or("tcp:// endpoints require --token-file (preshared token)")?;
+        let token = read_token_file(token_file)?;
+        Ok(Box::new(RemoteClient::connect_tcp(&addr, &token)?))
+    } else {
+        let path = uds.expect("parse_endpoint returns exactly one side");
+        Ok(Box::new(ServeClient::connect(&path)?))
+    }
 }
 
 /// Synthesize `key = value` job-spec text from CLI flags (or read it from
@@ -329,8 +381,7 @@ fn spec_from_flags(flags: &BTreeMap<String, String>) -> Result<String, AnyErr> {
 }
 
 fn cmd_submit(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
-    let socket = PathBuf::from(get(flags, "socket").ok_or("--socket required")?);
-    let mut client = ServeClient::connect(&socket)?;
+    let mut client = client_from_flags(flags)?;
     // --plan submits the parsed plan over the binary wire codec; --spec
     // and bare flags travel as spec text (the server parses both forms).
     let id = match get(flags, "plan") {
@@ -351,8 +402,7 @@ fn cmd_submit(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
 }
 
 fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
-    let socket = PathBuf::from(get(flags, "socket").ok_or("--socket required")?);
-    let mut client = ServeClient::connect(&socket)?;
+    let mut client = client_from_flags(flags)?;
     if let Some(job) = get(flags, "job") {
         let st = client.status(job.parse()?)?;
         match st.error {
@@ -384,8 +434,7 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
 }
 
 fn cmd_shutdown(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
-    let socket = PathBuf::from(get(flags, "socket").ok_or("--socket required")?);
-    let mut client = ServeClient::connect(&socket)?;
+    let mut client = client_from_flags(flags)?;
     client.shutdown()?;
     println!("shutdown requested (server drains admitted jobs first)");
     Ok(())

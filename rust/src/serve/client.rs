@@ -1,0 +1,249 @@
+//! The wire [`Client`]: [`RemoteClient`]`<T>` over any [`Transport`].
+//!
+//! One synchronous request at a time per client (open one client per
+//! thread; the server handles connections concurrently). Speaks the
+//! strict untrusted framing (`MAX_FRAME_LEN` enforced on read and write)
+//! on whatever byte stream the transport produced — the Unix-domain
+//! socket, or TCP after the transport's preshared-token HELLO handshake
+//! — and decodes kind-tagged ERR frames back into typed
+//! [`UniGpsError`](crate::error::UniGpsError) values.
+//!
+//! Two protocol features keep the client thin:
+//!
+//! * **`WAIT` long-poll** — [`Client::wait`] parks on the server (which
+//!   blocks on the scheduler's completion condvar) instead of hammering
+//!   `STATUS` in a 2 → 128 ms backoff loop like the old `ServeClient`
+//!   did; one round trip per [`WAIT_SLICE`] of waiting, not ~500 status
+//!   calls per second per waiter.
+//! * **Chunked results** — [`Client::result`] reads the
+//!   `RESULT_BEGIN / RESULT_CHUNK / RESULT_END` stream
+//!   ([`read_result_stream_body`]), so result tables of any size up to
+//!   the stream cap (full-scale `uk` columns included) arrive bit-exact;
+//!   the single-frame ceiling and its typed-ERR consolation are gone. A
+//!   failure *inside* a stream (cap, count, checksum) poisons the
+//!   connection — later calls fail fast with a typed error instead of
+//!   misreading leftover chunk frames as responses.
+
+use crate::client::{wait_timeout_error, Client};
+use crate::engine::RunResult;
+use crate::error::Result;
+use crate::ipc::protocol::{get_u64, put_u64, status};
+use crate::ipc::socket_rpc::{call_limited, MAX_FRAME_LEN};
+use crate::plan::wire::encode_plan;
+use crate::plan::Plan;
+use crate::serve::jobs::{decode_result, JobId, JobStatus};
+use crate::serve::method;
+use crate::serve::server::ServeStats;
+use crate::serve::transport::{
+    decode_error, read_result_stream_body, reply, Conn, TcpTransport, Transport, UdsTransport,
+};
+use std::io::{BufReader, BufWriter};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Longest wait a single `WAIT` round trip asks the server for. The
+/// server clamps harder (its own cap); the client slices its deadline so
+/// a dead server is noticed within one slice, not one full timeout.
+pub const WAIT_SLICE: Duration = Duration::from_secs(10);
+
+/// Client for a [`Server`](crate::serve::Server) over a connection
+/// transport `T`. See the [module docs](self) for the protocol surface.
+pub struct RemoteClient<T: Transport> {
+    transport: T,
+    reader: BufReader<Conn>,
+    writer: BufWriter<Conn>,
+    /// Set when a result stream failed mid-reassembly (cap, count or
+    /// checksum violation): unread chunk frames may still be buffered,
+    /// so the request/response pairing is gone. Every later call fails
+    /// fast with a typed error instead of decoding leftover chunk bytes
+    /// as a response.
+    poisoned: Option<String>,
+}
+
+/// The historical Unix-socket client, now just the UDS instantiation of
+/// [`RemoteClient`]. `ServeClient::connect(path)` keeps working.
+pub type ServeClient = RemoteClient<UdsTransport>;
+
+impl<T: Transport> RemoteClient<T> {
+    /// Connect (and authenticate, where `transport` requires it).
+    pub fn open(transport: T) -> Result<RemoteClient<T>> {
+        let conn = transport.connect()?;
+        Ok(RemoteClient {
+            reader: BufReader::new(conn.try_clone()?),
+            writer: BufWriter::new(conn),
+            transport,
+            poisoned: None,
+        })
+    }
+
+    /// The endpoint this client talks to.
+    pub fn endpoint(&self) -> String {
+        self.transport.describe()
+    }
+
+    fn check_sync(&self) -> Result<()> {
+        match &self.poisoned {
+            Some(why) => Err(crate::error::UniGpsError::ipc(format!(
+                "connection to {} desynchronized by an earlier result-stream \
+                 failure ({why}); reconnect",
+                self.transport.describe()
+            ))),
+            None => Ok(()),
+        }
+    }
+
+    fn call(&mut self, m: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        self.check_sync()?;
+        let (st, resp) =
+            call_limited(&mut self.reader, &mut self.writer, m, payload, MAX_FRAME_LEN)?;
+        if st == status::OK {
+            Ok(resp)
+        } else {
+            Err(decode_error(&resp))
+        }
+    }
+}
+
+impl RemoteClient<UdsTransport> {
+    /// Connect to a server's Unix socket (retrying briefly while it
+    /// starts).
+    pub fn connect(path: &Path) -> Result<ServeClient> {
+        RemoteClient::open(UdsTransport::new(path))
+    }
+}
+
+impl RemoteClient<TcpTransport> {
+    /// Connect to a server's TCP listener at `addr` (`host:port`),
+    /// authenticating with the preshared `token`. A bad token is the
+    /// typed [`UniGpsError::Auth`](crate::error::UniGpsError::Auth) the
+    /// server rejected the handshake with — no job is ever admitted from
+    /// an unauthenticated connection.
+    pub fn connect_tcp(addr: &str, token: &str) -> Result<RemoteClient<TcpTransport>> {
+        RemoteClient::open(TcpTransport::new(addr, token))
+    }
+}
+
+impl<T: Transport> Client for RemoteClient<T> {
+    fn submit(&mut self, spec: &str) -> Result<JobId> {
+        let resp = self.call(method::SUBMIT, spec.as_bytes())?;
+        let mut pos = 0;
+        get_u64(&resp, &mut pos)
+    }
+
+    fn submit_plan(&mut self, plan: &Plan) -> Result<JobId> {
+        let resp = self.call(method::SUBMIT_PLAN, &encode_plan(plan))?;
+        let mut pos = 0;
+        get_u64(&resp, &mut pos)
+    }
+
+    fn status(&mut self, id: JobId) -> Result<JobStatus> {
+        let mut req = Vec::new();
+        put_u64(&mut req, id);
+        JobStatus::decode(&self.call(method::STATUS, &req)?)
+    }
+
+    /// Long-poll the server until the job is terminal: each round trip is
+    /// a `WAIT` frame carrying the id and a deadline slice; the server
+    /// parks on its scheduler's completion condvar and answers with the
+    /// job's status — terminal, or still-pending once the slice expires.
+    fn wait(&mut self, id: JobId, timeout: Duration) -> Result<Arc<RunResult>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            let remaining = deadline.saturating_duration_since(now);
+            let slice = remaining.min(WAIT_SLICE);
+            let mut req = Vec::new();
+            put_u64(&mut req, id);
+            put_u64(&mut req, slice.as_millis() as u64);
+            let st = JobStatus::decode(&self.call(method::WAIT, &req)?)?;
+            if st.state.is_terminal() {
+                return self.result(id);
+            }
+            if Instant::now() >= deadline {
+                return Err(wait_timeout_error(id, timeout, st.state.name()));
+            }
+        }
+    }
+
+    /// Fetch a finished job's result table as a chunked stream,
+    /// reassembled bit-exact (length, chunk count and checksum verified).
+    /// A clean first-frame ERR (job failed, unknown id, table over the
+    /// stream cap) leaves the connection usable; a failure *inside* the
+    /// stream poisons this client — leftover chunk frames would otherwise
+    /// be misread as the next call's response.
+    fn result(&mut self, id: JobId) -> Result<Arc<RunResult>> {
+        self.check_sync()?;
+        let mut req = Vec::new();
+        put_u64(&mut req, id);
+        crate::ipc::socket_rpc::write_frame(&mut self.writer, method::RESULT, &req)?;
+        let (head, payload) = crate::ipc::socket_rpc::read_frame(&mut self.reader)?;
+        match head {
+            reply::ERR => Err(decode_error(&payload)),
+            reply::RESULT_BEGIN => match read_result_stream_body(&mut self.reader, &payload) {
+                Ok(table) => Ok(Arc::new(decode_result(&table)?)),
+                Err(e) => {
+                    self.poisoned = Some(e.message());
+                    Err(e)
+                }
+            },
+            other => {
+                let e = crate::error::UniGpsError::ipc(format!(
+                    "expected RESULT_BEGIN or ERR, got head {other}"
+                ));
+                self.poisoned = Some(e.message());
+                Err(e)
+            }
+        }
+    }
+
+    fn stats(&mut self) -> Result<ServeStats> {
+        ServeStats::decode(&self.call(method::STATS, &[])?)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.call(method::SHUTDOWN, &[])?;
+        Ok(())
+    }
+}
+
+impl<T: Transport> std::fmt::Debug for RemoteClient<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RemoteClient({})", self.transport.describe())
+    }
+}
+
+// Back-compat sugar: `submit_with_retry` predates the trait and keeps an
+// inherent alias so that one call compiles without a trait import. The
+// rest of the old inherent surface (submit/status/wait/result/stats/
+// shutdown) deliberately moved to `Client` — callers import the trait
+// and work against any implementation.
+impl<T: Transport> RemoteClient<T> {
+    /// Inherent alias for [`Client::submit_with_retry`].
+    pub fn submit_with_retry(&mut self, spec: &str, timeout: Duration) -> Result<JobId> {
+        Client::submit_with_retry(self, spec, timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::UniGpsError;
+
+    // RemoteClient's wire behavior is covered by rust/tests/
+    // client_transports.rs and serve_integration.rs (it needs a live
+    // server); here we only pin the pieces that are pure.
+
+    #[test]
+    fn wait_slice_fits_under_the_server_cap() {
+        assert!(WAIT_SLICE.as_millis() as u64 <= crate::serve::server::MAX_WAIT_SLICE_MS);
+    }
+
+    #[test]
+    fn timeout_error_names_the_state() {
+        let e = wait_timeout_error(7, Duration::from_secs(3), "queued");
+        assert!(matches!(e, UniGpsError::Serve(_)), "{e:?}");
+        assert!(e.to_string().contains("job 7"), "{e}");
+        assert!(e.to_string().contains("queued"), "{e}");
+    }
+}

@@ -10,15 +10,29 @@
 //! comparison, arXiv 1806.08082) and shared nothing (the one-resident-graph
 //! pipeline model GraphX argues for, arXiv 1402.2394).
 //!
-//! This module keeps the session resident and serves jobs over a
-//! Unix-domain socket:
+//! This module keeps the session resident and serves jobs behind the one
+//! [`Client`](crate::client::Client) API — over a Unix-domain socket,
+//! over authenticated TCP, or with no socket at all
+//! ([`LocalClient`](crate::client::LocalClient) runs the same scheduler
+//! and cache in process):
 //!
-//! * [`server`] — the accept loop. Reuses the length-prefixed framing of
-//!   [`crate::ipc::socket_rpc`] (hardened: frames over
-//!   [`crate::ipc::socket_rpc::MAX_FRAME_LEN`] are rejected before
-//!   allocation) and [`crate::ipc::protocol`]-style message encodings for
-//!   submit / status / result / stats / shutdown. One handler thread per
-//!   client connection; [`server::ServeClient`] is the matching client.
+//! * [`transport`] — the connection layer: the client-side
+//!   [`Transport`](transport::Transport) trait ([`UdsTransport`] /
+//!   [`TcpTransport`] with its mandatory preshared-token HELLO
+//!   handshake), the server's [`Listener`](transport::Listener) /
+//!   [`Conn`](transport::Conn) pair, the chunked
+//!   `RESULT_BEGIN / RESULT_CHUNK / RESULT_END` result-stream codec
+//!   that removed the single-frame result ceiling, and the kind-tagged
+//!   ERR codec.
+//! * [`server`] — the accept loops (one per bound listener) and frame
+//!   dispatch: submit / status / wait / result / stats / shutdown over
+//!   the length-prefixed [`crate::ipc::socket_rpc`] framing, `WAIT`
+//!   long-polling the scheduler's completion condvar server-side,
+//!   results streamed in chunks. The wire grammar is documented in
+//!   `docs/serve.md`.
+//! * [`client`] — [`RemoteClient`]`<T>`, the wire implementation of
+//!   [`Client`](crate::client::Client); [`ServeClient`] is its
+//!   Unix-socket instantiation.
 //! * [`jobs`] — the job spec: a [`crate::plan::Plan`] (multi-stage
 //!   pipelines in the sectioned plan format, or the historical flat
 //!   `key = value` single-op form lowered to a one-stage plan) plus the
@@ -43,21 +57,25 @@
 //!   machine's cores are *split* across slots — every stage runs
 //!   [`crate::engine`] with at most `total_workers / slots` workers —
 //!   instead of letting N concurrent jobs each spawn `total_workers`
-//!   threads and oversubscribe the box.
+//!   threads and oversubscribe the box. Runners signal a completion
+//!   condvar that `WAIT` and in-process waiters park on.
 //!
 //! [`UniGpsError::Backpressure`]: crate::error::UniGpsError::Backpressure
 //!
 //! ```no_run
+//! use unigps::client::Client;
 //! use unigps::serve::{ServeClient, ServeConfig, Server};
 //! use unigps::session::Session;
 //! use std::path::Path;
 //!
-//! // Server (normally `unigps serve --socket /tmp/unigps.sock`):
+//! // Server (normally `unigps serve --socket /tmp/unigps.sock`,
+//! // optionally `--tcp 0.0.0.0:7077 --token-file tok`):
 //! let cfg = ServeConfig::new("/tmp/unigps.sock");
 //! let server = Server::bind(Session::builder().build(), cfg).unwrap();
 //! std::thread::spawn(move || server.run().unwrap());
 //!
-//! // Client (normally `unigps submit ...`):
+//! // Client (normally `unigps submit ...`); over TCP this would be
+//! // `RemoteClient::connect_tcp("host:7077", "token")` — same trait.
 //! let mut client = ServeClient::connect(Path::new("/tmp/unigps.sock")).unwrap();
 //! let id = client.submit("algo = pagerank\ndataset = lj\nscale = 1024").unwrap();
 //! let result = client.wait(id, std::time::Duration::from_secs(60)).unwrap();
@@ -65,14 +83,18 @@
 //! ```
 
 pub mod cache;
+pub mod client;
 pub mod jobs;
 pub mod scheduler;
 pub mod server;
+pub mod transport;
 
 pub use cache::{CacheStats, SnapshotCache};
+pub use client::{RemoteClient, ServeClient};
 pub use jobs::{DatasetRef, JobId, JobSpec, JobState, JobStatus};
 pub use scheduler::{SchedStats, Scheduler};
-pub use server::{ServeClient, ServeStats, Server};
+pub use server::{ServeStats, Server};
+pub use transport::{TcpTransport, Transport, UdsTransport};
 
 use std::path::{Path, PathBuf};
 
@@ -85,13 +107,24 @@ pub mod method {
     /// Query a job's status by id; response is an encoded
     /// [`super::JobStatus`].
     pub const STATUS: u32 = 17;
-    /// Fetch a finished job's result table by id.
+    /// Fetch a finished job's result table by id; answered with a
+    /// `RESULT_BEGIN / RESULT_CHUNK / RESULT_END` stream
+    /// ([`super::transport::reply`]), any table size.
     pub const RESULT: u32 = 18;
     /// Fetch server-wide cache + scheduler statistics.
     pub const STATS: u32 = 19;
     /// Submit a wire-encoded [`crate::plan::Plan`]
     /// ([`crate::plan::wire::encode_plan`]); response is the `u64` job id.
     pub const SUBMIT_PLAN: u32 = 20;
+    /// Authentication handshake: payload is the preshared token.
+    /// Mandatory first frame on TCP connections; a no-op courtesy on the
+    /// Unix socket.
+    pub const HELLO: u32 = 21;
+    /// Long-poll a job: `u64 id | u64 timeout_ms`. The server parks on
+    /// the scheduler's completion condvar (clamped to
+    /// [`super::server::MAX_WAIT_SLICE_MS`]) and responds with the job's
+    /// [`super::JobStatus`], terminal or not.
+    pub const WAIT: u32 = 22;
     /// Orderly server shutdown (drains queued and running jobs first).
     pub use crate::ipc::protocol::method::SHUTDOWN;
 }
@@ -99,8 +132,17 @@ pub mod method {
 /// Configuration of a serving instance.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Unix-domain socket path the server listens on.
+    /// Unix-domain socket path the server listens on (always bound).
     pub socket: PathBuf,
+    /// Optional TCP listen address (`host:port`; port 0 picks a free
+    /// port, readable via [`Server::tcp_addr`]). Requires `token`.
+    pub tcp: Option<String>,
+    /// Preshared auth token TCP clients must present in their HELLO
+    /// frame. Mandatory when `tcp` is set; optional hardening otherwise.
+    pub token: Option<String>,
+    /// Per-chunk payload size for streamed result tables (clamped into
+    /// `1..=MAX_FRAME_LEN` at write time).
+    pub chunk_len: usize,
     /// Maximum jobs executing concurrently (scheduler slots).
     pub slots: usize,
     /// Admission-queue capacity; submits beyond it are rejected with a
@@ -115,19 +157,30 @@ pub struct ServeConfig {
 }
 
 impl ServeConfig {
-    /// Defaults: 2 slots over all available cores, a 64-job queue and a
-    /// 512 MiB snapshot budget.
+    /// Defaults: 2 slots over all available cores, a 64-job queue, a
+    /// 512 MiB snapshot budget, 4 MiB result chunks, no TCP listener.
     pub fn new(socket: impl Into<PathBuf>) -> ServeConfig {
         let cores = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(4);
         ServeConfig {
             socket: socket.into(),
+            tcp: None,
+            token: None,
+            chunk_len: transport::DEFAULT_CHUNK_LEN,
             slots: 2,
             queue_cap: 64,
             cache_budget: 512 << 20,
             total_workers: cores,
         }
+    }
+
+    /// Sizing for an in-process executor
+    /// ([`LocalClient`](crate::client::LocalClient)): same scheduler
+    /// defaults as [`ServeConfig::new`], no transport — the socket path
+    /// is a placeholder that is never bound.
+    pub fn in_process() -> ServeConfig {
+        ServeConfig::new("/unigps-in-process-never-bound")
     }
 
     /// Worker threads each job slot runs with (cores split across slots,
@@ -171,6 +224,8 @@ mod tests {
             method::RESULT,
             method::STATS,
             method::SUBMIT_PLAN,
+            method::HELLO,
+            method::WAIT,
         ] {
             for v in [
                 vc::INIT_PROGRAM,

@@ -35,6 +35,7 @@ use crate::session::Session;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Scheduler observability counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -83,6 +84,9 @@ struct Shared {
     inner: Mutex<Inner>,
     /// Signals runners that work (or shutdown) is available.
     work: Condvar,
+    /// Signals waiters ([`Scheduler::wait_terminal`], the server's `WAIT`
+    /// long-poll) that some job reached a terminal state.
+    done: Condvar,
     cache: Arc<SnapshotCache>,
     /// The server session job specs are layered over.
     base: Session,
@@ -116,6 +120,7 @@ impl Scheduler {
                 shutdown: false,
             }),
             work: Condvar::new(),
+            done: Condvar::new(),
             cache,
             base,
             queue_cap: cfg.queue_cap.max(1),
@@ -190,15 +195,43 @@ impl Scheduler {
         Ok(id)
     }
 
-    /// A job's status, or `None` for an unknown id (never assigned, or a
-    /// finished job already evicted past [`MAX_FINISHED_JOBS`]).
-    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+    /// A job's status. Unknown ids (never assigned, or finished jobs
+    /// already evicted past [`MAX_FINISHED_JOBS`]) are the same typed
+    /// [`UniGpsError::Serve`] the wire path reports, so in-process and
+    /// remote callers see one API.
+    ///
+    /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+    pub fn status(&self, id: JobId) -> Result<JobStatus> {
         let inner = self.shared.inner.lock().unwrap();
-        inner.jobs.get(&id).map(|rec| JobStatus {
-            id,
-            state: rec.state,
-            error: rec.error.clone(),
-        })
+        status_of(&inner, id)
+    }
+
+    /// Block until job `id` reaches a terminal state or `timeout`
+    /// elapses, returning its status either way (callers check
+    /// [`JobState::is_terminal`]). This is the waiter side of the
+    /// completion condvar runners signal — the server's `WAIT` long-poll
+    /// and [`LocalClient::wait`](crate::client::LocalClient) both park
+    /// here instead of polling [`Scheduler::status`]. Unknown ids are
+    /// typed errors, including a job evicted *while* waiting.
+    pub fn wait_terminal(&self, id: JobId, timeout: Duration) -> Result<JobStatus> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            let st = status_of(&inner, id)?;
+            if st.state.is_terminal() {
+                return Ok(st);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(st);
+            }
+            let (guard, _) = self
+                .shared
+                .done
+                .wait_timeout(inner, deadline.saturating_duration_since(now))
+                .unwrap();
+            inner = guard;
+        }
     }
 
     /// A finished job's result (shared, not deep-copied — the table can be
@@ -317,7 +350,23 @@ fn runner_loop(shared: &Shared) {
             }
         }
         finish_record(&mut inner, id);
+        drop(inner);
+        // Wake every waiter; each rechecks its own job id.
+        shared.done.notify_all();
     }
+}
+
+/// Status snapshot under the lock; unknown ids are typed errors.
+fn status_of(inner: &Inner, id: JobId) -> Result<JobStatus> {
+    inner
+        .jobs
+        .get(&id)
+        .map(|rec| JobStatus {
+            id,
+            state: rec.state,
+            error: rec.error.clone(),
+        })
+        .ok_or_else(|| UniGpsError::serve(format!("unknown job {id}")))
 }
 
 /// Record a terminal job in completion order and evict the oldest finished
@@ -537,9 +586,34 @@ mod tests {
             Arc::new(SnapshotCache::new(usize::MAX)),
             &cfg(0, 2),
         );
-        assert!(sched.status(999).is_none());
+        let err = sched.status(999).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
+        assert!(err.to_string().contains("unknown job"), "{err}");
         let err = sched.result(999).unwrap_err();
         assert!(matches!(err, UniGpsError::Serve(_)));
+        let err = sched.wait_terminal(999, Duration::from_millis(1)).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn wait_terminal_blocks_until_done_and_times_out_cleanly() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        // A job with a service delay: wait_terminal must block past the
+        // delay and return Done without polling.
+        let id = sched.submit(&format!("{SPEC}\ndelay_ms = 150")).unwrap();
+        let t = Instant::now();
+        let st = sched.wait_terminal(id, Duration::from_secs(30)).unwrap();
+        assert_eq!(st.state, JobState::Done, "error: {:?}", st.error);
+        assert!(t.elapsed() >= Duration::from_millis(140), "waited through the delay");
+        // A short timeout returns the job's current (non-terminal) state.
+        let id = sched.submit(&format!("{SPEC}\ndelay_ms = 2000")).unwrap();
+        let st = sched.wait_terminal(id, Duration::from_millis(50)).unwrap();
+        assert!(!st.state.is_terminal(), "got {}", st.state);
         sched.shutdown();
     }
 }

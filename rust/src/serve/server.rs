@@ -1,61 +1,75 @@
-//! The serving front end: a Unix-domain-socket accept loop and its client.
+//! The serving back end: accept loops over every bound transport.
 //!
-//! Reuses the hardened length-prefixed framing of
-//! [`crate::ipc::socket_rpc`] (`u32 method_or_status | u32 len | payload`,
-//! frames over [`MAX_FRAME_LEN`](crate::ipc::socket_rpc::MAX_FRAME_LEN)
-//! rejected before allocation) and the [`crate::ipc::protocol`] status
-//! codes. **ERR frames are kind-tagged** ([`encode_error`] /
-//! [`decode_error`]): the payload is `u32 error-kind | message`, so
-//! [`ServeClient`] rebuilds the *same* [`UniGpsError`] variant the server
-//! raised — a queue-full rejection arrives as
-//! [`UniGpsError::Backpressure`] and retry loops match on
-//! [`UniGpsError::is_backpressure`] instead of substring-matching message
-//! text. Each accepted connection gets a handler thread that serves
-//! frames until the peer disconnects; all handlers share one
-//! [`Scheduler`] and one [`SnapshotCache`](crate::serve::cache::SnapshotCache).
-//! A `SHUTDOWN` frame stops the accept loop and drains the scheduler
-//! (queued and running jobs finish first).
+//! A [`Server`] always listens on its Unix-domain socket and, when
+//! [`ServeConfig::tcp`] is set, on a TCP address as well — one protocol,
+//! one dispatch table, two byte streams (see
+//! [`crate::serve::transport`]). All frames use the hardened
+//! length-prefixed framing of [`crate::ipc::socket_rpc`]
+//! (`u32 head | u32 len | payload`, payloads over
+//! [`MAX_FRAME_LEN`](crate::ipc::socket_rpc::MAX_FRAME_LEN) rejected
+//! before allocation, read and write, on both transports).
+//!
+//! Protocol properties the handlers enforce:
+//!
+//! * **TCP requires HELLO.** The first frame on a TCP connection must be
+//!   `HELLO <preshared token>`; anything else — wrong token included —
+//!   is answered with a typed [`UniGpsError::Auth`] ERR frame and the
+//!   connection closes, before any job is admitted. Unix-socket clients
+//!   are authorized by file permissions and skip the handshake.
+//! * **Results stream in chunks.** `RESULT` is answered with
+//!   `RESULT_BEGIN | RESULT_CHUNK* | RESULT_END`
+//!   ([`write_result_stream`]), so a result table of any size crosses
+//!   the wire bit-exact; there is no single-frame result ceiling.
+//! * **`WAIT` long-polls server-side.** A `WAIT (id, timeout_ms)` frame
+//!   parks the handler on the scheduler's completion condvar
+//!   ([`Scheduler::wait_terminal`]) and answers with the job's status —
+//!   clients block on one round trip instead of polling `STATUS`.
+//! * **ERR frames are kind-tagged** ([`encode_error`] /
+//!   [`decode_error`]): the payload is `u32 error-kind | message`, so
+//!   clients rebuild the *same* [`UniGpsError`] variant the server
+//!   raised — backpressure stays backpressure, auth stays auth.
+//!
+//! Each accepted connection gets a handler thread that serves frames
+//! until the peer disconnects; all handlers share one [`Scheduler`] and
+//! one [`SnapshotCache`](crate::serve::cache::SnapshotCache). A
+//! `SHUTDOWN` frame stops every accept loop and drains the scheduler
+//! (queued and running jobs finish first). The wire grammar is
+//! documented in `docs/serve.md`.
+//!
+//! [`UniGpsError::Auth`]: crate::error::UniGpsError::Auth
 
-use crate::engine::RunResult;
-use crate::error::{ErrorKind, Result, UniGpsError};
-use crate::ipc::protocol::{get_u32, get_u64, put_u64, status};
-use crate::ipc::socket_rpc::{connect_with_retry, read_frame, write_frame};
-use crate::plan::wire::{decode_plan, encode_plan};
-use crate::plan::Plan;
+use crate::error::{Result, UniGpsError};
+use crate::ipc::protocol::{get_u64, put_u64, status};
+use crate::ipc::socket_rpc::{read_frame, write_frame};
+use crate::plan::wire::decode_plan;
 use crate::serve::cache::CacheStats;
-use crate::serve::jobs::{decode_result, encode_result, JobId, JobStatus};
+use crate::serve::jobs::encode_result;
 use crate::serve::scheduler::{SchedStats, Scheduler};
+use crate::serve::transport::{
+    bind_tcp, bind_uds, tcp_local_addr, write_result_stream, Conn, Listener, MAX_RESULT_LEN,
+};
 use crate::serve::{method, ServeConfig};
 use crate::session::Session;
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
-use std::os::unix::net::{UnixListener, UnixStream};
-use std::path::Path;
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Encode a typed error for an ERR frame: `u32 kind code | UTF-8 message`.
-pub fn encode_error(e: &UniGpsError) -> Vec<u8> {
-    let mut out = Vec::new();
-    crate::ipc::protocol::put_u32(&mut out, e.kind().code());
-    out.extend_from_slice(e.message().as_bytes());
-    out
-}
+// The ERR codec is protocol surface shared with the clients; it lives in
+// `transport` now but keeps its historical `server::` paths.
+pub use crate::serve::transport::{decode_error, encode_error};
 
-/// Decode an ERR frame payload back into the typed error it carried.
-/// Malformed payloads degrade to [`UniGpsError::Ipc`], never a panic.
-pub fn decode_error(payload: &[u8]) -> UniGpsError {
-    let mut pos = 0;
-    match get_u32(payload, &mut pos) {
-        Ok(code) => ErrorKind::from_code(code)
-            .rebuild(String::from_utf8_lossy(&payload[pos..]).into_owned()),
-        Err(_) => UniGpsError::ipc(format!(
-            "malformed ERR frame: {}",
-            String::from_utf8_lossy(payload)
-        )),
-    }
-}
+/// Hardest cap on one `WAIT` long-poll's server-side park (30 s). A
+/// client asking for more gets its slice clamped and simply sends the
+/// next `WAIT`; a handler thread is never parked unboundedly by one
+/// frame.
+pub const MAX_WAIT_SLICE_MS: u64 = 30_000;
+
+/// How often a parked `WAIT` handler re-checks the server stop flag
+/// (250 ms) — bounds how long shutdown waits for long-poll handlers.
+const STOP_CHECK_MS: u64 = 250;
 
 /// Server-wide statistics: snapshot cache + scheduler counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -123,7 +137,9 @@ impl ServeStats {
 /// The resident job server. Bind, then [`Server::run`] until a client
 /// sends `SHUTDOWN`.
 pub struct Server {
-    listener: UnixListener,
+    uds: Listener,
+    tcp: Option<Listener>,
+    tcp_addr: Option<SocketAddr>,
     cfg: ServeConfig,
     sched: Scheduler,
     cache: Arc<crate::serve::cache::SnapshotCache>,
@@ -131,21 +147,37 @@ pub struct Server {
     /// Live connections (socket clones), so shutdown can unblock handler
     /// threads parked in `read_frame` on idle clients. Handlers remove
     /// their own entry on exit, bounding the table to open connections.
-    conns: Mutex<HashMap<u64, UnixStream>>,
+    conns: Mutex<HashMap<u64, Conn>>,
     next_conn: AtomicU64,
 }
 
 impl Server {
-    /// Bind the socket (replacing any stale file) and start the scheduler
+    /// Bind the Unix socket (replacing any stale file), bind the TCP
+    /// listener when [`ServeConfig::tcp`] is set — refusing a TCP
+    /// configuration without a preshared token, since an unauthenticated
+    /// network listener must never exist — and start the scheduler
     /// slots. Job specs are layered over `session` — its engine, worker
     /// count, partition strategy and options are the serving defaults.
     pub fn bind(session: Session, cfg: ServeConfig) -> Result<Server> {
-        let _ = std::fs::remove_file(&cfg.socket);
-        let listener = UnixListener::bind(&cfg.socket)?;
+        if cfg.tcp.is_some() && cfg.token.as_deref().unwrap_or("").is_empty() {
+            return Err(UniGpsError::Config(
+                "TCP serving requires a preshared token (serve --tcp needs \
+                 --token-file); refusing to bind an unauthenticated listener"
+                    .into(),
+            ));
+        }
+        let uds = bind_uds(&cfg.socket)?;
+        let tcp = match &cfg.tcp {
+            Some(addr) => Some(bind_tcp(addr)?),
+            None => None,
+        };
+        let tcp_addr = tcp.as_ref().and_then(tcp_local_addr);
         let cache = Arc::new(crate::serve::cache::SnapshotCache::new(cfg.cache_budget));
         let sched = Scheduler::start(session, cache.clone(), &cfg);
         Ok(Server {
-            listener,
+            uds,
+            tcp,
+            tcp_addr,
             cfg,
             sched,
             cache,
@@ -160,6 +192,12 @@ impl Server {
         &self.cfg
     }
 
+    /// The actual TCP listen address, when a TCP listener is bound
+    /// (resolves `:0` to the kernel-assigned port).
+    pub fn tcp_addr(&self) -> Option<SocketAddr> {
+        self.tcp_addr
+    }
+
     /// Current server-wide statistics.
     pub fn stats(&self) -> ServeStats {
         ServeStats {
@@ -168,63 +206,121 @@ impl Server {
         }
     }
 
-    /// Accept clients until a `SHUTDOWN` frame arrives, then disconnect
-    /// remaining clients, drain the scheduler (queued and running jobs
-    /// complete) and return. Transient `accept` failures (e.g. fd
-    /// exhaustion under many clients) are retried, never fatal.
+    /// Accept clients on every listener until a `SHUTDOWN` frame
+    /// arrives, then disconnect remaining clients, drain the scheduler
+    /// (queued and running jobs complete) and return. Transient `accept`
+    /// failures (e.g. fd exhaustion under many clients) are retried,
+    /// never fatal.
     pub fn run(&self) -> Result<()> {
         std::thread::scope(|scope| {
-            loop {
-                if self.stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let stream = match self.listener.accept() {
-                    Ok((stream, _addr)) => stream,
-                    Err(_) if self.stop.load(Ordering::SeqCst) => break,
-                    Err(_) => {
-                        // Transient (EMFILE, EINTR, ...): back off briefly
-                        // and keep serving instead of killing the server.
-                        std::thread::sleep(Duration::from_millis(20));
-                        continue;
-                    }
-                };
-                if self.stop.load(Ordering::SeqCst) {
-                    break; // the shutdown waker, or a late connection
-                }
-                let id = self.next_conn.fetch_add(1, Ordering::SeqCst);
-                if let Ok(clone) = stream.try_clone() {
-                    self.conns.lock().unwrap().insert(id, clone);
-                }
-                scope.spawn(move || {
-                    // A handler error (protocol violation, broken pipe)
-                    // poisons only its own connection.
-                    let _ = self.handle_connection(stream);
-                    self.conns.lock().unwrap().remove(&id);
-                });
+            let uds = scope.spawn(move || self.accept_loop(scope, &self.uds));
+            let tcp = self
+                .tcp
+                .as_ref()
+                .map(|listener| scope.spawn(move || self.accept_loop(scope, listener)));
+            // Cleanup may only run once *every* acceptor has exited —
+            // otherwise a connection accepted during shutdown could slip
+            // into the table after it was drained and park its handler
+            // (and the scope join) forever.
+            let _ = uds.join();
+            if let Some(handle) = tcp {
+                let _ = handle.join();
             }
             // Refuse new connects fast (path gone beats a backlog hang),
             // then unblock handlers parked on idle clients so the scope
             // can join them.
             let _ = std::fs::remove_file(&self.cfg.socket);
-            let remaining: Vec<UnixStream> = self
+            let remaining: Vec<Conn> = self
                 .conns
                 .lock()
                 .unwrap()
                 .drain()
-                .map(|(_, stream)| stream)
+                .map(|(_, conn)| conn)
                 .collect();
-            for stream in remaining {
-                let _ = stream.shutdown(std::net::Shutdown::Both);
+            for conn in remaining {
+                let _ = conn.shutdown();
             }
         });
         self.sched.shutdown();
         Ok(())
     }
 
-    /// Serve one client connection until EOF or `SHUTDOWN`.
-    fn handle_connection(&self, stream: UnixStream) -> Result<()> {
-        let mut reader = BufReader::new(stream.try_clone()?);
-        let mut writer = BufWriter::new(stream);
+    /// One listener's accept loop; handler threads spawn onto `scope`.
+    fn accept_loop<'scope>(
+        &'scope self,
+        scope: &'scope std::thread::Scope<'scope, '_>,
+        listener: &'scope Listener,
+    ) {
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let conn = match listener.accept() {
+                Ok(conn) => conn,
+                Err(_) if self.stop.load(Ordering::SeqCst) => return,
+                Err(_) => {
+                    // Transient (EMFILE, EINTR, ...): back off briefly
+                    // and keep serving instead of killing the server.
+                    std::thread::sleep(Duration::from_millis(20));
+                    continue;
+                }
+            };
+            if self.stop.load(Ordering::SeqCst) {
+                return; // the shutdown waker, or a late connection
+            }
+            let id = self.next_conn.fetch_add(1, Ordering::SeqCst);
+            match conn.try_clone() {
+                Ok(clone) => {
+                    self.conns.lock().unwrap().insert(id, clone);
+                }
+                // Without a tracked clone, shutdown could never unblock
+                // this handler and run() would hang on the scope join;
+                // refuse the connection instead (fd exhaustion — the
+                // peer sees a disconnect and retries).
+                Err(_) => continue,
+            }
+            scope.spawn(move || {
+                // A handler error (protocol violation, broken pipe)
+                // poisons only its own connection.
+                let _ = self.handle_connection(conn);
+                self.conns.lock().unwrap().remove(&id);
+            });
+        }
+    }
+
+    /// Wake every acceptor parked in `accept` so it observes the stop
+    /// flag.
+    fn wake_acceptors(&self) {
+        self.uds.wake();
+        if let Some(tcp) = &self.tcp {
+            tcp.wake();
+        }
+    }
+
+    /// Validate a HELLO token against the configured preshared token.
+    fn check_token(&self, presented: &[u8]) -> Result<()> {
+        match &self.cfg.token {
+            // No token configured (UDS-only server): HELLO is a no-op
+            // courtesy, never a gate.
+            None => Ok(()),
+            Some(expected) => {
+                if crate::serve::transport::token_matches(presented, expected.as_bytes()) {
+                    Ok(())
+                } else {
+                    Err(UniGpsError::auth("bad token"))
+                }
+            }
+        }
+    }
+
+    /// Serve one client connection until EOF, a failed handshake, or
+    /// `SHUTDOWN`.
+    fn handle_connection(&self, conn: Conn) -> Result<()> {
+        // TCP peers are untrusted until HELLO succeeds; Unix-socket peers
+        // are pre-authorized by the socket file's permissions.
+        let mut authed = !conn.is_tcp();
+        let mut reader = BufReader::new(conn.try_clone()?);
+        let mut writer = BufWriter::new(conn);
         loop {
             let (m, payload) = match read_frame(&mut reader) {
                 Ok(f) => f,
@@ -233,11 +329,56 @@ impl Server {
                 }
                 Err(e) => return Err(e),
             };
+            if m == method::HELLO {
+                match self.check_token(&payload) {
+                    Ok(()) => {
+                        authed = true;
+                        write_frame(&mut writer, status::OK, &[])?;
+                        continue;
+                    }
+                    Err(e) => {
+                        // One typed rejection, then the connection dies —
+                        // an unauthenticated peer gets no second frame.
+                        write_frame(&mut writer, status::ERR, &encode_error(&e))?;
+                        return Ok(());
+                    }
+                }
+            }
+            if !authed {
+                let e = UniGpsError::auth(
+                    "authentication required: the first frame on TCP must be HELLO <token>",
+                );
+                write_frame(&mut writer, status::ERR, &encode_error(&e))?;
+                return Ok(());
+            }
+            if m == method::RESULT {
+                // Results stream in chunks — no single frame ever past
+                // the cap, and nothing past the client's stream cap: a
+                // table the protocol requires every client to refuse is
+                // answered with a typed ERR *before* RESULT_BEGIN, never
+                // half-streamed.
+                let mut pos = 0;
+                let outcome = get_u64(&payload, &mut pos).and_then(|id| self.sched.result(id));
+                match outcome.map(|result| encode_result(&result)) {
+                    Ok(table) if table.len() > MAX_RESULT_LEN => {
+                        let e = UniGpsError::serve(format!(
+                            "result table is {} bytes, over the {MAX_RESULT_LEN}-byte \
+                             stream cap; narrow the result with post-ops (select/top-k)",
+                            table.len()
+                        ));
+                        write_frame(&mut writer, status::ERR, &encode_error(&e))?
+                    }
+                    Ok(table) => write_result_stream(&mut writer, &table, self.cfg.chunk_len)?,
+                    Err(e) => write_frame(&mut writer, status::ERR, &encode_error(&e))?,
+                }
+                continue;
+            }
             match self.dispatch(m, &payload) {
                 // A response over MAX_FRAME_LEN is refused by write_frame
                 // *before* any bytes hit the stream, so the connection is
                 // still cleanly framed — surface a typed error instead of
-                // dropping the client on a raw EOF.
+                // dropping the client on a raw EOF. (Post-streaming this
+                // can only be a pathological status/stats frame.)
                 Ok(resp) => match write_frame(&mut writer, status::OK, &resp) {
                     Err(UniGpsError::Ipc(msg)) => {
                         let e = UniGpsError::ipc(format!(
@@ -251,8 +392,7 @@ impl Server {
             }
             if m == method::SHUTDOWN {
                 self.stop.store(true, Ordering::SeqCst);
-                // Wake the acceptor so it observes the stop flag.
-                let _ = UnixStream::connect(&self.cfg.socket);
+                self.wake_acceptors();
                 return Ok(());
             }
         }
@@ -278,16 +418,28 @@ impl Server {
             method::STATUS => {
                 let mut pos = 0;
                 let id = get_u64(payload, &mut pos)?;
-                let st = self
-                    .sched
-                    .status(id)
-                    .ok_or_else(|| UniGpsError::serve(format!("unknown job {id}")))?;
-                Ok(st.encode())
+                Ok(self.sched.status(id)?.encode())
             }
-            method::RESULT => {
+            method::WAIT => {
                 let mut pos = 0;
                 let id = get_u64(payload, &mut pos)?;
-                Ok(encode_result(&self.sched.result(id)?))
+                let ms = get_u64(payload, &mut pos)?.min(MAX_WAIT_SLICE_MS);
+                // Park on the completion condvar in short slices so a
+                // handler blocked here re-checks the stop flag: server
+                // shutdown is never stalled behind a long WAIT (the old
+                // poll loop's one virtue, kept at condvar prices).
+                let deadline = Instant::now() + Duration::from_millis(ms);
+                loop {
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    let slice = remaining.min(Duration::from_millis(STOP_CHECK_MS));
+                    let st = self.sched.wait_terminal(id, slice)?;
+                    if st.state.is_terminal()
+                        || remaining <= slice
+                        || self.stop.load(Ordering::SeqCst)
+                    {
+                        return Ok(st.encode());
+                    }
+                }
             }
             method::STATS => Ok(self.stats().encode()),
             method::SHUTDOWN => Ok(Vec::new()),
@@ -298,125 +450,10 @@ impl Server {
 
 impl std::fmt::Debug for Server {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Server").field("cfg", &self.cfg).finish()
-    }
-}
-
-/// Client for a [`Server`], one synchronous request at a time (open one
-/// client per thread; the server handles connections concurrently).
-/// Speaks the strict untrusted framing (`MAX_FRAME_LEN`) the server
-/// enforces, and decodes kind-tagged ERR frames back into typed
-/// [`UniGpsError`] values.
-pub struct ServeClient {
-    reader: BufReader<UnixStream>,
-    writer: BufWriter<UnixStream>,
-}
-
-impl ServeClient {
-    /// Connect to a server's socket (retrying briefly while it starts).
-    pub fn connect(path: &Path) -> Result<ServeClient> {
-        let stream = connect_with_retry(path)?;
-        Ok(ServeClient {
-            reader: BufReader::new(stream.try_clone()?),
-            writer: BufWriter::new(stream),
-        })
-    }
-
-    fn call(&mut self, m: u32, payload: &[u8]) -> Result<Vec<u8>> {
-        write_frame(&mut self.writer, m, payload)?;
-        let (st, resp) = read_frame(&mut self.reader)?;
-        if st == status::OK {
-            Ok(resp)
-        } else {
-            Err(decode_error(&resp))
-        }
-    }
-
-    /// Submit a job spec (flat `key = value` text or a sectioned plan
-    /// file); returns the job id.
-    pub fn submit(&mut self, spec: &str) -> Result<JobId> {
-        let resp = self.call(method::SUBMIT, spec.as_bytes())?;
-        let mut pos = 0;
-        get_u64(&resp, &mut pos)
-    }
-
-    /// Submit a [`Plan`] value over the binary wire codec (no text round
-    /// trip); returns the job id.
-    pub fn submit_plan(&mut self, plan: &Plan) -> Result<JobId> {
-        let resp = self.call(method::SUBMIT_PLAN, &encode_plan(plan))?;
-        let mut pos = 0;
-        get_u64(&resp, &mut pos)
-    }
-
-    /// Submit, retrying typed [backpressure](UniGpsError::is_backpressure)
-    /// rejections with exponential backoff (4 ms → 256 ms) until
-    /// `timeout`. Non-backpressure errors return immediately.
-    pub fn submit_with_retry(&mut self, spec: &str, timeout: Duration) -> Result<JobId> {
-        let deadline = Instant::now() + timeout;
-        let mut backoff = Duration::from_millis(4);
-        loop {
-            match self.submit(spec) {
-                Err(e) if e.is_backpressure() && Instant::now() < deadline => {
-                    std::thread::sleep(backoff);
-                    backoff = (backoff * 2).min(Duration::from_millis(256));
-                }
-                other => return other,
-            }
-        }
-    }
-
-    /// Query a job's status.
-    pub fn status(&mut self, id: JobId) -> Result<JobStatus> {
-        let mut req = Vec::new();
-        put_u64(&mut req, id);
-        JobStatus::decode(&self.call(method::STATUS, &req)?)
-    }
-
-    /// Fetch a finished job's result table.
-    pub fn result(&mut self, id: JobId) -> Result<RunResult> {
-        let mut req = Vec::new();
-        put_u64(&mut req, id);
-        decode_result(&self.call(method::RESULT, &req)?)
-    }
-
-    /// Fetch server-wide statistics.
-    pub fn stats(&mut self) -> Result<ServeStats> {
-        ServeStats::decode(&self.call(method::STATS, &[])?)
-    }
-
-    /// Poll until the job reaches a terminal state, then return its result
-    /// (or the job's typed failure). Errs after `timeout`. Polling backs
-    /// off exponentially (2 ms → 128 ms) so long-running jobs don't keep
-    /// the server busy answering ~500 status calls per second per waiter.
-    pub fn wait(&mut self, id: JobId, timeout: Duration) -> Result<RunResult> {
-        let deadline = Instant::now() + timeout;
-        let mut backoff = Duration::from_millis(2);
-        loop {
-            let st = self.status(id)?;
-            if st.state.is_terminal() {
-                return self.result(id);
-            }
-            if Instant::now() >= deadline {
-                return Err(UniGpsError::serve(format!(
-                    "timed out after {timeout:?} waiting for job {id} ({})",
-                    st.state
-                )));
-            }
-            std::thread::sleep(backoff);
-            backoff = (backoff * 2).min(Duration::from_millis(128));
-        }
-    }
-
-    /// Ask the server to shut down (it drains admitted jobs first).
-    pub fn shutdown(&mut self) -> Result<()> {
-        self.call(method::SHUTDOWN, &[])?;
-        Ok(())
-    }
-}
-
-impl std::fmt::Debug for ServeClient {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str("ServeClient")
+        f.debug_struct("Server")
+            .field("cfg", &self.cfg)
+            .field("tcp_addr", &self.tcp_addr)
+            .finish()
     }
 }
 
@@ -452,19 +489,17 @@ mod tests {
     }
 
     #[test]
-    fn error_codec_preserves_the_variant() {
-        for e in [
-            UniGpsError::backpressure("queue full (64 queued, capacity 64); retry later"),
-            UniGpsError::serve("unknown job 9"),
-            UniGpsError::Config("unknown algo 'warp'".into()),
-            UniGpsError::ipc("frame length 999 exceeds limit"),
-        ] {
-            let back = decode_error(&encode_error(&e));
-            assert_eq!(back.kind(), e.kind(), "{e:?}");
-            assert_eq!(back.message(), e.message());
-        }
-        // Truncated/garbage payloads degrade to Ipc.
-        assert!(matches!(decode_error(&[1, 2]), UniGpsError::Ipc(_)));
-        assert!(matches!(decode_error(b""), UniGpsError::Ipc(_)));
+    fn tcp_without_token_refused_at_bind() {
+        let mut cfg = ServeConfig::new(crate::ipc::shm::ShmMap::unique_path("srv-notok"));
+        cfg.tcp = Some("127.0.0.1:0".into());
+        cfg.token = None;
+        let err = Server::bind(Session::builder().build(), cfg).unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
+        assert!(err.to_string().contains("token"), "{err}");
+        // An empty token is as unauthenticated as none.
+        let mut cfg = ServeConfig::new(crate::ipc::shm::ShmMap::unique_path("srv-emptok"));
+        cfg.tcp = Some("127.0.0.1:0".into());
+        cfg.token = Some(String::new());
+        assert!(Server::bind(Session::builder().build(), cfg).is_err());
     }
 }

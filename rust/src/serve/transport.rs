@@ -1,0 +1,600 @@
+//! Connection transports and the serve wire protocol's stream layer.
+//!
+//! The serving protocol is transport-agnostic: every frame is the
+//! hardened `u32 head | u32 len | payload` framing of
+//! [`crate::ipc::socket_rpc`] (payloads over
+//! [`MAX_FRAME_LEN`](crate::ipc::socket_rpc::MAX_FRAME_LEN) rejected
+//! before allocation, on read *and* write), and this module supplies the
+//! two byte streams it runs over plus the protocol pieces that sit
+//! directly on the framing:
+//!
+//! * [`Transport`] — the client-side connection factory
+//!   [`RemoteClient`](crate::serve::client::RemoteClient) is generic
+//!   over: [`UdsTransport`] (Unix-domain socket, authorised by file
+//!   permissions) and [`TcpTransport`] (remote clients; performs the
+//!   mandatory preshared-token HELLO handshake before handing the
+//!   connection out, so every `RemoteClient` method runs on an
+//!   authenticated stream).
+//! * [`Conn`] / [`Listener`] — the stream and acceptor pair the server
+//!   side uses, one variant per transport, `Read + Write` plus the
+//!   `try_clone`/`shutdown` surface both the handler table and the
+//!   buffered reader/writer split need.
+//! * [`reply`] — response head codes: `OK`/`ERR` plus the chunked-result
+//!   stream (`RESULT_BEGIN` → `RESULT_CHUNK`* → `RESULT_END`).
+//! * [`write_result_stream`] / [`read_result_stream`] — the chunked
+//!   result codec. A result table of any size crosses the wire as a
+//!   `RESULT_BEGIN` frame declaring the total length and chunk count,
+//!   `chunk_count` payload chunks each within the frame cap, and a
+//!   `RESULT_END` frame carrying an FNV-1a checksum — so the old
+//!   single-frame ceiling (tables over `MAX_FRAME_LEN` answered with a
+//!   typed ERR) is gone, while a hostile peer still cannot force an
+//!   oversized allocation: the declared total is capped by
+//!   [`MAX_RESULT_LEN`], every chunk is length-checked before
+//!   allocation, and reassembly verifies count, length and checksum.
+//! * [`encode_error`] / [`decode_error`] — the kind-tagged ERR payload
+//!   (`u32 error-kind | message`), so clients rebuild the exact
+//!   [`UniGpsError`] variant the server raised, auth failures included.
+
+use crate::error::{ErrorKind, Result, UniGpsError};
+use crate::ipc::protocol::{get_u32, get_u64, put_u32, put_u64};
+use crate::ipc::socket_rpc::{connect_with_retry, read_frame, write_frame, MAX_FRAME_LEN};
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Response head codes for serve-protocol frames (the `u32 head` of the
+/// framing, server → client direction).
+pub mod reply {
+    /// Success; payload is the method's response encoding.
+    pub const OK: u32 = crate::ipc::protocol::status::OK;
+    /// Typed failure; payload is `u32 error-kind | message`
+    /// ([`super::encode_error`]).
+    pub const ERR: u32 = crate::ipc::protocol::status::ERR;
+    /// First frame of a chunked result stream: `u64 total_len | u32
+    /// chunk_count`.
+    pub const RESULT_BEGIN: u32 = 2;
+    /// One chunk of result-table bytes (every chunk within the frame cap).
+    pub const RESULT_CHUNK: u32 = 3;
+    /// Last frame of a result stream: `u64 fnv1a64(table bytes)`.
+    pub const RESULT_END: u32 = 4;
+}
+
+/// Hard cap on a chunked result table's *total* reassembled size (1 GiB).
+/// Each chunk is already capped at the frame limit; this bounds what a
+/// hostile `RESULT_BEGIN` header can make a client commit to.
+pub const MAX_RESULT_LEN: usize = 1 << 30;
+
+/// Default per-chunk payload size for result streaming (4 MiB — far under
+/// the frame cap, so a single slow chunk never monopolizes the stream).
+pub const DEFAULT_CHUNK_LEN: usize = 4 << 20;
+
+/// Encode a typed error for an ERR frame: `u32 kind code | UTF-8 message`.
+pub fn encode_error(e: &UniGpsError) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, e.kind().code());
+    out.extend_from_slice(e.message().as_bytes());
+    out
+}
+
+/// Decode an ERR frame payload back into the typed error it carried.
+/// Malformed payloads degrade to [`UniGpsError::Ipc`], never a panic.
+pub fn decode_error(payload: &[u8]) -> UniGpsError {
+    let mut pos = 0;
+    match get_u32(payload, &mut pos) {
+        Ok(code) => ErrorKind::from_code(code)
+            .rebuild(String::from_utf8_lossy(&payload[pos..]).into_owned()),
+        Err(_) => UniGpsError::ipc(format!(
+            "malformed ERR frame: {}",
+            String::from_utf8_lossy(payload)
+        )),
+    }
+}
+
+/// FNV-1a over the reassembled table bytes — the `RESULT_END` integrity
+/// check. Not cryptographic; it catches reordered/dropped chunks and
+/// framing bugs, not adversaries (the token handshake gates those).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stream an encoded result table as `RESULT_BEGIN | RESULT_CHUNK* |
+/// RESULT_END`. Works for any `payload` size — this is what lifted the
+/// single-frame `MAX_FRAME_LEN` ceiling on result tables. `chunk_len` is
+/// clamped into `1..=MAX_FRAME_LEN`.
+pub fn write_result_stream(w: &mut impl Write, payload: &[u8], chunk_len: usize) -> Result<()> {
+    let chunk_len = chunk_len.clamp(1, MAX_FRAME_LEN);
+    let chunks = payload.chunks(chunk_len);
+    let mut begin = Vec::with_capacity(12);
+    put_u64(&mut begin, payload.len() as u64);
+    put_u32(&mut begin, chunks.len() as u32);
+    write_frame(w, reply::RESULT_BEGIN, &begin)?;
+    for chunk in chunks {
+        write_frame(w, reply::RESULT_CHUNK, chunk)?;
+    }
+    let mut end = Vec::with_capacity(8);
+    put_u64(&mut end, fnv1a64(payload));
+    write_frame(w, reply::RESULT_END, &end)
+}
+
+/// How much of a declared stream total is pre-reserved before any chunk
+/// arrives (16 MiB). The rest is committed only as chunks actually land,
+/// so a forged `RESULT_BEGIN` cannot reserve [`MAX_RESULT_LEN`] up front.
+const STREAM_PREALLOC_CAP: usize = 16 << 20;
+
+/// Read one result-stream reply where the `RESULT_BEGIN` frame has
+/// already been consumed (its payload is `begin`). Enforces: declared
+/// total within [`MAX_RESULT_LEN`], every chunk within the frame cap
+/// (via [`read_frame`]), cumulative length never past the declared
+/// total, chunk count and checksum exact. A typed ERR frame mid-stream
+/// aborts with the carried error.
+pub fn read_result_stream_body(r: &mut impl Read, begin: &[u8]) -> Result<Vec<u8>> {
+    let mut pos = 0;
+    let total = get_u64(begin, &mut pos)? as usize;
+    let declared_chunks = get_u32(begin, &mut pos)? as usize;
+    if total > MAX_RESULT_LEN {
+        return Err(UniGpsError::ipc(format!(
+            "result stream declares {total} bytes, over the {MAX_RESULT_LEN} cap; \
+             rejecting before allocation"
+        )));
+    }
+    let mut table = Vec::with_capacity(total.min(STREAM_PREALLOC_CAP));
+    let mut chunks_seen = 0usize;
+    loop {
+        let (head, payload) = read_frame(r)?;
+        match head {
+            reply::RESULT_CHUNK => {
+                chunks_seen += 1;
+                if chunks_seen > declared_chunks || table.len() + payload.len() > total {
+                    return Err(UniGpsError::ipc(format!(
+                        "result stream overflow: chunk {chunks_seen} of {declared_chunks} \
+                         pushes past the declared {total} bytes"
+                    )));
+                }
+                table.extend_from_slice(&payload);
+            }
+            reply::RESULT_END => {
+                if chunks_seen != declared_chunks || table.len() != total {
+                    return Err(UniGpsError::ipc(format!(
+                        "result stream truncated: {chunks_seen}/{declared_chunks} chunks, \
+                         {}/{total} bytes at RESULT_END",
+                        table.len()
+                    )));
+                }
+                let mut pos = 0;
+                let want = get_u64(&payload, &mut pos)?;
+                let got = fnv1a64(&table);
+                if want != got {
+                    return Err(UniGpsError::ipc(format!(
+                        "result stream checksum mismatch: declared {want:#x}, \
+                         reassembled {got:#x}"
+                    )));
+                }
+                return Ok(table);
+            }
+            reply::ERR => return Err(decode_error(&payload)),
+            other => {
+                return Err(UniGpsError::ipc(format!(
+                    "unexpected head {other} inside a result stream"
+                )))
+            }
+        }
+    }
+}
+
+/// Read a full result reply: either a typed ERR frame or a
+/// `RESULT_BEGIN`-led chunk stream ([`read_result_stream_body`]).
+pub fn read_result_stream(r: &mut impl Read) -> Result<Vec<u8>> {
+    let (head, payload) = read_frame(r)?;
+    match head {
+        reply::RESULT_BEGIN => read_result_stream_body(r, &payload),
+        reply::ERR => Err(decode_error(&payload)),
+        other => Err(UniGpsError::ipc(format!(
+            "expected RESULT_BEGIN or ERR, got head {other}"
+        ))),
+    }
+}
+
+/// Constant-time-ish token comparison: every byte of the longer input is
+/// examined regardless of where the first mismatch sits, so response
+/// timing does not leak a prefix match.
+pub fn token_matches(presented: &[u8], expected: &[u8]) -> bool {
+    let n = presented.len().max(expected.len());
+    let mut diff = presented.len() ^ expected.len();
+    for i in 0..n {
+        let a = presented.get(i).copied().unwrap_or(0);
+        let b = expected.get(i).copied().unwrap_or(0);
+        diff |= usize::from(a ^ b);
+    }
+    diff == 0
+}
+
+/// A connected serve-protocol byte stream, one variant per transport.
+#[derive(Debug)]
+pub enum Conn {
+    /// Unix-domain socket stream.
+    Unix(UnixStream),
+    /// TCP stream (always post-handshake on the client side).
+    Tcp(TcpStream),
+}
+
+impl Conn {
+    /// Clone the underlying socket (split buffered reader/writer halves,
+    /// or the server's shutdown table).
+    pub fn try_clone(&self) -> Result<Conn> {
+        Ok(match self {
+            Conn::Unix(s) => Conn::Unix(s.try_clone()?),
+            Conn::Tcp(s) => Conn::Tcp(s.try_clone()?),
+        })
+    }
+
+    /// Shut down both directions, unblocking any thread parked in a read.
+    pub fn shutdown(&self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+            Conn::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+        }
+    }
+
+    /// True for connections that arrived over TCP (and therefore must
+    /// authenticate before any other method).
+    pub fn is_tcp(&self) -> bool {
+        matches!(self, Conn::Tcp(_))
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.read(buf),
+            Conn::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Unix(s) => s.write(buf),
+            Conn::Tcp(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => s.flush(),
+            Conn::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound serve-protocol acceptor, one variant per transport.
+#[derive(Debug)]
+pub enum Listener {
+    /// Unix-domain socket listener.
+    Unix(UnixListener),
+    /// TCP listener.
+    Tcp(TcpListener),
+}
+
+impl Listener {
+    /// Accept one connection.
+    pub fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+            Listener::Tcp(l) => l.accept().map(|(s, _)| {
+                let _ = s.set_nodelay(true);
+                Conn::Tcp(s)
+            }),
+        }
+    }
+
+    /// Connect to this listener from the same process — the shutdown
+    /// waker, so an acceptor parked in [`Listener::accept`] observes the
+    /// stop flag.
+    pub fn wake(&self) {
+        match self {
+            Listener::Unix(l) => {
+                if let Ok(addr) = l.local_addr() {
+                    if let Some(path) = addr.as_pathname() {
+                        let _ = UnixStream::connect(path);
+                    }
+                }
+            }
+            Listener::Tcp(l) => {
+                if let Ok(mut addr) = l.local_addr() {
+                    // A wildcard bind (0.0.0.0 / ::) is not a connectable
+                    // destination everywhere; wake via loopback on the
+                    // bound port, and never hang the waker itself.
+                    if addr.ip().is_unspecified() {
+                        addr.set_ip(match addr.ip() {
+                            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+                        });
+                    }
+                    let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(500));
+                }
+            }
+        }
+    }
+}
+
+/// Client-side connection factory. Implementations return a stream that
+/// is ready for serve-protocol frames — for TCP that means the HELLO
+/// handshake has already succeeded, so
+/// [`RemoteClient`](crate::serve::client::RemoteClient) never sees an
+/// unauthenticated connection.
+pub trait Transport {
+    /// Establish (and, where the transport requires it, authenticate) a
+    /// connection.
+    fn connect(&self) -> Result<Conn>;
+    /// Human-readable endpoint description for error messages.
+    fn describe(&self) -> String;
+}
+
+/// Unix-domain-socket transport. Authorization is the socket file's
+/// permissions; no handshake is performed.
+#[derive(Debug, Clone)]
+pub struct UdsTransport {
+    path: PathBuf,
+}
+
+impl UdsTransport {
+    /// Transport for the server socket at `path`.
+    pub fn new(path: impl Into<PathBuf>) -> UdsTransport {
+        UdsTransport { path: path.into() }
+    }
+}
+
+impl Transport for UdsTransport {
+    fn connect(&self) -> Result<Conn> {
+        Ok(Conn::Unix(connect_with_retry(&self.path)?))
+    }
+    fn describe(&self) -> String {
+        format!("uds://{}", self.path.display())
+    }
+}
+
+/// TCP transport with the mandatory preshared-token HELLO handshake:
+/// `connect` writes a `HELLO` frame carrying the token and requires an
+/// `OK` reply before returning the stream. A bad token comes back as the
+/// typed [`UniGpsError::Auth`] the server put on the wire.
+#[derive(Debug, Clone)]
+pub struct TcpTransport {
+    addr: String,
+    token: String,
+}
+
+impl TcpTransport {
+    /// Transport for the server at `addr` (`host:port`) authenticating
+    /// with `token`.
+    pub fn new(addr: impl Into<String>, token: impl Into<String>) -> TcpTransport {
+        TcpTransport {
+            addr: addr.into(),
+            token: token.into(),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn connect(&self) -> Result<Conn> {
+        // Same startup-retry envelope as the Unix transport's
+        // connect_with_retry (200 × 5 ms), so both transports behind the
+        // one Client trait tolerate a just-starting server equally.
+        let mut last_err = None;
+        let mut stream = None;
+        for _ in 0..200 {
+            match TcpStream::connect(&self.addr) {
+                Ok(s) => {
+                    stream = Some(s);
+                    break;
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+        }
+        let stream = stream.ok_or_else(|| {
+            UniGpsError::ipc(format!("connect({}) failed: {last_err:?}", self.describe()))
+        })?;
+        let _ = stream.set_nodelay(true);
+        let mut conn = Conn::Tcp(stream);
+        write_frame(&mut conn, crate::serve::method::HELLO, self.token.as_bytes())?;
+        let (head, payload) = read_frame(&mut conn)?;
+        match head {
+            reply::OK => Ok(conn),
+            reply::ERR => Err(decode_error(&payload)),
+            other => Err(UniGpsError::ipc(format!(
+                "bad HELLO reply head {other} from {}",
+                self.describe()
+            ))),
+        }
+    }
+    fn describe(&self) -> String {
+        format!("tcp://{}", self.addr)
+    }
+}
+
+/// Parse a `--connect` style endpoint: `tcp://host:port` (token required,
+/// supplied separately), `uds://<path>`, or a bare filesystem path
+/// (treated as a Unix socket). Returns `(tcp_addr, uds_path)` with
+/// exactly one side populated.
+pub fn parse_endpoint(uri: &str) -> Result<(Option<String>, Option<PathBuf>)> {
+    if let Some(addr) = uri.strip_prefix("tcp://") {
+        if addr.is_empty() {
+            return Err(UniGpsError::Config("tcp:// endpoint needs host:port".into()));
+        }
+        Ok((Some(addr.to_string()), None))
+    } else if let Some(path) = uri.strip_prefix("uds://") {
+        if path.is_empty() {
+            return Err(UniGpsError::Config("uds:// endpoint needs a path".into()));
+        }
+        Ok((None, Some(PathBuf::from(path))))
+    } else if uri.contains("://") {
+        Err(UniGpsError::Config(format!(
+            "unknown endpoint scheme in '{uri}' (tcp://host:port or uds:///path)"
+        )))
+    } else {
+        Ok((None, Some(PathBuf::from(uri))))
+    }
+}
+
+/// Bind the Unix listener for a serve instance, replacing a stale socket
+/// file.
+pub fn bind_uds(path: &Path) -> Result<Listener> {
+    let _ = std::fs::remove_file(path);
+    Ok(Listener::Unix(UnixListener::bind(path)?))
+}
+
+/// Bind the TCP listener for a serve instance. `addr` may use port 0;
+/// the actual bound address is retrievable via [`Listener`]'s inner
+/// `local_addr` (exposed as [`tcp_local_addr`]).
+pub fn bind_tcp(addr: &str) -> Result<Listener> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| UniGpsError::ipc(format!("bind(tcp://{addr}) failed: {e}")))?;
+    Ok(Listener::Tcp(listener))
+}
+
+/// The bound address of a TCP [`Listener`] (`None` for Unix listeners).
+pub fn tcp_local_addr(listener: &Listener) -> Option<SocketAddr> {
+    match listener {
+        Listener::Tcp(l) => l.local_addr().ok(),
+        Listener::Unix(_) => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_roundtrip_small_and_empty() {
+        for (len, chunk) in [(0usize, 16usize), (1, 16), (16, 16), (17, 16), (4096, 1)] {
+            let payload: Vec<u8> = (0..len).map(|i| (i * 31 % 251) as u8).collect();
+            let mut wire: Vec<u8> = Vec::new();
+            write_result_stream(&mut wire, &payload, chunk).unwrap();
+            let back = read_result_stream(&mut wire.as_slice()).unwrap();
+            assert_eq!(back, payload, "len={len} chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn stream_rejects_forged_total_before_allocation() {
+        let mut begin = Vec::new();
+        put_u64(&mut begin, (MAX_RESULT_LEN as u64) + 1);
+        put_u32(&mut begin, 1);
+        let mut wire: Vec<u8> = Vec::new();
+        write_frame(&mut wire, reply::RESULT_BEGIN, &begin).unwrap();
+        let err = read_result_stream(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)), "{err:?}");
+        assert!(err.to_string().contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn stream_rejects_checksum_and_count_mismatches() {
+        let payload = vec![9u8; 100];
+        // Corrupt one chunk byte: checksum must catch it.
+        let mut wire: Vec<u8> = Vec::new();
+        write_result_stream(&mut wire, &payload, 32).unwrap();
+        // Frame layout: BEGIN(8+12) then chunk frames; flip a byte inside
+        // the first chunk's payload (after its 8-byte frame header).
+        let first_chunk_payload = 8 + 12 + 8;
+        wire[first_chunk_payload] ^= 0xFF;
+        let err = read_result_stream(&mut wire.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // A missing chunk (count mismatch) is caught at RESULT_END.
+        let mut wire: Vec<u8> = Vec::new();
+        let mut begin = Vec::new();
+        put_u64(&mut begin, 64);
+        put_u32(&mut begin, 2);
+        write_frame(&mut wire, reply::RESULT_BEGIN, &begin).unwrap();
+        write_frame(&mut wire, reply::RESULT_CHUNK, &[1u8; 32]).unwrap();
+        let mut end = Vec::new();
+        put_u64(&mut end, fnv1a64(&[1u8; 32]));
+        write_frame(&mut wire, reply::RESULT_END, &end).unwrap();
+        let err = read_result_stream(&mut wire.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // Chunks past the declared total are an overflow, typed.
+        let mut wire: Vec<u8> = Vec::new();
+        let mut begin = Vec::new();
+        put_u64(&mut begin, 16);
+        put_u32(&mut begin, 1);
+        write_frame(&mut wire, reply::RESULT_BEGIN, &begin).unwrap();
+        write_frame(&mut wire, reply::RESULT_CHUNK, &[0u8; 64]).unwrap();
+        let err = read_result_stream(&mut wire.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+    }
+
+    #[test]
+    fn stream_propagates_typed_errors_midstream() {
+        // A server that fails while streaming sends a typed ERR frame;
+        // the reader surfaces the exact variant, not a framing error.
+        let e = UniGpsError::serve("job 3 evicted mid-fetch");
+        let mut wire: Vec<u8> = Vec::new();
+        let mut begin = Vec::new();
+        put_u64(&mut begin, 64);
+        put_u32(&mut begin, 2);
+        write_frame(&mut wire, reply::RESULT_BEGIN, &begin).unwrap();
+        write_frame(&mut wire, reply::RESULT_CHUNK, &[0u8; 32]).unwrap();
+        write_frame(&mut wire, reply::ERR, &encode_error(&e)).unwrap();
+        let err = read_result_stream(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
+        assert!(err.to_string().contains("evicted"), "{err}");
+        // And an up-front ERR (job failed before any chunk) decodes too.
+        let mut wire: Vec<u8> = Vec::new();
+        write_frame(&mut wire, reply::ERR, &encode_error(&e)).unwrap();
+        assert!(matches!(read_result_stream(&mut wire.as_slice()), Err(UniGpsError::Serve(_))));
+    }
+
+    #[test]
+    fn token_comparison_covers_length_and_content() {
+        assert!(token_matches(b"secret", b"secret"));
+        assert!(!token_matches(b"secret", b"secret2"));
+        assert!(!token_matches(b"", b"secret"));
+        assert!(!token_matches(b"Secret", b"secret"));
+        assert!(token_matches(b"", b""));
+    }
+
+    #[test]
+    fn endpoint_parsing() {
+        assert_eq!(
+            parse_endpoint("tcp://127.0.0.1:7077").unwrap(),
+            (Some("127.0.0.1:7077".into()), None)
+        );
+        assert_eq!(
+            parse_endpoint("uds:///tmp/u.sock").unwrap(),
+            (None, Some(PathBuf::from("/tmp/u.sock")))
+        );
+        assert_eq!(
+            parse_endpoint("/tmp/u.sock").unwrap(),
+            (None, Some(PathBuf::from("/tmp/u.sock")))
+        );
+        assert!(parse_endpoint("grpc://x").is_err());
+        assert!(parse_endpoint("tcp://").is_err());
+        assert!(parse_endpoint("uds://").is_err());
+    }
+
+    #[test]
+    fn error_codec_preserves_the_variant() {
+        for e in [
+            UniGpsError::backpressure("queue full (64 queued, capacity 64); retry later"),
+            UniGpsError::serve("unknown job 9"),
+            UniGpsError::auth("bad token"),
+            UniGpsError::Config("unknown algo 'warp'".into()),
+            UniGpsError::ipc("frame length 999 exceeds limit"),
+        ] {
+            let back = decode_error(&encode_error(&e));
+            assert_eq!(back.kind(), e.kind(), "{e:?}");
+            assert_eq!(back.message(), e.message());
+        }
+        // Truncated/garbage payloads degrade to Ipc.
+        assert!(matches!(decode_error(&[1, 2]), UniGpsError::Ipc(_)));
+        assert!(matches!(decode_error(b""), UniGpsError::Ipc(_)));
+    }
+}

@@ -1,22 +1,29 @@
 //! Integration: the `unigps serve` subsystem end to end — one server
-//! thread, concurrent client threads over the Unix-domain socket, mixed
-//! operators and multi-stage plans against one dataset spec. Checks the
-//! serving guarantees: results are bit-identical to direct `engine::run`
-//! calls with the same options, the snapshot cache loads the base graph
-//! exactly once (dataset-level hit counter = requests − 1) and derives
-//! shared variants exactly once (derived-level counters), the admission
-//! queue rejects overload with a typed backpressure error instead of
-//! buffering it, and ERR frames carry the error kind end to end.
+//! thread, concurrent client threads, mixed operators and multi-stage
+//! plans against one dataset spec. Checks the serving guarantees:
+//! results are bit-identical to direct `engine::run` calls with the same
+//! options, the snapshot cache loads the base graph exactly once
+//! (dataset-level hit counter = requests − 1) and derives shared
+//! variants exactly once (derived-level counters), the admission queue
+//! rejects overload with a typed backpressure error instead of buffering
+//! it, and ERR frames carry the error kind end to end.
+//!
+//! Every test drives the unified [`Client`] trait, and the transport is
+//! an environment matrix: `UNIGPS_TEST_TRANSPORT=uds` (default) runs the
+//! suite over the Unix-domain socket, `=tcp` over the token-authenticated
+//! TCP listener — same assertions, so the two transports are proven
+//! interchangeable (CI runs both).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
+use unigps::client::Client;
 use unigps::engine::{EngineKind, RunOptions, RunResult};
 use unigps::error::UniGpsError;
 use unigps::ipc::shm::ShmMap;
 use unigps::operators::{run_operator, Operator};
 use unigps::plan::{Plan, Stage, Transform};
-use unigps::serve::{ServeClient, ServeConfig, Server};
+use unigps::serve::{RemoteClient, ServeClient, ServeConfig, Server};
 use unigps::session::Session;
 use unigps::vcprog::Column;
 
@@ -78,11 +85,56 @@ fn columns_bit_identical(a: &RunResult, b: &RunResult) -> bool {
         })
 }
 
-fn start_server(cfg: ServeConfig) -> (PathBuf, std::thread::JoinHandle<()>) {
+/// Preshared token the TCP matrix leg authenticates with.
+const TEST_TOKEN: &str = "serve-integration-token";
+
+/// The transport under test: `UNIGPS_TEST_TRANSPORT=uds|tcp`, default uds.
+fn test_transport() -> String {
+    std::env::var("UNIGPS_TEST_TRANSPORT").unwrap_or_else(|_| "uds".into())
+}
+
+/// A running server plus the endpoint the matrix leg connects to.
+struct TestServe {
+    socket: PathBuf,
+    tcp_addr: Option<std::net::SocketAddr>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl TestServe {
+    /// A fresh [`Client`] for the transport under test. Boxed — the
+    /// tests are written against the trait, exactly like the CLI.
+    fn client(&self) -> Box<dyn Client> {
+        match self.tcp_addr {
+            Some(addr) => Box::new(
+                RemoteClient::connect_tcp(&addr.to_string(), TEST_TOKEN)
+                    .expect("tcp connect + hello"),
+            ),
+            None => Box::new(ServeClient::connect(&self.socket).expect("uds connect")),
+        }
+    }
+
+    fn join(self) {
+        self.handle.join().expect("server thread");
+    }
+}
+
+fn start_server(mut cfg: ServeConfig) -> TestServe {
+    let transport = test_transport();
+    if transport == "tcp" {
+        cfg.tcp = Some("127.0.0.1:0".into());
+        cfg.token = Some(TEST_TOKEN.into());
+    } else {
+        assert_eq!(transport, "uds", "UNIGPS_TEST_TRANSPORT must be uds or tcp");
+    }
     let socket = cfg.socket.clone();
-    let server = Server::bind(Session::builder().build(), cfg).expect("bind serve socket");
+    let server = Server::bind(Session::builder().build(), cfg).expect("bind serve listeners");
+    let tcp_addr = server.tcp_addr();
     let handle = std::thread::spawn(move || server.run().expect("serve loop"));
-    (socket, handle)
+    TestServe {
+        socket,
+        tcp_addr,
+        handle,
+    }
 }
 
 /// ≥4 concurrent clients submit mixed pagerank/sssp/cc jobs against the
@@ -99,7 +151,7 @@ fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
     cfg.cache_budget = usize::MAX;
     cfg.total_workers = 4; // split 2 ways -> 2 workers per job
     assert_eq!(cfg.per_job_workers(), JOB_WORKERS);
-    let (socket, server) = start_server(cfg);
+    let server = start_server(cfg);
 
     // Ground truth: direct engine::run dispatch on the same graph with the
     // same options the scheduler derives.
@@ -115,10 +167,10 @@ fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
     let jobs_per_client: usize = 3; // 12 jobs total, all three operators each
     std::thread::scope(|s| {
         for c in 0..clients {
-            let socket = &socket;
+            let server = &server;
             let expected = expected.clone();
             s.spawn(move || {
-                let mut client = ServeClient::connect(socket).expect("connect");
+                let mut client = server.client();
                 for j in 0..jobs_per_client {
                     let which = (c + j) % expected.len();
                     let spec =
@@ -139,7 +191,7 @@ fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
 
     // Cache accounting: 12 jobs over one (dataset, partition) key; the 4
     // cc jobs share one derived (symmetrized) snapshot.
-    let mut client = ServeClient::connect(&socket).expect("connect for stats");
+    let mut client = server.client();
     let stats = client.stats().expect("stats");
     let total_jobs = (clients * jobs_per_client) as u64;
     let cc_jobs = total_jobs / 3;
@@ -163,7 +215,8 @@ fn concurrent_mixed_jobs_share_one_snapshot_and_match_direct_runs() {
 
     client.shutdown().expect("shutdown");
     drop(client);
-    server.join().expect("server thread");
+    let socket = server.socket.clone();
+    server.join();
     assert!(!socket.exists(), "socket file removed on shutdown");
 }
 
@@ -179,7 +232,7 @@ fn three_stage_plan_shares_one_base_load_and_one_derive() {
     cfg.queue_cap = 64;
     cfg.cache_budget = usize::MAX;
     cfg.total_workers = 4;
-    let (socket, server) = start_server(cfg);
+    let server = start_server(cfg);
 
     let plan_text = format!(
         "{}\n\n[transform]\nop = symmetrize\n\n\
@@ -204,12 +257,12 @@ fn three_stage_plan_shares_one_base_load_and_one_derive() {
     let clients: usize = 4;
     std::thread::scope(|s| {
         for c in 0..clients {
-            let socket = &socket;
+            let server = &server;
             let plan = &plan;
             let plan_text = &plan_text;
             let expected = &expected_kcore;
             s.spawn(move || {
-                let mut client = ServeClient::connect(socket).expect("connect");
+                let mut client = server.client();
                 // Half the clients exercise the text path, half the wire
                 // codec — both must land on the same executor.
                 let id = if c % 2 == 0 {
@@ -226,7 +279,7 @@ fn three_stage_plan_shares_one_base_load_and_one_derive() {
         }
     });
 
-    let mut client = ServeClient::connect(&socket).expect("stats client");
+    let mut client = server.client();
     let stats = client.stats().expect("stats");
     assert_eq!(stats.jobs.completed, clients as u64);
     assert_eq!(stats.jobs.failed, 0);
@@ -238,7 +291,7 @@ fn three_stage_plan_shares_one_base_load_and_one_derive() {
 
     client.shutdown().expect("shutdown");
     drop(client);
-    server.join().expect("server thread");
+    server.join();
 }
 
 /// Backpressure: with one slot and a two-deep queue, a burst of delayed
@@ -253,9 +306,9 @@ fn queue_overload_is_rejected_with_a_typed_error() {
     cfg.queue_cap = 2;
     cfg.cache_budget = usize::MAX;
     cfg.total_workers = 2;
-    let (socket, server) = start_server(cfg);
+    let server = start_server(cfg);
 
-    let mut client = ServeClient::connect(&socket).expect("connect");
+    let mut client = server.client();
     // Each job sleeps 400ms before executing, so the single slot cannot
     // drain the burst: capacity is 1 running + 2 queued = 3 of 5.
     let spec = format!("{}\nalgo = sssp\ndelay_ms = 400", dataset_spec_lines());
@@ -297,7 +350,7 @@ fn queue_overload_is_rejected_with_a_typed_error() {
 
     client.shutdown().expect("shutdown");
     drop(client);
-    server.join().expect("server thread");
+    server.join();
 }
 
 /// Status/result error paths over the wire: unknown jobs, bad specs and
@@ -308,9 +361,9 @@ fn wire_error_paths_are_clean_and_typed() {
     let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-err"));
     cfg.slots = 1;
     cfg.total_workers = 2;
-    let (socket, server) = start_server(cfg);
+    let server = start_server(cfg);
 
-    let mut client = ServeClient::connect(&socket).expect("connect");
+    let mut client = server.client();
     let err = client.status(424242).unwrap_err();
     assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
     assert!(err.to_string().contains("unknown job"), "{err}");
@@ -332,7 +385,7 @@ fn wire_error_paths_are_clean_and_typed() {
 
     client.shutdown().expect("shutdown");
     drop(client);
-    server.join().expect("server thread");
+    server.join();
 }
 
 /// A plan with a filter + join post-op runs over serve and matches the
@@ -344,7 +397,7 @@ fn pipeline_with_postops_matches_in_process_execution() {
     cfg.slots = 1;
     cfg.cache_budget = usize::MAX;
     cfg.total_workers = 2;
-    let (socket, server) = start_server(cfg);
+    let server = start_server(cfg);
 
     let plan_text = format!(
         "{}\n\n[transform]\nop = symmetrize\n\n\
@@ -359,7 +412,7 @@ fn pipeline_with_postops_matches_in_process_execution() {
     let session = Session::builder().workers(JOB_WORKERS).build();
     let local = session.run_plan_on(&dataset_graph(), &plan).expect("local run");
 
-    let mut client = ServeClient::connect(&socket).expect("connect");
+    let mut client = server.client();
     let id = client.submit(&plan_text).expect("submit");
     let remote = client.wait(id, Duration::from_secs(120)).expect("job");
     assert!(
@@ -371,7 +424,7 @@ fn pipeline_with_postops_matches_in_process_execution() {
 
     client.shutdown().expect("shutdown");
     drop(client);
-    server.join().expect("server thread");
+    server.join();
 
     // The fluent builder path lowers to the same IR as text parsing.
     let built = Plan::new()
