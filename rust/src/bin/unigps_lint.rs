@@ -1,0 +1,442 @@
+//! `unigps-lint` — the repo-local invariant pass for the concurrency rules
+//! that `rustc` cannot check (see `docs/concurrency.md`):
+//!
+//! 1. every `Ordering::Relaxed` carries a nearby `// relaxed:` justification
+//!    naming the happens-before edge (or its absence) that makes it sound;
+//! 2. no `.unwrap()` / `.expect(` / `panic!` / `unreachable!` on the serve
+//!    and IPC request paths, except poisoned-lock patterns and sites marked
+//!    `// lint: allow-panic:` with a written invariant;
+//! 3. wire method indices are unique across the IPC and serve protocols and
+//!    every serve method is documented in `docs/serve.md`; the `ErrorKind`
+//!    wire codes round-trip (`code()` / `from_code` bijection);
+//! 4. every `unsafe` block / fn / impl carries a `// SAFETY:` comment
+//!    (`unsafe fn` may use a `# Safety` doc section instead).
+//!
+//! Test modules (everything after the first `#[cfg(test)]`) are exempt.
+//! Exit code: 0 clean, 1 violations (listed on stderr), 2 I/O trouble.
+//! Runs as a blocking CI step; needles are assembled with `concat!` so the
+//! lint's own source never contains them contiguously.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+const RELAXED_NEEDLE: &str = concat!("Ordering::", "Relaxed");
+const RELAXED_MARK: &str = concat!("// relaxed", ":");
+const PANIC_NEEDLES: [&str; 4] = [
+    concat!(".unwrap", "()"),
+    concat!(".expect", "("),
+    concat!("panic", "!("),
+    concat!("unreachable", "!"),
+];
+const PANIC_MARKS: [&str; 5] = [
+    ".lock(",
+    ".wait(",
+    ".wait_timeout(",
+    ".into_inner(",
+    concat!("// lint: allow-panic", ":"),
+];
+const UNSAFE_BLOCK: &str = concat!("unsafe", " {");
+const UNSAFE_FN: &str = concat!("unsafe", " fn");
+const UNSAFE_IMPL: &str = concat!("unsafe", " impl");
+const SAFETY_MARK: &str = concat!("// SAFETY", ":");
+const SAFETY_DOC: &str = concat!("# Saf", "ety");
+const TEST_CFG: &str = concat!("#[cfg(", "test)]");
+
+/// Lines of `content` up to (excluding) the first test-module marker.
+fn active_lines(content: &str) -> Vec<&str> {
+    content
+        .lines()
+        .take_while(|l| !l.trim_start().starts_with(TEST_CFG))
+        .collect()
+}
+
+fn is_comment_only(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// True if any of `marks` appears on line `i` or the `depth` lines above it.
+fn lookback_has(lines: &[&str], i: usize, depth: usize, marks: &[&str]) -> bool {
+    let lo = i.saturating_sub(depth);
+    lines[lo..=i]
+        .iter()
+        .any(|l| marks.iter().any(|m| l.contains(m)))
+}
+
+/// Rule 1: relaxed atomics must justify themselves.
+fn check_relaxed(rel: &str, lines: &[&str], out: &mut Vec<String>) {
+    for (i, line) in lines.iter().enumerate() {
+        if !line.contains(RELAXED_NEEDLE) || is_comment_only(line) {
+            continue;
+        }
+        if !lookback_has(lines, i, 3, &[RELAXED_MARK]) {
+            out.push(format!(
+                "{rel}:{}: relaxed atomic without a `{RELAXED_MARK}` justification within 3 lines",
+                i + 1
+            ));
+        }
+    }
+}
+
+/// Rule 2: no panicking calls on serve/IPC request paths.
+fn check_panics(rel: &str, lines: &[&str], out: &mut Vec<String>) {
+    if !rel.starts_with("rust/src/serve/") && !rel.starts_with("rust/src/ipc/") {
+        return;
+    }
+    for (i, line) in lines.iter().enumerate() {
+        if is_comment_only(line) || !PANIC_NEEDLES.iter().any(|n| line.contains(n)) {
+            continue;
+        }
+        if !lookback_has(lines, i, 3, &PANIC_MARKS) {
+            out.push(format!(
+                "{rel}:{}: panicking call on a serve/ipc path; return a typed error or \
+                 justify with `{}`",
+                i + 1,
+                PANIC_MARKS[4]
+            ));
+        }
+    }
+}
+
+/// Rule 4: unsafe code must carry a written soundness argument.
+fn check_safety(rel: &str, lines: &[&str], out: &mut Vec<String>) {
+    for (i, line) in lines.iter().enumerate() {
+        if is_comment_only(line) {
+            continue;
+        }
+        let is_fn = line.contains(UNSAFE_FN);
+        if !is_fn && !line.contains(UNSAFE_BLOCK) && !line.contains(UNSAFE_IMPL) {
+            continue;
+        }
+        // `unsafe fn` may carry a `# Safety` doc section instead, which sits
+        // above attributes and generics — allow a longer lookback.
+        let (depth, marks): (usize, &[&str]) = if is_fn {
+            (15, &[SAFETY_MARK, SAFETY_DOC])
+        } else {
+            (5, &[SAFETY_MARK])
+        };
+        if !lookback_has(lines, i, depth, marks) {
+            out.push(format!(
+                "{rel}:{}: unsafe without a `{SAFETY_MARK}` comment (or `{SAFETY_DOC}` doc \
+                 section for fns declared unsafe)",
+                i + 1
+            ));
+        }
+    }
+}
+
+/// Parse `pub const NAME: u32 = N;` entries of a file's `pub mod method`.
+fn method_consts(lines: &[&str]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut in_block = false;
+    for line in lines {
+        let t = line.trim();
+        if t.starts_with("pub mod method") {
+            in_block = true;
+            continue;
+        }
+        if in_block {
+            if t == "}" {
+                break;
+            }
+            if let Some(rest) = t.strip_prefix("pub const ") {
+                if let Some((name, rhs)) = rest.split_once(": u32 = ") {
+                    if let Some(num) = rhs.strip_suffix(';') {
+                        if let Ok(n) = num.parse::<u32>() {
+                            out.push((name.to_string(), n));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse the `ErrorKind` wire tables: `ErrorKind::X => N,` arms of `code()`
+/// and `N => ErrorKind::X,` arms of `from_code` (the `_ =>` default is
+/// intentionally invisible to this parse).
+fn errorkind_pairs(lines: &[&str]) -> (Vec<(String, u32)>, Vec<(u32, String)>) {
+    let mut to_code = Vec::new();
+    let mut from_code = Vec::new();
+    for line in lines {
+        let t = line.trim().trim_end_matches(',');
+        if let Some((l, r)) = t.split_once(" => ") {
+            if let Some(name) = l.strip_prefix("ErrorKind::") {
+                if let Ok(n) = r.parse::<u32>() {
+                    to_code.push((name.to_string(), n));
+                }
+            } else if let Ok(n) = l.parse::<u32>() {
+                if let Some(name) = r.strip_prefix("ErrorKind::") {
+                    from_code.push((n, name.to_string()));
+                }
+            }
+        }
+    }
+    (to_code, from_code)
+}
+
+/// Rule 3 proper: uniqueness across both protocols, serve docs coverage,
+/// and the `ErrorKind` bijection.
+fn check_wire_consistency(
+    ipc_consts: &[(String, u32)],
+    serve_consts: &[(String, u32)],
+    serve_docs: &str,
+    to_code: &[(String, u32)],
+    from_code: &[(u32, String)],
+    out: &mut Vec<String>,
+) {
+    if ipc_consts.is_empty() || serve_consts.is_empty() {
+        out.push("wire: failed to parse the `pub mod method` blocks".to_string());
+        return;
+    }
+    let mut seen: BTreeMap<u32, &str> = BTreeMap::new();
+    for (name, n) in ipc_consts.iter().chain(serve_consts) {
+        if let Some(prev) = seen.insert(*n, name) {
+            out.push(format!("wire: method index {n} used by both {prev} and {name}"));
+        }
+    }
+    for (name, n) in serve_consts {
+        let row = format!("| {n} | `{name}`");
+        if !serve_docs.contains(&row) {
+            out.push(format!(
+                "wire: serve method {name} = {n} has no `{row} ...` row in docs/serve.md"
+            ));
+        }
+    }
+    if to_code.is_empty() || to_code.len() != from_code.len() {
+        out.push(format!(
+            "wire: ErrorKind code()/from_code arm counts differ ({} vs {})",
+            to_code.len(),
+            from_code.len()
+        ));
+    }
+    let mut codes: BTreeMap<u32, &str> = BTreeMap::new();
+    for (name, n) in to_code {
+        if let Some(prev) = codes.insert(*n, name) {
+            out.push(format!("wire: ErrorKind code {n} used by both {prev} and {name}"));
+        }
+    }
+    for (n, name) in from_code {
+        match codes.get(n) {
+            Some(fwd) if *fwd == name => {}
+            Some(fwd) => out.push(format!(
+                "wire: ErrorKind::from_code({n}) = {name} but code() maps {fwd} there"
+            )),
+            None => out.push(format!(
+                "wire: ErrorKind::from_code({n}) = {name} has no matching code() arm"
+            )),
+        }
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                collect_rs_files(&p, out);
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+    }
+}
+
+fn read(root: &Path, rel: &str) -> Result<String, String> {
+    std::fs::read_to_string(root.join(rel)).map_err(|e| format!("read {rel}: {e}"))
+}
+
+/// Run every rule under `root` (the repo checkout); returns the violations.
+fn run(root: &Path) -> Result<Vec<String>, String> {
+    let mut violations = Vec::new();
+    let mut files = Vec::new();
+    collect_rs_files(&root.join("rust/src"), &mut files);
+    if files.is_empty() {
+        return Err("no .rs files under rust/src".to_string());
+    }
+    for path in &files {
+        let content =
+            std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let rel_path: &Path = match path.strip_prefix(root) {
+            Ok(r) => r,
+            Err(_) => path,
+        };
+        let rel = rel_path.display().to_string();
+        let lines = active_lines(&content);
+        check_relaxed(&rel, &lines, &mut violations);
+        check_panics(&rel, &lines, &mut violations);
+        check_safety(&rel, &lines, &mut violations);
+    }
+    let serve_mod = read(root, "rust/src/serve/mod.rs")?;
+    let ipc_proto = read(root, "rust/src/ipc/protocol.rs")?;
+    let error_rs = read(root, "rust/src/error.rs")?;
+    let serve_docs = read(root, "docs/serve.md")?;
+    let (to_code, from_code) = errorkind_pairs(&active_lines(&error_rs));
+    check_wire_consistency(
+        &method_consts(&active_lines(&ipc_proto)),
+        &method_consts(&active_lines(&serve_mod)),
+        &serve_docs,
+        &to_code,
+        &from_code,
+        &mut violations,
+    );
+    Ok(violations)
+}
+
+fn main() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    match run(&root) {
+        Ok(v) if v.is_empty() => println!("unigps-lint: clean"),
+        Ok(v) => {
+            for x in &v {
+                eprintln!("{x}");
+            }
+            eprintln!("unigps-lint: {} violation(s)", v.len());
+            std::process::exit(1);
+        }
+        Err(e) => {
+            eprintln!("unigps-lint: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn relaxed(src: &str) -> Vec<String> {
+        let mut v = Vec::new();
+        check_relaxed("rust/src/x.rs", &active_lines(src), &mut v);
+        v
+    }
+
+    #[test]
+    fn relaxed_justified_passes() {
+        let ok = "// relaxed: metrics only\nc.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(relaxed(ok).is_empty());
+        let same_line = "c.store(0, Ordering::Relaxed); // relaxed: see above\n";
+        assert!(relaxed(same_line).is_empty());
+    }
+
+    #[test]
+    fn relaxed_unjustified_flagged() {
+        let bad = "let x = 1;\nc.fetch_add(1, Ordering::Relaxed);\n";
+        let v = relaxed(bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains(":2:"), "{v:?}");
+        // A justification too far away (4 lines) does not count.
+        let far = "// relaxed: x\na();\nb();\nc();\nd.load(Ordering::Relaxed);\n";
+        assert_eq!(relaxed(far).len(), 1);
+    }
+
+    fn panics(path: &str, src: &str) -> Vec<String> {
+        let mut v = Vec::new();
+        check_panics(path, &active_lines(src), &mut v);
+        v
+    }
+
+    #[test]
+    fn panic_rules_on_request_paths() {
+        let bad = "let v = decode(buf).unwrap();\n";
+        assert_eq!(panics("rust/src/serve/server.rs", bad).len(), 1);
+        assert_eq!(panics("rust/src/ipc/server.rs", bad).len(), 1);
+        // Engines and utils are out of scope for rule 2.
+        assert!(panics("rust/src/engine/superstep.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn panic_allowed_with_lock_or_marker() {
+        let lock = "let g = self.state.lock().unwrap();\n";
+        assert!(panics("rust/src/serve/server.rs", lock).is_empty());
+        let marked = "// lint: allow-panic: invariant, not client input\nx.expect(\"inv\");\n";
+        assert!(panics("rust/src/serve/server.rs", marked).is_empty());
+        let multiline = "let g = inner\n    .lock()\n    .unwrap();\n";
+        assert!(panics("rust/src/serve/server.rs", multiline).is_empty());
+    }
+
+    fn safety(src: &str) -> Vec<String> {
+        let mut v = Vec::new();
+        check_safety("rust/src/x.rs", &active_lines(src), &mut v);
+        v
+    }
+
+    #[test]
+    fn safety_comment_required() {
+        let bad = "let p = unsafe { s.get_mut(i) };\n";
+        assert_eq!(safety(bad).len(), 1);
+        let ok = "// SAFETY: worker owns slot i\nlet p = unsafe { s.get_mut(i) };\n";
+        assert!(safety(ok).is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_accepts_safety_doc_section() {
+        let ok = "/// # Safety\n/// Caller must own the row.\n#[inline]\npub unsafe fn push() {\n";
+        assert!(safety(ok).is_empty());
+        let bad = "pub unsafe fn push() {\n";
+        assert_eq!(safety(bad).len(), 1);
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    x.load(Ordering::Relaxed);\n}\n";
+        assert!(relaxed(src).is_empty());
+    }
+
+    #[test]
+    fn method_block_parses() {
+        let src = "pub mod method {\n    /// doc\n    pub const SUBMIT: u32 = 16;\n    \
+                   pub use other::SHUTDOWN;\n}\npub const STRAY: u32 = 9;\n";
+        assert_eq!(method_consts(&active_lines(src)), vec![("SUBMIT".to_string(), 16)]);
+    }
+
+    fn wire(
+        ipc: &[(String, u32)],
+        serve: &[(String, u32)],
+        docs: &str,
+        to_code: &[(String, u32)],
+        from_code: &[(u32, String)],
+    ) -> Vec<String> {
+        let mut v = Vec::new();
+        check_wire_consistency(ipc, serve, docs, to_code, from_code, &mut v);
+        v
+    }
+
+    #[test]
+    fn wire_consistency_checks() {
+        let ipc = vec![("PING".to_string(), 6)];
+        let serve = vec![("SUBMIT".to_string(), 16)];
+        let ek = vec![("Io".to_string(), 3)];
+        let ek_rev = vec![(3, "Io".to_string())];
+        assert!(wire(&ipc, &serve, "| 16 | `SUBMIT` | spec |", &ek, &ek_rev).is_empty());
+        // Duplicate index across protocols.
+        let clash = vec![("SUBMIT".to_string(), 6)];
+        let v = wire(&ipc, &clash, "| 6 | `SUBMIT` |", &ek, &ek_rev);
+        assert!(v.iter().any(|x| x.contains("used by both")), "{v:?}");
+        // Undocumented serve method.
+        let v = wire(&ipc, &serve, "no table here", &ek, &ek_rev);
+        assert!(v.iter().any(|x| x.contains("docs/serve.md")), "{v:?}");
+        // Broken ErrorKind bijection.
+        let bad_rev = vec![(3, "Parse".to_string())];
+        let v = wire(&ipc, &serve, "| 16 | `SUBMIT` |", &ek, &bad_rev);
+        assert!(v.iter().any(|x| x.contains("from_code")), "{v:?}");
+    }
+
+    #[test]
+    fn errorkind_parse_reads_both_tables() {
+        let src = "match self {\n    ErrorKind::Io => 3,\n}\nmatch code {\n    \
+                   3 => ErrorKind::Io,\n    _ => ErrorKind::Ipc,\n}\n";
+        let (fwd, rev) = errorkind_pairs(&active_lines(src));
+        assert_eq!(fwd, vec![("Io".to_string(), 3)]);
+        assert_eq!(rev, vec![(3, "Io".to_string())]);
+    }
+
+    #[test]
+    fn repo_is_clean() {
+        // The lint over the real checkout — the blocking CI step must pass.
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let v = run(&root).expect("lint run");
+        assert!(v.is_empty(), "violations:\n{}", v.join("\n"));
+    }
+}

@@ -1,13 +1,14 @@
 //! BSP barrier.
 //!
-//! Thin wrapper over `std::sync::Barrier` exposing the leader flag; kept as
+//! Thin wrapper over [`crate::util::sync::Barrier`] (std's barrier in normal
+//! builds) exposing the leader flag; kept as
 //! its own type so the engines read as BSP pseudo-code and so the
 //! implementation can be swapped (e.g. for a sense-reversing spin barrier)
 //! without touching engine code — the §Perf pass experiments with exactly
 //! that.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Barrier, Condvar, Mutex};
+use crate::util::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{Barrier, Condvar, Mutex};
 
 /// A reusable barrier for `n` workers.
 pub struct BspBarrier {

@@ -28,10 +28,10 @@
 //! Message and byte counters feed the run metrics — they stand in for the
 //! paper's cluster-network traffic accounting.
 
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{trace_write, Mutex};
 use crate::vcprog::VertexId;
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// A routed message: destination vertex plus payload.
 pub type Routed<M> = (VertexId, M);
@@ -77,11 +77,11 @@ impl<M: Send> MessageBoard<M> {
         if batch.is_empty() {
             return;
         }
+        let bytes = (batch.len() * (4 + std::mem::size_of::<M>())) as u64;
+        // relaxed: monotone metrics counters with no payload to publish;
+        // totals are read after the run's final thread join.
         self.messages.fetch_add(batch.len() as u64, Ordering::Relaxed);
-        self.bytes.fetch_add(
-            (batch.len() * (4 + std::mem::size_of::<M>())) as u64,
-            Ordering::Relaxed,
-        );
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
         let mut cell = self.cells[from * self.parts + to].lock().unwrap();
         if cell.is_empty() {
             std::mem::swap(&mut *cell, batch);
@@ -108,12 +108,14 @@ impl<M: Send> MessageBoard<M> {
 
     /// Total messages routed so far.
     pub fn total_messages(&self) -> u64 {
+        // relaxed: metrics read; exactness only matters after the final join.
         self.messages.load(Ordering::Relaxed)
     }
 
     /// Approximate bytes routed so far (header + payload `size_of`; dynamic
     /// payloads are under-estimated — good enough for relative reporting).
     pub fn total_bytes(&self) -> u64 {
+        // relaxed: metrics read; exactness only matters after the final join.
         self.bytes.load(Ordering::Relaxed)
     }
 }
@@ -167,7 +169,11 @@ impl<M: Send> FlatBoard<M> {
     /// (engines separate the phases with barriers).
     #[inline]
     pub unsafe fn push(&self, parity: u32, from: usize, to: usize, dst: VertexId, msg: M) {
-        let cell = &mut *self.cells[(parity & 1) as usize][from * self.parts + to].get();
+        let slot = &self.cells[(parity & 1) as usize][from * self.parts + to];
+        trace_write(slot.get() as usize);
+        // SAFETY: `from` is the exclusive writer of this cell in the current
+        // phase (caller contract), so the UnsafeCell access is unaliased.
+        let cell = unsafe { &mut *slot.get() };
         cell.push((dst, msg));
     }
 
@@ -196,8 +202,18 @@ impl<M: Send> FlatBoard<M> {
     /// parity — either a barrier separates the phases, or the caller has
     /// observed `sealed_epoch(from, to) >= epoch` for the epoch being
     /// drained — and the caller must be the cell's only drainer.
-    pub unsafe fn drain_from(&self, parity: u32, from: usize, to: usize, mut f: impl FnMut(VertexId, M)) {
-        let cell = &mut *self.cells[(parity & 1) as usize][from * self.parts + to].get();
+    pub unsafe fn drain_from(
+        &self,
+        parity: u32,
+        from: usize,
+        to: usize,
+        mut f: impl FnMut(VertexId, M),
+    ) {
+        let slot = &self.cells[(parity & 1) as usize][from * self.parts + to];
+        trace_write(slot.get() as usize);
+        // SAFETY: the caller observed this cell's seal (or a phase barrier)
+        // and is its only drainer, so the UnsafeCell access is unaliased.
+        let cell = unsafe { &mut *slot.get() };
         for (dst, msg) in cell.drain(..) {
             f(dst, msg);
         }
@@ -211,7 +227,9 @@ impl<M: Send> FlatBoard<M> {
     /// current phase, barrier-separated from sends of the same parity.
     pub unsafe fn drain(&self, parity: u32, to: usize, mut f: impl FnMut(VertexId, M)) {
         for from in 0..self.parts {
-            self.drain_from(parity, from, to, &mut f);
+            // SAFETY: the caller's exclusive-drainer contract covers every
+            // cell of column `to`.
+            unsafe { self.drain_from(parity, from, to, &mut f) };
         }
     }
 
@@ -219,6 +237,8 @@ impl<M: Send> FlatBoard<M> {
     /// accounting — keeps atomics off the per-message path).
     pub fn add_counts(&self, msgs: u64, bytes: u64) {
         if msgs > 0 {
+            // relaxed: monotone metrics counters with no payload to publish;
+            // totals are read after the run's final thread join.
             self.messages.fetch_add(msgs, Ordering::Relaxed);
             self.bytes.fetch_add(bytes, Ordering::Relaxed);
         }
@@ -226,11 +246,13 @@ impl<M: Send> FlatBoard<M> {
 
     /// Total messages routed so far.
     pub fn total_messages(&self) -> u64 {
+        // relaxed: metrics read; exactness only matters after the final join.
         self.messages.load(Ordering::Relaxed)
     }
 
     /// Approximate bytes routed so far.
     pub fn total_bytes(&self) -> u64 {
+        // relaxed: metrics read; exactness only matters after the final join.
         self.bytes.load(Ordering::Relaxed)
     }
 }

@@ -6,8 +6,12 @@
 //! exposes exactly that access pattern: unsynchronized reads/writes through
 //! a raw pointer, with the safety argument delegated to the engine's barrier
 //! discipline (this is the standard construction in shared-memory graph
-//! frameworks — Gemini, Ligra, GAPBS all rely on it).
+//! frameworks — Gemini, Ligra, GAPBS all rely on it). Every access reports
+//! its cell to [`crate::util::sync::trace_read`]/[`trace_write`] — free in
+//! normal builds, a vector-clock race check under `--cfg unigps_model`
+//! (see `docs/concurrency.md`).
 
+use crate::util::sync::{trace_read, trace_write};
 use std::cell::UnsafeCell;
 use std::marker::PhantomData;
 
@@ -56,7 +60,14 @@ impl<'a, T> SharedSlice<'a, T> {
     #[inline]
     pub unsafe fn get(&self, i: usize) -> &T {
         debug_assert!(i < self.len);
-        &*(*self.ptr.add(i)).get()
+        // SAFETY: `i < len` (the slice the pointer came from outlives `'a`)
+        // and no writer of index `i` is in flight (caller contract), so the
+        // UnsafeCell read is unaliased.
+        unsafe {
+            let cell = &*self.ptr.add(i);
+            trace_read(cell.get() as usize);
+            &*cell.get()
+        }
     }
 
     /// Write index `i`.
@@ -67,7 +78,13 @@ impl<'a, T> SharedSlice<'a, T> {
     #[inline]
     pub unsafe fn set(&self, i: usize, value: T) {
         debug_assert!(i < self.len);
-        *(*self.ptr.add(i)).get() = value;
+        // SAFETY: `i < len` and the caller is the unique accessor of index
+        // `i` this phase, so the UnsafeCell write is unaliased.
+        unsafe {
+            let cell = &*self.ptr.add(i);
+            trace_write(cell.get() as usize);
+            *cell.get() = value;
+        }
     }
 
     /// Mutable reference to index `i` (same contract as [`SharedSlice::set`]).
@@ -78,7 +95,13 @@ impl<'a, T> SharedSlice<'a, T> {
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get_mut(&self, i: usize) -> &mut T {
         debug_assert!(i < self.len);
-        &mut *(*self.ptr.add(i)).get()
+        // SAFETY: `i < len` and the caller is the unique accessor of index
+        // `i` this phase, so the UnsafeCell access is unaliased.
+        unsafe {
+            let cell = &*self.ptr.add(i);
+            trace_write(cell.get() as usize);
+            &mut *cell.get()
+        }
     }
 }
 

@@ -73,6 +73,8 @@ pub fn run<P: VCProg>(
                 for v in rt.vertices_of(w) {
                     let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
                     ctx.udf += 1;
+                    // SAFETY: worker `w` writes only its own vertices'
+                    // slots; the barrier below separates init from reads.
                     unsafe { props_s.set(v as usize, Some(p)) };
                 }
                 rt.barrier.wait();
@@ -93,6 +95,8 @@ pub fn run<P: VCProg>(
                         let mut accum: Option<P::Msg> = None;
                         for (eid, _src) in topo.in_edges(v) {
                             // GATHER returns e.msg; SUM merges.
+                            // SAFETY: edge slots are frozen during G/A —
+                            // scatter writes are barrier-separated.
                             if let Some(m) = unsafe { edge_msg_s.get(eid) }.as_ref() {
                                 accum = Some(match accum {
                                     Some(acc) => {
@@ -110,6 +114,8 @@ pub fn run<P: VCProg>(
                                 program.empty_message()
                             }
                         };
+                        // SAFETY: worker-owned props slot; APPLY writes are
+                        // per-owner exclusive.
                         let prop_slot = unsafe { props_s.get_mut(vi) };
                         let (new_prop, is_active) =
                             program.vertex_compute(prop_slot.as_ref().expect("init"), &msg, iter);
@@ -124,8 +130,12 @@ pub fn run<P: VCProg>(
                     for v in rt.vertices_of(w) {
                         let vi = v as usize;
                         let is_active = rt.active.next(v);
+                        // SAFETY: props are read-only during scatter (the
+                        // barrier above ended the apply writes).
                         let prop = unsafe { props_s.get(vi) }.as_ref().expect("init");
                         for (eid, dst) in topo.out_edges(v) {
+                            // SAFETY: `eid` lies in worker `w`'s own CSR
+                            // rows — each edge slot has a unique writer.
                             let slot = unsafe { edge_msg_s.get_mut(eid) };
                             if is_active && iter < opts.max_iter {
                                 ctx.udf += 1;

@@ -80,6 +80,8 @@ pub fn run<P: VCProg>(
                 for v in rt.vertices_of(w) {
                     let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
                     ctx.udf += 1;
+                    // SAFETY: worker `w` writes only its own vertices'
+                    // slots; the barrier below separates init from reads.
                     unsafe { props_s.set(v as usize, Some(p)) };
                 }
                 busy += phase_timer.elapsed();
@@ -109,6 +111,9 @@ pub fn run<P: VCProg>(
                     phase_timer = CpuTimer::start();
                     for v in rt.vertices_of(w) {
                         let vi = v as usize;
+                        // SAFETY: worker-owned inbox slot of the current
+                        // parity — no sender writes it this step (module
+                        // doc, "Soundness of cell reuse").
                         let slot = unsafe { inbox_cur.get_mut(vi) };
                         let was_active = rt.active.prev(v);
                         if !was_active && slot.is_none() {
@@ -121,6 +126,8 @@ pub fn run<P: VCProg>(
                                 program.empty_message()
                             }
                         };
+                        // SAFETY: worker-owned props slot; compute writes
+                        // are per-owner exclusive.
                         let prop_slot = unsafe { props_s.get_mut(vi) };
                         let (new_prop, is_active) =
                             program.vertex_compute(prop_slot.as_ref().expect("initialized"), &msg, iter);

@@ -89,6 +89,8 @@ pub fn run<P: VCProg>(
                 for v in rt.vertices_of(w) {
                     let p = program.init_vertex_attr(v, topo.out_degree(v), graph.vertex_prop(v));
                     ctx.udf += 1;
+                    // SAFETY: worker `w` writes only its own vertices'
+                    // slots; the barrier below separates init from reads.
                     unsafe { props_s.set(v as usize, Some(p)) };
                 }
                 rt.barrier.wait();
@@ -101,6 +103,8 @@ pub fn run<P: VCProg>(
                 let mut iter: u32 = 1;
                 loop {
                     let step_timer = Timer::start();
+                    // relaxed: written in the previous round's exclusive
+                    // bookkeeping window; the step gate/barrier ordered it.
                     let pull = pull_mode.load(Ordering::Relaxed);
 
                     // --- Phase E ------------------------------------------
@@ -113,6 +117,9 @@ pub fn run<P: VCProg>(
                             let mut accum: Option<P::Msg> = None;
                             for (eid, src) in topo.in_edges(v) {
                                 if rt.active.prev(src) {
+                                    // SAFETY: props are read-only in Phase
+                                    // E; writes happen in barrier-separated
+                                    // Phase V.
                                     let sp = unsafe { props_s.get(src as usize) }
                                         .as_ref()
                                         .expect("init");
@@ -131,6 +138,8 @@ pub fn run<P: VCProg>(
                                     }
                                 }
                             }
+                            // SAFETY: `v` is owned by worker `w`; pull mode
+                            // never routes into other workers' inbox slots.
                             unsafe { inbox_s.set(vi, accum) };
                         }
                         rt.add_step_messages(local_msgs);
@@ -142,6 +151,8 @@ pub fn run<P: VCProg>(
                             if !rt.active.prev(v) {
                                 continue;
                             }
+                            // SAFETY: props are read-only during the emit
+                            // phase (writes happen in Phase V).
                             let prop = unsafe { props_s.get(v as usize) }.as_ref().expect("init");
                             for (eid, dst) in topo.out_edges(v) {
                                 ctx.udf += 1;
@@ -177,6 +188,8 @@ pub fn run<P: VCProg>(
                     for v in rt.vertices_of(w) {
                         let vi = v as usize;
                         let was_active = rt.active.prev(v);
+                        // SAFETY: worker-owned inbox slot; all sends of this
+                        // epoch finished (deliver/barrier above).
                         let slot = unsafe { inbox_s.get_mut(vi) };
                         if !was_active && slot.is_none() {
                             // Next-active bit stays clear (buffer pre-zeroed).
@@ -189,6 +202,8 @@ pub fn run<P: VCProg>(
                                 program.empty_message()
                             }
                         };
+                        // SAFETY: worker-owned props slot; Phase V writes
+                        // are per-owner exclusive.
                         let prop_slot = unsafe { props_s.get_mut(vi) };
                         let (new_prop, is_active) =
                             program.vertex_compute(prop_slot.as_ref().expect("init"), &msg, iter);
@@ -206,6 +221,8 @@ pub fn run<P: VCProg>(
                     // resume — so every worker reads the new mode.
                     let decide_mode = |_act: u64, aoe: u64| {
                         let dense_next = (aoe as f64) > m as f64 / opts.pushpull_threshold;
+                        // relaxed: runs in the exclusive bookkeeping window;
+                        // the step gate publishes it to every worker.
                         pull_mode.store(dense_next, Ordering::Relaxed);
                     };
                     if rt.close_step(w, iter, &step_timer, mode, decide_mode) {

@@ -90,6 +90,13 @@
 //! of the handoff their data dependencies allow (GAS reads remote edge
 //! slots in every gather, so its mid-phase sync stays a full barrier and it
 //! picks up only the gated epilogue + parallel reduction).
+//!
+//! The ordering claims above are machine-checked: this module's sync
+//! primitives come from the [`crate::util::sync`] facade, and
+//! `rust/tests/model_check.rs` re-runs the seal/drain handoff and the
+//! counting gates under the in-house schedule-exploring model checker
+//! (`--cfg unigps_model`). `docs/concurrency.md` is the written spec of
+//! the protocol and the how-to for the checker, Miri and TSan.
 
 use crate::distributed::comm::FlatBoard;
 use crate::distributed::metrics::{RunMetrics, StepMetrics, StepMode};
@@ -99,9 +106,9 @@ use crate::graph::csr::Topology;
 use crate::graph::partition::{PartIter, Partitioner};
 use crate::util::timer::Timer;
 use crate::vcprog::{VCProg, VertexId};
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{Barrier, Mutex};
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
 
 /// Spin briefly, then yield: the wait primitive behind the pipeline's
 /// gates and seal waits. Yielding matters — CI machines run more workers
@@ -180,11 +187,15 @@ impl ActiveSet {
 
     #[inline]
     fn prev_buf(&self) -> &[AtomicU64] {
+        // relaxed: parity flips only in the exclusive bookkeeping window,
+        // and the gate/barrier release-acquire pairs publish the flip.
         &self.bufs[self.parity.load(Ordering::Relaxed)]
     }
 
     #[inline]
     fn next_buf(&self) -> &[AtomicU64] {
+        // relaxed: parity flips only in the exclusive bookkeeping window,
+        // and the gate/barrier release-acquire pairs publish the flip.
         &self.bufs[1 - self.parity.load(Ordering::Relaxed)]
     }
 
@@ -192,6 +203,8 @@ impl ActiveSet {
     #[inline]
     pub fn prev(&self, v: VertexId) -> bool {
         let v = v as usize;
+        // relaxed: prev flags are frozen for the whole step; the gate or
+        // barrier that opened the step published them.
         (self.prev_buf()[v / 64].load(Ordering::Relaxed) >> (v % 64)) & 1 == 1
     }
 
@@ -199,6 +212,8 @@ impl ActiveSet {
     #[inline]
     pub fn next(&self, v: VertexId) -> bool {
         let v = v as usize;
+        // relaxed: readers only consume flags their own worker wrote, or
+        // read after the write gate has ordered every worker's fetch_or.
         (self.next_buf()[v / 64].load(Ordering::Relaxed) >> (v % 64)) & 1 == 1
     }
 
@@ -206,6 +221,8 @@ impl ActiveSet {
     /// windows: all writers of the step must have arrived at a gate first).
     #[inline]
     pub fn next_word(&self, wi: usize) -> u64 {
+        // relaxed: reduction/bookkeeping read; the write gate's AcqRel pair
+        // ordered all of the step's fetch_ors before it.
         self.next_buf()[wi].load(Ordering::Relaxed)
     }
 
@@ -222,12 +239,15 @@ impl ActiveSet {
             return;
         }
         let v = v as usize;
+        // relaxed: word-level atomicity is all that is needed — the write
+        // gate publishes the bits (module doc, "Soundness of cell reuse").
         self.next_buf()[v / 64].fetch_or(1u64 << (v % 64), Ordering::Relaxed);
     }
 
     /// Population count of the current step's flags — the convergence
     /// signal (bookkeeping window).
     pub fn count_next(&self) -> u64 {
+        // relaxed: bookkeeping-window read; writers passed the gate.
         self.next_buf()
             .iter()
             .map(|w| w.load(Ordering::Relaxed).count_ones() as u64)
@@ -240,6 +260,7 @@ impl ActiveSet {
     /// work proportional to the number of set bits — never a probe per bit.
     pub fn for_each_next(&self, mut f: impl FnMut(VertexId)) {
         for (wi, word) in self.next_buf().iter().enumerate() {
+            // relaxed: bookkeeping-window read; writers passed the gate.
             let mut bits = word.load(Ordering::Relaxed);
             if bits == 0 {
                 continue;
@@ -258,9 +279,12 @@ impl ActiveSet {
     /// from the exclusive bookkeeping window (between two barriers, or as
     /// the last worker through the pipelined reduce gate).
     pub fn advance(&self) {
+        // relaxed: runs in the exclusive bookkeeping window; the gate or
+        // barrier that closes the window publishes the flip.
         let p = self.parity.load(Ordering::Relaxed);
         self.parity.store(1 - p, Ordering::Relaxed);
-        // The old prev buffer becomes the new next: clear its stale flags.
+        // relaxed: the old prev buffer becomes the new next — clearing its
+        // stale flags happens in the same exclusive window.
         for word in &self.bufs[p] {
             word.store(0, Ordering::Relaxed);
         }
@@ -409,6 +433,8 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
     /// (call before the step epilogue).
     pub fn add_step_messages(&self, msgs: u64) {
         if msgs > 0 {
+            // relaxed: monotone metrics counter, read in the bookkeeping
+            // window after the write gate ordered it.
             self.extra_step.fetch_add(msgs, Ordering::Relaxed);
         }
     }
@@ -466,13 +492,16 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         mode: Option<StepMode>,
         leader_extra: impl FnOnce(u64, u64),
     ) {
+        // relaxed: bookkeeping runs in an exclusive window (every other
+        // worker is parked at a gate or barrier), so these counters need
+        // atomicity only; the window's release/acquire pairs publish them.
         let local = self.local_step.swap(0, Ordering::Relaxed);
-        self.local_total.fetch_add(local, Ordering::Relaxed);
-        let extra = self.extra_step.swap(0, Ordering::Relaxed);
-        self.extra_total.fetch_add(extra, Ordering::Relaxed);
+        self.local_total.fetch_add(local, Ordering::Relaxed); // relaxed: as above
+        let extra = self.extra_step.swap(0, Ordering::Relaxed); // relaxed: as above
+        self.extra_total.fetch_add(extra, Ordering::Relaxed); // relaxed: as above
         let board_total = self.board.total_messages();
-        let board_prev = self.last_board.swap(board_total, Ordering::Relaxed);
-        self.steps_done.store(iter as u64, Ordering::Relaxed);
+        let board_prev = self.last_board.swap(board_total, Ordering::Relaxed); // relaxed: as above
+        self.steps_done.store(iter as u64, Ordering::Relaxed); // relaxed: as above
         if self.step_metrics {
             self.step_log.lock().unwrap().push(StepMetrics {
                 step: iter,
@@ -484,10 +513,12 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         }
         leader_extra(act, aoe);
         if act == 0 {
+            // relaxed: stop flags are only read after the step gate or the
+            // closing barrier ordered this exclusive window's writes.
             self.converged.store(true, Ordering::Relaxed);
             self.stop.store(true, Ordering::Relaxed);
         } else if iter >= self.max_iter {
-            self.stop.store(true, Ordering::Relaxed);
+            self.stop.store(true, Ordering::Relaxed); // relaxed: as above
         }
         self.active.advance();
     }
@@ -511,6 +542,7 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
             self.bookkeep(iter, act, aoe, step_timer, mode, leader_extra);
         }
         self.barrier.wait();
+        // relaxed: the release barrier above ordered the leader's write.
         self.stop.load(Ordering::Relaxed)
     }
 
@@ -545,25 +577,31 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         spin_wait(|| self.writes_done());
         let (act, aoe) = self.reduce_words(self.word_range(w));
         if act > 0 {
+            // relaxed: partial sums; the AcqRel reduce gate below orders
+            // every worker's contribution before the last arriver's read.
             self.act_sum.fetch_add(act, Ordering::Relaxed);
         }
         if aoe > 0 {
-            self.aoe_sum.fetch_add(aoe, Ordering::Relaxed);
+            self.aoe_sum.fetch_add(aoe, Ordering::Relaxed); // relaxed: as above
         }
         // The release sequence on `reduce_done` orders every worker's
         // partial sums before the last arriver's bookkeeping read.
         if self.reduce_done.fetch_add(1, Ordering::AcqRel) + 1 == self.workers {
+            // relaxed: exclusive last-arriver window until `step_done` is
+            // release-stored below; atomicity only.
             let act = self.act_sum.swap(0, Ordering::Relaxed);
             let aoe = self.aoe_sum.swap(0, Ordering::Relaxed);
             // Reset the gates for the next step before opening it; workers
             // re-arm them only after acquiring `step_done`.
-            self.write_done.store(0, Ordering::Relaxed);
-            self.reduce_done.store(0, Ordering::Relaxed);
+            self.write_done.store(0, Ordering::Relaxed); // relaxed: as above
+            self.reduce_done.store(0, Ordering::Relaxed); // relaxed: as above
             self.bookkeep(iter, act, aoe, step_timer, mode, leader_extra);
             self.step_done.store(iter as u64, Ordering::Release);
         } else {
             spin_wait(|| self.step_done.load(Ordering::Acquire) >= iter as u64);
         }
+        // relaxed: the step gate (Release store / Acquire spin above)
+        // ordered the bookkeeper's stop-flag write.
         self.stop.load(Ordering::Relaxed)
     }
 
@@ -591,17 +629,19 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
 
     /// Aggregate run metrics once every worker has retired its context.
     pub fn into_metrics(self, worker_busy: Vec<std::time::Duration>) -> RunMetrics {
+        // relaxed: called after every worker thread joined; the joins
+        // ordered all of the run's writes before these reads.
         let non_board = self.local_total.load(Ordering::Relaxed)
             + self.extra_total.load(Ordering::Relaxed);
         RunMetrics {
-            supersteps: self.steps_done.load(Ordering::Relaxed) as u32,
+            supersteps: self.steps_done.load(Ordering::Relaxed) as u32, // relaxed: as above
             total_messages: self.board.total_messages() + non_board,
             total_message_bytes: self.board.total_bytes() + non_board * self.msg_bytes,
             elapsed: self.timer.elapsed(),
-            converged: self.converged.load(Ordering::Relaxed),
+            converged: self.converged.load(Ordering::Relaxed), // relaxed: as above
             steps: self.step_log.into_inner().unwrap(),
             workers: self.workers,
-            udf_calls: self.udf_calls.load(Ordering::Relaxed),
+            udf_calls: self.udf_calls.load(Ordering::Relaxed), // relaxed: as above
             worker_busy,
         }
     }
@@ -668,7 +708,9 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
         let tp = self.rt.part.partition_of(dst);
         if tp == self.w {
             // Local fast path (§Perf: the biggest shared-memory win).
-            let slot = inbox.get_mut(dst as usize);
+            // SAFETY: `dst` is owned by this worker, whose send phase holds
+            // exclusive access to its inbox slots (caller contract).
+            let slot = unsafe { inbox.get_mut(dst as usize) };
             *slot = Some(match slot.take() {
                 Some(old) => {
                     self.udf += 1;
@@ -701,7 +743,9 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
                 }
             }
         } else {
-            self.rt.board.push(epoch & 1, self.w, tp, dst, msg);
+            // SAFETY: exclusive sender for board row `self.w`, and the
+            // epoch's parity is not drained concurrently (caller contract).
+            unsafe { self.rt.board.push(epoch & 1, self.w, tp, dst, msg) };
             self.routed += 1;
         }
     }
@@ -730,7 +774,9 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
                     for &li in &touched {
                         let msg = shard.slots[li as usize].take().expect("combined message");
                         let dst = self.rt.part.global_of(tp, li as usize);
-                        self.rt.board.push(parity, self.w, tp, dst, msg);
+                        // SAFETY: exclusive sender for board row `self.w`
+                        // during this phase (caller contract).
+                        unsafe { self.rt.board.push(parity, self.w, tp, dst, msg) };
                         self.routed += 1;
                     }
                     shard.touched = touched;
@@ -743,6 +789,8 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
             }
         }
         if self.local > 0 {
+            // relaxed: monotone metrics counter, read in the bookkeeping
+            // window after the write gate ordered it.
             self.rt.local_step.fetch_add(self.local, Ordering::Relaxed);
             self.local = 0;
         }
@@ -768,16 +816,21 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
         from: usize,
     ) {
         let mut udf = 0u64;
-        self.rt.board.drain_from(epoch & 1, from, self.w, |dst, msg| {
-            let slot = inbox.get_mut(dst as usize);
-            *slot = Some(match slot.take() {
-                Some(old) => {
-                    udf += 1;
-                    program.merge_message(&old, &msg)
-                }
-                None => msg,
+        // SAFETY: the caller's contract (sender finished the row, inbox
+        // slots of this worker exclusively accessible) covers both the row
+        // drain and the inbox slot writes inside the closure.
+        unsafe {
+            self.rt.board.drain_from(epoch & 1, from, self.w, |dst, msg| {
+                let slot = inbox.get_mut(dst as usize);
+                *slot = Some(match slot.take() {
+                    Some(old) => {
+                        udf += 1;
+                        program.merge_message(&old, &msg)
+                    }
+                    None => msg,
+                });
             });
-        });
+        }
         self.udf += udf;
     }
 
@@ -808,7 +861,9 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
         while self.drained < self.rt.workers
             && self.rt.board.sealed_epoch(self.drained, self.w) >= epoch as u64
         {
-            self.drain_row(program, inbox, epoch, self.drained);
+            // SAFETY: the acquired seal hands the row off; inbox
+            // exclusivity is the caller's contract.
+            unsafe { self.drain_row(program, inbox, epoch, self.drained) };
             self.drained += 1;
         }
         self.drained == self.rt.workers
@@ -838,7 +893,10 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
                 let to = self.w;
                 spin_wait(|| board.sealed_epoch(from, to) >= epoch as u64);
             }
-            self.drain_row(program, inbox, epoch, from);
+            // SAFETY: the awaited seal (or the caller's barrier discipline
+            // in the barriered schedule) hands the row off; inbox
+            // exclusivity is the caller's contract.
+            unsafe { self.drain_row(program, inbox, epoch, from) };
             self.drained += 1;
         }
         self.drained = 0;
@@ -846,6 +904,7 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
 
     /// Publish this worker's UDF-call count into the run totals.
     pub fn retire(self) {
+        // relaxed: monotone run total, read after the final thread join.
         self.rt.udf_calls.fetch_add(self.udf, Ordering::Relaxed);
     }
 }

@@ -44,19 +44,23 @@ pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
     out.extend_from_slice(b);
 }
 
-/// Read a length-prefixed byte slice.
+/// Read a length-prefixed byte slice. Infallible after the bounds checks —
+/// decoders sit on the request path of both transports, so a malformed frame
+/// must surface as a typed error, never a slice/`try_into` panic.
 pub fn get_bytes<'a>(buf: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
-    if *pos + 4 > buf.len() {
+    let p = *pos;
+    if buf.len().saturating_sub(p) < 4 {
         return Err(UniGpsError::Ipc("truncated frame (len)".into()));
     }
-    let len = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap()) as usize;
-    *pos += 4;
-    if *pos + len > buf.len() {
+    let mut lb = [0u8; 4];
+    lb.copy_from_slice(&buf[p..p + 4]);
+    let len = u32::from_le_bytes(lb) as usize;
+    let body = p + 4;
+    if buf.len().saturating_sub(body) < len {
         return Err(UniGpsError::Ipc("truncated frame (body)".into()));
     }
-    let s = &buf[*pos..*pos + len];
-    *pos += len;
-    Ok(s)
+    *pos = body + len;
+    Ok(&buf[body..body + len])
 }
 
 /// Append a `u32`.
@@ -64,14 +68,16 @@ pub fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Read a `u32`.
+/// Read a `u32` (bounds-checked, panic-free — see [`get_bytes`]).
 pub fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
-    if *pos + 4 > buf.len() {
+    let p = *pos;
+    if buf.len().saturating_sub(p) < 4 {
         return Err(UniGpsError::Ipc("truncated frame (u32)".into()));
     }
-    let v = u32::from_le_bytes(buf[*pos..*pos + 4].try_into().unwrap());
-    *pos += 4;
-    Ok(v)
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&buf[p..p + 4]);
+    *pos = p + 4;
+    Ok(u32::from_le_bytes(b))
 }
 
 /// Append a `u64`.
@@ -79,14 +85,16 @@ pub fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Read a `u64`.
+/// Read a `u64` (bounds-checked, panic-free — see [`get_bytes`]).
 pub fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
-    if *pos + 8 > buf.len() {
+    let p = *pos;
+    if buf.len().saturating_sub(p) < 8 {
         return Err(UniGpsError::Ipc("truncated frame (u64)".into()));
     }
-    let v = u64::from_le_bytes(buf[*pos..*pos + 8].try_into().unwrap());
-    *pos += 8;
-    Ok(v)
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[p..p + 8]);
+    *pos = p + 8;
+    Ok(u64::from_le_bytes(b))
 }
 
 #[cfg(test)]

@@ -175,15 +175,18 @@ where
 impl<P: VCProg> RemoteVCProg<P> {
     /// Total remote calls made (the Fig 8d overhead driver).
     pub fn remote_calls(&self) -> u64 {
+        // relaxed: monotone metrics counter read after the run's threads join.
         self.calls.load(Ordering::Relaxed)
     }
 
     /// Round-robin a channel; falls through to the next on contention so
     /// workers rarely block each other.
     fn with_channel<T>(&self, f: impl FnOnce(&mut dyn RpcChannel) -> Result<T>) -> Result<T> {
+        // relaxed: call counter is metrics-only; the round-robin cursor needs
+        // atomicity, not ordering — any interleaving of starts is correct.
         self.calls.fetch_add(1, Ordering::Relaxed);
         let n = self.channels.len();
-        let start = self.next.fetch_add(1, Ordering::Relaxed) % n;
+        let start = self.next.fetch_add(1, Ordering::Relaxed) % n; // relaxed: as above
         for i in 0..n {
             if let Ok(mut guard) = self.channels[(start + i) % n].try_lock() {
                 return f(guard.as_mut());
@@ -249,9 +252,13 @@ where
         put_u32(&mut req, id);
         put_u64(&mut req, out_degree as u64);
         put_bytes(&mut req, &to_bytes(input));
+        // A failed runner RPC panics the engine worker; the scheduler's
+        // catch_unwind converts that into a Failed job, not a client frame.
+        // lint: allow-panic: infallible VCProg signature (paper's UDF API).
         let resp = self
             .with_channel(|ch| ch.call(method::INIT_VERTEX, &req))
             .expect("remote init_vertex_attr");
+        // lint: allow-panic: as above — malformed replies fail the job.
         from_bytes(&resp).expect("decode vprop")
     }
 
@@ -263,9 +270,12 @@ where
         let mut req = Vec::new();
         put_bytes(&mut req, &to_bytes(a));
         put_bytes(&mut req, &to_bytes(b));
+        // Runner failures abort the job via the engine's catch_unwind.
+        // lint: allow-panic: as in init_vertex_attr.
         let resp = self
             .with_channel(|ch| ch.call(method::MERGE, &req))
             .expect("remote merge_message");
+        // lint: allow-panic: as above.
         from_bytes(&resp).expect("decode msg")
     }
 
@@ -274,10 +284,13 @@ where
         put_u32(&mut req, iter);
         put_bytes(&mut req, &to_bytes(prop));
         put_bytes(&mut req, &to_bytes(msg));
+        // Runner failures abort the job via the engine's catch_unwind.
+        // lint: allow-panic: as in init_vertex_attr.
         let resp = self
             .with_channel(|ch| ch.call(method::COMPUTE, &req))
             .expect("remote vertex_compute");
         let mut pos = 0;
+        // lint: allow-panic: as above — malformed replies fail the job.
         let active = get_u32(&resp, &mut pos).expect("decode active") != 0;
         let prop_bytes = get_bytes(&resp, &mut pos).expect("decode prop bytes");
         (from_bytes(prop_bytes).expect("decode vprop"), active)
@@ -295,14 +308,18 @@ where
         put_u32(&mut req, dst);
         put_bytes(&mut req, &to_bytes(src_prop));
         put_bytes(&mut req, &to_bytes(edge_prop));
+        // Runner failures abort the job via the engine's catch_unwind.
+        // lint: allow-panic: as in init_vertex_attr.
         let resp = self
             .with_channel(|ch| ch.call(method::EMIT, &req))
             .expect("remote emit_message");
         let mut pos = 0;
+        // lint: allow-panic: as above — malformed replies fail the job.
         let has = get_u32(&resp, &mut pos).expect("decode emit flag");
         if has == 0 {
             None
         } else {
+            // lint: allow-panic: as above.
             let m = get_bytes(&resp, &mut pos).expect("decode msg bytes");
             Some(from_bytes(m).expect("decode msg"))
         }
@@ -322,13 +339,17 @@ where
             put_u32(&mut req, *dst);
             put_bytes(&mut req, &to_bytes(*ep));
         }
+        // Runner failures abort the job via the engine's catch_unwind.
+        // lint: allow-panic: as in init_vertex_attr.
         let resp = self
             .with_channel(|ch| ch.call(method::EMIT_BATCH, &req))
             .expect("remote emit_to_edges");
         let mut pos = 0;
+        // lint: allow-panic: as above — malformed replies fail the job.
         let count = get_u32(&resp, &mut pos).expect("decode count") as usize;
         let mut out = Vec::with_capacity(count);
         for _ in 0..count {
+            // lint: allow-panic: as above.
             let dst = get_u32(&resp, &mut pos).expect("decode dst");
             let m = get_bytes(&resp, &mut pos).expect("decode msg bytes");
             out.push((dst, from_bytes(m).expect("decode msg")));

@@ -197,6 +197,16 @@ pub fn build_program(spec: &str) -> Result<Box<dyn ByteProgram>> {
     })
 }
 
+/// The hosted program, or the typed error every pre-`INIT_PROGRAM` method
+/// call maps to. Client-reachable (a buggy client can send `COMPUTE` first),
+/// so this must never panic — regression-tested in `methods_before_init`.
+fn need(slot: &Option<Box<dyn ByteProgram>>) -> Result<&dyn ByteProgram> {
+    match slot {
+        Some(p) => Ok(p.as_ref()),
+        None => Err(UniGpsError::ipc("no program initialized")),
+    }
+}
+
 /// Dispatch one decoded request against the hosted program. Shared by both
 /// transports. Returns `(response, served_method)`.
 pub fn dispatch(
@@ -204,12 +214,6 @@ pub fn dispatch(
     m: u32,
     req: &[u8],
 ) -> Result<Vec<u8>> {
-    let need = |slot: &Option<Box<dyn ByteProgram>>| -> Result<()> {
-        if slot.is_none() {
-            return Err(UniGpsError::ipc("no program initialized"));
-        }
-        Ok(())
-    };
     match m {
         method::INIT_PROGRAM => {
             let spec = std::str::from_utf8(req)
@@ -217,51 +221,42 @@ pub fn dispatch(
             *program_slot = Some(build_program(spec)?);
             Ok(Vec::new())
         }
-        method::EMPTY_MESSAGE => {
-            need(program_slot)?;
-            program_slot.as_ref().unwrap().empty_message()
-        }
+        method::EMPTY_MESSAGE => need(program_slot)?.empty_message(),
         method::INIT_VERTEX => {
-            need(program_slot)?;
+            let prog = need(program_slot)?;
             let mut pos = 0;
             let id = get_u32(req, &mut pos)?;
             let deg = get_u64(req, &mut pos)?;
             let input = get_bytes(req, &mut pos)?;
-            program_slot.as_ref().unwrap().init_vertex_attr(id, deg, input)
+            prog.init_vertex_attr(id, deg, input)
         }
         method::MERGE => {
-            need(program_slot)?;
+            let prog = need(program_slot)?;
             let mut pos = 0;
             let a = get_bytes(req, &mut pos)?;
             let b = get_bytes(req, &mut pos)?;
-            program_slot.as_ref().unwrap().merge_message(a, b)
+            prog.merge_message(a, b)
         }
         method::COMPUTE => {
-            need(program_slot)?;
+            let prog = need(program_slot)?;
             let mut pos = 0;
             let iter = get_u32(req, &mut pos)?;
             let prop = get_bytes(req, &mut pos)?;
             let msg = get_bytes(req, &mut pos)?;
-            let (new_prop, active) = program_slot
-                .as_ref()
-                .unwrap()
-                .vertex_compute(prop, msg, iter)?;
+            let (new_prop, active) = prog.vertex_compute(prop, msg, iter)?;
             let mut out = Vec::with_capacity(new_prop.len() + 8);
             put_u32(&mut out, active as u32);
             put_bytes(&mut out, &new_prop);
             Ok(out)
         }
         method::EMIT => {
-            need(program_slot)?;
+            let prog = need(program_slot)?;
             let mut pos = 0;
             let src = get_u32(req, &mut pos)?;
             let dst = get_u32(req, &mut pos)?;
             let src_prop = get_bytes(req, &mut pos)?;
             let edge_prop = get_bytes(req, &mut pos)?;
-            let out_msg = program_slot
-                .as_ref()
-                .unwrap()
-                .emit_message(src, dst, src_prop, edge_prop)?;
+            let out_msg = prog.emit_message(src, dst, src_prop, edge_prop)?;
             let mut out = Vec::new();
             match out_msg {
                 Some(m) => {
@@ -273,7 +268,7 @@ pub fn dispatch(
             Ok(out)
         }
         method::EMIT_BATCH => {
-            need(program_slot)?;
+            let prog = need(program_slot)?;
             let mut pos = 0;
             let src = get_u32(req, &mut pos)?;
             let src_prop = get_bytes(req, &mut pos)?;
@@ -284,10 +279,7 @@ pub fn dispatch(
                 let ep = get_bytes(req, &mut pos)?;
                 edges.push((dst, ep));
             }
-            let msgs = program_slot
-                .as_ref()
-                .unwrap()
-                .emit_batch(src, src_prop, &edges)?;
+            let msgs = prog.emit_batch(src, src_prop, &edges)?;
             let mut out = Vec::new();
             put_u32(&mut out, msgs.len() as u32);
             for (dst, m) in msgs {
@@ -369,6 +361,28 @@ mod tests {
         assert_eq!(dispatch(&mut slot, method::PING, b"xyz").unwrap(), b"xyz");
         // Unknown method.
         assert!(dispatch(&mut slot, 99, b"").is_err());
+    }
+
+    #[test]
+    fn methods_before_init_are_typed_errors() {
+        // Regression: every program method sent before INIT_PROGRAM must come
+        // back as a typed IPC error (previously routed through an `unwrap()`
+        // on the program slot) — a buggy client must not crash the runner.
+        for m in [
+            method::EMPTY_MESSAGE,
+            method::INIT_VERTEX,
+            method::MERGE,
+            method::COMPUTE,
+            method::EMIT,
+            method::EMIT_BATCH,
+        ] {
+            let mut slot = None;
+            let err = dispatch(&mut slot, m, b"").unwrap_err();
+            assert!(
+                err.to_string().contains("no program initialized"),
+                "method {m}: {err}"
+            );
+        }
     }
 
     #[test]

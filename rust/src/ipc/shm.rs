@@ -144,6 +144,7 @@ impl ShmMap {
     pub fn unique_path(tag: &str) -> PathBuf {
         use std::sync::atomic::{AtomicU64, Ordering};
         static COUNTER: AtomicU64 = AtomicU64::new(0);
+        // relaxed: uniqueness needs atomicity only; no other state piggybacks.
         let c = COUNTER.fetch_add(1, Ordering::Relaxed);
         let base = if Path::new("/dev/shm").is_dir() {
             PathBuf::from("/dev/shm")

@@ -78,8 +78,8 @@ pub fn write_frame(w: &mut impl Write, head: u32, payload: &[u8]) -> Result<()> 
 pub fn read_frame_limited(r: &mut impl Read, max_len: usize) -> Result<(u32, Vec<u8>)> {
     let mut head = [0u8; 8];
     r.read_exact(&mut head)?;
-    let tag = u32::from_le_bytes(head[0..4].try_into().unwrap());
-    let len = u32::from_le_bytes(head[4..8].try_into().unwrap()) as usize;
+    let tag = u32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+    let len = u32::from_le_bytes([head[4], head[5], head[6], head[7]]) as usize;
     if len > max_len {
         return Err(UniGpsError::ipc(format!(
             "frame length {len} exceeds limit {max_len}; rejecting before allocation"

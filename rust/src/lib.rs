@@ -64,6 +64,11 @@
 //! println!("{top:?}");
 //! ```
 
+// Every `unsafe` operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own `// SAFETY:` justification — enforced here
+// and audited by `unigps-lint` (see `docs/concurrency.md`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod client;
 pub mod config;
 pub mod distributed;

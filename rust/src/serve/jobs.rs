@@ -128,6 +128,9 @@ impl JobSpec {
 
     /// The job's graph source (always present after validation).
     pub fn dataset(&self) -> &DatasetRef {
+        // lint: allow-panic: every JobSpec constructor rejects a source-less
+        // plan (`no_source`) at admission, so this is invariant-checked —
+        // never reachable from a client frame.
         self.plan.source.as_ref().expect("validated: source present")
     }
 }

@@ -32,8 +32,9 @@ use crate::serve::cache::SnapshotCache;
 use crate::serve::jobs::{JobId, JobSpec, JobState, JobStatus};
 use crate::serve::ServeConfig;
 use crate::session::Session;
+use crate::util::sync::{Condvar, Mutex};
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -131,6 +132,8 @@ impl Scheduler {
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("unigps-slot-{slot}"))
+                    // lint: allow-panic: slots spawn once at server startup,
+                    // never on a client request path.
                     .spawn(move || runner_loop(&shared))
                     .expect("spawn scheduler slot")
             })
@@ -248,6 +251,8 @@ impl Scheduler {
             .get(&id)
             .ok_or_else(|| UniGpsError::serve(format!("unknown job {id}")))?;
         match rec.state {
+            // lint: allow-panic: Done ⇒ result was set by the runner (an
+            // invariant of runner_loop), unreachable from client input.
             JobState::Done => Ok(rec.result.clone().expect("done job has a result")),
             JobState::Failed => Err(UniGpsError::serve(format!(
                 "job {id} failed: {}",
@@ -316,6 +321,9 @@ fn runner_loop(shared: &Shared) {
         };
         let spec = {
             let mut inner = shared.inner.lock().unwrap();
+            // lint: allow-panic: queued ids always have records (submit_spec
+            // inserts the record before queueing); a violation is a
+            // scheduler bug, not a client-reachable state.
             let rec = inner.jobs.get_mut(&id).expect("queued job has a record");
             rec.state = JobState::Running;
             rec.spec.clone()
@@ -338,12 +346,16 @@ fn runner_loop(shared: &Shared) {
         match outcome {
             Ok(result) => {
                 inner.completed += 1;
+                // lint: allow-panic: running jobs keep their records —
+                // eviction only ever touches terminal jobs.
                 let rec = inner.jobs.get_mut(&id).expect("running job has a record");
                 rec.state = JobState::Done;
                 rec.result = Some(Arc::new(result));
             }
             Err(e) => {
                 inner.failed += 1;
+                // lint: allow-panic: running jobs keep their records —
+                // eviction only ever touches terminal jobs.
                 let rec = inner.jobs.get_mut(&id).expect("running job has a record");
                 rec.state = JobState::Failed;
                 rec.error = Some(e.to_string());

@@ -9,8 +9,10 @@
 
 pub mod bench;
 pub mod json;
+pub mod model;
 pub mod propcheck;
 pub mod rng;
+pub mod sync;
 pub mod timer;
 
 /// Format a byte count with binary units.

@@ -1,0 +1,1334 @@
+//! In-house schedule-exploring model checker (the engine behind
+//! [`crate::util::sync`]).
+//!
+//! The crate's lock-free runtime — FlatBoard seal epochs, the superstep
+//! counting gates, the serve scheduler's condvars — rests on hand-reasoned
+//! release/acquire protocols. This module makes those protocols checkable
+//! without any third-party dependency (no loom, no shuttle): a test wraps
+//! its threads in an [`Explorer`], each thread registers with the per-run
+//! [`Session`], and every operation on the instrumented sync types below
+//! becomes a *scheduling point* where a deterministic virtual scheduler
+//! decides which thread runs next.
+//!
+//! ## How scheduling works
+//!
+//! Real OS threads take turns under a single token. At every instrumented
+//! operation the running thread calls back into the scheduler, which picks
+//! the next thread to run — either pseudo-randomly from a per-schedule seed
+//! ([`Strategy::Random`]) or by depth-first enumeration of every choice
+//! sequence ([`Strategy::Exhaustive`], for tiny spin-free protocols). Every
+//! thread is always runnable: the model [`Mutex`] spins on `try_lock` under
+//! the token, [`Condvar::wait`] is modeled as a legal spurious wakeup
+//! (unlock → reschedule → relock), and lost-progress bugs surface as a
+//! per-schedule step-budget exhaustion instead of a hang.
+//!
+//! ## How race detection works
+//!
+//! Every thread carries a vector clock. Release stores publish the writer's
+//! clock on the atomic; acquire loads join it; **`Relaxed` accesses carry no
+//! clock** — which is exactly what makes a wrongly-relaxed publication
+//! detectable. Plain (non-atomic) accesses that the protocol is supposed to
+//! protect are declared with [`trace_write`]/[`trace_read`]; the checker
+//! keeps FastTrack-style read/write vectors per location and reports a data
+//! race whenever an access is not ordered after every previous conflicting
+//! access.
+//!
+//! The model is sequentially consistent over atomic *values* (weak-memory
+//! value reordering is out of scope — a documented limitation, see
+//! `docs/concurrency.md`); what it explores exhaustively is interleaving
+//! nondeterminism, and what it verifies is the happens-before structure the
+//! orderings are supposed to build.
+//!
+//! This module is always compiled (the smoke tests in
+//! `rust/tests/model_check.rs` drive protocol replicas against these types
+//! directly); the `unigps_model` cfg only controls whether
+//! [`crate::util::sync`] re-exports these types in place of `std`'s.
+#![warn(missing_docs)]
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::mem::ManuallyDrop;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{
+    Arc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard, Once,
+    PoisonError, TryLockError,
+};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Vector clocks
+// ---------------------------------------------------------------------------
+
+type Clock = Vec<u64>;
+
+fn join_into(into: &mut Clock, other: &[u64]) {
+    if into.len() < other.len() {
+        into.resize(other.len(), 0);
+    }
+    for (i, &v) in other.iter().enumerate() {
+        if into[i] < v {
+            into[i] = v;
+        }
+    }
+}
+
+/// `a ≤ c` pointwise (missing entries are zero).
+fn dominated(a: &[u64], c: &[u64]) -> bool {
+    a.iter().enumerate().all(|(i, &v)| v <= c.get(i).copied().unwrap_or(0))
+}
+
+fn acquires(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn releases(ord: Ordering) -> bool {
+    matches!(ord, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+// ---------------------------------------------------------------------------
+// The virtual scheduler
+// ---------------------------------------------------------------------------
+
+enum Choice {
+    /// xorshift64 state; one stream per schedule.
+    Random(u64),
+    /// Depth-first enumeration: replay this choice prefix, then take the
+    /// first option at every new depth.
+    Exhaustive { replay: Vec<usize> },
+}
+
+struct SchedInner {
+    expected: usize,
+    registered: usize,
+    alive: Vec<bool>,
+    started: bool,
+    current: usize,
+    steps: u64,
+    budget: u64,
+    abort: Option<String>,
+    /// Every choice made this schedule, as `(chosen, n_options)`.
+    trace: Vec<(usize, usize)>,
+    choice: Choice,
+    schedule_hash: u64,
+    clocks: Vec<Clock>,
+    /// Traced plain-memory locations: address → (write clock, read clock).
+    locs: HashMap<usize, (Clock, Clock)>,
+}
+
+impl SchedInner {
+    fn fail(&mut self, msg: String) {
+        if self.abort.is_none() {
+            self.abort = Some(msg);
+        }
+    }
+
+    fn runnable(&self) -> Vec<usize> {
+        self.alive
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &a)| if a { Some(i) } else { None })
+            .collect()
+    }
+
+    /// Make (and record) one scheduling choice among `n` options.
+    fn choose(&mut self, n: usize) -> usize {
+        let depth = self.trace.len();
+        let c = match &mut self.choice {
+            Choice::Random(state) => {
+                if n <= 1 {
+                    0
+                } else {
+                    *state ^= *state << 13;
+                    *state ^= *state >> 7;
+                    *state ^= *state << 17;
+                    (*state % n as u64) as usize
+                }
+            }
+            Choice::Exhaustive { replay } => replay.get(depth).copied().unwrap_or(0),
+        };
+        let c = c.min(n.saturating_sub(1));
+        self.trace.push((c, n));
+        self.schedule_hash = self
+            .schedule_hash
+            .wrapping_mul(0x0000_0100_0000_01b3)
+            .wrapping_add(((c as u64) << 8) | n as u64);
+        c
+    }
+}
+
+/// Panic payload used to unwind a thread out of an aborted schedule. The
+/// [`Explorer`] installs a panic hook that keeps these quiet.
+struct ModelAbort;
+
+fn abort_schedule() -> ! {
+    panic::panic_any(ModelAbort)
+}
+
+/// How long a thread waits on the token condvar before suspecting the model
+/// itself is stuck (a backstop against checker bugs, not a protocol timeout).
+const WAIT_SLICE: Duration = Duration::from_millis(50);
+const WAIT_DEADLINE_SLICES: u32 = 200;
+
+/// One model-checking run: the token-passing scheduler plus all per-run
+/// state (vector clocks, traced locations, the choice trace).
+///
+/// Created by [`Explorer::run`] and handed to the test body, which spawns
+/// its scoped threads and has each call [`Session::register`].
+pub struct Session {
+    inner: StdMutex<SchedInner>,
+    cv: StdCondvar,
+}
+
+struct Ctx {
+    sess: Arc<Session>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn current_ctx() -> Option<(Arc<Session>, usize)> {
+    CTX.with(|c| c.borrow().as_ref().map(|x| (Arc::clone(&x.sess), x.tid)))
+}
+
+impl Session {
+    fn new(threads: usize, budget: u64, choice: Choice) -> Session {
+        let clocks = (0..threads)
+            .map(|t| {
+                let mut c = vec![0; threads];
+                c[t] = 1;
+                c
+            })
+            .collect();
+        Session {
+            inner: StdMutex::new(SchedInner {
+                expected: threads,
+                registered: 0,
+                alive: vec![false; threads],
+                started: false,
+                current: 0,
+                steps: 0,
+                budget,
+                abort: None,
+                trace: Vec::new(),
+                choice,
+                schedule_hash: 0xcbf2_9ce4_8422_2325,
+                clocks,
+                locs: HashMap::new(),
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn lock_inner(&self) -> StdMutexGuard<'_, SchedInner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Enter the model as worker `tid` (0-based, unique per thread). Blocks
+    /// until all expected workers have registered, then returns a guard
+    /// whose `Drop` deregisters the thread and hands the token on — so a
+    /// panicking worker never wedges its siblings.
+    pub fn register(self: &Arc<Session>, tid: usize) -> Registration {
+        CTX.with(|c| {
+            *c.borrow_mut() = Some(Ctx { sess: Arc::clone(self), tid });
+        });
+        let mut g = self.lock_inner();
+        if tid >= g.expected || g.alive[tid] {
+            g.fail(format!("bad or duplicate registration of model worker {tid}"));
+            drop(g);
+            self.cv.notify_all();
+            abort_schedule();
+        }
+        g.alive[tid] = true;
+        g.registered += 1;
+        if g.registered == g.expected {
+            g.started = true;
+            let opts = g.runnable();
+            let i = g.choose(opts.len());
+            g.current = opts[i];
+            self.cv.notify_all();
+        }
+        let mut slices = 0u32;
+        while !(g.started && g.current == tid) {
+            if g.abort.is_some() {
+                drop(g);
+                self.cv.notify_all();
+                abort_schedule();
+            }
+            let (ng, to) = self
+                .cv
+                .wait_timeout(g, WAIT_SLICE)
+                .unwrap_or_else(PoisonError::into_inner);
+            g = ng;
+            if to.timed_out() {
+                slices += 1;
+                if slices > WAIT_DEADLINE_SLICES {
+                    g.fail("model scheduler stalled during registration".to_string());
+                    drop(g);
+                    self.cv.notify_all();
+                    abort_schedule();
+                }
+            }
+        }
+        Registration { _priv: () }
+    }
+
+    fn sync_acquire(&self, tid: usize, sync: &StdMutex<Clock>) {
+        let mut g = self.lock_inner();
+        let s = sync.lock().unwrap_or_else(PoisonError::into_inner);
+        join_into(&mut g.clocks[tid], &s);
+    }
+
+    /// Clock effect of a plain atomic store: a release publishes the
+    /// writer's clock; anything weaker erases the location's clock — there
+    /// is no happens-before edge for a later acquire to pick up.
+    fn sync_store(&self, tid: usize, sync: &StdMutex<Clock>, ord: Ordering) {
+        let mut g = self.lock_inner();
+        let mut s = sync.lock().unwrap_or_else(PoisonError::into_inner);
+        if releases(ord) {
+            *s = g.clocks[tid].clone();
+            g.clocks[tid][tid] += 1;
+        } else {
+            s.clear();
+        }
+    }
+
+    /// Clock effect of a read-modify-write. Unlike a store, a relaxed RMW
+    /// *keeps* the location's clock: it continues the release sequence
+    /// headed by the last release store (C++20 §intro.races), which is what
+    /// lets relaxed `fetch_add` chains on a gate stay sound when the gate
+    /// value itself is published by a release op.
+    fn sync_rmw(&self, tid: usize, sync: &StdMutex<Clock>, ord: Ordering) {
+        let mut g = self.lock_inner();
+        let mut s = sync.lock().unwrap_or_else(PoisonError::into_inner);
+        if acquires(ord) {
+            join_into(&mut g.clocks[tid], &s);
+        }
+        if releases(ord) {
+            let snapshot = g.clocks[tid].clone();
+            join_into(&mut s, &snapshot);
+            g.clocks[tid][tid] += 1;
+        }
+    }
+}
+
+/// Guard returned by [`Session::register`]; dropping it (normally or during
+/// a panic) deregisters the worker and hands the token to a live sibling.
+pub struct Registration {
+    _priv: (),
+}
+
+impl Drop for Registration {
+    fn drop(&mut self) {
+        let ctx = CTX.with(|c| c.borrow_mut().take());
+        if let Some(ctx) = ctx {
+            let mut g = ctx.sess.lock_inner();
+            if ctx.tid < g.alive.len() && g.alive[ctx.tid] {
+                g.alive[ctx.tid] = false;
+                if g.current == ctx.tid {
+                    if let Some(next) = g.alive.iter().position(|&a| a) {
+                        g.current = next;
+                    }
+                }
+            }
+            drop(g);
+            ctx.sess.cv.notify_all();
+        }
+    }
+}
+
+/// The heart of the model: every instrumented operation lands here. Counts
+/// the step against the schedule budget, picks the next thread to run, and
+/// blocks until the token comes back (or the schedule aborts).
+fn yield_point(sess: &Arc<Session>, tid: usize) {
+    let mut g = sess.lock_inner();
+    if g.abort.is_some() {
+        drop(g);
+        sess.cv.notify_all();
+        abort_schedule();
+    }
+    g.steps += 1;
+    if g.steps > g.budget {
+        let budget = g.budget;
+        g.fail(format!(
+            "schedule budget of {budget} steps exhausted (livelock, deadlock, or unbounded spin)"
+        ));
+        drop(g);
+        sess.cv.notify_all();
+        abort_schedule();
+    }
+    let opts = g.runnable();
+    if opts.is_empty() {
+        return;
+    }
+    let i = g.choose(opts.len());
+    let next = opts[i];
+    if next != tid {
+        g.current = next;
+        sess.cv.notify_all();
+        let mut slices = 0u32;
+        while g.current != tid {
+            if g.abort.is_some() {
+                drop(g);
+                sess.cv.notify_all();
+                abort_schedule();
+            }
+            let (ng, to) = sess
+                .cv
+                .wait_timeout(g, WAIT_SLICE)
+                .unwrap_or_else(PoisonError::into_inner);
+            g = ng;
+            if to.timed_out() {
+                slices += 1;
+                if slices > WAIT_DEADLINE_SLICES {
+                    g.fail("model scheduler stalled waiting for the token".to_string());
+                    drop(g);
+                    sess.cv.notify_all();
+                    abort_schedule();
+                }
+            }
+        }
+    }
+    if g.abort.is_some() {
+        drop(g);
+        sess.cv.notify_all();
+        abort_schedule();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traced plain-memory accesses (FastTrack-style race detection)
+// ---------------------------------------------------------------------------
+
+/// Declare a plain (non-atomic) write to `addr` that the surrounding
+/// protocol is supposed to order. Outside a model session this is a no-op;
+/// inside one it is a scheduling point plus a race check: the write must
+/// happen-after every previous read *and* write of the same address.
+pub fn trace_write(addr: usize) {
+    if let Some((s, t)) = current_ctx() {
+        yield_point(&s, t);
+        let mut g = s.lock_inner();
+        let inner = &mut *g;
+        let me = &inner.clocks[t];
+        let epoch = me[t];
+        let (w, r) = inner.locs.entry(addr).or_default();
+        if !(dominated(w, me) && dominated(r, me)) {
+            inner.fail(format!(
+                "data race: unsynchronized write to traced location {addr:#x} by worker {t}"
+            ));
+            drop(g);
+            s.cv.notify_all();
+            abort_schedule();
+        }
+        let (w, _) = inner.locs.entry(addr).or_default();
+        if w.len() <= t {
+            w.resize(t + 1, 0);
+        }
+        w[t] = epoch;
+    }
+}
+
+/// Declare a plain (non-atomic) read of `addr`; must happen-after every
+/// previous write of the same address. No-op outside a model session.
+pub fn trace_read(addr: usize) {
+    if let Some((s, t)) = current_ctx() {
+        yield_point(&s, t);
+        let mut g = s.lock_inner();
+        let inner = &mut *g;
+        let me = &inner.clocks[t];
+        let epoch = me[t];
+        let (w, _) = inner.locs.entry(addr).or_default();
+        if !dominated(w, me) {
+            inner.fail(format!(
+                "data race: unsynchronized read of traced location {addr:#x} by worker {t}"
+            ));
+            drop(g);
+            s.cv.notify_all();
+            abort_schedule();
+        }
+        let (_, r) = inner.locs.entry(addr).or_default();
+        if r.len() <= t {
+            r.resize(t + 1, 0);
+        }
+        r[t] = epoch;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented atomics
+// ---------------------------------------------------------------------------
+
+macro_rules! model_int_atomic {
+    ($(#[$doc:meta])* $name:ident, $std:ident, $ty:ty) => {
+        $(#[$doc])*
+        pub struct $name {
+            v: std::sync::atomic::$std,
+            sync: StdMutex<Clock>,
+        }
+
+        impl $name {
+            /// Create with an initial value.
+            pub const fn new(v: $ty) -> Self {
+                Self { v: std::sync::atomic::$std::new(v), sync: StdMutex::new(Vec::new()) }
+            }
+
+            /// Atomic load; an acquire joins the location's published clock.
+            pub fn load(&self, ord: Ordering) -> $ty {
+                match current_ctx() {
+                    Some((s, t)) => {
+                        yield_point(&s, t);
+                        let v = self.v.load(Ordering::SeqCst);
+                        if acquires(ord) {
+                            s.sync_acquire(t, &self.sync);
+                        }
+                        v
+                    }
+                    None => self.v.load(ord),
+                }
+            }
+
+            /// Atomic store; a release publishes the writer's clock, weaker
+            /// orderings erase it.
+            pub fn store(&self, v: $ty, ord: Ordering) {
+                match current_ctx() {
+                    Some((s, t)) => {
+                        yield_point(&s, t);
+                        self.v.store(v, Ordering::SeqCst);
+                        s.sync_store(t, &self.sync, ord);
+                    }
+                    None => self.v.store(v, ord),
+                }
+            }
+
+            /// Atomic swap (read-modify-write clock semantics).
+            pub fn swap(&self, v: $ty, ord: Ordering) -> $ty {
+                match current_ctx() {
+                    Some((s, t)) => {
+                        yield_point(&s, t);
+                        let old = self.v.swap(v, Ordering::SeqCst);
+                        s.sync_rmw(t, &self.sync, ord);
+                        old
+                    }
+                    None => self.v.swap(v, ord),
+                }
+            }
+
+            /// Atomic add, returning the previous value.
+            pub fn fetch_add(&self, d: $ty, ord: Ordering) -> $ty {
+                match current_ctx() {
+                    Some((s, t)) => {
+                        yield_point(&s, t);
+                        let old = self.v.fetch_add(d, Ordering::SeqCst);
+                        s.sync_rmw(t, &self.sync, ord);
+                        old
+                    }
+                    None => self.v.fetch_add(d, ord),
+                }
+            }
+
+            /// Atomic bitwise or, returning the previous value.
+            pub fn fetch_or(&self, d: $ty, ord: Ordering) -> $ty {
+                match current_ctx() {
+                    Some((s, t)) => {
+                        yield_point(&s, t);
+                        let old = self.v.fetch_or(d, Ordering::SeqCst);
+                        s.sync_rmw(t, &self.sync, ord);
+                        old
+                    }
+                    None => self.v.fetch_or(d, ord),
+                }
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, "{}({})", stringify!($name), self.v.load(Ordering::SeqCst))
+            }
+        }
+    };
+}
+
+model_int_atomic!(
+    /// Model-checked stand-in for [`std::sync::atomic::AtomicU64`].
+    AtomicU64,
+    AtomicU64,
+    u64
+);
+model_int_atomic!(
+    /// Model-checked stand-in for [`std::sync::atomic::AtomicUsize`].
+    AtomicUsize,
+    AtomicUsize,
+    usize
+);
+model_int_atomic!(
+    /// Model-checked stand-in for [`std::sync::atomic::AtomicU32`].
+    AtomicU32,
+    AtomicU32,
+    u32
+);
+
+/// Model-checked stand-in for [`std::sync::atomic::AtomicBool`].
+pub struct AtomicBool {
+    v: std::sync::atomic::AtomicBool,
+    sync: StdMutex<Clock>,
+}
+
+impl AtomicBool {
+    /// Create with an initial value.
+    pub const fn new(v: bool) -> Self {
+        Self { v: std::sync::atomic::AtomicBool::new(v), sync: StdMutex::new(Vec::new()) }
+    }
+
+    /// Atomic load; an acquire joins the location's published clock.
+    pub fn load(&self, ord: Ordering) -> bool {
+        match current_ctx() {
+            Some((s, t)) => {
+                yield_point(&s, t);
+                let v = self.v.load(Ordering::SeqCst);
+                if acquires(ord) {
+                    s.sync_acquire(t, &self.sync);
+                }
+                v
+            }
+            None => self.v.load(ord),
+        }
+    }
+
+    /// Atomic store; a release publishes the writer's clock.
+    pub fn store(&self, v: bool, ord: Ordering) {
+        match current_ctx() {
+            Some((s, t)) => {
+                yield_point(&s, t);
+                self.v.store(v, Ordering::SeqCst);
+                s.sync_store(t, &self.sync, ord);
+            }
+            None => self.v.store(v, ord),
+        }
+    }
+
+    /// Atomic swap (read-modify-write clock semantics).
+    pub fn swap(&self, v: bool, ord: Ordering) -> bool {
+        match current_ctx() {
+            Some((s, t)) => {
+                yield_point(&s, t);
+                let old = self.v.swap(v, Ordering::SeqCst);
+                s.sync_rmw(t, &self.sync, ord);
+                old
+            }
+            None => self.v.swap(v, ord),
+        }
+    }
+}
+
+impl std::fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AtomicBool({})", self.v.load(Ordering::SeqCst))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented Mutex / Condvar / Barrier
+// ---------------------------------------------------------------------------
+
+/// Model-checked stand-in for [`std::sync::Mutex`]. Under a session the
+/// lock spins on `try_lock` at scheduling points (every thread stays
+/// runnable; a real deadlock surfaces as budget exhaustion); outside a
+/// session it behaves exactly like `std`'s.
+pub struct Mutex<T: ?Sized> {
+    sync: StdMutex<Clock>,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    /// Create a new mutex.
+    pub const fn new(v: T) -> Self {
+        Self { sync: StdMutex::new(Vec::new()), inner: StdMutex::new(v) }
+    }
+
+    /// Consume the mutex, returning the inner value.
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    /// Acquire the lock (see type docs for model semantics).
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match current_ctx() {
+            Some((s, t)) => loop {
+                yield_point(&s, t);
+                match self.inner.try_lock() {
+                    Ok(g) => {
+                        s.sync_acquire(t, &self.sync);
+                        return Ok(MutexGuard { g: ManuallyDrop::new(g), lock: self });
+                    }
+                    Err(TryLockError::WouldBlock) => continue,
+                    Err(TryLockError::Poisoned(p)) => {
+                        s.sync_acquire(t, &self.sync);
+                        let g = MutexGuard { g: ManuallyDrop::new(p.into_inner()), lock: self };
+                        return Err(PoisonError::new(g));
+                    }
+                }
+            },
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { g: ManuallyDrop::new(g), lock: self }),
+                Err(p) => {
+                    let g = MutexGuard { g: ManuallyDrop::new(p.into_inner()), lock: self };
+                    Err(PoisonError::new(g))
+                }
+            },
+        }
+    }
+}
+
+/// Guard for the model [`Mutex`]; unlocking publishes the holder's clock
+/// (lock/unlock are release/acquire pairs, as in the real thing).
+pub struct MutexGuard<'a, T: ?Sized> {
+    g: ManuallyDrop<StdMutexGuard<'a, T>>,
+    lock: &'a Mutex<T>,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    fn into_std(mut self) -> (StdMutexGuard<'a, T>, &'a Mutex<T>) {
+        // SAFETY: the guard is taken exactly once; `self` is forgotten
+        // immediately after, so `Drop` never sees the emptied slot.
+        let g = unsafe { ManuallyDrop::take(&mut self.g) };
+        let lock = self.lock;
+        std::mem::forget(self);
+        (g, lock)
+    }
+
+    fn from_std(g: StdMutexGuard<'a, T>, lock: &'a Mutex<T>) -> Self {
+        MutexGuard { g: ManuallyDrop::new(g), lock }
+    }
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.g
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.g
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if let Some((s, t)) = current_ctx() {
+            // Unlock is a release: publish, never panic (this may run
+            // during unwinding).
+            s.sync_store(t, &self.lock.sync, Ordering::Release);
+        }
+        // SAFETY: `into_std` forgets `self`, so when `drop` runs the slot
+        // still holds the guard and this is its only drop.
+        unsafe { ManuallyDrop::drop(&mut self.g) }
+    }
+}
+
+/// Result of [`Condvar::wait_timeout`] (mirrors
+/// [`std::sync::WaitTimeoutResult`], which cannot be constructed outside
+/// `std`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    /// True when the wait ended by timeout rather than notification.
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-checked stand-in for [`std::sync::Condvar`]. Under a session,
+/// `wait` is modeled as a spurious wakeup — unlock, reschedule, relock —
+/// which is a legal behavior of the real condvar, so any protocol correct
+/// under the model's waits is correct under `std`'s (waiters must recheck
+/// their predicate either way).
+pub struct Condvar {
+    cv: StdCondvar,
+}
+
+impl Condvar {
+    /// Create a new condition variable.
+    pub const fn new() -> Self {
+        Self { cv: StdCondvar::new() }
+    }
+
+    /// Wait (model: spurious wakeup; see type docs).
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        match current_ctx() {
+            Some(_) => {
+                let lock = guard.lock;
+                drop(guard);
+                lock.lock()
+            }
+            None => {
+                let (g, lock) = guard.into_std();
+                match self.cv.wait(g) {
+                    Ok(g) => Ok(MutexGuard::from_std(g, lock)),
+                    Err(p) => Err(PoisonError::new(MutexGuard::from_std(p.into_inner(), lock))),
+                }
+            }
+        }
+    }
+
+    /// Wait with a timeout (model: immediate spurious wakeup, not timed
+    /// out — callers recheck predicates and deadlines themselves).
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match current_ctx() {
+            Some(_) => {
+                let lock = guard.lock;
+                drop(guard);
+                match lock.lock() {
+                    Ok(g) => Ok((g, WaitTimeoutResult(false))),
+                    Err(p) => Err(PoisonError::new((p.into_inner(), WaitTimeoutResult(false)))),
+                }
+            }
+            None => {
+                let (g, lock) = guard.into_std();
+                match self.cv.wait_timeout(g, dur) {
+                    Ok((g, to)) => Ok((
+                        MutexGuard::from_std(g, lock),
+                        WaitTimeoutResult(to.timed_out()),
+                    )),
+                    Err(p) => {
+                        let (g, to) = p.into_inner();
+                        Err(PoisonError::new((
+                            MutexGuard::from_std(g, lock),
+                            WaitTimeoutResult(to.timed_out()),
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wake one waiter (no-op under the model: waits are spurious).
+    pub fn notify_one(&self) {
+        self.cv.notify_one();
+    }
+
+    /// Wake all waiters (no-op under the model: waits are spurious).
+    pub fn notify_all(&self) {
+        self.cv.notify_all();
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Result of [`Barrier::wait`] (mirrors [`std::sync::BarrierWaitResult`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BarrierWaitResult(bool);
+
+impl BarrierWaitResult {
+    /// True for exactly one arriver per barrier generation.
+    pub fn is_leader(&self) -> bool {
+        self.0
+    }
+}
+
+struct BarrierState {
+    count: usize,
+    generation: u64,
+}
+
+/// Model-checked stand-in for [`std::sync::Barrier`]. Under a session,
+/// non-leaders spin on the generation counter at scheduling points; the
+/// barrier is a full release/acquire rendezvous (everyone's clock joins
+/// everyone's), exactly like the real thing.
+pub struct Barrier {
+    n: usize,
+    st: StdMutex<BarrierState>,
+    cv: StdCondvar,
+    sync: StdMutex<Clock>,
+}
+
+impl Barrier {
+    /// Create a barrier for `n` participants.
+    pub fn new(n: usize) -> Self {
+        Self {
+            n: n.max(1),
+            st: StdMutex::new(BarrierState { count: 0, generation: 0 }),
+            cv: StdCondvar::new(),
+            sync: StdMutex::new(Vec::new()),
+        }
+    }
+
+    /// Arrive and wait for the full cohort.
+    pub fn wait(&self) -> BarrierWaitResult {
+        match current_ctx() {
+            Some((s, t)) => {
+                yield_point(&s, t);
+                // Publish my clock into the barrier and take a ticket.
+                {
+                    let g = s.lock_inner();
+                    let mut sy = self.sync.lock().unwrap_or_else(PoisonError::into_inner);
+                    join_into(&mut sy, &g.clocks[t]);
+                }
+                let (gen, leader) = {
+                    let mut st = self.st.lock().unwrap_or_else(PoisonError::into_inner);
+                    st.count += 1;
+                    let leader = st.count == self.n;
+                    let gen = st.generation;
+                    if leader {
+                        st.count = 0;
+                        st.generation += 1;
+                        self.cv.notify_all();
+                    }
+                    (gen, leader)
+                };
+                if !leader {
+                    loop {
+                        yield_point(&s, t);
+                        let st = self.st.lock().unwrap_or_else(PoisonError::into_inner);
+                        if st.generation != gen {
+                            break;
+                        }
+                    }
+                }
+                // Acquire the cohort's merged clock and start a new epoch.
+                {
+                    let mut g = s.lock_inner();
+                    let sy = self.sync.lock().unwrap_or_else(PoisonError::into_inner);
+                    join_into(&mut g.clocks[t], &sy);
+                    g.clocks[t][t] += 1;
+                }
+                BarrierWaitResult(leader)
+            }
+            None => {
+                let mut st = self.st.lock().unwrap_or_else(PoisonError::into_inner);
+                let gen = st.generation;
+                st.count += 1;
+                if st.count == self.n {
+                    st.count = 0;
+                    st.generation += 1;
+                    self.cv.notify_all();
+                    BarrierWaitResult(true)
+                } else {
+                    while st.generation == gen {
+                        st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                    }
+                    BarrierWaitResult(false)
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The explorer
+// ---------------------------------------------------------------------------
+
+/// Exploration strategy for [`Explorer`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Seeded pseudo-random choice at every scheduling point; each schedule
+    /// gets an independent stream derived from the base seed.
+    Random,
+    /// Depth-first enumeration of *every* choice sequence. Only for tiny,
+    /// spin-free protocols — spinning makes the choice tree infinite.
+    Exhaustive,
+}
+
+/// Outcome of an [`Explorer::run`].
+#[derive(Debug)]
+pub struct Report {
+    /// Schedules actually executed.
+    pub schedules_run: usize,
+    /// Distinct choice sequences among them (hash-based).
+    pub distinct_schedules: usize,
+    /// One entry per failing schedule: detected data races, assertion
+    /// failures inside the test body, budget exhaustion.
+    pub failures: Vec<String>,
+    /// True when exhaustive exploration enumerated the full tree.
+    pub complete: bool,
+}
+
+impl Report {
+    /// Panic with the collected failures unless every schedule passed.
+    pub fn assert_clean(&self) {
+        assert!(
+            self.failures.is_empty(),
+            "{} of {} schedules failed; first: {}",
+            self.failures.len(),
+            self.schedules_run,
+            self.failures.first().map(String::as_str).unwrap_or("")
+        );
+    }
+}
+
+/// Drives a closure through many schedules, one fresh [`Session`] each.
+///
+/// ```
+/// use unigps::util::model::{AtomicU64, Explorer};
+/// use std::sync::atomic::Ordering;
+///
+/// let report = Explorer::new(2).schedules(64).run(|sess| {
+///     let counter = AtomicU64::new(0);
+///     std::thread::scope(|s| {
+///         for tid in 0..2 {
+///             let counter = &counter;
+///             s.spawn(move || {
+///                 let _reg = sess.register(tid);
+///                 counter.fetch_add(1, Ordering::AcqRel);
+///             });
+///         }
+///     });
+///     assert_eq!(counter.load(Ordering::Acquire), 2);
+/// });
+/// report.assert_clean();
+/// ```
+pub struct Explorer {
+    threads: usize,
+    schedules: usize,
+    seed: u64,
+    budget: u64,
+    strategy: Strategy,
+}
+
+impl Explorer {
+    /// Explore protocols among `threads` registered workers. Defaults:
+    /// 256 random schedules, 200k steps each.
+    pub fn new(threads: usize) -> Self {
+        Explorer {
+            threads,
+            schedules: 256,
+            seed: 0x9e37_79b9_7f4a_7c15,
+            budget: 200_000,
+            strategy: Strategy::Random,
+        }
+    }
+
+    /// Set the maximum number of schedules to run.
+    pub fn schedules(mut self, n: usize) -> Self {
+        self.schedules = n.max(1);
+        self
+    }
+
+    /// Set the base seed for random exploration.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the per-schedule step budget.
+    pub fn budget(mut self, steps: u64) -> Self {
+        self.budget = steps.max(1);
+        self
+    }
+
+    /// Switch to bounded exhaustive (DFS) exploration.
+    pub fn exhaustive(mut self) -> Self {
+        self.strategy = Strategy::Exhaustive;
+        self
+    }
+
+    /// Run `body` once per schedule. The body must spawn and *join* (e.g.
+    /// via [`std::thread::scope`]) exactly `threads` workers, each of which
+    /// calls [`Session::register`] with a unique id.
+    pub fn run<F: Fn(&Arc<Session>)>(&self, body: F) -> Report {
+        install_quiet_abort_hook();
+        let mut seen = HashSet::new();
+        let mut failures = Vec::new();
+        let mut replay: Vec<usize> = Vec::new();
+        let mut complete = false;
+        let mut runs = 0;
+        for i in 0..self.schedules {
+            let choice = match self.strategy {
+                Strategy::Random => {
+                    // `| 1` keeps the xorshift stream out of its zero fixpoint.
+                    Choice::Random(splitmix64(self.seed.wrapping_add(i as u64)) | 1)
+                }
+                Strategy::Exhaustive => Choice::Exhaustive { replay: replay.clone() },
+            };
+            let sess = Arc::new(Session::new(self.threads, self.budget, choice));
+            let out = panic::catch_unwind(AssertUnwindSafe(|| body(&sess)));
+            runs += 1;
+            let g = sess.lock_inner();
+            seen.insert(g.schedule_hash);
+            match out {
+                Ok(()) => {
+                    if let Some(msg) = &g.abort {
+                        failures.push(format!("schedule {i}: {msg}"));
+                    }
+                }
+                Err(payload) => {
+                    let msg = match &g.abort {
+                        Some(m) => m.clone(),
+                        None => describe_panic(payload.as_ref()),
+                    };
+                    failures.push(format!("schedule {i}: {msg}"));
+                }
+            }
+            if self.strategy == Strategy::Exhaustive {
+                match next_replay(&g.trace) {
+                    Some(next) => replay = next,
+                    None => {
+                        complete = true;
+                        drop(g);
+                        break;
+                    }
+                }
+            }
+        }
+        Report { schedules_run: runs, distinct_schedules: seen.len(), failures, complete }
+    }
+}
+
+/// Advance the DFS odometer: bump the deepest incrementable choice, drop
+/// everything after it. `None` when the tree is exhausted.
+fn next_replay(trace: &[(usize, usize)]) -> Option<Vec<usize>> {
+    for i in (0..trace.len()).rev() {
+        let (c, n) = trace[i];
+        if c + 1 < n {
+            let mut r: Vec<usize> = trace[..i].iter().map(|&(c, _)| c).collect();
+            r.push(c + 1);
+            return Some(r);
+        }
+    }
+    None
+}
+
+fn describe_panic(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        format!("panic: {s}")
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        format!("panic: {s}")
+    } else {
+        "panic in model schedule".to_string()
+    }
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+static QUIET_HOOK: Once = Once::new();
+
+/// `ModelAbort` panics are control flow, not failures; keep the default
+/// hook from spraying a backtrace per aborted schedule. Installed once,
+/// chains to the previous hook for every real panic.
+fn install_quiet_abort_hook() {
+    QUIET_HOOK.call_once(|| {
+        let prev = panic::take_hook();
+        panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<ModelAbort>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn clock_join_and_domination() {
+        let mut a = vec![1, 0];
+        join_into(&mut a, &[0, 2, 3]);
+        assert_eq!(a, vec![1, 2, 3]);
+        assert!(dominated(&[1, 2], &[1, 2, 3]));
+        assert!(!dominated(&[2], &[1, 5]));
+        assert!(dominated(&[], &[]));
+    }
+
+    #[test]
+    fn counter_increments_never_lost() {
+        let report = Explorer::new(2).schedules(64).run(|sess| {
+            let c = AtomicU64::new(0);
+            thread::scope(|s| {
+                for tid in 0..2 {
+                    let c = &c;
+                    s.spawn(move || {
+                        let _reg = sess.register(tid);
+                        for _ in 0..3 {
+                            c.fetch_add(1, Ordering::AcqRel);
+                        }
+                    });
+                }
+            });
+            assert_eq!(c.load(Ordering::Acquire), 6);
+        });
+        report.assert_clean();
+        assert_eq!(report.schedules_run, 64);
+        assert!(report.distinct_schedules > 1, "schedules must differ");
+    }
+
+    #[test]
+    fn release_acquire_publication_is_race_free() {
+        let report = Explorer::new(2).schedules(128).run(|sess| {
+            let data = Box::new(0u64);
+            let addr = &*data as *const u64 as usize;
+            let flag = AtomicBool::new(false);
+            thread::scope(|s| {
+                let flag = &flag;
+                s.spawn(move || {
+                    let _reg = sess.register(0);
+                    trace_write(addr);
+                    flag.store(true, Ordering::Release);
+                });
+                s.spawn(move || {
+                    let _reg = sess.register(1);
+                    while !flag.load(Ordering::Acquire) {}
+                    trace_read(addr);
+                });
+            });
+        });
+        report.assert_clean();
+    }
+
+    #[test]
+    fn relaxed_publication_is_a_detected_race() {
+        let relaxed = Ordering::Relaxed;
+        let report = Explorer::new(2).schedules(16).run(|sess| {
+            let data = Box::new(0u64);
+            let addr = &*data as *const u64 as usize;
+            let flag = AtomicBool::new(false);
+            thread::scope(|s| {
+                let flag = &flag;
+                s.spawn(move || {
+                    let _reg = sess.register(0);
+                    trace_write(addr);
+                    flag.store(true, relaxed);
+                });
+                s.spawn(move || {
+                    let _reg = sess.register(1);
+                    while !flag.load(Ordering::Acquire) {}
+                    trace_read(addr);
+                });
+            });
+        });
+        assert!(!report.failures.is_empty(), "relaxed publication must race");
+        assert!(report.failures[0].contains("data race"), "{:?}", report.failures);
+    }
+
+    #[test]
+    fn exhaustive_mode_enumerates_and_completes() {
+        let report = Explorer::new(2).schedules(10_000).exhaustive().run(|sess| {
+            let c = AtomicU64::new(0);
+            thread::scope(|s| {
+                for tid in 0..2 {
+                    let c = &c;
+                    s.spawn(move || {
+                        let _reg = sess.register(tid);
+                        c.fetch_add(1, Ordering::AcqRel);
+                    });
+                }
+            });
+            assert_eq!(c.load(Ordering::Acquire), 2);
+        });
+        report.assert_clean();
+        assert!(report.complete, "tiny tree must be fully enumerated");
+        assert!(report.distinct_schedules >= 2);
+    }
+
+    #[test]
+    fn model_mutex_and_condvar_roundtrip() {
+        let report = Explorer::new(2).schedules(64).run(|sess| {
+            let slot: Mutex<Option<u32>> = Mutex::new(None);
+            let ready = Condvar::new();
+            thread::scope(|s| {
+                let slot = &slot;
+                let ready = &ready;
+                s.spawn(move || {
+                    let _reg = sess.register(0);
+                    *slot.lock().unwrap() = Some(7);
+                    ready.notify_all();
+                });
+                s.spawn(move || {
+                    let _reg = sess.register(1);
+                    let mut g = slot.lock().unwrap();
+                    while g.is_none() {
+                        g = ready.wait(g).unwrap();
+                    }
+                    assert_eq!(*g, Some(7));
+                });
+            });
+        });
+        report.assert_clean();
+    }
+
+    #[test]
+    fn model_barrier_rendezvous() {
+        let report = Explorer::new(2).schedules(48).run(|sess| {
+            let b = Barrier::new(2);
+            let data = Box::new(0u64);
+            let addr = &*data as *const u64 as usize;
+            thread::scope(|s| {
+                let b = &b;
+                s.spawn(move || {
+                    let _reg = sess.register(0);
+                    trace_write(addr);
+                    b.wait();
+                });
+                s.spawn(move || {
+                    let _reg = sess.register(1);
+                    b.wait();
+                    trace_read(addr);
+                });
+            });
+        });
+        report.assert_clean();
+    }
+
+    #[test]
+    fn budget_exhaustion_is_reported_not_hung() {
+        let report = Explorer::new(2).schedules(2).budget(500).run(|sess| {
+            let flag = AtomicBool::new(false);
+            thread::scope(|s| {
+                let flag = &flag;
+                s.spawn(move || {
+                    let _reg = sess.register(0);
+                    // Never set the flag: the sibling spins forever.
+                    flag.load(Ordering::Acquire);
+                });
+                s.spawn(move || {
+                    let _reg = sess.register(1);
+                    while !flag.load(Ordering::Acquire) {}
+                });
+            });
+        });
+        assert!(!report.failures.is_empty());
+        assert!(report.failures[0].contains("budget"), "{:?}", report.failures);
+    }
+
+    #[test]
+    fn no_session_types_degrade_to_std_behavior() {
+        let a = AtomicU64::new(1);
+        assert_eq!(a.fetch_add(2, Ordering::SeqCst), 1);
+        assert_eq!(a.load(Ordering::SeqCst), 3);
+        let m = Mutex::new(5);
+        *m.lock().unwrap() += 1;
+        assert_eq!(m.into_inner().unwrap(), 6);
+        let b = Barrier::new(2);
+        let cv = Condvar::new();
+        thread::scope(|s| {
+            let b = &b;
+            s.spawn(move || {
+                b.wait();
+            });
+            b.wait();
+        });
+        let m2 = Mutex::new(false);
+        let g = m2.lock().unwrap();
+        let (g, to) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+        assert!(to.timed_out());
+        assert!(!*g);
+    }
+}

@@ -1,0 +1,58 @@
+//! Synchronization facade for the lock-free runtime.
+//!
+//! The concurrency kernel (`distributed::comm`, `distributed::barrier`,
+//! `engine::superstep`, `serve::scheduler`) imports its sync primitives from
+//! here instead of `std::sync`. In a normal build every name is a plain
+//! re-export of the `std` type and [`trace_write`]/[`trace_read`] are empty
+//! `#[inline(always)]` functions — the facade compiles away completely, so
+//! the hot path is bit-for-bit the code it was before (the superstep
+//! ablation bench pins this).
+//!
+//! Compiled with `RUSTFLAGS="--cfg unigps_model"`, the same names resolve to
+//! the instrumented types in [`crate::util::model`]: every atomic access
+//! becomes a scheduling point of a deterministic virtual scheduler, and the
+//! trace hooks become vector-clock race checks. `rust/tests/model_check.rs`
+//! runs the ported protocols under that cfg; see `docs/concurrency.md` for
+//! how to run it locally.
+//!
+//! Outside a model session (i.e. for any code that happens to be compiled
+//! under the cfg but is not running inside an
+//! [`Explorer`](crate::util::model::Explorer) schedule) the instrumented
+//! types fall back to plain `std` behavior, so the whole crate stays
+//! correct under either cfg.
+#![warn(missing_docs)]
+
+/// Atomic types for the runtime's protocol state.
+pub mod atomic {
+    pub use std::sync::atomic::Ordering;
+
+    #[cfg(not(unigps_model))]
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+
+    #[cfg(unigps_model)]
+    pub use crate::util::model::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize};
+}
+
+#[cfg(not(unigps_model))]
+pub use std::sync::{Barrier, BarrierWaitResult, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(unigps_model)]
+pub use crate::util::model::{
+    Barrier, BarrierWaitResult, Condvar, Mutex, MutexGuard, WaitTimeoutResult,
+};
+
+/// Declare a plain-memory write that the surrounding protocol orders (e.g.
+/// a `FlatBoard` cell mutation protected by a seal epoch). Free in normal
+/// builds; a race-checked scheduling point under `unigps_model`.
+#[cfg(not(unigps_model))]
+#[inline(always)]
+pub fn trace_write(_addr: usize) {}
+
+/// Declare a plain-memory read ordered by the surrounding protocol. Free in
+/// normal builds; a race-checked scheduling point under `unigps_model`.
+#[cfg(not(unigps_model))]
+#[inline(always)]
+pub fn trace_read(_addr: usize) {}
+
+#[cfg(unigps_model)]
+pub use crate::util::model::{trace_read, trace_write};
