@@ -20,7 +20,9 @@
 //!    re-generate the graph — the end-to-end amortization argument of the
 //!    serve subsystem — plus the transport overhead of the same
 //!    status+chunked-result RPC cycle over the Unix socket vs
-//!    authenticated TCP loopback. Writes `BENCH_serve.json`.
+//!    authenticated TCP loopback, and a robustness addendum
+//!    (cancel-to-terminal latency; disarmed-failpoint overhead vs its
+//!    ≤1% budget). Writes `BENCH_serve.json`.
 
 use unigps::distributed::barrier::{BspBarrier, CondvarBarrier, SpinBarrier};
 use unigps::engine::{run_typed, EngineKind, RunOptions};
@@ -399,12 +401,13 @@ fn superstep_pipeline_ablation(graph: &unigps::graph::Graph, div: u64) {
 /// what N `unigps run` invocations cost — vs (b) warm — the same N jobs
 /// submitted by concurrent clients to a resident server whose snapshot
 /// cache loads the graph once and whose scheduler splits the cores across
-/// slots. Records the delta in `BENCH_serve.json`.
+/// slots. Also measures cancel-to-terminal latency and the disarmed
+/// failpoint fast path. Records everything in `BENCH_serve.json`.
 fn serve_throughput_ablation(div: u64) {
     use unigps::client::Client;
     use unigps::ipc::shm::ShmMap;
     use unigps::operators::{run_operator, Operator};
-    use unigps::serve::{RemoteClient, ServeClient, ServeConfig, Server};
+    use unigps::serve::{JobState, RemoteClient, ServeClient, ServeConfig, Server};
     use unigps::session::Session;
 
     println!("-- [7] serve: warm-cache concurrent jobs vs cold one-shot runs --");
@@ -556,6 +559,58 @@ fn serve_throughput_ablation(div: u64) {
     server_thread.join().unwrap();
     let tcp_over_uds = tcp_rpc_secs / uds_rpc_secs.max(1e-12);
 
+    // (e) Robustness addendum: cancel-to-terminal latency on a running
+    // job, and the steady-state cost of the disarmed failpoint registry
+    // (the chaos harness must be near-free when not in use; ≤ 1% is the
+    // budget docs/robustness.md promises).
+    let socket_c = ShmMap::unique_path("serve-bench-cancel");
+    let mut cfg = ServeConfig::new(&socket_c);
+    cfg.slots = 1;
+    cfg.queue_cap = 8;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = workers;
+    let server = Server::bind(Session::builder().build(), cfg).unwrap();
+    let server_thread = std::thread::spawn(move || server.run().unwrap());
+    let cancel_iters: usize = if fast { 4 } else { 12 };
+    let mut client = ServeClient::connect(&socket_c).unwrap();
+    let mut cancel_total = 0.0f64;
+    for _ in 0..cancel_iters {
+        let id = client
+            .submit(&format!("{warm_spec}\ndelay_ms = 30000"))
+            .unwrap();
+        while client.status(id).unwrap().state != JobState::Running {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let timer = Timer::start();
+        client.cancel(id).unwrap();
+        let err = client
+            .wait(id, std::time::Duration::from_secs(60))
+            .unwrap_err();
+        assert!(err.is_cancelled(), "expected a typed cancel, got {err:?}");
+        cancel_total += timer.secs();
+    }
+    let cancel_to_terminal_ms = cancel_total * 1e3 / cancel_iters as f64;
+    client.shutdown().unwrap();
+    drop(client);
+    server_thread.join().unwrap();
+
+    // Disarmed failpoint fast path: `fault::point!` expands to one
+    // `check` call whose first move is a relaxed load of the ACTIVE
+    // flag. Measure it directly, then bound its share of a warm job: a
+    // job crosses a few dozen sites (scheduler, cache, per-frame
+    // transport reads and writes), so charge a generous 64 visits
+    // against the measured warm per-job time.
+    unigps::util::fault::clear();
+    let probe_iters: u64 = if fast { 500_000 } else { 5_000_000 };
+    let timer = Timer::start();
+    for _ in 0..probe_iters {
+        assert!(std::hint::black_box(unigps::util::fault::check("bench-probe")).is_none());
+    }
+    let disabled_check_ns = timer.secs() * 1e9 / probe_iters as f64;
+    let fault_sites_per_job = 64.0;
+    let fault_overhead_frac =
+        (disabled_check_ns * 1e-9 * fault_sites_per_job) / (warm_secs / jobs as f64).max(1e-12);
+
     let speedup = cold_secs / warm_secs.max(1e-12);
     let pipelined_speedup = cold_secs / pipelined_secs.max(1e-12);
     let mut t = Table::new(&["path", "time", "jobs/s", "speedup"]);
@@ -592,6 +647,16 @@ fn serve_throughput_ablation(div: u64) {
         uds_rpc_secs * 1e6 / rpc_iters as f64,
         tcp_rpc_secs * 1e6 / rpc_iters as f64,
     );
+    println!(
+        "   cancel: running job -> terminal Cancelled in {cancel_to_terminal_ms:.1} ms \
+         (mean of {cancel_iters}; bounded by the 20 ms cooperative check slice)"
+    );
+    println!(
+        "   failpoints (disarmed): {disabled_check_ns:.1} ns/check × ≤{fault_sites_per_job:.0} \
+         sites/job = {:.4}% of a warm job ({} the ≤1% budget)",
+        fault_overhead_frac * 100.0,
+        if fault_overhead_frac <= 0.01 { "meets" } else { "MISSES" },
+    );
 
     let json = format!(
         "{{\n  \"bench\": \"serve_throughput\",\n  \"graph\": {{\"key\": \"lj\", \
@@ -606,7 +671,11 @@ fn serve_throughput_ablation(div: u64) {
          \"rpc_iters\": {rpc_iters},\n  \
          \"uds_rpc_secs\": {uds_rpc_secs:.6},\n  \
          \"tcp_rpc_secs\": {tcp_rpc_secs:.6},\n  \
-         \"tcp_over_uds\": {tcp_over_uds:.4}\n}}\n"
+         \"tcp_over_uds\": {tcp_over_uds:.4},\n  \
+         \"cancel_iters\": {cancel_iters},\n  \
+         \"cancel_to_terminal_ms\": {cancel_to_terminal_ms:.3},\n  \
+         \"disabled_check_ns\": {disabled_check_ns:.3},\n  \
+         \"fault_overhead_frac\": {fault_overhead_frac:.8}\n}}\n"
     );
     match std::fs::write("BENCH_serve.json", &json) {
         Ok(()) => println!("   wrote BENCH_serve.json"),

@@ -10,7 +10,10 @@
 //!    every serve method is documented in `docs/serve.md`; the `ErrorKind`
 //!    wire codes round-trip (`code()` / `from_code` bijection);
 //! 4. every `unsafe` block / fn / impl carries a `// SAFETY:` comment
-//!    (`unsafe fn` may use a `# Safety` doc section instead).
+//!    (`unsafe fn` may use a `# Safety` doc section instead);
+//! 5. every failpoint site (`util::fault`'s point macro) names a point
+//!    listed in the injection-point inventory in `docs/robustness.md`,
+//!    so the chaos surface is always fully documented.
 //!
 //! Test modules (everything after the first `#[cfg(test)]`) are exempt.
 //! Exit code: 0 clean, 1 violations (listed on stderr), 2 I/O trouble.
@@ -35,6 +38,7 @@ const PANIC_MARKS: [&str; 5] = [
     ".into_inner(",
     concat!("// lint: allow-panic", ":"),
 ];
+const FAULT_NEEDLE: &str = concat!("fault::point", "!(\"");
 const UNSAFE_BLOCK: &str = concat!("unsafe", " {");
 const UNSAFE_FN: &str = concat!("unsafe", " fn");
 const UNSAFE_IMPL: &str = concat!("unsafe", " impl");
@@ -93,6 +97,31 @@ fn check_panics(rel: &str, lines: &[&str], out: &mut Vec<String>) {
                 i + 1,
                 PANIC_MARKS[4]
             ));
+        }
+    }
+}
+
+/// Rule 5: every failpoint site must name a point documented in the
+/// injection-point inventory (`docs/robustness.md`) — chaos specs are
+/// written from that table, so an undocumented point is dead surface.
+fn check_fault_points(rel: &str, lines: &[&str], robustness_docs: &str, out: &mut Vec<String>) {
+    for (i, line) in lines.iter().enumerate() {
+        if is_comment_only(line) {
+            continue;
+        }
+        let mut rest = *line;
+        while let Some(at) = rest.find(FAULT_NEEDLE) {
+            let tail = &rest[at + FAULT_NEEDLE.len()..];
+            let Some(end) = tail.find('"') else { break };
+            let name = &tail[..end];
+            if !robustness_docs.contains(&format!("`{name}`")) {
+                out.push(format!(
+                    "{rel}:{}: failpoint '{name}' is not listed in the injection-point \
+                     inventory in docs/robustness.md",
+                    i + 1
+                ));
+            }
+            rest = &tail[end..];
         }
     }
 }
@@ -255,6 +284,7 @@ fn run(root: &Path) -> Result<Vec<String>, String> {
     if files.is_empty() {
         return Err("no .rs files under rust/src".to_string());
     }
+    let robustness_docs = read(root, "docs/robustness.md")?;
     for path in &files {
         let content =
             std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
@@ -267,6 +297,7 @@ fn run(root: &Path) -> Result<Vec<String>, String> {
         check_relaxed(&rel, &lines, &mut violations);
         check_panics(&rel, &lines, &mut violations);
         check_safety(&rel, &lines, &mut violations);
+        check_fault_points(&rel, &lines, &robustness_docs, &mut violations);
     }
     let serve_mod = read(root, "rust/src/serve/mod.rs")?;
     let ipc_proto = read(root, "rust/src/ipc/protocol.rs")?;
@@ -376,6 +407,27 @@ mod tests {
         assert!(safety(ok).is_empty());
         let bad = "pub unsafe fn push() {\n";
         assert_eq!(safety(bad).len(), 1);
+    }
+
+    fn faults(src: &str, docs: &str) -> Vec<String> {
+        let mut v = Vec::new();
+        check_fault_points("rust/src/x.rs", &active_lines(src), docs, &mut v);
+        v
+    }
+
+    #[test]
+    fn fault_points_must_be_documented() {
+        let site = "if let Some(act) = fault::point!(\"cache-load\") {\n";
+        assert!(faults(site, "| `cache-load` | snapshot load |").is_empty());
+        let v = faults(site, "no inventory here");
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("cache-load"), "{v:?}");
+        // Fully-qualified sites count too; doc-comment examples do not.
+        let fq = "crate::util::fault::point!(\"sched-run\")?;\n";
+        assert!(faults(fq, "`sched-run`").is_empty());
+        assert_eq!(faults(fq, "").len(), 1);
+        let comment = "/// if let Some(act) = fault::point!(\"x\") {\n";
+        assert!(faults(comment, "").is_empty());
     }
 
     #[test]

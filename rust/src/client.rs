@@ -72,6 +72,17 @@ pub trait Client {
     /// Fetch a finished job's result table.
     fn result(&mut self, id: JobId) -> Result<Arc<RunResult>>;
 
+    /// Cooperatively cancel a job. A queued job goes
+    /// [`Cancelled`](crate::serve::JobState::Cancelled) immediately; a
+    /// running job has its cancel token raised and unwinds to `Cancelled`
+    /// within about one superstep (observe with [`Client::wait`]).
+    /// Cancelling an already-terminal job is a no-op; unknown ids are a
+    /// typed [`UniGpsError::Serve`] error. Returns the job's status as of
+    /// the cancel being applied.
+    ///
+    /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+    fn cancel(&mut self, id: JobId) -> Result<JobStatus>;
+
     /// Server-wide (or in-process equivalent) cache + scheduler counters.
     fn stats(&mut self) -> Result<ServeStats>;
 
@@ -155,6 +166,10 @@ impl Client for LocalClient {
 
     fn result(&mut self, id: JobId) -> Result<Arc<RunResult>> {
         self.sched.result(id)
+    }
+
+    fn cancel(&mut self, id: JobId) -> Result<JobStatus> {
+        self.sched.cancel(id, "client cancel")
     }
 
     fn stats(&mut self) -> Result<ServeStats> {

@@ -41,7 +41,7 @@
 use crate::distributed::shared::SharedSlice;
 use crate::engine::superstep::SuperstepRuntime;
 use crate::engine::{RunOptions, TypedRun};
-use crate::error::Result;
+use crate::error::{Result, UniGpsError};
 use crate::graph::PropertyGraph;
 use crate::util::timer::Timer;
 use crate::vcprog::VCProg;
@@ -163,6 +163,9 @@ pub fn run<P: VCProg>(
         }
     });
 
+    if rt.was_cancelled() {
+        return Err(UniGpsError::cancelled(opts.cancel.reason()));
+    }
     let metrics = rt.into_metrics(Vec::new());
     Ok(TypedRun {
         props: props.into_iter().map(|p| p.expect("initialized")).collect(),
@@ -244,6 +247,16 @@ mod tests {
         assert_eq!(a.props, b.props);
         assert_eq!(a.metrics.total_messages, b.metrics.total_messages);
         assert_eq!(a.metrics.supersteps, b.metrics.supersteps);
+    }
+
+    #[test]
+    fn cancelled_token_unwinds_with_typed_error() {
+        let g = from_pairs(false, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let tok = crate::util::sync::CancelToken::new();
+        tok.cancel("gas cancel");
+        let o = opts(2).with_cancel(tok);
+        let err = run(&g, &ConnectedComponents::new(), &o).unwrap_err();
+        assert!(err.is_cancelled(), "got: {err}");
     }
 
     #[test]

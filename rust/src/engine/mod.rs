@@ -154,6 +154,14 @@ pub struct RunOptions {
     /// `benches/ablations.rs` [6] and the
     /// [`superstep`](crate::engine::superstep) protocol docs).
     pub pipeline: bool,
+    /// Cooperative cancellation token. Default: a fresh token nobody
+    /// cancels (the run goes to completion). Cloning `RunOptions` shares
+    /// the token, so every stage of a multi-stage plan execution observes
+    /// one job-level cancel. The superstep runtime polls it once per step
+    /// in the exclusive bookkeeping section; a cancelled run returns a
+    /// typed [`UniGpsError::Cancelled`] within one superstep. Natural
+    /// convergence in the same step wins over cancellation.
+    pub cancel: crate::util::sync::CancelToken,
 }
 
 impl Default for RunOptions {
@@ -166,6 +174,7 @@ impl Default for RunOptions {
             pushpull_threshold: 20.0,
             step_metrics: true,
             pipeline: true,
+            cancel: crate::util::sync::CancelToken::new(),
         }
     }
 }
@@ -180,6 +189,13 @@ impl RunOptions {
     /// Builder-style max iterations.
     pub fn with_max_iter(mut self, m: u32) -> Self {
         self.max_iter = m;
+        self
+    }
+
+    /// Builder-style cancellation token (shared with the caller, who may
+    /// cancel the run from another thread).
+    pub fn with_cancel(mut self, token: crate::util::sync::CancelToken) -> Self {
+        self.cancel = token;
         self
     }
 }

@@ -39,7 +39,7 @@
 use crate::distributed::shared::SharedSlice;
 use crate::engine::superstep::SuperstepRuntime;
 use crate::engine::{RunOptions, TypedRun};
-use crate::error::Result;
+use crate::error::{Result, UniGpsError};
 use crate::graph::PropertyGraph;
 use crate::util::timer::{CpuTimer, Timer};
 use crate::vcprog::{VCProg, VertexId};
@@ -194,11 +194,16 @@ pub fn run<P: VCProg>(
                         // Every sender sealed its rows before the reduce
                         // gate, so this never blocks — and it overlaps fast
                         // workers' Phase A of step iter+1 (they write the
-                        // other parity and their own slots only).
-                        phase_timer = CpuTimer::start();
-                        // SAFETY: sealed rows + own inbox slots, as above.
-                        unsafe { ctx.deliver(program, inbox_next, iter) };
-                        busy += phase_timer.elapsed();
+                        // other parity and their own slots only). A
+                        // cancelled run skips it: the step's undelivered
+                        // messages die with the discarded results.
+                        if !(stop && rt.was_cancelled()) {
+                            phase_timer = CpuTimer::start();
+                            // SAFETY: sealed rows + own inbox slots, as
+                            // above.
+                            unsafe { ctx.deliver(program, inbox_next, iter) };
+                            busy += phase_timer.elapsed();
+                        }
                         stop
                     } else {
                         rt.barrier.wait();
@@ -224,6 +229,9 @@ pub fn run<P: VCProg>(
         }
     });
 
+    if rt.was_cancelled() {
+        return Err(UniGpsError::cancelled(opts.cancel.reason()));
+    }
     let metrics = rt.into_metrics(busy_log.into_inner().unwrap());
     Ok(TypedRun {
         props: props.into_iter().map(|p| p.expect("initialized")).collect(),
@@ -361,6 +369,37 @@ mod tests {
         assert!(r.metrics.total_messages >= 2);
         assert!(r.metrics.udf_calls > 0);
         assert!(!r.metrics.steps.is_empty());
+    }
+
+    #[test]
+    fn cancelled_token_unwinds_within_one_step() {
+        // CC on a path needs ~n steps; a pre-cancelled token stops it at
+        // the first bookkeeping window with the typed error.
+        let g = from_pairs(false, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let tok = crate::util::sync::CancelToken::new();
+        tok.cancel("test cancel");
+        let o = opts(2).with_cancel(tok);
+        let err = run(&g, &ConnectedComponents::new(), &o).unwrap_err();
+        assert!(err.is_cancelled(), "got: {err}");
+        assert!(err.to_string().contains("test cancel"));
+    }
+
+    #[test]
+    fn natural_stop_beats_cancel_in_same_step() {
+        // A step that stops for a natural reason (convergence or max_iter)
+        // while the cancel flag is already raised still reports its natural
+        // outcome: the cancel arm sits *after* both natural arms in the
+        // exclusive bookkeeping window, so exactly one cause wins and it is
+        // never the cancel.
+        let g = from_pairs(true, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let tok = crate::util::sync::CancelToken::new();
+        tok.cancel("too late");
+        let o = RunOptions::default()
+            .with_workers(2)
+            .with_max_iter(1)
+            .with_cancel(tok);
+        let r = run(&g, &SsspBellmanFord::new(0), &o).unwrap();
+        assert_eq!(r.metrics.supersteps, 1);
     }
 
     #[test]

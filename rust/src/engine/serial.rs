@@ -8,7 +8,7 @@
 
 use crate::distributed::metrics::{RunMetrics, StepMetrics};
 use crate::engine::{RunOptions, TypedRun};
-use crate::error::Result;
+use crate::error::{Result, UniGpsError};
 use crate::graph::PropertyGraph;
 use crate::util::timer::Timer;
 use crate::vcprog::VCProg;
@@ -42,6 +42,11 @@ pub fn run<P: VCProg>(
 
     // Line 4: iterate.
     for iter in 1..=opts.max_iter {
+        // Same per-step cadence as the parallel runtimes' bookkeeping poll,
+        // so cancellation latency is one superstep on every engine.
+        if opts.cancel.is_cancelled() {
+            return Err(UniGpsError::cancelled(opts.cancel.reason()));
+        }
         let step_timer = Timer::start();
         let mut num_active = 0u64;
         let mut step_msgs = 0u64;
@@ -186,6 +191,16 @@ mod tests {
         // Intra-clique labels agree.
         assert_eq!(r.props[0], r.props[1]);
         assert_eq!(r.props[3], r.props[4]);
+    }
+
+    #[test]
+    fn cancelled_token_unwinds_with_typed_error() {
+        let g = from_pairs(false, &[(0, 1), (1, 2), (2, 3)]);
+        let tok = crate::util::sync::CancelToken::new();
+        tok.cancel("serial cancel");
+        let o = RunOptions::default().with_cancel(tok);
+        let err = run(&g, &ConnectedComponents::new(), &o).unwrap_err();
+        assert!(err.is_cancelled(), "got: {err}");
     }
 
     #[test]

@@ -326,8 +326,15 @@ pub struct SuperstepRuntime<'g, M: Send> {
     step_metrics: bool,
     combine: bool,
     msg_bytes: u64,
+    /// Per-run cooperative cancellation token (shared with the scheduler /
+    /// caller via [`RunOptions::cancel`]). Polled once per step in the
+    /// exclusive bookkeeping window, never on the per-vertex hot path.
+    cancel: crate::util::sync::CancelToken,
     stop: AtomicBool,
     converged: AtomicBool,
+    /// Set when the stop decision was made *because of* the cancel token
+    /// (natural convergence and max-iter in the same step win over it).
+    cancelled: AtomicBool,
     steps_done: AtomicU64,
     udf_calls: AtomicU64,
     /// Local fast-path deliveries this step / over the run.
@@ -375,8 +382,10 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
             step_metrics: opts.step_metrics,
             combine,
             msg_bytes: 4 + std::mem::size_of::<M>() as u64,
+            cancel: opts.cancel.clone(),
             stop: AtomicBool::new(false),
             converged: AtomicBool::new(false),
+            cancelled: AtomicBool::new(false),
             steps_done: AtomicU64::new(0),
             udf_calls: AtomicU64::new(0),
             local_step: AtomicU64::new(0),
@@ -519,8 +528,29 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
             self.stop.store(true, Ordering::Relaxed);
         } else if iter >= self.max_iter {
             self.stop.store(true, Ordering::Relaxed); // relaxed: as above
+        } else if self.cancel.is_cancelled() {
+            // Cancellation is the lowest-priority stop cause: a run that
+            // converged (or exhausted max_iter) in the very step the cancel
+            // arrived still reports its natural outcome. Polling here — the
+            // single exclusive decision point — means exactly one of
+            // converged/max-iter/cancelled wins and a cancelled job unwinds
+            // within one superstep of the flag being raised.
+            self.cancelled.store(true, Ordering::Relaxed); // relaxed: as above
+            self.stop.store(true, Ordering::Relaxed); // relaxed: as above
         }
         self.active.advance();
+    }
+
+    /// Did this run stop because its [`CancelToken`] fired (rather than by
+    /// converging or exhausting `max_iter`)? Engines consult this after
+    /// their worker scope to turn the unwind into
+    /// [`UniGpsError::Cancelled`](crate::error::UniGpsError::Cancelled).
+    ///
+    /// [`CancelToken`]: crate::util::sync::CancelToken
+    pub fn was_cancelled(&self) -> bool {
+        // relaxed: read after the final step gate / barrier (or after the
+        // worker scope joined), which ordered the bookkeeper's write.
+        self.cancelled.load(Ordering::Relaxed)
     }
 
     /// Barriered BSP step epilogue (`pipeline = false`): one barrier,

@@ -42,6 +42,12 @@ pub enum UniGpsError {
     /// preshared token). Never transient: retrying without a different
     /// credential cannot succeed.
     Auth(String),
+    /// The job was cooperatively cancelled (client `CANCEL`, deadline
+    /// watchdog, or scheduler drain). The message names the cancellation
+    /// reason. Terminal by construction: the work was deliberately
+    /// abandoned, so retrying the same submission is a caller decision,
+    /// never an automatic one.
+    Cancelled(String),
 }
 
 /// Stable wire code for each [`UniGpsError`] variant — what serve ERR
@@ -70,6 +76,8 @@ pub enum ErrorKind {
     Backpressure,
     /// [`UniGpsError::Auth`].
     Auth,
+    /// [`UniGpsError::Cancelled`].
+    Cancelled,
 }
 
 impl ErrorKind {
@@ -87,6 +95,7 @@ impl ErrorKind {
             ErrorKind::Serve => 8,
             ErrorKind::Backpressure => 9,
             ErrorKind::Auth => 10,
+            ErrorKind::Cancelled => 11,
         }
     }
 
@@ -105,6 +114,7 @@ impl ErrorKind {
             8 => ErrorKind::Serve,
             9 => ErrorKind::Backpressure,
             10 => ErrorKind::Auth,
+            11 => ErrorKind::Cancelled,
             _ => ErrorKind::Ipc,
         }
     }
@@ -125,6 +135,7 @@ impl ErrorKind {
             ErrorKind::Serve => UniGpsError::Serve(msg),
             ErrorKind::Backpressure => UniGpsError::Backpressure(msg),
             ErrorKind::Auth => UniGpsError::Auth(msg),
+            ErrorKind::Cancelled => UniGpsError::Cancelled(msg),
         }
     }
 }
@@ -143,6 +154,7 @@ impl fmt::Display for UniGpsError {
             UniGpsError::Serve(m) => write!(f, "serve error: {m}"),
             UniGpsError::Backpressure(m) => write!(f, "backpressure: {m}"),
             UniGpsError::Auth(m) => write!(f, "auth error: {m}"),
+            UniGpsError::Cancelled(m) => write!(f, "cancelled: {m}"),
         }
     }
 }
@@ -187,6 +199,10 @@ impl UniGpsError {
     pub fn auth(msg: impl Into<String>) -> Self {
         UniGpsError::Auth(msg.into())
     }
+    /// Shorthand constructor for cooperative-cancellation errors.
+    pub fn cancelled(msg: impl Into<String>) -> Self {
+        UniGpsError::Cancelled(msg.into())
+    }
 
     /// This error's wire kind.
     pub fn kind(&self) -> ErrorKind {
@@ -202,6 +218,7 @@ impl UniGpsError {
             UniGpsError::Serve(_) => ErrorKind::Serve,
             UniGpsError::Backpressure(_) => ErrorKind::Backpressure,
             UniGpsError::Auth(_) => ErrorKind::Auth,
+            UniGpsError::Cancelled(_) => ErrorKind::Cancelled,
         }
     }
 
@@ -209,6 +226,12 @@ impl UniGpsError {
     /// backoff.
     pub fn is_backpressure(&self) -> bool {
         matches!(self, UniGpsError::Backpressure(_))
+    }
+
+    /// True when the failure is a cooperative cancellation (client cancel,
+    /// deadline, or drain) rather than a fault in the work itself.
+    pub fn is_cancelled(&self) -> bool {
+        matches!(self, UniGpsError::Cancelled(_))
     }
 
     /// The bare message, without the variant prefix `Display` adds.
@@ -223,7 +246,8 @@ impl UniGpsError {
             | UniGpsError::Config(m)
             | UniGpsError::Serve(m)
             | UniGpsError::Backpressure(m)
-            | UniGpsError::Auth(m) => m.clone(),
+            | UniGpsError::Auth(m)
+            | UniGpsError::Cancelled(m) => m.clone(),
             UniGpsError::Io(e) => e.to_string(),
         }
     }
@@ -269,6 +293,7 @@ mod tests {
             UniGpsError::Serve("i".into()),
             UniGpsError::Backpressure("j".into()),
             UniGpsError::Auth("k".into()),
+            UniGpsError::Cancelled("l".into()),
         ];
         for e in samples {
             let kind = e.kind();
@@ -285,5 +310,15 @@ mod tests {
         assert!(UniGpsError::backpressure("queue full").is_backpressure());
         assert!(!UniGpsError::serve("unknown job").is_backpressure());
         assert!(!UniGpsError::Config("bad".into()).is_backpressure());
+    }
+
+    #[test]
+    fn cancelled_is_distinguishable() {
+        let e = UniGpsError::cancelled("client cancel");
+        assert!(e.is_cancelled());
+        assert!(!e.is_backpressure());
+        assert!(e.to_string().contains("cancelled: client cancel"), "{e}");
+        assert_eq!(e.kind().code(), 11);
+        assert!(!UniGpsError::serve("unknown job").is_cancelled());
     }
 }

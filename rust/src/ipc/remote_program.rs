@@ -137,6 +137,11 @@ where
                     DEFAULT_BUF,
                     WaitStrategy::BusyYield,
                 )?),
+                // The socket channel carries the trusted-channel I/O
+                // timeout (`TRUSTED_IO_TIMEOUT`): a runner that dies or
+                // hangs mid-call surfaces as a typed Ipc error, which the
+                // engine's catch_unwind records as a Failed job — the host
+                // worker is never parked forever on a dead UDF process.
                 Transport::Socket => Box::new(SocketClient::connect(path)?),
             };
             ch.call(method::INIT_PROGRAM, spec.as_bytes())?;

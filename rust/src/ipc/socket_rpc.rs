@@ -132,20 +132,43 @@ pub fn connect_with_retry(path: &Path) -> Result<UnixStream> {
     )))
 }
 
+/// Default I/O timeout on the trusted VCProg isolation channel (2 min).
+/// The runner is a co-spawned process of the same invocation, so a
+/// healthy round trip is microseconds — but a runner that died mid-call
+/// (OOM-killed Python UDF worker) or hung (deadlocked UDF) used to park
+/// the engine worker forever. With the timeout it surfaces as a typed
+/// [`UniGpsError::Ipc`] error, which the scheduler records as a Failed
+/// job.
+pub const TRUSTED_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(120);
+
 /// Client half over a Unix stream.
 pub struct SocketClient {
     reader: BufReader<UnixStream>,
     writer: BufWriter<UnixStream>,
+    timeout: Option<std::time::Duration>,
 }
 
 impl SocketClient {
     /// Connect to the server's socket path (retrying briefly while the
-    /// server starts up).
+    /// server starts up), with the default [`TRUSTED_IO_TIMEOUT`] in both
+    /// directions.
     pub fn connect(path: &Path) -> Result<Self> {
+        SocketClient::connect_with_timeout(path, Some(TRUSTED_IO_TIMEOUT))
+    }
+
+    /// [`SocketClient::connect`] with an explicit per-direction I/O
+    /// timeout (`None` disables — the historical hang-forever behavior).
+    pub fn connect_with_timeout(
+        path: &Path,
+        timeout: Option<std::time::Duration>,
+    ) -> Result<Self> {
         let stream = connect_with_retry(path)?;
+        stream.set_read_timeout(timeout)?;
+        stream.set_write_timeout(timeout)?;
         Ok(SocketClient {
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            timeout,
         })
     }
 }
@@ -158,7 +181,24 @@ impl RpcChannel for SocketClient {
             method,
             payload,
             MAX_TRUSTED_FRAME_LEN,
-        )?;
+        )
+        .map_err(|e| match e {
+            // A socket timeout means the runner stopped serving mid-call:
+            // name the condition instead of surfacing a bare WouldBlock.
+            UniGpsError::Io(io)
+                if matches!(
+                    io.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                UniGpsError::ipc(format!(
+                    "runner unresponsive: no reply to method {method} within {:?} \
+                     (worker process dead or hung)",
+                    self.timeout.unwrap_or(TRUSTED_IO_TIMEOUT)
+                ))
+            }
+            other => other,
+        })?;
         if st == status::OK {
             Ok(resp)
         } else {
@@ -265,6 +305,34 @@ mod tests {
         let err = client.call(method::PING, b"x").unwrap_err();
         assert!(err.to_string().contains("kaput"));
         client.call(method::SHUTDOWN, b"").unwrap();
+        srv.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn hung_runner_surfaces_as_typed_ipc_timeout() {
+        let path = ShmMap::unique_path("sock-hang");
+        let listener = std::os::unix::net::UnixListener::bind(&path).unwrap();
+        let srv = std::thread::spawn(move || {
+            // Accept, then serve nothing: the runner is "hung". Hold the
+            // stream so the client's read blocks instead of seeing EOF.
+            let (stream, _addr) = listener.accept().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(600));
+            drop(stream);
+        });
+        let mut client = SocketClient::connect_with_timeout(
+            &path,
+            Some(std::time::Duration::from_millis(100)),
+        )
+        .unwrap();
+        let t = std::time::Instant::now();
+        let err = client.call(method::PING, b"x").unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)), "typed Ipc, got {err:?}");
+        assert!(err.to_string().contains("unresponsive"), "{err}");
+        assert!(
+            t.elapsed() < std::time::Duration::from_secs(5),
+            "timed out within the configured bound, not the test harness cap"
+        );
         srv.join().unwrap();
         let _ = std::fs::remove_file(&path);
     }

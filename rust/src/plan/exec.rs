@@ -193,13 +193,17 @@ impl ExecState<'_> {
 /// plan's resolved base (borrowed in process, snapshot-shared under
 /// serve), derived variants resolve through `store`, and `worker_cap`
 /// bounds every stage's worker count (the serving scheduler passes its
-/// per-slot core share; in-process paths pass `usize::MAX`).
+/// per-slot core share; in-process paths pass `usize::MAX`). `cancel` is
+/// stamped into every stage's run options: the serving scheduler passes
+/// the per-job token so `Client::cancel` / the deadline watchdog can cut a
+/// multi-stage plan short mid-stage; in-process paths pass a fresh token.
 pub fn execute(
     plan: &Plan,
     base: &Session,
     base_graph: GraphHandle<'_>,
     store: &mut dyn SnapshotStore,
     worker_cap: usize,
+    cancel: &crate::util::sync::CancelToken,
 ) -> Result<PlanOutput> {
     plan.validate()?;
     let defaults = base.overlay_config(&plan.defaults)?;
@@ -226,9 +230,15 @@ pub fn execute(
         match step {
             PlanStep::Transform(t) => apply_transform(t, &mut state, store, &outputs)?,
             PlanStep::Run(stage) => {
+                // A cancel between stages takes effect before the next
+                // stage spins up its worker scope.
+                if cancel.is_cancelled() {
+                    return Err(crate::error::UniGpsError::cancelled(cancel.reason()));
+                }
                 let session = &stage_sessions[outputs.len()];
                 let mut opts = session.options().clone();
                 opts.workers = opts.workers.min(worker_cap).max(1);
+                opts.cancel = cancel.clone();
                 let result = run_stage(stage, &mut state, store, session, &opts)?;
                 outputs.push(StageOutput {
                     result,
@@ -647,7 +657,14 @@ impl Plan {
     /// borrowed as-is — no copy on the single-op fast path.
     pub fn run_on_detailed(&self, graph: &Graph, session: &Session) -> Result<PlanOutput> {
         let mut store = MemoStore::new();
-        execute(self, session, GraphHandle::Borrowed(graph), &mut store, usize::MAX)
+        execute(
+            self,
+            session,
+            GraphHandle::Borrowed(graph),
+            &mut store,
+            usize::MAX,
+            &crate::util::sync::CancelToken::new(),
+        )
     }
 
     /// Execute by materializing the plan's [source](crate::plan::DatasetRef)
@@ -663,7 +680,14 @@ impl Plan {
         })?;
         let base = Arc::new(source.load(session)?);
         let mut store = MemoStore::new();
-        execute(self, session, GraphHandle::Shared(base), &mut store, usize::MAX)
+        execute(
+            self,
+            session,
+            GraphHandle::Shared(base),
+            &mut store,
+            usize::MAX,
+            &crate::util::sync::CancelToken::new(),
+        )
     }
 }
 
@@ -731,6 +755,7 @@ mod tests {
             GraphHandle::Borrowed(&g),
             &mut store,
             usize::MAX,
+            &crate::util::sync::CancelToken::new(),
         )
         .unwrap();
         assert_eq!(store.derives, 1, "one symmetrize for transform + 2 stages");

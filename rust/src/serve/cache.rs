@@ -243,7 +243,13 @@ impl SnapshotCache {
             key,
             armed: true,
         };
-        let loaded = load();
+        // Chaos harness: a failed load must release the claim (one waiter
+        // retries) and fail the requesting job with a typed error — the
+        // exact path a corrupt or missing dataset takes.
+        let loaded = match crate::util::fault::point!("cache-load") {
+            Some(act) => act.apply("cache-load").and_then(|()| load()),
+            None => load(),
+        };
         let mut inner = self.inner.lock().unwrap();
         match loaded {
             Ok(g) => {

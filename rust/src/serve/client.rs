@@ -47,6 +47,20 @@ use std::time::{Duration, Instant};
 /// a dead server is noticed within one slice, not one full timeout.
 pub const WAIT_SLICE: Duration = Duration::from_secs(10);
 
+/// Client-side socket I/O timeout, applied to every connection this
+/// client opens: a dead or wedged server surfaces as a typed I/O error
+/// within this bound instead of hanging the caller forever. Must exceed
+/// [`WAIT_SLICE`] (a healthy `WAIT` round trip keeps the socket quiet for
+/// a full slice while the server parks on its condvar).
+pub const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Reconnect attempts after a transport failure before giving up
+/// (exponential backoff between them, [`RECONNECT_BACKOFF`] × 4ⁿ).
+pub const RECONNECT_ATTEMPTS: usize = 3;
+
+/// Initial backoff between reconnect attempts.
+pub const RECONNECT_BACKOFF: Duration = Duration::from_millis(25);
+
 /// Client for a [`Server`](crate::serve::Server) over a connection
 /// transport `T`. See the [module docs](self) for the protocol surface.
 pub struct RemoteClient<T: Transport> {
@@ -66,15 +80,52 @@ pub struct RemoteClient<T: Transport> {
 pub type ServeClient = RemoteClient<UdsTransport>;
 
 impl<T: Transport> RemoteClient<T> {
-    /// Connect (and authenticate, where `transport` requires it).
+    /// Connect (and authenticate, where `transport` requires it). The
+    /// connection carries [`IO_TIMEOUT`] in both directions.
     pub fn open(transport: T) -> Result<RemoteClient<T>> {
         let conn = transport.connect()?;
+        // Best-effort: a transport that cannot set timeouts still works,
+        // it just hangs as long as the OS lets it.
+        let _ = conn.set_timeouts(Some(IO_TIMEOUT), Some(IO_TIMEOUT));
         Ok(RemoteClient {
             reader: BufReader::new(conn.try_clone()?),
             writer: BufWriter::new(conn),
             transport,
             poisoned: None,
         })
+    }
+
+    /// Tear down the current connection and dial a fresh one through the
+    /// same transport (re-authenticating where required), with bounded
+    /// exponential backoff. Clears stream poisoning — a fresh connection
+    /// has no leftover frames. The idempotent methods call this
+    /// automatically after a transport failure; it is public so callers
+    /// holding a poisoned client can recover by hand too.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let mut backoff = RECONNECT_BACKOFF;
+        let mut last = None;
+        for attempt in 0..RECONNECT_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff *= 4;
+            }
+            match self.transport.connect() {
+                Ok(conn) => {
+                    let _ = conn.set_timeouts(Some(IO_TIMEOUT), Some(IO_TIMEOUT));
+                    self.reader = BufReader::new(conn.try_clone()?);
+                    self.writer = BufWriter::new(conn);
+                    self.poisoned = None;
+                    return Ok(());
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            crate::error::UniGpsError::ipc(format!(
+                "reconnect to {} failed",
+                self.transport.describe()
+            ))
+        }))
     }
 
     /// The endpoint this client talks to.
@@ -101,6 +152,57 @@ impl<T: Transport> RemoteClient<T> {
             Ok(resp)
         } else {
             Err(decode_error(&resp))
+        }
+    }
+
+    /// [`RemoteClient::call`] for **idempotent** methods only (status,
+    /// wait, result, stats, cancel): a transport-level failure — the
+    /// connection dropped or timed out before a coherent reply — triggers
+    /// one [`RemoteClient::reconnect`] and one resend. Typed server ERR
+    /// frames are *not* retried (the server answered; the answer stands),
+    /// and `submit`/`submit_plan` never come through here — blind
+    /// resubmission could run a non-idempotent job twice
+    /// ([`Client::submit_with_retry`] stays the explicit opt-in, and only
+    /// for typed backpressure rejections).
+    fn call_idempotent(&mut self, m: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        if self.poisoned.is_some() {
+            self.reconnect()?;
+        }
+        match self.call(m, payload) {
+            Err(crate::error::UniGpsError::Io(_)) => {
+                self.reconnect()?;
+                self.call(m, payload)
+            }
+            other => other,
+        }
+    }
+
+    /// One `RESULT` round trip (see [`Client::result`] for the retry
+    /// wrapper): request, then either a typed first-frame ERR or a
+    /// chunked stream reassembled bit-exact. Mid-stream failures poison
+    /// the connection.
+    fn result_once(&mut self, id: JobId) -> Result<Arc<RunResult>> {
+        self.check_sync()?;
+        let mut req = Vec::new();
+        put_u64(&mut req, id);
+        crate::ipc::socket_rpc::write_frame(&mut self.writer, method::RESULT, &req)?;
+        let (head, payload) = crate::ipc::socket_rpc::read_frame(&mut self.reader)?;
+        match head {
+            reply::ERR => Err(decode_error(&payload)),
+            reply::RESULT_BEGIN => match read_result_stream_body(&mut self.reader, &payload) {
+                Ok(table) => Ok(Arc::new(decode_result(&table)?)),
+                Err(e) => {
+                    self.poisoned = Some(e.message());
+                    Err(e)
+                }
+            },
+            other => {
+                let e = crate::error::UniGpsError::ipc(format!(
+                    "expected RESULT_BEGIN or ERR, got head {other}"
+                ));
+                self.poisoned = Some(e.message());
+                Err(e)
+            }
         }
     }
 }
@@ -140,7 +242,7 @@ impl<T: Transport> Client for RemoteClient<T> {
     fn status(&mut self, id: JobId) -> Result<JobStatus> {
         let mut req = Vec::new();
         put_u64(&mut req, id);
-        JobStatus::decode(&self.call(method::STATUS, &req)?)
+        JobStatus::decode(&self.call_idempotent(method::STATUS, &req)?)
     }
 
     /// Long-poll the server until the job is terminal: each round trip is
@@ -156,7 +258,7 @@ impl<T: Transport> Client for RemoteClient<T> {
             let mut req = Vec::new();
             put_u64(&mut req, id);
             put_u64(&mut req, slice.as_millis() as u64);
-            let st = JobStatus::decode(&self.call(method::WAIT, &req)?)?;
+            let st = JobStatus::decode(&self.call_idempotent(method::WAIT, &req)?)?;
             if st.state.is_terminal() {
                 return self.result(id);
             }
@@ -169,36 +271,34 @@ impl<T: Transport> Client for RemoteClient<T> {
     /// Fetch a finished job's result table as a chunked stream,
     /// reassembled bit-exact (length, chunk count and checksum verified).
     /// A clean first-frame ERR (job failed, unknown id, table over the
-    /// stream cap) leaves the connection usable; a failure *inside* the
-    /// stream poisons this client — leftover chunk frames would otherwise
-    /// be misread as the next call's response.
+    /// stream cap) leaves the connection usable and is not retried. A
+    /// failure *inside* the stream poisons the connection — leftover
+    /// chunk frames would otherwise be misread as the next call's
+    /// response — and, `RESULT` being idempotent, the client reconnects
+    /// and retries the fetch once before surfacing the error.
     fn result(&mut self, id: JobId) -> Result<Arc<RunResult>> {
-        self.check_sync()?;
-        let mut req = Vec::new();
-        put_u64(&mut req, id);
-        crate::ipc::socket_rpc::write_frame(&mut self.writer, method::RESULT, &req)?;
-        let (head, payload) = crate::ipc::socket_rpc::read_frame(&mut self.reader)?;
-        match head {
-            reply::ERR => Err(decode_error(&payload)),
-            reply::RESULT_BEGIN => match read_result_stream_body(&mut self.reader, &payload) {
-                Ok(table) => Ok(Arc::new(decode_result(&table)?)),
-                Err(e) => {
-                    self.poisoned = Some(e.message());
-                    Err(e)
-                }
-            },
-            other => {
-                let e = crate::error::UniGpsError::ipc(format!(
-                    "expected RESULT_BEGIN or ERR, got head {other}"
-                ));
-                self.poisoned = Some(e.message());
-                Err(e)
+        if self.poisoned.is_some() {
+            self.reconnect()?;
+        }
+        match self.result_once(id) {
+            Err(e)
+                if self.poisoned.is_some() || matches!(e, crate::error::UniGpsError::Io(_)) =>
+            {
+                self.reconnect()?;
+                self.result_once(id)
             }
+            other => other,
         }
     }
 
+    fn cancel(&mut self, id: JobId) -> Result<JobStatus> {
+        let mut req = Vec::new();
+        put_u64(&mut req, id);
+        JobStatus::decode(&self.call_idempotent(method::CANCEL, &req)?)
+    }
+
     fn stats(&mut self) -> Result<ServeStats> {
-        ServeStats::decode(&self.call(method::STATS, &[])?)
+        ServeStats::decode(&self.call_idempotent(method::STATS, &[])?)
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -237,6 +337,20 @@ mod tests {
     #[test]
     fn wait_slice_fits_under_the_server_cap() {
         assert!(WAIT_SLICE.as_millis() as u64 <= crate::serve::server::MAX_WAIT_SLICE_MS);
+    }
+
+    #[test]
+    fn io_timeout_outlasts_a_wait_slice() {
+        // A healthy WAIT round trip keeps the socket quiet for a full
+        // slice; the client must not cut the connection under it.
+        assert!(IO_TIMEOUT > WAIT_SLICE);
+        // Same invariant server-side: the default per-connection read
+        // timeout must outlast the server's own WAIT park cap, or idle
+        // waiting clients would be dropped mid-long-poll.
+        let cfg = crate::serve::ServeConfig::new("/tmp/x.sock");
+        let read = cfg.read_timeout.expect("server read timeout defaults on");
+        assert!(read.as_millis() as u64 > crate::serve::server::MAX_WAIT_SLICE_MS);
+        assert!(cfg.write_timeout.is_some(), "write timeout defaults on");
     }
 
     #[test]

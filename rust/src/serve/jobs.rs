@@ -24,6 +24,7 @@
 //! | `kind` + `vertices` + `edges` + `seed` | seeded synthetic generator | — |
 //! | `graph` | load from a file path (format by extension) | — |
 //! | `delay_ms` | synthetic service time before execution (test/bench aid, ≤ 60 s) | 0 |
+//! | `deadline_ms` | cancel the job if not terminal this long after admission (0 = none, ≤ 1 h) | 0 |
 //!
 //! Exactly one graph source (`dataset`, `graph`, or synthetic) must be
 //! given — in the flat keys or the plan's top section. Plans can also be
@@ -57,6 +58,12 @@ pub type JobId = u64;
 /// scheduler slot indefinitely.
 pub const MAX_DELAY_MS: u64 = 60_000;
 
+/// Largest `deadline_ms` a job spec may request (1 h). The deadline clock
+/// starts at admission and covers queue time; a value past any sane job
+/// length is indistinguishable from "no deadline", so it is capped rather
+/// than honoured literally.
+pub const MAX_DEADLINE_MS: u64 = 3_600_000;
+
 /// A parsed, validated job: the plan to execute, and the session resolved
 /// from the plan defaults over the server session.
 #[derive(Debug, Clone)]
@@ -68,6 +75,10 @@ pub struct JobSpec {
     /// Synthetic pre-execution service time in milliseconds (test/bench
     /// aid; 0 in normal operation).
     pub delay_ms: u64,
+    /// Milliseconds after admission at which the scheduler's watchdog
+    /// cancels the job if it has not reached a terminal state (0 = no
+    /// deadline).
+    pub deadline_ms: u64,
 }
 
 impl JobSpec {
@@ -86,6 +97,9 @@ impl JobSpec {
         plan.steps.push(PlanStep::Run(stage));
         if let Some(d) = cfg.get("delay_ms") {
             plan.defaults.set("delay_ms", d);
+        }
+        if let Some(d) = cfg.get("deadline_ms") {
+            plan.defaults.set("deadline_ms", d);
         }
         JobSpec::from_plan_with_session(plan, base.overlay_config(&cfg)?)
     }
@@ -114,10 +128,17 @@ impl JobSpec {
                 "delay_ms must be <= {MAX_DELAY_MS}, got {delay_ms}"
             )));
         }
+        let deadline_ms = plan.defaults.get_usize("deadline_ms", 0)? as u64;
+        if deadline_ms > MAX_DEADLINE_MS {
+            return Err(UniGpsError::Config(format!(
+                "deadline_ms must be <= {MAX_DEADLINE_MS}, got {deadline_ms}"
+            )));
+        }
         Ok(JobSpec {
             session,
             plan,
             delay_ms,
+            deadline_ms,
         })
     }
 
@@ -143,7 +164,8 @@ fn no_source() -> UniGpsError {
     )
 }
 
-/// Job state machine: `Queued → Running → Done | Failed`.
+/// Job state machine: `Queued → Running → Done | Failed | Cancelled`
+/// (queued jobs can also go straight to `Cancelled`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
     /// Admitted, waiting in the FIFO queue.
@@ -154,6 +176,10 @@ pub enum JobState {
     Done,
     /// Finished with a typed error (see [`JobStatus::error`]).
     Failed,
+    /// Cooperatively cancelled — by `Client::cancel`, the deadline
+    /// watchdog, or the scheduler's drain grace period. Terminal; the
+    /// cancellation reason travels in [`JobStatus::error`].
+    Cancelled,
 }
 
 impl JobState {
@@ -164,12 +190,13 @@ impl JobState {
             JobState::Running => "running",
             JobState::Done => "done",
             JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
         }
     }
 
     /// True once the job can make no further progress.
     pub fn is_terminal(&self) -> bool {
-        matches!(self, JobState::Done | JobState::Failed)
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
     }
 
     fn code(self) -> u32 {
@@ -178,6 +205,7 @@ impl JobState {
             JobState::Running => 1,
             JobState::Done => 2,
             JobState::Failed => 3,
+            JobState::Cancelled => 4,
         }
     }
 
@@ -187,6 +215,7 @@ impl JobState {
             1 => JobState::Running,
             2 => JobState::Done,
             3 => JobState::Failed,
+            4 => JobState::Cancelled,
             other => return Err(UniGpsError::Ipc(format!("bad job-state code {other}"))),
         })
     }
@@ -407,6 +436,7 @@ kind = rmat\nvertices = 128\nedges = 512\nseed = 1\ndelay_ms = 5\n\n\
             "vertices = 10000000000000000",        // allocation-bomb vertices
             "vertices = 64\nedges = 10000000000000000", // allocation-bomb edges
             "vertices = 64\ndelay_ms = 86400000",  // slot-pinning delay
+            "vertices = 64\ndeadline_ms = 86400000", // over-cap deadline
             "[stage]\nalgo = cc",                  // plan without a source
             "dataset = lj\n[stage]\nalgo = cc\nengine = warp", // bad stage override
         ] {
@@ -461,6 +491,11 @@ kind = rmat\nvertices = 128\nedges = 512\nseed = 1\ndelay_ms = 5\n\n\
                 state: JobState::Failed,
                 error: Some("engine error: boom".into()),
             },
+            JobStatus {
+                id: 9,
+                state: JobState::Cancelled,
+                error: Some("deadline exceeded".into()),
+            },
         ] {
             assert_eq!(JobStatus::decode(&status.encode()).unwrap(), status);
         }
@@ -473,7 +508,19 @@ kind = rmat\nvertices = 128\nedges = 512\nseed = 1\ndelay_ms = 5\n\n\
         assert!(!JobState::Running.is_terminal());
         assert!(JobState::Done.is_terminal());
         assert!(JobState::Failed.is_terminal());
+        assert!(JobState::Cancelled.is_terminal());
         assert_eq!(JobState::Running.to_string(), "running");
+        assert_eq!(JobState::Cancelled.to_string(), "cancelled");
+    }
+
+    #[test]
+    fn deadline_ms_parses_and_caps() {
+        let spec =
+            JobSpec::parse("vertices = 64\nedges = 128\nseed = 1\ndeadline_ms = 500", &base())
+                .unwrap();
+        assert_eq!(spec.deadline_ms, 500);
+        let spec = JobSpec::parse("vertices = 64\nedges = 128\nseed = 1", &base()).unwrap();
+        assert_eq!(spec.deadline_ms, 0, "no deadline by default");
     }
 
     #[test]

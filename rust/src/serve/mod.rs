@@ -125,6 +125,11 @@ pub mod method {
     /// [`super::server::MAX_WAIT_SLICE_MS`]) and responds with the job's
     /// [`super::JobStatus`], terminal or not.
     pub const WAIT: u32 = 22;
+    /// Cooperatively cancel a job: payload is the `u64` job id; response
+    /// is the job's [`super::JobStatus`] after the cancel was applied (a
+    /// running job may still report `Running` — it unwinds to `Cancelled`
+    /// within about one superstep; long-poll with `WAIT` to observe it).
+    pub const CANCEL: u32 = 23;
     /// Orderly server shutdown (drains queued and running jobs first).
     pub use crate::ipc::protocol::method::SHUTDOWN;
 }
@@ -154,6 +159,16 @@ pub struct ServeConfig {
     /// `max(1, total_workers / slots)` workers (a spec asking for fewer
     /// keeps its smaller count).
     pub total_workers: usize,
+    /// Per-connection socket read timeout on the server side. Must exceed
+    /// the `WAIT` long-poll slice
+    /// ([`server::MAX_WAIT_SLICE_MS`]) or idle-but-healthy waiting clients
+    /// would be dropped; an idle or wedged client past it releases its
+    /// handler thread. `None` disables the timeout.
+    pub read_timeout: Option<std::time::Duration>,
+    /// Per-connection socket write timeout on the server side: a client
+    /// that stops draining a streamed result cannot pin a handler thread.
+    /// `None` disables the timeout.
+    pub write_timeout: Option<std::time::Duration>,
 }
 
 impl ServeConfig {
@@ -172,6 +187,8 @@ impl ServeConfig {
             queue_cap: 64,
             cache_budget: 512 << 20,
             total_workers: cores,
+            read_timeout: Some(std::time::Duration::from_secs(120)),
+            write_timeout: Some(std::time::Duration::from_secs(30)),
         }
     }
 
@@ -226,6 +243,7 @@ mod tests {
             method::SUBMIT_PLAN,
             method::HELLO,
             method::WAIT,
+            method::CANCEL,
         ] {
             for v in [
                 vc::INIT_PROGRAM,

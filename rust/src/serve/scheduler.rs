@@ -16,8 +16,15 @@
 //! cost one load plus one derivation. Every stage is capped at
 //! `min(requested, total_workers / slots)` engine workers so concurrent
 //! jobs split the machine's cores instead of oversubscribing them.
-//! Shutdown is graceful: already-admitted jobs finish, then the runners
-//! exit.
+//!
+//! **Cancellation.** Every job owns a [`CancelToken`] threaded into its
+//! plan's engine runs. [`Scheduler::cancel`] cancels a queued job in place
+//! and raises a running job's token (it unwinds within about one
+//! superstep to the `Cancelled` terminal state); a per-job `deadline_ms`
+//! arms a watchdog thread that does the same when the deadline passes; and
+//! [`Scheduler::drain`] gives in-flight jobs a grace period at shutdown
+//! before cancelling the stragglers, so a wedged job can no longer stall
+//! graceful drain forever.
 //!
 //! [`UniGpsError::Config`]: crate::error::UniGpsError::Config
 //! [`UniGpsError::Backpressure`]: crate::error::UniGpsError::Backpressure
@@ -32,7 +39,7 @@ use crate::serve::cache::SnapshotCache;
 use crate::serve::jobs::{JobId, JobSpec, JobState, JobStatus};
 use crate::serve::ServeConfig;
 use crate::session::Session;
-use crate::util::sync::{Condvar, Mutex};
+use crate::util::sync::{CancelToken, Condvar, Mutex};
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -49,6 +56,8 @@ pub struct SchedStats {
     pub completed: u64,
     /// Jobs finished with an error.
     pub failed: u64,
+    /// Jobs cancelled (client `CANCEL`, deadline watchdog, or drain).
+    pub cancelled: u64,
     /// Jobs currently waiting in the queue.
     pub queued: usize,
     /// Jobs currently executing.
@@ -65,6 +74,13 @@ struct JobRecord {
     state: JobState,
     error: Option<String>,
     result: Option<Arc<RunResult>>,
+    /// Per-job cancellation token, shared with the engine runtime while the
+    /// job runs. Raised by [`Scheduler::cancel`], the deadline watchdog, or
+    /// the drain grace period.
+    cancel: CancelToken,
+    /// Absolute deadline resolved from `spec.deadline_ms` at admission
+    /// (`None` = no deadline). The clock covers queue time.
+    deadline: Option<Instant>,
 }
 
 struct Inner {
@@ -77,6 +93,7 @@ struct Inner {
     rejected: u64,
     completed: u64,
     failed: u64,
+    cancelled: u64,
     running: usize,
     shutdown: bool,
 }
@@ -88,6 +105,11 @@ struct Shared {
     /// Signals waiters ([`Scheduler::wait_terminal`], the server's `WAIT`
     /// long-poll) that some job reached a terminal state.
     done: Condvar,
+    /// Signals the deadline watchdog that its schedule may have changed
+    /// (new job with a deadline, shutdown). Separate from `work` so a
+    /// submit's `notify_one` can never be consumed by the watchdog instead
+    /// of a runner.
+    watch: Condvar,
     cache: Arc<SnapshotCache>,
     /// The server session job specs are layered over.
     base: Session,
@@ -96,10 +118,15 @@ struct Shared {
     job_workers: usize,
 }
 
+/// Default grace period [`Scheduler::shutdown`] allows in-flight jobs
+/// before cancelling them (see [`Scheduler::drain`]).
+pub const DEFAULT_DRAIN_GRACE: Duration = Duration::from_secs(30);
+
 /// The job scheduler. Create with [`Scheduler::start`]; share via `Arc`.
 pub struct Scheduler {
     shared: Arc<Shared>,
     runners: Mutex<Vec<JoinHandle<()>>>,
+    watchdog: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl Scheduler {
@@ -117,11 +144,13 @@ impl Scheduler {
                 rejected: 0,
                 completed: 0,
                 failed: 0,
+                cancelled: 0,
                 running: 0,
                 shutdown: false,
             }),
             work: Condvar::new(),
             done: Condvar::new(),
+            watch: Condvar::new(),
             cache,
             base,
             queue_cap: cfg.queue_cap.max(1),
@@ -138,9 +167,19 @@ impl Scheduler {
                     .expect("spawn scheduler slot")
             })
             .collect();
+        let watchdog = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("unigps-watchdog".into())
+                // lint: allow-panic: spawned once at server startup, never
+                // on a client request path.
+                .spawn(move || watchdog_loop(&shared))
+                .expect("spawn deadline watchdog")
+        };
         Scheduler {
             shared,
             runners: Mutex::new(runners),
+            watchdog: Mutex::new(Some(watchdog)),
         }
     }
 
@@ -182,6 +221,8 @@ impl Scheduler {
         }
         let id = inner.next_id;
         inner.next_id += 1;
+        let deadline = (spec.deadline_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(spec.deadline_ms));
         inner.jobs.insert(
             id,
             JobRecord {
@@ -189,13 +230,42 @@ impl Scheduler {
                 state: JobState::Queued,
                 error: None,
                 result: None,
+                cancel: CancelToken::new(),
+                deadline,
             },
         );
         inner.queue.push_back(id);
         inner.submitted += 1;
         drop(inner);
         self.shared.work.notify_one();
+        if deadline.is_some() {
+            // The watchdog re-derives its next wake-up from the job table.
+            self.shared.watch.notify_one();
+        }
         Ok(id)
+    }
+
+    /// Cooperatively cancel a job. A `Queued` job goes terminal
+    /// (`Cancelled`) immediately; a `Running` job has its token raised and
+    /// unwinds within about one superstep (the returned status may still
+    /// say `Running` — use [`Scheduler::wait_terminal`] to observe the
+    /// transition). Terminal jobs are unaffected (cancel is not
+    /// retroactive: a `Done` job stays `Done`). Unknown ids are the same
+    /// typed [`UniGpsError::Serve`] as [`Scheduler::status`].
+    ///
+    /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+    pub fn cancel(&self, id: JobId, reason: &str) -> Result<JobStatus> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        if !inner.jobs.contains_key(&id) {
+            return Err(UniGpsError::serve(format!("unknown job {id}")));
+        }
+        let went_terminal = cancel_locked(&mut inner, id, reason);
+        let st = status_of(&inner, id)?;
+        drop(inner);
+        if went_terminal {
+            self.shared.done.notify_all();
+        }
+        Ok(st)
     }
 
     /// A job's status. Unknown ids (never assigned, or finished jobs
@@ -258,6 +328,12 @@ impl Scheduler {
                 "job {id} failed: {}",
                 rec.error.as_deref().unwrap_or("unknown error")
             ))),
+            // Typed so clients can match `is_cancelled()` — the ERR kind
+            // survives the wire round trip (`ErrorKind::Cancelled`).
+            JobState::Cancelled => Err(UniGpsError::cancelled(format!(
+                "job {id}: {}",
+                rec.error.as_deref().unwrap_or("no reason recorded")
+            ))),
             state => Err(UniGpsError::serve(format!("job {id} is {state}, not done"))),
         }
     }
@@ -270,21 +346,74 @@ impl Scheduler {
             rejected: inner.rejected,
             completed: inner.completed,
             failed: inner.failed,
+            cancelled: inner.cancelled,
             queued: inner.queue.len(),
             running: inner.running,
         }
     }
 
-    /// Graceful shutdown: refuse new submits, drain queued and running
-    /// jobs, join the runner threads. Idempotent.
+    /// Graceful shutdown with the default grace period
+    /// ([`DEFAULT_DRAIN_GRACE`]); see [`Scheduler::drain`]. Idempotent.
     pub fn shutdown(&self) {
+        self.drain(DEFAULT_DRAIN_GRACE);
+    }
+
+    /// Bounded-time shutdown: refuse new submits, give queued and running
+    /// jobs `grace` to finish, then cancel whatever is still live
+    /// (reason: "scheduler drain") instead of waiting forever, and join
+    /// the runner and watchdog threads. A zero-slot scheduler (test aid)
+    /// has nothing to drain its queue, so its queued jobs are cancelled
+    /// immediately. Idempotent.
+    pub fn drain(&self, grace: Duration) {
         {
             let mut inner = self.shared.inner.lock().unwrap();
             inner.shutdown = true;
         }
         self.shared.work.notify_all();
+        self.shared.watch.notify_all();
         let handles: Vec<_> = self.runners.lock().unwrap().drain(..).collect();
+        let grace = if handles.is_empty() { Duration::ZERO } else { grace };
+        let deadline = Instant::now() + grace;
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            loop {
+                if inner.queue.is_empty() && inner.running == 0 {
+                    break;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    let live: Vec<JobId> = inner
+                        .jobs
+                        .iter()
+                        .filter(|(_, rec)| !rec.state.is_terminal())
+                        .map(|(&id, _)| id)
+                        .collect();
+                    let mut woke = false;
+                    for id in live {
+                        woke |= cancel_locked(&mut inner, id, "scheduler drain");
+                    }
+                    if woke {
+                        self.shared.done.notify_all();
+                    }
+                    // Running jobs unwind on their own token within about
+                    // one superstep; the joins below bound the wait.
+                    break;
+                }
+                let (guard, _) = self
+                    .shared
+                    .done
+                    .wait_timeout(inner, deadline.saturating_duration_since(now))
+                    .unwrap();
+                inner = guard;
+            }
+        }
         for h in handles {
+            let _ = h.join();
+        }
+        // The queue is drained and the runners are gone: wake the watchdog
+        // so it observes the exit condition.
+        self.shared.watch.notify_all();
+        if let Some(h) = self.watchdog.lock().unwrap().take() {
             let _ = h.join();
         }
     }
@@ -306,12 +435,28 @@ impl std::fmt::Debug for Scheduler {
 /// queue.
 fn runner_loop(shared: &Shared) {
     loop {
-        let id = {
+        // Pop and mark Running under one lock hold, so a concurrent
+        // [`Scheduler::cancel`] can never observe a popped-but-unmarked job
+        // and race its terminal transition with ours.
+        let (id, spec, cancel) = {
             let mut inner = shared.inner.lock().unwrap();
             loop {
                 if let Some(id) = inner.queue.pop_front() {
+                    // Defensive: cancel_locked purges queue entries when it
+                    // cancels a queued job, so a popped id is always live —
+                    // but a stale entry must be skipped, never re-run.
+                    if !matches!(
+                        inner.jobs.get(&id).map(|rec| rec.state),
+                        Some(JobState::Queued)
+                    ) {
+                        continue;
+                    }
                     inner.running += 1;
-                    break id;
+                    // lint: allow-panic: presence was checked just above,
+                    // under the same lock hold.
+                    let rec = inner.jobs.get_mut(&id).expect("queued job has a record");
+                    rec.state = JobState::Running;
+                    break (id, rec.spec.clone(), rec.cancel.clone());
                 }
                 if inner.shutdown {
                     return;
@@ -319,28 +464,20 @@ fn runner_loop(shared: &Shared) {
                 inner = shared.work.wait(inner).unwrap();
             }
         };
-        let spec = {
-            let mut inner = shared.inner.lock().unwrap();
-            // lint: allow-panic: queued ids always have records (submit_spec
-            // inserts the record before queueing); a violation is a
-            // scheduler bug, not a client-reachable state.
-            let rec = inner.jobs.get_mut(&id).expect("queued job has a record");
-            rec.state = JobState::Running;
-            rec.spec.clone()
-        };
         // A panicking job (malformed generator parameters, engine bug) must
         // not kill the slot thread or wedge the record in Running — it
         // becomes a Failed job like any other error.
-        let outcome =
-            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(shared, &spec)))
-                .unwrap_or_else(|payload| {
-                    let msg = payload
-                        .downcast_ref::<&str>()
-                        .map(|s| (*s).to_string())
-                        .or_else(|| payload.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "non-string panic payload".to_string());
-                    Err(UniGpsError::serve(format!("job panicked: {msg}")))
-                });
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(shared, &spec, &cancel)
+        }))
+        .unwrap_or_else(|payload| {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(UniGpsError::serve(format!("job panicked: {msg}")))
+        });
         let mut inner = shared.inner.lock().unwrap();
         inner.running -= 1;
         match outcome {
@@ -351,6 +488,13 @@ fn runner_loop(shared: &Shared) {
                 let rec = inner.jobs.get_mut(&id).expect("running job has a record");
                 rec.state = JobState::Done;
                 rec.result = Some(Arc::new(result));
+            }
+            Err(e) if e.is_cancelled() => {
+                inner.cancelled += 1;
+                // lint: allow-panic: as above.
+                let rec = inner.jobs.get_mut(&id).expect("running job has a record");
+                rec.state = JobState::Cancelled;
+                rec.error = Some(e.to_string());
             }
             Err(e) => {
                 inner.failed += 1;
@@ -365,6 +509,75 @@ fn runner_loop(shared: &Shared) {
         drop(inner);
         // Wake every waiter; each rechecks its own job id.
         shared.done.notify_all();
+    }
+}
+
+/// Cancel under the scheduler lock. `Queued` → terminal `Cancelled` in
+/// place (the stale queue entry is purged); `Running` → raise the token
+/// and let the runner record the terminal state; terminal states are
+/// untouched. Returns whether a job went terminal here (the caller must
+/// then notify the `done` condvar).
+fn cancel_locked(inner: &mut Inner, id: JobId, reason: &str) -> bool {
+    let Some(rec) = inner.jobs.get_mut(&id) else {
+        return false;
+    };
+    match rec.state {
+        JobState::Queued => {
+            rec.state = JobState::Cancelled;
+            rec.error = Some(format!("cancelled: {reason}"));
+            rec.cancel.cancel(reason);
+            inner.cancelled += 1;
+            inner.queue.retain(|&q| q != id);
+            finish_record(inner, id);
+            true
+        }
+        JobState::Running => {
+            rec.cancel.cancel(reason);
+            false
+        }
+        _ => false,
+    }
+}
+
+/// Deadline watchdog: sleeps until the earliest live deadline (or
+/// indefinitely when none is set), cancels overdue jobs, and exits once
+/// the scheduler has shut down with nothing left to watch.
+fn watchdog_loop(shared: &Shared) {
+    let mut inner = shared.inner.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        let mut next: Option<Instant> = None;
+        let mut overdue: Vec<JobId> = Vec::new();
+        for (&id, rec) in inner.jobs.iter() {
+            if rec.state.is_terminal() {
+                continue;
+            }
+            match rec.deadline {
+                Some(dl) if dl <= now => overdue.push(id),
+                Some(dl) => next = Some(next.map_or(dl, |n| n.min(dl))),
+                None => {}
+            }
+        }
+        let mut woke = false;
+        for id in overdue {
+            woke |= cancel_locked(&mut inner, id, "deadline exceeded");
+        }
+        if woke {
+            shared.done.notify_all();
+        }
+        if inner.shutdown && inner.queue.is_empty() && inner.running == 0 {
+            return;
+        }
+        inner = match next {
+            Some(dl) => {
+                let (guard, _) = shared
+                    .watch
+                    .wait_timeout(inner, dl.saturating_duration_since(now))
+                    .unwrap();
+                guard
+            }
+            None => shared.watch.wait(inner).unwrap(),
+        };
     }
 }
 
@@ -415,10 +628,24 @@ impl SnapshotStore for CachedStore<'_> {
 
 /// Execute one job: resolve the base snapshot through the dataset-level
 /// cache, run the plan with a derived-key store, capping every stage at
-/// the slot's core share.
-fn run_job(shared: &Shared, spec: &JobSpec) -> Result<RunResult> {
-    if spec.delay_ms > 0 {
-        std::thread::sleep(std::time::Duration::from_millis(spec.delay_ms));
+/// the slot's core share. `cancel` is polled during the synthetic delay
+/// and threaded into every plan stage's engine run.
+fn run_job(shared: &Shared, spec: &JobSpec, cancel: &CancelToken) -> Result<RunResult> {
+    // Sliced sleep so a cancel during the synthetic service delay frees
+    // the slot in ~20 ms instead of the full delay.
+    let mut remaining = spec.delay_ms;
+    while remaining > 0 {
+        if cancel.is_cancelled() {
+            return Err(UniGpsError::cancelled(cancel.reason()));
+        }
+        let slice = remaining.min(20);
+        std::thread::sleep(std::time::Duration::from_millis(slice));
+        remaining -= slice;
+    }
+    // Chaos harness: a slot that fails here must record a Failed job and
+    // keep serving — never a dead slot or a record wedged in Running.
+    if let Some(act) = crate::util::fault::point!("sched-run") {
+        act.apply("sched-run")?;
     }
     let source = spec.dataset();
     // The base key carries the job's partition strategy (resolved from
@@ -443,6 +670,7 @@ fn run_job(shared: &Shared, spec: &JobSpec) -> Result<RunResult> {
         GraphHandle::Shared(base),
         &mut store,
         shared.job_workers,
+        cancel,
     )?;
     Ok(out.result)
 }
@@ -606,6 +834,143 @@ mod tests {
         let err = sched.wait_terminal(999, Duration::from_millis(1)).unwrap_err();
         assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
         sched.shutdown();
+    }
+
+    #[test]
+    fn cancel_queued_job_goes_terminal_immediately() {
+        // Zero slots: the job can never start, so cancellation is the only
+        // way it goes terminal.
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(0, 4),
+        );
+        let id = sched.submit(SPEC).unwrap();
+        let st = sched.cancel(id, "client cancel").unwrap();
+        assert_eq!(st.state, JobState::Cancelled);
+        assert!(st.error.as_deref().unwrap_or("").contains("client cancel"));
+        let s = sched.stats();
+        assert_eq!((s.cancelled, s.queued), (1, 0), "queue entry purged");
+        // Terminal: result is a typed error, wait returns instantly.
+        assert!(sched.result(id).is_err());
+        let st = sched.wait_terminal(id, Duration::from_secs(5)).unwrap();
+        assert_eq!(st.state, JobState::Cancelled);
+        // Cancelling again is a no-op.
+        let st = sched.cancel(id, "again").unwrap();
+        assert_eq!(st.state, JobState::Cancelled);
+        assert_eq!(sched.stats().cancelled, 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn cancel_running_job_frees_the_slot_for_queued_work() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        // Long synthetic delay keeps the job Running deterministically.
+        let slow = sched.submit(&format!("{SPEC}\ndelay_ms = 30000")).unwrap();
+        let fast = sched.submit(SPEC).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while sched.status(slow).unwrap().state != JobState::Running {
+            assert!(Instant::now() < deadline, "slow job never started");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let t = Instant::now();
+        sched.cancel(slow, "client cancel").unwrap();
+        let st = sched.wait_terminal(slow, Duration::from_secs(10)).unwrap();
+        assert_eq!(st.state, JobState::Cancelled, "error: {:?}", st.error);
+        assert!(
+            t.elapsed() < Duration::from_secs(5),
+            "cancel did not wait out the 30 s delay"
+        );
+        // The freed slot runs the queued job to completion.
+        let st = sched.wait_terminal(fast, Duration::from_secs(30)).unwrap();
+        assert_eq!(st.state, JobState::Done, "error: {:?}", st.error);
+        assert_eq!(sched.stats().cancelled, 1);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn unknown_cancel_is_typed() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(0, 2),
+        );
+        let err = sched.cancel(999, "nope").unwrap_err();
+        assert!(matches!(err, UniGpsError::Serve(_)), "{err:?}");
+        sched.shutdown();
+    }
+
+    #[test]
+    fn deadline_watchdog_cancels_overdue_jobs() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        // The delay far exceeds the deadline: the watchdog must cut it.
+        let id = sched
+            .submit(&format!("{SPEC}\ndelay_ms = 30000\ndeadline_ms = 100"))
+            .unwrap();
+        let st = sched.wait_terminal(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(st.state, JobState::Cancelled, "error: {:?}", st.error);
+        assert!(
+            st.error.as_deref().unwrap_or("").contains("deadline"),
+            "reason names the deadline: {:?}",
+            st.error
+        );
+        // A queued job's deadline also covers queue time: behind the slow
+        // one above there is no slot, so this one expires while Queued.
+        let sched2 = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(0, 4),
+        );
+        let id = sched2.submit(&format!("{SPEC}\ndeadline_ms = 50")).unwrap();
+        let st = sched2.wait_terminal(id, Duration::from_secs(10)).unwrap();
+        assert_eq!(st.state, JobState::Cancelled);
+        sched.shutdown();
+        sched2.shutdown();
+    }
+
+    #[test]
+    fn jobs_without_deadline_are_untouched_by_the_watchdog() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        let id = sched.submit(&format!("{SPEC}\ndelay_ms = 200")).unwrap();
+        let st = sched.wait_terminal(id, Duration::from_secs(30)).unwrap();
+        assert_eq!(st.state, JobState::Done, "error: {:?}", st.error);
+        assert_eq!(sched.stats().cancelled, 0);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn drain_cancels_stragglers_after_grace() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        let slow = sched.submit(&format!("{SPEC}\ndelay_ms = 30000")).unwrap();
+        let queued = sched.submit(&format!("{SPEC}\ndelay_ms = 30000")).unwrap();
+        let t = Instant::now();
+        sched.drain(Duration::from_millis(100));
+        assert!(
+            t.elapsed() < Duration::from_secs(10),
+            "drain bounded by grace + one unwind, not 60 s of delays"
+        );
+        for id in [slow, queued] {
+            let st = sched.status(id).unwrap();
+            assert_eq!(st.state, JobState::Cancelled, "job {id}: {:?}", st.error);
+            assert!(st.error.as_deref().unwrap_or("").contains("drain"));
+        }
+        assert_eq!(sched.stats().cancelled, 2);
     }
 
     #[test]

@@ -98,6 +98,7 @@ impl ServeStats {
             self.jobs.rejected,
             self.jobs.completed,
             self.jobs.failed,
+            self.jobs.cancelled,
             self.jobs.queued as u64,
             self.jobs.running as u64,
         ] {
@@ -127,6 +128,7 @@ impl ServeStats {
                 rejected: take()?,
                 completed: take()?,
                 failed: take()?,
+                cancelled: take()?,
                 queued: take()? as usize,
                 running: take()? as usize,
             },
@@ -268,6 +270,12 @@ impl Server {
             if self.stop.load(Ordering::SeqCst) {
                 return; // the shutdown waker, or a late connection
             }
+            // Per-connection I/O deadlines: an idle-past-timeout or wedged
+            // peer surfaces as an I/O error in its handler, which exits
+            // and frees the thread — a stalled client can never pin a
+            // handler (or a streamed result) forever. Failure to set the
+            // options is not worth refusing the connection over.
+            let _ = conn.set_timeouts(self.cfg.read_timeout, self.cfg.write_timeout);
             let id = self.next_conn.fetch_add(1, Ordering::SeqCst);
             match conn.try_clone() {
                 Ok(clone) => {
@@ -441,6 +449,11 @@ impl Server {
                     }
                 }
             }
+            method::CANCEL => {
+                let mut pos = 0;
+                let id = get_u64(payload, &mut pos)?;
+                Ok(self.sched.cancel(id, "client cancel")?.encode())
+            }
             method::STATS => Ok(self.stats().encode()),
             method::SHUTDOWN => Ok(Vec::new()),
             other => Err(UniGpsError::Ipc(format!("unknown serve method {other}"))),
@@ -480,6 +493,7 @@ mod tests {
                 rejected: 2,
                 completed: 11,
                 failed: 1,
+                cancelled: 4,
                 queued: 3,
                 running: 2,
             },

@@ -38,6 +38,7 @@
 use crate::error::{ErrorKind, Result, UniGpsError};
 use crate::ipc::protocol::{get_u32, get_u64, put_u32, put_u64};
 use crate::ipc::socket_rpc::{connect_with_retry, read_frame, write_frame, MAX_FRAME_LEN};
+use crate::util::fault;
 use std::io::{Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -116,6 +117,12 @@ pub fn write_result_stream(w: &mut impl Write, payload: &[u8], chunk_len: usize)
     put_u32(&mut begin, chunks.len() as u32);
     write_frame(w, reply::RESULT_BEGIN, &begin)?;
     for chunk in chunks {
+        // Chaos harness: a mid-stream failure here exercises the client's
+        // stream-poisoning path (leftover chunks must never be misread as
+        // the next response).
+        if let Some(act) = fault::point!("result-stream") {
+            act.apply("result-stream")?;
+        }
         write_frame(w, reply::RESULT_CHUNK, chunk)?;
     }
     let mut end = Vec::with_capacity(8);
@@ -247,10 +254,35 @@ impl Conn {
     pub fn is_tcp(&self) -> bool {
         matches!(self, Conn::Tcp(_))
     }
+
+    /// Apply per-direction socket timeouts (`None` disables that
+    /// direction). The server sets these on every accepted connection
+    /// from [`ServeConfig`](crate::serve::ServeConfig) so an idle or
+    /// wedged peer releases its handler thread; hardened clients set
+    /// their own so a dead server surfaces as a timeout, not a hang.
+    pub fn set_timeouts(
+        &self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> std::io::Result<()> {
+        match self {
+            Conn::Unix(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
+            }
+            Conn::Tcp(s) => {
+                s.set_read_timeout(read)?;
+                s.set_write_timeout(write)
+            }
+        }
+    }
 }
 
 impl Read for Conn {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if let Some(act) = fault::point!("transport-read") {
+            act.apply_io("transport-read")?;
+        }
         match self {
             Conn::Unix(s) => s.read(buf),
             Conn::Tcp(s) => s.read(buf),
@@ -260,6 +292,9 @@ impl Read for Conn {
 
 impl Write for Conn {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if let Some(act) = fault::point!("transport-write") {
+            act.apply_io("transport-write")?;
+        }
         match self {
             Conn::Unix(s) => s.write(buf),
             Conn::Tcp(s) => s.write(buf),
@@ -317,7 +352,26 @@ impl Listener {
                             IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
                         });
                     }
-                    let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(500));
+                    // The self-connect *is* the wake; silently ignoring a
+                    // failed one (loopback filtered, exhausted backlog)
+                    // used to leave the acceptor parked forever. Retry
+                    // once, then degrade: flip the listener nonblocking so
+                    // every accept from here on returns immediately and
+                    // the accept loop's error path polls the stop flag —
+                    // slower shutdown, never a hang — and log it.
+                    for attempt in 0..2 {
+                        if TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_ok() {
+                            return;
+                        }
+                        if attempt == 0 {
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    }
+                    let _ = l.set_nonblocking(true);
+                    eprintln!(
+                        "unigps-serve: tcp shutdown wake to {addr} failed twice; \
+                         degrading to stop-flag polling on the accept loop"
+                    );
                 }
             }
         }
@@ -353,6 +407,9 @@ impl UdsTransport {
 
 impl Transport for UdsTransport {
     fn connect(&self) -> Result<Conn> {
+        if let Some(act) = fault::point!("transport-connect") {
+            act.apply("transport-connect")?;
+        }
         Ok(Conn::Unix(connect_with_retry(&self.path)?))
     }
     fn describe(&self) -> String {
@@ -383,6 +440,9 @@ impl TcpTransport {
 
 impl Transport for TcpTransport {
     fn connect(&self) -> Result<Conn> {
+        if let Some(act) = fault::point!("transport-connect") {
+            act.apply("transport-connect")?;
+        }
         // Same startup-retry envelope as the Unix transport's
         // connect_with_retry (200 × 5 ms), so both transports behind the
         // one Client trait tolerate a just-starting server equally.

@@ -1,0 +1,366 @@
+//! Failpoint registry — deterministic fault injection for chaos testing.
+//!
+//! Production code marks its interesting failure sites with
+//! [`fault::point!`](crate::util::fault::point) (a named *failpoint*);
+//! normally every site is a no-op behind one relaxed atomic load. When a
+//! fault spec is activated — via the `UNIGPS_FAULTS` environment variable
+//! at first use, or programmatically with [`activate`] from a test — each
+//! named point can
+//!
+//! * **`error`** — fail with a typed error,
+//! * **`delay:MS`** — sleep `MS` milliseconds (latency injection), or
+//! * **`drop`** — simulate a dropped connection (an
+//!   `io::ErrorKind::ConnectionReset` at I/O sites),
+//!
+//! each with an optional firing probability (`@0.25`). Decisions are
+//! **deterministic**: whether a point fires on its *n*-th hit is a pure
+//! function of `(point name, n, seed)` via a splitmix64 mix — a chaos run
+//! replays exactly from its spec, independent of thread scheduling of
+//! *other* points (each point keeps its own hit counter).
+//!
+//! Spec grammar (full reference in `docs/robustness.md`):
+//!
+//! ```text
+//! spec   := clause (';' clause)*
+//! clause := 'seed' '=' u64            -- decision seed (default 0)
+//!         | point '=' action ['@' p]  -- p in (0, 1], default 1 (always)
+//! action := 'error' | 'drop' | 'delay' ':' millis
+//! ```
+//!
+//! Example: `UNIGPS_FAULTS="seed=42;transport-read=drop@0.05;cache-load=error"`.
+//!
+//! The injection-point inventory lives in `docs/robustness.md`;
+//! `unigps-lint` (rule 5) fails CI when a `fault::point!` site is not
+//! documented there.
+
+use crate::error::{Result, UniGpsError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, PoisonError};
+
+/// What an armed failpoint does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Fail the operation with a typed error naming the point.
+    Error,
+    /// Sleep this many milliseconds, then proceed normally.
+    Delay(u64),
+    /// Simulate a dropped connection (`ConnectionReset` at I/O sites).
+    Drop,
+}
+
+impl FaultAction {
+    /// Apply at a non-I/O site: `Delay` sleeps and proceeds; `Error` and
+    /// `Drop` fail with a typed [`UniGpsError`] naming the point.
+    pub fn apply(self, point: &str) -> Result<()> {
+        match self {
+            FaultAction::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+            FaultAction::Error => Err(UniGpsError::serve(format!(
+                "fault injected at '{point}' (UNIGPS_FAULTS)"
+            ))),
+            FaultAction::Drop => Err(UniGpsError::ipc(format!(
+                "fault injected at '{point}': connection dropped (UNIGPS_FAULTS)"
+            ))),
+        }
+    }
+
+    /// Apply at an I/O site (`Read`/`Write` impls): `Delay` sleeps and
+    /// proceeds; `Error` is an `Other` I/O error; `Drop` is
+    /// `ConnectionReset`, indistinguishable from a peer vanishing.
+    pub fn apply_io(self, point: &str) -> std::io::Result<()> {
+        match self {
+            FaultAction::Delay(ms) => {
+                std::thread::sleep(std::time::Duration::from_millis(ms));
+                Ok(())
+            }
+            FaultAction::Error => Err(std::io::Error::other(format!(
+                "fault injected at '{point}' (UNIGPS_FAULTS)"
+            ))),
+            FaultAction::Drop => Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                format!("fault injected at '{point}': connection dropped (UNIGPS_FAULTS)"),
+            )),
+        }
+    }
+}
+
+/// One armed point: the action, its firing probability and a private hit
+/// counter so decisions replay independent of other points' traffic.
+#[derive(Debug)]
+struct Arm {
+    name: String,
+    action: FaultAction,
+    /// Firing threshold: fire when `mix64(...) < threshold` over the full
+    /// `u64` range. `u64::MAX` ≙ probability 1 (always).
+    threshold: u64,
+    hits: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct Registry {
+    seed: u64,
+    arms: Vec<Arm>,
+}
+
+/// Fast-path gate: false until a non-empty spec is activated. Checked
+/// before taking any lock, so disabled failpoints cost one atomic load.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+
+fn registry() -> std::sync::MutexGuard<'static, Option<Registry>> {
+    REGISTRY.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// splitmix64 finalizer — the deterministic decision mixer.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Install a parsed registry and flip the fast-path gate accordingly.
+fn install(reg: Registry) {
+    let enable = !reg.arms.is_empty();
+    *registry() = Some(reg);
+    ACTIVE.store(enable, Ordering::Release);
+}
+
+/// Activate a fault spec, replacing any previous one. Errors are typed
+/// `Config` and leave the previous spec in place. Consumes the lazy
+/// `UNIGPS_FAULTS` read so a pending environment spec cannot clobber an
+/// explicit activation at the next `check`.
+pub fn activate(spec: &str) -> Result<()> {
+    let reg = parse(spec)?;
+    ENV_INIT.call_once(|| {});
+    install(reg);
+    Ok(())
+}
+
+/// Disarm every failpoint (tests call this on their way out so later
+/// tests in the same process run clean). Also consumes the lazy
+/// `UNIGPS_FAULTS` read: an explicit clear is final — a later `check`
+/// must not quietly re-arm from the environment.
+pub fn clear() {
+    ENV_INIT.call_once(|| {});
+    ACTIVE.store(false, Ordering::Release);
+    *registry() = None;
+}
+
+fn parse(spec: &str) -> Result<Registry> {
+    let mut reg = Registry::default();
+    for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        let (name, rhs) = clause.split_once('=').ok_or_else(|| {
+            UniGpsError::Config(format!(
+                "fault clause '{clause}' is not 'point=action' (UNIGPS_FAULTS)"
+            ))
+        })?;
+        let (name, rhs) = (name.trim(), rhs.trim());
+        if name == "seed" {
+            reg.seed = rhs.parse().map_err(|_| {
+                UniGpsError::Config(format!("fault seed '{rhs}' is not a u64 (UNIGPS_FAULTS)"))
+            })?;
+            continue;
+        }
+        let (action_str, prob_str) = match rhs.split_once('@') {
+            Some((a, p)) => (a.trim(), Some(p.trim())),
+            None => (rhs, None),
+        };
+        let action = match action_str.split_once(':') {
+            Some(("delay", ms)) => FaultAction::Delay(ms.trim().parse().map_err(|_| {
+                UniGpsError::Config(format!(
+                    "fault delay '{ms}' is not a millisecond count (UNIGPS_FAULTS)"
+                ))
+            })?),
+            None if action_str == "error" => FaultAction::Error,
+            None if action_str == "drop" => FaultAction::Drop,
+            _ => {
+                return Err(UniGpsError::Config(format!(
+                    "unknown fault action '{action_str}' for point '{name}' \
+                     (expected error | drop | delay:MS)"
+                )))
+            }
+        };
+        let threshold = match prob_str {
+            None => u64::MAX,
+            Some(p) => {
+                let p: f64 = p.parse().map_err(|_| {
+                    UniGpsError::Config(format!(
+                        "fault probability '{p}' is not a number (UNIGPS_FAULTS)"
+                    ))
+                })?;
+                if !(p > 0.0 && p <= 1.0) {
+                    return Err(UniGpsError::Config(format!(
+                        "fault probability {p} out of (0, 1] for point '{name}'"
+                    )));
+                }
+                if p >= 1.0 {
+                    u64::MAX
+                } else {
+                    (p * (u64::MAX as f64)) as u64
+                }
+            }
+        };
+        reg.arms.push(Arm {
+            name: name.to_string(),
+            action,
+            threshold,
+            hits: AtomicU64::new(0),
+        });
+    }
+    Ok(reg)
+}
+
+/// The macro-facing hook: look `point` up in the active registry and
+/// decide (deterministically) whether this hit fires. `None` means
+/// proceed normally — including when no spec is active at all, which is
+/// the one-atomic-load fast path.
+pub fn check(point: &str) -> Option<FaultAction> {
+    // The closure must not re-enter ENV_INIT (`activate` consumes it),
+    // so it parses and installs directly.
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("UNIGPS_FAULTS") {
+            if !spec.is_empty() {
+                match parse(&spec) {
+                    Ok(reg) => install(reg),
+                    Err(e) => eprintln!("unigps: ignoring malformed UNIGPS_FAULTS: {e}"),
+                }
+            }
+        }
+    });
+    // relaxed: pure gate; the registry lock below orders the real state.
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    let guard = registry();
+    let reg = guard.as_ref()?;
+    let arm = reg.arms.iter().find(|a| a.name == point)?;
+    // relaxed: the counter only feeds the hash; exactness per thread
+    // interleaving is not required, uniqueness per hit is.
+    let hit = arm.hits.fetch_add(1, Ordering::Relaxed);
+    let roll = mix64(fnv1a(&arm.name) ^ reg.seed.wrapping_mul(0x2545_f491_4f6c_dd1d) ^ hit);
+    if arm.threshold == u64::MAX || roll < arm.threshold {
+        Some(arm.action)
+    } else {
+        None
+    }
+}
+
+/// Mark a named failpoint. Expands to [`check`]`("name")`, returning
+/// `Option<FaultAction>` — `None` (overwhelmingly, and always in
+/// production) means proceed. Call sites pair it with
+/// [`FaultAction::apply`] or [`FaultAction::apply_io`]:
+///
+/// ```ignore
+/// if let Some(act) = fault::point!("cache-load") {
+///     act.apply("cache-load")?;
+/// }
+/// ```
+///
+/// Every site name must be listed in the injection-point inventory in
+/// `docs/robustness.md` — `unigps-lint` rule 5 enforces this.
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __unigps_fault_point {
+    ($name:literal) => {
+        $crate::util::fault::check($name)
+    };
+}
+
+pub use crate::__unigps_fault_point as point;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; these tests serialize on a lock so
+    // activations never interleave.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    #[test]
+    fn disabled_points_are_none() {
+        let _g = locked();
+        clear();
+        assert_eq!(check("anything"), None);
+    }
+
+    #[test]
+    fn error_drop_and_delay_parse_and_fire() {
+        let _g = locked();
+        activate("a=error;b=drop;c=delay:1").unwrap();
+        assert_eq!(check("a"), Some(FaultAction::Error));
+        assert_eq!(check("b"), Some(FaultAction::Drop));
+        assert_eq!(check("c"), Some(FaultAction::Delay(1)));
+        assert_eq!(check("unarmed"), None);
+        clear();
+        assert_eq!(check("a"), None);
+    }
+
+    #[test]
+    fn probability_decisions_replay_exactly() {
+        let _g = locked();
+        let observe = || -> Vec<bool> {
+            activate("seed=7;p=error@0.5").unwrap();
+            (0..64).map(|_| check("p").is_some()).collect()
+        };
+        let first = observe();
+        let second = observe();
+        assert_eq!(first, second, "same spec must replay the same schedule");
+        let fired = first.iter().filter(|f| **f).count();
+        assert!(fired > 0 && fired < 64, "p=0.5 over 64 hits fired {fired}");
+        // A different seed is a different (still deterministic) schedule.
+        activate("seed=8;p=error@0.5").unwrap();
+        let third: Vec<bool> = (0..64).map(|_| check("p").is_some()).collect();
+        assert_ne!(first, third, "seed must steer the schedule");
+        clear();
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_config_errors() {
+        let _g = locked();
+        clear();
+        for bad in [
+            "nonsense",
+            "x=explode",
+            "x=delay:soon",
+            "x=error@1.5",
+            "x=error@0",
+            "x=error@maybe",
+            "seed=minus-one",
+        ] {
+            let err = activate(bad).unwrap_err();
+            assert!(
+                matches!(err, UniGpsError::Config(_)),
+                "{bad:?} gave {err:?}"
+            );
+        }
+        // A failed activation never arms anything.
+        assert_eq!(check("x"), None);
+    }
+
+    #[test]
+    fn typed_errors_name_the_point() {
+        let err = FaultAction::Error.apply("cache-load").unwrap_err();
+        assert!(err.to_string().contains("cache-load"), "{err}");
+        let err = FaultAction::Drop.apply_io("transport-read").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::ConnectionReset);
+        assert!(FaultAction::Delay(0).apply("x").is_ok());
+        assert!(FaultAction::Delay(0).apply_io("x").is_ok());
+    }
+}

@@ -8,6 +8,7 @@
 //! small JSON reader/writer ([`json`], serde_json stand-in).
 
 pub mod bench;
+pub mod fault;
 pub mod json;
 pub mod model;
 pub mod propcheck;

@@ -41,6 +41,84 @@ pub use crate::util::model::{
     Barrier, BarrierWaitResult, Condvar, Mutex, MutexGuard, WaitTimeoutResult,
 };
 
+/// Cooperative cancellation handle: an atomic flag plus a reason string,
+/// shared by cloning (clones observe the same cancellation). The scheduler
+/// hands one token per job to the engine runtime via
+/// [`RunOptions`](crate::engine::RunOptions); the superstep gates poll it
+/// once per step, so a cancelled job unwinds to a typed
+/// [`UniGpsError::Cancelled`](crate::error::UniGpsError::Cancelled) within
+/// one superstep. Built on the facade's atomics so the cancel-vs-convergence
+/// race is explorable under `--cfg unigps_model`.
+#[derive(Clone, Default)]
+pub struct CancelToken {
+    inner: std::sync::Arc<CancelInner>,
+}
+
+struct CancelInner {
+    cancelled: atomic::AtomicBool,
+    reason: Mutex<Option<String>>,
+}
+
+// Manual impl: the model-checked atomics behind the facade do not derive
+// `Default`, so the derive would not compile under `--cfg unigps_model`.
+impl Default for CancelInner {
+    fn default() -> CancelInner {
+        CancelInner {
+            cancelled: atomic::AtomicBool::new(false),
+            reason: Mutex::new(None),
+        }
+    }
+}
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation with a reason. The first reason wins; later
+    /// calls are no-ops (the flag is already set and observers may have
+    /// read the original reason).
+    pub fn cancel(&self, reason: impl Into<String>) {
+        let mut slot = self
+            .inner
+            .reason
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if slot.is_none() {
+            *slot = Some(reason.into());
+        }
+        drop(slot);
+        // Release-publish after the reason is written, so an Acquire
+        // observer that sees the flag also sees a populated reason.
+        self.inner.cancelled.store(true, atomic::Ordering::Release);
+    }
+
+    /// True once [`CancelToken::cancel`] has been called on any clone.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(atomic::Ordering::Acquire)
+    }
+
+    /// The cancellation reason ("cancelled" if the flag is set but no
+    /// reason was recorded; empty only before cancellation).
+    pub fn reason(&self) -> String {
+        self.inner
+            .reason
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .clone()
+            .unwrap_or_else(|| "cancelled".to_string())
+    }
+}
+
+impl std::fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("cancelled", &self.is_cancelled())
+            .finish()
+    }
+}
+
 /// Declare a plain-memory write that the surrounding protocol orders (e.g.
 /// a `FlatBoard` cell mutation protected by a seal epoch). Free in normal
 /// builds; a race-checked scheduling point under `unigps_model`.
@@ -56,3 +134,30 @@ pub fn trace_read(_addr: usize) {}
 
 #[cfg(unigps_model)]
 pub use crate::util::model::{trace_read, trace_write};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_flags_and_reason() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        let clone = t.clone();
+        clone.cancel("deadline exceeded");
+        assert!(t.is_cancelled(), "clones share one flag");
+        assert_eq!(t.reason(), "deadline exceeded");
+        // First reason wins.
+        t.cancel("second");
+        assert_eq!(clone.reason(), "deadline exceeded");
+    }
+
+    #[test]
+    fn fresh_tokens_are_independent() {
+        let a = CancelToken::new();
+        let b = CancelToken::new();
+        a.cancel("a only");
+        assert!(!b.is_cancelled());
+        assert!(format!("{a:?}").contains("true"));
+    }
+}

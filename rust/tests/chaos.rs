@@ -1,0 +1,289 @@
+//! Chaos harness: the serve stack under deterministic fault injection
+//! (`util::fault`). A pinned-seed spec arms failpoints across the
+//! snapshot cache, the scheduler slots and both transports, then a burst
+//! of jobs — some cancelled mid-flight — is driven through a live
+//! server. The invariants under fire:
+//!
+//! * every admitted job reaches a terminal state (`Done | Failed |
+//!   Cancelled`) — a fault may fail a job, never wedge it;
+//! * the scheduler's books balance: `completed + failed + cancelled ==
+//!   submitted`, nothing left queued or running;
+//! * shutdown still drains cleanly and the process returns to its
+//!   baseline thread count — no leaked handler, runner or watchdog
+//!   threads.
+//!
+//! CI runs this binary as a blocking leg with `UNIGPS_FAULTS` exported
+//! at a fixed seed; locally the same pinned spec is activated
+//! programmatically, so the run replays identically either way. The
+//! transport matrix is the same `UNIGPS_TEST_TRANSPORT=uds|tcp` switch
+//! as `serve_integration.rs`.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+use unigps::client::Client;
+use unigps::error::UniGpsError;
+use unigps::ipc::shm::ShmMap;
+use unigps::serve::{JobId, RemoteClient, ServeClient, ServeConfig, Server};
+use unigps::session::Session;
+use unigps::util::fault;
+
+/// The pinned chaos spec CI exports as `UNIGPS_FAULTS`; the environment
+/// wins when set so the leg can pin a different seed without a rebuild.
+const PINNED_SPEC: &str = "seed=42;cache-load=error@0.25;sched-run=error@0.25;\
+                           transport-read=drop@0.03;transport-write=drop@0.03;\
+                           transport-connect=error@0.05;result-stream=drop@0.15";
+
+fn chaos_spec() -> String {
+    std::env::var("UNIGPS_FAULTS")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| PINNED_SPEC.to_string())
+}
+
+/// The fault registry is process-global: tests serialize on this lock so
+/// one test's spec never bleeds into another's run.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn locked() -> std::sync::MutexGuard<'static, ()> {
+    CHAOS_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+const TEST_TOKEN: &str = "chaos-token";
+
+fn test_transport() -> String {
+    std::env::var("UNIGPS_TEST_TRANSPORT").unwrap_or_else(|_| "uds".into())
+}
+
+struct TestServe {
+    socket: PathBuf,
+    tcp_addr: Option<std::net::SocketAddr>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl TestServe {
+    /// A fresh client, retrying while `transport-connect` faults fire —
+    /// connecting is idempotent, so a bounded retry is always safe.
+    fn client(&self) -> Box<dyn Client> {
+        let mut last: Option<UniGpsError> = None;
+        for _ in 0..10 {
+            let attempt: Result<Box<dyn Client>, UniGpsError> = match self.tcp_addr {
+                Some(addr) => RemoteClient::connect_tcp(&addr.to_string(), TEST_TOKEN)
+                    .map(|c| Box::new(c) as Box<dyn Client>),
+                None => ServeClient::connect(&self.socket).map(|c| Box::new(c) as Box<dyn Client>),
+            };
+            match attempt {
+                Ok(c) => return c,
+                Err(e) => last = Some(e),
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        panic!("could not connect through injected faults: {last:?}");
+    }
+
+    fn join(self) {
+        self.handle.join().expect("server thread");
+    }
+}
+
+fn start_server() -> TestServe {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("chaos"));
+    cfg.slots = 2;
+    cfg.queue_cap = 64;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = 4;
+    if test_transport() == "tcp" {
+        cfg.tcp = Some("127.0.0.1:0".into());
+        cfg.token = Some(TEST_TOKEN.into());
+    }
+    let socket = cfg.socket.clone();
+    let server = Server::bind(Session::builder().build(), cfg).expect("bind serve listeners");
+    let tcp_addr = server.tcp_addr();
+    let handle = std::thread::spawn(move || server.run().expect("serve loop"));
+    TestServe {
+        socket,
+        tcp_addr,
+        handle,
+    }
+}
+
+/// This process's live thread count (`/proc/self/status`), or `None`
+/// off-Linux — the leak assertion is skipped there.
+fn thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find(|l| l.starts_with("Threads:"))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|n| n.parse().ok())
+}
+
+/// Submit with a bounded retry across fresh connections: a transport
+/// fault can kill the submit round trip, and a lost *response* means the
+/// job may be admitted server-side anyway — callers reconcile through
+/// the scheduler's own books, never by resubmission accounting.
+fn submit_chaotic(server: &TestServe, spec: &str) -> Option<JobId> {
+    for _ in 0..8 {
+        let mut client = server.client();
+        match client.submit(spec) {
+            Ok(id) => return Some(id),
+            // Transport-level failure: ambiguous, try a fresh connection.
+            Err(UniGpsError::Io(_) | UniGpsError::Ipc(_)) => {}
+            // A typed server answer (bad spec, backpressure) is a real
+            // admission verdict, not chaos noise.
+            Err(e) => panic!("unexpected typed submit rejection: {e:?}"),
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    None
+}
+
+/// Poll a job to a terminal state through whatever connections survive.
+fn wait_terminal_chaotic(server: &TestServe, id: JobId, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    let mut client = server.client();
+    loop {
+        match client.status(id) {
+            Ok(st) if st.state.is_terminal() => return,
+            Ok(_) => std::thread::sleep(Duration::from_millis(25)),
+            Err(UniGpsError::Io(_) | UniGpsError::Ipc(_)) => {
+                client = server.client();
+            }
+            Err(e) => panic!("job {id}: typed status error under chaos: {e:?}"),
+        }
+        assert!(
+            Instant::now() < deadline,
+            "job {id} not terminal within {timeout:?} under injected faults"
+        );
+    }
+}
+
+/// The blocking CI leg: a job burst against a fully-armed failpoint
+/// registry, with the terminal/books/drain/thread-leak invariants
+/// asserted at the end.
+#[test]
+fn every_job_ends_terminal_and_the_server_drains_under_faults() {
+    let _g = locked();
+    fault::clear();
+    let baseline_threads = thread_count();
+
+    // Bind and start clean — chaos begins once the listeners are up.
+    let server = start_server();
+    fault::activate(&chaos_spec()).expect("chaos spec parses");
+
+    let quick = "kind = rmat\nvertices = 256\nedges = 1024\nseed = 11\nworkers = 2\nalgo = sssp";
+    let slow = format!("{quick}\ndelay_ms = 300");
+    let jobs: usize = 24;
+    let mut known: Vec<JobId> = Vec::new();
+    let mut cancelled_targets: Vec<JobId> = Vec::new();
+    for j in 0..jobs {
+        let spec = if j % 4 == 0 { slow.as_str() } else { quick };
+        let Some(id) = submit_chaotic(&server, spec) else {
+            // Every connection attempt lost to injected drops — rare at
+            // the pinned seed, and the books below still must balance.
+            continue;
+        };
+        known.push(id);
+        // Mix cancellation into the chaos: every slow job is cancelled
+        // mid-flight (terminal-state cancels are no-ops, so racing the
+        // job's natural completion is fine).
+        if j % 4 == 0 {
+            let mut client = server.client();
+            match client.cancel(id) {
+                Ok(_) => cancelled_targets.push(id),
+                Err(UniGpsError::Io(_) | UniGpsError::Ipc(_)) => {}
+                Err(e) => panic!("typed cancel error under chaos: {e:?}"),
+            }
+        }
+    }
+    assert!(
+        known.len() >= jobs / 2,
+        "chaos drowned admission: only {} of {jobs} submits landed",
+        known.len()
+    );
+
+    // Invariant 1: every known-admitted job goes terminal under fire.
+    for &id in &known {
+        wait_terminal_chaotic(&server, id, Duration::from_secs(120));
+    }
+
+    // Disarm before the bookkeeping pass so the final stats/shutdown
+    // round trips are exact, then check invariant 2: the books balance.
+    fault::clear();
+    let mut client = server.client();
+    let stats = client.stats().expect("stats on a clean connection");
+    let j = &stats.jobs;
+    assert_eq!(
+        j.completed + j.failed + j.cancelled,
+        j.submitted,
+        "books must balance: {j:?}"
+    );
+    assert_eq!(j.queued, 0, "nothing left queued: {j:?}");
+    assert_eq!(j.running, 0, "nothing left running: {j:?}");
+    assert!(j.submitted >= known.len() as u64, "{j:?}");
+    if !cancelled_targets.is_empty() {
+        // At least the cancels that landed on still-live jobs show up;
+        // a cancel racing natural completion is legitimately a no-op.
+        assert!(
+            j.cancelled <= cancelled_targets.len() as u64,
+            "more cancelled jobs than cancel calls: {j:?}"
+        );
+    }
+
+    // Invariant 3: clean drain — shutdown returns, the server thread
+    // joins, the socket file is gone.
+    client.shutdown().expect("shutdown");
+    drop(client);
+    let socket = server.socket.clone();
+    server.join();
+    assert!(!socket.exists(), "socket file removed on shutdown");
+
+    // Invariant 4: no leaked threads. Handler threads exit with their
+    // connections, runners and the watchdog are joined by the drain;
+    // give detached teardown a moment to settle. The +1 slack covers the
+    // sibling test's harness thread (parked on CHAOS_LOCK) — a real leak
+    // is a dozen handler/runner threads, not one.
+    if let Some(baseline) = baseline_threads {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let now = thread_count().expect("thread count stays readable");
+            if now <= baseline + 1 {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "thread leak: {now} threads alive, baseline {baseline}"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+/// Control leg: with every failpoint disarmed the same burst completes
+/// with zero failures — proving the harness itself (retry helpers,
+/// accounting) injects no faults of its own.
+#[test]
+fn the_same_burst_is_clean_with_failpoints_disarmed() {
+    let _g = locked();
+    fault::clear();
+    let server = start_server();
+
+    let spec = "kind = rmat\nvertices = 256\nedges = 1024\nseed = 11\nworkers = 2\nalgo = sssp";
+    let mut client = server.client();
+    let mut ids = Vec::new();
+    for _ in 0..8 {
+        ids.push(client.submit(spec).expect("clean submit"));
+    }
+    for id in ids {
+        client
+            .wait(id, Duration::from_secs(120))
+            .expect("clean job completes");
+    }
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.jobs.failed, 0, "{:?}", stats.jobs);
+    assert_eq!(stats.jobs.completed, 8);
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join();
+}

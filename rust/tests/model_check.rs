@@ -202,6 +202,147 @@ fn exhaustive_message_pass_is_complete() {
     assert!(report.distinct_schedules >= 2);
 }
 
+/// Replica of the superstep runtime's cancel-vs-convergence bookkeep
+/// (`engine/superstep.rs`): per epoch, a counting gate elects a closer;
+/// the closer decides the terminal outcome — natural convergence wins
+/// over a concurrent cancel, a cancel otherwise goes terminal at the
+/// next gate — and publishes `step_done` exactly once. A third thread
+/// raises the cancel token at a model-explored point. The invariants:
+/// the terminal transition is taken exactly once (the CAS from `none`
+/// never loses), `step_done` is never double-published, and every run
+/// ends terminal — a cancel can never wedge the runtime.
+mod cancel_bookkeep {
+    use super::*;
+
+    /// Workers arriving at each epoch's counting gate.
+    const CW: usize = 2;
+    /// Epoch at which activity naturally drains to zero (convergence).
+    const CEPOCHS: u64 = 3;
+
+    const NONE: u64 = 0;
+    const CONVERGED: u64 = 1;
+    const CANCELLED: u64 = 2;
+
+    struct CancelKernel {
+        /// Raised once by the canceller thread (release store).
+        cancel: AtomicU64,
+        /// Runner loop-exit flag, set by the deciding closer.
+        stop: AtomicU64,
+        /// Terminal outcome cell: single CAS winner from `NONE`.
+        terminal: AtomicU64,
+        /// Counting gate per epoch; the last arriver closes out.
+        arrivals: Vec<AtomicU64>,
+        /// `step_done` publication cell per epoch (must stay ≤ 1).
+        step_done: Vec<AtomicU64>,
+    }
+
+    impl CancelKernel {
+        fn new() -> CancelKernel {
+            CancelKernel {
+                cancel: AtomicU64::new(0),
+                stop: AtomicU64::new(0),
+                terminal: AtomicU64::new(NONE),
+                arrivals: (0..=CEPOCHS as usize).map(|_| AtomicU64::new(0)).collect(),
+                step_done: (0..=CEPOCHS as usize).map(|_| AtomicU64::new(0)).collect(),
+            }
+        }
+
+        /// The bookkeep decision, exactly as the runtime orders it:
+        /// natural convergence first, then a pending cancel.
+        fn decide(&self, outcome: u64, epoch: u64) {
+            let won = self
+                .terminal
+                .compare_exchange(NONE, outcome, Ordering::AcqRel, Ordering::Acquire);
+            assert!(
+                won.is_ok(),
+                "second terminal transition at epoch {epoch}: {outcome} after {:?}",
+                won
+            );
+            self.stop.store(1, Ordering::Release);
+        }
+    }
+
+    fn cancel_vs_convergence(sess: &Arc<Session>) {
+        let k = CancelKernel::new();
+        std::thread::scope(|scope| {
+            let k = &k;
+            // The canceller: one release store, landing anywhere the
+            // explorer puts it relative to the workers' gates.
+            scope.spawn(move || {
+                let _reg = sess.register(CW);
+                k.cancel.store(1, Ordering::Release);
+            });
+            for w in 0..CW {
+                scope.spawn(move || {
+                    let _reg = sess.register(w);
+                    for e in 1..=CEPOCHS {
+                        let before = k.arrivals[e as usize].fetch_add(1, Ordering::AcqRel);
+                        if before + 1 == CW as u64 {
+                            // Closer: decide, then publish the step gate.
+                            let active = CEPOCHS - e;
+                            if active == 0 {
+                                k.decide(CONVERGED, e);
+                            } else if k.cancel.load(Ordering::Acquire) == 1 {
+                                k.decide(CANCELLED, e);
+                            }
+                            let prev =
+                                k.step_done[e as usize].fetch_add(1, Ordering::AcqRel);
+                            assert_eq!(prev, 0, "step_done double-published at epoch {e}");
+                        } else {
+                            // Non-closer: park on the epoch's step gate.
+                            while k.step_done[e as usize].load(Ordering::Acquire) == 0 {}
+                        }
+                        // The closer's stop store happens-before the
+                        // publication every worker just acquired, so all
+                        // workers exit at the same epoch.
+                        if k.stop.load(Ordering::Acquire) == 1 {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        // Terminal exactly once, never lost: the canceller always fires,
+        // and epoch CEPOCHS converges, so every schedule ends terminal.
+        let t = k.terminal.load(Ordering::Acquire);
+        assert!(
+            t == CONVERGED || t == CANCELLED,
+            "run ended non-terminal (terminal = {t})"
+        );
+        assert_eq!(k.stop.load(Ordering::Acquire), 1, "stop flag lost");
+        // Step gates publish once per run epoch and stop contiguously at
+        // the terminal epoch — no gate after the decision, none skipped
+        // before it.
+        let published: Vec<u64> = (1..=CEPOCHS as usize)
+            .map(|e| k.step_done[e].load(Ordering::Acquire))
+            .collect();
+        assert!(published.iter().all(|&p| p <= 1), "{published:?}");
+        assert!(published[0] == 1, "epoch 1 must always close: {published:?}");
+        for pair in published.windows(2) {
+            assert!(
+                !(pair[0] == 0 && pair[1] == 1),
+                "gate published after a skipped epoch: {published:?}"
+            );
+        }
+    }
+
+    /// ≥1,000 distinct schedules of cancel racing natural convergence:
+    /// no lost terminal transition, no double-published step gate.
+    #[test]
+    fn cancel_vs_convergence_keeps_exactly_one_terminal_transition() {
+        let report = Explorer::new(CW + 1)
+            .schedules(1200)
+            .seed(0xCA11CE1)
+            .run(|sess| cancel_vs_convergence(sess));
+        report.assert_clean();
+        assert!(
+            report.distinct_schedules >= 1000,
+            "only {} distinct schedules explored",
+            report.distinct_schedules
+        );
+    }
+}
+
 /// With `--cfg unigps_model` the facade swaps the *real* kernel onto the
 /// model types — drive the actual [`FlatBoard`] seal/drain handoff through
 /// the checker rather than a replica.

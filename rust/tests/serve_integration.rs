@@ -6,7 +6,10 @@
 //! (dataset-level hit counter = requests − 1) and derives shared
 //! variants exactly once (derived-level counters), the admission queue
 //! rejects overload with a typed backpressure error instead of buffering
-//! it, and ERR frames carry the error kind end to end.
+//! it, ERR frames carry the error kind end to end, and cooperative
+//! cancellation (client cancel and `deadline_ms` watchdog) drives a
+//! running job terminal within about one superstep, waking parked
+//! waiters and freeing the slot.
 //!
 //! Every test drives the unified [`Client`] trait, and the transport is
 //! an environment matrix: `UNIGPS_TEST_TRANSPORT=uds` (default) runs the
@@ -16,14 +19,14 @@
 
 use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 use unigps::client::Client;
 use unigps::engine::{EngineKind, RunOptions, RunResult};
 use unigps::error::UniGpsError;
 use unigps::ipc::shm::ShmMap;
 use unigps::operators::{run_operator, Operator};
 use unigps::plan::{Plan, Stage, Transform};
-use unigps::serve::{RemoteClient, ServeClient, ServeConfig, Server};
+use unigps::serve::{JobState, RemoteClient, ServeClient, ServeConfig, Server};
 use unigps::session::Session;
 use unigps::vcprog::Column;
 
@@ -437,4 +440,112 @@ fn pipeline_with_postops_matches_in_process_execution() {
     )
     .unwrap();
     assert_eq!(built.steps, parsed.steps, "one IR behind every surface");
+}
+
+/// The cancellation acceptance path over both transports: a running job
+/// cancelled via [`Client::cancel`] reaches `Cancelled` within about one
+/// superstep (not after its remaining minute of work), an observer
+/// already parked in [`Client::wait`] is woken by the terminal
+/// transition with the typed [`UniGpsError::Cancelled`] — the ERR kind
+/// survives the wire — and the freed slot is immediately reused by the
+/// next job.
+#[test]
+fn cancel_mid_run_goes_terminal_wakes_waiters_and_frees_the_slot() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-cancel"));
+    cfg.slots = 1;
+    cfg.queue_cap = 8;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = 2;
+    let server = start_server(cfg);
+
+    let mut client = server.client();
+    // Without the cancel this job would hold the only slot for 60 s — if
+    // cancellation were lost, the waiter join below would blow its budget.
+    let slow = format!("{}\nalgo = sssp\ndelay_ms = 60000", dataset_spec_lines());
+    let slow_id = client.submit(&slow).expect("submit slow job");
+
+    let (waiter_err, cancel_to_terminal) = std::thread::scope(|s| {
+        // A second connection parks in wait() *before* the cancel lands;
+        // it must be woken by the scheduler's completion broadcast.
+        let waiter = s.spawn(|| {
+            let mut c = server.client();
+            c.wait(slow_id, Duration::from_secs(120))
+                .expect_err("cancelled job must not yield a result")
+        });
+        // Let the job occupy the slot and the waiter park.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let st = client.status(slow_id).expect("status");
+            if st.state == JobState::Running {
+                break;
+            }
+            assert!(Instant::now() < deadline, "job never started: {st:?}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        std::thread::sleep(Duration::from_millis(50));
+
+        let t0 = Instant::now();
+        let st = client.cancel(slow_id).expect("cancel");
+        // The status returned is as-of the cancel being applied: a running
+        // job may legitimately still say Running; it must never be Done.
+        assert_ne!(st.state, JobState::Done, "{st:?}");
+        let err = client
+            .wait(slow_id, Duration::from_secs(30))
+            .expect_err("wait on a cancelled job is the typed error");
+        let elapsed = t0.elapsed();
+        assert!(err.is_cancelled(), "typed Cancelled crosses the wire: {err:?}");
+        assert!(err.to_string().contains("client cancel"), "{err}");
+        (waiter.join().expect("waiter thread"), elapsed)
+    });
+    assert!(
+        waiter_err.is_cancelled(),
+        "parked waiter woke with the typed error: {waiter_err:?}"
+    );
+    // Cancel-to-terminal latency: the 20 ms delay slices and the
+    // per-superstep gate bound this to well under the job's 60 s.
+    assert!(
+        cancel_to_terminal < Duration::from_secs(10),
+        "cancel took {cancel_to_terminal:?} to go terminal"
+    );
+
+    // Slot reuse: the next job runs to completion on the freed slot.
+    let spec = format!("{}\nalgo = cc\nengine = gas", dataset_spec_lines());
+    let id = client.submit(&spec).expect("submit follow-up");
+    let got = client.wait(id, Duration::from_secs(120)).expect("slot reused");
+    assert!(got.metrics.supersteps > 0);
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.jobs.cancelled, 1, "exactly the one cancelled job");
+    assert_eq!(stats.jobs.completed, 1, "the follow-up job completed");
+    assert_eq!(stats.jobs.failed, 0, "cancellation is not a failure");
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join();
+}
+
+/// `deadline_ms` end to end: the watchdog cancels an overdue job and the
+/// typed `Cancelled` error, naming the deadline, crosses the wire.
+#[test]
+fn deadline_overrun_is_cancelled_by_the_watchdog() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-dl"));
+    cfg.slots = 1;
+    cfg.total_workers = 2;
+    let server = start_server(cfg);
+
+    let mut client = server.client();
+    let spec = format!(
+        "{}\nalgo = sssp\ndelay_ms = 60000\ndeadline_ms = 300",
+        dataset_spec_lines()
+    );
+    let id = client.submit(&spec).expect("submit");
+    let err = client
+        .wait(id, Duration::from_secs(30))
+        .expect_err("overdue job must be cancelled, not complete");
+    assert!(err.is_cancelled(), "{err:?}");
+    assert!(err.to_string().contains("deadline exceeded"), "{err}");
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join();
 }
