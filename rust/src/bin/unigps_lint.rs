@@ -7,13 +7,19 @@
 //!    and IPC request paths, except poisoned-lock patterns and sites marked
 //!    `// lint: allow-panic:` with a written invariant;
 //! 3. wire method indices are unique across the IPC and serve protocols and
-//!    every serve method is documented in `docs/serve.md`; the `ErrorKind`
-//!    wire codes round-trip (`code()` / `from_code` bijection);
+//!    every serve method is documented in **both** method-index tables
+//!    (`docs/serve.md` and the `ipc/socket_rpc.rs` module docs — the two
+//!    drifted once); the `ErrorKind` wire codes round-trip (`code()` /
+//!    `from_code` bijection);
 //! 4. every `unsafe` block / fn / impl carries a `// SAFETY:` comment
 //!    (`unsafe fn` may use a `# Safety` doc section instead);
 //! 5. every failpoint site (`util::fault`'s point macro) names a point
 //!    listed in the injection-point inventory in `docs/robustness.md`,
-//!    so the chaos surface is always fully documented.
+//!    so the chaos surface is always fully documented;
+//! 6. the metric names registered in `obs/metrics.rs` and the inventory in
+//!    `docs/observability.md` are a bijection — dashboards are written
+//!    from that table, so an undocumented metric is invisible surface and
+//!    a documented-but-unregistered one is a dead dashboard row.
 //!
 //! Test modules (everything after the first `#[cfg(test)]`) are exempt.
 //! Exit code: 0 clean, 1 violations (listed on stderr), 2 I/O trouble.
@@ -39,6 +45,7 @@ const PANIC_MARKS: [&str; 5] = [
     concat!("// lint: allow-panic", ":"),
 ];
 const FAULT_NEEDLE: &str = concat!("fault::point", "!(\"");
+const METRIC_NEEDLE: &str = concat!("\"unigps", "_");
 const UNSAFE_BLOCK: &str = concat!("unsafe", " {");
 const UNSAFE_FN: &str = concat!("unsafe", " fn");
 const UNSAFE_IMPL: &str = concat!("unsafe", " impl");
@@ -204,12 +211,14 @@ fn errorkind_pairs(lines: &[&str]) -> (Vec<(String, u32)>, Vec<(u32, String)>) {
     (to_code, from_code)
 }
 
-/// Rule 3 proper: uniqueness across both protocols, serve docs coverage,
-/// and the `ErrorKind` bijection.
+/// Rule 3 proper: uniqueness across both protocols, coverage in both
+/// method-index tables (`docs/serve.md` and the `ipc/socket_rpc.rs`
+/// module docs), and the `ErrorKind` bijection.
 fn check_wire_consistency(
     ipc_consts: &[(String, u32)],
     serve_consts: &[(String, u32)],
     serve_docs: &str,
+    rpc_docs: &str,
     to_code: &[(String, u32)],
     from_code: &[(u32, String)],
     out: &mut Vec<String>,
@@ -229,6 +238,12 @@ fn check_wire_consistency(
         if !serve_docs.contains(&row) {
             out.push(format!(
                 "wire: serve method {name} = {n} has no `{row} ...` row in docs/serve.md"
+            ));
+        }
+        if !rpc_docs.contains(&row) {
+            out.push(format!(
+                "wire: serve method {name} = {n} has no `{row} ...` row in the \
+                 ipc/socket_rpc.rs method-index table"
             ));
         }
     }
@@ -254,6 +269,63 @@ fn check_wire_consistency(
             None => out.push(format!(
                 "wire: ErrorKind::from_code({n}) = {name} has no matching code() arm"
             )),
+        }
+    }
+}
+
+/// True when `s` is a well-formed metric name (lower-snake identifiers
+/// only) — filters out prose like `unigps_rpc_<method>_us` templates.
+fn is_metric_name(s: &str) -> bool {
+    !s.is_empty() && s.bytes().all(|b| b.is_ascii_lowercase() || b.is_ascii_digit() || b == b'_')
+}
+
+/// Rule 6: the names registered in `obs/metrics.rs` (every `"unigps_…"`
+/// string literal outside tests) and the backticked names in the
+/// `docs/observability.md` inventory must be a bijection.
+fn check_metric_docs(metrics_src: &[&str], obs_docs: &str, out: &mut Vec<String>) {
+    let mut code_names: Vec<String> = Vec::new();
+    for line in metrics_src {
+        if is_comment_only(line) {
+            continue;
+        }
+        let mut rest = *line;
+        while let Some(at) = rest.find(METRIC_NEEDLE) {
+            let tail = &rest[at + 1..]; // past the opening quote
+            let Some(end) = tail.find('"') else { break };
+            let name = &tail[..end];
+            if is_metric_name(name) && !code_names.iter().any(|n| n == name) {
+                code_names.push(name.to_string());
+            }
+            rest = &tail[end..];
+        }
+    }
+    if code_names.is_empty() {
+        out.push("metrics: no metric names parsed from rust/src/obs/metrics.rs".to_string());
+        return;
+    }
+    let mut doc_names: Vec<&str> = Vec::new();
+    for (i, seg) in obs_docs.split('`').enumerate() {
+        // Odd split segments are the backticked spans.
+        if i % 2 == 1 && seg.starts_with("unigps_") && is_metric_name(seg) {
+            if !doc_names.contains(&seg) {
+                doc_names.push(seg);
+            }
+        }
+    }
+    for name in &code_names {
+        if !doc_names.iter().any(|d| d == name) {
+            out.push(format!(
+                "metrics: `{name}` is registered in obs/metrics.rs but missing from the \
+                 docs/observability.md inventory"
+            ));
+        }
+    }
+    for name in &doc_names {
+        if !code_names.iter().any(|c| c == name) {
+            out.push(format!(
+                "metrics: `{name}` is in the docs/observability.md inventory but not \
+                 registered in obs/metrics.rs"
+            ));
         }
     }
 }
@@ -303,15 +375,20 @@ fn run(root: &Path) -> Result<Vec<String>, String> {
     let ipc_proto = read(root, "rust/src/ipc/protocol.rs")?;
     let error_rs = read(root, "rust/src/error.rs")?;
     let serve_docs = read(root, "docs/serve.md")?;
+    let rpc_docs = read(root, "rust/src/ipc/socket_rpc.rs")?;
     let (to_code, from_code) = errorkind_pairs(&active_lines(&error_rs));
     check_wire_consistency(
         &method_consts(&active_lines(&ipc_proto)),
         &method_consts(&active_lines(&serve_mod)),
         &serve_docs,
+        &rpc_docs,
         &to_code,
         &from_code,
         &mut violations,
     );
+    let metrics_rs = read(root, "rust/src/obs/metrics.rs")?;
+    let obs_docs = read(root, "docs/observability.md")?;
+    check_metric_docs(&active_lines(&metrics_rs), &obs_docs, &mut violations);
     Ok(violations)
 }
 
@@ -447,11 +524,12 @@ mod tests {
         ipc: &[(String, u32)],
         serve: &[(String, u32)],
         docs: &str,
+        rpc_docs: &str,
         to_code: &[(String, u32)],
         from_code: &[(u32, String)],
     ) -> Vec<String> {
         let mut v = Vec::new();
-        check_wire_consistency(ipc, serve, docs, to_code, from_code, &mut v);
+        check_wire_consistency(ipc, serve, docs, rpc_docs, to_code, from_code, &mut v);
         v
     }
 
@@ -459,20 +537,79 @@ mod tests {
     fn wire_consistency_checks() {
         let ipc = vec![("PING".to_string(), 6)];
         let serve = vec![("SUBMIT".to_string(), 16)];
+        let row = "| 16 | `SUBMIT` | spec |";
         let ek = vec![("Io".to_string(), 3)];
         let ek_rev = vec![(3, "Io".to_string())];
-        assert!(wire(&ipc, &serve, "| 16 | `SUBMIT` | spec |", &ek, &ek_rev).is_empty());
+        assert!(wire(&ipc, &serve, row, row, &ek, &ek_rev).is_empty());
         // Duplicate index across protocols.
         let clash = vec![("SUBMIT".to_string(), 6)];
-        let v = wire(&ipc, &clash, "| 6 | `SUBMIT` |", &ek, &ek_rev);
+        let v = wire(&ipc, &clash, "| 6 | `SUBMIT` |", "| 6 | `SUBMIT` |", &ek, &ek_rev);
         assert!(v.iter().any(|x| x.contains("used by both")), "{v:?}");
         // Undocumented serve method.
-        let v = wire(&ipc, &serve, "no table here", &ek, &ek_rev);
+        let v = wire(&ipc, &serve, "no table here", row, &ek, &ek_rev);
         assert!(v.iter().any(|x| x.contains("docs/serve.md")), "{v:?}");
         // Broken ErrorKind bijection.
         let bad_rev = vec![(3, "Parse".to_string())];
-        let v = wire(&ipc, &serve, "| 16 | `SUBMIT` |", &ek, &bad_rev);
+        let v = wire(&ipc, &serve, row, row, &ek, &bad_rev);
         assert!(v.iter().any(|x| x.contains("from_code")), "{v:?}");
+    }
+
+    #[test]
+    fn wire_requires_the_socket_rpc_table_too() {
+        // The docs/serve.md and ipc/socket_rpc.rs method tables drifted
+        // once (CANCEL landed in one, not the other); rule 3 now requires
+        // a row in *both*, so a missing socket_rpc row is a violation
+        // even with docs/serve.md complete.
+        let ipc = vec![("PING".to_string(), 6)];
+        let serve = vec![("CANCEL".to_string(), 23), ("METRICS".to_string(), 24)];
+        let full = "| 23 | `CANCEL` | id |\n| 24 | `METRICS` | empty |";
+        let drifted = "//! | 23 | `CANCEL` |";
+        let ek = vec![("Io".to_string(), 3)];
+        let ek_rev = vec![(3, "Io".to_string())];
+        assert!(wire(&ipc, &serve, full, full, &ek, &ek_rev).is_empty());
+        let v = wire(&ipc, &serve, full, drifted, &ek, &ek_rev);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("socket_rpc.rs"), "{v:?}");
+        assert!(v[0].contains("METRICS"), "{v:?}");
+    }
+
+    fn metric_docs(src: &str, docs: &str) -> Vec<String> {
+        let mut v = Vec::new();
+        check_metric_docs(&active_lines(src), docs, &mut v);
+        v
+    }
+
+    #[test]
+    fn metric_inventory_must_be_a_bijection() {
+        let src = "(\"unigps_jobs_submitted_total\", &r.jobs_submitted),\n\
+                   (\"unigps_queue_depth\", &r.queue_depth),\n";
+        let docs = "| `unigps_jobs_submitted_total` | jobs |\n| `unigps_queue_depth` | n |";
+        assert!(metric_docs(src, docs).is_empty());
+        // Registered but undocumented.
+        let v = metric_docs(src, "| `unigps_queue_depth` | n |");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("unigps_jobs_submitted_total"), "{v:?}");
+        assert!(v[0].contains("missing from"), "{v:?}");
+        // Documented but unregistered.
+        let v = metric_docs(src, &format!("{docs}\n| `unigps_ghost_total` | - |"));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("unigps_ghost_total"), "{v:?}");
+        assert!(v[0].contains("not"), "{v:?}");
+    }
+
+    #[test]
+    fn metric_parse_skips_comments_templates_and_tests() {
+        // Doc comments and prose templates (`unigps_rpc_<method>_us`) are
+        // not registrations; test modules are exempt as everywhere else.
+        let src = "// \"unigps_fake_total\" in a comment\n\
+                   (\"unigps_real_total\", &r.real),\n\
+                   #[cfg(test)]\nmod tests { let x = \"unigps_test_only\"; }\n";
+        let v = metric_docs(src, "`unigps_real_total` and `unigps_rpc_<method>_us`");
+        assert!(v.is_empty(), "{v:?}");
+        // An empty parse is itself a violation (the check went blind).
+        let v = metric_docs("nothing here", "`unigps_real_total`");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].contains("no metric names"), "{v:?}");
     }
 
     #[test]

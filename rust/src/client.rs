@@ -86,6 +86,13 @@ pub trait Client {
     /// Server-wide (or in-process equivalent) cache + scheduler counters.
     fn stats(&mut self) -> Result<ServeStats>;
 
+    /// The executor's full observability snapshot
+    /// ([`crate::obs::metrics`]): every counter, gauge and latency
+    /// histogram, named and versioned. Remote implementations fetch it
+    /// over one `METRICS` frame; [`LocalClient`] reads the in-process
+    /// registry directly — same names, same shape, either way.
+    fn metrics(&mut self) -> Result<crate::obs::metrics::MetricsSnapshot>;
+
     /// Shut the executor down (admitted jobs drain first).
     fn shutdown(&mut self) -> Result<()>;
 
@@ -177,6 +184,10 @@ impl Client for LocalClient {
             cache: self.cache.stats(),
             jobs: self.sched.stats(),
         })
+    }
+
+    fn metrics(&mut self) -> Result<crate::obs::metrics::MetricsSnapshot> {
+        Ok(crate::obs::metrics::snapshot())
     }
 
     fn shutdown(&mut self) -> Result<()> {

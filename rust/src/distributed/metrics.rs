@@ -13,7 +13,7 @@ pub enum StepMode {
 }
 
 /// Metrics of one superstep.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct StepMetrics {
     /// 1-based superstep number.
     pub step: u32,
@@ -25,6 +25,18 @@ pub struct StepMetrics {
     pub elapsed: Duration,
     /// Mode used (Push-Pull only; `None` elsewhere).
     pub mode: Option<StepMode>,
+    /// UDF/compute phase time, µs, summed across workers (engines that do
+    /// not report phases leave this 0).
+    pub compute_us: u64,
+    /// Inbox drain time, µs, summed across workers.
+    pub drain_us: u64,
+    /// Write-gate + reduce-gate wait time, µs, summed across workers. Phase
+    /// sums are attributed to the step whose epilogue collected them; a
+    /// straggler's tail can land on the following step's row.
+    pub gate_wait_us: u64,
+    /// Sealed rows that were not drained during the compute overlap window
+    /// and stalled the delivery gate (pipelined schedule only).
+    pub drain_lag_rows: u64,
 }
 
 /// Metrics of a whole run.

@@ -87,6 +87,7 @@ pub fn run<P: VCProg>(
                 let mut iter: u32 = 1;
                 loop {
                     let step_timer = Timer::start();
+                    let compute_timer = Timer::start();
                     // --- Phase G/A: gather + apply ------------------------
                     // Fig 4b: APPLY runs for *every* vertex every round (the
                     // edge-parallel cost model).
@@ -152,6 +153,12 @@ pub fn run<P: VCProg>(
                         }
                     }
                     rt.add_step_messages(local_msgs);
+                    // G/A + scatter are all compute here (edge slots are the
+                    // network, so GAS has no drain phase); the mid-phase
+                    // barrier wait is inseparable from the phase and rides
+                    // along — the epilogue's gate time is tracked apart.
+                    ctx.add_compute_us(compute_timer.elapsed().as_micros() as u64);
+                    ctx.publish_phases();
 
                     if rt.close_step(w, iter, &step_timer, None, |_, _| {}) {
                         break;

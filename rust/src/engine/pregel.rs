@@ -108,6 +108,7 @@ pub fn run<P: VCProg>(
                     };
 
                     // --- Phase A: compute + emit --------------------------
+                    let compute_timer = Timer::start();
                     phase_timer = CpuTimer::start();
                     for v in rt.vertices_of(w) {
                         let vi = v as usize;
@@ -167,6 +168,7 @@ pub fn run<P: VCProg>(
                     // seals this worker's rows for `iter` (pipelined).
                     unsafe { ctx.flush(iter) };
                     busy += phase_timer.elapsed();
+                    ctx.add_compute_us(compute_timer.elapsed().as_micros() as u64);
 
                     let stop = if rt.pipeline {
                         // Overlapped handoff: publish this worker's writes,
@@ -189,6 +191,10 @@ pub fn run<P: VCProg>(
                                 std::thread::yield_now();
                             }
                         }
+                        // Rows still undrained here stalled the overlap
+                        // window; the epilogue ahead orders the phase sums.
+                        ctx.note_drain_lag();
+                        ctx.publish_phases();
                         let stop = rt.finish_step(w, iter, &step_timer, None, |_, _| {});
                         // --- Phase B: drain the rest ----------------------
                         // Every sender sealed its rows before the reduce
@@ -216,6 +222,7 @@ pub fn run<P: VCProg>(
                         unsafe { ctx.deliver(program, inbox_next, iter) };
                         busy += phase_timer.elapsed();
 
+                        ctx.publish_phases();
                         rt.end_step(iter, &step_timer, None, |_, _| {})
                     };
                     if stop {

@@ -103,6 +103,7 @@ pub fn run<P: VCProg>(
                 let mut iter: u32 = 1;
                 loop {
                     let step_timer = Timer::start();
+                    let emit_timer = Timer::start();
                     // relaxed: written in the previous round's exclusive
                     // bookkeeping window; the step gate/barrier ordered it.
                     let pull = pull_mode.load(Ordering::Relaxed);
@@ -169,6 +170,11 @@ pub fn run<P: VCProg>(
                         // flush seals this worker's rows (pipelined).
                         unsafe { ctx.flush(iter) };
                     }
+                    // Both modes' Phase E is compute (the dense gather folds
+                    // messages, the sparse emit routes them); push-mode drain
+                    // time is tracked separately inside the runtime's
+                    // row-drain path.
+                    ctx.add_compute_us(emit_timer.elapsed().as_micros() as u64);
                     // Pull rounds always need the full stop: the dense
                     // gather above read *remote* props, which Phase V is
                     // about to overwrite. Push rounds only need it in the
@@ -185,6 +191,7 @@ pub fn run<P: VCProg>(
                         // `iter` finished at the barrier above.
                         unsafe { ctx.deliver(program, inbox_s, iter) };
                     }
+                    let compute_timer = Timer::start();
                     for v in rt.vertices_of(w) {
                         let vi = v as usize;
                         let was_active = rt.active.prev(v);
@@ -211,6 +218,8 @@ pub fn run<P: VCProg>(
                         *prop_slot = Some(new_prop);
                         rt.active.set_next(v, is_active);
                     }
+                    ctx.add_compute_us(compute_timer.elapsed().as_micros() as u64);
+                    ctx.publish_phases();
 
                     let mode = Some(if pull { StepMode::Pull } else { StepMode::Push });
                     // Gemini's density heuristic for the next round: the

@@ -100,7 +100,7 @@ pub fn run<P: VCProg>(
                 active: num_active,
                 messages: step_msgs,
                 elapsed: step_timer.elapsed(),
-                mode: None,
+                ..StepMetrics::default()
             });
         }
         // Lines 17-18: early convergence.

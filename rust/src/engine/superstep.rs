@@ -357,6 +357,16 @@ pub struct SuperstepRuntime<'g, M: Send> {
     aoe_sum: AtomicU64,
     /// Last step whose bookkeeping is published (workers gate on it).
     step_done: AtomicU64,
+    // --- per-step phase accounting (µs, summed across workers) ---------
+    /// UDF/compute phase time published via [`WorkerCtx::publish_phases`].
+    phase_compute_us: AtomicU64,
+    /// Inbox drain time published via [`WorkerCtx::publish_phases`].
+    phase_drain_us: AtomicU64,
+    /// Gate/barrier wait time, accumulated by the epilogues themselves.
+    phase_gate_us: AtomicU64,
+    /// Sealed rows that stalled the delivery gate
+    /// ([`WorkerCtx::note_drain_lag`]).
+    phase_lag_rows: AtomicU64,
     step_log: Mutex<Vec<StepMetrics>>,
     timer: Timer,
 }
@@ -398,6 +408,10 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
             act_sum: AtomicU64::new(0),
             aoe_sum: AtomicU64::new(0),
             step_done: AtomicU64::new(0),
+            phase_compute_us: AtomicU64::new(0),
+            phase_drain_us: AtomicU64::new(0),
+            phase_gate_us: AtomicU64::new(0),
+            phase_lag_rows: AtomicU64::new(0),
             step_log: Mutex::new(Vec::new()),
             timer: Timer::start(),
         }
@@ -435,6 +449,8 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
             local: 0,
             routed: 0,
             drained: 0,
+            compute_us: 0,
+            drain_us: 0,
         }
     }
 
@@ -511,6 +527,12 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         let board_total = self.board.total_messages();
         let board_prev = self.last_board.swap(board_total, Ordering::Relaxed); // relaxed: as above
         self.steps_done.store(iter as u64, Ordering::Relaxed); // relaxed: as above
+        // Phase sums are drained even when per-step metrics are off, so a
+        // late-published straggler tail never bleeds across runs.
+        let compute_us = self.phase_compute_us.swap(0, Ordering::Relaxed); // relaxed: as above
+        let drain_us = self.phase_drain_us.swap(0, Ordering::Relaxed); // relaxed: as above
+        let gate_wait_us = self.phase_gate_us.swap(0, Ordering::Relaxed); // relaxed: as above
+        let drain_lag_rows = self.phase_lag_rows.swap(0, Ordering::Relaxed); // relaxed: as above
         if self.step_metrics {
             self.step_log.lock().unwrap().push(StepMetrics {
                 step: iter,
@@ -518,6 +540,10 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
                 messages: (board_total - board_prev) + local + extra,
                 elapsed: step_timer.elapsed(),
                 mode,
+                compute_us,
+                drain_us,
+                gate_wait_us,
+                drain_lag_rows,
             });
         }
         leader_extra(act, aoe);
@@ -566,14 +592,31 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         mode: Option<StepMode>,
         leader_extra: impl FnOnce(u64, u64),
     ) -> bool {
+        let gate_timer = Timer::start();
         let lead = self.barrier.wait().is_leader();
         if lead {
             let (act, aoe) = self.reduce_words(0..self.active.num_words());
             self.bookkeep(iter, act, aoe, step_timer, mode, leader_extra);
         }
         self.barrier.wait();
+        self.note_gate_wait(&gate_timer);
         // relaxed: the release barrier above ordered the leader's write.
         self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Accumulate one worker's epilogue duration (gate/barrier waits plus
+    /// its reduction share) into the step phase sums and the process-wide
+    /// gate-wait histogram. Runs after the bookkeeping window closed, so
+    /// the contribution lands on the *next* step's row (and the final
+    /// step's tail is dropped) — documented on `StepMetrics::gate_wait_us`.
+    fn note_gate_wait(&self, gate_timer: &Timer) {
+        let us = gate_timer.elapsed().as_micros() as u64;
+        if us > 0 {
+            // relaxed: monotone metrics sum, read in a later bookkeeping
+            // window whose gate/barrier ordered it.
+            self.phase_gate_us.fetch_add(us, Ordering::Relaxed);
+            crate::obs::metrics::registry().step_gate_wait_us.observe_us(us);
+        }
     }
 
     /// Announce that this worker has published every shared write of the
@@ -604,6 +647,7 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         mode: Option<StepMode>,
         leader_extra: impl FnOnce(u64, u64),
     ) -> bool {
+        let gate_timer = Timer::start();
         spin_wait(|| self.writes_done());
         let (act, aoe) = self.reduce_words(self.word_range(w));
         if act > 0 {
@@ -630,6 +674,7 @@ impl<'g, M: Send> SuperstepRuntime<'g, M> {
         } else {
             spin_wait(|| self.step_done.load(Ordering::Acquire) >= iter as u64);
         }
+        self.note_gate_wait(&gate_timer);
         // relaxed: the step gate (Release store / Acquire spin above)
         // ordered the bookkeeper's stop-flag write.
         self.stop.load(Ordering::Relaxed)
@@ -712,6 +757,12 @@ pub struct WorkerCtx<'a, 'g, M: Send> {
     /// (rows are always drained in sender order, so delivery — and thus
     /// merge order — is deterministic in both epilogues).
     drained: usize,
+    /// This step's compute-phase µs, engine-reported via
+    /// [`WorkerCtx::add_compute_us`], drained by
+    /// [`WorkerCtx::publish_phases`].
+    compute_us: u64,
+    /// This step's inbox-drain µs, accumulated by the row drains.
+    drain_us: u64,
 }
 
 impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
@@ -845,6 +896,7 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
         epoch: u32,
         from: usize,
     ) {
+        let drain_timer = Timer::start();
         let mut udf = 0u64;
         // SAFETY: the caller's contract (sender finished the row, inbox
         // slots of this worker exclusively accessible) covers both the row
@@ -862,6 +914,7 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
             });
         }
         self.udf += udf;
+        self.drain_us += drain_timer.elapsed().as_micros() as u64;
     }
 
     /// Is the next row in drain order already sealed for `epoch`? A cheap
@@ -930,6 +983,50 @@ impl<'a, 'g, M: Send> WorkerCtx<'a, 'g, M> {
             self.drained += 1;
         }
         self.drained = 0;
+    }
+
+    /// Report `us` microseconds of UDF/compute phase time for this step
+    /// (engines time their compute phase with one stopwatch per step and
+    /// deposit it here — no per-vertex clock reads).
+    #[inline]
+    pub fn add_compute_us(&mut self, us: u64) {
+        self.compute_us += us;
+    }
+
+    /// Publish this worker's accumulated compute/drain phase µs into the
+    /// step's shared sums (for `StepMetrics`) and the process-wide
+    /// observability histograms, then reset the accumulators. Engines call
+    /// this once per step, immediately before the step epilogue — the
+    /// gate/barrier ahead orders the relaxed sums for the bookkeeper.
+    pub fn publish_phases(&mut self) {
+        let obs = crate::obs::metrics::registry();
+        if self.compute_us > 0 {
+            // relaxed: monotone metrics sum, read in the bookkeeping window
+            // after the write/reduce gate (or barrier) ordered it.
+            self.rt.phase_compute_us.fetch_add(self.compute_us, Ordering::Relaxed);
+            obs.step_compute_us.observe_us(self.compute_us);
+            self.compute_us = 0;
+        }
+        if self.drain_us > 0 {
+            // relaxed: as above.
+            self.rt.phase_drain_us.fetch_add(self.drain_us, Ordering::Relaxed);
+            obs.step_drain_us.observe_us(self.drain_us);
+            self.drain_us = 0;
+        }
+    }
+
+    /// Record how many of this worker's inbound rows were *not* drained
+    /// during the compute-overlap window and will stall the delivery gate.
+    /// Pregel calls it when the write gate opens; a steadily non-zero lag
+    /// means the overlap window is too short to hide delivery.
+    pub fn note_drain_lag(&mut self) {
+        let lag = (self.rt.workers - self.drained) as u64;
+        if lag > 0 {
+            // relaxed: monotone metrics sum, read in the bookkeeping window
+            // after the reduce gate ordered it.
+            self.rt.phase_lag_rows.fetch_add(lag, Ordering::Relaxed);
+            crate::obs::metrics::registry().step_drain_lag_rows.add(lag);
+        }
     }
 
     /// Publish this worker's UDF-call count into the run totals.

@@ -133,7 +133,7 @@ fn pagerank(rt: &PjRtRuntime, graph: &Graph, iterations: u32, opts: &RunOptions)
             active: enc.n as u64,
             messages: edges,
             elapsed: t.elapsed(),
-            mode: None,
+            ..StepMetrics::default()
         });
     }
     let ranks: Vec<f64> = rank[..p.enc.n].iter().map(|&r| r as f64).collect();
@@ -175,7 +175,7 @@ fn sssp(rt: &PjRtRuntime, graph: &Graph, root: u32, opts: &RunOptions) -> Result
             active: changed as u64,
             messages: edges,
             elapsed: t.elapsed(),
-            mode: None,
+            ..StepMetrics::default()
         });
         if changed == 0.0 {
             converged = true;
@@ -220,7 +220,7 @@ fn cc(rt: &PjRtRuntime, graph: &Graph, opts: &RunOptions) -> Result<RunResult> {
             active: changed as u64,
             messages: edges,
             elapsed: t.elapsed(),
-            mode: None,
+            ..StepMetrics::default()
         });
         if changed == 0.0 {
             converged = true;

@@ -17,6 +17,23 @@
 //! by untrusted clients; both reject frames larger than [`MAX_FRAME_LEN`]
 //! with a typed [`UniGpsError::Ipc`] *before* allocating, so a hostile
 //! length header cannot force an attacker-controlled allocation.
+//!
+//! The serve protocol's request heads on this framing (the authoritative
+//! constants are [`crate::serve::method`]; payload shapes are in
+//! `docs/serve.md`, and `unigps-lint` rule 3 keeps all three in step):
+//!
+//! | head | method |
+//! |------|----------|
+//! | 16 | `SUBMIT` |
+//! | 17 | `STATUS` |
+//! | 18 | `RESULT` |
+//! | 19 | `STATS` |
+//! | 20 | `SUBMIT_PLAN` |
+//! | 21 | `HELLO` |
+//! | 22 | `WAIT` |
+//! | 23 | `CANCEL` |
+//! | 24 | `METRICS` |
+//! | 7 | `SHUTDOWN` |
 
 use crate::error::{Result, UniGpsError};
 use crate::ipc::protocol::status;

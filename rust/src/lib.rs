@@ -41,6 +41,10 @@
 //!   TCP — with chunked result streaming and server-side `WAIT`
 //!   long-polling, so a pipeline of short jobs pays the graph
 //!   load/partition/symmetrize cost once instead of per invocation.
+//! * [`obs`] — the runtime observability layer: a process-wide sharded
+//!   metrics registry (counters/gauges/latency histograms) exposed over the
+//!   `METRICS` wire method and `unigps metrics`, plus per-job tracing span
+//!   trees with a server-side slow-job log.
 //! * [`client`] — the one execution-client API over every transport:
 //!   the [`client::Client`] trait (submit / status / wait / result /
 //!   stats / shutdown) implemented in process by [`client::LocalClient`]
@@ -76,6 +80,7 @@ pub mod engine;
 pub mod error;
 pub mod graph;
 pub mod ipc;
+pub mod obs;
 pub mod operators;
 pub mod plan;
 pub mod runtime;

@@ -13,6 +13,7 @@
 //! unigps submit --socket /tmp/unigps.sock --algo sssp --dataset lj --scale 1024 [--wait]
 //! unigps submit --connect tcp://host:7077 --token-file tok --plan pipeline.plan [--wait]
 //! unigps status --connect uds:///tmp/unigps.sock [--job N]
+//! unigps metrics --connect uds:///tmp/unigps.sock [--watch] [--interval SECS] [--prom]
 //! unigps shutdown --socket /tmp/unigps.sock
 //! ```
 //!
@@ -58,7 +59,7 @@ fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: unigps <run|generate|convert|info|engines|ipc-server|serve|submit|status|shutdown|version> [--flags]\n\
+        "usage: unigps <run|generate|convert|info|engines|ipc-server|serve|submit|status|metrics|shutdown|version> [--flags]\n\
          try: unigps run --algo pagerank --dataset lj --scale 1024 --engine pregel\n\
          or:  unigps serve --socket /tmp/unigps.sock    (then submit/status/shutdown)"
     );
@@ -81,6 +82,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&flags),
         "submit" => cmd_submit(&flags),
         "status" => cmd_status(&flags),
+        "metrics" => cmd_metrics(&flags),
         "shutdown" => cmd_shutdown(&flags),
         "version" | "--version" => {
             println!("unigps {}", unigps::VERSION);
@@ -409,6 +411,11 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
             Some(e) => println!("job {}: {} ({e})", st.id, st.state),
             None => println!("job {}: {}", st.id, st.state),
         }
+        // Terminal jobs carry their span-tree profile; print it so a
+        // status check doubles as a per-job latency breakdown.
+        if let Some(profile) = &st.profile {
+            print!("{profile}");
+        }
     } else {
         let s = client.stats()?;
         println!(
@@ -431,6 +438,68 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
         );
     }
     Ok(())
+}
+
+/// Render a metrics snapshot as a compact human table: non-zero counters
+/// and gauges, then every histogram with observations (count, mean and
+/// interpolated p50/p95/p99). Zero-valued series are elided — the
+/// Prometheus rendering (`--prom`) is the exhaustive form.
+fn print_metrics_table(snap: &unigps::obs::metrics::MetricsSnapshot) {
+    for (name, value) in &snap.counters {
+        if *value > 0 {
+            println!("{name} {value}");
+        }
+    }
+    for (name, value) in &snap.gauges {
+        if *value > 0 {
+            println!("{name} {value}");
+        }
+    }
+    for (name, hist) in &snap.hists {
+        if hist.count > 0 {
+            println!(
+                "{name} count={} mean={:.0}us p50={:.0}us p95={:.0}us p99={:.0}us",
+                hist.count,
+                hist.mean_us(),
+                hist.quantile(0.50),
+                hist.quantile(0.95),
+                hist.quantile(0.99),
+            );
+        }
+    }
+}
+
+fn cmd_metrics(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let mut client = client_from_flags(flags)?;
+    let prom = get(flags, "prom").is_some();
+    let print_one = |snap: &unigps::obs::metrics::MetricsSnapshot| {
+        if prom {
+            print!("{}", snap.render_prometheus());
+        } else {
+            print_metrics_table(snap);
+        }
+    };
+    if get(flags, "watch").is_some() {
+        let interval: u64 = get(flags, "interval").unwrap_or("2").parse()?;
+        // Refresh until interrupted (^C), one METRICS round trip per tick.
+        loop {
+            let snap = client.metrics()?;
+            println!("--- {}", chrono_free_stamp());
+            print_one(&snap);
+            std::thread::sleep(std::time::Duration::from_secs(interval.max(1)));
+        }
+    }
+    print_one(&client.metrics()?);
+    Ok(())
+}
+
+/// Wall-clock stamp for `--watch` separators without a date-time crate:
+/// seconds since the Unix epoch.
+fn chrono_free_stamp() -> String {
+    match std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        Ok(d) => format!("t={}s", d.as_secs()),
+        Err(_) => "t=?".to_string(),
+    }
 }
 
 fn cmd_shutdown(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {

@@ -1,0 +1,854 @@
+//! Process-wide metrics registry: sharded lock-free counters, gauges and
+//! power-of-two-bucket latency histograms.
+//!
+//! Design rules (see `docs/observability.md` for the full conventions):
+//!
+//! - **Aggregate on read, never on write.** Hot-path writes touch exactly one
+//!   cache line: a thread-affine shard of the counter/histogram, chosen once
+//!   per thread round-robin. Reads sum the shards. The disarmed overhead
+//!   budget is the same ≤ 1 % the fault-injection fast path meets (ablation
+//!   `[7]`, `obs_overhead_frac` in `BENCH_serve.json`).
+//! - **Names are the schema.** Every metric is registered under a literal
+//!   `unigps_*` name in this file; `unigps-lint` rule 6 keeps those literals
+//!   and the inventory in `docs/observability.md` a bijection. Units ride the
+//!   name suffix (`_us`, `_bytes`, `_total`), never a label.
+//! - **Snapshots are deterministic.** [`snapshot`] walks fixed name tables,
+//!   so two snapshots of the same registry state encode byte-identically —
+//!   the serve integration test holds the wire `METRICS` reply to that.
+//!
+//! All timestamps and durations come from [`crate::util::timer`]'s monotonic
+//! clock; nothing here reads `SystemTime`.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use crate::error::{Result, UniGpsError};
+use crate::ipc::protocol::{get_bytes, get_u32, get_u64, put_bytes, put_u32, put_u64};
+use crate::util::timer::monotonic_micros;
+
+/// Write-side shard count. More shards than typical worker counts so two hot
+/// threads rarely share a line; small enough that read-side summation is
+/// trivially cheap.
+pub const SHARDS: usize = 16;
+
+/// Histogram bucket count: bucket 0 is `[0, 2)` µs, bucket *i* is
+/// `[2^i, 2^(i+1))` µs, and the last bucket absorbs everything ≥ 2^31 µs
+/// (~36 minutes — past every serving-path bound).
+pub const BUCKETS: usize = 32;
+
+/// One cache-line-padded atomic cell, so concurrent writers on different
+/// shards never contend on a line.
+#[repr(align(64))]
+struct Shard(AtomicU64);
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SHARD_ID: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+/// This thread's shard index, assigned round-robin on first use.
+#[inline]
+fn shard_id() -> usize {
+    SHARD_ID.with(|s| {
+        let v = s.get();
+        if v != usize::MAX {
+            return v;
+        }
+        // relaxed: a round-robin ticket draw; no ordering with any other data.
+        let v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % SHARDS;
+        s.set(v);
+        v
+    })
+}
+
+/// A monotonically increasing counter, sharded per thread on the write side.
+pub struct Counter {
+    shards: [Shard; SHARDS],
+}
+
+impl Counter {
+    /// A zeroed counter (const, so registries can live in statics).
+    pub const fn new() -> Self {
+        const Z: Shard = Shard(AtomicU64::new(0));
+        Counter { shards: [Z; SHARDS] }
+    }
+
+    /// Add `n` to this thread's shard.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        // relaxed: a pure statistic — readers want an eventually-consistent
+        // sum and never order other memory against it.
+        self.shards[shard_id()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Sum across shards. Monotone: concurrent writers can only make a later
+    /// read larger, never smaller.
+    pub fn get(&self) -> u64 {
+        // relaxed: snapshot read of a monotone statistic.
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+/// A last-writer-wins instantaneous value (queue depth, resident bytes, …).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub const fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        // relaxed: gauges are point-in-time samples, not sync points.
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        // relaxed: see set.
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+struct HistShard {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+/// A fixed-bucket latency histogram (microseconds, power-of-two buckets),
+/// sharded per thread like [`Counter`]. Quantiles come from linear
+/// interpolation inside the covering bucket at read time.
+pub struct Histogram {
+    shards: [HistShard; SHARDS],
+}
+
+/// Bucket index for a microsecond observation (see [`BUCKETS`]).
+#[inline]
+pub fn bucket_index(us: u64) -> usize {
+    if us < 2 {
+        0
+    } else {
+        ((63 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+impl Histogram {
+    /// A zeroed histogram (const, so registries can live in statics).
+    pub const fn new() -> Self {
+        const B: AtomicU64 = AtomicU64::new(0);
+        const S: HistShard =
+            HistShard { count: AtomicU64::new(0), sum_us: AtomicU64::new(0), buckets: [B; BUCKETS] };
+        Histogram { shards: [S; SHARDS] }
+    }
+
+    /// Record one observation of `us` microseconds.
+    #[inline]
+    pub fn observe_us(&self, us: u64) {
+        let s = &self.shards[shard_id()];
+        // relaxed: statistics; readers tolerate a torn count/sum/bucket view.
+        s.count.fetch_add(1, Ordering::Relaxed);
+        s.sum_us.fetch_add(us, Ordering::Relaxed);
+        s.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] observation.
+    #[inline]
+    pub fn observe(&self, d: std::time::Duration) {
+        self.observe_us(d.as_micros() as u64);
+    }
+
+    /// Aggregate the shards into a point-in-time snapshot.
+    pub fn read(&self) -> HistSnapshot {
+        let mut count = 0u64;
+        let mut sum_us = 0u64;
+        let mut buckets = vec![0u64; BUCKETS];
+        for s in &self.shards {
+            // relaxed: snapshot read of monotone statistics.
+            count += s.count.load(Ordering::Relaxed);
+            sum_us += s.sum_us.load(Ordering::Relaxed);
+            for (b, a) in buckets.iter_mut().zip(&s.buckets) {
+                // relaxed: same — each bucket only ever grows.
+                *b += a.load(Ordering::Relaxed);
+            }
+        }
+        HistSnapshot { count, sum_us, buckets }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// An aggregated histogram read: total count, summed microseconds, and the
+/// per-bucket counts (length [`BUCKETS`] when it came from a live
+/// [`Histogram`]; the codec preserves whatever length was encoded).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct HistSnapshot {
+    /// Number of observations.
+    pub count: u64,
+    /// Sum of all observations, µs.
+    pub sum_us: u64,
+    /// Per-bucket observation counts.
+    pub buckets: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Quantile estimate in µs: walk the cumulative bucket counts to the
+    /// covering bucket, then interpolate linearly inside `[2^i, 2^(i+1))`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= rank {
+                let lo = if i == 0 { 0.0 } else { (1u128 << i) as f64 };
+                let hi = (1u128 << (i + 1)) as f64;
+                let frac = ((rank - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+            cum += c;
+        }
+        // Counts were torn mid-write; answer with the top edge rather than 0.
+        (1u128 << self.buckets.len()) as f64
+    }
+
+    /// Mean observation, µs (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+/// Number of per-method RPC latency histograms (see [`rpc_slot`]).
+pub const RPC_METHODS: usize = 10;
+
+/// Number of per-method idempotent-replay counters (the retryable methods:
+/// STATUS, WAIT, RESULT, STATS, CANCEL — `docs/robustness.md`).
+pub const REPLAY_METHODS: usize = 5;
+
+const RPC_HIST_NAMES: [&str; RPC_METHODS] = [
+    "unigps_rpc_submit_us",
+    "unigps_rpc_status_us",
+    "unigps_rpc_result_us",
+    "unigps_rpc_stats_us",
+    "unigps_rpc_submit_plan_us",
+    "unigps_rpc_hello_us",
+    "unigps_rpc_wait_us",
+    "unigps_rpc_cancel_us",
+    "unigps_rpc_metrics_us",
+    "unigps_rpc_shutdown_us",
+];
+
+const REPLAY_NAMES: [&str; REPLAY_METHODS] = [
+    "unigps_client_replays_status_total",
+    "unigps_client_replays_wait_total",
+    "unigps_client_replays_result_total",
+    "unigps_client_replays_stats_total",
+    "unigps_client_replays_cancel_total",
+];
+
+/// The process-wide registry. One static instance ([`registry`]); fields are
+/// public so call sites read like `registry().jobs_submitted.inc()`.
+pub struct Registry {
+    // Scheduler.
+    /// Jobs admitted by the scheduler.
+    pub jobs_submitted: Counter,
+    /// Submissions refused with backpressure.
+    pub jobs_rejected: Counter,
+    /// Jobs that reached `Completed`.
+    pub jobs_completed: Counter,
+    /// Jobs that reached `Failed`.
+    pub jobs_failed: Counter,
+    /// Jobs that reached `Cancelled` (queued or running).
+    pub jobs_cancelled: Counter,
+    /// Jobs currently queued (not yet claimed by a runner).
+    pub queue_depth: Gauge,
+    /// Jobs currently executing on a runner slot.
+    pub jobs_running: Gauge,
+    /// Queue wait: submit → claimed by a runner.
+    pub sched_queue_wait_us: Histogram,
+    /// Run time: claimed → terminal state.
+    pub sched_run_time_us: Histogram,
+    // Snapshot cache.
+    /// Cache entries evicted over budget.
+    pub cache_evictions: Counter,
+    /// Entries resident in the snapshot cache.
+    pub cache_resident: Gauge,
+    /// Bytes resident in the snapshot cache.
+    pub cache_resident_bytes: Gauge,
+    /// Base-dataset load latency (single-flight winner only).
+    pub cache_load_us: Histogram,
+    /// Derived-snapshot build latency (single-flight winner only).
+    pub cache_derive_us: Histogram,
+    // Transports (server and client sides share the process registry).
+    /// Accepted/initiated transport connections.
+    pub transport_connects: Counter,
+    /// Connections dropped by token auth.
+    pub transport_auth_failures: Counter,
+    /// Bytes read off sockets.
+    pub transport_bytes_read: Counter,
+    /// Bytes written to sockets.
+    pub transport_bytes_written: Counter,
+    /// Payload bytes streamed through `RESULT_CHUNK` frames.
+    pub result_chunk_bytes: Counter,
+    /// Client reconnect attempts (see `docs/robustness.md` retry policy).
+    pub client_reconnects: Counter,
+    /// Idempotent replays per method, indexed by [`replay_slot`].
+    pub client_replays: [Counter; REPLAY_METHODS],
+    /// Server-side RPC latency per method, indexed by [`rpc_slot`].
+    pub rpc_us: [Histogram; RPC_METHODS],
+    // Superstep runtime.
+    /// Per-step UDF/compute phase time, aggregated across workers.
+    pub step_compute_us: Histogram,
+    /// Per-step inbox drain time, aggregated across workers.
+    pub step_drain_us: Histogram,
+    /// Per-step write-gate + reduce-gate wait time, aggregated across workers.
+    pub step_gate_wait_us: Histogram,
+    /// Sealed rows that were NOT drained during the overlap window and had to
+    /// be drained at the delivery gate (pipelined schedule lag).
+    pub step_drain_lag_rows: Counter,
+    /// Monotonic µs when the server started; 0 until [`mark_server_start`].
+    server_start_us: AtomicU64,
+}
+
+impl Registry {
+    const fn new() -> Self {
+        const C: Counter = Counter::new();
+        const H: Histogram = Histogram::new();
+        Registry {
+            jobs_submitted: Counter::new(),
+            jobs_rejected: Counter::new(),
+            jobs_completed: Counter::new(),
+            jobs_failed: Counter::new(),
+            jobs_cancelled: Counter::new(),
+            queue_depth: Gauge::new(),
+            jobs_running: Gauge::new(),
+            sched_queue_wait_us: Histogram::new(),
+            sched_run_time_us: Histogram::new(),
+            cache_evictions: Counter::new(),
+            cache_resident: Gauge::new(),
+            cache_resident_bytes: Gauge::new(),
+            cache_load_us: Histogram::new(),
+            cache_derive_us: Histogram::new(),
+            transport_connects: Counter::new(),
+            transport_auth_failures: Counter::new(),
+            transport_bytes_read: Counter::new(),
+            transport_bytes_written: Counter::new(),
+            result_chunk_bytes: Counter::new(),
+            client_reconnects: Counter::new(),
+            client_replays: [C; REPLAY_METHODS],
+            rpc_us: [H; RPC_METHODS],
+            step_compute_us: Histogram::new(),
+            step_drain_us: Histogram::new(),
+            step_gate_wait_us: Histogram::new(),
+            step_drain_lag_rows: Counter::new(),
+            server_start_us: AtomicU64::new(0),
+        }
+    }
+}
+
+static REG: Registry = Registry::new();
+
+/// The process-wide registry.
+#[inline]
+pub fn registry() -> &'static Registry {
+    &REG
+}
+
+/// Pin the server-start mark for the uptime gauge (idempotent: the first
+/// bind wins, so restarts within one test process keep the earliest mark).
+pub fn mark_server_start() {
+    let now = monotonic_micros().max(1);
+    // relaxed: a write-once timestamp sample; readers only subtract it.
+    let _ = REG.server_start_us.compare_exchange(0, now, Ordering::Relaxed, Ordering::Relaxed);
+}
+
+/// Microseconds since [`mark_server_start`]; 0 when no server started here.
+pub fn uptime_us() -> u64 {
+    // relaxed: see mark_server_start.
+    let start = REG.server_start_us.load(Ordering::Relaxed);
+    if start == 0 {
+        0
+    } else {
+        monotonic_micros().saturating_sub(start)
+    }
+}
+
+/// Slot in [`Registry::rpc_us`] for a serve wire method, or `None` for
+/// non-serve indices.
+pub fn rpc_slot(method: u32) -> Option<usize> {
+    use crate::serve::method as m;
+    Some(match method {
+        m::SUBMIT => 0,
+        m::STATUS => 1,
+        m::RESULT => 2,
+        m::STATS => 3,
+        m::SUBMIT_PLAN => 4,
+        m::HELLO => 5,
+        m::WAIT => 6,
+        m::CANCEL => 7,
+        m::METRICS => 8,
+        m::SHUTDOWN => 9,
+        _ => return None,
+    })
+}
+
+/// The RPC latency histogram for a serve wire method.
+pub fn rpc_hist_for(method: u32) -> Option<&'static Histogram> {
+    rpc_slot(method).map(|i| &REG.rpc_us[i])
+}
+
+/// Slot in [`Registry::client_replays`] for an idempotent method.
+pub fn replay_slot(method: u32) -> Option<usize> {
+    use crate::serve::method as m;
+    Some(match method {
+        m::STATUS => 0,
+        m::WAIT => 1,
+        m::RESULT => 2,
+        m::STATS => 3,
+        m::CANCEL => 4,
+        _ => return None,
+    })
+}
+
+/// The idempotent-replay counter for a wire method.
+pub fn replay_counter_for(method: u32) -> Option<&'static Counter> {
+    replay_slot(method).map(|i| &REG.client_replays[i])
+}
+
+/// Fixed counter name table — the iteration order of every snapshot.
+fn counter_table() -> Vec<(&'static str, &'static Counter)> {
+    let r = registry();
+    let mut v = vec![
+        ("unigps_jobs_submitted_total", &r.jobs_submitted),
+        ("unigps_jobs_rejected_total", &r.jobs_rejected),
+        ("unigps_jobs_completed_total", &r.jobs_completed),
+        ("unigps_jobs_failed_total", &r.jobs_failed),
+        ("unigps_jobs_cancelled_total", &r.jobs_cancelled),
+        ("unigps_cache_evictions_total", &r.cache_evictions),
+        ("unigps_transport_connects_total", &r.transport_connects),
+        ("unigps_transport_auth_failures_total", &r.transport_auth_failures),
+        ("unigps_transport_bytes_read_total", &r.transport_bytes_read),
+        ("unigps_transport_bytes_written_total", &r.transport_bytes_written),
+        ("unigps_result_chunk_bytes_total", &r.result_chunk_bytes),
+        ("unigps_client_reconnects_total", &r.client_reconnects),
+        ("unigps_step_drain_lag_rows_total", &r.step_drain_lag_rows),
+    ];
+    for (i, c) in r.client_replays.iter().enumerate() {
+        v.push((REPLAY_NAMES[i], c));
+    }
+    v
+}
+
+/// Fixed gauge name table (uptime is appended computed, see [`snapshot`]).
+fn gauge_table() -> Vec<(&'static str, &'static Gauge)> {
+    let r = registry();
+    vec![
+        ("unigps_queue_depth", &r.queue_depth),
+        ("unigps_jobs_running", &r.jobs_running),
+        ("unigps_cache_resident", &r.cache_resident),
+        ("unigps_cache_resident_bytes", &r.cache_resident_bytes),
+    ]
+}
+
+/// Fixed histogram name table.
+fn hist_table() -> Vec<(&'static str, &'static Histogram)> {
+    let r = registry();
+    let mut v = vec![
+        ("unigps_sched_queue_wait_us", &r.sched_queue_wait_us),
+        ("unigps_sched_run_time_us", &r.sched_run_time_us),
+        ("unigps_cache_load_us", &r.cache_load_us),
+        ("unigps_cache_derive_us", &r.cache_derive_us),
+        ("unigps_step_compute_us", &r.step_compute_us),
+        ("unigps_step_drain_us", &r.step_drain_us),
+        ("unigps_step_gate_wait_us", &r.step_gate_wait_us),
+    ];
+    for (i, h) in r.rpc_us.iter().enumerate() {
+        v.push((RPC_HIST_NAMES[i], h));
+    }
+    v
+}
+
+/// Snapshot wire-codec version (`docs/observability.md`).
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Decoder sanity cap on any section's entry count — a registry this size
+/// has ~40 names; anything near the cap is a corrupt frame.
+const MAX_SNAPSHOT_ENTRIES: u32 = 4096;
+
+/// A point-in-time aggregate of every registered metric, with a versioned
+/// wire codec (names travel on the wire, so readers never need the registry
+/// layout). Field order is the fixed table order, making `encode`
+/// deterministic for a given state.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` counter reads.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` gauge reads.
+    pub gauges: Vec<(String, u64)>,
+    /// `(name, aggregate)` histogram reads.
+    pub hists: Vec<(String, HistSnapshot)>,
+}
+
+/// Read every registered metric into a [`MetricsSnapshot`].
+pub fn snapshot() -> MetricsSnapshot {
+    let counters =
+        counter_table().into_iter().map(|(n, c)| (n.to_string(), c.get())).collect::<Vec<_>>();
+    let mut gauges =
+        gauge_table().into_iter().map(|(n, g)| (n.to_string(), g.get())).collect::<Vec<_>>();
+    gauges.push(("unigps_server_uptime_us".to_string(), uptime_us()));
+    let hists = hist_table().into_iter().map(|(n, h)| (n.to_string(), h.read())).collect();
+    MetricsSnapshot { counters, gauges, hists }
+}
+
+fn get_name(buf: &[u8], pos: &mut usize) -> Result<String> {
+    String::from_utf8(get_bytes(buf, pos)?.to_vec())
+        .map_err(|_| UniGpsError::Ipc("metric name is not UTF-8".into()))
+}
+
+fn get_count(buf: &[u8], pos: &mut usize, what: &str) -> Result<u32> {
+    let n = get_u32(buf, pos)?;
+    if n > MAX_SNAPSHOT_ENTRIES {
+        return Err(UniGpsError::Ipc(format!("metrics snapshot: {what} count {n} too large")));
+    }
+    Ok(n)
+}
+
+impl MetricsSnapshot {
+    /// Encode: `u32 version | u32 n | n×(bytes name, u64 value)` for counters
+    /// then gauges, then `u32 n | n×(bytes name, u64 count, u64 sum_us,
+    /// u32 n_buckets, n_buckets×u64)` for histograms. Little-endian, length-
+    /// prefixed names — the same primitives as every other wire codec.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, SNAPSHOT_VERSION);
+        put_u32(&mut out, self.counters.len() as u32);
+        for (n, v) in &self.counters {
+            put_bytes(&mut out, n.as_bytes());
+            put_u64(&mut out, *v);
+        }
+        put_u32(&mut out, self.gauges.len() as u32);
+        for (n, v) in &self.gauges {
+            put_bytes(&mut out, n.as_bytes());
+            put_u64(&mut out, *v);
+        }
+        put_u32(&mut out, self.hists.len() as u32);
+        for (n, h) in &self.hists {
+            put_bytes(&mut out, n.as_bytes());
+            put_u64(&mut out, h.count);
+            put_u64(&mut out, h.sum_us);
+            put_u32(&mut out, h.buckets.len() as u32);
+            for b in &h.buckets {
+                put_u64(&mut out, *b);
+            }
+        }
+        out
+    }
+
+    /// Decode an [`encode`](Self::encode)d snapshot; typed errors on version
+    /// mismatch, truncation, or implausible section sizes.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut pos = 0;
+        let ver = get_u32(buf, &mut pos)?;
+        if ver != SNAPSHOT_VERSION {
+            return Err(UniGpsError::Ipc(format!(
+                "metrics snapshot version {ver} (this build speaks {SNAPSHOT_VERSION})"
+            )));
+        }
+        let mut counters = Vec::new();
+        for _ in 0..get_count(buf, &mut pos, "counter")? {
+            let name = get_name(buf, &mut pos)?;
+            counters.push((name, get_u64(buf, &mut pos)?));
+        }
+        let mut gauges = Vec::new();
+        for _ in 0..get_count(buf, &mut pos, "gauge")? {
+            let name = get_name(buf, &mut pos)?;
+            gauges.push((name, get_u64(buf, &mut pos)?));
+        }
+        let mut hists = Vec::new();
+        for _ in 0..get_count(buf, &mut pos, "histogram")? {
+            let name = get_name(buf, &mut pos)?;
+            let count = get_u64(buf, &mut pos)?;
+            let sum_us = get_u64(buf, &mut pos)?;
+            let n_buckets = get_count(buf, &mut pos, "bucket")?;
+            let mut buckets = Vec::with_capacity(n_buckets as usize);
+            for _ in 0..n_buckets {
+                buckets.push(get_u64(buf, &mut pos)?);
+            }
+            hists.push((name, HistSnapshot { count, sum_us, buckets }));
+        }
+        if pos != buf.len() {
+            return Err(UniGpsError::Ipc("metrics snapshot: trailing bytes".into()));
+        }
+        Ok(MetricsSnapshot { counters, gauges, hists })
+    }
+
+    /// Counter value by name.
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Gauge value by name.
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    /// Histogram aggregate by name.
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    /// Prometheus-style text rendering: `# TYPE` lines, cumulative
+    /// `_bucket{le="..."}` rows (non-empty buckets plus `+Inf`), `_sum` and
+    /// `_count` per histogram.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (n, v) in &self.counters {
+            let _ = writeln!(out, "# TYPE {n} counter\n{n} {v}");
+        }
+        for (n, v) in &self.gauges {
+            let _ = writeln!(out, "# TYPE {n} gauge\n{n} {v}");
+        }
+        for (n, h) in &self.hists {
+            let _ = writeln!(out, "# TYPE {n} histogram");
+            let mut cum = 0u64;
+            for (i, &c) in h.buckets.iter().enumerate() {
+                if c == 0 {
+                    continue;
+                }
+                cum += c;
+                let le = 1u128 << (i + 1);
+                let _ = writeln!(out, "{n}_bucket{{le=\"{le}\"}} {cum}");
+            }
+            let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count);
+            let _ = writeln!(out, "{n}_sum {}\n{n}_count {}", h.sum_us, h.count);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, Config};
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1023), 9);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // Every bucket boundary maps to its own bucket.
+        for i in 1..BUCKETS {
+            assert_eq!(bucket_index(1 << i), i.min(BUCKETS - 1), "boundary 2^{i}");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_interpolate() {
+        let h = Histogram::new();
+        // 100 observations spread uniformly inside [1024, 2048).
+        for k in 0..100u64 {
+            h.observe_us(1024 + k * 10);
+        }
+        let s = h.read();
+        assert_eq!(s.count, 100);
+        let p50 = s.quantile(0.5);
+        assert!((1024.0..2048.0).contains(&p50), "p50={p50}");
+        let p99 = s.quantile(0.99);
+        assert!(p99 > p50 && p99 < 2048.0, "p99={p99}");
+        // Mean is exact (sum is tracked, not bucketed).
+        let exact_mean = (0..100u64).map(|k| 1024 + k * 10).sum::<u64>() as f64 / 100.0;
+        assert!((s.mean_us() - exact_mean).abs() < 1e-9);
+        // Empty histogram is all zeros.
+        assert_eq!(Histogram::new().read().quantile(0.99), 0.0);
+    }
+
+    #[test]
+    fn quantile_spans_multiple_buckets() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.observe_us(10); // bucket 3: [8, 16)
+        }
+        for _ in 0..10 {
+            h.observe_us(5000); // bucket 12: [4096, 8192)
+        }
+        let s = h.read();
+        assert!(s.quantile(0.5) < 16.0);
+        assert!(s.quantile(0.95) >= 4096.0);
+    }
+
+    #[test]
+    fn concurrent_counter_increments_sum_exactly() {
+        // Property: however increments are split across threads (which land
+        // on different shards), the aggregate equals the arithmetic sum.
+        forall(
+            Config::new(16, 0xA11CE),
+            |r| {
+                let threads = 1 + r.next_below(4) as usize;
+                (0..threads).map(|_| 1 + r.next_below(500)).collect::<Vec<u64>>()
+            },
+            |per_thread| {
+                let c = Counter::new();
+                std::thread::scope(|s| {
+                    for &n in per_thread {
+                        let c = &c;
+                        s.spawn(move || {
+                            for _ in 0..n {
+                                c.inc();
+                            }
+                        });
+                    }
+                });
+                let want: u64 = per_thread.iter().sum();
+                if c.get() == want {
+                    Ok(())
+                } else {
+                    Err(format!("sum {} != expected {want}", c.get()))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn concurrent_histogram_observations_sum_exactly() {
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let h = &h;
+                s.spawn(move || {
+                    for k in 0..1000u64 {
+                        h.observe_us(t * 1000 + k);
+                    }
+                });
+            }
+        });
+        let snap = h.read();
+        assert_eq!(snap.count, 4000);
+        assert_eq!(snap.sum_us, (0..4000u64).sum::<u64>());
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 4000);
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrips_bit_identically() {
+        let r = registry();
+        r.jobs_submitted.inc();
+        r.sched_queue_wait_us.observe_us(1234);
+        let s = snapshot();
+        let bytes = s.encode();
+        let back = MetricsSnapshot::decode(&bytes).expect("decode");
+        assert_eq!(back, s);
+        assert_eq!(back.encode(), bytes, "re-encode must be bit-identical");
+        assert!(s.counter("unigps_jobs_submitted_total").expect("counter present") >= 1);
+        assert!(s.hist("unigps_sched_queue_wait_us").expect("hist present").count >= 1);
+        assert_eq!(s.gauges.last().expect("uptime gauge").0, "unigps_server_uptime_us");
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_garbage() {
+        assert!(MetricsSnapshot::decode(&[]).is_err());
+        let mut bad_ver = Vec::new();
+        put_u32(&mut bad_ver, SNAPSHOT_VERSION + 1);
+        assert!(MetricsSnapshot::decode(&bad_ver).is_err());
+        let good = snapshot().encode();
+        assert!(MetricsSnapshot::decode(&good[..good.len() - 1]).is_err(), "truncated");
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(MetricsSnapshot::decode(&trailing).is_err(), "trailing bytes");
+        let mut huge = Vec::new();
+        put_u32(&mut huge, SNAPSHOT_VERSION);
+        put_u32(&mut huge, MAX_SNAPSHOT_ENTRIES + 1);
+        assert!(MetricsSnapshot::decode(&huge).is_err(), "implausible count");
+    }
+
+    #[test]
+    fn method_lookup_tables_cover_the_serve_protocol() {
+        use crate::serve::method as m;
+        let all = [
+            m::SUBMIT,
+            m::STATUS,
+            m::RESULT,
+            m::STATS,
+            m::SUBMIT_PLAN,
+            m::HELLO,
+            m::WAIT,
+            m::CANCEL,
+            m::METRICS,
+            m::SHUTDOWN,
+        ];
+        let mut slots: Vec<usize> = all.iter().map(|&x| rpc_slot(x).expect("slot")).collect();
+        slots.sort_unstable();
+        assert_eq!(slots, (0..RPC_METHODS).collect::<Vec<_>>());
+        assert!(rpc_slot(0).is_none(), "IPC methods have no RPC histogram");
+        // The replay table covers exactly the idempotent methods.
+        for x in [m::STATUS, m::WAIT, m::RESULT, m::STATS, m::CANCEL] {
+            assert!(replay_counter_for(x).is_some());
+        }
+        for x in [m::SUBMIT, m::SUBMIT_PLAN, m::HELLO, m::SHUTDOWN, m::METRICS] {
+            assert!(replay_slot(x).is_none(), "method {x} is not blind-retried");
+        }
+    }
+
+    #[test]
+    fn prometheus_rendering_shape() {
+        let r = registry();
+        r.cache_evictions.inc();
+        r.cache_load_us.observe_us(100);
+        let text = snapshot().render_prometheus();
+        assert!(text.contains("# TYPE unigps_cache_evictions_total counter"));
+        assert!(text.contains("# TYPE unigps_queue_depth gauge"));
+        assert!(text.contains("# TYPE unigps_cache_load_us histogram"));
+        assert!(text.contains("unigps_cache_load_us_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("unigps_cache_load_us_sum"));
+        assert!(text.contains("unigps_cache_load_us_count"));
+    }
+
+    #[test]
+    fn uptime_is_zero_until_marked_then_monotone() {
+        // Other tests in this binary may have marked the server start; only
+        // assert the monotone half unconditionally.
+        let a = uptime_us();
+        mark_server_start();
+        let b = uptime_us();
+        assert!(b >= a);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        assert!(uptime_us() > 0);
+    }
+}

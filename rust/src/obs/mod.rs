@@ -1,0 +1,19 @@
+//! Runtime observability for the serving path (zero-dependency).
+//!
+//! Two halves, plus a wire surface that lives in `serve`:
+//!
+//! - [`metrics`] — a process-wide registry of sharded counters, gauges and
+//!   power-of-two latency histograms. Writes are lock-free and touch one
+//!   thread-affine cache line; aggregation happens on read. The `METRICS`
+//!   wire method (index 24) ships [`metrics::MetricsSnapshot`]'s versioned
+//!   codec, and `unigps metrics` renders it Prometheus-style.
+//! - [`trace`] — per-job span trees (queued → load → stage → superstep)
+//!   collected on the runner thread, attached to `JobStatus` as rendered
+//!   text, kept in a bounded ring of recent profiles, and surfaced through
+//!   the slow-job log when a job exceeds `ServeConfig::slow_job_threshold`.
+//!
+//! Conventions, the metric-name inventory (enforced by `unigps-lint` rule 6)
+//! and the snapshot codec are documented in `docs/observability.md`.
+
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,321 @@
+//! Job-scoped tracing: a span tree per served job, recorded on the runner
+//! thread into a thread-local collector and published to a bounded ring of
+//! recent profiles at job end.
+//!
+//! The scheduler arms a collector with [`begin_job`] when a runner claims a
+//! job; the execution path then wraps its stages with [`span`] (a no-op when
+//! no collector is armed, so direct `Plan::run` callers pay nothing) and
+//! synthesizes per-superstep child spans from `StepMetrics` with
+//! [`record_steps`]. [`end_job`] detaches the finished profile, pushes it
+//! into the ring, and hands it back so the scheduler can attach the rendered
+//! text to `JobStatus` and feed the slow-job log (`ServeConfig::
+//! slow_job_threshold`, `docs/observability.md`).
+//!
+//! Timestamps are µs on the process-wide monotonic epoch
+//! ([`crate::util::timer::monotonic_micros`]), so spans from any thread are
+//! mutually comparable. Per-job span count is bounded
+//! ([`MAX_SPANS_PER_JOB`]); overflow increments a `dropped` tally instead of
+//! growing without bound.
+
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+
+use crate::util::timer::monotonic_micros;
+
+/// Span cap per job; past it spans are counted as dropped, not stored.
+pub const MAX_SPANS_PER_JOB: usize = 512;
+
+/// Recent-profile ring capacity.
+const RING_CAP: usize = 64;
+
+/// A completed span: half-open `[start_us, end_us)` on the monotonic epoch,
+/// nested `depth` levels under the job root (depth 1 = top-level span).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRec {
+    /// Human-readable span label.
+    pub name: String,
+    /// Start, µs since the process epoch.
+    pub start_us: u64,
+    /// End, µs since the process epoch.
+    pub end_us: u64,
+    /// Nesting depth under the job root.
+    pub depth: u32,
+}
+
+/// The finished span tree of one job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobProfile {
+    /// Job id the profile belongs to.
+    pub job_id: u64,
+    /// Collector arm time (runner claim), µs since the process epoch.
+    pub begin_us: u64,
+    /// Collector detach time (terminal transition), µs since the epoch.
+    pub end_us: u64,
+    /// Completed spans, sorted by start time (ties: shallower first).
+    pub spans: Vec<SpanRec>,
+    /// Spans discarded past [`MAX_SPANS_PER_JOB`].
+    pub dropped: u64,
+}
+
+impl JobProfile {
+    /// Total traced duration, µs.
+    pub fn total_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.begin_us)
+    }
+}
+
+struct Collector {
+    job_id: u64,
+    begin_us: u64,
+    depth: u32,
+    spans: Vec<SpanRec>,
+    dropped: u64,
+}
+
+impl Collector {
+    fn push(&mut self, rec: SpanRec) {
+        if self.spans.len() >= MAX_SPANS_PER_JOB {
+            self.dropped += 1;
+        } else {
+            self.spans.push(rec);
+        }
+    }
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Collector>> = const { RefCell::new(None) };
+}
+
+static RING: Mutex<Vec<Arc<JobProfile>>> = Mutex::new(Vec::new());
+
+/// Arm a collector for `job_id` on this thread (the runner claiming the
+/// job). Replaces any leftover collector — a runner thread serves one job at
+/// a time, so a leftover means the previous job ended without `end_job` and
+/// its partial trace is stale.
+pub fn begin_job(job_id: u64) {
+    ACTIVE.with(|a| {
+        *a.borrow_mut() = Some(Collector {
+            job_id,
+            begin_us: monotonic_micros(),
+            depth: 0,
+            spans: Vec::new(),
+            dropped: 0,
+        });
+    });
+}
+
+/// True when a collector is armed on this thread.
+pub fn is_active() -> bool {
+    ACTIVE.with(|a| a.borrow().is_some())
+}
+
+/// Record an already-measured span (used for phases that ended before the
+/// collector could wrap them, like queue wait). No-op when unarmed.
+pub fn record(name: &str, start_us: u64, end_us: u64) {
+    ACTIVE.with(|a| {
+        if let Some(c) = a.borrow_mut().as_mut() {
+            let depth = c.depth + 1;
+            c.push(SpanRec { name: name.to_string(), start_us, end_us, depth });
+        }
+    });
+}
+
+/// Run `f` under a named span. When no collector is armed this is a direct
+/// call — no clock reads, no allocation — so library users outside the
+/// serving path never pay for tracing.
+pub fn span<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let armed = ACTIVE.with(|a| {
+        if let Some(c) = a.borrow_mut().as_mut() {
+            c.depth += 1;
+            true
+        } else {
+            false
+        }
+    });
+    if !armed {
+        return f();
+    }
+    let start = monotonic_micros();
+    let out = f();
+    let end = monotonic_micros();
+    ACTIVE.with(|a| {
+        if let Some(c) = a.borrow_mut().as_mut() {
+            c.depth = c.depth.saturating_sub(1);
+            let depth = c.depth + 1;
+            c.push(SpanRec { name: name.to_string(), start_us: start, end_us: end, depth });
+        }
+    });
+    out
+}
+
+/// Synthesize one child span per superstep from a finished stage's
+/// `StepMetrics`, anchored so the last step ends now (per-step `elapsed`
+/// values are exact; inter-step gaps are folded into the steps, which is the
+/// right trade for a profile read by humans). No-op when unarmed.
+pub fn record_steps(steps: &[crate::distributed::metrics::StepMetrics]) {
+    if steps.is_empty() || !is_active() {
+        return;
+    }
+    let now = monotonic_micros();
+    let total: u64 = steps.iter().map(|s| s.elapsed.as_micros() as u64).sum();
+    let mut t = now.saturating_sub(total);
+    ACTIVE.with(|a| {
+        let mut b = a.borrow_mut();
+        let Some(c) = b.as_mut() else { return };
+        let depth = c.depth + 1;
+        for s in steps {
+            let d = s.elapsed.as_micros() as u64;
+            let name = format!(
+                "superstep {} (active={}, msgs={}, compute={}us, drain={}us, gate={}us)",
+                s.step, s.active, s.messages, s.compute_us, s.drain_us, s.gate_wait_us
+            );
+            c.push(SpanRec { name, start_us: t, end_us: t + d, depth });
+            t += d;
+        }
+    });
+}
+
+/// Detach this thread's collector, publish the profile into the recent ring,
+/// and return it. `None` when no collector was armed.
+pub fn end_job() -> Option<Arc<JobProfile>> {
+    let c = ACTIVE.with(|a| a.borrow_mut().take())?;
+    let mut spans = c.spans;
+    spans.sort_by_key(|s| (s.start_us, s.depth));
+    let prof = Arc::new(JobProfile {
+        job_id: c.job_id,
+        begin_us: c.begin_us,
+        end_us: monotonic_micros(),
+        spans,
+        dropped: c.dropped,
+    });
+    let mut ring = RING.lock().unwrap();
+    if ring.len() >= RING_CAP {
+        ring.remove(0);
+    }
+    ring.push(prof.clone());
+    Some(prof)
+}
+
+/// The most recent finished profiles, oldest first (bounded ring).
+pub fn recent() -> Vec<Arc<JobProfile>> {
+    RING.lock().unwrap().clone()
+}
+
+/// Cap on rendered profile text — it travels inside `JobStatus` replies.
+const MAX_RENDER_BYTES: usize = 16 * 1024;
+
+/// Render a profile as indented text: one line per span, offsets relative to
+/// the job begin mark.
+pub fn render(p: &JobProfile) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "job {} profile: total {:.1}ms, {} span(s){}",
+        p.job_id,
+        p.total_us() as f64 / 1e3,
+        p.spans.len(),
+        if p.dropped > 0 { format!(" (+{} dropped)", p.dropped) } else { String::new() }
+    );
+    for s in &p.spans {
+        if out.len() >= MAX_RENDER_BYTES {
+            let _ = writeln!(out, "  … truncated at {MAX_RENDER_BYTES} bytes");
+            break;
+        }
+        let off = s.start_us.saturating_sub(p.begin_us) as f64 / 1e3;
+        let dur = s.end_us.saturating_sub(s.start_us) as f64 / 1e3;
+        let indent = "  ".repeat(s.depth as usize);
+        let _ = writeln!(out, "{indent}[{off:>9.1}ms +{dur:>9.1}ms] {}", s.name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::metrics::StepMetrics;
+    use std::time::Duration;
+
+    #[test]
+    fn span_is_passthrough_when_unarmed() {
+        assert!(!is_active());
+        assert_eq!(span("x", || 41 + 1), 42);
+        assert!(end_job().is_none());
+    }
+
+    #[test]
+    fn armed_collector_builds_a_sorted_tree() {
+        begin_job(7);
+        assert!(is_active());
+        let out = span("outer", || {
+            span("inner", || 1) + 1
+        });
+        assert_eq!(out, 2);
+        record("queued", 0, 1);
+        let p = end_job().expect("profile");
+        assert!(!is_active());
+        assert_eq!(p.job_id, 7);
+        assert_eq!(p.spans.len(), 3);
+        // Sorted by start time: the synthetic "queued" span (start 0) leads,
+        // then outer (depth 1) before inner (depth 2).
+        assert_eq!(p.spans[0].name, "queued");
+        assert_eq!(p.spans[1].name, "outer");
+        assert_eq!(p.spans[1].depth, 1);
+        assert_eq!(p.spans[2].name, "inner");
+        assert_eq!(p.spans[2].depth, 2);
+        assert!(p.spans[2].start_us >= p.spans[1].start_us);
+        assert!(p.spans[2].end_us <= p.spans[1].end_us);
+        // The ring kept it.
+        assert!(recent().iter().any(|q| q.job_id == 7));
+    }
+
+    #[test]
+    fn record_steps_synthesizes_contiguous_children() {
+        begin_job(8);
+        let mk = |step: u32, ms: u64| StepMetrics {
+            step,
+            active: 5,
+            messages: 10,
+            elapsed: Duration::from_millis(ms),
+            ..StepMetrics::default()
+        };
+        record_steps(&[mk(0, 2), mk(1, 3)]);
+        let p = end_job().expect("profile");
+        assert_eq!(p.spans.len(), 2);
+        assert!(p.spans[0].name.starts_with("superstep 0"));
+        assert!(p.spans[1].name.starts_with("superstep 1"));
+        assert_eq!(p.spans[0].end_us, p.spans[1].start_us, "contiguous");
+        assert_eq!(p.spans[0].end_us - p.spans[0].start_us, 2000);
+        assert_eq!(p.spans[1].end_us - p.spans[1].start_us, 3000);
+    }
+
+    #[test]
+    fn span_cap_counts_drops() {
+        begin_job(9);
+        for i in 0..(MAX_SPANS_PER_JOB + 10) as u64 {
+            record("s", i, i + 1);
+        }
+        let p = end_job().expect("profile");
+        assert_eq!(p.spans.len(), MAX_SPANS_PER_JOB);
+        assert_eq!(p.dropped, 10);
+        let text = render(&p);
+        assert!(text.contains("dropped"));
+    }
+
+    #[test]
+    fn render_is_indented_and_bounded() {
+        begin_job(10);
+        span("stage 0", || {
+            record_steps(&[StepMetrics {
+                step: 0,
+                elapsed: Duration::from_micros(500),
+                ..StepMetrics::default()
+            }]);
+        });
+        let p = end_job().expect("profile");
+        let text = render(&p);
+        assert!(text.contains("job 10 profile"));
+        assert!(text.contains("  [")); // depth-1 indent
+        assert!(text.len() < MAX_RENDER_BYTES + 128);
+    }
+}

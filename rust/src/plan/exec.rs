@@ -239,7 +239,18 @@ pub fn execute(
                 let mut opts = session.options().clone();
                 opts.workers = opts.workers.min(worker_cap).max(1);
                 opts.cancel = cancel.clone();
-                let result = run_stage(stage, &mut state, store, session, &opts)?;
+                // Traced when a serving runner armed a collector for this
+                // job; a direct call otherwise (in-process paths pay nothing).
+                let idx = outputs.len();
+                let label = match &stage.op {
+                    StageOp::Op(op) => op.name(),
+                    StageOp::Custom { name, .. } => name.as_str(),
+                };
+                let result = crate::obs::trace::span(&format!("stage {idx}: {label}"), || {
+                    let r = run_stage(stage, &mut state, store, session, &opts)?;
+                    crate::obs::trace::record_steps(&r.metrics.steps);
+                    Ok::<_, UniGpsError>(r)
+                })?;
                 outputs.push(StageOutput {
                     result,
                     origin: state.origin.clone(),

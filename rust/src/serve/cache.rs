@@ -246,10 +246,21 @@ impl SnapshotCache {
         // Chaos harness: a failed load must release the claim (one waiter
         // retries) and fail the requesting job with a typed error — the
         // exact path a corrupt or missing dataset takes.
+        let load_timer = crate::util::timer::Timer::start();
         let loaded = match crate::util::fault::point!("cache-load") {
             Some(act) => act.apply("cache-load").and_then(|()| load()),
             None => load(),
         };
+        if loaded.is_ok() {
+            let us = load_timer.elapsed().as_micros() as u64;
+            if us > 0 {
+                let obs = crate::obs::metrics::registry();
+                match level {
+                    KeyLevel::Dataset => obs.cache_load_us.observe_us(us),
+                    KeyLevel::Derived => obs.cache_derive_us.observe_us(us),
+                }
+            }
+        }
         let mut inner = self.inner.lock().unwrap();
         match loaded {
             Ok(g) => {
@@ -268,6 +279,7 @@ impl SnapshotCache {
                     },
                 );
                 self.evict_over_budget(&mut inner, key);
+                publish_gauges(&inner);
                 claim.armed = false;
                 self.ready.notify_all();
                 Ok(graph)
@@ -297,9 +309,22 @@ impl SnapshotCache {
             if let Some(Slot::Ready { bytes, .. }) = inner.slots.remove(&victim) {
                 inner.total_bytes -= bytes;
                 inner.evictions += 1;
+                crate::obs::metrics::registry().cache_evictions.inc();
             }
         }
     }
+}
+
+/// Refresh the resident-snapshot gauges from the locked state.
+fn publish_gauges(inner: &Inner) {
+    let obs = crate::obs::metrics::registry();
+    let resident = inner
+        .slots
+        .values()
+        .filter(|s| matches!(s, Slot::Ready { .. }))
+        .count() as u64;
+    obs.cache_resident.set(resident);
+    obs.cache_resident_bytes.set(inner.total_bytes as u64);
 }
 
 impl std::fmt::Debug for SnapshotCache {

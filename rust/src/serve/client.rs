@@ -115,6 +115,7 @@ impl<T: Transport> RemoteClient<T> {
                     self.reader = BufReader::new(conn.try_clone()?);
                     self.writer = BufWriter::new(conn);
                     self.poisoned = None;
+                    crate::obs::metrics::registry().client_reconnects.inc();
                     return Ok(());
                 }
                 Err(e) => last = Some(e),
@@ -171,6 +172,9 @@ impl<T: Transport> RemoteClient<T> {
         match self.call(m, payload) {
             Err(crate::error::UniGpsError::Io(_)) => {
                 self.reconnect()?;
+                if let Some(replays) = crate::obs::metrics::replay_counter_for(m) {
+                    replays.inc();
+                }
                 self.call(m, payload)
             }
             other => other,
@@ -285,6 +289,9 @@ impl<T: Transport> Client for RemoteClient<T> {
                 if self.poisoned.is_some() || matches!(e, crate::error::UniGpsError::Io(_)) =>
             {
                 self.reconnect()?;
+                if let Some(replays) = crate::obs::metrics::replay_counter_for(method::RESULT) {
+                    replays.inc();
+                }
                 self.result_once(id)
             }
             other => other,
@@ -299,6 +306,15 @@ impl<T: Transport> Client for RemoteClient<T> {
 
     fn stats(&mut self) -> Result<ServeStats> {
         ServeStats::decode(&self.call_idempotent(method::STATS, &[])?)
+    }
+
+    /// Fetch the server's process-wide metrics snapshot (one `METRICS`
+    /// frame; idempotent, so a transport failure triggers one
+    /// reconnect-and-resend like the other read-only methods).
+    fn metrics(&mut self) -> Result<crate::obs::metrics::MetricsSnapshot> {
+        crate::obs::metrics::MetricsSnapshot::decode(
+            &self.call_idempotent(method::METRICS, &[])?,
+        )
     }
 
     fn shutdown(&mut self) -> Result<()> {

@@ -236,28 +236,47 @@ pub struct JobStatus {
     pub state: JobState,
     /// Failure message when `state == Failed`.
     pub error: Option<String>,
+    /// Rendered trace profile ([`crate::obs::trace::render`]), attached
+    /// once the job is terminal. Travels as a trailing optional wire
+    /// field: old peers that stop decoding after `error` stay compatible.
+    pub profile: Option<String>,
 }
 
 impl JobStatus {
+    /// A status with no error and no profile attached.
+    pub fn new(id: JobId, state: JobState) -> JobStatus {
+        JobStatus { id, state, error: None, profile: None }
+    }
+
     /// Encode for the wire.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         put_u64(&mut out, self.id);
         put_u32(&mut out, self.state.code());
         put_bytes(&mut out, self.error.as_deref().unwrap_or("").as_bytes());
+        put_bytes(&mut out, self.profile.as_deref().unwrap_or("").as_bytes());
         out
     }
 
-    /// Decode from the wire.
+    /// Decode from the wire. The trailing profile field is optional: a
+    /// frame ending after `error` (an older encoder) decodes with
+    /// `profile: None`.
     pub fn decode(buf: &[u8]) -> Result<JobStatus> {
         let mut pos = 0;
         let id = get_u64(buf, &mut pos)?;
         let state = JobState::from_code(get_u32(buf, &mut pos)?)?;
         let err = String::from_utf8_lossy(get_bytes(buf, &mut pos)?).into_owned();
+        let profile = if pos < buf.len() {
+            let p = String::from_utf8_lossy(get_bytes(buf, &mut pos)?).into_owned();
+            if p.is_empty() { None } else { Some(p) }
+        } else {
+            None
+        };
         Ok(JobStatus {
             id,
             state,
             error: if err.is_empty() { None } else { Some(err) },
+            profile,
         })
     }
 }
@@ -483,23 +502,44 @@ kind = rmat\nvertices = 128\nedges = 512\nseed = 1\ndelay_ms = 5\n\n\
     #[test]
     fn status_roundtrip() {
         for status in [
-            JobStatus { id: 7, state: JobState::Queued, error: None },
-            JobStatus { id: 8, state: JobState::Running, error: None },
-            JobStatus { id: u64::MAX, state: JobState::Done, error: None },
+            JobStatus::new(7, JobState::Queued),
+            JobStatus::new(8, JobState::Running),
+            JobStatus::new(u64::MAX, JobState::Done),
             JobStatus {
                 id: 0,
                 state: JobState::Failed,
                 error: Some("engine error: boom".into()),
+                profile: None,
             },
             JobStatus {
                 id: 9,
                 state: JobState::Cancelled,
                 error: Some("deadline exceeded".into()),
+                profile: None,
+            },
+            JobStatus {
+                id: 10,
+                state: JobState::Done,
+                error: None,
+                profile: Some("job 10 profile: total 1.0ms, 1 span(s)\n".into()),
             },
         ] {
             assert_eq!(JobStatus::decode(&status.encode()).unwrap(), status);
         }
         assert!(JobStatus::decode(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn status_decode_tolerates_frames_without_the_profile_field() {
+        // An older encoder stops after `error`; the trailing profile is
+        // optional on decode.
+        let mut old = Vec::new();
+        put_u64(&mut old, 42);
+        put_u32(&mut old, 2); // Done
+        put_bytes(&mut old, b"");
+        let s = JobStatus::decode(&old).unwrap();
+        assert_eq!(s, JobStatus::new(42, JobState::Done));
+        assert_eq!(s.profile, None);
     }
 
     #[test]

@@ -130,6 +130,10 @@ pub mod method {
     /// running job may still report `Running` — it unwinds to `Cancelled`
     /// within about one superstep; long-poll with `WAIT` to observe it).
     pub const CANCEL: u32 = 23;
+    /// Fetch a versioned snapshot of the process-wide metrics registry
+    /// ([`crate::obs::metrics::snapshot`]), encoded with
+    /// [`crate::obs::metrics::MetricsSnapshot::encode`]. Empty payload.
+    pub const METRICS: u32 = 24;
     /// Orderly server shutdown (drains queued and running jobs first).
     pub use crate::ipc::protocol::method::SHUTDOWN;
 }
@@ -169,6 +173,10 @@ pub struct ServeConfig {
     /// that stops draining a streamed result cannot pin a handler thread.
     /// `None` disables the timeout.
     pub write_timeout: Option<std::time::Duration>,
+    /// Jobs whose queue-wait + run time exceeds this are logged to stderr
+    /// with their rendered trace profile (the slow-job log,
+    /// `docs/observability.md`). `None` disables the log.
+    pub slow_job_threshold: Option<std::time::Duration>,
 }
 
 impl ServeConfig {
@@ -189,6 +197,7 @@ impl ServeConfig {
             total_workers: cores,
             read_timeout: Some(std::time::Duration::from_secs(120)),
             write_timeout: Some(std::time::Duration::from_secs(30)),
+            slow_job_threshold: None,
         }
     }
 
@@ -244,6 +253,7 @@ mod tests {
             method::HELLO,
             method::WAIT,
             method::CANCEL,
+            method::METRICS,
         ] {
             for v in [
                 vc::INIT_PROGRAM,

@@ -40,6 +40,7 @@ use crate::serve::jobs::{JobId, JobSpec, JobState, JobStatus};
 use crate::serve::ServeConfig;
 use crate::session::Session;
 use crate::util::sync::{CancelToken, Condvar, Mutex};
+use crate::util::timer::monotonic_micros;
 use std::collections::{HashMap, VecDeque};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -81,6 +82,12 @@ struct JobRecord {
     /// Absolute deadline resolved from `spec.deadline_ms` at admission
     /// (`None` = no deadline). The clock covers queue time.
     deadline: Option<Instant>,
+    /// Admission time, µs on the process monotonic epoch — feeds the
+    /// queue-wait histogram and the "queued" trace span.
+    submitted_at_us: u64,
+    /// Rendered trace profile, attached at the terminal transition and
+    /// served inside [`JobStatus`].
+    profile: Option<String>,
 }
 
 struct Inner {
@@ -116,6 +123,9 @@ struct Shared {
     queue_cap: usize,
     /// Per-slot engine worker budget (cores split across slots).
     job_workers: usize,
+    /// Jobs slower than this (queue wait + run) are logged with their
+    /// trace profile ([`ServeConfig::slow_job_threshold`]).
+    slow_job_threshold: Option<Duration>,
 }
 
 /// Default grace period [`Scheduler::shutdown`] allows in-flight jobs
@@ -155,6 +165,7 @@ impl Scheduler {
             base,
             queue_cap: cfg.queue_cap.max(1),
             job_workers: cfg.per_job_workers(),
+            slow_job_threshold: cfg.slow_job_threshold,
         });
         let runners = (0..cfg.slots)
             .map(|slot| {
@@ -206,13 +217,16 @@ impl Scheduler {
     /// Admit an already-validated job (text and plan submits land here).
     /// Same typed rejections as [`Scheduler::submit`].
     pub fn submit_spec(&self, spec: JobSpec) -> Result<JobId> {
+        let obs = crate::obs::metrics::registry();
         let mut inner = self.shared.inner.lock().unwrap();
         if inner.shutdown {
             inner.rejected += 1;
+            obs.jobs_rejected.inc();
             return Err(UniGpsError::serve("scheduler is shutting down"));
         }
         if inner.queue.len() >= self.shared.queue_cap {
             inner.rejected += 1;
+            obs.jobs_rejected.inc();
             return Err(UniGpsError::backpressure(format!(
                 "queue full ({} jobs queued, capacity {}); retry later",
                 inner.queue.len(),
@@ -232,10 +246,14 @@ impl Scheduler {
                 result: None,
                 cancel: CancelToken::new(),
                 deadline,
+                submitted_at_us: monotonic_micros(),
+                profile: None,
             },
         );
         inner.queue.push_back(id);
         inner.submitted += 1;
+        obs.jobs_submitted.inc();
+        publish_gauges(&inner);
         drop(inner);
         self.shared.work.notify_one();
         if deadline.is_some() {
@@ -438,7 +456,7 @@ fn runner_loop(shared: &Shared) {
         // Pop and mark Running under one lock hold, so a concurrent
         // [`Scheduler::cancel`] can never observe a popped-but-unmarked job
         // and race its terminal transition with ours.
-        let (id, spec, cancel) = {
+        let (id, spec, cancel, submitted_at_us) = {
             let mut inner = shared.inner.lock().unwrap();
             loop {
                 if let Some(id) = inner.queue.pop_front() {
@@ -456,7 +474,10 @@ fn runner_loop(shared: &Shared) {
                     // under the same lock hold.
                     let rec = inner.jobs.get_mut(&id).expect("queued job has a record");
                     rec.state = JobState::Running;
-                    break (id, rec.spec.clone(), rec.cancel.clone());
+                    publish_gauges(&inner);
+                    // lint: allow-panic: as above.
+                    let rec = inner.jobs.get(&id).expect("queued job has a record");
+                    break (id, rec.spec.clone(), rec.cancel.clone(), rec.submitted_at_us);
                 }
                 if inner.shutdown {
                     return;
@@ -464,6 +485,14 @@ fn runner_loop(shared: &Shared) {
                 inner = shared.work.wait(inner).unwrap();
             }
         };
+        let obs = crate::obs::metrics::registry();
+        let run_started_us = monotonic_micros();
+        let wait_us = run_started_us.saturating_sub(submitted_at_us);
+        if wait_us > 0 {
+            obs.sched_queue_wait_us.observe_us(wait_us);
+        }
+        crate::obs::trace::begin_job(id);
+        crate::obs::trace::record("queued", submitted_at_us, run_started_us);
         // A panicking job (malformed generator parameters, engine bug) must
         // not kill the slot thread or wedge the record in Running — it
         // becomes a Failed job like any other error.
@@ -478,37 +507,62 @@ fn runner_loop(shared: &Shared) {
                 .unwrap_or_else(|| "non-string panic payload".to_string());
             Err(UniGpsError::serve(format!("job panicked: {msg}")))
         });
+        let profile = crate::obs::trace::end_job();
+        let rendered = profile.as_deref().map(crate::obs::trace::render);
+        let ended_us = monotonic_micros();
+        let run_us = ended_us.saturating_sub(run_started_us);
+        if run_us > 0 {
+            obs.sched_run_time_us.observe_us(run_us);
+        }
         let mut inner = shared.inner.lock().unwrap();
         inner.running -= 1;
         match outcome {
             Ok(result) => {
                 inner.completed += 1;
+                obs.jobs_completed.inc();
                 // lint: allow-panic: running jobs keep their records —
                 // eviction only ever touches terminal jobs.
                 let rec = inner.jobs.get_mut(&id).expect("running job has a record");
                 rec.state = JobState::Done;
                 rec.result = Some(Arc::new(result));
+                rec.profile = rendered.clone();
             }
             Err(e) if e.is_cancelled() => {
                 inner.cancelled += 1;
+                obs.jobs_cancelled.inc();
                 // lint: allow-panic: as above.
                 let rec = inner.jobs.get_mut(&id).expect("running job has a record");
                 rec.state = JobState::Cancelled;
                 rec.error = Some(e.to_string());
+                rec.profile = rendered.clone();
             }
             Err(e) => {
                 inner.failed += 1;
+                obs.jobs_failed.inc();
                 // lint: allow-panic: running jobs keep their records —
                 // eviction only ever touches terminal jobs.
                 let rec = inner.jobs.get_mut(&id).expect("running job has a record");
                 rec.state = JobState::Failed;
                 rec.error = Some(e.to_string());
+                rec.profile = rendered.clone();
             }
         }
         finish_record(&mut inner, id);
+        publish_gauges(&inner);
         drop(inner);
         // Wake every waiter; each rechecks its own job id.
         shared.done.notify_all();
+        if let Some(thr) = shared.slow_job_threshold {
+            let total_us = ended_us.saturating_sub(submitted_at_us);
+            if total_us >= thr.as_micros() as u64 {
+                eprintln!(
+                    "[unigps serve] slow job {id}: {:.1}ms queue+run (threshold {:.1}ms)\n{}",
+                    total_us as f64 / 1e3,
+                    thr.as_secs_f64() * 1e3,
+                    rendered.as_deref().unwrap_or("(no profile collected)"),
+                );
+            }
+        }
     }
 }
 
@@ -527,8 +581,10 @@ fn cancel_locked(inner: &mut Inner, id: JobId, reason: &str) -> bool {
             rec.error = Some(format!("cancelled: {reason}"));
             rec.cancel.cancel(reason);
             inner.cancelled += 1;
+            crate::obs::metrics::registry().jobs_cancelled.inc();
             inner.queue.retain(|&q| q != id);
             finish_record(inner, id);
+            publish_gauges(inner);
             true
         }
         JobState::Running => {
@@ -590,8 +646,18 @@ fn status_of(inner: &Inner, id: JobId) -> Result<JobStatus> {
             id,
             state: rec.state,
             error: rec.error.clone(),
+            profile: rec.profile.clone(),
         })
         .ok_or_else(|| UniGpsError::serve(format!("unknown job {id}")))
+}
+
+/// Refresh the queue-depth and running-jobs gauges from the locked state —
+/// gauges are set, never incremented, so they cannot drift from the truth
+/// the scheduler lock protects.
+fn publish_gauges(inner: &Inner) {
+    let obs = crate::obs::metrics::registry();
+    obs.queue_depth.set(inner.queue.len() as u64);
+    obs.jobs_running.set(inner.running as u64);
 }
 
 /// Record a terminal job in completion order and evict the oldest finished
@@ -657,9 +723,11 @@ fn run_job(shared: &Shared, spec: &JobSpec, cancel: &CancelToken) -> Result<RunR
         source.canonical(),
         spec.session.options().partition.name()
     );
-    let base = shared
-        .cache
-        .get_or_load(&base_key, || source.load(&shared.base))?;
+    let base = crate::obs::trace::span(&format!("load snapshot {base_key}"), || {
+        shared
+            .cache
+            .get_or_load(&base_key, || source.load(&shared.base))
+    })?;
     let mut store = CachedStore {
         cache: &shared.cache,
         base_key,
@@ -728,6 +796,24 @@ mod tests {
         assert_eq!(result.columns, direct.columns);
         let s = sched.stats();
         assert_eq!((s.completed, s.failed, s.queued, s.running), (1, 0, 0, 0));
+        sched.shutdown();
+    }
+
+    #[test]
+    fn done_jobs_carry_a_trace_profile() {
+        let sched = Scheduler::start(
+            Session::builder().build(),
+            Arc::new(SnapshotCache::new(usize::MAX)),
+            &cfg(1, 8),
+        );
+        let id = sched.submit(SPEC).unwrap();
+        let st = wait_done(&sched, id);
+        assert_eq!(st.state, JobState::Done, "error: {:?}", st.error);
+        let profile = st.profile.expect("terminal jobs attach a rendered profile");
+        assert!(profile.contains(&format!("job {id} profile")), "{profile}");
+        assert!(profile.contains("queued"), "{profile}");
+        assert!(profile.contains("load snapshot"), "{profile}");
+        assert!(profile.contains("stage 0: sssp"), "{profile}");
         sched.shutdown();
     }
 

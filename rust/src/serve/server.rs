@@ -50,6 +50,7 @@ use crate::serve::transport::{
 };
 use crate::serve::{method, ServeConfig};
 use crate::session::Session;
+use crate::util::timer::Timer;
 use std::collections::HashMap;
 use std::io::{BufReader, BufWriter};
 use std::net::SocketAddr;
@@ -174,6 +175,7 @@ impl Server {
             None => None,
         };
         let tcp_addr = tcp.as_ref().and_then(tcp_local_addr);
+        crate::obs::metrics::mark_server_start();
         let cache = Arc::new(crate::serve::cache::SnapshotCache::new(cfg.cache_budget));
         let sched = Scheduler::start(session, cache.clone(), &cfg);
         Ok(Server {
@@ -337,17 +339,24 @@ impl Server {
                 }
                 Err(e) => return Err(e),
             };
+            // RPC latency is measured from frame-decoded to response
+            // flushed into the writer, per method — the server-side half
+            // of every round trip a client observes.
+            let rpc_timer = Timer::start();
             if m == method::HELLO {
                 match self.check_token(&payload) {
                     Ok(()) => {
                         authed = true;
                         write_frame(&mut writer, status::OK, &[])?;
+                        observe_rpc(m, &rpc_timer);
                         continue;
                     }
                     Err(e) => {
                         // One typed rejection, then the connection dies —
                         // an unauthenticated peer gets no second frame.
+                        crate::obs::metrics::registry().transport_auth_failures.inc();
                         write_frame(&mut writer, status::ERR, &encode_error(&e))?;
+                        observe_rpc(m, &rpc_timer);
                         return Ok(());
                     }
                 }
@@ -356,6 +365,7 @@ impl Server {
                 let e = UniGpsError::auth(
                     "authentication required: the first frame on TCP must be HELLO <token>",
                 );
+                crate::obs::metrics::registry().transport_auth_failures.inc();
                 write_frame(&mut writer, status::ERR, &encode_error(&e))?;
                 return Ok(());
             }
@@ -379,6 +389,7 @@ impl Server {
                     Ok(table) => write_result_stream(&mut writer, &table, self.cfg.chunk_len)?,
                     Err(e) => write_frame(&mut writer, status::ERR, &encode_error(&e))?,
                 }
+                observe_rpc(m, &rpc_timer);
                 continue;
             }
             match self.dispatch(m, &payload) {
@@ -398,6 +409,7 @@ impl Server {
                 },
                 Err(e) => write_frame(&mut writer, status::ERR, &encode_error(&e))?,
             }
+            observe_rpc(m, &rpc_timer);
             if m == method::SHUTDOWN {
                 self.stop.store(true, Ordering::SeqCst);
                 self.wake_acceptors();
@@ -455,8 +467,21 @@ impl Server {
                 Ok(self.sched.cancel(id, "client cancel")?.encode())
             }
             method::STATS => Ok(self.stats().encode()),
+            method::METRICS => Ok(crate::obs::metrics::snapshot().encode()),
             method::SHUTDOWN => Ok(Vec::new()),
             other => Err(UniGpsError::Ipc(format!("unknown serve method {other}"))),
+        }
+    }
+}
+
+/// Record one served frame on its method's RPC latency histogram.
+/// Sub-microsecond handlers record nothing — the histograms stay
+/// observation-only, so a snapshot never invents load.
+fn observe_rpc(method: u32, timer: &Timer) {
+    if let Some(hist) = crate::obs::metrics::rpc_hist_for(method) {
+        let us = timer.elapsed().as_micros() as u64;
+        if us > 0 {
+            hist.observe_us(us);
         }
     }
 }

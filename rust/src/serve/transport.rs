@@ -124,6 +124,9 @@ pub fn write_result_stream(w: &mut impl Write, payload: &[u8], chunk_len: usize)
             act.apply("result-stream")?;
         }
         write_frame(w, reply::RESULT_CHUNK, chunk)?;
+        crate::obs::metrics::registry()
+            .result_chunk_bytes
+            .add(chunk.len() as u64);
     }
     let mut end = Vec::with_capacity(8);
     put_u64(&mut end, fnv1a64(payload));
@@ -283,10 +286,14 @@ impl Read for Conn {
         if let Some(act) = fault::point!("transport-read") {
             act.apply_io("transport-read")?;
         }
-        match self {
+        let n = match self {
             Conn::Unix(s) => s.read(buf),
             Conn::Tcp(s) => s.read(buf),
+        }?;
+        if n > 0 {
+            crate::obs::metrics::registry().transport_bytes_read.add(n as u64);
         }
+        Ok(n)
     }
 }
 
@@ -295,10 +302,14 @@ impl Write for Conn {
         if let Some(act) = fault::point!("transport-write") {
             act.apply_io("transport-write")?;
         }
-        match self {
+        let n = match self {
             Conn::Unix(s) => s.write(buf),
             Conn::Tcp(s) => s.write(buf),
+        }?;
+        if n > 0 {
+            crate::obs::metrics::registry().transport_bytes_written.add(n as u64);
         }
+        Ok(n)
     }
     fn flush(&mut self) -> std::io::Result<()> {
         match self {
@@ -410,7 +421,9 @@ impl Transport for UdsTransport {
         if let Some(act) = fault::point!("transport-connect") {
             act.apply("transport-connect")?;
         }
-        Ok(Conn::Unix(connect_with_retry(&self.path)?))
+        let conn = Conn::Unix(connect_with_retry(&self.path)?);
+        crate::obs::metrics::registry().transport_connects.inc();
+        Ok(conn)
     }
     fn describe(&self) -> String {
         format!("uds://{}", self.path.display())
@@ -468,7 +481,10 @@ impl Transport for TcpTransport {
         write_frame(&mut conn, crate::serve::method::HELLO, self.token.as_bytes())?;
         let (head, payload) = read_frame(&mut conn)?;
         match head {
-            reply::OK => Ok(conn),
+            reply::OK => {
+                crate::obs::metrics::registry().transport_connects.inc();
+                Ok(conn)
+            }
             reply::ERR => Err(decode_error(&payload)),
             other => Err(UniGpsError::ipc(format!(
                 "bad HELLO reply head {other} from {}",

@@ -140,6 +140,19 @@ impl CpuTimer {
     }
 }
 
+/// The process-wide monotonic epoch every serving-path timestamp is
+/// measured against. Lazily pinned on first use, so "microseconds since
+/// epoch" values from any thread are mutually comparable and — unlike
+/// `SystemTime` deltas — never go backwards under NTP steps. This is the
+/// clock behind [`crate::obs`]'s span timestamps and uptime gauge.
+static EPOCH: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+/// Microseconds elapsed since the process epoch (monotonic, comparable
+/// across threads). The first caller pins the epoch.
+pub fn monotonic_micros() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
 /// Throughput helper: items per second, guarding zero durations.
 pub fn per_sec(items: u64, d: Duration) -> f64 {
     let s = d.as_secs_f64();
@@ -172,6 +185,18 @@ mod tests {
         let names: Vec<_> = p.iter().map(|(n, _)| n.to_string()).collect();
         assert_eq!(names, vec!["compute", "comm"]);
         assert!(p.report().contains("compute="));
+    }
+
+    #[test]
+    fn monotonic_micros_never_regresses() {
+        let a = monotonic_micros();
+        std::thread::sleep(Duration::from_millis(1));
+        let b = monotonic_micros();
+        assert!(b > a, "monotonic clock must advance: {a} -> {b}");
+        // Cross-thread comparability: a later read on another thread is
+        // never behind an earlier read here.
+        let c = std::thread::spawn(monotonic_micros).join().unwrap();
+        assert!(c >= b);
     }
 
     #[test]

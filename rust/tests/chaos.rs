@@ -7,7 +7,10 @@
 //! * every admitted job reaches a terminal state (`Done | Failed |
 //!   Cancelled`) — a fault may fail a job, never wedge it;
 //! * the scheduler's books balance: `completed + failed + cancelled ==
-//!   submitted`, nothing left queued or running;
+//!   submitted`, nothing left queued or running — and the same balance
+//!   holds in the process-global `obs::metrics` counters (asserted as
+//!   deltas across the run), with the queue/running gauges reading
+//!   empty and reconnect counts bounding idempotent replays;
 //! * shutdown still drains cleanly and the process returns to its
 //!   baseline thread count — no leaked handler, runner or watchdog
 //!   threads.
@@ -166,6 +169,10 @@ fn every_job_ends_terminal_and_the_server_drains_under_faults() {
     let _g = locked();
     fault::clear();
     let baseline_threads = thread_count();
+    // The obs registry is process-global and the sibling test feeds it
+    // too, so its books-balance invariant is asserted on deltas across
+    // this run (CHAOS_LOCK serializes the two tests).
+    let obs_before = unigps::obs::metrics::snapshot();
 
     // Bind and start clean — chaos begins once the listeners are up.
     let server = start_server();
@@ -229,6 +236,40 @@ fn every_job_ends_terminal_and_the_server_drains_under_faults() {
             "more cancelled jobs than cancel calls: {j:?}"
         );
     }
+
+    // Invariant 2b: the same books balance in the obs registry —
+    // submitted == completed + failed + cancelled as deltas across this
+    // run, mirroring the scheduler's own stats exactly, with the
+    // queue/running gauges reading empty once everything is terminal.
+    let obs_after = unigps::obs::metrics::snapshot();
+    let delta = |name: &str| -> u64 {
+        obs_after.counter(name).expect("registered counter")
+            - obs_before.counter(name).expect("registered counter")
+    };
+    let submitted = delta("unigps_jobs_submitted_total");
+    let terminal = delta("unigps_jobs_completed_total")
+        + delta("unigps_jobs_failed_total")
+        + delta("unigps_jobs_cancelled_total");
+    assert_eq!(submitted, terminal, "obs books must balance under faults");
+    assert_eq!(
+        submitted, j.submitted,
+        "obs counters mirror the scheduler's own books"
+    );
+    assert_eq!(obs_after.gauge("unigps_queue_depth"), Some(0));
+    assert_eq!(obs_after.gauge("unigps_jobs_running"), Some(0));
+    // Client-side retry accounting comes from the counters, not from
+    // timing inference: every idempotent replay is preceded by a
+    // successful reconnect, so reconnects bound replays from above.
+    let replays = delta("unigps_client_replays_status_total")
+        + delta("unigps_client_replays_wait_total")
+        + delta("unigps_client_replays_result_total")
+        + delta("unigps_client_replays_stats_total")
+        + delta("unigps_client_replays_cancel_total");
+    let reconnects = delta("unigps_client_reconnects_total");
+    assert!(
+        reconnects >= replays,
+        "reconnects ({reconnects}) must bound idempotent replays ({replays})"
+    );
 
     // Invariant 3: clean drain — shutdown returns, the server thread
     // joins, the socket file is gone.
