@@ -83,6 +83,14 @@ pub trait Client {
     /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
     fn cancel(&mut self, id: JobId) -> Result<JobStatus>;
 
+    /// Apply a delta batch ([`crate::delta::DeltaBatch`] text form)
+    /// against the current generation of its dataset, producing
+    /// generation N+1 (`docs/evolving.md`). Subsequent jobs on the
+    /// dataset run on the new generation unless they pin
+    /// `generation = <epoch>`. Not idempotent: remote implementations
+    /// never blind-retry it after a transport failure.
+    fn ingest(&mut self, batch: &str) -> Result<crate::delta::IngestReceipt>;
+
     /// Server-wide (or in-process equivalent) cache + scheduler counters.
     fn stats(&mut self) -> Result<ServeStats>;
 
@@ -177,6 +185,10 @@ impl Client for LocalClient {
 
     fn cancel(&mut self, id: JobId) -> Result<JobStatus> {
         self.sched.cancel(id, "client cancel")
+    }
+
+    fn ingest(&mut self, batch: &str) -> Result<crate::delta::IngestReceipt> {
+        self.sched.ingest(batch)
     }
 
     fn stats(&mut self) -> Result<ServeStats> {

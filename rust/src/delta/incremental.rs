@@ -1,0 +1,540 @@
+//! Incremental operators over generations: delta PageRank and
+//! incremental connected components.
+//!
+//! Both operators start from the **parent** generation's result instead
+//! of recomputing the child from scratch, and both are contracted to land
+//! on exactly the same answer as a from-scratch run on the materialized
+//! child snapshot — bit-identical `f64`s for PageRank, equal labels for
+//! CC (property-tested in `rust/tests/delta_property.rs`).
+//!
+//! # Delta PageRank
+//!
+//! Fixed-iteration PageRank is a level recurrence: with `rank_0 = 1/N`,
+//!
+//! ```text
+//! rank_k(v) = (1 - d)/N + d * fold(rank_{k-1}(u) / outdeg(u) : u -> v)
+//! ```
+//!
+//! A [`PrTrace`] keeps every level of a run. After a [`DeltaBatch`], the
+//! only vertices whose level-k value can differ from the parent trace are
+//! the **dirty frontier**: seeds are the batch-touched vertices (every
+//! op's destination, whose in-row changed, plus the out-neighbors of any
+//! vertex whose out-degree changed, whose message value changed), and the
+//! frontier grows by one out-neighborhood per level — `A_k = A_{k-1} ∪
+//! N_out(A_{k-1})`. [`incremental_pagerank`] recomputes exactly the
+//! frontier at each level and copies every other value from the parent
+//! trace.
+//!
+//! Bit-identity with the engines requires replaying the superstep
+//! runtime's **message fold order**, because floating-point addition is
+//! not associative. For a destination `v` owned by partition `t`, the
+//! runtime merges: first the messages from senders owned by `t` (the
+//! local fast path, in ascending `(src, edge)` order), then each remote
+//! partition `s = 0..P` ascending, each row in ascending `(src, edge)`
+//! order — and with the sender-side combiner enabled, each remote row is
+//! pre-folded to one value before the single merge. The serial kernel
+//! here buckets each in-row by owning partition and folds in that exact
+//! order, for both combiner modes, matching the Pregel engine's
+//! deterministic drain (`engine::superstep` module docs). The trace
+//! records the partition assignment it folded under; if the child's
+//! assignment differs anywhere (possible under `edge-balanced`
+//! partitioning, whose cut points follow the degree distribution), the
+//! whole graph is treated as dirty — a from-scratch recompute with the
+//! child's own assignment.
+//!
+//! # Incremental CC
+//!
+//! Converged min-label CC labels every vertex with the smallest vertex id
+//! in its (weakly) connected component. Edge additions only merge
+//! components, so [`incremental_cc`] unions each vertex with its parent
+//! label and each added edge's endpoints in a min-root union-find and
+//! reads the labels back. Any removal may split a component, so batches
+//! with removals fall back to a full recompute ([`cc_labels`]) — which is
+//! itself the same union-find over all edges.
+
+use crate::delta::DeltaBatch;
+use crate::engine::RunOptions;
+use crate::graph::csr::Topology;
+use crate::graph::partition::{PartitionStrategy, Partitioner};
+use crate::graph::Graph;
+use crate::vcprog::VertexId;
+
+/// The damping factor the `pagerank` workload runs with
+/// ([`crate::vcprog::programs::PageRank::new`]).
+pub const DAMPING: f64 = 0.85;
+
+/// A full level trace of one fixed-iteration PageRank run, plus the
+/// execution shape (partitioning, combiner mode) its folds replayed —
+/// the reusable state delta PageRank starts from.
+#[derive(Debug, Clone)]
+pub struct PrTrace {
+    damping: f64,
+    workers: usize,
+    partition: PartitionStrategy,
+    combiner: bool,
+    /// `levels[k][v]` = rank of `v` after `k` rank updates; `levels[0]`
+    /// is the uniform `1/N` init.
+    levels: Vec<Vec<f64>>,
+    /// Out-degree per vertex of the graph the trace ran on (message
+    /// values are `rank / outdeg`, so a degree change dirties the
+    /// out-neighborhood).
+    out_degrees: Vec<u32>,
+    /// Partition owner per vertex the folds were bucketed under.
+    owners: Vec<u32>,
+}
+
+impl PrTrace {
+    /// Final ranks (the engine's `"rank"` output column).
+    pub fn final_ranks(&self) -> &[f64] {
+        self.levels.last().map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Number of stored levels (rank updates + 1).
+    pub fn num_levels(&self) -> usize {
+        self.levels.len()
+    }
+}
+
+/// Fold `v`'s inbound messages in the superstep runtime's exact order
+/// (module docs) and apply the rank update. `buckets` is caller-owned
+/// scratch, one per partition.
+fn fold_rank(
+    topo: &Topology,
+    part: &Partitioner,
+    prev: &[f64],
+    v: VertexId,
+    combiner: bool,
+    buckets: &mut [Vec<f64>],
+) -> f64 {
+    for b in buckets.iter_mut() {
+        b.clear();
+    }
+    for (_eid, u) in topo.in_edges(v) {
+        let d = topo.out_degree(u);
+        // A dangling source emits nothing — unreachable here (u has an
+        // out-edge to v), kept for shape parity with the program's emit.
+        if d > 0 {
+            buckets[part.partition_of(u)].push(prev[u as usize] / d as f64);
+        }
+    }
+    fn merge(acc: &mut Option<f64>, m: f64) {
+        *acc = Some(match *acc {
+            Some(a) => a + m,
+            None => m,
+        });
+    }
+    let t = part.partition_of(v);
+    let mut acc: Option<f64> = None;
+    // Local fast path first: senders co-owned with v merge during their
+    // own emit phase, before any remote row is drained.
+    for &m in &buckets[t] {
+        merge(&mut acc, m);
+    }
+    // Then remote rows, in ascending sender-partition order.
+    for (s, bucket) in buckets.iter().enumerate() {
+        if s == t || bucket.is_empty() {
+            continue;
+        }
+        if combiner {
+            // Sender-side combiner: the row arrives pre-folded to one value.
+            let mut sub: Option<f64> = None;
+            for &m in bucket {
+                merge(&mut sub, m);
+            }
+            if let Some(m) = sub {
+                merge(&mut acc, m);
+            }
+        } else {
+            for &m in bucket {
+                merge(&mut acc, m);
+            }
+        }
+    }
+    let msg = acc.unwrap_or(0.0);
+    // Exact expression shape of PageRank::vertex_compute — (1.0 - 0.85)
+    // is not 0.15 in f64, so the subtraction must be replayed, not folded.
+    (1.0 - DAMPING) / topo.num_vertices() as f64 + DAMPING * msg
+}
+
+/// How many levels a run stores: the engine executes
+/// `min(max_iter, iterations + 1)` supersteps, the first of which only
+/// seeds messages, so updates = supersteps - 1 and levels = updates + 1.
+fn level_count(iterations: u32, opts: &RunOptions) -> usize {
+    opts.max_iter.min(iterations + 1).max(1) as usize
+}
+
+/// From-scratch PageRank producing the full level trace. `iterations`
+/// rank updates (the `PageRank` program's parameter); `opts` supplies
+/// `max_iter`, workers, partition strategy and combiner mode exactly as
+/// an engine run would consume them.
+pub fn pagerank_trace(graph: &Graph, iterations: u32, opts: &RunOptions) -> PrTrace {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    let workers = opts.workers.max(1).min(n.max(1));
+    let part = Partitioner::new(topo, workers, opts.partition);
+    let num_levels = level_count(iterations, opts);
+    let mut levels: Vec<Vec<f64>> = Vec::with_capacity(num_levels);
+    levels.push(vec![1.0 / n as f64; n]);
+    let mut buckets: Vec<Vec<f64>> = vec![Vec::new(); workers];
+    for k in 1..num_levels {
+        let next: Vec<f64> = {
+            let prev = &levels[k - 1];
+            (0..n as VertexId)
+                .map(|v| fold_rank(topo, &part, prev, v, opts.combiner, &mut buckets))
+                .collect()
+        };
+        levels.push(next);
+    }
+    PrTrace {
+        damping: DAMPING,
+        workers,
+        partition: opts.partition,
+        combiner: opts.combiner,
+        levels,
+        out_degrees: (0..n as VertexId).map(|v| topo.out_degree(v) as u32).collect(),
+        owners: (0..n as VertexId).map(|v| part.partition_of(v) as u32).collect(),
+    }
+}
+
+fn mark(dirty: &mut [bool], list: &mut Vec<VertexId>, v: VertexId) {
+    if !dirty[v as usize] {
+        dirty[v as usize] = true;
+        list.push(v);
+    }
+}
+
+/// Delta PageRank: recompute only the batch-touched frontier of `child`
+/// (the parent generation with `batch` applied), reusing every clean
+/// value from the parent trace. Falls back to a full
+/// [`pagerank_trace`] recompute when the trace is incompatible with this
+/// run's shape — different vertex count, level count, workers, partition
+/// strategy or assignment, combiner mode — so the result is always
+/// bit-identical to a from-scratch run on `child`.
+pub fn incremental_pagerank(
+    parent: &PrTrace,
+    child: &Graph,
+    batch: &DeltaBatch,
+    iterations: u32,
+    opts: &RunOptions,
+) -> PrTrace {
+    let topo = child.topology();
+    let n = topo.num_vertices();
+    let workers = opts.workers.max(1).min(n.max(1));
+    let part = Partitioner::new(topo, workers, opts.partition);
+    let num_levels = level_count(iterations, opts);
+    let endpoints_in_range = batch
+        .adds()
+        .iter()
+        .map(|&(u, v, _)| (u, v))
+        .chain(batch.removes().iter().copied())
+        .all(|(u, v)| (u as usize) < n && (v as usize) < n);
+    let compatible = parent.out_degrees.len() == n
+        && parent.levels.len() == num_levels
+        && parent.workers == workers
+        && parent.partition == opts.partition
+        && parent.combiner == opts.combiner
+        && parent.damping == DAMPING
+        && endpoints_in_range
+        // Fold order depends on the vertex→partition assignment; under
+        // edge-balanced partitioning the child's cut points can move.
+        && (0..n as VertexId).all(|v| parent.owners[v as usize] as usize == part.partition_of(v));
+    if !compatible {
+        return pagerank_trace(child, iterations, opts);
+    }
+
+    // Dirty seeds (A_1): destinations whose in-row changed, plus the
+    // out-neighborhoods of vertices whose out-degree (message value)
+    // changed.
+    let mut dirty = vec![false; n];
+    let mut dirty_list: Vec<VertexId> = Vec::new();
+    for u in 0..n as VertexId {
+        if parent.out_degrees[u as usize] as usize != topo.out_degree(u) {
+            for (_eid, v) in topo.out_edges(u) {
+                mark(&mut dirty, &mut dirty_list, v);
+            }
+        }
+    }
+    for &(_u, v, _w) in batch.adds() {
+        mark(&mut dirty, &mut dirty_list, v);
+    }
+    for &(_u, v) in batch.removes() {
+        mark(&mut dirty, &mut dirty_list, v);
+    }
+
+    let mut levels: Vec<Vec<f64>> = Vec::with_capacity(num_levels);
+    levels.push(parent.levels[0].clone());
+    let mut buckets: Vec<Vec<f64>> = vec![Vec::new(); workers];
+    // Frontier entries whose out-neighborhoods are already marked; each
+    // dirty vertex is expanded exactly once across all levels.
+    let mut expanded = 0usize;
+    for k in 1..num_levels {
+        if k > 1 {
+            // A_k = A_{k-1} ∪ N_out(A_{k-1}).
+            let end = dirty_list.len();
+            while expanded < end {
+                let u = dirty_list[expanded];
+                expanded += 1;
+                for (_eid, v) in topo.out_edges(u) {
+                    mark(&mut dirty, &mut dirty_list, v);
+                }
+            }
+        }
+        let next: Vec<f64> = {
+            let prev = &levels[k - 1];
+            let mut next = parent.levels[k].clone();
+            for &v in &dirty_list {
+                next[v as usize] = fold_rank(topo, &part, prev, v, opts.combiner, &mut buckets);
+            }
+            next
+        };
+        levels.push(next);
+    }
+    PrTrace {
+        damping: DAMPING,
+        workers,
+        partition: opts.partition,
+        combiner: opts.combiner,
+        levels,
+        out_degrees: (0..n as VertexId).map(|v| topo.out_degree(v) as u32).collect(),
+        owners: parent.owners.clone(),
+    }
+}
+
+/// Union-find whose root is always the minimum id of its set, so `find`
+/// is directly the converged min-label CC answer.
+struct MinForest {
+    parent: Vec<VertexId>,
+}
+
+impl MinForest {
+    fn new(n: usize) -> MinForest {
+        MinForest {
+            parent: (0..n as VertexId).collect(),
+        }
+    }
+
+    fn find(&mut self, v: VertexId) -> VertexId {
+        let mut root = v;
+        while self.parent[root as usize] != root {
+            root = self.parent[root as usize];
+        }
+        // Path compression: re-point the walked chain at the root.
+        let mut cur = v;
+        while self.parent[cur as usize] != root {
+            let next = self.parent[cur as usize];
+            self.parent[cur as usize] = root;
+            cur = next;
+        }
+        root
+    }
+
+    fn union(&mut self, a: VertexId, b: VertexId) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra != rb {
+            // Attach the larger root under the smaller: the min-root
+            // invariant is what makes find() the component label.
+            if ra < rb {
+                self.parent[rb as usize] = ra;
+            } else {
+                self.parent[ra as usize] = rb;
+            }
+        }
+    }
+}
+
+/// From-scratch connected components: the label of `v` is the smallest
+/// vertex id weakly reachable from it — exactly what the converged
+/// min-label-propagation `cc` workload outputs (as `i64`s, matching its
+/// `"component"` column).
+pub fn cc_labels(graph: &Graph) -> Vec<i64> {
+    let topo = graph.topology();
+    let n = topo.num_vertices();
+    let mut uf = MinForest::new(n);
+    for u in 0..n as VertexId {
+        for (_eid, v) in topo.out_edges(u) {
+            uf.union(u, v);
+        }
+    }
+    (0..n as VertexId).map(|v| uf.find(v) as i64).collect()
+}
+
+/// Incremental CC: merge the parent generation's converged labels with
+/// the batch's added edges. Removals can split components, so any batch
+/// with removals — or a parent label vector that is not a plausible
+/// converged labelling for `child`'s vertex set — falls back to
+/// [`cc_labels`] on the child.
+pub fn incremental_cc(parent_labels: &[i64], child: &Graph, batch: &DeltaBatch) -> Vec<i64> {
+    let n = child.num_vertices();
+    let reusable = batch.removes().is_empty()
+        && parent_labels.len() == n
+        && parent_labels.iter().all(|&l| l >= 0 && (l as usize) < n)
+        && batch
+            .adds()
+            .iter()
+            .all(|&(u, v, _)| (u as usize) < n && (v as usize) < n);
+    if !reusable {
+        return cc_labels(child);
+    }
+    let mut uf = MinForest::new(n);
+    for v in 0..n as VertexId {
+        uf.union(v, parent_labels[v as usize] as VertexId);
+    }
+    for &(u, v, _w) in batch.adds() {
+        uf.union(u, v);
+    }
+    (0..n as VertexId).map(|v| uf.find(v) as i64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::pregel;
+    use crate::graph::builder::from_pairs;
+    use crate::plan::DatasetRef;
+    use crate::vcprog::programs::{ConnectedComponents, PageRank};
+
+    fn source() -> DatasetRef {
+        DatasetRef::Synthetic {
+            kind: "er".into(),
+            vertices: 48,
+            edges: 200,
+            seed: 5,
+        }
+    }
+
+    fn engine_ranks(g: &Graph, iterations: u32, opts: &RunOptions) -> Vec<f64> {
+        let pr = PageRank::new(g.num_vertices(), iterations);
+        let mut o = opts.clone();
+        o.max_iter = opts.max_iter.min(pr.rounds());
+        let run = pregel::run(g, &pr, &o).unwrap();
+        run.props.iter().map(|p| p.rank).collect()
+    }
+
+    fn bits(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn trace_matches_engine_bit_for_bit() {
+        let g = crate::graph::generate::random_for_tests(48, 200, 5);
+        for strat in [
+            PartitionStrategy::Hash,
+            PartitionStrategy::Range,
+            PartitionStrategy::EdgeBalanced,
+        ] {
+            for combiner in [false, true] {
+                for pipeline in [false, true] {
+                    let mut opts = RunOptions::default().with_workers(3);
+                    opts.partition = strat;
+                    opts.combiner = combiner;
+                    opts.pipeline = pipeline;
+                    let want = engine_ranks(&g, 8, &opts);
+                    let trace = pagerank_trace(&g, 8, &opts);
+                    assert_eq!(
+                        bits(trace.final_ranks()),
+                        bits(&want),
+                        "{strat:?} combiner={combiner} pipeline={pipeline}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_respects_max_iter_truncation() {
+        let g = crate::graph::generate::random_for_tests(30, 120, 9);
+        let opts = RunOptions::default().with_workers(2).with_max_iter(3);
+        let want = engine_ranks(&g, 10, &opts);
+        let trace = pagerank_trace(&g, 10, &opts);
+        assert_eq!(trace.num_levels(), 3);
+        assert_eq!(bits(trace.final_ranks()), bits(&want));
+    }
+
+    #[test]
+    fn incremental_pagerank_matches_scratch_on_applied_batch() {
+        let parent = crate::graph::generate::random_for_tests(48, 200, 5);
+        // Pick an existing edge to remove and a fresh pair to add.
+        let (ru, rv) = {
+            let t = parent.topology();
+            let u = (0..48u32).find(|&u| t.out_degree(u) > 0).unwrap();
+            (u, t.out_edges(u).next().unwrap().1)
+        };
+        let add = (0..48u32)
+            .flat_map(|u| (0..48u32).map(move |v| (u, v)))
+            .find(|&(u, v)| {
+                parent.topology().out_edges(u).all(|(_, t)| t != v)
+            })
+            .unwrap();
+        let batch = DeltaBatch::new(source(), vec![(add.0, add.1, 1.0)], vec![(ru, rv)]).unwrap();
+        let (child, _removed) = batch.apply(&parent).unwrap();
+        for strat in [
+            PartitionStrategy::Hash,
+            PartitionStrategy::Range,
+            PartitionStrategy::EdgeBalanced,
+        ] {
+            for combiner in [false, true] {
+                let mut opts = RunOptions::default().with_workers(3);
+                opts.partition = strat;
+                opts.combiner = combiner;
+                let parent_trace = pagerank_trace(&parent, 8, &opts);
+                let inc = incremental_pagerank(&parent_trace, &child, &batch, 8, &opts);
+                let scratch = engine_ranks(&child, 8, &opts);
+                assert_eq!(
+                    bits(inc.final_ranks()),
+                    bits(&scratch),
+                    "{strat:?} combiner={combiner}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_pagerank_falls_back_on_shape_mismatch() {
+        let parent = crate::graph::generate::random_for_tests(32, 120, 3);
+        let batch = DeltaBatch::new(source(), vec![(0, 31, 1.0)], vec![]).unwrap();
+        let (child, _) = batch.apply(&parent).unwrap();
+        let opts_a = RunOptions::default().with_workers(2);
+        let mut opts_b = RunOptions::default().with_workers(4);
+        opts_b.combiner = true;
+        // Trace computed under different options than the incremental run.
+        let stale = pagerank_trace(&parent, 6, &opts_a);
+        let inc = incremental_pagerank(&stale, &child, &batch, 6, &opts_b);
+        assert_eq!(
+            bits(inc.final_ranks()),
+            bits(&engine_ranks(&child, 6, &opts_b))
+        );
+    }
+
+    #[test]
+    fn cc_labels_match_engine_on_symmetrized() {
+        let g = crate::graph::generate::random_for_tests(40, 70, 11);
+        let sym = crate::operators::symmetrized(&g);
+        let run = pregel::run(&sym, &ConnectedComponents::new(), &RunOptions::default()).unwrap();
+        let want: Vec<i64> = run.props.iter().map(|&l| l as i64).collect();
+        assert_eq!(cc_labels(&g), want);
+    }
+
+    #[test]
+    fn incremental_cc_merges_components_on_adds() {
+        // Two components {0,1,2} and {3,4}; the add bridges them.
+        let parent = from_pairs(true, &[(0, 1), (1, 2), (3, 4)]);
+        let labels = cc_labels(&parent);
+        assert_eq!(labels, vec![0, 0, 0, 3, 3]);
+        let batch = DeltaBatch::new(source(), vec![(2, 3, 1.0)], vec![]).unwrap();
+        let (child, _) = batch.apply(&parent).unwrap();
+        assert_eq!(incremental_cc(&labels, &child, &batch), vec![0; 5]);
+        assert_eq!(incremental_cc(&labels, &child, &batch), cc_labels(&child));
+    }
+
+    #[test]
+    fn incremental_cc_falls_back_on_removals() {
+        // Removing the bridge splits the path back into two components.
+        let parent = from_pairs(true, &[(0, 1), (1, 2), (2, 3)]);
+        let labels = cc_labels(&parent);
+        assert_eq!(labels, vec![0; 4]);
+        let batch = DeltaBatch::new(source(), vec![], vec![(1, 2)]).unwrap();
+        let (child, _) = batch.apply(&parent).unwrap();
+        assert_eq!(incremental_cc(&labels, &child, &batch), vec![0, 0, 2, 2]);
+    }
+}

@@ -1,0 +1,502 @@
+//! Evolving graphs: epoch-tagged generations and delta ingestion.
+//!
+//! The serving layer treats every dataset as an immutable snapshot; this
+//! module adds the GraphX-style evolution story on top of that shape. A
+//! [`DeltaBatch`] is a validated, deduplicated list of edge additions and
+//! removals against one named dataset; applying it to a parent snapshot
+//! produces the next [`Generation`] — a fresh `Arc<Graph>` tagged with a
+//! monotone epoch and a pointer back to its parent, so old generations
+//! stay readable (and cacheable) for as long as anyone pins them. The
+//! snapshot cache keys derived variants per generation
+//! (`{canonical}@g{epoch}|{partition}`), the serve layer carries batches
+//! over the wire as the `INGEST` method (index 25), and the
+//! [`incremental`] operators reuse a parent generation's results instead
+//! of recomputing from scratch. `docs/evolving.md` is the written
+//! contract.
+//!
+//! # Wire/text format
+//!
+//! A batch is UTF-8 text: a header of `key = value` lines naming the
+//! dataset (exactly the lines
+//! [`DatasetRef::to_config_lines`] emits), followed by one edge operation
+//! per line. Blank lines and `#` comments are ignored:
+//!
+//! ```text
+//! # which dataset this batch applies to
+//! dataset = lj
+//! scale = 1024
+//! # operations: removes apply before adds
+//! - 17 4093
+//! + 12 907 1.5
+//! + 44 2048
+//! ```
+//!
+//! `- u v` removes **every** stored occurrence of edge `u -> v` (the
+//! generators emit multigraphs, so one logical removal may delete several
+//! parallel edges); it is an error if none exists. `+ u v [w]` adds one
+//! edge with weight `w` (default `1.0`); it is an error if `u -> v` still
+//! exists after the batch's removals. Endpoints must name existing
+//! vertices — generations never grow the vertex set.
+
+pub mod incremental;
+
+use crate::error::{Result, UniGpsError};
+use crate::graph::{Graph, Topology};
+use crate::ipc::protocol::{get_u64, put_u64};
+use crate::plan::DatasetRef;
+use crate::vcprog::VertexId;
+use std::sync::Arc;
+
+/// One epoch of an evolving dataset: the materialized snapshot plus a
+/// pointer to the generation it was derived from. Epoch 0 is the base
+/// load; epoch N+1 is produced by applying one [`DeltaBatch`] to epoch N.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    epoch: u64,
+    graph: Arc<Graph>,
+    parent: Option<Arc<Generation>>,
+}
+
+impl Generation {
+    /// The base generation (epoch 0) of a freshly loaded dataset.
+    pub fn base(graph: Arc<Graph>) -> Generation {
+        Generation {
+            epoch: 0,
+            graph,
+            parent: None,
+        }
+    }
+
+    /// The child generation: `parent`'s epoch + 1 wrapping `graph`.
+    pub fn child(parent: &Arc<Generation>, graph: Arc<Graph>) -> Generation {
+        Generation {
+            epoch: parent.epoch + 1,
+            graph,
+            parent: Some(Arc::clone(parent)),
+        }
+    }
+
+    /// This generation's epoch (0 for the base load).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The materialized snapshot of this generation.
+    pub fn graph(&self) -> &Arc<Graph> {
+        &self.graph
+    }
+
+    /// The generation this one was derived from (`None` for the base).
+    pub fn parent(&self) -> Option<&Arc<Generation>> {
+        self.parent.as_ref()
+    }
+}
+
+/// A validated edge add/remove batch against one dataset. Both lists are
+/// kept sorted by `(src, dst)` with no duplicate pairs; a pair may appear
+/// in both lists (remove-then-add re-weights an edge).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeltaBatch {
+    source: DatasetRef,
+    /// Edge additions `(src, dst, weight)`, sorted by `(src, dst)`.
+    adds: Vec<(VertexId, VertexId, f64)>,
+    /// Edge removals `(src, dst)`, sorted; each removes all occurrences.
+    removes: Vec<(VertexId, VertexId)>,
+}
+
+impl DeltaBatch {
+    /// Build a batch, sorting and validating the op lists: at least one
+    /// op, no duplicate `(src, dst)` pair within either list.
+    pub fn new(
+        source: DatasetRef,
+        mut adds: Vec<(VertexId, VertexId, f64)>,
+        mut removes: Vec<(VertexId, VertexId)>,
+    ) -> Result<DeltaBatch> {
+        if adds.is_empty() && removes.is_empty() {
+            return Err(UniGpsError::Config("delta batch has no operations".into()));
+        }
+        adds.sort_by_key(|&(u, v, _)| (u, v));
+        removes.sort_unstable();
+        for w in adds.windows(2) {
+            if (w[0].0, w[0].1) == (w[1].0, w[1].1) {
+                return Err(UniGpsError::Config(format!(
+                    "duplicate add {} -> {} in delta batch",
+                    w[0].0, w[0].1
+                )));
+            }
+        }
+        for w in removes.windows(2) {
+            if w[0] == w[1] {
+                return Err(UniGpsError::Config(format!(
+                    "duplicate remove {} -> {} in delta batch",
+                    w[0].0, w[0].1
+                )));
+            }
+        }
+        Ok(DeltaBatch {
+            source,
+            adds,
+            removes,
+        })
+    }
+
+    /// The dataset this batch applies to.
+    pub fn source(&self) -> &DatasetRef {
+        &self.source
+    }
+
+    /// Edge additions, sorted by `(src, dst)`.
+    pub fn adds(&self) -> &[(VertexId, VertexId, f64)] {
+        &self.adds
+    }
+
+    /// Edge removals, sorted by `(src, dst)`.
+    pub fn removes(&self) -> &[(VertexId, VertexId)] {
+        &self.removes
+    }
+
+    /// Parse the text/wire form (module doc): dataset header lines, then
+    /// one `+ u v [w]` / `- u v` op per line.
+    pub fn parse(text: &str) -> Result<DeltaBatch> {
+        let mut header = String::new();
+        let mut adds = Vec::new();
+        let mut removes = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let op = line.starts_with('+') || line.starts_with('-');
+            if !op {
+                header.push_str(line);
+                header.push('\n');
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let sigil = parts.next().unwrap_or("");
+            let bad = |what: &str| {
+                UniGpsError::Config(format!("delta batch line {}: {what}: {line:?}", lineno + 1))
+            };
+            let endpoint = |tok: Option<&str>, what: &str| -> Result<VertexId> {
+                tok.ok_or_else(|| bad(what))?
+                    .parse::<VertexId>()
+                    .map_err(|_| bad(what))
+            };
+            let u = endpoint(parts.next(), "bad src vertex")?;
+            let v = endpoint(parts.next(), "bad dst vertex")?;
+            match sigil {
+                "+" => {
+                    let w = match parts.next() {
+                        Some(tok) => tok.parse::<f64>().map_err(|_| bad("bad edge weight"))?,
+                        None => 1.0,
+                    };
+                    if parts.next().is_some() {
+                        return Err(bad("trailing tokens"));
+                    }
+                    adds.push((u, v, w));
+                }
+                "-" => {
+                    if parts.next().is_some() {
+                        return Err(bad("trailing tokens"));
+                    }
+                    removes.push((u, v));
+                }
+                _ => return Err(bad("op must start with '+' or '-'")),
+            }
+        }
+        let cfg = crate::config::Config::parse(&header)?;
+        let source = DatasetRef::from_config(&cfg)?.ok_or_else(|| {
+            UniGpsError::Config("delta batch names no dataset (header lines missing)".into())
+        })?;
+        DeltaBatch::new(source, adds, removes)
+    }
+
+    /// Render back to the text form [`DeltaBatch::parse`] accepts (removes
+    /// first, matching apply order; weights round-trip exactly via Rust's
+    /// shortest-representation float formatting).
+    pub fn to_text(&self) -> String {
+        let mut out = self.source.to_config_lines();
+        for &(u, v) in &self.removes {
+            out.push_str(&format!("- {u} {v}\n"));
+        }
+        for &(u, v, w) in &self.adds {
+            out.push_str(&format!("+ {u} {v} {w}\n"));
+        }
+        out
+    }
+
+    /// Apply this batch to a parent snapshot, producing the child graph
+    /// and the number of edge occurrences removed. Removes apply before
+    /// adds; a remove of an absent edge or an add of a still-present edge
+    /// is a typed `Config` error and leaves no side effects (the parent is
+    /// never mutated — on any error the caller keeps serving it).
+    ///
+    /// Only dirty CSR rows (sources named by the batch) are rebuilt; clean
+    /// rows are copied wholesale, so apply is one `O(|E| + |batch|)` pass.
+    pub fn apply(&self, parent: &Graph) -> Result<(Graph, u64)> {
+        // Chaos harness: a failed apply must leave the current generation
+        // untouched and the ingest books balanced.
+        if let Some(act) = crate::util::fault::point!("ingest-apply") {
+            act.apply("ingest-apply")?;
+        }
+        let topo = parent.topology();
+        let n = topo.num_vertices();
+        let in_range = |u: VertexId, v: VertexId| -> Result<()> {
+            if (u as usize) < n && (v as usize) < n {
+                Ok(())
+            } else {
+                Err(UniGpsError::Config(format!(
+                    "delta batch edge {u} -> {v} out of range (dataset has {n} vertices; \
+                     generations never grow the vertex set)"
+                )))
+            }
+        };
+        for &(u, v, _) in &self.adds {
+            in_range(u, v)?;
+        }
+        for &(u, v) in &self.removes {
+            in_range(u, v)?;
+        }
+
+        // Group ops by source row (both lists are sorted by (src, dst)).
+        let mut adds = self.adds.iter().copied().peekable();
+        let mut removes = self.removes.iter().copied().peekable();
+        let (old_offsets, old_targets) = topo.csr();
+        let old_props = parent.edge_props();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut targets: Vec<VertexId> = Vec::with_capacity(old_targets.len() + self.adds.len());
+        let mut props: Vec<f64> = Vec::with_capacity(old_props.len() + self.adds.len());
+        let mut removed_total = 0u64;
+        offsets.push(0usize);
+        for u in 0..n as VertexId {
+            let row = old_offsets[u as usize]..old_offsets[u as usize + 1];
+            let mut row_removes: Vec<VertexId> = Vec::new();
+            while let Some(&(ru, rv)) = removes.peek() {
+                if ru != u {
+                    break;
+                }
+                row_removes.push(rv);
+                removes.next();
+            }
+            if row_removes.is_empty() {
+                // Clean-row fast path: copy the parent row wholesale.
+                targets.extend_from_slice(&old_targets[row.clone()]);
+                props.extend_from_slice(&old_props[row.clone()]);
+            } else {
+                let mut hit = vec![false; row_removes.len()];
+                for eid in row {
+                    let dst = old_targets[eid];
+                    match row_removes.binary_search(&dst) {
+                        Ok(i) => {
+                            hit[i] = true;
+                            removed_total += 1;
+                        }
+                        Err(_) => {
+                            targets.push(dst);
+                            props.push(old_props[eid]);
+                        }
+                    }
+                }
+                if let Some(i) = hit.iter().position(|h| !h) {
+                    return Err(UniGpsError::Config(format!(
+                        "delta batch removes absent edge {u} -> {}",
+                        row_removes[i]
+                    )));
+                }
+            }
+            let kept = offsets.last().copied().unwrap_or(0)..targets.len();
+            while let Some(&(au, av, aw)) = adds.peek() {
+                if au != u {
+                    break;
+                }
+                // The kept prefix of the row is the post-removal state; the
+                // appended adds are strictly ascending by dst, so one
+                // membership scan over the kept range suffices.
+                if targets[kept.clone()].contains(&av) {
+                    return Err(UniGpsError::Config(format!(
+                        "delta batch adds existing edge {u} -> {av} (remove it first)"
+                    )));
+                }
+                targets.push(av);
+                props.push(aw);
+                adds.next();
+            }
+            offsets.push(targets.len());
+        }
+        let child = Topology::from_csr(n, offsets, targets, topo.directed());
+        Ok((
+            Graph::new(Arc::new(child), vec![(); n], props),
+            removed_total,
+        ))
+    }
+}
+
+/// The `INGEST` reply: the committed epoch and what the batch did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IngestReceipt {
+    /// Epoch of the newly committed generation (1 for the first ingest).
+    pub epoch: u64,
+    /// Edge occurrences added by the batch.
+    pub edges_added: u64,
+    /// Edge occurrences removed by the batch.
+    pub edges_removed: u64,
+}
+
+impl IngestReceipt {
+    /// Wire-encode (three little-endian `u64`s).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24);
+        put_u64(&mut out, self.epoch);
+        put_u64(&mut out, self.edges_added);
+        put_u64(&mut out, self.edges_removed);
+        out
+    }
+
+    /// Decode the wire form; trailing bytes are a protocol violation.
+    pub fn decode(buf: &[u8]) -> Result<IngestReceipt> {
+        let mut pos = 0usize;
+        let receipt = IngestReceipt {
+            epoch: get_u64(buf, &mut pos)?,
+            edges_added: get_u64(buf, &mut pos)?,
+            edges_removed: get_u64(buf, &mut pos)?,
+        };
+        if pos != buf.len() {
+            return Err(UniGpsError::ipc("trailing bytes after INGEST receipt"));
+        }
+        Ok(receipt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::from_pairs;
+
+    fn src() -> DatasetRef {
+        DatasetRef::Synthetic {
+            kind: "rmat".into(),
+            vertices: 8,
+            edges: 16,
+            seed: 7,
+        }
+    }
+
+    fn edges_of(g: &Graph) -> Vec<(u32, u32, f64)> {
+        let mut out = Vec::new();
+        for u in 0..g.num_vertices() as u32 {
+            for (eid, v) in g.topology().out_edges(u) {
+                out.push((u, v, *g.edge_prop(eid)));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn generations_chain_epochs() {
+        let g = Arc::new(from_pairs(true, &[(0, 1)]));
+        let base = Arc::new(Generation::base(Arc::clone(&g)));
+        assert_eq!(base.epoch(), 0);
+        assert!(base.parent().is_none());
+        let child = Generation::child(&base, g);
+        assert_eq!(child.epoch(), 1);
+        assert_eq!(child.parent().map(|p| p.epoch()), Some(0));
+    }
+
+    #[test]
+    fn batch_text_roundtrips() {
+        let b = DeltaBatch::new(src(), vec![(1, 2, 1.5), (0, 3, 1.0)], vec![(2, 0)]).unwrap();
+        let b2 = DeltaBatch::parse(&b.to_text()).unwrap();
+        assert_eq!(b, b2);
+        assert_eq!(b2.adds(), &[(0, 3, 1.0), (1, 2, 1.5)]);
+        assert_eq!(b2.removes(), &[(2, 0)]);
+    }
+
+    #[test]
+    fn parse_accepts_comments_and_default_weight() {
+        let b = DeltaBatch::parse(
+            "# batch\nkind = rmat\nvertices = 8\nedges = 16\nseed = 7\n\n+ 1 2\n- 3 4\n",
+        )
+        .unwrap();
+        assert_eq!(b.adds(), &[(1, 2, 1.0)]);
+        assert_eq!(b.removes(), &[(3, 4)]);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in [
+            "kind = rmat\n",                       // no ops
+            "+ 1 2\n",                             // no dataset header
+            "kind = rmat\n+ 1\n",                  // missing dst
+            "kind = rmat\n+ 1 2 x\n",              // bad weight
+            "kind = rmat\n- 1 2 3\n",              // trailing token on remove
+            "kind = rmat\n+ 1 2\n+ 1 2 2.0\n",     // duplicate add pair
+            "kind = rmat\n- 1 2\n- 1 2\n",         // duplicate remove pair
+            "kind = rmat\n* 1 2\n",                // malformed header line (no '=')
+        ] {
+            assert!(DeltaBatch::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn apply_adds_removes_and_counts() {
+        // 0->1, 0->2, 1->2, 1->2 (parallel), 2->0
+        let parent = from_pairs(true, &[(0, 1), (0, 2), (1, 2), (1, 2), (2, 0)]);
+        let b = DeltaBatch::new(src(), vec![(2, 1, 4.0)], vec![(1, 2)]).unwrap();
+        let (child, removed) = b.apply(&parent).unwrap();
+        assert_eq!(removed, 2, "remove deletes every parallel occurrence");
+        assert_eq!(
+            edges_of(&child),
+            vec![(0, 1, 1.0), (0, 2, 1.0), (2, 0, 1.0), (2, 1, 4.0)]
+        );
+        assert_eq!(child.num_vertices(), parent.num_vertices());
+        assert!(child.topology().directed());
+    }
+
+    #[test]
+    fn apply_preserves_clean_row_order_and_weights() {
+        let parent = from_pairs(true, &[(0, 2), (0, 1), (1, 0)]);
+        let b = DeltaBatch::new(src(), vec![(2, 0, 9.0)], vec![]).unwrap();
+        let (child, removed) = b.apply(&parent).unwrap();
+        assert_eq!(removed, 0);
+        // Row 0 keeps insertion order (2 before 1) — clean rows are copied
+        // verbatim, never re-sorted.
+        assert_eq!(
+            edges_of(&child),
+            vec![(0, 2, 1.0), (0, 1, 1.0), (1, 0, 1.0), (2, 0, 9.0)]
+        );
+    }
+
+    #[test]
+    fn apply_rejects_bad_batches() {
+        let parent = from_pairs(true, &[(0, 1), (1, 2)]);
+        for (adds, removes) in [
+            (vec![(0u32, 1u32, 1.0)], vec![]),    // add of existing edge
+            (vec![], vec![(2u32, 0u32)]),         // remove of absent edge
+            (vec![(0, 9, 1.0)], vec![]),          // dst out of range
+            (vec![], vec![(9, 0)]),               // src out of range
+        ] {
+            let b = DeltaBatch::new(src(), adds.clone(), removes.clone()).unwrap();
+            assert!(b.apply(&parent).is_err(), "{adds:?} {removes:?}");
+        }
+        // Remove-then-add of the same pair re-weights the edge.
+        let b = DeltaBatch::new(src(), vec![(0, 1, 7.0)], vec![(0, 1)]).unwrap();
+        let (child, removed) = b.apply(&parent).unwrap();
+        assert_eq!(removed, 1);
+        assert_eq!(edges_of(&child), vec![(0, 1, 7.0), (1, 2, 1.0)]);
+    }
+
+    #[test]
+    fn receipt_codec_roundtrips_and_rejects_trailing() {
+        let r = IngestReceipt {
+            epoch: 3,
+            edges_added: 10,
+            edges_removed: 2,
+        };
+        let buf = r.encode();
+        assert_eq!(IngestReceipt::decode(&buf).unwrap(), r);
+        let mut long = buf.clone();
+        long.push(0);
+        assert!(IngestReceipt::decode(&long).is_err());
+        assert!(IngestReceipt::decode(&buf[..20]).is_err());
+    }
+}

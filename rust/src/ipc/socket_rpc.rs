@@ -33,6 +33,7 @@
 //! | 22 | `WAIT` |
 //! | 23 | `CANCEL` |
 //! | 24 | `METRICS` |
+//! | 25 | `INGEST` |
 //! | 7 | `SHUTDOWN` |
 
 use crate::error::{Result, UniGpsError};

@@ -45,6 +45,11 @@
 //!   metrics registry (counters/gauges/latency histograms) exposed over the
 //!   `METRICS` wire method and `unigps metrics`, plus per-job tracing span
 //!   trees with a server-side slow-job log.
+//! * [`delta`] — evolving graphs: epoch-tagged dataset generations
+//!   (`Generation`), validated edge add/remove batches (`DeltaBatch`)
+//!   applied against a parent snapshot to produce generation N+1, the
+//!   `INGEST` wire surface, and incremental PageRank/CC operators that
+//!   reuse the parent generation's result (`delta::incremental`).
 //! * [`client`] — the one execution-client API over every transport:
 //!   the [`client::Client`] trait (submit / status / wait / result /
 //!   stats / shutdown) implemented in process by [`client::LocalClient`]
@@ -75,6 +80,7 @@
 
 pub mod client;
 pub mod config;
+pub mod delta;
 pub mod distributed;
 pub mod engine;
 pub mod error;

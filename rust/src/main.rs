@@ -12,6 +12,7 @@
 //!              [--tcp 0.0.0.0:7077 --token-file tok]
 //! unigps submit --socket /tmp/unigps.sock --algo sssp --dataset lj --scale 1024 [--wait]
 //! unigps submit --connect tcp://host:7077 --token-file tok --plan pipeline.plan [--wait]
+//! unigps ingest --connect uds:///tmp/unigps.sock --batch delta.txt
 //! unigps status --connect uds:///tmp/unigps.sock [--job N]
 //! unigps metrics --connect uds:///tmp/unigps.sock [--watch] [--interval SECS] [--prom]
 //! unigps shutdown --socket /tmp/unigps.sock
@@ -59,7 +60,7 @@ fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: unigps <run|generate|convert|info|engines|ipc-server|serve|submit|status|metrics|shutdown|version> [--flags]\n\
+        "usage: unigps <run|generate|convert|info|engines|ipc-server|serve|submit|ingest|status|metrics|shutdown|version> [--flags]\n\
          try: unigps run --algo pagerank --dataset lj --scale 1024 --engine pregel\n\
          or:  unigps serve --socket /tmp/unigps.sock    (then submit/status/shutdown)"
     );
@@ -81,6 +82,7 @@ fn main() -> ExitCode {
         "ipc-server" => cmd_ipc_server(&flags),
         "serve" => cmd_serve(&flags),
         "submit" => cmd_submit(&flags),
+        "ingest" => cmd_ingest(&flags),
         "status" => cmd_status(&flags),
         "metrics" => cmd_metrics(&flags),
         "shutdown" => cmd_shutdown(&flags),
@@ -403,6 +405,20 @@ fn cmd_submit(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
     Ok(())
 }
 
+/// Apply a delta batch file against a serving dataset's current
+/// generation (see `docs/evolving.md` for the batch text format).
+fn cmd_ingest(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let mut client = client_from_flags(flags)?;
+    let path = get(flags, "batch").ok_or("--batch <file> required")?;
+    let batch = std::fs::read_to_string(path)?;
+    let receipt = client.ingest(&batch)?;
+    println!(
+        "ingested: generation {} (+{} edges, -{} edges)",
+        receipt.epoch, receipt.edges_added, receipt.edges_removed
+    );
+    Ok(())
+}
+
 fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
     let mut client = client_from_flags(flags)?;
     if let Some(job) = get(flags, "job") {
@@ -425,7 +441,7 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
         );
         println!(
             "cache: {} loads, {} hits, {} misses | derived: {} loads, {} hits, {} misses \
-             | {} evictions, {} resident ({})",
+             | {} evictions, {} invalidated, {} resident ({})",
             s.cache.loads,
             s.cache.hits,
             s.cache.misses,
@@ -433,6 +449,7 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
             s.cache.derived_hits,
             s.cache.derived_misses,
             s.cache.evictions,
+            s.cache.invalidated,
             s.cache.resident,
             unigps::util::fmt_bytes(s.cache.resident_bytes),
         );

@@ -312,6 +312,17 @@ pub struct Registry {
     pub cache_load_us: Histogram,
     /// Derived-snapshot build latency (single-flight winner only).
     pub cache_derive_us: Histogram,
+    // Delta ingestion (evolving datasets, `docs/evolving.md`).
+    /// Delta batches applied (successful `INGEST`s).
+    pub ingest_batches: Counter,
+    /// Edge occurrences added across all applied batches.
+    pub ingest_edges_added: Counter,
+    /// Edge occurrences removed across all applied batches.
+    pub ingest_edges_removed: Counter,
+    /// Delta-apply latency: parent snapshot → child snapshot built.
+    pub ingest_apply_us: Histogram,
+    /// Epoch of the most recently committed generation (any dataset).
+    pub ingest_generation: Gauge,
     // Transports (server and client sides share the process registry).
     /// Accepted/initiated transport connections.
     pub transport_connects: Counter,
@@ -362,6 +373,11 @@ impl Registry {
             cache_resident_bytes: Gauge::new(),
             cache_load_us: Histogram::new(),
             cache_derive_us: Histogram::new(),
+            ingest_batches: Counter::new(),
+            ingest_edges_added: Counter::new(),
+            ingest_edges_removed: Counter::new(),
+            ingest_apply_us: Histogram::new(),
+            ingest_generation: Gauge::new(),
             transport_connects: Counter::new(),
             transport_auth_failures: Counter::new(),
             transport_bytes_read: Counter::new(),
@@ -458,6 +474,9 @@ fn counter_table() -> Vec<(&'static str, &'static Counter)> {
         ("unigps_jobs_failed_total", &r.jobs_failed),
         ("unigps_jobs_cancelled_total", &r.jobs_cancelled),
         ("unigps_cache_evictions_total", &r.cache_evictions),
+        ("unigps_ingest_batches_total", &r.ingest_batches),
+        ("unigps_ingest_edges_added_total", &r.ingest_edges_added),
+        ("unigps_ingest_edges_removed_total", &r.ingest_edges_removed),
         ("unigps_transport_connects_total", &r.transport_connects),
         ("unigps_transport_auth_failures_total", &r.transport_auth_failures),
         ("unigps_transport_bytes_read_total", &r.transport_bytes_read),
@@ -480,6 +499,7 @@ fn gauge_table() -> Vec<(&'static str, &'static Gauge)> {
         ("unigps_jobs_running", &r.jobs_running),
         ("unigps_cache_resident", &r.cache_resident),
         ("unigps_cache_resident_bytes", &r.cache_resident_bytes),
+        ("unigps_ingest_generation", &r.ingest_generation),
     ]
 }
 
@@ -491,6 +511,7 @@ fn hist_table() -> Vec<(&'static str, &'static Histogram)> {
         ("unigps_sched_run_time_us", &r.sched_run_time_us),
         ("unigps_cache_load_us", &r.cache_load_us),
         ("unigps_cache_derive_us", &r.cache_derive_us),
+        ("unigps_ingest_apply_us", &r.ingest_apply_us),
         ("unigps_step_compute_us", &r.step_compute_us),
         ("unigps_step_drain_us", &r.step_drain_us),
         ("unigps_step_gate_wait_us", &r.step_gate_wait_us),

@@ -5,7 +5,9 @@
 //! (`dataset`/`scale`, `kind`/`vertices`/`edges`/`seed`, or `graph`) and
 //! plan-level defaults (`engine`, `workers`, `partition`, ... — anything
 //! [`Session::overlay_config`](crate::session::Session::overlay_config)
-//! understands, plus `delay_ms` for the serving test/bench aid). Then, in
+//! understands, plus `delay_ms` for the serving test/bench aid and
+//! `generation` to pin an evolving dataset's epoch — `docs/evolving.md`).
+//! Then, in
 //! execution order:
 //!
 //! ```text
@@ -314,7 +316,7 @@ impl Plan {
         let known: Vec<&str> = SOURCE_KEYS
             .iter()
             .chain(OPTION_KEYS.iter())
-            .chain(std::iter::once(&"delay_ms"))
+            .chain(["delay_ms", "generation"].iter())
             .copied()
             .collect();
         reject_unknown_keys(&top, "top section", &known)?;

@@ -21,11 +21,59 @@
 //! (base and derived alike) are LRU-evicted once the resident total
 //! exceeds the byte budget (the most recent insert itself is never
 //! evicted, so a single over-budget graph still serves its jobs).
+//!
+//! # Generations
+//!
+//! The cache is also the **generation registry** for evolving datasets
+//! (`docs/evolving.md`): per canonical dataset it keeps the ordered chain
+//! of applied [`DeltaBatch`]es, and the current epoch is the chain
+//! length. Generation N's snapshot for a partition strategy lives under
+//! the key [`generation_key`] — epoch 0 keeps the legacy
+//! `{canonical}|{partition}` form, later epochs insert an `@g{epoch}`
+//! tag. [`SnapshotCache::ingest`] applies a batch against the current
+//! generation (single-flight per dataset, monotone epochs) and publishes
+//! the child; [`SnapshotCache::get_or_load_generation`] resolves any
+//! epoch ≤ current, replaying the batch chain from the base load on a
+//! miss. An ingest **invalidates** superseded generations logically —
+//! resident entries of older epochs (base and derived alike) are counted
+//! in [`CacheStats::invalidated`] and stop being the `latest` answer, but
+//! stay readable for epoch-pinned plans until the LRU evicts them.
 
-use crate::error::Result;
+use crate::delta::{DeltaBatch, IngestReceipt};
+use crate::error::{Result, UniGpsError};
 use crate::graph::Graph;
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
+
+/// Cap on the batch chain per dataset: past this, ingests are refused
+/// with a typed `Backpressure` error (re-snapshot the dataset instead of
+/// replaying unbounded history).
+pub const MAX_GENERATIONS: u64 = 64;
+
+/// Cache key for one generation of a dataset under one partition
+/// strategy. Epoch 0 is the legacy base key, so pre-generation cache
+/// contents and tests keep their meaning.
+pub fn generation_key(canonical: &str, partition: &str, epoch: u64) -> String {
+    if epoch == 0 {
+        format!("{canonical}|{partition}")
+    } else {
+        format!("{canonical}@g{epoch}|{partition}")
+    }
+}
+
+/// Parse a cache key back into `(canonical, epoch)` — the inverse of
+/// [`generation_key`] over the head segment (derived chains append
+/// `|sym`-style tags after the partition, which this ignores).
+fn key_generation(key: &str) -> (&str, u64) {
+    let head = key.split('|').next().unwrap_or(key);
+    match head.rsplit_once("@g") {
+        Some((canonical, epoch)) => match epoch.parse::<u64>() {
+            Ok(e) => (canonical, e),
+            Err(_) => (head, 0),
+        },
+        None => (head, 0),
+    }
+}
 
 /// Cache observability counters, split dataset-level vs derived-level.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -45,6 +93,9 @@ pub struct CacheStats {
     pub derived_misses: u64,
     /// Snapshots evicted under budget pressure (either level).
     pub evictions: u64,
+    /// Resident snapshots superseded by an ingested generation (counted
+    /// at commit; the entries stay readable until evicted).
+    pub invalidated: u64,
     /// Snapshots currently resident (either level).
     pub resident: u64,
     /// Bytes currently resident (either level).
@@ -99,6 +150,10 @@ struct Inner {
     dataset: Counters,
     derived: Counters,
     evictions: u64,
+    invalidated: u64,
+    /// Per-canonical-dataset chains of applied delta batches; the current
+    /// epoch of a dataset is its chain length.
+    generations: HashMap<String, Vec<Arc<DeltaBatch>>>,
 }
 
 /// The shared snapshot cache (all methods take `&self`; safe to share via
@@ -107,6 +162,10 @@ pub struct SnapshotCache {
     budget: usize,
     inner: Mutex<Inner>,
     ready: Condvar,
+    /// Per-canonical-dataset ingest gates: concurrent ingests to one
+    /// dataset serialize here (single-flight), so epochs are monotone and
+    /// each batch applies against a settled parent.
+    gates: Mutex<HashMap<String, Arc<Mutex<()>>>>,
 }
 
 impl SnapshotCache {
@@ -121,8 +180,11 @@ impl SnapshotCache {
                 dataset: Counters::default(),
                 derived: Counters::default(),
                 evictions: 0,
+                invalidated: 0,
+                generations: HashMap::new(),
             }),
             ready: Condvar::new(),
+            gates: Mutex::new(HashMap::new()),
         }
     }
 
@@ -147,9 +209,138 @@ impl SnapshotCache {
             derived_hits: inner.derived.hits,
             derived_misses: inner.derived.misses,
             evictions: inner.evictions,
+            invalidated: inner.invalidated,
             resident,
             resident_bytes: inner.total_bytes as u64,
         }
+    }
+
+    /// Current generation epoch of a canonical dataset (0 before any
+    /// ingest).
+    pub fn generation(&self, canonical: &str) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .generations
+            .get(canonical)
+            .map(|chain| chain.len() as u64)
+            .unwrap_or(0)
+    }
+
+    /// Resolve the snapshot of one generation of a dataset, loading on a
+    /// miss: epoch 0 via `load_base`, epoch N by resolving N−1 (itself
+    /// cached) and applying the registered batch — so a cold key replays
+    /// only the missing suffix of the chain. Epochs above the current one
+    /// are a typed `Config` error.
+    pub fn get_or_load_generation(
+        &self,
+        canonical: &str,
+        partition: &str,
+        epoch: u64,
+        load_base: &(dyn Fn() -> Result<Graph> + '_),
+    ) -> Result<Arc<Graph>> {
+        if epoch == 0 {
+            return self.fetch(&generation_key(canonical, partition, 0), KeyLevel::Dataset, || {
+                load_base()
+            });
+        }
+        let batch = {
+            let inner = self.inner.lock().unwrap();
+            let current = inner
+                .generations
+                .get(canonical)
+                .map(|chain| chain.len() as u64)
+                .unwrap_or(0);
+            if epoch > current {
+                return Err(UniGpsError::Config(format!(
+                    "dataset {canonical} has no generation {epoch} (current is {current})"
+                )));
+            }
+            match inner.generations.get(canonical) {
+                Some(chain) => chain[(epoch - 1) as usize].clone(),
+                // Unreachable: epoch >= 1 passed the bound check above.
+                None => {
+                    return Err(UniGpsError::Config(format!(
+                        "dataset {canonical} has no generation chain"
+                    )))
+                }
+            }
+        };
+        let key = generation_key(canonical, partition, epoch);
+        self.fetch(&key, KeyLevel::Dataset, || {
+            let parent = self.get_or_load_generation(canonical, partition, epoch - 1, load_base)?;
+            let (child, _removed) = batch.apply(&parent)?;
+            Ok(child)
+        })
+    }
+
+    /// Apply a delta batch against the current generation of its dataset
+    /// and publish the child as generation current+1. Single-flight per
+    /// dataset: concurrent ingests serialize on the dataset's gate, so
+    /// epochs advance monotonically one batch at a time. A failed apply
+    /// (validation error or the `ingest-apply` failpoint) leaves the
+    /// current generation and the registry untouched. On success the new
+    /// epoch is committed *after* the child snapshot is resident, and
+    /// every resident entry of a superseded epoch is counted as
+    /// invalidated (the entries stay readable for pinned plans until the
+    /// LRU evicts them).
+    pub fn ingest(
+        &self,
+        batch: Arc<DeltaBatch>,
+        partition: &str,
+        load_base: &(dyn Fn() -> Result<Graph> + '_),
+    ) -> Result<IngestReceipt> {
+        let canonical = batch.source().canonical();
+        let gate = {
+            let mut gates = self.gates.lock().unwrap();
+            gates.entry(canonical.clone()).or_default().clone()
+        };
+        let _serialized = gate.lock().unwrap();
+        let parent_epoch = self.generation(&canonical);
+        if parent_epoch >= MAX_GENERATIONS {
+            return Err(UniGpsError::backpressure(format!(
+                "dataset {canonical} reached the generation cap ({MAX_GENERATIONS}); \
+                 re-snapshot instead of replaying more history"
+            )));
+        }
+        let parent = self.get_or_load_generation(&canonical, partition, parent_epoch, load_base)?;
+        let apply_timer = crate::util::timer::Timer::start();
+        let (child, removed) = batch.apply(&parent)?;
+        let apply_us = apply_timer.elapsed().as_micros() as u64;
+        let added = batch.adds().len() as u64;
+        let child_epoch = parent_epoch + 1;
+        let key = generation_key(&canonical, partition, child_epoch);
+        self.fetch(&key, KeyLevel::Dataset, || Ok(child))?;
+        // Commit: the new epoch becomes visible only after its snapshot is
+        // resident, so `latest` never resolves to a missing generation.
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .generations
+            .entry(canonical.clone())
+            .or_default()
+            .push(batch);
+        let superseded = inner
+            .slots
+            .iter()
+            .filter(|(k, s)| {
+                let (c, e) = key_generation(k);
+                matches!(s, Slot::Ready { .. }) && c == canonical && e < child_epoch
+            })
+            .count() as u64;
+        inner.invalidated += superseded;
+        let obs = crate::obs::metrics::registry();
+        obs.ingest_generation.set(child_epoch);
+        drop(inner);
+        obs.ingest_batches.inc();
+        obs.ingest_edges_added.add(added);
+        obs.ingest_edges_removed.add(removed);
+        if apply_us > 0 {
+            obs.ingest_apply_us.observe_us(apply_us);
+        }
+        Ok(IngestReceipt {
+            epoch: child_epoch,
+            edges_added: added,
+            edges_removed: removed,
+        })
     }
 
     /// Fetch the base snapshot for a dataset-level `key`, loading it with
@@ -500,6 +691,157 @@ mod tests {
         cache.get_or_load("k", || Ok(small_graph(1))).unwrap();
         let s = cache.stats();
         assert_eq!((s.loads, s.misses, s.resident), (1, 2, 1));
+    }
+
+    fn delta_source() -> crate::plan::DatasetRef {
+        crate::plan::DatasetRef::Synthetic {
+            kind: "er".into(),
+            vertices: 64,
+            edges: 256,
+            seed: 1,
+        }
+    }
+
+    /// `count` edge pairs absent from `g` (and distinct from each other).
+    fn absent_pairs(g: &Graph, count: usize) -> Vec<(u32, u32)> {
+        let topo = g.topology();
+        let n = topo.num_vertices() as u32;
+        let mut out = Vec::new();
+        'scan: for u in 0..n {
+            for v in 0..n {
+                if u != v && topo.out_edges(u).all(|(_, t)| t != v) {
+                    out.push((u, v));
+                    if out.len() == count {
+                        break 'scan;
+                    }
+                }
+            }
+        }
+        assert_eq!(out.len(), count, "graph too dense for test fixture");
+        out
+    }
+
+    fn edge_count(g: &Graph) -> usize {
+        g.topology().csr().1.len()
+    }
+
+    #[test]
+    fn ingest_advances_epoch_and_counts_invalidated() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let src = delta_source();
+        let canonical = src.canonical();
+        let load = || Ok(small_graph(1));
+        let base = cache
+            .get_or_load_generation(&canonical, "hash", 0, &load)
+            .unwrap();
+        let derived_key = format!("{}|sym", generation_key(&canonical, "hash", 0));
+        cache
+            .get_or_derive(&derived_key, || Ok(crate::operators::symmetrized(&base)))
+            .unwrap();
+        let add = absent_pairs(&base, 1)[0];
+        let batch = Arc::new(
+            DeltaBatch::new(src, vec![(add.0, add.1, 1.0)], vec![]).unwrap(),
+        );
+        let receipt = cache.ingest(batch, "hash", &load).unwrap();
+        assert_eq!(receipt.epoch, 1);
+        assert_eq!(receipt.edges_added, 1);
+        assert_eq!(receipt.edges_removed, 0);
+        assert_eq!(cache.generation(&canonical), 1);
+        // Superseded resident entries (base + derived) count as invalidated…
+        assert_eq!(cache.stats().invalidated, 2);
+        // …but stay readable until evicted: epoch-0 base and its derived
+        // variant both answer without reloading.
+        cache
+            .get_or_load_generation(&canonical, "hash", 0, &|| panic!("gen 0 must be resident"))
+            .unwrap();
+        cache
+            .get_or_derive(&derived_key, || panic!("derived must survive ingest"))
+            .unwrap();
+        // The new generation is resident from the ingest itself.
+        let child = cache
+            .get_or_load_generation(&canonical, "hash", 1, &|| panic!("gen 1 must be resident"))
+            .unwrap();
+        assert_eq!(edge_count(&child), edge_count(&base) + 1);
+        // Pinning past the current epoch is a typed config error.
+        let err = cache
+            .get_or_load_generation(&canonical, "hash", 2, &load)
+            .unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)));
+    }
+
+    #[test]
+    fn generation_replays_chain_on_miss() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let src = delta_source();
+        let canonical = src.canonical();
+        let load = || Ok(small_graph(1));
+        let base = cache
+            .get_or_load_generation(&canonical, "hash", 0, &load)
+            .unwrap();
+        let add = absent_pairs(&base, 1)[0];
+        let batch = Arc::new(
+            DeltaBatch::new(src, vec![(add.0, add.1, 1.0)], vec![]).unwrap(),
+        );
+        cache.ingest(batch, "hash", &load).unwrap();
+        // A different partition strategy never saw generation 1: resolving
+        // it replays base-load + batch under the new keys.
+        let replayed = cache
+            .get_or_load_generation(&canonical, "range", 1, &load)
+            .unwrap();
+        assert_eq!(edge_count(&replayed), edge_count(&base) + 1);
+    }
+
+    #[test]
+    fn concurrent_ingests_serialize_with_monotone_epochs() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let src = delta_source();
+        let canonical = src.canonical();
+        let load = || Ok(small_graph(1));
+        let base = cache
+            .get_or_load_generation(&canonical, "hash", 0, &load)
+            .unwrap();
+        let pairs = absent_pairs(&base, 2);
+        let epochs: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let (cache_ref, epochs_ref) = (&cache, &epochs);
+        std::thread::scope(|s| {
+            for &(u, v) in &pairs {
+                let batch = Arc::new(
+                    DeltaBatch::new(delta_source(), vec![(u, v, 1.0)], vec![]).unwrap(),
+                );
+                s.spawn(move || {
+                    let r = cache_ref
+                        .ingest(batch, "hash", &|| Ok(small_graph(1)))
+                        .unwrap();
+                    epochs_ref.lock().unwrap().push(r.epoch);
+                });
+            }
+        });
+        let mut got = epochs.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2], "single-flight, monotone epochs");
+        assert_eq!(cache.generation(&canonical), 2);
+        let latest = cache
+            .get_or_load_generation(&canonical, "hash", 2, &load)
+            .unwrap();
+        assert_eq!(edge_count(&latest), edge_count(&base) + 2);
+    }
+
+    #[test]
+    fn failed_ingest_leaves_generation_untouched() {
+        let cache = SnapshotCache::new(usize::MAX);
+        let src = delta_source();
+        let canonical = src.canonical();
+        let load = || Ok(small_graph(1));
+        // A remove of an absent edge fails validation inside apply.
+        let base = cache
+            .get_or_load_generation(&canonical, "hash", 0, &load)
+            .unwrap();
+        let missing = absent_pairs(&base, 1)[0];
+        let bad = Arc::new(DeltaBatch::new(src, vec![], vec![missing]).unwrap());
+        let err = cache.ingest(bad, "hash", &load).unwrap_err();
+        assert!(matches!(err, UniGpsError::Config(_)));
+        assert_eq!(cache.generation(&canonical), 0);
+        assert_eq!(cache.stats().invalidated, 0);
     }
 
     #[test]

@@ -304,6 +304,16 @@ impl<T: Transport> Client for RemoteClient<T> {
         JobStatus::decode(&self.call_idempotent(method::CANCEL, &req)?)
     }
 
+    /// Apply a delta batch over one `INGEST` frame. Deliberately plain
+    /// [`RemoteClient::call`], never `call_idempotent`: ingestion
+    /// advances the dataset's generation, so a blind resend after a
+    /// transport failure could apply the batch twice (the second apply
+    /// fails its add-present/remove-absent validation, but the caller
+    /// should see the transport error, not a misleading Config one).
+    fn ingest(&mut self, batch: &str) -> Result<crate::delta::IngestReceipt> {
+        crate::delta::IngestReceipt::decode(&self.call(method::INGEST, batch.as_bytes())?)
+    }
+
     fn stats(&mut self) -> Result<ServeStats> {
         ServeStats::decode(&self.call_idempotent(method::STATS, &[])?)
     }

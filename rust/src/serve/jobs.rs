@@ -25,6 +25,7 @@
 //! | `graph` | load from a file path (format by extension) | — |
 //! | `delay_ms` | synthetic service time before execution (test/bench aid, ≤ 60 s) | 0 |
 //! | `deadline_ms` | cancel the job if not terminal this long after admission (0 = none, ≤ 1 h) | 0 |
+//! | `generation` | dataset generation to run on: `latest` or a fixed epoch number (`docs/evolving.md`) | `latest` |
 //!
 //! Exactly one graph source (`dataset`, `graph`, or synthetic) must be
 //! given — in the flat keys or the plan's top section. Plans can also be
@@ -101,6 +102,9 @@ impl JobSpec {
         if let Some(d) = cfg.get("deadline_ms") {
             plan.defaults.set("deadline_ms", d);
         }
+        if let Some(g) = cfg.get("generation") {
+            plan.defaults.set("generation", g);
+        }
         JobSpec::from_plan_with_session(plan, base.overlay_config(&cfg)?)
     }
 
@@ -133,6 +137,16 @@ impl JobSpec {
             return Err(UniGpsError::Config(format!(
                 "deadline_ms must be <= {MAX_DEADLINE_MS}, got {deadline_ms}"
             )));
+        }
+        // Generation pin: `latest` (the default) or a fixed epoch number.
+        // Whether the epoch exists is checked at run start — an admitted
+        // pin can reference an epoch ingested between submit and run.
+        if let Some(g) = plan.defaults.get("generation") {
+            if g != "latest" && g.trim().parse::<u64>().is_err() {
+                return Err(UniGpsError::Config(format!(
+                    "generation must be `latest` or an epoch number, got `{g}`"
+                )));
+            }
         }
         Ok(JobSpec {
             session,
@@ -458,6 +472,7 @@ kind = rmat\nvertices = 128\nedges = 512\nseed = 1\ndelay_ms = 5\n\n\
             "vertices = 64\ndeadline_ms = 86400000", // over-cap deadline
             "[stage]\nalgo = cc",                  // plan without a source
             "dataset = lj\n[stage]\nalgo = cc\nengine = warp", // bad stage override
+            "dataset = lj\ngeneration = newest",   // bad generation pin
         ] {
             let err = JobSpec::parse(bad, &base()).unwrap_err();
             assert!(matches!(err, UniGpsError::Config(_)), "{bad:?} -> {err:?}");
@@ -551,6 +566,24 @@ kind = rmat\nvertices = 128\nedges = 512\nseed = 1\ndelay_ms = 5\n\n\
         assert!(JobState::Cancelled.is_terminal());
         assert_eq!(JobState::Running.to_string(), "running");
         assert_eq!(JobState::Cancelled.to_string(), "cancelled");
+    }
+
+    #[test]
+    fn generation_pin_travels_in_plan_defaults() {
+        let spec = JobSpec::parse(
+            "vertices = 64\nedges = 128\nseed = 1\ngeneration = 2",
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(spec.plan.defaults.get("generation"), Some("2"));
+        let spec = JobSpec::parse(
+            "vertices = 64\nedges = 128\nseed = 1\ngeneration = latest",
+            &base(),
+        )
+        .unwrap();
+        assert_eq!(spec.plan.defaults.get("generation"), Some("latest"));
+        let spec = JobSpec::parse("vertices = 64\nedges = 128\nseed = 1", &base()).unwrap();
+        assert_eq!(spec.plan.defaults.get("generation"), None, "latest by default");
     }
 
     #[test]

@@ -134,6 +134,11 @@ pub mod method {
     /// ([`crate::obs::metrics::snapshot`]), encoded with
     /// [`crate::obs::metrics::MetricsSnapshot::encode`]. Empty payload.
     pub const METRICS: u32 = 24;
+    /// Apply a delta batch ([`crate::delta::DeltaBatch`] text form)
+    /// against the current generation of its dataset, producing
+    /// generation N+1 (`docs/evolving.md`); response is an encoded
+    /// [`crate::delta::IngestReceipt`] (new epoch + edge counts).
+    pub const INGEST: u32 = 25;
     /// Orderly server shutdown (drains queued and running jobs first).
     pub use crate::ipc::protocol::method::SHUTDOWN;
 }
@@ -254,6 +259,7 @@ mod tests {
             method::WAIT,
             method::CANCEL,
             method::METRICS,
+            method::INGEST,
         ] {
             for v in [
                 vc::INIT_PROGRAM,

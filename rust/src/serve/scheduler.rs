@@ -31,11 +31,12 @@
 //! [`SnapshotCache::get_or_load`]: crate::serve::cache::SnapshotCache::get_or_load
 //! [`SnapshotCache::get_or_derive`]: crate::serve::cache::SnapshotCache::get_or_derive
 
+use crate::delta::{DeltaBatch, IngestReceipt};
 use crate::engine::RunResult;
 use crate::error::{Result, UniGpsError};
 use crate::graph::Graph;
 use crate::plan::exec::{execute, GraphHandle, SnapshotStore};
-use crate::serve::cache::SnapshotCache;
+use crate::serve::cache::{generation_key, SnapshotCache};
 use crate::serve::jobs::{JobId, JobSpec, JobState, JobStatus};
 use crate::serve::ServeConfig;
 use crate::session::Session;
@@ -261,6 +262,34 @@ impl Scheduler {
             self.shared.watch.notify_one();
         }
         Ok(id)
+    }
+
+    /// Apply a delta batch (text form, [`DeltaBatch::parse`]) against the
+    /// current generation of its dataset, producing generation N+1 — the
+    /// `INGEST` wire method and `LocalClient::ingest` land here. The
+    /// cache serializes ingests per dataset and keeps superseded
+    /// generations readable for epoch-pinned plans (`generation = N`);
+    /// jobs without a pin resolve `latest` at run start. Typed failures
+    /// mirror submit: [`UniGpsError::Config`] for malformed or
+    /// inapplicable batches, [`UniGpsError::Backpressure`] at the
+    /// generation cap, [`UniGpsError::Serve`] when shutting down.
+    ///
+    /// [`UniGpsError::Config`]: crate::error::UniGpsError::Config
+    /// [`UniGpsError::Backpressure`]: crate::error::UniGpsError::Backpressure
+    /// [`UniGpsError::Serve`]: crate::error::UniGpsError::Serve
+    pub fn ingest(&self, batch_text: &str) -> Result<IngestReceipt> {
+        if self.shared.inner.lock().unwrap().shutdown {
+            return Err(UniGpsError::serve("scheduler is shutting down"));
+        }
+        let batch = DeltaBatch::parse(batch_text)?;
+        let source = batch.source().clone();
+        // Generations are keyed under the server session's partition
+        // strategy — the same one submitted jobs resolve their base
+        // snapshots with.
+        let partition = self.shared.base.options().partition.name();
+        self.shared
+            .cache
+            .ingest(Arc::new(batch), partition, &|| source.load(&self.shared.base))
     }
 
     /// Cooperatively cancel a job. A `Queued` job goes terminal
@@ -714,19 +743,29 @@ fn run_job(shared: &Shared, spec: &JobSpec, cancel: &CancelToken) -> Result<RunR
         act.apply("sched-run")?;
     }
     let source = spec.dataset();
+    let canonical = source.canonical();
     // The base key carries the job's partition strategy (resolved from
     // the plan defaults) so future partition-resident layouts can slot in
     // without a key change; the snapshot bytes themselves are
     // partition-independent.
-    let base_key = format!(
-        "{}|{}",
-        source.canonical(),
-        spec.session.options().partition.name()
-    );
+    let partition = spec.session.options().partition.name();
+    // `generation = latest` (the default) resolves to the dataset's
+    // current epoch at run start; a numeric pin answers from that epoch's
+    // snapshot even after later ingests (readable until evicted).
+    let epoch = match spec.plan.defaults.get("generation") {
+        None => shared.cache.generation(&canonical),
+        Some("latest") => shared.cache.generation(&canonical),
+        Some(pin) => pin.trim().parse::<u64>().map_err(|_| {
+            UniGpsError::Config(format!(
+                "generation must be `latest` or an epoch number, got `{pin}`"
+            ))
+        })?,
+    };
+    let base_key = generation_key(&canonical, partition, epoch);
     let base = crate::obs::trace::span(&format!("load snapshot {base_key}"), || {
         shared
             .cache
-            .get_or_load(&base_key, || source.load(&shared.base))
+            .get_or_load_generation(&canonical, partition, epoch, &|| source.load(&shared.base))
     })?;
     let mut store = CachedStore {
         cache: &shared.cache,

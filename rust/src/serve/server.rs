@@ -82,7 +82,10 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    /// Encode for the wire.
+    /// Encode for the wire. The invalidation counter travels as a
+    /// trailing field after the historical 16 words, so pre-generation
+    /// decoders (which stop at 16) still parse new frames and new
+    /// decoders accept old 16-word frames (`invalidated` reads as 0).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         for v in [
@@ -102,6 +105,7 @@ impl ServeStats {
             self.jobs.cancelled,
             self.jobs.queued as u64,
             self.jobs.running as u64,
+            self.cache.invalidated,
         ] {
             put_u64(&mut out, v);
         }
@@ -112,7 +116,7 @@ impl ServeStats {
     pub fn decode(buf: &[u8]) -> Result<ServeStats> {
         let mut pos = 0;
         let mut take = || get_u64(buf, &mut pos);
-        Ok(ServeStats {
+        let mut stats = ServeStats {
             cache: CacheStats {
                 loads: take()?,
                 hits: take()?,
@@ -121,6 +125,7 @@ impl ServeStats {
                 derived_hits: take()?,
                 derived_misses: take()?,
                 evictions: take()?,
+                invalidated: 0,
                 resident: take()?,
                 resident_bytes: take()?,
             },
@@ -133,7 +138,13 @@ impl ServeStats {
                 queued: take()? as usize,
                 running: take()? as usize,
             },
-        })
+        };
+        // Trailing optional: absent on frames from servers that predate
+        // generation tracking.
+        if pos < buf.len() {
+            stats.cache.invalidated = get_u64(buf, &mut pos)?;
+        }
+        Ok(stats)
     }
 }
 
@@ -466,6 +477,11 @@ impl Server {
                 let id = get_u64(payload, &mut pos)?;
                 Ok(self.sched.cancel(id, "client cancel")?.encode())
             }
+            method::INGEST => {
+                let text = std::str::from_utf8(payload)
+                    .map_err(|_| UniGpsError::ipc("ingest payload is not UTF-8"))?;
+                Ok(self.sched.ingest(text)?.encode())
+            }
             method::STATS => Ok(self.stats().encode()),
             method::METRICS => Ok(crate::obs::metrics::snapshot().encode()),
             method::SHUTDOWN => Ok(Vec::new()),
@@ -510,6 +526,7 @@ mod tests {
                 derived_hits: 9,
                 derived_misses: 2,
                 evictions: 0,
+                invalidated: 5,
                 resident: 3,
                 resident_bytes: 123_456,
             },
@@ -525,6 +542,12 @@ mod tests {
         };
         assert_eq!(ServeStats::decode(&s.encode()).unwrap(), s);
         assert!(ServeStats::decode(&[0u8; 11]).is_err());
+        // Back-compat: a 16-word frame from a pre-generation server
+        // decodes with `invalidated` defaulting to 0.
+        let full = s.encode();
+        let decoded = ServeStats::decode(&full[..16 * 8]).unwrap();
+        assert_eq!(decoded.cache.invalidated, 0);
+        assert_eq!(decoded.jobs, s.jobs);
     }
 
     #[test]

@@ -15,6 +15,11 @@
 //!   baseline thread count — no leaked handler, runner or watchdog
 //!   threads.
 //!
+//! A separate leg fires the `ingest-apply` failpoint under delta
+//! ingestion: failed applies leave the dataset's generation chain and
+//! the cache's invalidation books untouched, retrying the same batch
+//! succeeds, and committed epochs stay dense and monotone.
+//!
 //! CI runs this binary as a blocking leg with `UNIGPS_FAULTS` exported
 //! at a fixed seed; locally the same pinned spec is activated
 //! programmatically, so the run replays identically either way. The
@@ -25,8 +30,10 @@ use std::path::PathBuf;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 use unigps::client::Client;
+use unigps::delta::DeltaBatch;
 use unigps::error::UniGpsError;
 use unigps::ipc::shm::ShmMap;
+use unigps::plan::DatasetRef;
 use unigps::serve::{JobId, RemoteClient, ServeClient, ServeConfig, Server};
 use unigps::session::Session;
 use unigps::util::fault;
@@ -281,14 +288,15 @@ fn every_job_ends_terminal_and_the_server_drains_under_faults() {
 
     // Invariant 4: no leaked threads. Handler threads exit with their
     // connections, runners and the watchdog are joined by the drain;
-    // give detached teardown a moment to settle. The +1 slack covers the
-    // sibling test's harness thread (parked on CHAOS_LOCK) — a real leak
-    // is a dozen handler/runner threads, not one.
+    // give detached teardown a moment to settle. The +2 slack covers the
+    // two sibling tests' harness threads (parked on CHAOS_LOCK until
+    // this test returns) — a real leak is a dozen handler/runner
+    // threads, not two.
     if let Some(baseline) = baseline_threads {
         let deadline = Instant::now() + Duration::from_secs(10);
         loop {
             let now = thread_count().expect("thread count stays readable");
-            if now <= baseline + 1 {
+            if now <= baseline + 2 {
                 break;
             }
             assert!(
@@ -323,6 +331,154 @@ fn the_same_burst_is_clean_with_failpoints_disarmed() {
     let stats = client.stats().expect("stats");
     assert_eq!(stats.jobs.failed, 0, "{:?}", stats.jobs);
     assert_eq!(stats.jobs.completed, 8);
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join();
+}
+
+/// The dataset spec evolving under fire in the ingest leg (and the
+/// seeded graph it resolves to, for computing applicable batches).
+const INGEST_SPEC: &str = "kind = rmat\nvertices = 256\nedges = 1024\nseed = 11\nworkers = 2";
+
+fn ingest_source() -> DatasetRef {
+    DatasetRef::Synthetic {
+        kind: "rmat".into(),
+        vertices: 256,
+        edges: 1024,
+        seed: 11,
+    }
+}
+
+/// `count` edge pairs absent from `g` (and distinct from each other), so
+/// every batch built from them is guaranteed applicable at any epoch of
+/// this run (each pair is added at most once).
+fn absent_pairs(g: &unigps::graph::Graph, count: usize) -> Vec<(u32, u32)> {
+    let topo = g.topology();
+    let n = topo.num_vertices() as u32;
+    let mut out = Vec::new();
+    'scan: for u in 0..n {
+        for v in 0..n {
+            if u != v && topo.out_edges(u).all(|(_, t)| t != v) {
+                out.push((u, v));
+                if out.len() == count {
+                    break 'scan;
+                }
+            }
+        }
+    }
+    assert_eq!(out.len(), count, "graph too dense for the fixture");
+    out
+}
+
+/// Ingest under fire: with `ingest-apply` armed at 50 %, single-edge
+/// delta batches are driven through [`Client::ingest`], retrying each
+/// until it lands. A failed apply surfaces the typed injected error and
+/// leaves the generation chain untouched — so the retry applies against
+/// the same parent and committed epochs come out dense and monotone
+/// (1, 2, 3, …) with the invalidation books balancing exactly: every
+/// commit supersedes precisely the resident older epochs, failures
+/// supersede nothing.
+#[test]
+fn failed_ingests_leave_the_generation_untouched_and_books_balanced() {
+    let _g = locked();
+    fault::clear();
+    let server = start_server();
+
+    // Baseline job over a clean transport: generation 0 becomes resident
+    // and the books start from a known state.
+    let mut client = server.client();
+    let id = client
+        .submit(&format!("{INGEST_SPEC}\nalgo = sssp"))
+        .expect("baseline submit");
+    client.wait(id, Duration::from_secs(120)).expect("baseline job");
+
+    // Arm ONLY the apply failpoint: the transport stays reliable, so
+    // every error below is the apply dying mid-ingest, not chaos noise.
+    fault::activate("seed=7;ingest-apply=error@0.5").expect("chaos spec parses");
+
+    let parent = Session::builder().build().generate("rmat", 256, 1024, 11);
+    // The last pair is reserved for the post-chaos ingest below; the
+    // loop never touches it, so that batch is applicable at any epoch.
+    let pairs = absent_pairs(&parent, 41);
+    let mut committed: u64 = 0;
+    let mut failures: u64 = 0;
+    for &(u, v) in &pairs[..40] {
+        // Enough evidence once both outcomes have been exercised.
+        if committed >= 8 && failures >= 1 {
+            break;
+        }
+        let batch = DeltaBatch::new(ingest_source(), vec![(u, v, 1.0)], vec![])
+            .expect("valid batch");
+        let text = batch.to_text();
+        loop {
+            match client.ingest(&text) {
+                Ok(receipt) => {
+                    committed += 1;
+                    // Dense, monotone epochs: a failed attempt consumed
+                    // no epoch, so the k-th commit is exactly epoch k.
+                    assert_eq!(receipt.epoch, committed, "epochs must stay dense");
+                    assert_eq!(receipt.edges_added, 1);
+                    assert_eq!(receipt.edges_removed, 0);
+                    break;
+                }
+                Err(e) => {
+                    failures += 1;
+                    assert!(matches!(e, UniGpsError::Serve(_)), "{e:?}");
+                    assert!(e.to_string().contains("fault injected at 'ingest-apply'"), "{e}");
+                    assert!(
+                        failures < 200,
+                        "a 50% failpoint cannot fail {failures} times in a row"
+                    );
+                }
+            }
+        }
+    }
+    assert!(committed >= 8, "the retry loop must land its batches");
+    assert!(failures >= 1, "the 50% failpoint must fire across {committed}+ applies");
+
+    fault::clear();
+    // Books balance exactly: the k-th commit supersedes the k resident
+    // older epochs of this dataset (nothing evicted at an unbounded
+    // budget, no derived variants in play), failed applies supersede
+    // nothing; every attempt — failed or not — resolved the parent from
+    // cache, and only commits inserted a new snapshot.
+    let stats = client.stats().expect("stats on a clean connection");
+    assert_eq!(
+        stats.cache.invalidated,
+        committed * (committed + 1) / 2,
+        "failed ingests must not invalidate: {committed} commits, {failures} failures"
+    );
+    assert_eq!(stats.cache.loads, 1 + committed, "one base load + one per commit");
+    assert_eq!(stats.cache.misses, 1 + committed);
+    assert_eq!(stats.cache.hits, committed + failures, "every attempt hit the parent");
+    assert_eq!(stats.cache.evictions, 0);
+
+    // The chain length is exactly the commit count, proven over the
+    // wire: a pin at the committed epoch answers, one past it fails
+    // typed at run time.
+    let id = client
+        .submit(&format!("{INGEST_SPEC}\nalgo = sssp\ngeneration = {committed}"))
+        .expect("pin at the committed epoch admits");
+    client
+        .wait(id, Duration::from_secs(120))
+        .expect("pinned job completes");
+    let id = client
+        .submit(&format!("{INGEST_SPEC}\nalgo = sssp\ngeneration = {}", committed + 1))
+        .expect("over-pin admits (it may race a future ingest)");
+    let err = client.wait(id, Duration::from_secs(60)).unwrap_err();
+    assert!(err.to_string().contains("has no generation"), "{err}");
+
+    // Disarmed, the next ingest continues the chain where it left off.
+    let &(u, v) = pairs.last().expect("fixture has pairs");
+    let batch = DeltaBatch::new(ingest_source(), vec![(u, v, 1.0)], vec![]).expect("valid batch");
+    let receipt = client.ingest(&batch.to_text()).expect("clean ingest");
+    assert_eq!(receipt.epoch, committed + 1);
+
+    let stats = client.stats().expect("stats");
+    let j = &stats.jobs;
+    assert_eq!(j.completed + j.failed + j.cancelled, j.submitted, "books: {j:?}");
+    assert_eq!(j.failed, 1, "exactly the over-pinned job failed: {j:?}");
 
     client.shutdown().expect("shutdown");
     drop(client);

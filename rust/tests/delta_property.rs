@@ -1,0 +1,209 @@
+//! Property suite for the evolving-graph incremental operators
+//! (`unigps::delta::incremental`, contract in `docs/evolving.md`).
+//!
+//! For 32 random (graph, delta batch) pairs, the incremental operators on
+//! generation N+1 must match a from-scratch engine run on the
+//! materialized child exactly — PageRank ranks bit-identical as `f64`s
+//! (compared via `to_bits`, so `-0.0` and NaN payloads count), CC labels
+//! equal — across all three partition strategies, pipeline on/off and
+//! combiner on/off.
+
+use unigps::delta::incremental::{
+    cc_labels, incremental_cc, incremental_pagerank, pagerank_trace,
+};
+use unigps::delta::DeltaBatch;
+use unigps::engine::{pregel, RunOptions};
+use unigps::graph::generate::random_for_tests;
+use unigps::graph::partition::PartitionStrategy;
+use unigps::graph::Graph;
+use unigps::plan::DatasetRef;
+use unigps::vcprog::programs::{ConnectedComponents, PageRank};
+use unigps::vcprog::VertexId;
+
+const GRAPHS: u64 = 32;
+const ITERATIONS: u32 = 6;
+
+/// Deterministic splitmix64 for batch construction — the suite must
+/// replay identically run to run.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+}
+
+fn source_for(n: usize, m: usize, seed: u64) -> DatasetRef {
+    DatasetRef::Synthetic {
+        kind: "er".into(),
+        vertices: n,
+        edges: m,
+        seed,
+    }
+}
+
+/// Distinct `(src, dst)` pairs present in the graph, in row order (the
+/// generators emit multigraphs; a remove deletes every occurrence).
+fn present_pairs(g: &Graph) -> Vec<(VertexId, VertexId)> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::new();
+    for u in 0..g.num_vertices() as VertexId {
+        for (_eid, v) in g.topology().out_edges(u) {
+            if seen.insert((u, v)) {
+                out.push((u, v));
+            }
+        }
+    }
+    out
+}
+
+/// A random valid batch against `parent`: up to 4 removes of present
+/// pairs (skipped entirely on every third draw, so incremental CC runs
+/// its union-find merge path and not just the removal fallback) and up
+/// to 4 adds of pairs absent from the parent.
+fn random_batch(parent: &Graph, source: DatasetRef, rng: &mut Rng) -> DeltaBatch {
+    let n = parent.num_vertices() as u64;
+    let present = present_pairs(parent);
+    let present_set: std::collections::HashSet<_> = present.iter().copied().collect();
+    let mut removes = Vec::new();
+    if rng.below(3) != 0 {
+        let want = (1 + rng.below(4) as usize).min(present.len());
+        let mut chosen = std::collections::HashSet::new();
+        for _ in 0..want * 8 {
+            if chosen.len() >= want {
+                break;
+            }
+            let i = rng.below(present.len() as u64) as usize;
+            if chosen.insert(i) {
+                removes.push(present[i]);
+            }
+        }
+    }
+    let mut adds = Vec::new();
+    let mut added = std::collections::HashSet::new();
+    let want = 1 + rng.below(4) as usize;
+    for _ in 0..want * 32 {
+        if adds.len() >= want {
+            break;
+        }
+        let (u, v) = (rng.below(n) as VertexId, rng.below(n) as VertexId);
+        if !present_set.contains(&(u, v)) && added.insert((u, v)) {
+            let w = 1.0 + rng.below(8) as f64;
+            adds.push((u, v, w));
+        }
+    }
+    if adds.is_empty() && removes.is_empty() {
+        // Degenerate draw on a dense tiny graph: remove one present edge
+        // (the generated sizes always have at least one).
+        removes.push(present[0]);
+    }
+    DeltaBatch::new(source, adds, removes).expect("random batch is valid")
+}
+
+/// From-scratch engine ranks — the ground truth the incremental path
+/// must hit bit-for-bit.
+fn engine_ranks(g: &Graph, opts: &RunOptions) -> Vec<f64> {
+    let pr = PageRank::new(g.num_vertices(), ITERATIONS);
+    let mut o = opts.clone();
+    o.max_iter = opts.max_iter.min(pr.rounds());
+    let run = pregel::run(g, &pr, &o).expect("engine pagerank");
+    run.props.iter().map(|p| p.rank).collect()
+}
+
+/// From-scratch engine CC labels (the `cc` workload runs on the
+/// symmetrized graph and emits min-vertex-id labels as `i64`).
+fn engine_cc(g: &Graph, opts: &RunOptions) -> Vec<i64> {
+    let sym = unigps::operators::symmetrized(g);
+    let run = pregel::run(&sym, &ConnectedComponents::new(), opts).expect("engine cc");
+    run.props.iter().map(|&l| l as i64).collect()
+}
+
+fn bits(xs: &[f64]) -> Vec<u64> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every execution shape the contract covers: 3 partition strategies ×
+/// pipeline on/off × combiner on/off.
+fn configs() -> Vec<RunOptions> {
+    let mut out = Vec::new();
+    for strat in [
+        PartitionStrategy::Hash,
+        PartitionStrategy::Range,
+        PartitionStrategy::EdgeBalanced,
+    ] {
+        for pipeline in [false, true] {
+            for combiner in [false, true] {
+                let mut opts = RunOptions::default().with_workers(3);
+                opts.partition = strat;
+                opts.pipeline = pipeline;
+                opts.combiner = combiner;
+                out.push(opts);
+            }
+        }
+    }
+    out
+}
+
+fn graph_shape(seed: u64) -> (usize, usize) {
+    let n = 16 + (seed as usize * 7) % 33; // 16..=48 vertices
+    let m = 3 * n + (seed as usize * 13) % (2 * n);
+    (n, m)
+}
+
+#[test]
+fn incremental_pagerank_is_bit_identical_to_scratch() {
+    for seed in 0..GRAPHS {
+        let (n, m) = graph_shape(seed);
+        let parent = random_for_tests(n, m, 1000 + seed);
+        let mut rng = Rng(0xD00D ^ seed);
+        let batch = random_batch(&parent, source_for(n, m, 1000 + seed), &mut rng);
+        let (child, _removed) = batch.apply(&parent).expect("batch applies");
+        for opts in configs() {
+            let parent_trace = pagerank_trace(&parent, ITERATIONS, &opts);
+            let inc = incremental_pagerank(&parent_trace, &child, &batch, ITERATIONS, &opts);
+            let scratch = engine_ranks(&child, &opts);
+            assert_eq!(
+                bits(inc.final_ranks()),
+                bits(&scratch),
+                "seed {seed}: {:?} pipeline={} combiner={}",
+                opts.partition,
+                opts.pipeline,
+                opts.combiner
+            );
+        }
+    }
+}
+
+#[test]
+fn incremental_cc_matches_scratch() {
+    for seed in 0..GRAPHS {
+        let (n, m) = graph_shape(seed);
+        let parent = random_for_tests(n, m, 2000 + seed);
+        let mut rng = Rng(0xCC00 ^ seed);
+        let batch = random_batch(&parent, source_for(n, m, 2000 + seed), &mut rng);
+        let (child, _removed) = batch.apply(&parent).expect("batch applies");
+        let parent_labels = cc_labels(&parent);
+        let inc = incremental_cc(&parent_labels, &child, &batch);
+        // From-scratch union-find on the materialized child...
+        assert_eq!(inc, cc_labels(&child), "seed {seed}");
+        // ...and the engine itself, across every execution shape.
+        for opts in configs() {
+            assert_eq!(
+                inc,
+                engine_cc(&child, &opts),
+                "seed {seed}: {:?} pipeline={} combiner={}",
+                opts.partition,
+                opts.pipeline,
+                opts.combiner
+            );
+        }
+    }
+}

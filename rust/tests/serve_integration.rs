@@ -11,7 +11,9 @@
 //! running job terminal within about one superstep, waking parked
 //! waiters and freeing the slot. The `METRICS` snapshot fetched over the
 //! wire matches in-process registry reads (same series, sandwiched
-//! values, bit-identical codec round trip).
+//! values, bit-identical codec round trip). An ingest leg drives the
+//! evolving-dataset path end to end: delta batches over the wire,
+//! generation-keyed caching, epoch pins (`docs/evolving.md`).
 //!
 //! Every test drives the unified [`Client`] trait, and the transport is
 //! an environment matrix: `UNIGPS_TEST_TRANSPORT=uds` (default) runs the
@@ -23,11 +25,12 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 use unigps::client::Client;
+use unigps::delta::DeltaBatch;
 use unigps::engine::{EngineKind, RunOptions, RunResult};
 use unigps::error::UniGpsError;
 use unigps::ipc::shm::ShmMap;
 use unigps::operators::{run_operator, Operator};
-use unigps::plan::{Plan, Stage, Transform};
+use unigps::plan::{DatasetRef, Plan, Stage, Transform};
 use unigps::serve::{JobState, RemoteClient, ServeClient, ServeConfig, Server};
 use unigps::session::Session;
 use unigps::vcprog::Column;
@@ -293,6 +296,142 @@ fn three_stage_plan_shares_one_base_load_and_one_derive() {
     assert_eq!(stats.cache.hits, clients as u64 - 1);
     assert_eq!(stats.cache.derived_hits, clients as u64 - 1);
     assert_eq!(stats.cache.resident, 2);
+
+    client.shutdown().expect("shutdown");
+    drop(client);
+    server.join();
+}
+
+/// `count` edge pairs absent from `g` (and distinct from each other) —
+/// fodder for delta batches that are guaranteed to apply.
+fn absent_pairs(g: &unigps::graph::Graph, count: usize) -> Vec<(u32, u32)> {
+    let topo = g.topology();
+    let n = topo.num_vertices() as u32;
+    let mut out = Vec::new();
+    'scan: for u in 0..n {
+        for v in 0..n {
+            if u != v && topo.out_edges(u).all(|(_, t)| t != v) {
+                out.push((u, v));
+                if out.len() == count {
+                    break 'scan;
+                }
+            }
+        }
+    }
+    assert_eq!(out.len(), count, "graph too dense for the fixture");
+    out
+}
+
+/// The evolving-dataset acceptance path over both transports: a plan runs
+/// on generation 0, [`Client::ingest`] applies a delta batch producing
+/// generation 1, and a resubmit of the same plan re-derives its shared
+/// variant exactly once against the new generation — while a
+/// `generation = 0` pin keeps answering bit-identically from the
+/// superseded snapshots (resident until evicted, never reloaded). The
+/// `STATS` frame's trailing invalidation counter crosses the wire,
+/// over-pins fail typed at run time, non-numeric pins at submit, and an
+/// inapplicable batch leaves the generation chain untouched.
+#[test]
+fn ingest_advances_generations_and_pins_answer_from_old_snapshots() {
+    let mut cfg = ServeConfig::new(ShmMap::unique_path("serve-ingest"));
+    cfg.slots = 2;
+    cfg.queue_cap = 16;
+    cfg.cache_budget = usize::MAX;
+    cfg.total_workers = 4;
+    let server = start_server(cfg);
+
+    let stages = "[transform]\nop = symmetrize\n\n[stage]\nalgo = pagerank\niterations = 5\n";
+    let plan_text = format!("{}\n\n{stages}", dataset_spec_lines());
+    let plan = Plan::parse_text(&plan_text).expect("plan parses");
+
+    // The delta: three edges absent from generation 0 (computed against
+    // the same seeded graph the server loads), plus a spare absent pair
+    // kept aside so a later remove of it is guaranteed inapplicable.
+    let parent = dataset_graph();
+    let absent = absent_pairs(&parent, 4);
+    let source = DatasetRef::Synthetic {
+        kind: "rmat".into(),
+        vertices: VERTICES,
+        edges: EDGES,
+        seed: SEED,
+    };
+    let adds: Vec<_> = absent[..3].iter().map(|&(u, v)| (u, v, 2.0)).collect();
+    let batch = DeltaBatch::new(source.clone(), adds, vec![]).expect("valid batch");
+
+    // Ground truths through the in-process executor: the plan on the
+    // parent (generation 0) and on the locally applied child (generation
+    // 1). Added out-edges change degrees, so the runs must diverge — the
+    // pin assertions below would otherwise be vacuous.
+    let session = Session::builder().workers(JOB_WORKERS).build();
+    let gen0_truth = session.run_plan_on(&parent, &plan).expect("gen-0 run");
+    let (child, removed) = batch.apply(&parent).expect("batch applies");
+    assert_eq!(removed, 0);
+    let gen1_truth = session.run_plan_on(&child, &plan).expect("gen-1 run");
+    assert!(!columns_bit_identical(&gen0_truth, &gen1_truth));
+
+    let mut client = server.client();
+    // Generation 0: one base load, one symmetrize.
+    let id = client.submit(&plan_text).expect("submit gen-0 plan");
+    let got0 = client.wait(id, Duration::from_secs(120)).expect("gen-0 job");
+    assert!(columns_bit_identical(&got0, &gen0_truth), "gen-0 serve run matches");
+    let s = client.stats().expect("stats");
+    assert_eq!((s.cache.loads, s.cache.derived_loads), (1, 1));
+    assert_eq!(s.cache.invalidated, 0);
+
+    // Ingest: epoch 1 committed; both resident generation-0 entries (base
+    // + derived) are counted invalidated but stay resident.
+    let receipt = client.ingest(&batch.to_text()).expect("ingest applies");
+    assert_eq!(receipt.epoch, 1);
+    assert_eq!(receipt.edges_added, 3);
+    assert_eq!(receipt.edges_removed, 0);
+    let s = client.stats().expect("stats");
+    assert_eq!(s.cache.invalidated, 2, "gen-0 base + derived superseded");
+    assert_eq!(s.cache.loads, 2, "the ingest made generation 1 resident");
+    assert_eq!(s.cache.evictions, 0);
+
+    // Resubmit: `latest` now resolves to generation 1 — the base snapshot
+    // is already resident from the ingest, the symmetrized variant is
+    // re-derived exactly once, and the result matches the child-graph run.
+    let id = client.submit(&plan_text).expect("submit gen-1 plan");
+    let got1 = client.wait(id, Duration::from_secs(120)).expect("gen-1 job");
+    assert!(columns_bit_identical(&got1, &gen1_truth), "gen-1 serve run matches");
+    assert!(!columns_bit_identical(&got1, &got0));
+    let s = client.stats().expect("stats");
+    assert_eq!(s.cache.derived_loads, 2, "re-derived exactly once");
+    assert_eq!(s.cache.derived_hits, 0);
+    assert_eq!(s.cache.loads, 2, "no extra base load for the resubmit");
+
+    // A generation-0 pin keeps answering bit-identically from the
+    // superseded snapshots — no new loads, no new derivations.
+    let pinned_text = format!("{}\ngeneration = 0\n\n{stages}", dataset_spec_lines());
+    let id = client.submit(&pinned_text).expect("submit pinned plan");
+    let pinned = client.wait(id, Duration::from_secs(120)).expect("pinned job");
+    assert!(columns_bit_identical(&pinned, &got0), "pin answers from generation 0");
+    let s = client.stats().expect("stats");
+    assert_eq!(s.cache.derived_loads, 2, "pinned run hit the old derived variant");
+    assert_eq!(s.cache.derived_hits, 1);
+    assert_eq!(s.cache.invalidated, 2, "reads never re-invalidate");
+    assert_eq!(s.cache.resident, 4, "both generations, base + derived each");
+
+    // Pinning an epoch the dataset never reached is a typed run-time
+    // error (the pin may race a future ingest, so admission succeeds); a
+    // non-numeric pin is rejected at submit.
+    let over = format!("{}\nalgo = pagerank\ngeneration = 9", dataset_spec_lines());
+    let id = client.submit(&over).expect("numeric over-pin admits");
+    let err = client.wait(id, Duration::from_secs(60)).unwrap_err();
+    assert!(err.to_string().contains("has no generation"), "{err}");
+    let bad_pin = format!("{}\nalgo = pagerank\ngeneration = newest", dataset_spec_lines());
+    let err = client.submit(&bad_pin).unwrap_err();
+    assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
+
+    // An inapplicable batch (remove of an absent edge) fails typed over
+    // the wire and leaves the generation chain and the counters untouched.
+    let bad = DeltaBatch::new(source, vec![], vec![absent[3]]).expect("well-formed batch");
+    let err = client.ingest(&bad.to_text()).unwrap_err();
+    assert!(matches!(err, UniGpsError::Config(_)), "{err:?}");
+    assert!(err.to_string().contains("removes absent edge"), "{err}");
+    let s = client.stats().expect("stats");
+    assert_eq!(s.cache.invalidated, 2, "failed ingest invalidates nothing");
 
     client.shutdown().expect("shutdown");
     drop(client);
