@@ -109,6 +109,78 @@ fn main() {
          partitions state across workers/nodes.",
         unigps::util::fmt_bytes(298_100_000u64 * 16)
     );
+
+    oocore_leg(base, fast);
+}
+
+/// Out-of-core leg (`docs/storage.md`): pack a sweep-sized graph as a
+/// binfmt v2 snapshot, admit it to a snapshot cache whose **heap budget
+/// is far below the graph's heap size**, and run PageRank over the
+/// mapped topology. The run must complete with the snapshot still
+/// resident and zero evictions — mapped bytes are accounted in
+/// `mapped_resident_bytes`, never against the budget. Records the
+/// accounting in `BENCH_oocore.json`.
+fn oocore_leg(base: usize, fast: bool) {
+    use unigps::serve::cache::{graph_bytes, SnapshotCache};
+    use unigps::store::{snapshot, StoreMode};
+
+    println!("\n== out-of-core: mmap snapshot vs a smaller cache heap budget ==");
+    let nv = base * if fast { 2 } else { 8 };
+    let graph = log_normal(nv, 1.4, 1.1, true, WeightKind::UniformInt(64), 0xC0DE);
+    let (v, e) = (graph.num_vertices(), graph.num_edges());
+    let heap_bytes = graph_bytes(&graph) as u64;
+    let mut path = std::env::temp_dir();
+    path.push(format!("unigps-bench-oocore-{}.bin", std::process::id()));
+    snapshot::pack(&graph, &path, false).unwrap();
+    drop(graph);
+
+    let budget = (heap_bytes / 8).max(1) as usize;
+    let cache = SnapshotCache::new(budget);
+    let t = Timer::start();
+    let mapped = cache
+        .get_or_load("bench-oocore", || snapshot::load(&path, StoreMode::Mmap))
+        .unwrap();
+    let load_secs = t.secs();
+    let mapped_bytes = mapped.mapped_bytes() as u64;
+    assert!(mapped_bytes > budget as u64, "snapshot larger than the cache budget");
+
+    let prog = PageRank::new(mapped.num_vertices(), 10);
+    let mut o = RunOptions::default().with_workers(4);
+    o.step_metrics = false;
+    o.max_iter = prog.rounds();
+    let t = Timer::start();
+    run_typed(EngineKind::Pregel, &mapped, &prog, &o).unwrap();
+    let secs = t.secs();
+
+    let stats = cache.stats();
+    assert_eq!(stats.evictions, 0, "mapped snapshot must never be an eviction victim");
+    assert_eq!(stats.mapped_resident, 1, "mapped snapshot stays resident");
+    println!(
+        "  {} vertices / {} edges: {} mapped vs {} heap equivalent under a {} budget — \
+         load {}, pagerank {}, {} evictions",
+        unigps::util::fmt_count(v as u64),
+        unigps::util::fmt_count(e as u64),
+        unigps::util::fmt_bytes(mapped_bytes),
+        unigps::util::fmt_bytes(heap_bytes),
+        unigps::util::fmt_bytes(budget as u64),
+        fmt_dur(load_secs),
+        fmt_dur(secs),
+        stats.evictions,
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"oocore\",\n  \"vertices\": {v},\n  \"edges\": {e},\n  \
+         \"heap_equivalent_bytes\": {heap_bytes},\n  \"mapped_bytes\": {mapped_bytes},\n  \
+         \"cache_budget_bytes\": {budget},\n  \
+         \"mapped_resident_bytes\": {},\n  \"resident_heap_bytes\": {},\n  \
+         \"evictions\": {},\n  \"load_secs\": {load_secs:.6},\n  \
+         \"pagerank_secs\": {secs:.6},\n  \"completed\": true\n}}\n",
+        stats.mapped_resident_bytes, stats.resident_bytes, stats.evictions,
+    );
+    match std::fs::write("BENCH_oocore.json", &json) {
+        Ok(()) => println!("  wrote BENCH_oocore.json"),
+        Err(e) => println!("  WARN: could not write BENCH_oocore.json: {e}"),
+    }
+    let _ = std::fs::remove_file(&path);
 }
 
 /// R² of the least-squares line through `pts`.

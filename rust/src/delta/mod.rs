@@ -261,10 +261,14 @@ impl DeltaBatch {
         // Group ops by source row (both lists are sorted by (src, dst)).
         let mut adds = self.adds.iter().copied().peekable();
         let mut removes = self.removes.iter().copied().peekable();
-        let (old_offsets, old_targets) = topo.csr();
+        let old_offsets = topo.out_degree_prefix();
+        // Raw targets when the backing has them (heap/mmap) — the
+        // clean-row fast path copies slices; compressed backings fall
+        // back to cursor iteration.
+        let raw_targets = topo.csr().map(|(_, t)| t);
         let old_props = parent.edge_props();
         let mut offsets = Vec::with_capacity(n + 1);
-        let mut targets: Vec<VertexId> = Vec::with_capacity(old_targets.len() + self.adds.len());
+        let mut targets: Vec<VertexId> = Vec::with_capacity(topo.num_edges() + self.adds.len());
         let mut props: Vec<f64> = Vec::with_capacity(old_props.len() + self.adds.len());
         let mut removed_total = 0u64;
         offsets.push(0usize);
@@ -280,12 +284,14 @@ impl DeltaBatch {
             }
             if row_removes.is_empty() {
                 // Clean-row fast path: copy the parent row wholesale.
-                targets.extend_from_slice(&old_targets[row.clone()]);
+                match raw_targets {
+                    Some(old_targets) => targets.extend_from_slice(&old_targets[row.clone()]),
+                    None => targets.extend(topo.out_edges(u).map(|(_, dst)| dst)),
+                }
                 props.extend_from_slice(&old_props[row.clone()]);
             } else {
                 let mut hit = vec![false; row_removes.len()];
-                for eid in row {
-                    let dst = old_targets[eid];
+                for (eid, dst) in topo.out_edges(u) {
                     match row_removes.binary_search(&dst) {
                         Ok(i) => {
                             hit[i] = true;

@@ -5,31 +5,34 @@
 //! pull-style engines: GAS gather, Push-Pull dense mode). The CSC view keeps
 //! a mapping back to the CSR edge id so edge properties — stored once, in
 //! CSR order — are reachable from both directions.
+//!
+//! Since the out-of-core subsystem (`crate::store`, `docs/storage.md`) the
+//! arrays live behind a pluggable [`Backing`]: heap `Vec`s (the default),
+//! zero-copy slices over an mmapped binfmt v2 snapshot, or varint-delta
+//! compressed streams. Offsets are raw words in every backing, so degree
+//! math and [`Topology::out_degree_prefix`] stay O(1); adjacency iteration
+//! goes through [`OutEdges`]/[`InEdges`], which index raw slices or walk
+//! decode cursors depending on the backing. Raw-slice accessors
+//! ([`Topology::csr`]/[`Topology::csc`]) return `None` on the compressed
+//! backing.
 
+use crate::store::{Adjacency, Backing, HeapBacking, SeqCursor, StoreMode, TopologySource};
 use crate::vcprog::VertexId;
 
 /// Immutable graph topology with both adjacency directions.
 #[derive(Debug, Clone)]
 pub struct Topology {
     num_vertices: usize,
-    /// CSR row offsets, length `num_vertices + 1`.
-    out_offsets: Vec<usize>,
-    /// CSR column indices (edge targets), length `num_edges`.
-    out_targets: Vec<VertexId>,
-    /// CSC row offsets, length `num_vertices + 1`.
-    in_offsets: Vec<usize>,
-    /// CSC column indices (edge sources), length `num_edges`.
-    in_sources: Vec<VertexId>,
-    /// For each CSC slot, the CSR edge id of the same edge.
-    in_edge_ids: Vec<usize>,
+    num_edges: usize,
     /// Whether the logical graph is directed (undirected graphs are stored
     /// symmetrized; this flag only records provenance).
     directed: bool,
+    backing: Backing,
 }
 
 impl Topology {
     /// Build a topology from a CSR adjacency (offsets + targets). The CSC
-    /// view is derived by a counting pass.
+    /// view is derived by a counting pass; the result is heap-backed.
     pub fn from_csr(
         num_vertices: usize,
         out_offsets: Vec<usize>,
@@ -64,13 +67,38 @@ impl Topology {
 
         Topology {
             num_vertices,
-            out_offsets,
-            out_targets,
-            in_offsets,
-            in_sources,
-            in_edge_ids,
+            num_edges,
             directed,
+            backing: Backing::Heap(HeapBacking {
+                out_offsets,
+                out_targets,
+                in_offsets,
+                in_sources,
+                in_edge_ids,
+            }),
         }
+    }
+
+    /// Wrap an already-built backing (snapshot loaders and the compressed
+    /// re-encoder; `from_csr` remains the builder-path constructor). The
+    /// backing's arrays must already be validated/consistent.
+    pub fn from_backing(num_vertices: usize, directed: bool, backing: Backing) -> Self {
+        let num_edges = *backing.out_offsets().last().unwrap_or(&0);
+        debug_assert_eq!(backing.out_offsets().len(), num_vertices + 1);
+        debug_assert_eq!(backing.in_offsets().len(), num_vertices + 1);
+        Topology { num_vertices, num_edges, directed, backing }
+    }
+
+    /// The storage backing.
+    #[inline]
+    pub fn backing(&self) -> &Backing {
+        &self.backing
+    }
+
+    /// Which store mode backs this topology.
+    #[inline]
+    pub fn store_mode(&self) -> StoreMode {
+        self.backing.source().mode()
     }
 
     /// Number of vertices.
@@ -82,7 +110,7 @@ impl Topology {
     /// Number of (directed, stored) edges.
     #[inline]
     pub fn num_edges(&self) -> usize {
-        self.out_targets.len()
+        self.num_edges
     }
 
     /// Whether the logical input graph was directed.
@@ -95,44 +123,72 @@ impl Topology {
     #[inline]
     pub fn out_degree(&self, v: VertexId) -> usize {
         let v = v as usize;
-        self.out_offsets[v + 1] - self.out_offsets[v]
+        let off = self.backing.out_offsets();
+        off[v + 1] - off[v]
     }
 
     /// In-degree of `v`.
     #[inline]
     pub fn in_degree(&self, v: VertexId) -> usize {
         let v = v as usize;
-        self.in_offsets[v + 1] - self.in_offsets[v]
+        let off = self.backing.in_offsets();
+        off[v + 1] - off[v]
     }
 
     /// Out-neighbors of `v` with their CSR edge ids.
     #[inline]
-    pub fn out_edges(&self, v: VertexId) -> impl Iterator<Item = (usize, VertexId)> + '_ {
+    pub fn out_edges(&self, v: VertexId) -> OutEdges<'_> {
         let v = v as usize;
-        let range = self.out_offsets[v]..self.out_offsets[v + 1];
-        range.clone().zip(self.out_targets[range].iter().copied())
+        let off = self.backing.out_offsets();
+        let (start, end) = (off[v], off[v + 1]);
+        match self.backing.adjacency() {
+            Adjacency::Raw { out_targets, .. } => {
+                OutEdges::Raw { eid: start, end, targets: out_targets }
+            }
+            Adjacency::Packed { out_targets, .. } => {
+                OutEdges::Packed { eid: start, end, cur: out_targets.cursor_at(start) }
+            }
+        }
     }
 
     /// In-neighbors of `v` as `(csr_edge_id, source)`.
     #[inline]
-    pub fn in_edges(&self, v: VertexId) -> impl Iterator<Item = (usize, VertexId)> + '_ {
+    pub fn in_edges(&self, v: VertexId) -> InEdges<'_> {
         let v = v as usize;
-        let range = self.in_offsets[v]..self.in_offsets[v + 1];
-        self.in_edge_ids[range.clone()]
-            .iter()
-            .copied()
-            .zip(self.in_sources[range].iter().copied())
+        let off = self.backing.in_offsets();
+        let (start, end) = (off[v], off[v + 1]);
+        match self.backing.adjacency() {
+            Adjacency::Raw { in_sources, in_edge_ids, .. } => {
+                InEdges::Raw { i: start, end, sources: in_sources, eids: in_edge_ids }
+            }
+            Adjacency::Packed { in_sources, in_edge_ids, .. } => InEdges::Packed {
+                i: start,
+                end,
+                sources: in_sources.cursor_at(start),
+                eids: in_edge_ids.cursor_at(start),
+            },
+        }
     }
 
-    /// Raw CSR slices `(offsets, targets)` — used by the block-CSC converter
-    /// and the tensor engine.
-    pub fn csr(&self) -> (&[usize], &[VertexId]) {
-        (&self.out_offsets, &self.out_targets)
+    /// Raw CSR slices `(offsets, targets)` — used by the block-CSC converter,
+    /// the tensor engine, and the delta fast path. `None` on the compressed
+    /// backing (callers fall back to [`Topology::out_edges`]).
+    pub fn csr(&self) -> Option<(&[usize], &[VertexId])> {
+        match self.backing.adjacency() {
+            Adjacency::Raw { out_targets, .. } => Some((self.backing.out_offsets(), out_targets)),
+            Adjacency::Packed { .. } => None,
+        }
     }
 
-    /// Raw CSC slices `(offsets, sources, csr_edge_ids)`.
-    pub fn csc(&self) -> (&[usize], &[VertexId], &[usize]) {
-        (&self.in_offsets, &self.in_sources, &self.in_edge_ids)
+    /// Raw CSC slices `(offsets, sources, csr_edge_ids)`; `None` on the
+    /// compressed backing.
+    pub fn csc(&self) -> Option<(&[usize], &[VertexId], &[usize])> {
+        match self.backing.adjacency() {
+            Adjacency::Raw { in_sources, in_edge_ids, .. } => {
+                Some((self.backing.in_offsets(), in_sources, in_edge_ids))
+            }
+            Adjacency::Packed { .. } => None,
+        }
     }
 
     /// Sum of out-degrees over `vs`. Kept as the slow-path reference for
@@ -150,20 +206,158 @@ impl Topology {
     /// is the out-degree sum of the contiguous vertex range `[a, b)`, which
     /// lets the runtime's convergence reduction fold a fully-active 64-bit
     /// bitset word with one subtraction instead of 64 degree lookups.
+    /// Raw in every backing (offsets are never compressed).
     #[inline]
     pub fn out_degree_prefix(&self) -> &[usize] {
-        &self.out_offsets
+        self.backing.out_offsets()
     }
 
-    /// Total bytes of the topology arrays (capacity planning / reports).
+    /// In-degree prefix sums — the CSC row-offset array, same contract as
+    /// [`Topology::out_degree_prefix`] for the pull direction.
+    #[inline]
+    pub fn in_degree_prefix(&self) -> &[usize] {
+        self.backing.in_offsets()
+    }
+
+    /// Total bytes of the topology arrays, heap **and** mapped (capacity
+    /// planning / reports). The snapshot cache budgets on
+    /// [`Topology::heap_bytes`] alone; see `docs/storage.md`.
     pub fn memory_bytes(&self) -> usize {
-        self.out_offsets.len() * 8
-            + self.out_targets.len() * 4
-            + self.in_offsets.len() * 8
-            + self.in_sources.len() * 4
-            + self.in_edge_ids.len() * 8
+        self.heap_bytes() + self.mapped_bytes()
+    }
+
+    /// Process-heap bytes held by the topology arrays.
+    #[inline]
+    pub fn heap_bytes(&self) -> usize {
+        self.backing.source().heap_bytes()
+    }
+
+    /// Mapped (page-cache) bytes held by the topology arrays.
+    #[inline]
+    pub fn mapped_bytes(&self) -> usize {
+        self.backing.source().mapped_bytes()
     }
 }
+
+/// Iterator over a vertex's out-edges as `(csr_edge_id, target)`.
+pub enum OutEdges<'a> {
+    /// Directly indexed raw targets (heap / mmap backings).
+    Raw {
+        /// Next CSR edge id.
+        eid: usize,
+        /// One past the row's last CSR edge id.
+        end: usize,
+        /// The full targets array (indexed by edge id).
+        targets: &'a [VertexId],
+    },
+    /// Cursor-decoded compressed targets.
+    Packed {
+        /// Next CSR edge id.
+        eid: usize,
+        /// One past the row's last CSR edge id.
+        end: usize,
+        /// Decode cursor positioned at `eid`.
+        cur: SeqCursor<'a>,
+    },
+}
+
+impl Iterator for OutEdges<'_> {
+    type Item = (usize, VertexId);
+
+    #[inline]
+    fn next(&mut self) -> Option<(usize, VertexId)> {
+        match self {
+            OutEdges::Raw { eid, end, targets } => {
+                if *eid >= *end {
+                    return None;
+                }
+                let item = (*eid, targets[*eid]);
+                *eid += 1;
+                Some(item)
+            }
+            OutEdges::Packed { eid, end, cur } => {
+                if *eid >= *end {
+                    return None;
+                }
+                let item = (*eid, cur.next_value() as VertexId);
+                *eid += 1;
+                Some(item)
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = match self {
+            OutEdges::Raw { eid, end, .. } | OutEdges::Packed { eid, end, .. } => {
+                end.saturating_sub(*eid)
+            }
+        };
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for OutEdges<'_> {}
+
+/// Iterator over a vertex's in-edges as `(csr_edge_id, source)`.
+pub enum InEdges<'a> {
+    /// Directly indexed raw CSC arrays (heap / mmap backings).
+    Raw {
+        /// Next CSC slot.
+        i: usize,
+        /// One past the row's last CSC slot.
+        end: usize,
+        /// The full CSC sources array (indexed by slot).
+        sources: &'a [VertexId],
+        /// The full CSC→CSR edge-id array (indexed by slot).
+        eids: &'a [usize],
+    },
+    /// Cursor-decoded compressed CSC streams.
+    Packed {
+        /// Next CSC slot.
+        i: usize,
+        /// One past the row's last CSC slot.
+        end: usize,
+        /// Decode cursor over sources, positioned at `i`.
+        sources: SeqCursor<'a>,
+        /// Decode cursor over CSR edge ids, positioned at `i`.
+        eids: SeqCursor<'a>,
+    },
+}
+
+impl Iterator for InEdges<'_> {
+    type Item = (usize, VertexId);
+
+    #[inline]
+    fn next(&mut self) -> Option<(usize, VertexId)> {
+        match self {
+            InEdges::Raw { i, end, sources, eids } => {
+                if *i >= *end {
+                    return None;
+                }
+                let item = (eids[*i], sources[*i]);
+                *i += 1;
+                Some(item)
+            }
+            InEdges::Packed { i, end, sources, eids } => {
+                if *i >= *end {
+                    return None;
+                }
+                let item = (eids.next_value() as usize, sources.next_value() as VertexId);
+                *i += 1;
+                Some(item)
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = match self {
+            InEdges::Raw { i, end, .. } | InEdges::Packed { i, end, .. } => end.saturating_sub(*i),
+        };
+        (n, Some(n))
+    }
+}
+
+impl ExactSizeIterator for InEdges<'_> {}
 
 #[cfg(test)]
 mod tests {
@@ -180,6 +374,7 @@ mod tests {
         assert_eq!(t.num_vertices(), 3);
         assert_eq!(t.num_edges(), 4);
         assert!(t.directed());
+        assert_eq!(t.store_mode(), StoreMode::Heap);
     }
 
     #[test]
@@ -200,6 +395,7 @@ mod tests {
         assert_eq!(e, vec![(0, 1), (1, 2)]);
         let e: Vec<_> = t.out_edges(2).collect();
         assert_eq!(e, vec![(3, 0)]);
+        assert_eq!(t.out_edges(0).len(), 2);
     }
 
     #[test]
@@ -214,7 +410,7 @@ mod tests {
     #[test]
     fn csc_is_consistent_with_csr() {
         let t = diamond();
-        let (off, tgt) = t.csr();
+        let (off, tgt) = t.csr().expect("heap backing has raw slices");
         // For every CSC entry (eid, src) of v: CSR edge eid must be src->v.
         for v in 0..t.num_vertices() as VertexId {
             for (eid, src) in t.in_edges(v) {
@@ -243,7 +439,10 @@ mod tests {
 
     #[test]
     fn memory_accounting_nonzero() {
-        assert!(diamond().memory_bytes() > 0);
+        let t = diamond();
+        assert!(t.memory_bytes() > 0);
+        assert_eq!(t.memory_bytes(), t.heap_bytes());
+        assert_eq!(t.mapped_bytes(), 0);
     }
 
     #[test]
@@ -258,5 +457,35 @@ mod tests {
         // Range fold equals the per-vertex sum — the runtime's full-word
         // fast path depends on this.
         assert_eq!(p[3] - p[0], t.out_degree_sum(0..3u32));
+    }
+
+    #[test]
+    fn in_degree_prefix_mirrors_in_degrees() {
+        let t = diamond();
+        let p = t.in_degree_prefix();
+        assert_eq!(p.len(), t.num_vertices() + 1);
+        assert_eq!(p[t.num_vertices()], t.num_edges());
+        for v in 0..t.num_vertices() {
+            assert_eq!(p[v + 1] - p[v], t.in_degree(v as VertexId));
+        }
+    }
+
+    #[test]
+    fn compressed_backing_iterates_identically() {
+        let t = diamond();
+        let c = crate::store::compress_topology(&t).expect("compress");
+        assert_eq!(c.store_mode(), StoreMode::Compressed);
+        assert_eq!(c.num_vertices(), t.num_vertices());
+        assert_eq!(c.num_edges(), t.num_edges());
+        assert!(c.csr().is_none(), "no raw slices on the compressed backing");
+        assert!(c.csc().is_none());
+        for v in 0..t.num_vertices() as VertexId {
+            assert_eq!(c.out_edges(v).collect::<Vec<_>>(), t.out_edges(v).collect::<Vec<_>>());
+            assert_eq!(c.in_edges(v).collect::<Vec<_>>(), t.in_edges(v).collect::<Vec<_>>());
+            assert_eq!(c.out_degree(v), t.out_degree(v));
+            assert_eq!(c.in_degree(v), t.in_degree(v));
+        }
+        // Double-compressing is a typed error, not a panic.
+        assert!(crate::store::compress_topology(&c).is_err());
     }
 }

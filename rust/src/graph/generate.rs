@@ -190,8 +190,8 @@ mod tests {
     fn rmat_seed_changes_graph() {
         let g1 = rmat(8, 1000, (0.57, 0.19, 0.19, 0.05), true, WeightKind::Unit, 1);
         let g2 = rmat(8, 1000, (0.57, 0.19, 0.19, 0.05), true, WeightKind::Unit, 2);
-        let (_, t1) = g1.topology().csr();
-        let (_, t2) = g2.topology().csr();
+        let (_, t1) = g1.topology().csr().unwrap();
+        let (_, t2) = g2.topology().csr().unwrap();
         assert_ne!(t1, t2);
     }
 

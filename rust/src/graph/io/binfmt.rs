@@ -1,4 +1,4 @@
-//! Fast binary graph snapshots.
+//! Fast binary graph snapshots (binfmt **v1**, the dense CSR stream).
 //!
 //! Layout (little endian):
 //!
@@ -11,6 +11,18 @@
 //! targets: ne × u32
 //! weights: ne × f64
 //! ```
+//!
+//! V1 carries no CSC mirror — loading derives it on the heap — and no
+//! alignment, so it cannot be mmapped. The sectioned, page-aligned
+//! **v2** layout lives in [`crate::store::snapshot`] (written by
+//! `unigps pack`); [`BinaryFormat::load`] dispatches on the magic, so
+//! `.bin` readers accept both versions transparently.
+//!
+//! The reader is fail-closed against untrusted files: the header's
+//! counts must satisfy the exact file-length equation **before any
+//! allocation** (a forged header cannot allocation-bomb the process),
+//! offsets must be monotone spanning `[0, ne]`, and every target must be
+//! in range — each violation is a typed [`UniGpsError::Parse`].
 
 use super::{GraphSink, GraphSource};
 use crate::error::{Result, UniGpsError};
@@ -20,7 +32,7 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 use std::sync::Arc;
 
-const MAGIC: u64 = 0x554E_4947_5053_4231;
+pub(crate) const MAGIC: u64 = 0x554E_4947_5053_4231;
 
 /// Binary format adapter.
 #[derive(Debug, Clone, Copy, Default)]
@@ -32,47 +44,68 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
 impl GraphSource for BinaryFormat {
     fn load(&self, path: &Path) -> Result<Graph> {
         let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
         let mut r = BufReader::new(file);
-        if read_u64(&mut r)? != MAGIC {
+        let magic = read_u64(&mut r)?;
+        if magic == crate::store::snapshot::MAGIC_V2 {
+            // A packed v2 snapshot: load it heap-backed so every `.bin`
+            // consumer (session, plan sources, CLI) accepts both versions.
+            return crate::store::snapshot::load(path, crate::store::StoreMode::Heap);
+        }
+        if magic != MAGIC {
             return Err(UniGpsError::Parse("bad magic (not a UniGPS binary graph)".into()));
         }
-        let nv = read_u64(&mut r)? as usize;
-        let ne = read_u64(&mut r)? as usize;
+        let nv = read_u64(&mut r)?;
+        let ne = read_u64(&mut r)?;
         let flags = read_u64(&mut r)?;
         let directed = flags & 1 != 0;
 
-        let mut offsets = vec![0usize; nv + 1];
-        {
-            let mut buf = vec![0u8; (nv + 1) * 8];
-            r.read_exact(&mut buf)?;
-            for (i, chunk) in buf.chunks_exact(8).enumerate() {
-                offsets[i] = u64::from_le_bytes(chunk.try_into().unwrap()) as usize;
-            }
+        // Fail closed before any allocation: vertex ids must fit u32 and
+        // the header counts must satisfy the exact length equation —
+        // anything else is a truncated, trailing-garbage, or forged file
+        // (a claimed nv/ne can otherwise demand arbitrary buffers).
+        if nv > u32::MAX as u64 {
+            return Err(UniGpsError::Parse(format!("vertex count {nv} exceeds u32 ids")));
         }
-        if offsets[nv] != ne {
+        let want = 32u128 + (nv as u128 + 1) * 8 + ne as u128 * 12;
+        if want != u128::from(file_len) {
+            return Err(UniGpsError::Parse(format!(
+                "file is {file_len} bytes but the header ({nv} vertices, {ne} edges) \
+                 requires {want} (truncated or forged)"
+            )));
+        }
+        let nv = nv as usize;
+        let ne = ne as usize;
+
+        let mut offsets = vec![0usize; nv + 1];
+        for o in offsets.iter_mut() {
+            *o = read_u64(&mut r)? as usize;
+        }
+        if offsets[0] != 0 || offsets[nv] != ne {
             return Err(UniGpsError::Parse("offset/edge-count mismatch".into()));
         }
+        if let Some(v) = (0..nv).find(|&v| offsets[v] > offsets[v + 1]) {
+            return Err(UniGpsError::Parse(format!("non-monotone offsets at vertex {v}")));
+        }
         let mut targets = vec![0u32; ne];
-        {
-            let mut buf = vec![0u8; ne * 4];
-            r.read_exact(&mut buf)?;
-            for (i, chunk) in buf.chunks_exact(4).enumerate() {
-                targets[i] = u32::from_le_bytes(chunk.try_into().unwrap());
-                if targets[i] as usize >= nv {
-                    return Err(UniGpsError::Parse(format!("edge target {} out of range", targets[i])));
-                }
+        for t in targets.iter_mut() {
+            *t = read_u32(&mut r)?;
+            if *t as usize >= nv {
+                return Err(UniGpsError::Parse(format!("edge target {t} out of range")));
             }
         }
         let mut weights = vec![0f64; ne];
-        {
-            let mut buf = vec![0u8; ne * 8];
-            r.read_exact(&mut buf)?;
-            for (i, chunk) in buf.chunks_exact(8).enumerate() {
-                weights[i] = f64::from_le_bytes(chunk.try_into().unwrap());
-            }
+        for w in weights.iter_mut() {
+            *w = f64::from_bits(read_u64(&mut r)?);
         }
         let topo = Topology::from_csr(nv, offsets, targets, directed);
         Ok(PropertyGraph::new(Arc::new(topo), vec![(); nv], weights))
@@ -88,12 +121,16 @@ impl GraphSink for BinaryFormat {
         w.write_all(&(graph.num_edges() as u64).to_le_bytes())?;
         let flags: u64 = graph.topology().directed() as u64;
         w.write_all(&flags.to_le_bytes())?;
-        let (offsets, targets) = graph.topology().csr();
-        for &o in offsets {
+        // Iterate through the accessors (not raw slices) so any backing —
+        // including compressed, which has no raw CSR view — can be stored.
+        let topo = graph.topology();
+        for &o in topo.out_degree_prefix() {
             w.write_all(&(o as u64).to_le_bytes())?;
         }
-        for &t in targets {
-            w.write_all(&t.to_le_bytes())?;
+        for v in 0..topo.num_vertices() {
+            for (_, t) in topo.out_edges(v as u32) {
+                w.write_all(&t.to_le_bytes())?;
+            }
         }
         for &x in graph.edge_props() {
             w.write_all(&x.to_le_bytes())?;
@@ -107,7 +144,7 @@ impl GraphSink for BinaryFormat {
 mod tests {
     use super::super::tmp_path;
     use super::*;
-    use crate::graph::generate::{random_for_tests};
+    use crate::graph::generate::random_for_tests;
 
     #[test]
     fn roundtrip_random_graph() {
@@ -117,10 +154,22 @@ mod tests {
         let back = BinaryFormat.load(&p).unwrap();
         assert_eq!(back.num_vertices(), g.num_vertices());
         assert_eq!(back.num_edges(), g.num_edges());
-        assert_eq!(back.topology().csr().1, g.topology().csr().1);
+        assert_eq!(back.topology().csr().unwrap().1, g.topology().csr().unwrap().1);
         assert_eq!(back.edge_props(), g.edge_props());
         assert_eq!(back.topology().directed(), g.topology().directed());
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn compressed_backed_graphs_store_identically() {
+        let g = random_for_tests(60, 240, 8);
+        let c = crate::store::snapshot::compress_graph(&g).unwrap();
+        let (p1, p2) = (tmp_path("bin-heap.bin"), tmp_path("bin-comp.bin"));
+        BinaryFormat.store(&g, &p1).unwrap();
+        BinaryFormat.store(&c, &p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
     }
 
     #[test]
@@ -154,5 +203,40 @@ mod tests {
         std::fs::write(&p, &data).unwrap();
         assert!(BinaryFormat.load(&p).is_err());
         let _ = std::fs::remove_file(&p);
+    }
+
+    /// Malformed-file corpus for the v1 reader: forged headers and
+    /// inconsistent offsets must produce typed `Parse` errors — never a
+    /// panic, never a header-sized allocation.
+    #[test]
+    fn malformed_corpus_rejected_with_typed_errors() {
+        let g = random_for_tests(40, 160, 13);
+        let p = tmp_path("bin-corpus.bin");
+        BinaryFormat.store(&g, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        let reject = |name: &str, f: &dyn Fn(&mut Vec<u8>)| {
+            let mut bad = good.clone();
+            f(&mut bad);
+            let bp = tmp_path(&format!("bin-corpus-{name}.bin"));
+            std::fs::write(&bp, &bad).unwrap();
+            let err = BinaryFormat.load(&bp).expect_err(name);
+            assert!(matches!(err, UniGpsError::Parse(_)), "{name}: got {err:?}");
+            let _ = std::fs::remove_file(&bp);
+        };
+
+        // Allocation bomb: absurd vertex count, file length unchanged.
+        reject("forged-nv", &|b| b[8..16].copy_from_slice(&u64::MAX.to_le_bytes()));
+        // Allocation bomb: absurd edge count.
+        reject("forged-ne", &|b| b[16..24].copy_from_slice(&(u32::MAX as u64).to_le_bytes()));
+        // Non-monotone offsets: offsets[1] > ne guarantees a descent
+        // somewhere before the (unchanged) final prefix word.
+        reject("non-monotone-offsets", &|b| {
+            b[40..48].copy_from_slice(&(160u64 + 1).to_le_bytes());
+        });
+        // First offset not zero (same words shifted).
+        reject("nonzero-first-offset", &|b| b[32..40].copy_from_slice(&1u64.to_le_bytes()));
+        // Trailing garbage breaks the exact length equation.
+        reject("trailing-garbage", &|b| b.extend_from_slice(&[0u8; 7]));
     }
 }

@@ -10,7 +10,14 @@
 //! Formats:
 //! * [`edgelist`] — SNAP-style whitespace `src dst [weight]` text.
 //! * [`unigraph`] — the GraphSON-like JSON-lines unified interchange format.
-//! * [`binfmt`] — fast binary snapshot (the "HDFS intermediate" stand-in).
+//! * [`binfmt`] — fast binary snapshots (the "HDFS intermediate"
+//!   stand-in). Two versions share the `.bin` extension, distinguished by
+//!   magic: **v1** is the dense CSR stream described in [`binfmt`]'s doc
+//!   (heap loads only; the CSC mirror is derived at load time), **v2**
+//!   ([`crate::store::snapshot`], written by `unigps pack`) is sectioned
+//!   and page-aligned with a precomputed CSC mirror and optional
+//!   varint-delta compressed adjacency, enabling zero-copy `store = mmap`
+//!   loads. [`binfmt::BinaryFormat`] reads both; it always writes v1.
 
 pub mod binfmt;
 pub mod edgelist;

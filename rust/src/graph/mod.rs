@@ -9,11 +9,65 @@ pub mod io;
 pub mod partition;
 pub mod record;
 
+use crate::store::MappedSlice;
 use crate::vcprog::VertexId;
 use std::sync::Arc;
 
 pub use builder::GraphBuilder;
 pub use csr::Topology;
+
+/// An edge-property column: heap `Vec` (every builder path) or a zero-copy
+/// window over an mmapped snapshot (`store = mmap`, `docs/storage.md`).
+/// Both read as a plain slice; only the heap form counts toward the
+/// snapshot cache's byte budget.
+#[derive(Debug, Clone)]
+pub enum EdgeCol<E> {
+    /// Heap-resident column.
+    Heap(Vec<E>),
+    /// Mapped column (page cache, ~0 heap).
+    Mapped(MappedSlice<E>),
+}
+
+impl<E> EdgeCol<E> {
+    /// The column as a slice (CSR edge order).
+    #[inline]
+    pub fn as_slice(&self) -> &[E] {
+        match self {
+            EdgeCol::Heap(v) => v,
+            EdgeCol::Mapped(m) => m.as_slice(),
+        }
+    }
+
+    /// Number of entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            EdgeCol::Heap(v) => v.len(),
+            EdgeCol::Mapped(m) => m.as_slice().len(),
+        }
+    }
+
+    /// True when no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Process-heap bytes held by the column.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            EdgeCol::Heap(v) => v.len() * std::mem::size_of::<E>(),
+            EdgeCol::Mapped(_) => 0,
+        }
+    }
+
+    /// Mapped (page-cache) bytes held by the column.
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            EdgeCol::Heap(_) => 0,
+            EdgeCol::Mapped(m) => m.mapped_bytes(),
+        }
+    }
+}
 
 /// A property graph: shared immutable topology plus columnar vertex / edge
 /// property arrays (edge properties in CSR order).
@@ -21,7 +75,7 @@ pub use csr::Topology;
 pub struct PropertyGraph<V, E> {
     topology: Arc<Topology>,
     vertex_props: Vec<V>,
-    edge_props: Vec<E>,
+    edge_props: EdgeCol<E>,
 }
 
 /// The session-level default graph type: no vertex input properties, `f64`
@@ -31,13 +85,19 @@ pub type Graph = PropertyGraph<(), f64>;
 impl<V, E> PropertyGraph<V, E> {
     /// Assemble from parts; property arrays must match the topology.
     pub fn new(topology: Arc<Topology>, vertex_props: Vec<V>, edge_props: Vec<E>) -> Self {
+        Self::from_cols(topology, vertex_props, EdgeCol::Heap(edge_props))
+    }
+
+    /// Assemble with an explicit edge column (the mmap snapshot loader
+    /// passes a mapped column; everything else goes through `new`).
+    pub fn from_cols(
+        topology: Arc<Topology>,
+        vertex_props: Vec<V>,
+        edge_props: EdgeCol<E>,
+    ) -> Self {
         assert_eq!(vertex_props.len(), topology.num_vertices());
         assert_eq!(edge_props.len(), topology.num_edges());
-        PropertyGraph {
-            topology,
-            vertex_props,
-            edge_props,
-        }
+        PropertyGraph { topology, vertex_props, edge_props }
     }
 
     /// Number of vertices.
@@ -73,13 +133,32 @@ impl<V, E> PropertyGraph<V, E> {
     /// An edge's property by CSR edge id.
     #[inline]
     pub fn edge_prop(&self, edge_id: usize) -> &E {
-        &self.edge_props[edge_id]
+        &self.edge_props.as_slice()[edge_id]
     }
 
     /// All edge properties (CSR order).
     #[inline]
     pub fn edge_props(&self) -> &[E] {
+        self.edge_props.as_slice()
+    }
+
+    /// The edge column itself (heap/mapped accounting).
+    #[inline]
+    pub fn edge_col(&self) -> &EdgeCol<E> {
         &self.edge_props
+    }
+
+    /// Process-heap bytes of topology + property columns (what the snapshot
+    /// cache budgets on; mapped bytes are tracked separately).
+    pub fn heap_bytes(&self) -> usize {
+        self.topology.heap_bytes()
+            + self.vertex_props.len() * std::mem::size_of::<V>()
+            + self.edge_props.heap_bytes()
+    }
+
+    /// Mapped (page-cache) bytes of topology + property columns.
+    pub fn mapped_bytes(&self) -> usize {
+        self.topology.mapped_bytes() + self.edge_props.mapped_bytes()
     }
 
     /// Map the edge properties, keeping topology and vertex props.
@@ -91,7 +170,7 @@ impl<V, E> PropertyGraph<V, E> {
         PropertyGraph {
             topology: self.topology.clone(),
             vertex_props: self.vertex_props.clone(),
-            edge_props: self.edge_props.iter().map(f).collect(),
+            edge_props: EdgeCol::Heap(self.edge_props.as_slice().iter().map(f).collect()),
         }
     }
 

@@ -92,6 +92,7 @@ pub mod plan;
 pub mod runtime;
 pub mod serve;
 pub mod session;
+pub mod store;
 pub mod util;
 pub mod vcprog;
 

@@ -5,6 +5,7 @@
 //! unigps run --plan pipeline.plan          (multi-stage plan file, see docs/plans.md)
 //! unigps generate --kind rmat --vertices 65536 --edges 1048576 --out g.bin
 //! unigps convert --in g.txt --out g.json
+//! unigps pack g.txt g.bin [--compress]       (binfmt v2 snapshot, mmappable)
 //! unigps info --graph g.bin
 //! unigps ipc-server --transport shm --path /dev/shm/chan   (internal: VCProg runner)
 //! unigps engines
@@ -60,7 +61,7 @@ fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: unigps <run|generate|convert|info|engines|ipc-server|serve|submit|ingest|status|metrics|shutdown|version> [--flags]\n\
+        "usage: unigps <run|generate|convert|pack|info|engines|ipc-server|serve|submit|ingest|status|metrics|shutdown|version> [--flags]\n\
          try: unigps run --algo pagerank --dataset lj --scale 1024 --engine pregel\n\
          or:  unigps serve --socket /tmp/unigps.sock    (then submit/status/shutdown)"
     );
@@ -72,11 +73,12 @@ fn main() -> ExitCode {
     let Some(cmd) = args.first().cloned() else {
         return usage();
     };
-    let (_pos, flags) = parse_flags(&args[1..]);
+    let (pos, flags) = parse_flags(&args[1..]);
     let result = match cmd.as_str() {
         "run" => cmd_run(&flags),
         "generate" => cmd_generate(&flags),
         "convert" => cmd_convert(&flags),
+        "pack" => cmd_pack(&pos, &flags),
         "info" => cmd_info(&flags),
         "engines" => cmd_engines(),
         "ipc-server" => cmd_ipc_server(&flags),
@@ -148,9 +150,9 @@ fn apply_plan_flags(
     plan: &mut unigps::plan::Plan,
     flags: &BTreeMap<String, String>,
 ) -> Result<(), AnyErr> {
-    const PLAN_ONLY: [&str; 13] = [
+    const PLAN_ONLY: [&str; 14] = [
         "algo", "custom", "dataset", "scale", "kind", "vertices", "edges", "seed", "graph",
-        "iterations", "root", "k", "spec",
+        "store", "iterations", "root", "k", "spec",
     ];
     for key in PLAN_ONLY {
         if get(flags, key).is_some() {
@@ -248,6 +250,31 @@ fn cmd_convert(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
         input.display(),
         output.display(),
         g.summary()
+    );
+    Ok(())
+}
+
+/// Pack any loadable graph into a binfmt v2 snapshot (`docs/storage.md`):
+/// page-aligned sections with a precomputed CSC mirror, so a server can
+/// open it with `store = mmap` and never materialize the topology on the
+/// heap. `--compress` writes varint-delta adjacency instead (smaller
+/// file, heap-decoded or streamed via `store = compressed`).
+fn cmd_pack(pos: &[String], flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
+    let (input, output) = match pos {
+        [i, o] => (PathBuf::from(i), PathBuf::from(o)),
+        _ => return Err("usage: unigps pack <in> <out> [--compress]".into()),
+    };
+    let g = Format::from_path(&input).load(&input)?;
+    let compress = get(flags, "compress").is_some();
+    unigps::store::snapshot::pack(&g, &output, compress)?;
+    let packed = std::fs::metadata(&output)?.len();
+    println!(
+        "packed {} ({}) -> {} ({}{})",
+        input.display(),
+        g.summary(),
+        output.display(),
+        unigps::util::fmt_bytes(packed),
+        if compress { ", compressed adjacency" } else { "" },
     );
     Ok(())
 }
@@ -370,10 +397,10 @@ fn spec_from_flags(flags: &BTreeMap<String, String>) -> Result<String, AnyErr> {
     if let Some(path) = get(flags, "spec") {
         return Ok(std::fs::read_to_string(path)?);
     }
-    const SPEC_KEYS: [&str; 19] = [
+    const SPEC_KEYS: [&str; 20] = [
         "algo", "engine", "dataset", "scale", "kind", "vertices", "edges", "seed", "graph",
-        "workers", "partition", "max_iter", "combiner", "pipeline", "step_metrics", "iterations",
-        "root", "k", "delay_ms",
+        "store", "workers", "partition", "max_iter", "combiner", "pipeline", "step_metrics",
+        "iterations", "root", "k", "delay_ms",
     ];
     let mut spec = String::new();
     for key in SPEC_KEYS {
@@ -441,7 +468,7 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
         );
         println!(
             "cache: {} loads, {} hits, {} misses | derived: {} loads, {} hits, {} misses \
-             | {} evictions, {} invalidated, {} resident ({})",
+             | {} evictions, {} invalidated, {} resident ({} heap, {} mapped)",
             s.cache.loads,
             s.cache.hits,
             s.cache.misses,
@@ -452,6 +479,7 @@ fn cmd_status(flags: &BTreeMap<String, String>) -> Result<(), AnyErr> {
             s.cache.invalidated,
             s.cache.resident,
             unigps::util::fmt_bytes(s.cache.resident_bytes),
+            unigps::util::fmt_bytes(s.cache.mapped_resident_bytes),
         );
     }
     Ok(())

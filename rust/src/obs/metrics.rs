@@ -312,6 +312,17 @@ pub struct Registry {
     pub cache_load_us: Histogram,
     /// Derived-snapshot build latency (single-flight winner only).
     pub cache_derive_us: Histogram,
+    // Out-of-core store (`docs/storage.md`).
+    /// Mapped (page-cache) bytes of mmap-backed snapshots resident in the
+    /// cache — excluded from the heap eviction budget.
+    pub cache_mapped_bytes: Gauge,
+    /// `mmap(2)` + section-table parse latency for snapshot loads.
+    pub store_map_us: Histogram,
+    /// Validation-scan latency over a freshly mapped snapshot (doubles as
+    /// the sequential page-in prefault).
+    pub store_pagein_us: Histogram,
+    /// Varint-delta decode/encode latency for compressed backings.
+    pub store_decode_us: Histogram,
     // Delta ingestion (evolving datasets, `docs/evolving.md`).
     /// Delta batches applied (successful `INGEST`s).
     pub ingest_batches: Counter,
@@ -373,6 +384,10 @@ impl Registry {
             cache_resident_bytes: Gauge::new(),
             cache_load_us: Histogram::new(),
             cache_derive_us: Histogram::new(),
+            cache_mapped_bytes: Gauge::new(),
+            store_map_us: Histogram::new(),
+            store_pagein_us: Histogram::new(),
+            store_decode_us: Histogram::new(),
             ingest_batches: Counter::new(),
             ingest_edges_added: Counter::new(),
             ingest_edges_removed: Counter::new(),
@@ -499,6 +514,7 @@ fn gauge_table() -> Vec<(&'static str, &'static Gauge)> {
         ("unigps_jobs_running", &r.jobs_running),
         ("unigps_cache_resident", &r.cache_resident),
         ("unigps_cache_resident_bytes", &r.cache_resident_bytes),
+        ("unigps_cache_mapped_bytes", &r.cache_mapped_bytes),
         ("unigps_ingest_generation", &r.ingest_generation),
     ]
 }
@@ -511,6 +527,9 @@ fn hist_table() -> Vec<(&'static str, &'static Histogram)> {
         ("unigps_sched_run_time_us", &r.sched_run_time_us),
         ("unigps_cache_load_us", &r.cache_load_us),
         ("unigps_cache_derive_us", &r.cache_derive_us),
+        ("unigps_store_map_us", &r.store_map_us),
+        ("unigps_store_pagein_us", &r.store_pagein_us),
+        ("unigps_store_decode_us", &r.store_decode_us),
         ("unigps_ingest_apply_us", &r.ingest_apply_us),
         ("unigps_step_compute_us", &r.step_compute_us),
         ("unigps_step_drain_us", &r.step_drain_us),

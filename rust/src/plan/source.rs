@@ -15,8 +15,10 @@
 use crate::config::Config;
 use crate::error::{Result, UniGpsError};
 use crate::graph::datasets::DatasetSpec;
+use crate::graph::io::Format;
 use crate::graph::Graph;
 use crate::session::Session;
+use crate::store::StoreMode;
 use std::path::PathBuf;
 
 /// Largest synthetic vertex count a spec may request (2^27 ≈ 134M —
@@ -55,8 +57,15 @@ pub enum DatasetRef {
         /// Generator seed.
         seed: u64,
     },
-    /// A graph file on disk (assumed immutable while cached).
-    File(PathBuf),
+    /// A graph file on disk (assumed immutable while cached — for
+    /// `store = mmap` that immutability is load-bearing at the OS level,
+    /// see `docs/storage.md`).
+    File {
+        /// Path to the graph file.
+        path: PathBuf,
+        /// How to hold the graph in memory (`store = heap|mmap|compressed`).
+        store: StoreMode,
+    },
 }
 
 impl DatasetRef {
@@ -70,7 +79,14 @@ impl DatasetRef {
                 edges,
                 seed,
             } => format!("synthetic:{kind}/v{vertices}/e{edges}/s{seed}"),
-            DatasetRef::File(p) => format!("file:{}", p.display()),
+            // Heap keeps the historical key; other modes are distinct
+            // cache entries (their residency accounting differs).
+            DatasetRef::File { path, store: StoreMode::Heap } => {
+                format!("file:{}", path.display())
+            }
+            DatasetRef::File { path, store } => {
+                format!("file:{}?store={}", path.display(), store.as_str())
+            }
         }
     }
 
@@ -88,18 +104,35 @@ impl DatasetRef {
                 edges,
                 seed,
             } => Ok(session.generate(kind, *vertices, *edges, *seed)),
-            DatasetRef::File(p) => {
-                // File sources must honor the same allocation caps as the
-                // synthetic generators — a spec must not be able to point
-                // a resident server at an arbitrarily large file.
-                let len = std::fs::metadata(p)?.len();
-                if len > MAX_GRAPH_FILE_BYTES {
-                    return Err(UniGpsError::Config(format!(
-                        "graph file {} is {len} bytes (limit {MAX_GRAPH_FILE_BYTES})",
-                        p.display()
-                    )));
+            DatasetRef::File { path: p, store } => {
+                // Heap-resident stores must honor the same allocation caps
+                // as the synthetic generators — a spec must not be able to
+                // point a resident server at an arbitrarily large file.
+                // `store = mmap` is exempt: that is the out-of-core point —
+                // the mapped graph costs page cache, not heap.
+                if *store != StoreMode::Mmap {
+                    let len = std::fs::metadata(p)?.len();
+                    if len > MAX_GRAPH_FILE_BYTES {
+                        return Err(UniGpsError::Config(format!(
+                            "graph file {} is {len} bytes (limit {MAX_GRAPH_FILE_BYTES})",
+                            p.display()
+                        )));
+                    }
                 }
-                session.load(p)
+                match store {
+                    StoreMode::Heap => session.load(p),
+                    StoreMode::Mmap => crate::store::snapshot::load(p, StoreMode::Mmap),
+                    StoreMode::Compressed => {
+                        // Binary snapshots decode straight into the
+                        // compressed backing; text formats load through
+                        // the session, then re-encode.
+                        if Format::from_path(p) == Format::Binary {
+                            crate::store::snapshot::load(p, StoreMode::Compressed)
+                        } else {
+                            crate::store::snapshot::compress_graph(&session.load(p)?)
+                        }
+                    }
+                }
             }
         }
     }
@@ -128,8 +161,9 @@ impl DatasetRef {
                 }
             }
             // File sizes are checked at load time (the file can change
-            // between parse and load; `load` stats it under the cap).
-            DatasetRef::File(_) => {}
+            // between parse and load; `load` stats it under the cap,
+            // mmap stores exempted).
+            DatasetRef::File { .. } => {}
         }
         Ok(())
     }
@@ -138,13 +172,21 @@ impl DatasetRef {
     /// allocation caps. `Ok(None)` when the config names no source at all;
     /// a typed [`UniGpsError::Config`] when it names a malformed one.
     pub fn from_config(cfg: &Config) -> Result<Option<DatasetRef>> {
+        let store = match cfg.get("store") {
+            None => StoreMode::Heap,
+            Some(s) => StoreMode::parse(s).ok_or_else(|| {
+                UniGpsError::Config(format!(
+                    "unknown store mode '{s}' (try heap/mmap/compressed)"
+                ))
+            })?,
+        };
         let src = if let Some(key) = cfg.get("dataset") {
             DatasetRef::Named {
                 key: key.to_string(),
                 scale: cfg.get_usize("scale", 64)? as u64,
             }
         } else if let Some(path) = cfg.get("graph") {
-            DatasetRef::File(PathBuf::from(path))
+            DatasetRef::File { path: PathBuf::from(path), store }
         } else if cfg.get("vertices").is_some() || cfg.get("kind").is_some() {
             DatasetRef::Synthetic {
                 kind: cfg.get_or("kind", "rmat"),
@@ -155,6 +197,11 @@ impl DatasetRef {
         } else {
             return Ok(None);
         };
+        if store != StoreMode::Heap && !matches!(src, DatasetRef::File { .. }) {
+            return Err(UniGpsError::Config(
+                "store = mmap|compressed applies to `graph = <path>` sources only".into(),
+            ));
+        }
         src.check_caps()?;
         Ok(Some(src))
     }
@@ -170,7 +217,12 @@ impl DatasetRef {
                 edges,
                 seed,
             } => format!("kind = {kind}\nvertices = {vertices}\nedges = {edges}\nseed = {seed}\n"),
-            DatasetRef::File(p) => format!("graph = {}\n", p.display()),
+            DatasetRef::File { path, store: StoreMode::Heap } => {
+                format!("graph = {}\n", path.display())
+            }
+            DatasetRef::File { path, store } => {
+                format!("graph = {}\nstore = {}\n", path.display(), store.as_str())
+            }
         }
     }
 }
@@ -194,13 +246,35 @@ mod tests {
         for src in [
             DatasetRef::Named { key: "ok".into(), scale: 4096 },
             DatasetRef::Synthetic { kind: "er".into(), vertices: 100, edges: 400, seed: 7 },
-            DatasetRef::File(PathBuf::from("/data/g.bin")),
+            DatasetRef::File { path: PathBuf::from("/data/g.bin"), store: StoreMode::Heap },
+            DatasetRef::File { path: PathBuf::from("/data/g.bin"), store: StoreMode::Mmap },
+            DatasetRef::File { path: PathBuf::from("/data/g.bin"), store: StoreMode::Compressed },
         ] {
             let cfg = Config::parse(&src.to_config_lines()).unwrap();
             assert_eq!(DatasetRef::from_config(&cfg).unwrap(), Some(src));
         }
         let none = Config::parse("algo = pagerank").unwrap();
         assert_eq!(DatasetRef::from_config(&none).unwrap(), None);
+    }
+
+    #[test]
+    fn store_modes_have_distinct_cache_keys() {
+        let make = |store| DatasetRef::File { path: PathBuf::from("/data/g.bin"), store };
+        let heap = make(StoreMode::Heap);
+        assert_eq!(heap.canonical(), "file:/data/g.bin", "heap keeps the historical key");
+        assert_ne!(make(StoreMode::Mmap).canonical(), heap.canonical());
+        assert_ne!(make(StoreMode::Mmap).canonical(), make(StoreMode::Compressed).canonical());
+    }
+
+    #[test]
+    fn store_key_is_validated() {
+        let bad = Config::parse("graph = /data/g.bin\nstore = floppy").unwrap();
+        assert!(matches!(DatasetRef::from_config(&bad).unwrap_err(), UniGpsError::Config(_)));
+        let misplaced = Config::parse("dataset = lj\nstore = mmap").unwrap();
+        assert!(matches!(
+            DatasetRef::from_config(&misplaced).unwrap_err(),
+            UniGpsError::Config(_)
+        ));
     }
 
     #[test]

@@ -58,7 +58,8 @@ pub const OPTION_KEYS: [&str; 9] = [
 ];
 
 /// Keys naming the graph source.
-const SOURCE_KEYS: [&str; 7] = ["dataset", "scale", "kind", "vertices", "edges", "seed", "graph"];
+const SOURCE_KEYS: [&str; 8] =
+    ["dataset", "scale", "kind", "vertices", "edges", "seed", "graph", "store"];
 
 /// True when `text` is in the sectioned plan format (vs the flat
 /// single-op job-spec form).

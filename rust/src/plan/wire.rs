@@ -15,6 +15,7 @@ use crate::operators::Operator;
 use crate::plan::{
     Cmp, DatasetRef, JoinItem, Plan, PlanStep, PostOp, Pred, Stage, StageOp, Transform,
 };
+use crate::store::StoreMode;
 use std::path::PathBuf;
 
 /// Hard cap on steps / post-ops / config keys / join items in a decoded
@@ -74,9 +75,21 @@ fn put_source(out: &mut Vec<u8>, src: &DatasetRef) {
             put_u64(out, *edges as u64);
             put_u64(out, *seed);
         }
-        DatasetRef::File(p) => {
+        // Tag 2 is the historical heap-resident file source; non-heap
+        // store modes ride tag 3 with a trailing mode byte so old peers
+        // keep decoding heap plans unchanged.
+        DatasetRef::File { path, store: StoreMode::Heap } => {
             put_u32(out, 2);
-            put_bytes(out, p.display().to_string().as_bytes());
+            put_bytes(out, path.display().to_string().as_bytes());
+        }
+        DatasetRef::File { path, store } => {
+            put_u32(out, 3);
+            put_bytes(out, path.display().to_string().as_bytes());
+            put_u32(out, match store {
+                StoreMode::Heap => unreachable!("heap handled above"),
+                StoreMode::Mmap => 1,
+                StoreMode::Compressed => 2,
+            });
         }
     }
 }
@@ -93,7 +106,21 @@ fn get_source(buf: &[u8], pos: &mut usize) -> Result<DatasetRef> {
             edges: get_u64(buf, pos)? as usize,
             seed: get_u64(buf, pos)?,
         },
-        2 => DatasetRef::File(PathBuf::from(get_string(buf, pos)?)),
+        2 => DatasetRef::File {
+            path: PathBuf::from(get_string(buf, pos)?),
+            store: StoreMode::Heap,
+        },
+        3 => {
+            let path = PathBuf::from(get_string(buf, pos)?);
+            let store = match get_u32(buf, pos)? {
+                1 => StoreMode::Mmap,
+                2 => StoreMode::Compressed,
+                other => {
+                    return Err(UniGpsError::Ipc(format!("bad store mode code {other}")));
+                }
+            };
+            DatasetRef::File { path, store }
+        }
         other => return Err(UniGpsError::Ipc(format!("bad source tag {other}"))),
     })
 }
@@ -409,10 +436,14 @@ mod tests {
         ] {
             assert_eq!(decode_plan(&encode_plan(&plan)).unwrap(), plan);
         }
-        // Every named source kind survives, including file paths.
+        // Every named source kind survives, including file paths in
+        // every store mode (heap rides the historical tag 2, the rest
+        // tag 3 with a mode byte).
         for src in [
             DatasetRef::Named { key: "uk".into(), scale: 1 },
-            DatasetRef::File(PathBuf::from("/tmp/g.bin")),
+            DatasetRef::File { path: PathBuf::from("/tmp/g.bin"), store: StoreMode::Heap },
+            DatasetRef::File { path: PathBuf::from("/tmp/g.bin"), store: StoreMode::Mmap },
+            DatasetRef::File { path: PathBuf::from("/tmp/g.bin"), store: StoreMode::Compressed },
         ] {
             let plan = Plan::single(Operator::Degrees).source(src);
             assert_eq!(decode_plan(&encode_plan(&plan)).unwrap(), plan);
@@ -441,5 +472,13 @@ mod tests {
         let err = decode_plan(&forged).unwrap_err();
         assert!(matches!(err, UniGpsError::Ipc(_)));
         assert!(err.to_string().contains("limit"), "{err}");
+        // A tag-3 file source with an unknown store-mode code fails typed.
+        let mut forged = Vec::new();
+        put_u32(&mut forged, 1); // has source
+        put_u32(&mut forged, 3); // file-with-store tag
+        put_bytes(&mut forged, b"/tmp/g.bin");
+        put_u32(&mut forged, 99); // bogus store mode
+        let err = decode_plan(&forged).unwrap_err();
+        assert!(matches!(err, UniGpsError::Ipc(_)), "{err:?}");
     }
 }

@@ -98,8 +98,15 @@ pub struct CacheStats {
     pub invalidated: u64,
     /// Snapshots currently resident (either level).
     pub resident: u64,
-    /// Bytes currently resident (either level).
+    /// Heap bytes currently resident (either level). Mapped bytes are
+    /// excluded — they cost page cache, not heap (`docs/storage.md`).
     pub resident_bytes: u64,
+    /// Resident snapshots backed (at least partly) by a mapped file.
+    pub mapped_resident: u64,
+    /// File-mapped bytes behind resident snapshots. Not counted against
+    /// the byte budget: the OS reclaims clean mapped pages under memory
+    /// pressure without the cache's help.
+    pub mapped_resident_bytes: u64,
 }
 
 /// Which counter set a fetch updates.
@@ -109,10 +116,12 @@ enum KeyLevel {
     Derived,
 }
 
-/// Estimated resident size of a graph snapshot: CSR/CSC topology plus the
-/// `f64` edge-property column (vertex props are zero-sized on [`Graph`]).
+/// Estimated resident **heap** size of a graph snapshot: CSR/CSC topology
+/// plus the property columns, excluding file-mapped bytes (an mmap-backed
+/// snapshot is nearly free against the budget — that is the out-of-core
+/// point, see `docs/storage.md`).
 pub fn graph_bytes(g: &Graph) -> usize {
-    g.topology().memory_bytes() + g.edge_props().len() * std::mem::size_of::<f64>()
+    g.heap_bytes()
 }
 
 enum Slot {
@@ -121,7 +130,10 @@ enum Slot {
     /// Resident snapshot.
     Ready {
         graph: Arc<Graph>,
+        /// Heap bytes (counted against the budget).
         bytes: usize,
+        /// File-mapped bytes (tracked for observability only).
+        mapped: usize,
         last_used: u64,
     },
 }
@@ -147,6 +159,7 @@ struct Inner {
     /// Logical clock for LRU ordering.
     tick: u64,
     total_bytes: usize,
+    total_mapped: usize,
     dataset: Counters,
     derived: Counters,
     evictions: u64,
@@ -177,6 +190,7 @@ impl SnapshotCache {
                 slots: HashMap::new(),
                 tick: 0,
                 total_bytes: 0,
+                total_mapped: 0,
                 dataset: Counters::default(),
                 derived: Counters::default(),
                 evictions: 0,
@@ -201,6 +215,11 @@ impl SnapshotCache {
             .values()
             .filter(|s| matches!(s, Slot::Ready { .. }))
             .count() as u64;
+        let mapped_resident = inner
+            .slots
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { mapped, .. } if *mapped > 0))
+            .count() as u64;
         CacheStats {
             loads: inner.dataset.loads,
             hits: inner.dataset.hits,
@@ -212,6 +231,8 @@ impl SnapshotCache {
             invalidated: inner.invalidated,
             resident,
             resident_bytes: inner.total_bytes as u64,
+            mapped_resident,
+            mapped_resident_bytes: inner.total_mapped as u64,
         }
     }
 
@@ -456,16 +477,19 @@ impl SnapshotCache {
         match loaded {
             Ok(g) => {
                 let bytes = graph_bytes(&g);
+                let mapped = g.mapped_bytes();
                 let graph = Arc::new(g);
                 inner.counters(level).loads += 1;
                 inner.tick += 1;
                 let tick = inner.tick;
                 inner.total_bytes += bytes;
+                inner.total_mapped += mapped;
                 inner.slots.insert(
                     key.to_string(),
                     Slot::Ready {
                         graph: graph.clone(),
                         bytes,
+                        mapped,
                         last_used: tick,
                     },
                 );
@@ -485,20 +509,26 @@ impl SnapshotCache {
     }
 
     /// Evict least-recently-used Ready snapshots (never `keep`, never
-    /// in-flight loads) until the resident total fits the budget.
+    /// in-flight loads) until the resident **heap** total fits the budget.
+    /// Snapshots holding no heap bytes — fully mapped ones — are never
+    /// victims: evicting them frees no heap, and their pages are the OS's
+    /// to reclaim (`docs/storage.md`).
     fn evict_over_budget(&self, inner: &mut Inner, keep: &str) {
         while inner.total_bytes > self.budget {
             let victim = inner
                 .slots
                 .iter()
                 .filter_map(|(k, s)| match s {
-                    Slot::Ready { last_used, .. } if k != keep => Some((*last_used, k.clone())),
+                    Slot::Ready { bytes, last_used, .. } if k != keep && *bytes > 0 => {
+                        Some((*last_used, k.clone()))
+                    }
                     _ => None,
                 })
                 .min();
             let Some((_, victim)) = victim else { break };
-            if let Some(Slot::Ready { bytes, .. }) = inner.slots.remove(&victim) {
+            if let Some(Slot::Ready { bytes, mapped, .. }) = inner.slots.remove(&victim) {
                 inner.total_bytes -= bytes;
+                inner.total_mapped -= mapped;
                 inner.evictions += 1;
                 crate::obs::metrics::registry().cache_evictions.inc();
             }
@@ -516,6 +546,7 @@ fn publish_gauges(inner: &Inner) {
         .count() as u64;
     obs.cache_resident.set(resident);
     obs.cache_resident_bytes.set(inner.total_bytes as u64);
+    obs.cache_mapped_bytes.set(inner.total_mapped as u64);
 }
 
 impl std::fmt::Debug for SnapshotCache {
@@ -627,6 +658,40 @@ mod tests {
         assert_eq!(s.evictions, 0);
     }
 
+    /// The out-of-core acceptance shape: an mmap-backed snapshot whose
+    /// mapped bytes dwarf the cache's heap budget stays resident — mapped
+    /// bytes count toward `mapped_resident_bytes`, never toward the
+    /// budget, and a zero-heap snapshot is never an eviction victim.
+    #[test]
+    fn mapped_snapshots_are_excluded_from_the_heap_budget() {
+        let g = small_graph(5);
+        let p = crate::graph::io::tmp_path("cache-mmap.bin");
+        crate::store::snapshot::pack(&g, &p, false).unwrap();
+        // Budget far below the graph's size: a heap-resident copy could
+        // not coexist with anything else; the mapped one costs ~nothing.
+        let cache = SnapshotCache::new(graph_bytes(&g) / 2);
+        let mapped = cache
+            .get_or_load("m", || {
+                crate::store::snapshot::load(&p, crate::store::StoreMode::Mmap)
+            })
+            .unwrap();
+        assert!(mapped.mapped_bytes() > 0);
+        assert_eq!(mapped.heap_bytes(), 0, "mmap snapshot holds no heap");
+        let s = cache.stats();
+        assert_eq!((s.resident, s.mapped_resident, s.evictions), (1, 1, 0));
+        assert!(s.mapped_resident_bytes as usize >= mapped.mapped_bytes());
+        assert_eq!(s.resident_bytes, 0, "mapped bytes excluded from the budgeted total");
+        // A heap insert blowing the budget must not evict the mapped
+        // snapshot: evicting it would free no heap.
+        cache.get_or_load("h", || Ok(small_graph(6))).unwrap();
+        cache
+            .get_or_load("m", || panic!("mapped snapshot must stay resident"))
+            .unwrap();
+        let s = cache.stats();
+        assert_eq!((s.mapped_resident, s.evictions), (1, 0));
+        let _ = std::fs::remove_file(&p);
+    }
+
     #[test]
     fn concurrent_misses_load_exactly_once() {
         let cache = SnapshotCache::new(usize::MAX);
@@ -722,7 +787,7 @@ mod tests {
     }
 
     fn edge_count(g: &Graph) -> usize {
-        g.topology().csr().1.len()
+        g.num_edges()
     }
 
     #[test]

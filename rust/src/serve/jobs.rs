@@ -435,7 +435,13 @@ mod tests {
             }
         );
         let spec = JobSpec::parse("graph = /data/g.bin\nalgo = cc", &base()).unwrap();
-        assert_eq!(spec.dataset(), &DatasetRef::File(PathBuf::from("/data/g.bin")));
+        assert_eq!(
+            spec.dataset(),
+            &DatasetRef::File {
+                path: PathBuf::from("/data/g.bin"),
+                store: crate::store::StoreMode::Heap
+            }
+        );
         assert_eq!(
             spec.plan.stages()[0].op,
             StageOp::Op(Operator::ConnectedComponents)

@@ -82,10 +82,11 @@ pub struct ServeStats {
 }
 
 impl ServeStats {
-    /// Encode for the wire. The invalidation counter travels as a
-    /// trailing field after the historical 16 words, so pre-generation
-    /// decoders (which stop at 16) still parse new frames and new
-    /// decoders accept old 16-word frames (`invalidated` reads as 0).
+    /// Encode for the wire. Post-v1 counters travel as trailing fields
+    /// after the historical 16 words — first `invalidated`, then the two
+    /// mapped-residency words — so older decoders (which stop earlier)
+    /// still parse new frames and new decoders accept old frames (the
+    /// absent trailing counters read as 0).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         for v in [
@@ -106,6 +107,8 @@ impl ServeStats {
             self.jobs.queued as u64,
             self.jobs.running as u64,
             self.cache.invalidated,
+            self.cache.mapped_resident,
+            self.cache.mapped_resident_bytes,
         ] {
             put_u64(&mut out, v);
         }
@@ -128,6 +131,8 @@ impl ServeStats {
                 invalidated: 0,
                 resident: take()?,
                 resident_bytes: take()?,
+                mapped_resident: 0,
+                mapped_resident_bytes: 0,
             },
             jobs: SchedStats {
                 submitted: take()?,
@@ -139,10 +144,14 @@ impl ServeStats {
                 running: take()? as usize,
             },
         };
-        // Trailing optional: absent on frames from servers that predate
-        // generation tracking.
+        // Trailing optionals, in the order they were added to the wire:
+        // absent on frames from servers that predate them.
         if pos < buf.len() {
             stats.cache.invalidated = get_u64(buf, &mut pos)?;
+        }
+        if pos < buf.len() {
+            stats.cache.mapped_resident = get_u64(buf, &mut pos)?;
+            stats.cache.mapped_resident_bytes = get_u64(buf, &mut pos)?;
         }
         Ok(stats)
     }
@@ -529,6 +538,8 @@ mod tests {
                 invalidated: 5,
                 resident: 3,
                 resident_bytes: 123_456,
+                mapped_resident: 2,
+                mapped_resident_bytes: 9_876_543,
             },
             jobs: SchedStats {
                 submitted: 12,
@@ -543,11 +554,17 @@ mod tests {
         assert_eq!(ServeStats::decode(&s.encode()).unwrap(), s);
         assert!(ServeStats::decode(&[0u8; 11]).is_err());
         // Back-compat: a 16-word frame from a pre-generation server
-        // decodes with `invalidated` defaulting to 0.
+        // decodes with every trailing counter defaulting to 0.
         let full = s.encode();
         let decoded = ServeStats::decode(&full[..16 * 8]).unwrap();
         assert_eq!(decoded.cache.invalidated, 0);
+        assert_eq!(decoded.cache.mapped_resident, 0);
+        assert_eq!(decoded.cache.mapped_resident_bytes, 0);
         assert_eq!(decoded.jobs, s.jobs);
+        // A 17-word frame (invalidated, no mapped words) also decodes.
+        let decoded = ServeStats::decode(&full[..17 * 8]).unwrap();
+        assert_eq!(decoded.cache.invalidated, 5);
+        assert_eq!(decoded.cache.mapped_resident, 0);
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Read-only file mappings for out-of-core snapshots.
+//!
+//! [`MapRegion`] maps a whole snapshot file `PROT_READ`/`MAP_SHARED`
+//! through the same hand-rolled FFI binding as [`crate::ipc::shm`] (the
+//! `libc` crate is not vendored offline). The mapping is immutable and
+//! shared by everything that reads through it — the [`Topology`]
+//! backing's section slices and the graph's weight column all hold one
+//! `Arc<MapRegion>`, so the file is mapped exactly once per load and
+//! unmapped when the last reader drops.
+//!
+//! Mapped bytes live in page cache, not on the process heap: the
+//! snapshot cache counts them separately (`CacheStats::mapped_resident_bytes`)
+//! and excludes them from the eviction byte budget. The file is assumed
+//! immutable while mapped (exactly the contract `DatasetRef::File`
+//! already states for cached graphs); truncating a mapped snapshot
+//! out from under a reader is undefined at the OS level (SIGBUS), which
+//! `docs/storage.md` calls out.
+//!
+//! Like `ipc::shm`, the binding declares `off_t` as `i64` and is gated to
+//! 64-bit targets; 32-bit callers get a clean runtime error. Miri has no
+//! mmap support, so the nightly Miri CI job stays scoped past this module
+//! (the pure-Rust varint and layout code is covered by the regular suite).
+//!
+//! [`Topology`]: crate::graph::csr::Topology
+
+use crate::error::{Result, UniGpsError};
+use std::path::Path;
+
+#[cfg(target_pointer_width = "64")]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_SHARED: c_int = 1;
+
+    pub fn map_failed() -> *mut c_void {
+        -1isize as *mut c_void
+    }
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// A read-only mapping of an entire snapshot file.
+pub struct MapRegion {
+    ptr: *const u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is read-only (`PROT_READ`) for its whole lifetime —
+// no writer exists, so concurrent reads from any thread are race-free.
+unsafe impl Send for MapRegion {}
+// SAFETY: as above — immutable bytes are safely shared across threads.
+unsafe impl Sync for MapRegion {}
+
+impl MapRegion {
+    /// Map `path` read-only in its entirety. Empty files are refused (a
+    /// zero-length mmap is EINVAL; no valid snapshot is empty).
+    #[cfg(target_pointer_width = "64")]
+    pub fn open(path: &Path) -> Result<MapRegion> {
+        use std::os::unix::io::AsRawFd;
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            return Err(UniGpsError::Parse(format!("{} is empty", path.display())));
+        }
+        let len = usize::try_from(len)
+            .map_err(|_| UniGpsError::Parse(format!("{} too large to map", path.display())))?;
+        // SAFETY: standard read-only mmap of an open, sized file; the
+        // failure sentinel is checked below and the fd may close after
+        // mmap returns (the mapping keeps its own reference).
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::map_failed() {
+            return Err(UniGpsError::Io(std::io::Error::last_os_error()));
+        }
+        Ok(MapRegion { ptr: ptr as *const u8, len })
+    }
+
+    /// 32-bit stub: same clean error as [`crate::ipc::shm::ShmMap`].
+    #[cfg(not(target_pointer_width = "64"))]
+    pub fn open(path: &Path) -> Result<MapRegion> {
+        Err(UniGpsError::Config(format!(
+            "mmap-backed snapshot {} requires a 64-bit target \
+             (hand-rolled mmap binding assumes 64-bit off_t)",
+            path.display()
+        )))
+    }
+
+    /// Mapped length in bytes.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when zero-length (never for successfully opened regions).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The whole mapping as bytes.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: ptr/len come from a successful mmap held alive by
+        // `self`; the mapping is read-only and never remapped.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// A typed window at `offset` covering `len` elements. `T` must be a
+    /// plain little-endian word type (u32/u64/usize/f64 — the only
+    /// instantiations in this crate); the caller (the snapshot loader)
+    /// has already verified that `[offset, offset + len*size_of::<T>())`
+    /// is in bounds and `offset` is aligned for `T` — both are rechecked
+    /// here so a logic slip fails closed instead of reading wild.
+    #[inline]
+    pub(crate) fn typed_slice<T>(&self, offset: usize, len: usize) -> &[T] {
+        let size = std::mem::size_of::<T>();
+        let end = offset.checked_add(len.checked_mul(size).expect("section size overflow"));
+        assert!(end.is_some_and(|e| e <= self.len), "section window out of bounds");
+        assert_eq!(offset % std::mem::align_of::<T>(), 0, "section window misaligned");
+        // SAFETY: bounds and alignment asserted above; the bytes are
+        // immutable for the mapping's lifetime and every instantiated T
+        // is a plain word type valid for any bit pattern.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(offset) as *const T, len) }
+    }
+}
+
+impl Drop for MapRegion {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len came from the successful mmap in `open` (the
+        // only constructor on 64-bit targets; 32-bit never constructs).
+        #[cfg(target_pointer_width = "64")]
+        unsafe {
+            sys::munmap(self.ptr as *mut std::os::raw::c_void, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for MapRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MapRegion").field("len", &self.len).finish()
+    }
+}
+
+/// A zero-copy typed column over a shared [`MapRegion`] — the mapped
+/// counterpart of a `Vec<T>` property column. Holding the `Arc` keeps
+/// the mapping alive for as long as any graph clone references it.
+#[derive(Debug, Clone)]
+pub struct MappedSlice<T> {
+    region: std::sync::Arc<MapRegion>,
+    offset: usize,
+    len: usize,
+    _marker: std::marker::PhantomData<fn() -> T>,
+}
+
+impl<T> MappedSlice<T> {
+    /// Wrap a validated section window (bounds/alignment are rechecked
+    /// by [`MapRegion::typed_slice`] on every access). `T: Copy` guards
+    /// construction: only plain word types may view mapped bytes.
+    pub(crate) fn new(region: std::sync::Arc<MapRegion>, offset: usize, len: usize) -> Self
+    where
+        T: Copy,
+    {
+        // Fail closed at construction too, not only on first read.
+        let _ = region.typed_slice::<T>(offset, len);
+        MappedSlice { region, offset, len, _marker: std::marker::PhantomData }
+    }
+
+    /// The window as a slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        self.region.typed_slice(self.offset, self.len)
+    }
+
+    /// Bytes held by the mapping window (page cache, not heap).
+    pub fn mapped_bytes(&self) -> usize {
+        self.len * std::mem::size_of::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        crate::graph::io::tmp_path(name)
+    }
+
+    #[test]
+    fn maps_whole_file_read_only() {
+        let p = tmp("map-ro.bin");
+        let data: Vec<u8> = (0..8192u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&p, &data).unwrap();
+        let region = MapRegion::open(&p).unwrap();
+        assert_eq!(region.len(), data.len());
+        assert_eq!(region.bytes(), &data[..]);
+        let words: &[u64] = region.typed_slice(0, data.len() / 8);
+        assert_eq!(words.len(), 1024);
+        drop(region);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn rejects_empty_and_missing_files() {
+        let p = tmp("map-empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        assert!(MapRegion::open(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+        assert!(MapRegion::open(&p).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn typed_slice_rechecks_bounds() {
+        let p = tmp("map-oob.bin");
+        std::fs::write(&p, vec![0u8; 64]).unwrap();
+        let region = MapRegion::open(&p).unwrap();
+        let path = p.clone();
+        let _guard = scopeguard(move || {
+            let _ = std::fs::remove_file(&path);
+        });
+        let _ = region.typed_slice::<u64>(0, 9);
+    }
+
+    fn scopeguard<F: FnMut()>(f: F) -> impl Drop {
+        struct G<F: FnMut()>(F);
+        impl<F: FnMut()> Drop for G<F> {
+            fn drop(&mut self) {
+                (self.0)();
+            }
+        }
+        G(f)
+    }
+}

@@ -1,0 +1,331 @@
+//! Out-of-core storage: pluggable [`Topology`] backings + packed snapshots.
+//!
+//! The paper's headline claim is processing "big graphs beyond the memory
+//! capacity of a single machine"; this layer is the repo's out-of-core
+//! substrate. A [`Topology`](crate::graph::csr::Topology) no longer owns
+//! `Vec`s directly — it reads CSR/CSC through a [`TopologySource`]
+//! backing, of which there are three:
+//!
+//! * [`HeapBacking`] — today's `Vec`-backed arrays. The default for every
+//!   builder/generator/loader path; zero behavior or performance change.
+//! * [`MmapBacking`] — zero-copy slices over a page-aligned **binfmt v2**
+//!   snapshot ([`snapshot`]) mapped read-only via [`mmap::MapRegion`].
+//!   The file carries a precomputed CSC mirror, so loading never
+//!   materializes anything graph-sized on the heap: the graph's resident
+//!   cost is page cache, which the snapshot cache tracks separately from
+//!   its heap byte budget.
+//! * [`CompressedBacking`] — varint-delta adjacency ([`varint`]) with
+//!   per-block skip offsets, for memory-constrained *resident* use.
+//!   Offsets stay raw (`out_degree_prefix` keeps its O(1) contract);
+//!   target/source/edge-id streams decode through row cursors.
+//!
+//! All three produce **bit-identical** results through every engine:
+//! the compressed encoding is order-preserving (delta from the previous
+//! stored value, not a sorted canonical form), so message fold order —
+//! and therefore every f64 — matches the heap backing exactly. This is
+//! property-tested in `rust/tests/store_backing.rs`.
+//!
+//! Selection is wired through the stack as `store = heap|mmap|compressed`
+//! ([`StoreMode`]) on `DatasetRef` file sources and the `unigps pack`
+//! CLI writes the v2 snapshots. See `docs/storage.md`.
+
+pub mod mmap;
+pub mod snapshot;
+pub mod varint;
+
+use crate::error::{Result, UniGpsError};
+use crate::graph::csr::Topology;
+use crate::vcprog::VertexId;
+pub use mmap::{MapRegion, MappedSlice};
+pub use varint::{CompressedSeq, SeqCursor};
+
+/// How a file-sourced graph is held in memory (`store = …` in specs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StoreMode {
+    /// Fully heap-resident `Vec` arrays (the historical behavior).
+    #[default]
+    Heap,
+    /// Zero-copy mmap of a binfmt v2 snapshot (page cache, ~0 heap).
+    Mmap,
+    /// Varint-delta compressed adjacency, heap-resident but small.
+    Compressed,
+}
+
+impl StoreMode {
+    /// Parse a `store =` config value.
+    pub fn parse(s: &str) -> Option<StoreMode> {
+        match s {
+            "heap" => Some(StoreMode::Heap),
+            "mmap" => Some(StoreMode::Mmap),
+            "compressed" => Some(StoreMode::Compressed),
+            _ => None,
+        }
+    }
+
+    /// The config spelling [`StoreMode::parse`] accepts.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StoreMode::Heap => "heap",
+            StoreMode::Mmap => "mmap",
+            StoreMode::Compressed => "compressed",
+        }
+    }
+}
+
+/// What a backing exposes to [`Topology`](crate::graph::csr::Topology):
+/// always-raw offset prefixes (every backing keeps both offset arrays as
+/// plain word slices — heap `Vec`, mapped section, or resident `Vec`
+/// next to compressed streams) plus the adjacency payload, which is
+/// either raw slices or compressed streams ([`Adjacency`]).
+pub trait TopologySource {
+    /// CSR row offsets, length `num_vertices + 1`.
+    fn out_offsets(&self) -> &[usize];
+    /// CSC row offsets, length `num_vertices + 1`.
+    fn in_offsets(&self) -> &[usize];
+    /// The adjacency payload.
+    fn adjacency(&self) -> Adjacency<'_>;
+    /// Process-heap bytes held by this backing.
+    fn heap_bytes(&self) -> usize;
+    /// Mapped (page-cache) bytes held by this backing.
+    fn mapped_bytes(&self) -> usize;
+    /// Which store mode this backing implements.
+    fn mode(&self) -> StoreMode;
+}
+
+/// Adjacency payload of a backing: raw slices (heap and mmap) or
+/// compressed streams decoded through row cursors.
+pub enum Adjacency<'a> {
+    /// Directly indexable arrays.
+    Raw {
+        /// CSR edge targets, length `num_edges`.
+        out_targets: &'a [VertexId],
+        /// CSC edge sources, length `num_edges`.
+        in_sources: &'a [VertexId],
+        /// CSR edge id of each CSC slot, length `num_edges`.
+        in_edge_ids: &'a [usize],
+    },
+    /// Varint-delta streams (same three arrays, compressed).
+    Packed {
+        /// CSR edge targets.
+        out_targets: &'a CompressedSeq,
+        /// CSC edge sources.
+        in_sources: &'a CompressedSeq,
+        /// CSR edge id of each CSC slot.
+        in_edge_ids: &'a CompressedSeq,
+    },
+}
+
+/// The historical `Vec`-backed arrays (zero-regression default).
+#[derive(Debug, Clone)]
+pub struct HeapBacking {
+    pub(crate) out_offsets: Vec<usize>,
+    pub(crate) out_targets: Vec<VertexId>,
+    pub(crate) in_offsets: Vec<usize>,
+    pub(crate) in_sources: Vec<VertexId>,
+    pub(crate) in_edge_ids: Vec<usize>,
+}
+
+impl TopologySource for HeapBacking {
+    fn out_offsets(&self) -> &[usize] {
+        &self.out_offsets
+    }
+    fn in_offsets(&self) -> &[usize] {
+        &self.in_offsets
+    }
+    fn adjacency(&self) -> Adjacency<'_> {
+        Adjacency::Raw {
+            out_targets: &self.out_targets,
+            in_sources: &self.in_sources,
+            in_edge_ids: &self.in_edge_ids,
+        }
+    }
+    fn heap_bytes(&self) -> usize {
+        self.out_offsets.len() * 8
+            + self.out_targets.len() * 4
+            + self.in_offsets.len() * 8
+            + self.in_sources.len() * 4
+            + self.in_edge_ids.len() * 8
+    }
+    fn mapped_bytes(&self) -> usize {
+        0
+    }
+    fn mode(&self) -> StoreMode {
+        StoreMode::Heap
+    }
+}
+
+/// Zero-copy slices over a mapped binfmt v2 snapshot. Every array is a
+/// window into the shared [`MapRegion`]; nothing graph-sized lives on
+/// the heap. Clones share the mapping (`Arc`).
+#[derive(Debug, Clone)]
+pub struct MmapBacking {
+    pub(crate) region: std::sync::Arc<MapRegion>,
+    /// `(byte offset, element count)` windows into the region.
+    pub(crate) out_offsets: (usize, usize),
+    pub(crate) out_targets: (usize, usize),
+    pub(crate) in_offsets: (usize, usize),
+    pub(crate) in_sources: (usize, usize),
+    pub(crate) in_edge_ids: (usize, usize),
+}
+
+impl TopologySource for MmapBacking {
+    fn out_offsets(&self) -> &[usize] {
+        self.region.typed_slice(self.out_offsets.0, self.out_offsets.1)
+    }
+    fn in_offsets(&self) -> &[usize] {
+        self.region.typed_slice(self.in_offsets.0, self.in_offsets.1)
+    }
+    fn adjacency(&self) -> Adjacency<'_> {
+        Adjacency::Raw {
+            out_targets: self.region.typed_slice(self.out_targets.0, self.out_targets.1),
+            in_sources: self.region.typed_slice(self.in_sources.0, self.in_sources.1),
+            in_edge_ids: self.region.typed_slice(self.in_edge_ids.0, self.in_edge_ids.1),
+        }
+    }
+    fn heap_bytes(&self) -> usize {
+        0
+    }
+    fn mapped_bytes(&self) -> usize {
+        (self.out_offsets.1 + self.in_offsets.1 + self.in_edge_ids.1) * 8
+            + (self.out_targets.1 + self.in_sources.1) * 4
+    }
+    fn mode(&self) -> StoreMode {
+        StoreMode::Mmap
+    }
+}
+
+/// Varint-delta compressed adjacency; offsets stay raw so degree math
+/// and `out_degree_prefix` keep their O(1) contracts.
+#[derive(Debug, Clone)]
+pub struct CompressedBacking {
+    pub(crate) out_offsets: Vec<usize>,
+    pub(crate) in_offsets: Vec<usize>,
+    pub(crate) out_targets: CompressedSeq,
+    pub(crate) in_sources: CompressedSeq,
+    pub(crate) in_edge_ids: CompressedSeq,
+}
+
+impl CompressedBacking {
+    /// Encode raw CSR/CSC arrays (order-preserving; see module doc).
+    pub(crate) fn encode(
+        out_offsets: Vec<usize>,
+        out_targets: &[VertexId],
+        in_offsets: Vec<usize>,
+        in_sources: &[VertexId],
+        in_edge_ids: &[usize],
+    ) -> CompressedBacking {
+        CompressedBacking {
+            out_targets: CompressedSeq::encode(out_targets.iter().map(|&t| t as u64)),
+            in_sources: CompressedSeq::encode(in_sources.iter().map(|&s| s as u64)),
+            in_edge_ids: CompressedSeq::encode(in_edge_ids.iter().map(|&e| e as u64)),
+            out_offsets,
+            in_offsets,
+        }
+    }
+}
+
+impl TopologySource for CompressedBacking {
+    fn out_offsets(&self) -> &[usize] {
+        &self.out_offsets
+    }
+    fn in_offsets(&self) -> &[usize] {
+        &self.in_offsets
+    }
+    fn adjacency(&self) -> Adjacency<'_> {
+        Adjacency::Packed {
+            out_targets: &self.out_targets,
+            in_sources: &self.in_sources,
+            in_edge_ids: &self.in_edge_ids,
+        }
+    }
+    fn heap_bytes(&self) -> usize {
+        (self.out_offsets.len() + self.in_offsets.len()) * 8
+            + self.out_targets.heap_bytes()
+            + self.in_sources.heap_bytes()
+            + self.in_edge_ids.heap_bytes()
+    }
+    fn mapped_bytes(&self) -> usize {
+        0
+    }
+    fn mode(&self) -> StoreMode {
+        StoreMode::Compressed
+    }
+}
+
+/// The closed set of backings a [`Topology`](crate::graph::csr::Topology)
+/// dispatches over (static dispatch; the enum is the `dyn`-free form of
+/// the [`TopologySource`] abstraction).
+#[derive(Debug, Clone)]
+pub enum Backing {
+    /// Heap `Vec`s.
+    Heap(HeapBacking),
+    /// Mapped binfmt v2 snapshot.
+    Mmap(MmapBacking),
+    /// Varint-delta compressed.
+    Compressed(CompressedBacking),
+}
+
+impl Backing {
+    /// The backing as its trait surface.
+    #[inline]
+    pub fn source(&self) -> &dyn TopologySource {
+        match self {
+            Backing::Heap(b) => b,
+            Backing::Mmap(b) => b,
+            Backing::Compressed(b) => b,
+        }
+    }
+
+    /// CSR row offsets (always raw, whatever the backing).
+    #[inline]
+    pub fn out_offsets(&self) -> &[usize] {
+        match self {
+            Backing::Heap(b) => &b.out_offsets,
+            Backing::Mmap(b) => b.out_offsets(),
+            Backing::Compressed(b) => &b.out_offsets,
+        }
+    }
+
+    /// CSC row offsets (always raw, whatever the backing).
+    #[inline]
+    pub fn in_offsets(&self) -> &[usize] {
+        match self {
+            Backing::Heap(b) => &b.in_offsets,
+            Backing::Mmap(b) => b.in_offsets(),
+            Backing::Compressed(b) => &b.in_offsets,
+        }
+    }
+
+    /// The adjacency payload.
+    #[inline]
+    pub fn adjacency(&self) -> Adjacency<'_> {
+        self.source().adjacency()
+    }
+}
+
+/// Re-encode a heap/mmap topology's adjacency into the compressed
+/// backing (the `store = compressed` path for inputs that are not
+/// already packed compressed). Offsets are copied raw.
+pub fn compress_topology(topo: &Topology) -> Result<Topology> {
+    let timer = crate::util::timer::Timer::start();
+    let nv = topo.num_vertices();
+    let out_offsets = topo.out_degree_prefix().to_vec();
+    let in_offsets = topo.in_degree_prefix().to_vec();
+    let backing = match topo.backing().adjacency() {
+        Adjacency::Raw { out_targets, in_sources, in_edge_ids } => CompressedBacking::encode(
+            out_offsets,
+            out_targets,
+            in_offsets,
+            in_sources,
+            in_edge_ids,
+        ),
+        Adjacency::Packed { .. } => {
+            return Err(UniGpsError::Config("topology is already compressed".into()))
+        }
+    };
+    let us = timer.elapsed().as_micros() as u64;
+    if us > 0 {
+        crate::obs::metrics::registry().store_decode_us.observe_us(us);
+    }
+    Ok(Topology::from_backing(nv, topo.directed(), Backing::Compressed(backing)))
+}

@@ -1,0 +1,722 @@
+//! Binfmt v2: page-aligned, sectioned graph snapshots.
+//!
+//! The v1 layout (`graph::io::binfmt`) is a dense CSR stream: fine for
+//! heap loads, useless for mmap (no CSC mirror — load must materialize it
+//! on the heap, defeating out-of-core). V2 fixes that with a section
+//! table and 4096-byte alignment so every array can be viewed in place:
+//!
+//! ```text
+//! magic  u64  = 0x55_4E_49_47_50_53_42_32   ("UNIGPSB2")
+//! nv     u64
+//! ne     u64
+//! flags  u64  (bit0 = directed, bit1 = compressed adjacency)
+//! nsect  u64
+//! nsect × { id u64, off u64, len u64 }      (section table)
+//! ...sections, each at a 4096-aligned offset, zero-padded between
+//! ```
+//!
+//! Raw layout (`flags & 2 == 0`, required for `store = mmap`):
+//!
+//! | id | section      | bytes        |
+//! |----|--------------|--------------|
+//! | 1  | out_offsets  | (nv+1) × u64 |
+//! | 2  | out_targets  | ne × u32     |
+//! | 3  | weights      | ne × f64     |
+//! | 4  | in_offsets   | (nv+1) × u64 |
+//! | 5  | in_sources   | ne × u32     |
+//! | 6  | in_edge_ids  | ne × u64     |
+//!
+//! Compressed layout (`flags & 2 != 0`) replaces sections 2/5/6 with
+//! 7/8/9: [`CompressedSeq::to_bytes`] blobs of the same arrays (offsets
+//! and weights stay raw — offset prefixes must stay O(1) and weights are
+//! f64 noise that varints don't help).
+//!
+//! Loading is fail-closed: the section table is checked against the real
+//! file length **before any allocation** (a forged header cannot
+//! allocation-bomb the process), then a full scan rejects non-monotone
+//! offsets, out-of-range targets/sources, and a CSC mirror that is not a
+//! permutation of the CSR edge ids. On the mmap path that scan doubles as
+//! the sequential page-in prefault and is timed (`unigps_store_pagein_us`).
+
+use crate::error::{Result, UniGpsError};
+use crate::graph::csr::Topology;
+use crate::graph::{EdgeCol, Graph, PropertyGraph};
+use crate::store::{
+    compress_topology, Adjacency, Backing, CompressedBacking, CompressedSeq, HeapBacking,
+    MapRegion, MappedSlice, StoreMode, TopologySource,
+};
+use crate::util::timer::Timer;
+use crate::vcprog::VertexId;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+/// V2 magic ("UNIGPSB2"; v1 is ...B1).
+pub const MAGIC_V2: u64 = 0x554E_4947_5053_4232;
+
+/// Section alignment: one page, so any mapped section is aligned for
+/// every element type it can hold.
+const ALIGN: u64 = 4096;
+
+const FLAG_DIRECTED: u64 = 1;
+const FLAG_COMPRESSED: u64 = 2;
+
+const SEC_OUT_OFFSETS: u64 = 1;
+const SEC_OUT_TARGETS: u64 = 2;
+const SEC_WEIGHTS: u64 = 3;
+const SEC_IN_OFFSETS: u64 = 4;
+const SEC_IN_SOURCES: u64 = 5;
+const SEC_IN_EDGE_IDS: u64 = 6;
+const SEC_C_OUT_TARGETS: u64 = 7;
+const SEC_C_IN_SOURCES: u64 = 8;
+const SEC_C_IN_EDGE_IDS: u64 = 9;
+
+/// Decoder cap on the section count — both layouts use 6; anything
+/// larger is a corrupt or hostile table.
+const MAX_SECTIONS: u64 = 16;
+
+fn parse_err(path: &Path, what: impl std::fmt::Display) -> UniGpsError {
+    UniGpsError::Parse(format!("{}: {what}", path.display()))
+}
+
+fn align_up(x: u64) -> u64 {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+fn push_u64s(out: &mut Vec<u8>, words: impl Iterator<Item = u64>) {
+    for w in words {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+}
+
+/// Little-endian u64 at byte offset `i` (bounds already established).
+fn u64_at(b: &[u8], i: usize) -> u64 {
+    let mut a = [0u8; 8];
+    a.copy_from_slice(&b[i..i + 8]);
+    u64::from_le_bytes(a)
+}
+
+/// Write `graph` as a binfmt v2 snapshot. `compress` selects the
+/// varint-delta adjacency layout (not mappable; for `store = compressed`
+/// cold starts that skip the encode pass).
+pub fn pack(graph: &Graph, path: &Path, compress: bool) -> Result<()> {
+    let topo = graph.topology();
+    let nv = topo.num_vertices();
+    let ne = topo.num_edges();
+    let mut flags = if topo.directed() { FLAG_DIRECTED } else { 0 };
+
+    let mut out_offsets = Vec::with_capacity((nv + 1) * 8);
+    push_u64s(&mut out_offsets, topo.out_degree_prefix().iter().map(|&o| o as u64));
+    let mut in_offsets = Vec::with_capacity((nv + 1) * 8);
+    push_u64s(&mut in_offsets, topo.in_degree_prefix().iter().map(|&o| o as u64));
+    let mut weights = Vec::with_capacity(ne * 8);
+    for &w in graph.edge_props() {
+        weights.extend_from_slice(&w.to_le_bytes());
+    }
+
+    let mut sections: Vec<(u64, Vec<u8>)> = vec![
+        (SEC_OUT_OFFSETS, out_offsets),
+        (SEC_WEIGHTS, weights),
+        (SEC_IN_OFFSETS, in_offsets),
+    ];
+
+    if compress {
+        flags |= FLAG_COMPRESSED;
+        let timer = Timer::start();
+        let (t, s, e) = match topo.backing().adjacency() {
+            Adjacency::Raw { out_targets, in_sources, in_edge_ids } => (
+                CompressedSeq::encode(out_targets.iter().map(|&x| x as u64)),
+                CompressedSeq::encode(in_sources.iter().map(|&x| x as u64)),
+                CompressedSeq::encode(in_edge_ids.iter().map(|&x| x as u64)),
+            ),
+            Adjacency::Packed { out_targets, in_sources, in_edge_ids } => {
+                (out_targets.clone(), in_sources.clone(), in_edge_ids.clone())
+            }
+        };
+        crate::obs::metrics::registry().store_decode_us.observe(timer.elapsed());
+        sections.push((SEC_C_OUT_TARGETS, t.to_bytes()));
+        sections.push((SEC_C_IN_SOURCES, s.to_bytes()));
+        sections.push((SEC_C_IN_EDGE_IDS, e.to_bytes()));
+    } else {
+        let (mut targets, mut sources, mut eids) =
+            (Vec::with_capacity(ne * 4), Vec::with_capacity(ne * 4), Vec::with_capacity(ne * 8));
+        match topo.backing().adjacency() {
+            Adjacency::Raw { out_targets, in_sources, in_edge_ids } => {
+                for &t in out_targets {
+                    targets.extend_from_slice(&t.to_le_bytes());
+                }
+                for &s in in_sources {
+                    sources.extend_from_slice(&s.to_le_bytes());
+                }
+                push_u64s(&mut eids, in_edge_ids.iter().map(|&e| e as u64));
+            }
+            Adjacency::Packed { out_targets, in_sources, in_edge_ids } => {
+                for t in out_targets.decode_all() {
+                    targets.extend_from_slice(&(t as u32).to_le_bytes());
+                }
+                for s in in_sources.decode_all() {
+                    sources.extend_from_slice(&(s as u32).to_le_bytes());
+                }
+                push_u64s(&mut eids, in_edge_ids.decode_all().into_iter());
+            }
+        }
+        sections.push((SEC_OUT_TARGETS, targets));
+        sections.push((SEC_IN_SOURCES, sources));
+        sections.push((SEC_IN_EDGE_IDS, eids));
+    }
+    sections.sort_by_key(|(id, _)| *id);
+
+    // Lay out: header + table, then each section at the next page boundary.
+    let mut cursor = align_up(40 + sections.len() as u64 * 24);
+    let mut table = Vec::with_capacity(sections.len());
+    for (id, bytes) in &sections {
+        table.push((*id, cursor, bytes.len() as u64));
+        cursor = align_up(cursor + bytes.len() as u64);
+    }
+
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(&MAGIC_V2.to_le_bytes())?;
+    w.write_all(&(nv as u64).to_le_bytes())?;
+    w.write_all(&(ne as u64).to_le_bytes())?;
+    w.write_all(&flags.to_le_bytes())?;
+    w.write_all(&(sections.len() as u64).to_le_bytes())?;
+    for &(id, off, len) in &table {
+        w.write_all(&id.to_le_bytes())?;
+        w.write_all(&off.to_le_bytes())?;
+        w.write_all(&len.to_le_bytes())?;
+    }
+    let mut written = 40 + sections.len() as u64 * 24;
+    for ((_, bytes), &(_, off, _)) in sections.iter().zip(&table) {
+        w.write_all(&vec![0u8; (off - written) as usize])?;
+        w.write_all(bytes)?;
+        written = off + bytes.len() as u64;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a snapshot (v1 or v2, detected by magic) into the requested
+/// backing. The v1 stream can only feed heap and compressed backings;
+/// `store = mmap` requires a packed v2 raw file.
+pub fn load(path: &Path, mode: StoreMode) -> Result<Graph> {
+    let magic = {
+        use std::io::Read;
+        let mut b = [0u8; 8];
+        std::fs::File::open(path)?
+            .read_exact(&mut b)
+            .map_err(|_| parse_err(path, "shorter than a snapshot magic"))?;
+        u64::from_le_bytes(b)
+    };
+    match magic {
+        crate::graph::io::binfmt::MAGIC => {
+            use crate::graph::io::GraphSource;
+            match mode {
+                StoreMode::Heap => crate::graph::io::binfmt::BinaryFormat.load(path),
+                StoreMode::Compressed => {
+                    let g = crate::graph::io::binfmt::BinaryFormat.load(path)?;
+                    compress_graph(&g)
+                }
+                StoreMode::Mmap => Err(UniGpsError::Config(format!(
+                    "{} is a binfmt v1 snapshot; `store = mmap` needs the page-aligned \
+                     v2 layout — repack it with `unigps pack`",
+                    path.display()
+                ))),
+            }
+        }
+        MAGIC_V2 => load_v2(path, mode),
+        _ => Err(parse_err(path, "bad magic (not a UniGPS snapshot)")),
+    }
+}
+
+/// Re-back a heap/mmap graph onto the compressed backing.
+pub fn compress_graph(g: &Graph) -> Result<Graph> {
+    let topo = compress_topology(g.topology())?;
+    Ok(PropertyGraph::new(Arc::new(topo), vec![(); g.num_vertices()], g.edge_props().to_vec()))
+}
+
+/// The parsed, length-checked v2 header + section table.
+struct Layout {
+    nv: usize,
+    ne: usize,
+    directed: bool,
+    compressed: bool,
+    /// `(id, byte offset, byte length)`, each fully inside the file.
+    sections: Vec<(u64, usize, usize)>,
+}
+
+impl Layout {
+    /// Parse from the file's first bytes; every count is validated
+    /// against `file_len` before the caller allocates anything.
+    fn parse(head: &[u8], file_len: u64, path: &Path) -> Result<Layout> {
+        if head.len() < 40 {
+            return Err(parse_err(path, "truncated v2 header"));
+        }
+        debug_assert_eq!(u64_at(head, 0), MAGIC_V2);
+        let nv = u64_at(head, 8);
+        let ne = u64_at(head, 16);
+        let flags = u64_at(head, 24);
+        let nsect = u64_at(head, 32);
+        // Targets/sources are u32; counts must also be plausible against
+        // the real file length (the allocation cap: a raw snapshot stores
+        // >= 4 bytes per edge and 8 per offset word).
+        if nv > u32::MAX as u64 {
+            return Err(parse_err(path, format!("vertex count {nv} exceeds u32 ids")));
+        }
+        if (nv + 1) * 8 > file_len || ne / 2 > file_len {
+            return Err(parse_err(
+                path,
+                format!("header claims {nv} vertices / {ne} edges in a {file_len}-byte file"),
+            ));
+        }
+        if nsect > MAX_SECTIONS {
+            return Err(parse_err(path, format!("implausible section count {nsect}")));
+        }
+        let table_end = 40 + nsect * 24;
+        if head.len() < table_end as usize {
+            return Err(parse_err(path, "truncated section table"));
+        }
+        let mut sections = Vec::with_capacity(nsect as usize);
+        for i in 0..nsect as usize {
+            let id = u64_at(head, 40 + i * 24);
+            let off = u64_at(head, 48 + i * 24);
+            let len = u64_at(head, 56 + i * 24);
+            if off % ALIGN != 0 {
+                return Err(parse_err(path, format!("section {id} offset {off} not page-aligned")));
+            }
+            let in_file = off >= table_end
+                && matches!(off.checked_add(len), Some(end) if end <= file_len);
+            if !in_file {
+                return Err(parse_err(
+                    path,
+                    format!("section {id} [{off}, +{len}) outside the {file_len}-byte file"),
+                ));
+            }
+            if sections.iter().any(|&(other, _, _)| other == id) {
+                return Err(parse_err(path, format!("duplicate section {id}")));
+            }
+            sections.push((id, off as usize, len as usize));
+        }
+        Ok(Layout {
+            nv: nv as usize,
+            ne: ne as usize,
+            directed: flags & FLAG_DIRECTED != 0,
+            compressed: flags & FLAG_COMPRESSED != 0,
+            sections,
+        })
+    }
+
+    /// A required section's `(offset, len)`, length-checked against the
+    /// exact expected byte count (`None` expected = variable length).
+    fn section(&self, id: u64, expect: Option<usize>, path: &Path) -> Result<(usize, usize)> {
+        let &(_, off, len) = self
+            .sections
+            .iter()
+            .find(|&&(i, _, _)| i == id)
+            .ok_or_else(|| parse_err(path, format!("missing section {id}")))?;
+        if let Some(want) = expect {
+            if len != want {
+                return Err(parse_err(
+                    path,
+                    format!("section {id} is {len} bytes, expected {want}"),
+                ));
+            }
+        }
+        Ok((off, len))
+    }
+}
+
+/// Full-scan validation of raw CSR/CSC arrays: monotone offsets, in-range
+/// targets/sources, and the CSC mirror a permutation of the CSR edge ids
+/// with `out_targets[eid] == v` for every CSC slot under `v`. On mmap
+/// this sequential pass is also the page-in prefault.
+fn validate_raw(
+    nv: usize,
+    ne: usize,
+    out_offsets: &[usize],
+    out_targets: &[VertexId],
+    in_offsets: &[usize],
+    in_sources: &[VertexId],
+    in_edge_ids: &[usize],
+    path: &Path,
+) -> Result<()> {
+    for (name, offsets) in [("out_offsets", out_offsets), ("in_offsets", in_offsets)] {
+        if offsets[0] != 0 || offsets[nv] != ne {
+            return Err(parse_err(path, format!("{name} must span [0, {ne}]")));
+        }
+        if let Some(v) = (0..nv).find(|&v| offsets[v] > offsets[v + 1]) {
+            return Err(parse_err(path, format!("{name} non-monotone at vertex {v}")));
+        }
+    }
+    if let Some(&t) = out_targets.iter().find(|&&t| t as usize >= nv) {
+        return Err(parse_err(path, format!("edge target {t} out of range")));
+    }
+    if let Some(&s) = in_sources.iter().find(|&&s| s as usize >= nv) {
+        return Err(parse_err(path, format!("edge source {s} out of range")));
+    }
+    let mut seen = vec![0u64; ne.div_ceil(64)];
+    for v in 0..nv {
+        for slot in in_offsets[v]..in_offsets[v + 1] {
+            let eid = in_edge_ids[slot];
+            if eid >= ne {
+                return Err(parse_err(path, format!("CSC edge id {eid} out of range")));
+            }
+            if out_targets[eid] as usize != v {
+                return Err(parse_err(
+                    path,
+                    format!("CSC slot {slot} claims edge {eid}, whose target is not {v}"),
+                ));
+            }
+            if seen[eid / 64] >> (eid % 64) & 1 != 0 {
+                return Err(parse_err(path, format!("CSC maps edge {eid} twice")));
+            }
+            seen[eid / 64] |= 1 << (eid % 64);
+        }
+    }
+    Ok(())
+}
+
+fn load_v2(path: &Path, mode: StoreMode) -> Result<Graph> {
+    match mode {
+        StoreMode::Mmap => load_v2_mmap(path),
+        StoreMode::Heap | StoreMode::Compressed => load_v2_resident(path, mode),
+    }
+}
+
+fn load_v2_mmap(path: &Path) -> Result<Graph> {
+    let reg = crate::obs::metrics::registry();
+    let timer = Timer::start();
+    let region = Arc::new(MapRegion::open(path)?);
+    let layout = Layout::parse(region.bytes(), region.len() as u64, path)?;
+    if layout.compressed {
+        return Err(UniGpsError::Config(format!(
+            "{} is a compressed snapshot; `store = mmap` needs the raw v2 layout \
+             (repack without --compress)",
+            path.display()
+        )));
+    }
+    let (nv, ne) = (layout.nv, layout.ne);
+    let out_offsets = layout.section(SEC_OUT_OFFSETS, Some((nv + 1) * 8), path)?;
+    let out_targets = layout.section(SEC_OUT_TARGETS, Some(ne * 4), path)?;
+    let weights = layout.section(SEC_WEIGHTS, Some(ne * 8), path)?;
+    let in_offsets = layout.section(SEC_IN_OFFSETS, Some((nv + 1) * 8), path)?;
+    let in_sources = layout.section(SEC_IN_SOURCES, Some(ne * 4), path)?;
+    let in_edge_ids = layout.section(SEC_IN_EDGE_IDS, Some(ne * 8), path)?;
+    let backing = crate::store::MmapBacking {
+        region: region.clone(),
+        out_offsets: (out_offsets.0, nv + 1),
+        out_targets: (out_targets.0, ne),
+        in_offsets: (in_offsets.0, nv + 1),
+        in_sources: (in_sources.0, ne),
+        in_edge_ids: (in_edge_ids.0, ne),
+    };
+    reg.store_map_us.observe(timer.elapsed());
+
+    let timer = Timer::start();
+    match backing.adjacency() {
+        Adjacency::Raw { out_targets, in_sources, in_edge_ids } => validate_raw(
+            nv,
+            ne,
+            backing.out_offsets(),
+            out_targets,
+            backing.in_offsets(),
+            in_sources,
+            in_edge_ids,
+            path,
+        )?,
+        Adjacency::Packed { .. } => unreachable!("mmap backing is raw"),
+    }
+    reg.store_pagein_us.observe(timer.elapsed());
+
+    let topo = Topology::from_backing(nv, layout.directed, Backing::Mmap(backing));
+    let col = EdgeCol::Mapped(MappedSlice::<f64>::new(region, weights.0, ne));
+    Ok(PropertyGraph::from_cols(Arc::new(topo), vec![(); nv], col))
+}
+
+fn load_v2_resident(path: &Path, mode: StoreMode) -> Result<Graph> {
+    let bytes = std::fs::read(path)?;
+    let layout = Layout::parse(&bytes, bytes.len() as u64, path)?;
+    let (nv, ne) = (layout.nv, layout.ne);
+
+    let decode_u64s = |(off, len): (usize, usize)| -> Vec<usize> {
+        (0..len / 8).map(|i| u64_at(&bytes, off + i * 8) as usize).collect()
+    };
+    let out_offsets = decode_u64s(layout.section(SEC_OUT_OFFSETS, Some((nv + 1) * 8), path)?);
+    let in_offsets = decode_u64s(layout.section(SEC_IN_OFFSETS, Some((nv + 1) * 8), path)?);
+    let (woff, _) = layout.section(SEC_WEIGHTS, Some(ne * 8), path)?;
+    let weights: Vec<f64> =
+        (0..ne).map(|i| f64::from_bits(u64_at(&bytes, woff + i * 8))).collect();
+
+    let backing = if layout.compressed {
+        let timer = Timer::start();
+        let seq = |id, what, limit| -> Result<CompressedSeq> {
+            let (off, len) = layout.section(id, None, path)?;
+            let seq = CompressedSeq::from_bytes(&bytes[off..off + len], what, limit)?;
+            if seq.len() != ne {
+                let got = seq.len();
+                return Err(parse_err(path, format!("{what} has {got} values, expected {ne}")));
+            }
+            Ok(seq)
+        };
+        // `max(1)` keeps empty sequences vacuously valid when nv/ne is 0.
+        let out_targets = seq(SEC_C_OUT_TARGETS, "out_targets", (nv as u64).max(1))?;
+        let in_sources = seq(SEC_C_IN_SOURCES, "in_sources", (nv as u64).max(1))?;
+        let in_edge_ids = seq(SEC_C_IN_EDGE_IDS, "in_edge_ids", (ne as u64).max(1))?;
+        // Offsets still need the monotone/span checks the raw scan does.
+        for (name, offsets) in [("out_offsets", &out_offsets), ("in_offsets", &in_offsets)] {
+            if offsets[0] != 0
+                || offsets[nv] != ne
+                || (0..nv).any(|v| offsets[v] > offsets[v + 1])
+            {
+                return Err(parse_err(path, format!("{name} must be monotone over [0, {ne}]")));
+            }
+        }
+        let packed = CompressedBacking {
+            out_offsets,
+            in_offsets,
+            out_targets,
+            in_sources,
+            in_edge_ids,
+        };
+        crate::obs::metrics::registry().store_decode_us.observe(timer.elapsed());
+        match mode {
+            StoreMode::Compressed => Backing::Compressed(packed),
+            StoreMode::Heap => Backing::Heap(HeapBacking {
+                out_offsets: packed.out_offsets.clone(),
+                out_targets: packed.out_targets.decode_all().iter().map(|&t| t as u32).collect(),
+                in_offsets: packed.in_offsets.clone(),
+                in_sources: packed.in_sources.decode_all().iter().map(|&s| s as u32).collect(),
+                in_edge_ids: packed.in_edge_ids.decode_all().iter().map(|&e| e as usize).collect(),
+            }),
+            StoreMode::Mmap => unreachable!("handled by load_v2_mmap"),
+        }
+    } else {
+        let (toff, _) = layout.section(SEC_OUT_TARGETS, Some(ne * 4), path)?;
+        let (soff, _) = layout.section(SEC_IN_SOURCES, Some(ne * 4), path)?;
+        let out_targets: Vec<VertexId> = (0..ne)
+            .map(|i| {
+                let mut a = [0u8; 4];
+                a.copy_from_slice(&bytes[toff + i * 4..toff + i * 4 + 4]);
+                u32::from_le_bytes(a)
+            })
+            .collect();
+        let in_sources: Vec<VertexId> = (0..ne)
+            .map(|i| {
+                let mut a = [0u8; 4];
+                a.copy_from_slice(&bytes[soff + i * 4..soff + i * 4 + 4]);
+                u32::from_le_bytes(a)
+            })
+            .collect();
+        let in_edge_ids = decode_u64s(layout.section(SEC_IN_EDGE_IDS, Some(ne * 8), path)?);
+        validate_raw(
+            nv,
+            ne,
+            &out_offsets,
+            &out_targets,
+            &in_offsets,
+            &in_sources,
+            &in_edge_ids,
+            path,
+        )?;
+        let heap = HeapBacking { out_offsets, out_targets, in_offsets, in_sources, in_edge_ids };
+        match mode {
+            StoreMode::Heap => Backing::Heap(heap),
+            StoreMode::Compressed => {
+                let timer = Timer::start();
+                let packed = CompressedBacking::encode(
+                    heap.out_offsets,
+                    &heap.out_targets,
+                    heap.in_offsets,
+                    &heap.in_sources,
+                    &heap.in_edge_ids,
+                );
+                crate::obs::metrics::registry().store_decode_us.observe(timer.elapsed());
+                Backing::Compressed(packed)
+            }
+            StoreMode::Mmap => unreachable!("handled by load_v2_mmap"),
+        }
+    };
+
+    let topo = Topology::from_backing(nv, layout.directed, backing);
+    Ok(PropertyGraph::new(Arc::new(topo), vec![(); nv], weights))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::random_for_tests;
+    use crate::graph::io::tmp_path;
+
+    fn assert_same(a: &Graph, b: &Graph) {
+        assert_eq!(a.num_vertices(), b.num_vertices());
+        assert_eq!(a.num_edges(), b.num_edges());
+        assert_eq!(a.topology().directed(), b.topology().directed());
+        for v in 0..a.num_vertices() as VertexId {
+            assert_eq!(
+                a.topology().out_edges(v).collect::<Vec<_>>(),
+                b.topology().out_edges(v).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                a.topology().in_edges(v).collect::<Vec<_>>(),
+                b.topology().in_edges(v).collect::<Vec<_>>()
+            );
+        }
+        let (wa, wb) = (a.edge_props(), b.edge_props());
+        assert_eq!(wa.len(), wb.len());
+        for (x, y) in wa.iter().zip(wb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "weights must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn v2_roundtrips_through_all_backings() {
+        let g = random_for_tests(200, 900, 11);
+        for compress in [false, true] {
+            let p = tmp_path(&format!("v2-rt-{compress}.bin"));
+            pack(&g, &p, compress).unwrap();
+            for mode in [StoreMode::Heap, StoreMode::Compressed] {
+                let back = load(&p, mode).unwrap();
+                assert_eq!(back.topology().store_mode(), mode);
+                assert_same(&g, &back);
+            }
+            if compress {
+                // Compressed files cannot be mapped.
+                assert!(matches!(load(&p, StoreMode::Mmap), Err(UniGpsError::Config(_))));
+            } else {
+                let back = load(&p, StoreMode::Mmap).unwrap();
+                assert_eq!(back.topology().store_mode(), StoreMode::Mmap);
+                assert_eq!(back.topology().heap_bytes(), 0, "mmap load must not heap the arrays");
+                assert!(back.mapped_bytes() > 0);
+                assert_same(&g, &back);
+            }
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+
+    #[test]
+    fn v2_handles_empty_and_single_vertex_graphs() {
+        for (nv, ne) in [(0usize, 0usize), (1, 0)] {
+            let g: Graph = PropertyGraph::new(
+                Arc::new(Topology::from_csr(nv, vec![0; nv + 1], vec![], true)),
+                vec![(); nv],
+                vec![],
+            );
+            for compress in [false, true] {
+                let p = tmp_path(&format!("v2-tiny-{nv}-{compress}.bin"));
+                pack(&g, &p, compress).unwrap();
+                let modes: &[StoreMode] = if compress {
+                    &[StoreMode::Heap, StoreMode::Compressed]
+                } else {
+                    &[StoreMode::Heap, StoreMode::Compressed, StoreMode::Mmap]
+                };
+                for &mode in modes {
+                    assert_same(&g, &load(&p, mode).unwrap());
+                }
+                let _ = std::fs::remove_file(&p);
+            }
+        }
+    }
+
+    #[test]
+    fn v1_files_load_everywhere_except_mmap() {
+        use crate::graph::io::{GraphSink, GraphSource};
+        let g = random_for_tests(64, 256, 3);
+        let p = tmp_path("v1-modes.bin");
+        crate::graph::io::binfmt::BinaryFormat.store(&g, &p).unwrap();
+        assert_same(&g, &load(&p, StoreMode::Heap).unwrap());
+        let c = load(&p, StoreMode::Compressed).unwrap();
+        assert_eq!(c.topology().store_mode(), StoreMode::Compressed);
+        assert_same(&g, &c);
+        assert!(matches!(load(&p, StoreMode::Mmap), Err(UniGpsError::Config(_))));
+        // And a v2 file loads through the generic binfmt source (magic
+        // dispatch), so `.bin` readers never care which version they get.
+        let p2 = tmp_path("v2-via-binfmt.bin");
+        pack(&g, &p2, false).unwrap();
+        assert_same(&g, &crate::graph::io::binfmt::BinaryFormat.load(&p2).unwrap());
+        let _ = std::fs::remove_file(&p);
+        let _ = std::fs::remove_file(&p2);
+    }
+
+    /// Malformed-file corpus: every mutation must produce a typed error,
+    /// never a panic or an allocation bomb.
+    #[test]
+    fn v2_malformed_corpus_is_rejected() {
+        let g = random_for_tests(50, 200, 9);
+        let p = tmp_path("v2-corpus.bin");
+        pack(&g, &p, false).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        let mutate = |name: &str, f: &dyn Fn(&mut Vec<u8>)| {
+            let mut bad = good.clone();
+            f(&mut bad);
+            let bp = tmp_path(&format!("v2-corpus-{name}.bin"));
+            std::fs::write(&bp, &bad).unwrap();
+            for mode in [StoreMode::Heap, StoreMode::Compressed, StoreMode::Mmap] {
+                let err = load(&bp, mode).expect_err(name);
+                assert!(
+                    matches!(err, UniGpsError::Parse(_)),
+                    "{name}/{mode:?}: expected Parse, got {err:?}"
+                );
+            }
+            let _ = std::fs::remove_file(&bp);
+        };
+
+        // Forged vertex count far past the file length (allocation bomb).
+        mutate("forged-nv", &|b| b[8..16].copy_from_slice(&(u32::MAX as u64).to_le_bytes()));
+        // Forged edge count.
+        mutate("forged-ne", &|b| b[16..24].copy_from_slice(&u64::MAX.to_le_bytes()));
+        // Implausible section count.
+        mutate("forged-nsect", &|b| b[32..40].copy_from_slice(&1000u64.to_le_bytes()));
+        // Section pushed past EOF.
+        mutate("section-past-eof", &|b| {
+            let off = u64_at(b, 48);
+            b[48..56].copy_from_slice(&(off + (1 << 40)).to_le_bytes());
+        });
+        // Misaligned section offset.
+        mutate("misaligned-section", &|b| {
+            let off = u64_at(b, 48);
+            b[48..56].copy_from_slice(&(off + 4).to_le_bytes());
+        });
+        // Non-monotone out_offsets: setting offsets[1] past ne guarantees
+        // a descent before the (unchanged) final prefix word. The section
+        // table is sorted by id, so entry 0 is out_offsets.
+        mutate("non-monotone-offsets", &|b| {
+            let off = u64_at(b, 48) as usize;
+            b[off + 8..off + 16].copy_from_slice(&(200u64 + 1).to_le_bytes());
+        });
+        // Out-of-range edge target (entry 1 is out_targets).
+        mutate("bad-target", &|b| {
+            let off = u64_at(b, 48 + 24) as usize;
+            b[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        });
+        // CSC mirror pointing at the wrong CSR edge (entry 3 is
+        // in_edge_ids — ids sort as 1,2,3,4,5,6 → index 3 is id 4? No:
+        // index 3 is in_offsets (id 4); in_edge_ids is id 6, index 5).
+        mutate("bad-csc-mirror", &|b| {
+            let off = u64_at(b, 48 + 5 * 24) as usize;
+            let first = u64_at(b, off);
+            b[off..off + 8].copy_from_slice(&(first ^ 1).to_le_bytes());
+        });
+        // Truncated behind the table.
+        mutate("truncated", &|b| b.truncate(b.len() / 2));
+
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn compressed_file_with_forged_stream_is_rejected() {
+        let g = random_for_tests(80, 300, 21);
+        let p = tmp_path("v2-cbad.bin");
+        pack(&g, &p, true).unwrap();
+        let mut bad = std::fs::read(&p).unwrap();
+        // Entry order by id: 1,3,4,7,8,9 → index 3 is the compressed
+        // out_targets blob; forge its value count.
+        let off = u64_at(&bad, 48 + 3 * 24) as usize;
+        bad[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bad).unwrap();
+        for mode in [StoreMode::Heap, StoreMode::Compressed] {
+            assert!(matches!(load(&p, mode), Err(UniGpsError::Parse(_))));
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+}

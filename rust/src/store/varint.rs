@@ -1,0 +1,355 @@
+//! Varint-delta sequence compression for adjacency arrays.
+//!
+//! A [`CompressedSeq`] stores a flat `u64` sequence (edge targets, CSC
+//! sources, CSC→CSR edge-id maps) as LEB128 varints: the first value of
+//! every 64-entry block is written **absolute**, every other value as the
+//! **zigzag-encoded delta** from its predecessor. A skip table records the
+//! byte offset of each block start, so a cursor seeks to any index by
+//! jumping to the covering block and decoding at most 63 values forward.
+//!
+//! Encoding deltas (rather than sorting rows first) preserves the exact
+//! stored edge order, so every engine folds messages in the same order as
+//! the heap backing and results stay **bit-identical** — sorted rows just
+//! compress best. Because block starts are absolute, blocks decode
+//! independently and a corrupt suffix cannot poison earlier blocks.
+
+use crate::error::{Result, UniGpsError};
+
+/// Entries per skip block. 64 keeps the skip table at ~1.6% of a
+/// 4-byte-per-entry raw array while bounding a seek to 63 decode steps.
+pub const BLOCK: usize = 64;
+
+#[inline]
+fn zigzag(d: i64) -> u64 {
+    ((d << 1) ^ (d >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(z: u64) -> i64 {
+    ((z >> 1) as i64) ^ -((z & 1) as i64)
+}
+
+#[inline]
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Decode one LEB128 varint at `pos`, advancing it. Returns 0 past the
+/// end — every loaded sequence is fully validated once at load time
+/// ([`CompressedSeq::validate`]), so a live cursor never reaches here
+/// out of bounds.
+#[inline]
+fn read_varint(data: &[u8], pos: &mut usize) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    while *pos < data.len() {
+        let b = data[*pos];
+        *pos += 1;
+        v |= u64::from(b & 0x7f) << shift.min(63);
+        if b & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+        if shift >= 64 {
+            break;
+        }
+    }
+    v
+}
+
+/// An immutable varint-delta compressed `u64` sequence with per-block
+/// skip offsets (see the module doc for the layout rationale).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CompressedSeq {
+    len: usize,
+    /// Byte offset of each block start inside `data`.
+    skip: Vec<u64>,
+    data: Vec<u8>,
+}
+
+impl CompressedSeq {
+    /// Encode a sequence. The iterator's `len` is trusted (`ExactSizeIterator`).
+    pub fn encode(values: impl ExactSizeIterator<Item = u64>) -> CompressedSeq {
+        let len = values.len();
+        let mut skip = Vec::with_capacity(len.div_ceil(BLOCK));
+        let mut data = Vec::new();
+        let mut prev = 0u64;
+        for (i, v) in values.enumerate() {
+            if i % BLOCK == 0 {
+                skip.push(data.len() as u64);
+                push_varint(&mut data, v);
+            } else {
+                push_varint(&mut data, zigzag((v as i64).wrapping_sub(prev as i64)));
+            }
+            prev = v;
+        }
+        CompressedSeq { len, skip, data }
+    }
+
+    /// Number of encoded values.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no values are encoded.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Heap bytes held by the encoded form.
+    pub fn heap_bytes(&self) -> usize {
+        self.data.len() + self.skip.len() * 8
+    }
+
+    /// A cursor positioned at value `idx` (seek to the covering block,
+    /// decode forward). `idx >= len` yields an exhausted cursor.
+    pub fn cursor_at(&self, idx: usize) -> SeqCursor<'_> {
+        if idx >= self.len {
+            return SeqCursor { data: &self.data, pos: self.data.len(), prev: 0, idx };
+        }
+        let block = idx / BLOCK;
+        let mut cur = SeqCursor {
+            data: &self.data,
+            pos: self.skip[block] as usize,
+            prev: 0,
+            idx: block * BLOCK,
+        };
+        for _ in 0..(idx - block * BLOCK) {
+            cur.next_value();
+        }
+        cur
+    }
+
+    /// Decode the whole sequence to a `Vec` (pack/unpack paths only; the
+    /// engines decode row windows through [`CompressedSeq::cursor_at`]).
+    pub fn decode_all(&self) -> Vec<u64> {
+        let mut cur = self.cursor_at(0);
+        (0..self.len).map(|_| cur.next_value()).collect()
+    }
+
+    /// Full decode pass checking structure and value bounds: every skip
+    /// entry in range, every value `< limit`, and the final cursor
+    /// consuming exactly the data buffer. Loaded (untrusted) sequences
+    /// must pass here before any cursor is handed to an engine.
+    pub fn validate(&self, what: &str, limit: u64) -> Result<()> {
+        if self.skip.len() != self.len.div_ceil(BLOCK) {
+            return Err(UniGpsError::Parse(format!(
+                "compressed {what}: skip table has {} blocks, expected {}",
+                self.skip.len(),
+                self.len.div_ceil(BLOCK)
+            )));
+        }
+        let mut cur = SeqCursor { data: &self.data, pos: 0, prev: 0, idx: 0 };
+        for i in 0..self.len {
+            if i % BLOCK == 0 {
+                let want = self.skip[i / BLOCK] as usize;
+                if cur.pos != want {
+                    return Err(UniGpsError::Parse(format!(
+                        "compressed {what}: block {} starts at byte {} but skip table says {want}",
+                        i / BLOCK,
+                        cur.pos
+                    )));
+                }
+            }
+            if cur.pos >= self.data.len() {
+                return Err(UniGpsError::Parse(format!(
+                    "compressed {what}: truncated at value {i} of {}",
+                    self.len
+                )));
+            }
+            let v = cur.next_value();
+            if v >= limit {
+                return Err(UniGpsError::Parse(format!(
+                    "compressed {what}: value {v} at index {i} out of range (limit {limit})"
+                )));
+            }
+        }
+        if cur.pos != self.data.len() {
+            return Err(UniGpsError::Parse(format!(
+                "compressed {what}: {} trailing bytes after the last value",
+                self.data.len() - cur.pos
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize for a binfmt v2 section:
+    /// `len u64 | nskip u64 | skip u64× | data bytes`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + self.skip.len() * 8 + self.data.len());
+        out.extend_from_slice(&(self.len as u64).to_le_bytes());
+        out.extend_from_slice(&(self.skip.len() as u64).to_le_bytes());
+        for &s in &self.skip {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.extend_from_slice(&self.data);
+        out
+    }
+
+    /// Parse a serialized sequence, then [`CompressedSeq::validate`] it
+    /// against `limit`. All counts are bounded by the actual byte length,
+    /// so a forged header cannot request an oversized allocation.
+    pub fn from_bytes(buf: &[u8], what: &str, limit: u64) -> Result<CompressedSeq> {
+        let take_u64 = |buf: &[u8], at: usize| -> Result<u64> {
+            buf.get(at..at + 8)
+                .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+                .ok_or_else(|| UniGpsError::Parse(format!("compressed {what}: truncated header")))
+        };
+        let len = take_u64(buf, 0)? as usize;
+        let nskip = take_u64(buf, 8)? as usize;
+        // A varint takes >= 1 byte, so `len` can never exceed the payload
+        // bytes; the skip table is bounded the same way. This is the
+        // allocation cap — reject before reserving anything.
+        let payload = buf.len().saturating_sub(16);
+        if nskip.saturating_mul(8) > payload || len > payload.saturating_sub(nskip * 8) {
+            return Err(UniGpsError::Parse(format!(
+                "compressed {what}: header claims {len} values / {nskip} blocks in {payload} bytes"
+            )));
+        }
+        let mut skip = Vec::with_capacity(nskip);
+        for i in 0..nskip {
+            skip.push(take_u64(buf, 16 + i * 8)?);
+        }
+        let data = buf[16 + nskip * 8..].to_vec();
+        for &s in &skip {
+            if s as usize > data.len() {
+                return Err(UniGpsError::Parse(format!(
+                    "compressed {what}: skip offset {s} past data end {}",
+                    data.len()
+                )));
+            }
+        }
+        let seq = CompressedSeq { len, skip, data };
+        seq.validate(what, limit)?;
+        Ok(seq)
+    }
+}
+
+/// A forward decode cursor over a [`CompressedSeq`].
+#[derive(Debug, Clone)]
+pub struct SeqCursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+    prev: u64,
+    idx: usize,
+}
+
+impl SeqCursor<'_> {
+    /// Decode the next value and advance. Callers bound iteration by the
+    /// sequence length (validated at load), never by probing.
+    #[inline]
+    pub fn next_value(&mut self) -> u64 {
+        let raw = read_varint(self.data, &mut self.pos);
+        let v = if self.idx % BLOCK == 0 {
+            raw
+        } else {
+            self.prev.wrapping_add(unzigzag(raw) as u64)
+        };
+        self.idx += 1;
+        self.prev = v;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(values: &[u64]) {
+        let seq = CompressedSeq::encode(values.iter().copied());
+        assert_eq!(seq.len(), values.len());
+        assert_eq!(seq.decode_all(), values);
+        let limit = values.iter().copied().max().map_or(1, |m| m + 1);
+        seq.validate("test", limit).unwrap();
+        // Serialized form survives parse + validation.
+        let back = CompressedSeq::from_bytes(&seq.to_bytes(), "test", limit).unwrap();
+        assert_eq!(back, seq);
+    }
+
+    #[test]
+    fn empty_sequence() {
+        roundtrip(&[]);
+        let seq = CompressedSeq::encode(std::iter::empty());
+        assert!(seq.is_empty());
+        // A cursor at 0 of an empty sequence is exhausted, never read.
+        let _ = seq.cursor_at(0);
+    }
+
+    #[test]
+    fn single_value() {
+        roundtrip(&[0]);
+        roundtrip(&[u32::MAX as u64]);
+    }
+
+    #[test]
+    fn unsorted_rows_preserve_order() {
+        // Deltas can be negative (unsorted adjacency rows) — order must
+        // survive exactly, not canonicalized.
+        roundtrip(&[5, 3, 9, 0, 7, 7, 2]);
+    }
+
+    #[test]
+    fn hub_row_spanning_many_blocks() {
+        // A max-degree hub: thousands of entries crossing block starts.
+        let values: Vec<u64> = (0..10_000u64).map(|i| (i * 37) % 4096).collect();
+        roundtrip(&values);
+        let seq = CompressedSeq::encode(values.iter().copied());
+        // Seek into the middle of a block and read across a boundary.
+        for &start in &[0usize, 1, 63, 64, 65, 4096, 9_999] {
+            let mut cur = seq.cursor_at(start);
+            for (off, want) in values[start..].iter().take(130).enumerate() {
+                assert_eq!(cur.next_value(), *want, "start {start} offset {off}");
+            }
+        }
+    }
+
+    #[test]
+    fn sorted_rows_compress_well() {
+        let values: Vec<u64> = (0..100_000u64).collect();
+        let seq = CompressedSeq::encode(values.iter().copied());
+        // Sorted runs are ~1 byte per entry vs 4 raw.
+        assert!(seq.heap_bytes() < values.len() * 2, "{} bytes", seq.heap_bytes());
+        assert_eq!(seq.decode_all(), values);
+    }
+
+    #[test]
+    fn cursor_past_end_is_exhausted_not_panicking() {
+        let seq = CompressedSeq::encode([1u64, 2, 3].into_iter());
+        let _ = seq.cursor_at(3);
+        let _ = seq.cursor_at(64);
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_values() {
+        let seq = CompressedSeq::encode([1u64, 2, 99].into_iter());
+        assert!(seq.validate("t", 100).is_ok());
+        let err = seq.validate("t", 99).unwrap_err();
+        assert!(matches!(err, UniGpsError::Parse(_)));
+    }
+
+    #[test]
+    fn from_bytes_rejects_forged_counts() {
+        let seq = CompressedSeq::encode((0..100u64).map(|i| i % 7));
+        let mut bytes = seq.to_bytes();
+        // Forge an absurd value count: rejected against the byte length
+        // before any allocation.
+        bytes[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = CompressedSeq::from_bytes(&bytes, "t", 7).unwrap_err();
+        assert!(matches!(err, UniGpsError::Parse(_)));
+        // Truncated payload: typed parse error, not a panic.
+        let seq2 = CompressedSeq::encode((0..1000u64).map(|i| i % 11));
+        let bytes = seq2.to_bytes();
+        let err = CompressedSeq::from_bytes(&bytes[..bytes.len() / 2], "t", 11).unwrap_err();
+        assert!(matches!(err, UniGpsError::Parse(_)));
+    }
+}

@@ -139,5 +139,5 @@ fn symmetrized_idempotent() {
     let s1 = symmetrized(&g);
     let s2 = symmetrized(&s1);
     assert_eq!(s1.num_edges(), s2.num_edges());
-    assert_eq!(s1.topology().csr().1, s2.topology().csr().1);
+    assert_eq!(s1.topology().csr().unwrap().1, s2.topology().csr().unwrap().1);
 }

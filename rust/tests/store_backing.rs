@@ -1,0 +1,136 @@
+//! Integration: storage-backing equivalence (`docs/storage.md`).
+//!
+//! The out-of-core subsystem's correctness contract: a graph loaded
+//! through any [`StoreMode`] — heap `Vec`s, a zero-copy mmap of a binfmt
+//! v2 snapshot, or varint-delta compressed adjacency — must produce
+//! **bit-identical** results through every engine, partition strategy,
+//! and pipeline mode. The compressed encoding is order-preserving, so
+//! even f64 columns (fold-order sensitive) must match to the bit.
+
+use std::path::PathBuf;
+use unigps::engine::{run_typed, EngineKind, RunOptions};
+use unigps::graph::generate;
+use unigps::graph::partition::PartitionStrategy;
+use unigps::graph::Graph;
+use unigps::store::{snapshot, StoreMode};
+use unigps::vcprog::programs::{ConnectedComponents, PageRank, SsspBellmanFord};
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("unigps-store-backing-{}-{name}", std::process::id()));
+    p
+}
+
+/// Pack `g` both raw and compressed, then load it back through all three
+/// store modes. The snapshot files are unlinked immediately — on Linux
+/// the mmap stays valid for the mapping's lifetime, which doubles as a
+/// test that a deleted-but-mapped snapshot keeps serving.
+fn variants(g: &Graph, tag: &str) -> Vec<(&'static str, Graph)> {
+    let raw = tmp(&format!("{tag}-raw.bin"));
+    let packed = tmp(&format!("{tag}-packed.bin"));
+    snapshot::pack(g, &raw, false).unwrap();
+    snapshot::pack(g, &packed, true).unwrap();
+    let heap = snapshot::load(&raw, StoreMode::Heap).unwrap();
+    let mmap = snapshot::load(&raw, StoreMode::Mmap).unwrap();
+    let comp = snapshot::load(&packed, StoreMode::Compressed).unwrap();
+    let _ = std::fs::remove_file(&raw);
+    let _ = std::fs::remove_file(&packed);
+    assert!(mmap.mapped_bytes() > 0, "mmap variant really is mapped");
+    assert_eq!(mmap.heap_bytes(), 0, "mmap variant holds no heap");
+    assert!(
+        comp.heap_bytes() < heap.heap_bytes(),
+        "compressed variant is smaller resident than heap"
+    );
+    vec![("heap", heap), ("mmap", mmap), ("compressed", comp)]
+}
+
+#[test]
+fn backings_bit_identical_through_every_engine() {
+    let g = generate::random_for_tests(120, 600, 0xD00D);
+    let vs = variants(&g, "matrix");
+    let engines = [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull];
+    let strategies = [
+        PartitionStrategy::Hash,
+        PartitionStrategy::Range,
+        PartitionStrategy::EdgeBalanced,
+    ];
+    for kind in engines {
+        for strat in strategies {
+            for pipeline in [false, true] {
+                let mut o = RunOptions::default().with_workers(3);
+                o.partition = strat;
+                o.pipeline = pipeline;
+                let ctx = |name: &str, algo: &str| {
+                    format!("{algo} {kind} {strat:?} pipeline={pipeline} via {name}")
+                };
+
+                let want = run_typed(kind, &g, &SsspBellmanFord::new(0), &o).unwrap().props;
+                for (name, gv) in &vs {
+                    let got = run_typed(kind, gv, &SsspBellmanFord::new(0), &o).unwrap().props;
+                    assert_eq!(got, want, "{}", ctx(name, "sssp"));
+                }
+
+                let want = run_typed(kind, &g, &ConnectedComponents::new(), &o).unwrap().props;
+                for (name, gv) in &vs {
+                    let got =
+                        run_typed(kind, gv, &ConnectedComponents::new(), &o).unwrap().props;
+                    assert_eq!(got, want, "{}", ctx(name, "cc"));
+                }
+
+                // PageRank: f64 ranks compared by raw bits — fold order
+                // through the backing must match exactly, not just within
+                // a tolerance.
+                let prog = PageRank::new(g.num_vertices(), 6);
+                let mut op = o.clone();
+                op.max_iter = prog.rounds();
+                let bits = |g: &Graph| -> Vec<u64> {
+                    run_typed(kind, g, &prog, &op)
+                        .unwrap()
+                        .props
+                        .iter()
+                        .map(|p| p.rank.to_bits())
+                        .collect()
+                };
+                let want = bits(&g);
+                for (name, gv) in &vs {
+                    assert_eq!(bits(gv), want, "{}", ctx(name, "pagerank"));
+                }
+            }
+        }
+    }
+}
+
+/// Adversarial shapes for the varint row cursors: a max-degree hub (one
+/// giant row spanning many compression blocks), a long path (rows of
+/// exactly one edge), and empty rows on the tail vertex.
+#[test]
+fn backings_agree_on_adversarial_topologies() {
+    let graphs = [generate::star(300, true), generate::grid(17, 3, true)];
+    for (i, g) in graphs.iter().enumerate() {
+        let vs = variants(g, &format!("adversarial-{i}"));
+        let o = RunOptions::default().with_workers(2);
+        let want = run_typed(EngineKind::Pregel, g, &SsspBellmanFord::new(0), &o)
+            .unwrap()
+            .props;
+        for (name, gv) in &vs {
+            assert_eq!(gv.num_vertices(), g.num_vertices(), "{name}");
+            assert_eq!(gv.num_edges(), g.num_edges(), "{name}");
+            for kind in [EngineKind::Pregel, EngineKind::Gas, EngineKind::PushPull] {
+                let got = run_typed(kind, gv, &SsspBellmanFord::new(0), &o).unwrap().props;
+                assert_eq!(got, want, "graph {i} via {name} on {kind}");
+            }
+        }
+    }
+}
+
+/// The weights column rides the same equivalence: loaded edge properties
+/// are bit-identical across backings (mmap reads them zero-copy).
+#[test]
+fn edge_weights_bit_identical_across_backings() {
+    let g = generate::random_for_tests(80, 400, 0xFEED);
+    let want: Vec<u64> = g.edge_props().iter().map(|w| w.to_bits()).collect();
+    for (name, gv) in variants(&g, "weights") {
+        let got: Vec<u64> = gv.edge_props().iter().map(|w| w.to_bits()).collect();
+        assert_eq!(got, want, "{name}");
+    }
+}
